@@ -1,0 +1,59 @@
+//! Co-location study for one application: seven concurrent copies under
+//! each sharing scheme vs the serial baseline (the Figs. 5/6 experiment,
+//! interactively).
+//!
+//!     cargo run --release --offline --example colocate -- [app] [scale]
+//!
+//! Defaults: app = faiss, scale = 0.2.
+
+use migsim::config::SimConfig;
+use migsim::coordinator::corun::{simulate, CorunSpec};
+use migsim::sharing::Scheme;
+use migsim::util::table::{fnum, pct, Table};
+use migsim::workload::AppId;
+
+fn main() -> migsim::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let app_name = args.first().map(|s| s.as_str()).unwrap_or("faiss");
+    let scale: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.2);
+    let app = AppId::by_name(app_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown app '{app_name}' (try `migsim list`)"))?;
+    let cfg = SimConfig {
+        workload_scale: scale,
+        ..SimConfig::default()
+    };
+
+    let (serial, _) = simulate(&CorunSpec::serial(app, 7), &cfg)?;
+    let mut t = Table::new(&format!("co-location of 7x {app_name} (scale {scale})")).header(&[
+        "configuration",
+        "makespan",
+        "throughput vs serial",
+        "energy vs serial",
+        "occupancy",
+        "bw util",
+        "throttled",
+    ]);
+    t.row(vec![
+        "serial (baseline)".into(),
+        migsim::util::units::human_time(serial.makespan_s),
+        "1.00x".into(),
+        "100%".into(),
+        pct(serial.avg_occupancy, 1),
+        pct(serial.avg_bw_util, 1),
+        pct(serial.throttled_time_s / serial.makespan_s.max(1e-9), 0),
+    ]);
+    for scheme in Scheme::corun_suite() {
+        let (m, _) = simulate(&CorunSpec::homogeneous(scheme, app), &cfg)?;
+        t.row(vec![
+            m.scheme.clone(),
+            migsim::util::units::human_time(m.makespan_s),
+            format!("{}x", fnum(serial.makespan_s / m.makespan_s, 2)),
+            pct(m.energy_j / serial.energy_j, 0),
+            pct(m.avg_occupancy, 1),
+            pct(m.avg_bw_util, 1),
+            pct(m.throttled_time_s / m.makespan_s.max(1e-9), 0),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

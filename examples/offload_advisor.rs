@@ -1,0 +1,39 @@
+//! Offload advisor: given a workload whose footprint exceeds a MIG slice,
+//! sweep the candidate configurations (including NVLink-C2C offloading on
+//! the small slice) and recommend one per α policy — the §VI workflow as
+//! a tool.
+//!
+//!     cargo run --release --offline --example offload_advisor -- [alpha]
+
+use migsim::config::SimConfig;
+use migsim::experiments;
+
+fn main() -> migsim::Result<()> {
+    let alpha: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let cfg = SimConfig {
+        workload_scale: 0.15,
+        ..SimConfig::default()
+    };
+    let out = experiments::run("fig8", &cfg)?;
+    print!("{}", out.render());
+
+    println!("recommendations at α = {alpha}:");
+    for (app, doc) in out.json.as_obj().unwrap() {
+        // Find the nearest swept α key.
+        let winner = doc
+            .get("winner")
+            .and_then(|w| w.get(&format!("alpha_{alpha}")))
+            .and_then(|v| v.as_str());
+        match winner {
+            Some(w) => println!("  {app:<16} -> {w}"),
+            None => println!(
+                "  {app:<16} -> (α={alpha} not in swept set {:?})",
+                experiments::fig8::ALPHAS
+            ),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: create a MIG configuration, run one workload on it, and
+//! read the GPM-style metrics — the 60-second tour of the public API.
+//!
+//!     cargo run --release --offline --example quickstart
+
+use migsim::config::SimConfig;
+use migsim::coordinator::corun::{simulate, CorunSpec};
+use migsim::mig::{MigManager, ProfileId};
+use migsim::sharing::Scheme;
+use migsim::workload::AppId;
+
+fn main() -> migsim::Result<()> {
+    // 1. The testbed GPU (paper §III): GH200 H100-96GB.
+    let gpu = migsim::gpu::GpuSpec::gh_h100_96gb();
+    println!(
+        "GPU: {} — {} SMs, {:.1} GiB usable, {:.0} GiB/s, cap {:.0} W",
+        gpu.name, gpu.sms, gpu.mem_usable_gib, gpu.mem_bw_gibs, gpu.power_cap_w
+    );
+
+    // 2. Partition it: seven 1g.12gb instances (the finest MIG split).
+    let mut mig = MigManager::new(gpu.clone());
+    for _ in 0..7 {
+        mig.create_full(ProfileId::P1g12gb)?;
+    }
+    println!(
+        "MIG: {} instances, {} SMs exposed of {} ({}% wasted — the §III-C headline)",
+        mig.cis().len(),
+        mig.exposed_sms(),
+        gpu.sms,
+        100 * (gpu.sms - mig.exposed_sms()) / gpu.sms
+    );
+
+    // 3. Run seven NekRS copies on it and compare with the serial baseline.
+    let cfg = SimConfig {
+        workload_scale: 0.2,
+        ..SimConfig::default()
+    };
+    let scheme = Scheme::Mig {
+        profile: ProfileId::P1g12gb,
+        copies: 7,
+    };
+    let (serial, _) = simulate(&CorunSpec::serial(AppId::NekRs, 7), &cfg)?;
+    let (corun, _) = simulate(&CorunSpec::homogeneous(scheme, AppId::NekRs), &cfg)?;
+    println!("\nserial : {}", serial.summary_line());
+    println!("co-run : {}", corun.summary_line());
+    println!(
+        "\nthroughput gain {:.2}x, energy {:.0}% of serial, occupancy {:.1}% -> {:.1}%",
+        serial.makespan_s / corun.makespan_s,
+        100.0 * corun.energy_j / serial.energy_j,
+        100.0 * serial.avg_occupancy,
+        100.0 * corun.avg_occupancy,
+    );
+    Ok(())
+}

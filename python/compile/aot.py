@@ -1,0 +1,70 @@
+"""AOT compile path: lower every L2 model to HLO text + manifest.
+
+HLO *text* (not `.serialize()`): jax >= 0.5 emits HloModuleProtos with
+64-bit instruction ids that the rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. Lowered with return_tuple=True; the rust runtime decomposes
+the result tuple. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+Python runs ONCE here; it is never on the rust request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, only: str | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+    for name, (fn, example_args, desc, flops, nbytes) in model.catalogue().items():
+        if only and name != only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": "f32"} for a in example_args
+                ],
+                "description": desc,
+                "flops": float(flops),
+                "bytes": float(nbytes),
+            }
+        )
+        print(f"  {name:<18} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single artifact")
+    args = ap.parse_args()
+    manifest = build(args.out_dir, args.only)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Pallas kernels (L1) with pure-jnp oracles in `ref`.
+
+All kernels run under interpret=True — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU performance is estimated from
+VMEM footprint + MXU utilization in DESIGN.md/EXPERIMENTS.md.
+"""
+
+from . import ref  # noqa: F401
+from .attention import decode_attention  # noqa: F401
+from .force import lj_forces  # noqa: F401
+from .matmul import matmul  # noqa: F401
+from .pq_scan import pq_scan  # noqa: F401
+from .sem_ax import sem_ax  # noqa: F401
+from .statevector import gate_apply, hadamard_u  # noqa: F401
+from .stencil import hotspot_step  # noqa: F401
+from .triad import triad  # noqa: F401

@@ -1,0 +1,48 @@
+"""Pallas kernel: single-token decode attention (llama.cpp-style).
+
+One query vector per head against the KV cache. Blocked across heads:
+each grid step holds a head-tile's query plus that tile's full K/V
+stripes in VMEM and performs a numerically-stable softmax over the
+sequence inside the block (flash-style online accumulation is overkill
+for decode-length-bounded caches that fit VMEM per head-tile).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_HEADS = 4
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[...]  # (bh, d)
+    k = k_ref[...]  # (s, bh, d)
+    v = v_ref[...]  # (s, bh, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("hd,shd->hs", q, k) * scale
+    m = scores.max(axis=1, keepdims=True)
+    w = jnp.exp(scores - m)
+    w = w / w.sum(axis=1, keepdims=True)
+    o_ref[...] = jnp.einsum("hs,shd->hd", w, v)
+
+
+@jax.jit
+def decode_attention(q, k, v):
+    """q: (h, d); k, v: (s, h, d) -> (h, d)."""
+    h, d = q.shape
+    s = k.shape[0]
+    bh = min(BLOCK_HEADS, h)
+    assert h % bh == 0
+    grid = (h // bh,)
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bh, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, bh, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, bh, d), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

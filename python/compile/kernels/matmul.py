@@ -1,0 +1,75 @@
+"""Pallas kernel: tiled matmul with f32 accumulation (MXU-shaped tiles).
+
+The tensor-core WMMA path of the CUDA originals maps to the MXU: 128-
+aligned (bm, bk)x(bk, bn) tiles, accumulating over the k grid dimension
+into the output block. Exposes a custom VJP (dA = dC Bᵀ, dB = Aᵀ dC via
+the same kernel) so the GPT-2 train-step model can differentiate
+through it — interpret-mode Pallas has no automatic transpose rule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_raw(a, b):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm, bn, bk = min(BM, m), min(BN, n), min(BK, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k},{n}) must tile by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """C = A @ B with f32 accumulation. Differentiable (custom VJP)."""
+    return _matmul_raw(a, b)
+
+
+def _fwd(a, b):
+    return _matmul_raw(a, b), (a, b)
+
+
+def _bwd(res, dc):
+    a, b = res
+    da = _matmul_raw(dc, b.T)
+    db = _matmul_raw(a.T, dc)
+    return da, db
+
+
+matmul.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit)
+def matmul_jit(a, b):
+    return matmul(a, b)

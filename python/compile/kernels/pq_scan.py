@@ -1,0 +1,45 @@
+"""Pallas kernel: IVF-PQ ADC scan (FAISS).
+
+Asymmetric distance computation: for each database code (n, nsub) look
+up per-subquantizer partial distances in the query's LUT (nsub, 256)
+and accumulate. The CUDA version is warp-parallel LUT gathers; here the
+LUT stays VMEM-resident while code rows stream through in tiles.
+Codes travel as f32 (the PJRT interchange is f32-only) and are cast to
+indices in-kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 1024
+
+
+def _pq_scan_kernel(lut_ref, codes_ref, o_ref):
+    lut = lut_ref[...]  # (nsub, 256)
+    codes = codes_ref[...].astype(jnp.int32)  # (bn, nsub)
+    nsub = lut.shape[0]
+    sub = jnp.arange(nsub, dtype=jnp.int32)[None, :]
+    gathered = lut[sub, codes]  # (bn, nsub)
+    o_ref[...] = gathered.sum(axis=1)
+
+
+@jax.jit
+def pq_scan(lut, codes):
+    """lut: (nsub, 256) f32; codes: (n, nsub) f32 holding 0..255."""
+    nsub = lut.shape[0]
+    n = codes.shape[0]
+    bn = min(BLOCK_N, n)
+    assert n % bn == 0
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _pq_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nsub, 256), lambda i: (0, 0)),
+            pl.BlockSpec((bn, nsub), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(lut, codes)

@@ -1,0 +1,98 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package has a reference here; pytest checks
+`assert_allclose(kernel(...), ref(...))` across shape/dtype sweeps
+(hypothesis). These also document the math the kernels implement.
+"""
+
+import jax.numpy as jnp
+
+
+def gate_apply_ref(re, im, target, u):
+    """Single-qubit gate on a statevector given as (re, im) float arrays.
+
+    re/im: shape (2**n,). target: qubit index. u: (2,2,2) real/imag parts
+    of the unitary, u[0]=real, u[1]=imag.
+    """
+    n = re.shape[0]
+    stride = 1 << target
+    # Reshape into (pairs, 2, stride) picking amplitude pairs that differ
+    # in bit `target`.
+    shape = (n // (2 * stride), 2, stride)
+    re2 = re.reshape(shape)
+    im2 = im.reshape(shape)
+    a_re, b_re = re2[:, 0, :], re2[:, 1, :]
+    a_im, b_im = im2[:, 0, :], im2[:, 1, :]
+    ur, ui = u[0], u[1]
+    new_a_re = ur[0, 0] * a_re - ui[0, 0] * a_im + ur[0, 1] * b_re - ui[0, 1] * b_im
+    new_a_im = ur[0, 0] * a_im + ui[0, 0] * a_re + ur[0, 1] * b_im + ui[0, 1] * b_re
+    new_b_re = ur[1, 0] * a_re - ui[1, 0] * a_im + ur[1, 1] * b_re - ui[1, 1] * b_im
+    new_b_im = ur[1, 0] * a_im + ui[1, 0] * a_re + ur[1, 1] * b_im + ui[1, 1] * b_re
+    out_re = jnp.stack([new_a_re, new_b_re], axis=1).reshape(n)
+    out_im = jnp.stack([new_a_im, new_b_im], axis=1).reshape(n)
+    return out_re, out_im
+
+
+def hotspot_ref(temp, power, cap, rx, ry, rz, amb):
+    """One hotspot step: 5-point stencil + power injection (Rodinia)."""
+    up = jnp.roll(temp, 1, axis=0).at[0, :].set(temp[0, :])
+    down = jnp.roll(temp, -1, axis=0).at[-1, :].set(temp[-1, :])
+    left = jnp.roll(temp, 1, axis=1).at[:, 0].set(temp[:, 0])
+    right = jnp.roll(temp, -1, axis=1).at[:, -1].set(temp[:, -1])
+    delta = cap * (
+        power
+        + (up + down - 2.0 * temp) * ry
+        + (left + right - 2.0 * temp) * rx
+        + (amb - temp) * rz
+    )
+    return temp + delta
+
+
+def triad_ref(b, c, alpha):
+    """STREAM triad: a = b + alpha * c."""
+    return b + alpha * c
+
+
+def matmul_ref(a, b):
+    """Plain matmul with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def decode_attention_ref(q, k, v):
+    """Single-query attention: q (h, d), k/v (s, h, d) -> (h, d)."""
+    # scores: (h, s)
+    scores = jnp.einsum("hd,shd->hs", q, k) / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    w = jnp.exp(scores - scores.max(axis=1, keepdims=True))
+    w = w / w.sum(axis=1, keepdims=True)
+    return jnp.einsum("hs,shd->hd", w, v)
+
+
+def pq_scan_ref(lut, codes):
+    """IVF-PQ ADC scan: lut (nsub, 256), codes (n, nsub) int -> (n,) scores."""
+    nsub = lut.shape[0]
+    gathered = lut[jnp.arange(nsub)[None, :], codes]  # (n, nsub)
+    return gathered.sum(axis=1)
+
+
+def lj_forces_ref(pos, eps, sigma, cutoff):
+    """Lennard-Jones forces, all-pairs with cutoff. pos: (n, 3)."""
+    disp = pos[:, None, :] - pos[None, :, :]  # (n, n, 3)
+    r2 = (disp**2).sum(-1)
+    n = pos.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    r2 = jnp.where(eye, 1.0, r2)
+    inv_r2 = jnp.where((r2 < cutoff**2) & ~eye, 1.0 / r2, 0.0)
+    s2 = sigma**2 * inv_r2
+    s6 = s2**3
+    fmag = 24.0 * eps * inv_r2 * s6 * (2.0 * s6 - 1.0)  # F/r
+    return (fmag[..., None] * disp).sum(axis=1)
+
+
+def sem_ax_ref(u, d, g):
+    """Spectral-element 1D stiffness apply, batched.
+
+    u: (e, p) per-element nodal values; d: (p, p) derivative matrix;
+    g: (e, p) geometric factors. Ax = D^T (g * (D u)).
+    """
+    du = jnp.einsum("ij,ej->ei", d, u)
+    return jnp.einsum("ji,ej->ei", d, g * du)

@@ -1,0 +1,38 @@
+"""Pallas kernel: spectral-element stiffness apply (NekRS-style substrate).
+
+Batched per-element small-tensor contraction Ax = Dᵀ (G ⊙ (D u)) — the
+Helmholtz/Poisson operator core of nekRS in its 1D-collapsed form. Tiled
+over elements; the derivative operator D stays VMEM-resident.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_E = 512
+
+
+def _sem_ax_kernel(u_ref, d_ref, g_ref, o_ref):
+    u = u_ref[...]  # (be, p)
+    d = d_ref[...]  # (p, p)
+    g = g_ref[...]  # (be, p)
+    du = jnp.einsum("ij,ej->ei", d, u)
+    o_ref[...] = jnp.einsum("ji,ej->ei", d, g * du)
+
+
+@jax.jit
+def sem_ax(u, d, g):
+    """u, g: (e, p) f32; d: (p, p) f32."""
+    e, p = u.shape
+    be = min(BLOCK_E, e)
+    assert e % be == 0
+    grid = (e // be,)
+    tile = pl.BlockSpec((be, p), lambda i: (i, 0))
+    return pl.pallas_call(
+        _sem_ax_kernel,
+        grid=grid,
+        in_specs=[tile, pl.BlockSpec((p, p), lambda i: (0, 0)), tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((e, p), u.dtype),
+        interpret=True,
+    )(u, d, g)

@@ -1,0 +1,74 @@
+"""Pallas kernel: single-qubit gate application on a statevector.
+
+CUDA formulations use one thread per amplitude pair. On TPU we instead
+tile the (pairs, 2, stride) view of the state into VMEM blocks via
+`BlockSpec`; the 2x2 complex unitary is applied as vectorized arithmetic
+on the lane dimension (VPU), and the grid expresses the HBM<->VMEM
+schedule. Complex numbers travel as separate (re, im) float arrays —
+friendlier to both the VPU and the PJRT f32 interchange.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Pair-blocks processed per grid step. 512 pairs x 2 x stride floats:
+# for stride <= 1024 the working set stays well under 16 MiB of VMEM.
+BLOCK_PAIRS = 512
+
+
+def _gate_kernel(re_ref, im_ref, u_ref, ore_ref, oim_ref):
+    a_re = re_ref[:, 0, :]
+    b_re = re_ref[:, 1, :]
+    a_im = im_ref[:, 0, :]
+    b_im = im_ref[:, 1, :]
+    ur = u_ref[0]
+    ui = u_ref[1]
+    ore_ref[:, 0, :] = ur[0, 0] * a_re - ui[0, 0] * a_im + ur[0, 1] * b_re - ui[0, 1] * b_im
+    oim_ref[:, 0, :] = ur[0, 0] * a_im + ui[0, 0] * a_re + ur[0, 1] * b_im + ui[0, 1] * b_re
+    ore_ref[:, 1, :] = ur[1, 0] * a_re - ui[1, 0] * a_im + ur[1, 1] * b_re - ui[1, 1] * b_im
+    oim_ref[:, 1, :] = ur[1, 0] * a_im + ui[1, 0] * a_re + ur[1, 1] * b_im + ui[1, 1] * b_re
+
+
+@functools.partial(jax.jit, static_argnames=("target",))
+def gate_apply(re, im, u, *, target):
+    """Apply a 2x2 unitary to qubit `target`.
+
+    re, im: (2**n,) float32 state-vector components.
+    u: (2, 2, 2) float32 — u[0] real part, u[1] imaginary part.
+    """
+    n = re.shape[0]
+    stride = 1 << target
+    pairs = n // (2 * stride)
+    shape = (pairs, 2, stride)
+    re3 = re.reshape(shape)
+    im3 = im.reshape(shape)
+    block_pairs = min(BLOCK_PAIRS, pairs)
+    grid = (pairs // block_pairs,)
+    state_spec = pl.BlockSpec((block_pairs, 2, stride), lambda i: (i, 0, 0))
+    u_spec = pl.BlockSpec((2, 2, 2), lambda i: (0, 0, 0))
+    out_re, out_im = pl.pallas_call(
+        _gate_kernel,
+        grid=grid,
+        in_specs=[state_spec, state_spec, u_spec],
+        out_specs=[state_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(shape, re.dtype),
+            jax.ShapeDtypeStruct(shape, im.dtype),
+        ],
+        interpret=True,
+    )(re3, im3, u)
+    return out_re.reshape(n), out_im.reshape(n)
+
+
+def hadamard_u():
+    """Real Hadamard as the (2,2,2) re/im layout."""
+    h = 1.0 / jnp.sqrt(2.0)
+    ur = jnp.array([[h, h], [h, -h]], dtype=jnp.float32)
+    ui = jnp.zeros((2, 2), dtype=jnp.float32)
+    return jnp.stack([ur, ui])

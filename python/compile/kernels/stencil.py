@@ -1,0 +1,66 @@
+"""Pallas kernel: hotspot 5-point stencil step (Rodinia).
+
+The CUDA version tiles with shared-memory halos; here each grid step owns
+a row-band of the output while reading the full temperature field from
+its ref with dynamic slices for the halo rows — the BlockSpec expresses
+the HBM->VMEM band schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _hotspot_kernel(temp_ref, power_ref, coef_ref, out_ref, *, rows, block_rows):
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    cap, rx, ry, rz, amb = (coef_ref[k] for k in range(5))
+    band = temp_ref[pl.ds(r0, block_rows), :]
+    pwr = power_ref[pl.ds(r0, block_rows), :]
+    # Halo rows with edge clamping: for the first/last band the clamped
+    # index lands back on the band's own edge row, matching the
+    # reference's boundary handling.
+    up_idx = jnp.maximum(r0 - 1, 0)
+    down_idx = jnp.minimum(r0 + block_rows, rows - 1)
+    up = jnp.concatenate(
+        [temp_ref[pl.ds(up_idx, 1), :], band[:-1, :]], axis=0
+    )
+    down = jnp.concatenate(
+        [band[1:, :], temp_ref[pl.ds(down_idx, 1), :]], axis=0
+    )
+    left = jnp.concatenate([band[:, :1], band[:, :-1]], axis=1)
+    right = jnp.concatenate([band[:, 1:], band[:, -1:]], axis=1)
+    delta = cap * (
+        pwr
+        + (up + down - 2.0 * band) * ry
+        + (left + right - 2.0 * band) * rx
+        + (amb - band) * rz
+    )
+    out_ref[...] = band + delta
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hotspot_step(temp, power, coef):
+    """One stencil step. temp/power: (r, c) f32; coef: (5,) f32 =
+    (cap, rx, ry, rz, ambient)."""
+    rows, cols = temp.shape
+    block_rows = min(BLOCK_ROWS, rows)
+    grid = (rows // block_rows,)
+    full = pl.BlockSpec((rows, cols), lambda i: (0, 0))
+    band = pl.BlockSpec((block_rows, cols), lambda i: (i, 0))
+    coef_spec = pl.BlockSpec((5,), lambda i: (0,))
+    kernel = functools.partial(
+        _hotspot_kernel, rows=rows, block_rows=block_rows
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[full, band, coef_spec],
+        out_specs=band,
+        out_shape=jax.ShapeDtypeStruct(temp.shape, temp.dtype),
+        interpret=True,
+    )(temp, power, coef)

@@ -1,0 +1,33 @@
+"""Pallas kernel: STREAM triad, a = b + alpha * c.
+
+The memory-bandwidth microbenchmark of Table III. Pure VMEM streaming:
+one block of b and c per grid step, coalesced loads/stores.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 64 * 1024
+
+
+def _triad_kernel(b_ref, c_ref, alpha_ref, o_ref):
+    o_ref[...] = b_ref[...] + alpha_ref[0] * c_ref[...]
+
+
+@jax.jit
+def triad(b, c, alpha):
+    """b, c: (n,) f32; alpha: (1,) f32."""
+    n = b.shape[0]
+    block = min(BLOCK, n)
+    grid = (n // block,)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=grid,
+        in_specs=[vec, vec, scalar],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=True,
+    )(b, c, jnp.asarray(alpha, dtype=b.dtype).reshape(1))

@@ -1,0 +1,221 @@
+"""L2 models: per-application JAX compute graphs calling the L1 kernels.
+
+Each function is a self-contained jit-able graph with f32 array inputs
+(the PJRT interchange constraint; integer data is cast in-graph). These
+are the "real compute" counterparts of the calibrated workload models in
+`rust/src/workload/apps.rs`: the e2e driver executes them through the
+PJRT runtime while the simulator schedules them.
+
+Shapes are kept laptop-scale; `aot.py` records the exact example shapes
+in the manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    decode_attention,
+    gate_apply,
+    hadamard_u,
+    hotspot_step,
+    lj_forces,
+    matmul,
+    pq_scan,
+    sem_ax,
+    triad,
+)
+
+# ---------------------------------------------------------------------------
+# Qiskit: a Quantum-Volume-style layer — Hadamards on a few qubits.
+# ---------------------------------------------------------------------------
+
+QISKIT_QUBITS = 16
+
+
+def qiskit_qv(re, im):
+    """Apply H to qubits {0, 5, 11} of a 2^16 statevector."""
+    u = hadamard_u()
+    for t in (0, 5, 11):
+        re, im = gate_apply(re, im, u, target=t)
+    return (re, im)
+
+
+# ---------------------------------------------------------------------------
+# Rodinia hotspot: several stencil steps.
+# ---------------------------------------------------------------------------
+
+HOTSPOT_SHAPE = (512, 512)
+HOTSPOT_STEPS = 8
+
+
+def hotspot_run(temp, power):
+    coef = jnp.array([0.5, 0.1, 0.1, 0.05, 80.0], dtype=jnp.float32)
+
+    def body(t, _):
+        return hotspot_step(t, power, coef), None
+
+    out, _ = jax.lax.scan(body, temp, None, length=HOTSPOT_STEPS)
+    return (out,)
+
+
+# ---------------------------------------------------------------------------
+# STREAM triad.
+# ---------------------------------------------------------------------------
+
+STREAM_N = 1 << 20
+
+
+def stream_triad(b, c):
+    return (triad(b, c, jnp.float32(3.0)),)
+
+
+# ---------------------------------------------------------------------------
+# llm.c: GPT-2-style micro train step (matmul kernel + custom VJP).
+# ---------------------------------------------------------------------------
+
+GPT2_BATCH, GPT2_DIM = 128, 256
+GPT2_LR = 5e-2
+
+
+def _gpt2_loss(w1, w2, x, y):
+    h = jax.nn.relu(matmul(x, w1))
+    out = matmul(h, w2)
+    return jnp.mean((out - y) ** 2)
+
+
+def gpt2_train_step(x, y, w1, w2):
+    """One SGD step; returns (loss, w1', w2')."""
+    loss, grads = jax.value_and_grad(_gpt2_loss, argnums=(0, 1))(w1, w2, x, y)
+    w1 = w1 - GPT2_LR * grads[0]
+    w2 = w2 - GPT2_LR * grads[1]
+    return (loss, w1, w2)
+
+
+# ---------------------------------------------------------------------------
+# llama.cpp: one decode step — attention over the KV cache + out-proj.
+# ---------------------------------------------------------------------------
+
+LLAMA_HEADS, LLAMA_DIM, LLAMA_SEQ = 8, 128, 256
+
+
+def llama_decode(q, k_cache, v_cache, wo):
+    attn = decode_attention(q, k_cache, v_cache)  # (h, d)
+    flat = attn.reshape(1, LLAMA_HEADS * LLAMA_DIM)
+    return (matmul(flat, wo),)
+
+
+# ---------------------------------------------------------------------------
+# FAISS: IVF-PQ ADC query.
+# ---------------------------------------------------------------------------
+
+FAISS_NSUB, FAISS_N = 16, 8192
+
+
+def faiss_query(lut, codes):
+    return (pq_scan(lut, codes),)
+
+
+# ---------------------------------------------------------------------------
+# LAMMPS: LJ force evaluation.
+# ---------------------------------------------------------------------------
+
+LAMMPS_N = 1024
+
+
+def lammps_force(pos, params):
+    return (lj_forces(pos, params),)
+
+
+# ---------------------------------------------------------------------------
+# NekRS: spectral-element stiffness apply.
+# ---------------------------------------------------------------------------
+
+NEKRS_E, NEKRS_P = 2048, 16
+
+
+def nekrs_ax(u, d, g):
+    return (sem_ax(u, d, g),)
+
+
+# ---------------------------------------------------------------------------
+# Catalogue used by aot.py and the tests.
+# ---------------------------------------------------------------------------
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def catalogue():
+    """name -> (fn, example_args, description, flops, bytes)."""
+    n_state = 1 << QISKIT_QUBITS
+    r, c = HOTSPOT_SHAPE
+    hd = LLAMA_HEADS * LLAMA_DIM
+    return {
+        "qiskit_qv": (
+            qiskit_qv,
+            (_f32(n_state), _f32(n_state)),
+            "3 Hadamard gates on a 2^16 statevector (statevector kernel)",
+            14.0 * 3 * (n_state // 2),
+            3 * 2 * 2 * 4.0 * n_state,
+        ),
+        "hotspot": (
+            hotspot_run,
+            (_f32(r, c), _f32(r, c)),
+            f"{HOTSPOT_STEPS} hotspot stencil steps on {r}x{c} (stencil kernel)",
+            12.0 * HOTSPOT_STEPS * r * c,
+            HOTSPOT_STEPS * 3 * 4.0 * r * c,
+        ),
+        "stream_triad": (
+            stream_triad,
+            (_f32(STREAM_N), _f32(STREAM_N)),
+            "STREAM triad over 2^20 f32 (triad kernel)",
+            2.0 * STREAM_N,
+            3 * 4.0 * STREAM_N,
+        ),
+        "gpt2_train_step": (
+            gpt2_train_step,
+            (
+                _f32(GPT2_BATCH, GPT2_DIM),
+                _f32(GPT2_BATCH, GPT2_DIM),
+                _f32(GPT2_DIM, GPT2_DIM),
+                _f32(GPT2_DIM, GPT2_DIM),
+            ),
+            "GPT-2-style micro train step, fwd+bwd through the matmul kernel",
+            6.0 * 2 * GPT2_BATCH * GPT2_DIM * GPT2_DIM,
+            16.0 * (GPT2_BATCH * GPT2_DIM + 2 * GPT2_DIM * GPT2_DIM),
+        ),
+        "llama_decode": (
+            llama_decode,
+            (
+                _f32(LLAMA_HEADS, LLAMA_DIM),
+                _f32(LLAMA_SEQ, LLAMA_HEADS, LLAMA_DIM),
+                _f32(LLAMA_SEQ, LLAMA_HEADS, LLAMA_DIM),
+                _f32(hd, hd),
+            ),
+            "one decode step: KV-cache attention + output projection",
+            4.0 * LLAMA_SEQ * hd + 2.0 * hd * hd,
+            4.0 * (2 * LLAMA_SEQ * hd + hd * hd),
+        ),
+        "faiss_query": (
+            faiss_query,
+            (_f32(FAISS_NSUB, 256), _f32(FAISS_N, FAISS_NSUB)),
+            "IVF-PQ ADC scan over 8192 codes (pq_scan kernel)",
+            1.0 * FAISS_N * FAISS_NSUB,
+            4.0 * (FAISS_N * FAISS_NSUB + FAISS_NSUB * 256),
+        ),
+        "lammps_force": (
+            lammps_force,
+            (_f32(LAMMPS_N, 3), _f32(3)),
+            "Lennard-Jones all-pairs forces with cutoff (force kernel)",
+            30.0 * LAMMPS_N * LAMMPS_N,
+            4.0 * 6 * LAMMPS_N,
+        ),
+        "nekrs_ax": (
+            nekrs_ax,
+            (_f32(NEKRS_E, NEKRS_P), _f32(NEKRS_P, NEKRS_P), _f32(NEKRS_E, NEKRS_P)),
+            "spectral-element stiffness apply Dᵀ(G·(Du)) (sem_ax kernel)",
+            4.0 * NEKRS_E * NEKRS_P * NEKRS_P,
+            4.0 * 3 * NEKRS_E * NEKRS_P,
+        ),
+    }

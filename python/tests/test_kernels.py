@@ -1,0 +1,244 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the statevector target qubit); fixed-seed
+numpy generates the data. This is the CORE correctness signal for the
+compile path — if these pass, the HLO the runtime executes computes the
+paper's math.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    decode_attention,
+    gate_apply,
+    hadamard_u,
+    hotspot_step,
+    lj_forces,
+    matmul,
+    pq_scan,
+    ref,
+    sem_ax,
+    triad,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def f32(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape, scale=scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# statevector
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(6, 12), target=st.integers(0, 5))
+def test_gate_apply_matches_ref(n, target):
+    size = 1 << n
+    re, im = f32(size), f32(size)
+    u = hadamard_u()
+    out_re, out_im = gate_apply(re, im, u, target=target)
+    ref_re, ref_im = ref.gate_apply_ref(re, im, target, u)
+    np.testing.assert_allclose(out_re, ref_re, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out_im, ref_im, rtol=1e-5, atol=1e-6)
+
+
+def test_gate_apply_preserves_norm():
+    size = 1 << 10
+    re, im = f32(size), f32(size)
+    norm0 = float((re**2 + im**2).sum())
+    u = hadamard_u()
+    for t in range(5):
+        re, im = gate_apply(re, im, u, target=t)
+    norm1 = float((re**2 + im**2).sum())
+    assert abs(norm0 - norm1) / norm0 < 1e-4
+
+
+def test_hadamard_twice_is_identity():
+    size = 1 << 8
+    re, im = f32(size), f32(size)
+    u = hadamard_u()
+    r1, i1 = gate_apply(re, im, u, target=3)
+    r2, i2 = gate_apply(r1, i1, u, target=3)
+    np.testing.assert_allclose(r2, re, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(i2, im, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# stencil
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.sampled_from([16, 64, 128, 256]),
+    cols=st.sampled_from([16, 32, 128]),
+)
+def test_hotspot_matches_ref(rows, cols):
+    temp = f32(rows, cols, scale=10.0) + 300.0
+    power = f32(rows, cols, scale=0.1) ** 2
+    cap, rx, ry, rz, amb = 0.5, 0.1, 0.1, 0.05, 80.0
+    coef = jnp.array([cap, rx, ry, rz, amb], dtype=jnp.float32)
+    out = hotspot_step(temp, power, coef)
+    want = ref.hotspot_ref(temp, power, cap, rx, ry, rz, amb)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-3)
+
+
+def test_hotspot_uniform_field_stays_at_equilibrium():
+    # With zero power and T == ambient everywhere, nothing changes.
+    temp = jnp.full((64, 64), 80.0, dtype=jnp.float32)
+    power = jnp.zeros((64, 64), dtype=jnp.float32)
+    coef = jnp.array([0.5, 0.1, 0.1, 0.05, 80.0], dtype=jnp.float32)
+    out = hotspot_step(temp, power, coef)
+    np.testing.assert_allclose(out, temp, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# triad
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.sampled_from([64, 1024, 1 << 14]), alpha=st.floats(-3.0, 3.0))
+def test_triad_matches_ref(n, alpha):
+    b, c = f32(n), f32(n)
+    out = triad(b, c, jnp.float32(alpha))
+    np.testing.assert_allclose(out, ref.triad_ref(b, c, alpha), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# matmul (+ custom VJP)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([1, 32, 128, 256]),
+    k=st.sampled_from([32, 128, 256]),
+    n=st.sampled_from([32, 128]),
+)
+def test_matmul_matches_ref(m, k, n):
+    a, b = f32(m, k), f32(k, n)
+    np.testing.assert_allclose(
+        matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_grad_matches_jnp():
+    import jax
+
+    a, b = f32(32, 64), f32(64, 32)
+
+    def f_kernel(a, b):
+        return (matmul(a, b) ** 2).sum()
+
+    def f_ref(a, b):
+        return (jnp.matmul(a, b) ** 2).sum()
+
+    ga_k, gb_k = jax.grad(f_kernel, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_k, ga_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gb_k, gb_r, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.sampled_from([4, 8]),
+    d=st.sampled_from([32, 64, 128]),
+    s=st.sampled_from([16, 128, 256]),
+)
+def test_decode_attention_matches_ref(h, d, s):
+    q, k, v = f32(h, d), f32(s, h, d), f32(s, h, d)
+    out = decode_attention(q, k, v)
+    np.testing.assert_allclose(
+        out, ref.decode_attention_ref(q, k, v), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_decode_attention_is_convex_combination():
+    # Output lies within [min(v), max(v)] per (h, dim) — softmax weights.
+    h, d, s = 4, 32, 64
+    q, k, v = f32(h, d), f32(s, h, d), f32(s, h, d)
+    out = np.asarray(decode_attention(q, k, v))
+    vmin = np.asarray(v).min(axis=0) - 1e-5
+    vmax = np.asarray(v).max(axis=0) + 1e-5
+    assert (out >= vmin).all() and (out <= vmax).all()
+
+
+# ---------------------------------------------------------------------------
+# pq_scan
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(nsub=st.sampled_from([8, 16, 32]), n=st.sampled_from([256, 1024, 4096]))
+def test_pq_scan_matches_ref(nsub, n):
+    lut = f32(nsub, 256)
+    codes_int = RNG.integers(0, 256, size=(n, nsub))
+    codes = jnp.asarray(codes_int.astype(np.float32))
+    out = pq_scan(lut, codes)
+    want = ref.pq_scan_ref(lut, jnp.asarray(codes_int.astype(np.int32)))
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# lj forces
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([64, 256, 512]))
+def test_lj_forces_match_ref(n):
+    pos = f32(n, 3, scale=3.0)
+    eps, sigma, cutoff = 1.0, 1.0, 2.5
+    params = jnp.array([eps, sigma, cutoff], dtype=jnp.float32)
+    out = lj_forces(pos, params)
+    want = ref.lj_forces_ref(pos, eps, sigma, cutoff)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-3)
+
+
+def test_lj_forces_newton_third_law():
+    # Total force sums to ~zero (pairwise antisymmetry) — relative to the
+    # total force magnitude, since near-overlapping random particles
+    # produce huge r^-13 terms that stress f32 cancellation.
+    pos = f32(256, 3, scale=3.0)
+    params = jnp.array([1.0, 1.0, 2.5], dtype=jnp.float32)
+    forces = np.asarray(lj_forces(pos, params))
+    total = forces.sum(axis=0)
+    scale = np.abs(forces).sum(axis=0) + 1e-9
+    assert (np.abs(total) / scale).max() < 1e-3, (total, scale)
+
+
+# ---------------------------------------------------------------------------
+# sem_ax
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(e=st.sampled_from([64, 512, 1024]), p=st.sampled_from([4, 8, 16]))
+def test_sem_ax_matches_ref(e, p):
+    u, g = f32(e, p), f32(e, p) ** 2 + 0.1
+    d = f32(p, p)
+    out = sem_ax(u, d, g)
+    np.testing.assert_allclose(out, ref.sem_ax_ref(u, d, g), rtol=1e-4, atol=1e-4)
+
+
+def test_sem_ax_is_spd_quadratic_form():
+    # uᵀ(Dᵀ G D)u >= 0 for positive G: the operator is SPD per element.
+    e, p = 128, 8
+    u, g = f32(e, p), f32(e, p) ** 2 + 0.1
+    d = f32(p, p)
+    ax = np.asarray(sem_ax(u, d, g))
+    quad = (np.asarray(u) * ax).sum(axis=1)
+    assert (quad >= -1e-4).all()

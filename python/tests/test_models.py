@@ -1,0 +1,76 @@
+"""L2 model checks: shapes, dtypes, numerics, training signal."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+
+RNG = np.random.default_rng(11)
+
+
+def concrete(args):
+    return [
+        jnp.asarray(RNG.normal(size=a.shape, scale=0.3).astype(np.float32))
+        for a in args
+    ]
+
+
+@pytest.mark.parametrize("name", sorted(model.catalogue().keys()))
+def test_every_model_runs_finite(name):
+    fn, example_args, desc, flops, nbytes = model.catalogue()[name]
+    outs = fn(*concrete(example_args))
+    assert isinstance(outs, tuple) and len(outs) >= 1, name
+    for o in outs:
+        assert np.isfinite(np.asarray(o)).all(), f"{name} produced non-finite output"
+    assert flops > 0 and nbytes > 0 and desc
+
+
+def test_catalogue_inputs_are_f32():
+    for name, (_, example_args, *_rest) in model.catalogue().items():
+        for a in example_args:
+            assert a.dtype == jnp.float32, f"{name} input {a}"
+
+
+def test_gpt2_loss_decreases_over_steps():
+    # The end-to-end training signal: loss must fall over SGD steps.
+    x = jnp.asarray(RNG.normal(size=(model.GPT2_BATCH, model.GPT2_DIM)).astype(np.float32))
+    w_true = RNG.normal(size=(model.GPT2_DIM, model.GPT2_DIM)).astype(np.float32) * 0.1
+    y = jnp.asarray(np.asarray(x) @ w_true)
+    w1 = jnp.asarray(RNG.normal(size=(model.GPT2_DIM, model.GPT2_DIM)).astype(np.float32) * 0.1)
+    w2 = jnp.asarray(RNG.normal(size=(model.GPT2_DIM, model.GPT2_DIM)).astype(np.float32) * 0.1)
+    losses = []
+    for _ in range(20):
+        loss, w1, w2 = model.gpt2_train_step(x, y, w1, w2)
+        losses.append(float(loss))
+    # Strictly decreasing and a material overall drop.
+    assert all(b < a for a, b in zip(losses, losses[1:])), losses
+    assert losses[-1] < losses[0] * 0.95, losses
+
+
+def test_qiskit_qv_preserves_norm():
+    n = 1 << model.QISKIT_QUBITS
+    v = RNG.normal(size=(2, n)).astype(np.float32)
+    v /= np.sqrt((v**2).sum())
+    re, im = model.qiskit_qv(jnp.asarray(v[0]), jnp.asarray(v[1]))
+    norm = float((np.asarray(re) ** 2 + np.asarray(im) ** 2).sum())
+    assert abs(norm - 1.0) < 1e-4
+
+
+def test_hotspot_run_moves_towards_ambient():
+    r, c = model.HOTSPOT_SHAPE
+    temp = jnp.full((r, c), 120.0, dtype=jnp.float32)
+    power = jnp.zeros((r, c), dtype=jnp.float32)
+    (out,) = model.hotspot_run(temp, power)
+    # Ambient is 80: with no power the field must cool.
+    assert float(out.mean()) < 120.0
+    assert float(out.min()) >= 79.0
+
+
+def test_llama_decode_shape():
+    _, args, *_ = model.catalogue()["llama_decode"]
+    (out,) = model.llama_decode(*concrete(args))
+    assert out.shape == (1, model.LLAMA_HEADS * model.LLAMA_DIM)

@@ -1,0 +1,108 @@
+//! Hot-path microbenchmarks for the L3 coordinator: event-queue
+//! throughput, bandwidth arbitration, the kernel duration model, and the
+//! full co-run simulation rate (sim-events per second — the §Perf L3
+//! target is ≥1M events/s through the queue and a seconds-scale Fig. 5).
+//!
+//!     cargo bench --offline --bench engine_hotpath
+
+use migsim::bench::Bencher;
+use migsim::config::SimConfig;
+use migsim::coordinator::corun::{simulate, water_fill, CorunSpec};
+use migsim::gpu::GpuSpec;
+use migsim::mig::ProfileId;
+use migsim::sharing::Scheme;
+use migsim::sim::Engine;
+use migsim::util::Rng;
+use migsim::workload::{apps, AppId, ExecEnv};
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Event queue: schedule+pop churn.
+    const N_EV: u64 = 100_000;
+    b.bench_with_work("engine/schedule_pop", Some(N_EV as f64), "events", || {
+        let mut e: Engine<u64> = Engine::new();
+        let mut rng = Rng::new(1);
+        for i in 0..N_EV {
+            e.schedule_at(rng.below(1 << 30), i);
+        }
+        let mut acc = 0u64;
+        while let Some(s) = e.pop() {
+            acc = acc.wrapping_add(s.event);
+        }
+        acc
+    });
+
+    // Event queue with cancellation churn (the re-rating pattern).
+    b.bench_with_work("engine/cancel_rerate", Some(50_000.0), "events", || {
+        let mut e: Engine<u32> = Engine::new();
+        let mut rng = Rng::new(2);
+        let mut token = e.schedule_at(10, 0);
+        for i in 0..50_000u32 {
+            e.cancel(token);
+            token = e.schedule_in(rng.below(1000) + 1, i);
+            if i % 4 == 0 {
+                e.pop();
+            }
+        }
+        e.len()
+    });
+
+    // Bandwidth arbitration.
+    let desires = [406.0, 380.0, 0.0, 812.0, 55.0, 406.0, 120.0];
+    let caps = [406.0; 7];
+    b.bench_with_work("corun/water_fill_7way", Some(1.0), "calls", || {
+        water_fill(&desires, &caps, 3175.0)
+    });
+
+    // Kernel duration model.
+    let spec = GpuSpec::gh_h100_96gb();
+    let app = apps::model(AppId::LlmcTinystories);
+    let kernel = app.phases[0].kernels[0].clone();
+    let env = ExecEnv {
+        sms: 16,
+        clock_frac: 0.95,
+        bw_gibs: 406.0,
+        c2c_bw_gibs: 282.0,
+        interference: 1.0,
+            time_share: 1.0,
+    };
+    b.bench_with_work("model/kernel_duration", Some(1.0), "calls", || {
+        kernel.duration_s(&spec, &env)
+    });
+
+    // Full co-run simulations (the Fig. 5 inner loop).
+    let cfg = SimConfig {
+        workload_scale: 0.05,
+        ..SimConfig::default()
+    };
+    for (label, scheme) in [
+        (
+            "corun/mig_7x1g_lammps",
+            Scheme::Mig {
+                profile: ProfileId::P1g12gb,
+                copies: 7,
+            },
+        ),
+        (
+            "corun/mps_7x13_lammps",
+            Scheme::Mps {
+                sm_pct: 13,
+                copies: 7,
+            },
+        ),
+        ("corun/timeslice_7_lammps", Scheme::TimeSlice { copies: 7 }),
+    ] {
+        // Report throughput in simulator events per second of wall time.
+        let (m, _) = simulate(&CorunSpec::homogeneous(scheme, AppId::Lammps), &cfg).unwrap();
+        let events = m.events as f64;
+        b.bench_with_work(label, Some(events), "sim-events", || {
+            simulate(&CorunSpec::homogeneous(scheme, AppId::Lammps), &cfg)
+                .unwrap()
+                .0
+                .events
+        });
+    }
+
+    b.finish("engine_hotpath");
+}

@@ -1,0 +1,36 @@
+//! Bench + regeneration harness for the paper's figures (Figs. 2-8).
+//!
+//! Regenerates each figure's series at a reduced workload scale (the
+//! figure *shapes* are scale-invariant — asserted by the integration
+//! tests) and times each experiment driver end-to-end.
+//!
+//!     cargo bench --offline --bench paper_figures
+
+use migsim::bench::{BenchConfig, Bencher};
+use migsim::config::SimConfig;
+use migsim::experiments;
+use std::time::Duration;
+
+fn main() {
+    let cfg = SimConfig {
+        workload_scale: 0.05,
+        ..SimConfig::default()
+    };
+    for id in ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8"] {
+        let out = experiments::run(id, &cfg).expect(id);
+        print!("{}", out.render());
+    }
+
+    let mut b = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(200),
+        max_iters: 20,
+    });
+    for id in ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8"] {
+        b.bench(&format!("experiment/{id}@0.05"), || {
+            experiments::run(id, &cfg).unwrap().json.compact().len()
+        });
+    }
+    b.finish("paper_figures");
+}

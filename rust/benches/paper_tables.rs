@@ -1,0 +1,43 @@
+//! Bench + regeneration harness for the paper's static tables
+//! (Table I, Table II, Table IV, §III-C probe, §IV-B probe).
+//!
+//!     cargo bench --offline --bench paper_tables
+
+use migsim::bench::Bencher;
+use migsim::config::SimConfig;
+use migsim::experiments;
+
+fn main() {
+    let cfg = SimConfig::default();
+    // Regenerate each table once (the harness output is the paper row-set).
+    for id in ["table1", "table2", "table4", "smcount", "ctx"] {
+        let out = experiments::run(id, &cfg).expect(id);
+        print!("{}", out.render());
+    }
+
+    // Time the generation paths.
+    let mut b = Bencher::new();
+    for id in ["table1", "table2", "table4", "smcount", "ctx"] {
+        b.bench(&format!("experiment/{id}"), || {
+            experiments::run(id, &cfg).unwrap().json.compact().len()
+        });
+    }
+    b.bench_with_work("nvlink/direct_bw_sweep", Some(18.0), "queries", || {
+        let m = migsim::gpu::NvlinkModel::default();
+        let mut acc = 0.0;
+        for sms in [16u32, 26, 32, 60, 64, 132] {
+            for dir in [
+                migsim::gpu::nvlink::Dir::H2D,
+                migsim::gpu::nvlink::Dir::D2H,
+                migsim::gpu::nvlink::Dir::Both,
+            ] {
+                acc += m.direct_bw_gibs(sms, dir);
+            }
+        }
+        acc
+    });
+    b.bench_with_work("probe/sm_count_132", Some(1.0), "probes", || {
+        migsim::gpu::sm::measure_sm_count(132)
+    });
+    b.finish("paper_tables");
+}

@@ -1,0 +1,53 @@
+//! PJRT runtime benchmarks: per-artifact execute latency/throughput —
+//! the real-compute path of the e2e driver. Skips gracefully when
+//! artifacts are not built.
+//!
+//!     make artifacts && cargo bench --offline --bench runtime_pjrt
+
+use migsim::bench::{BenchConfig, Bencher};
+use migsim::runtime::{Executor, Registry};
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("runtime_pjrt: no artifacts/ (run `make artifacts`); skipping");
+        return;
+    }
+    let reg = Registry::load(dir).expect("manifest");
+    let mut exec = Executor::new().expect("PJRT client");
+    let mut b = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 2,
+        min_iters: 5,
+        min_time: Duration::from_millis(200),
+        max_iters: 200,
+    });
+    for name in reg.names() {
+        let art = reg.get(&name).unwrap().clone();
+        let inputs = Executor::synthetic_inputs(&art, 3).unwrap();
+        exec.compile(&reg, &name).unwrap();
+        b.bench_with_work(
+            &format!("pjrt/{name}"),
+            Some(art.flops),
+            "FLOP",
+            || {
+                let ins: Vec<xla::Literal> = inputs
+                    .iter()
+                    .map(|l| {
+                        let dims: Vec<i64> =
+                            l.array_shape().unwrap().dims().to_vec();
+                        let v: Vec<f32> = l.to_vec().unwrap();
+                        if dims.is_empty() {
+                            xla::Literal::scalar(v[0])
+                        } else {
+                            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+                        }
+                    })
+                    .collect();
+                exec.execute(&reg, &name, &ins).unwrap().len()
+            },
+        );
+    }
+    b.finish("runtime_pjrt");
+}

@@ -1,0 +1,220 @@
+//! In-repo micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! `rust/benches/*.rs` are `harness = false` binaries built on this module.
+//! Each bench: warms up, runs timed iterations until both a minimum
+//! iteration count and a minimum wall budget are met, and reports
+//! mean/median/p95/std plus throughput. Results can be appended as JSON to
+//! `results/bench/*.json` for the EXPERIMENTS.md §Perf log.
+
+use crate::util::{json::Json, stats};
+use std::time::{Duration, Instant};
+
+/// Config for one benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    pub min_time: Duration,
+    pub max_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            min_time: Duration::from_millis(300),
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Result of a benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    /// Optional units-of-work per iteration, for throughput reporting.
+    pub work_per_iter: Option<f64>,
+    pub work_unit: String,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.mean_s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("iters", self.iters as u64)
+            .set("mean_s", self.mean_s)
+            .set("median_s", self.median_s)
+            .set("p95_s", self.p95_s)
+            .set("std_s", self.std_s)
+            .set("min_s", self.min_s);
+        if let Some(t) = self.throughput() {
+            o.set("throughput", t).set("work_unit", self.work_unit.as_str());
+        }
+        o
+    }
+
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) => format!("  {:>12.1} {}/s", t, self.work_unit),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10} {:>12} ±{:>10}  (p95 {:>10}, n={}){}",
+            self.name,
+            crate::util::units::human_time(self.mean_s),
+            crate::util::units::human_time(self.median_s),
+            crate::util::units::human_time(self.std_s),
+            crate::util::units::human_time(self.p95_s),
+            self.iters,
+            tp
+        )
+    }
+}
+
+/// A group of benchmarks sharing a config, mirroring criterion's group API.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        // `cargo bench -- <filter>` support.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bencher {
+            config: BenchConfig::default(),
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    pub fn with_config(mut self, c: BenchConfig) -> Bencher {
+        self.config = c;
+        self
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => !name.contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Time `f`, which performs one iteration of work and returns a value
+    /// (returned values are black-boxed to defeat DCE).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Option<&BenchResult> {
+        self.bench_with_work(name, None, "", move || f())
+    }
+
+    /// Time `f` with a known amount of work per iteration for throughput.
+    pub fn bench_with_work<T>(
+        &mut self,
+        name: &str,
+        work_per_iter: Option<f64>,
+        work_unit: &str,
+        mut f: impl FnMut() -> T,
+    ) -> Option<&BenchResult> {
+        if self.skip(name) {
+            return None;
+        }
+        for _ in 0..self.config.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let started = Instant::now();
+        while (samples.len() < self.config.min_iters as usize
+            || started.elapsed() < self.config.min_time)
+            && samples.len() < self.config.max_iters as usize
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut acc = stats::Accum::new();
+        samples.iter().for_each(|&s| acc.push(s));
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u32,
+            mean_s: acc.mean(),
+            median_s: stats::percentile_sorted(&samples, 50.0),
+            p95_s: stats::percentile_sorted(&samples, 95.0),
+            std_s: acc.std(),
+            min_s: acc.min(),
+            work_per_iter,
+            work_unit: work_unit.to_string(),
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last()
+    }
+
+    /// Write all results as JSON to `results/bench/<suite>.json`.
+    pub fn finish(self, suite: &str) {
+        if self.results.is_empty() {
+            return;
+        }
+        let dir = std::path::Path::new("results/bench");
+        if std::fs::create_dir_all(dir).is_err() {
+            return; // benches may run from a read-only checkout; report only
+        }
+        let mut doc = Json::obj();
+        doc.set("suite", suite).set(
+            "results",
+            Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+        );
+        let path = dir.join(format!("{suite}.json"));
+        let _ = std::fs::write(&path, doc.pretty());
+        println!("-- wrote {}", path.display());
+    }
+}
+
+/// Opaque value sink, same trick as `std::hint::black_box` (stable since
+/// 1.66 — use the std one).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bencher::new().with_config(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            min_time: Duration::from_millis(1),
+            max_iters: 8,
+        });
+        let r = b
+            .bench_with_work("spin", Some(1000.0), "ops", || {
+                (0..1000u64).fold(0u64, |a, x| a.wrapping_add(x * x))
+            })
+            .unwrap()
+            .clone();
+        assert!(r.iters >= 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.throughput().unwrap() > 0.0);
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("spin"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Grammar: `migsim <command> [positionals] [--flag] [--key value|--key=value]`.
+//! Commands declare their expected options so typos are caught and
+//! `--help` text is generated.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one command invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    /// Validate that all provided options/flags are among `known`.
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown option --{k} (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Description of one subcommand for help text.
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub usage: &'static str,
+}
+
+/// Render top-level help given the command table.
+pub fn render_help(bin: &str, commands: &[CommandSpec]) -> String {
+    let mut s = format!(
+        "{bin} {} — GPU sharing & underutilization simulator\n\n\
+         Reproduction of \"Taming GPU Underutilization via Static Partitioning\n\
+         and Fine-grained CPU Offloading\" (CS.DC 2026).\n\nUSAGE:\n    {bin} <command> [options]\n\nCOMMANDS:\n",
+        crate::VERSION
+    );
+    for c in commands {
+        s.push_str(&format!("    {:<14} {}\n", c.name, c.summary));
+    }
+    s.push_str("\nRun `migsim <command> --help` for command options.\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn basic_shapes() {
+        let a = parse(&["experiment", "fig5", "--scheme=mig", "--copies", "7", "--json"]);
+        assert_eq!(a.command, "experiment");
+        assert_eq!(a.positionals, vec!["fig5"]);
+        assert_eq!(a.opt("scheme"), Some("mig"));
+        assert_eq!(a.opt_u64("copies", 1).unwrap(), 7);
+        assert!(a.flag("json"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_and_space_forms_agree() {
+        let a = parse(&["run", "--alpha=0.5"]);
+        let b = parse(&["run", "--alpha", "0.5"]);
+        assert_eq!(a.opt_f64("alpha", 0.0).unwrap(), 0.5);
+        assert_eq!(b.opt_f64("alpha", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["run", "--bogus", "1"]);
+        assert!(a.check_known(&["alpha"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["run", "--alpha", "xyz"]);
+        assert!(a.opt_f64("alpha", 0.0).is_err());
+    }
+}

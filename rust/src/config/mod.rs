@@ -1,0 +1,165 @@
+//! Run-time configuration for the simulator and experiment drivers.
+//!
+//! Defaults reproduce the paper's testbed (§III): Grace Hopper H100-96GB,
+//! CUDA 12.4-era MIG profile table, GPM sampling at 0.2 s, power polling at
+//! 20 ms. Overrides can be loaded from a JSON file (`--config path`) using
+//! the in-repo JSON parser; every field is optional in the file.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context};
+use std::path::Path;
+
+/// Global simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// PRNG seed for workload jitter and trace synthesis.
+    pub seed: u64,
+    /// GPM metrics sampling period (paper: 0.2 s).
+    pub gpm_period_s: f64,
+    /// NVML power polling period (paper: 20 ms).
+    pub power_period_s: f64,
+    /// GPU power cap in watts (paper: 700 W).
+    pub power_cap_w: f64,
+    /// Per-kernel duration jitter (relative std; 0 disables).
+    pub jitter_rel: f64,
+    /// Scale factor on workload iteration counts (1.0 = paper-sized runs;
+    /// smaller for quick tests).
+    pub workload_scale: f64,
+    /// Directory where experiment results are written.
+    pub results_dir: String,
+    /// Directory containing AOT artifacts for the PJRT runtime.
+    pub artifacts_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            seed: 0x5EED,
+            gpm_period_s: 0.2,
+            power_period_s: 0.02,
+            power_cap_w: 700.0,
+            jitter_rel: 0.0,
+            workload_scale: 1.0,
+            results_dir: "results".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Fast configuration for unit tests: shorter workloads.
+    pub fn fast_test() -> SimConfig {
+        SimConfig {
+            workload_scale: 0.05,
+            ..SimConfig::default()
+        }
+    }
+
+    /// Load overrides from a JSON file on top of defaults.
+    pub fn load(path: &Path) -> crate::Result<SimConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(&json)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed JSON object onto this config.
+    pub fn apply_json(&mut self, json: &Json) -> crate::Result<()> {
+        let obj = json
+            .as_obj()
+            .ok_or_else(|| anyhow!("config root must be an object"))?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "seed" => self.seed = need_u64(key, val)?,
+                "gpm_period_s" => self.gpm_period_s = need_f64(key, val)?,
+                "power_period_s" => self.power_period_s = need_f64(key, val)?,
+                "power_cap_w" => self.power_cap_w = need_f64(key, val)?,
+                "jitter_rel" => self.jitter_rel = need_f64(key, val)?,
+                "workload_scale" => self.workload_scale = need_f64(key, val)?,
+                "results_dir" => self.results_dir = need_str(key, val)?,
+                "artifacts_dir" => self.artifacts_dir = need_str(key, val)?,
+                other => return Err(anyhow!("unknown config key '{other}'")),
+            }
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.gpm_period_s <= 0.0 || self.power_period_s <= 0.0 {
+            return Err(anyhow!("sampling periods must be positive"));
+        }
+        if self.power_cap_w < 100.0 {
+            return Err(anyhow!("power cap implausibly low: {}", self.power_cap_w));
+        }
+        if !(0.0..=1.0).contains(&self.jitter_rel) {
+            return Err(anyhow!("jitter_rel must be in [0,1]"));
+        }
+        if self.workload_scale <= 0.0 {
+            return Err(anyhow!("workload_scale must be positive"));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("seed", self.seed)
+            .set("gpm_period_s", self.gpm_period_s)
+            .set("power_period_s", self.power_period_s)
+            .set("power_cap_w", self.power_cap_w)
+            .set("jitter_rel", self.jitter_rel)
+            .set("workload_scale", self.workload_scale)
+            .set("results_dir", self.results_dir.as_str())
+            .set("artifacts_dir", self.artifacts_dir.as_str());
+        o
+    }
+}
+
+fn need_f64(key: &str, v: &Json) -> crate::Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("config '{key}' must be a number"))
+}
+
+fn need_u64(key: &str, v: &Json) -> crate::Result<u64> {
+    v.as_u64().ok_or_else(|| anyhow!("config '{key}' must be an integer"))
+}
+
+fn need_str(key: &str, v: &Json) -> crate::Result<String> {
+    v.as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("config '{key}' must be a string"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = SimConfig::default();
+        assert_eq!(c.gpm_period_s, 0.2);
+        assert_eq!(c.power_period_s, 0.02);
+        assert_eq!(c.power_cap_w, 700.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = SimConfig::default();
+        let mut c2 = SimConfig::default();
+        c2.apply_json(&c.to_json()).unwrap();
+        assert_eq!(c2.seed, c.seed);
+        assert_eq!(c2.power_cap_w, c.power_cap_w);
+    }
+
+    #[test]
+    fn rejects_unknown_and_invalid() {
+        let mut c = SimConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"bogus":1}"#).unwrap()).is_err());
+        assert!(c
+            .apply_json(&Json::parse(r#"{"gpm_period_s":-1}"#).unwrap())
+            .is_err());
+        assert!(c
+            .apply_json(&Json::parse(r#"{"workload_scale":0}"#).unwrap())
+            .is_err());
+    }
+}

@@ -1,0 +1,1095 @@
+//! The co-run discrete-event simulator.
+//!
+//! Each copy runs its app's phase sequence on its partition. Kernel
+//! durations follow the roofline model in `workload::model`; shared-
+//! bandwidth schemes arbitrate HBM via max-min fairness (water-filling);
+//! the NVLink-C2C link is max-min shared across *all* instances (it is
+//! not partitioned by MIG — §III-D); the power governor couples copies
+//! through the 700 W cap (§V-B1); time-slicing serializes kernels with a
+//! context-switch penalty (§II-B1).
+//!
+//! Active kernels are re-rated (remaining work rescaled to the new
+//! duration) whenever their environment changes: a kernel starting or
+//! ending on a shared scheme, or a DVFS step.
+
+use crate::config::SimConfig;
+use crate::gpu::nvlink::{Dir, NvlinkModel};
+use crate::gpu::{GpuSpec, GpuUsage, PowerModel, PowerState};
+use crate::metrics::{Collector, GpmSample, PowerSample, RunMetrics};
+use crate::offload::OffloadPlan;
+use crate::sharing::scheme::{partitions, Partition, Scheme};
+use crate::sim::{Engine, EventToken};
+use crate::util::units::{gibs, ns_to_sec, sec_to_ns};
+use crate::util::Rng;
+use crate::workload::{apps, AppId, AppModel, ExecEnv};
+use anyhow::bail;
+
+/// Relative rate penalty when time-slicing switches between >1 process.
+const TS_SWITCH_PENALTY: f64 = 0.06;
+
+/// Specification of one co-run experiment.
+#[derive(Debug, Clone)]
+pub struct CorunSpec {
+    pub scheme: Scheme,
+    /// One app per copy. Length must equal `scheme.copies()` unless
+    /// `sequential`, in which case any length works (they run back to
+    /// back on the single partition).
+    pub apps: Vec<AppId>,
+    /// Run copies back-to-back instead of concurrently (the serial
+    /// baseline of Figs. 5/6). Requires `Scheme::Full`.
+    pub sequential: bool,
+    /// Offload plans per copy (None = data must fit).
+    pub offload: Vec<Option<OffloadPlan>>,
+    pub record_traces: bool,
+    /// Fault injection: (copy index, sim time in seconds) at which the
+    /// copy's kernel raises a fatal GPU fault. Under schemes without
+    /// error isolation (MPS, §II-B2) the fault kills every co-runner.
+    pub fault_at: Option<(usize, f64)>,
+}
+
+impl CorunSpec {
+    /// Concurrent co-run of `copies` identical apps under `scheme`.
+    pub fn homogeneous(scheme: Scheme, app: AppId) -> CorunSpec {
+        let n = scheme.copies() as usize;
+        CorunSpec {
+            scheme,
+            apps: vec![app; n],
+            sequential: false,
+            offload: vec![None; n],
+            record_traces: false,
+            fault_at: None,
+        }
+    }
+
+    /// The serial baseline: `copies` runs of `app` back-to-back on the
+    /// full GPU.
+    pub fn serial(app: AppId, copies: u32) -> CorunSpec {
+        CorunSpec {
+            scheme: Scheme::Full,
+            apps: vec![app; copies as usize],
+            sequential: true,
+            offload: vec![None; copies as usize],
+            record_traces: false,
+            fault_at: None,
+        }
+    }
+
+    pub fn with_traces(mut self) -> CorunSpec {
+        self.record_traces = true;
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    /// Current phase of copy `i` completes.
+    PhaseEnd(usize),
+    /// Injected fatal GPU fault in copy `i` (§II-B2 error-isolation).
+    Fault(usize),
+    /// Copy `i` begins (used for sequential mode chaining).
+    CopyStart(usize),
+    PowerPoll,
+    GpmSample,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Step {
+    Cpu,
+    Kernel(usize),
+}
+
+#[derive(Debug, Clone)]
+struct Cursor {
+    phase: usize,
+    iter: u32,
+    step: Step,
+}
+
+#[derive(Debug)]
+struct ActiveKernel {
+    kernel_idx: (usize, usize),
+    /// Fraction of the kernel's work already completed.
+    frac_done: f64,
+    /// Simulation time the current rating started.
+    rated_at_ns: u64,
+    /// Duration under the current rating (s).
+    cur_duration_s: f64,
+    /// Compute-only duration at boost clock (cached at kernel start so
+    /// the per-rebalance bandwidth-desire computation allocates nothing).
+    t_compute_boost_s: f64,
+    token: EventToken,
+}
+
+#[derive(Debug)]
+struct CopyState {
+    app: AppModel,
+    part: Partition,
+    cursor: Cursor,
+    active: Option<ActiveKernel>,
+    /// Pending CPU-phase end token (no re-rating needed for CPU phases).
+    started_s: f64,
+    finished_s: Option<f64>,
+    started: bool,
+    failed: bool,
+}
+
+impl CopyState {
+    fn finished(&self) -> bool {
+        self.finished_s.is_some()
+    }
+}
+
+/// Run a co-run simulation and return metrics + collector.
+pub fn simulate(spec: &CorunSpec, cfg: &SimConfig) -> crate::Result<(RunMetrics, Collector)> {
+    Corun::new(spec, cfg)?.run()
+}
+
+struct Corun {
+    gpu: GpuSpec,
+    nvlink: NvlinkModel,
+    power_model: PowerModel,
+    power: PowerState,
+    copies: Vec<CopyState>,
+    engine: Engine<Ev>,
+    collector: Collector,
+    rng: Rng,
+    cfg: SimConfig,
+    scheme: Scheme,
+    sequential: bool,
+    /// Aggregate context overhead charged GPU-wide (GiB).
+    ctx_total_gib: f64,
+    fault_at: Option<(usize, f64)>,
+    /// True when partitions cannot affect each other through bandwidth
+    /// (dedicated MIG caps, no C2C users, no time-slicing): kernel
+    /// start/end events then need no global rebalance — only DVFS steps
+    /// do. Cuts event-handling cost ~2x for pure-MIG runs.
+    isolated: bool,
+    /// Scratch buffers reused across rebalances (no allocation in the
+    /// event hot loop — §Perf L3 target).
+    scratch: Scratch,
+}
+
+#[derive(Debug, Default)]
+struct Scratch {
+    active: Vec<usize>,
+    hbm_desire: Vec<f64>,
+    hbm_cap: Vec<f64>,
+    c2c_desire: Vec<f64>,
+    c2c_cap: Vec<f64>,
+    envs: Vec<ExecEnv>,
+}
+
+impl Corun {
+    fn new(spec: &CorunSpec, cfg: &SimConfig) -> crate::Result<Corun> {
+        let gpu = GpuSpec::gh_h100_96gb();
+        let parts = partitions(&spec.scheme, &gpu)?;
+        let n = spec.apps.len();
+        if spec.sequential {
+            if spec.scheme != Scheme::Full {
+                bail!("sequential baseline requires Scheme::Full");
+            }
+        } else if n != parts.len() {
+            bail!(
+                "{} apps for {} partitions under {}",
+                n,
+                parts.len(),
+                spec.scheme.label()
+            );
+        }
+        if spec.offload.len() != n {
+            bail!("offload plan list must match app list");
+        }
+
+        let concurrent = !spec.sequential && n > 1;
+        let mut copies = Vec::with_capacity(n);
+        let mut shared_footprint = 0.0;
+        for (i, &app_id) in spec.apps.iter().enumerate() {
+            let part = if spec.sequential {
+                parts[0].clone()
+            } else {
+                parts[i].clone()
+            };
+            let mut app = apps::model(app_id).scaled(cfg.workload_scale);
+            // Apply CPU contention when concurrent.
+            if concurrent {
+                let infl = app.cpu_corun_inflation;
+                for ph in &mut app.phases {
+                    ph.cpu_s *= infl;
+                }
+            }
+            // Prepend the one-time startup (context init / data load):
+            // GPU-idle time the serial baseline pays once per copy but a
+            // co-run overlaps across copies. Scaled with the workload so
+            // quick test runs keep the paper's proportions.
+            if app.startup_s > 0.0 {
+                app.phases.insert(
+                    0,
+                    crate::workload::MacroPhase {
+                        cpu_s: app.startup_s * cfg.workload_scale,
+                        kernels: Vec::new(),
+                        repeats: 1,
+                    },
+                );
+            }
+            // Apply the offload plan (rewrites HBM traffic to C2C).
+            let resident_gib = match &spec.offload[i] {
+                Some(plan) => {
+                    app = plan.apply(&app);
+                    // Only the resident set occupies instance memory now.
+                    app.footprint_gib = plan.effective_footprint_gib();
+                    app.footprint_gib
+                }
+                None => app.footprint_gib,
+            };
+            // Capacity admission check.
+            let need = resident_gib + part.context_overhead_gib;
+            if part.bw_shared || spec.sequential {
+                shared_footprint += need;
+                if !spec.sequential && shared_footprint > part.mem_capacity_gib {
+                    bail!(
+                        "aggregate footprint {shared_footprint:.1} GiB exceeds shared capacity {:.1} GiB under {}",
+                        part.mem_capacity_gib,
+                        spec.scheme.label()
+                    );
+                }
+            } else if need > part.mem_capacity_gib {
+                bail!(
+                    "{}: footprint {need:.1} GiB exceeds {} capacity {:.1} GiB (use offloading or a larger profile)",
+                    app.name,
+                    part.label,
+                    part.mem_capacity_gib
+                );
+            }
+            copies.push(CopyState {
+                app,
+                part,
+                cursor: Cursor {
+                    phase: 0,
+                    iter: 0,
+                    step: Step::Cpu,
+                },
+                active: None,
+                started_s: 0.0,
+                finished_s: None,
+                started: false,
+                failed: false,
+            });
+        }
+
+        let ctx = crate::sharing::ContextModel::default();
+        let ctx_total_gib = ctx.total_gib(&spec.scheme, n as u32);
+
+        let any_c2c = copies.iter().any(|c| {
+            c.app
+                .phases
+                .iter()
+                .any(|ph| ph.kernels.iter().any(|k| k.c2c_bytes > 0.0))
+        });
+        let isolated = !any_c2c
+            && copies
+                .iter()
+                .all(|c| !c.part.bw_shared && !c.part.exclusive_time);
+
+        let mut power_model = PowerModel::h100();
+        power_model.cap_w = cfg.power_cap_w;
+
+        Ok(Corun {
+            power: PowerState::new(&gpu),
+            gpu,
+            nvlink: NvlinkModel::default(),
+            power_model,
+            copies,
+            engine: Engine::new(),
+            collector: Collector::new(spec.record_traces),
+            rng: Rng::new(cfg.seed),
+            cfg: cfg.clone(),
+            scheme: spec.scheme,
+            sequential: spec.sequential,
+            ctx_total_gib,
+            fault_at: spec.fault_at,
+            isolated,
+            scratch: Scratch::default(),
+        })
+    }
+
+    fn run(mut self) -> crate::Result<(RunMetrics, Collector)> {
+        // Kick off copies.
+        if self.sequential {
+            self.engine.schedule_at(0, Ev::CopyStart(0));
+        } else {
+            for i in 0..self.copies.len() {
+                self.engine.schedule_at(0, Ev::CopyStart(i));
+            }
+        }
+        if let Some((i, at_s)) = self.fault_at {
+            anyhow::ensure!(i < self.copies.len(), "fault index out of range");
+            self.engine.schedule_at(sec_to_ns(at_s), Ev::Fault(i));
+        }
+        let power_period = sec_to_ns(self.cfg.power_period_s);
+        let gpm_period = sec_to_ns(self.cfg.gpm_period_s);
+        self.engine.schedule_at(power_period, Ev::PowerPoll);
+        self.engine.schedule_at(gpm_period, Ev::GpmSample);
+        // Initial samples at t=0.
+        self.sample_power(0.0);
+        self.sample_gpm(0.0);
+
+        while let Some(ev) = self.engine.pop() {
+            let now = ns_to_sec(ev.time_ns);
+            match ev.event {
+                Ev::CopyStart(i) => {
+                    self.copies[i].started = true;
+                    self.copies[i].started_s = now;
+                    self.begin_step(i);
+                    if !self.isolated {
+                        self.rebalance(false);
+                    }
+                }
+                Ev::PhaseEnd(i) => {
+                    if self.copies[i].failed {
+                        continue; // stale event from a killed copy
+                    }
+                    let shared = self.advance(i, now);
+                    // Isolated partitions rate kernels exactly at start
+                    // (env_placeholder uses the true caps and the current
+                    // clock); only shared schemes need a global rebalance.
+                    if shared && !self.isolated {
+                        self.rebalance(true);
+                    }
+                }
+                Ev::Fault(i) => {
+                    self.inject_fault(i, now);
+                    self.rebalance(true);
+                }
+                Ev::PowerPoll => {
+                    self.sample_power(now);
+                    if self.any_running() {
+                        self.engine.schedule_in(power_period, Ev::PowerPoll);
+                    }
+                }
+                Ev::GpmSample => {
+                    self.sample_gpm(now);
+                    if self.any_running() {
+                        self.engine.schedule_in(gpm_period, Ev::GpmSample);
+                    }
+                }
+            }
+        }
+
+        let makespan = self
+            .copies
+            .iter()
+            .filter_map(|c| c.finished_s)
+            .fold(0.0f64, f64::max);
+        // Final samples to close integration windows.
+        self.sample_power(makespan);
+        self.sample_gpm(makespan);
+
+        let runtimes: Vec<f64> = self
+            .copies
+            .iter()
+            .map(|c| c.finished_s.unwrap_or(makespan) - c.started_s)
+            .collect();
+        let failed_copies = self.copies.iter().filter(|c| c.failed).count() as u32;
+        let metrics = RunMetrics {
+            scheme: if self.sequential {
+                format!("serial x{}", self.copies.len())
+            } else {
+                self.scheme.label()
+            },
+            makespan_s: makespan,
+            energy_j: self.collector.energy_j(),
+            avg_power_w: self.collector.avg_power_w(),
+            max_power_w: self.collector.max_power_w(),
+            throttled_time_s: self.collector.throttled_time_s(),
+            avg_occupancy: self.collector.avg_occupancy(),
+            avg_sm_util: self.collector.avg_sm_util(),
+            avg_bw_util: self.collector.avg_bw_util(),
+            avg_mem_used_gib: self.collector.avg_mem_used_gib(),
+            peak_mem_gib: self.collector.peak_mem_gib(),
+            copy_runtimes_s: runtimes,
+            failed_copies,
+            events: self.engine.popped(),
+        };
+        Ok((metrics, self.collector))
+    }
+
+    /// Kill copy `i`; without error isolation every running co-runner's
+    /// kernels return with an error too (§II-B2: "When a GPU kernel in
+    /// one MPS process generates a fatal GPU fault, all other processes'
+    /// GPU kernels ... also return with an error").
+    fn inject_fault(&mut self, i: usize, now: f64) {
+        let isolated = self.copies[i].part.error_isolated;
+        let victims: Vec<usize> = if isolated {
+            vec![i]
+        } else {
+            self.copies
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.started && !c.finished())
+                .map(|(j, _)| j)
+                .collect()
+        };
+        for v in victims {
+            let c = &mut self.copies[v];
+            if let Some(a) = c.active.take() {
+                self.engine.cancel(a.token);
+            }
+            c.failed = true;
+            c.finished_s = Some(now);
+        }
+    }
+
+    fn any_running(&self) -> bool {
+        self.copies.iter().any(|c| c.started && !c.finished())
+    }
+
+    /// Begin the step currently pointed at by copy `i`'s cursor.
+    fn begin_step(&mut self, i: usize) {
+        let now_ns = self.engine.now_ns();
+        let jitter = if self.cfg.jitter_rel > 0.0 {
+            self.rng.jitter(1.0, self.cfg.jitter_rel).max(0.1)
+        } else {
+            1.0
+        };
+        let c = &self.copies[i];
+        let ph = &c.app.phases[c.cursor.phase];
+        match c.cursor.step {
+            Step::Cpu => {
+                let d = ph.cpu_s * jitter;
+                let tok = self
+                    .engine
+                    .schedule_in(sec_to_ns(d.max(0.0)), Ev::PhaseEnd(i));
+                // CPU phases never need re-rating; reuse ActiveKernel slot
+                // with a sentinel kernel index.
+                self.copies[i].active = Some(ActiveKernel {
+                    kernel_idx: (usize::MAX, 0),
+                    frac_done: 0.0,
+                    rated_at_ns: now_ns,
+                    cur_duration_s: d,
+                    t_compute_boost_s: 0.0,
+                    token: tok,
+                });
+            }
+            Step::Kernel(k) => {
+                let env = self.env_placeholder(i);
+                let d = ph.kernels[k].duration_s(&self.gpu, &env) * jitter;
+                // Compute-only duration at boost (no memory/C2C terms).
+                let t_c = {
+                    let kernel = &ph.kernels[k];
+                    let tail = crate::gpu::tail_efficiency(
+                        kernel.blocks,
+                        c.part.sms,
+                        kernel.resident_per_sm,
+                    );
+                    let peak = kernel.mix.effective_flops(|p| {
+                        self.gpu
+                            .pipeline_flops(p, c.part.sms, self.gpu.clock_max_mhz)
+                    });
+                    if kernel.flops > 0.0 {
+                        kernel.flops / (peak * tail)
+                    } else {
+                        0.0
+                    }
+                };
+                let tok = self.engine.schedule_in(sec_to_ns(d), Ev::PhaseEnd(i));
+                self.copies[i].active = Some(ActiveKernel {
+                    kernel_idx: (self.copies[i].cursor.phase, k),
+                    frac_done: 0.0,
+                    rated_at_ns: now_ns,
+                    cur_duration_s: d,
+                    t_compute_boost_s: t_c,
+                    token: tok,
+                });
+            }
+        }
+    }
+
+    /// A provisional env for initial rating; `rebalance` immediately
+    /// re-rates with the true contended environment.
+    fn env_placeholder(&self, i: usize) -> ExecEnv {
+        let p = &self.copies[i].part;
+        ExecEnv {
+            sms: p.sms,
+            clock_frac: self.power.clock_frac(&self.gpu),
+            bw_gibs: p.mem_bw_cap_gibs,
+            c2c_bw_gibs: self.nvlink.direct_bw_gibs(p.sms, Dir::Both),
+            interference: 1.0,
+            time_share: 1.0,
+        }
+    }
+
+    /// Advance copy `i` past its finished phase. Returns true if the
+    /// change can affect other copies (kernel started/ended on a shared
+    /// resource).
+    fn advance(&mut self, i: usize, now: f64) -> bool {
+        let was_kernel = {
+            let c = &mut self.copies[i];
+            let was_kernel = matches!(c.cursor.step, Step::Kernel(_));
+            c.active = None;
+            // Move cursor.
+            let ph_len = c.app.phases[c.cursor.phase].kernels.len();
+            let next = match c.cursor.step {
+                Step::Cpu if ph_len > 0 => Some(Step::Kernel(0)),
+                Step::Cpu => None,
+                Step::Kernel(k) if k + 1 < ph_len => Some(Step::Kernel(k + 1)),
+                Step::Kernel(_) => None,
+            };
+            match next {
+                Some(step) => c.cursor.step = step,
+                None => {
+                    // Iteration finished.
+                    c.cursor.iter += 1;
+                    c.cursor.step = Step::Cpu;
+                    if c.cursor.iter >= c.app.phases[c.cursor.phase].repeats {
+                        c.cursor.iter = 0;
+                        c.cursor.phase += 1;
+                        if c.cursor.phase >= c.app.phases.len() {
+                            c.finished_s = Some(now);
+                        }
+                    }
+                }
+            }
+            was_kernel
+        };
+        if self.copies[i].finished() {
+            // Sequential chaining: start the next pending copy.
+            if self.sequential {
+                if let Some(nxt) = self.copies.iter().position(|c| !c.started) {
+                    self.engine.schedule_in(0, Ev::CopyStart(nxt));
+                }
+            }
+            return was_kernel;
+        }
+        self.begin_step(i);
+        let now_kernel = matches!(self.copies[i].cursor.step, Step::Kernel(_));
+        was_kernel || now_kernel
+    }
+
+    /// Fill `buf` with indices of copies currently running a GPU kernel.
+    fn fill_active_kernels(&self, buf: &mut Vec<usize>) {
+        buf.clear();
+        buf.extend(
+            self.copies
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| {
+                    c.active
+                        .as_ref()
+                        .map(|a| a.kernel_idx.0 != usize::MAX)
+                        .unwrap_or(false)
+                })
+                .map(|(i, _)| i),
+        );
+    }
+
+    /// Recompute environments for all active kernels and re-rate them.
+    /// `shared_change`: whether a shared-resource change occurred (always
+    /// re-rate then); otherwise only re-rate on clock changes.
+    fn rebalance(&mut self, _shared_change: bool) {
+        let mut active = std::mem::take(&mut self.scratch.active);
+        self.fill_active_kernels(&mut active);
+        if active.is_empty() {
+            self.scratch.active = active;
+            return;
+        }
+        let mut envs = std::mem::take(&mut self.scratch.envs);
+        self.compute_envs(&active, &mut envs);
+        let now_ns = self.engine.now_ns();
+        for (&i, env) in active.iter().zip(envs.iter()) {
+            let (phase, k) = self.copies[i].active.as_ref().unwrap().kernel_idx;
+            let kernel = &self.copies[i].app.phases[phase].kernels[k];
+            let new_d = kernel.duration_s(&self.gpu, env);
+            let a = self.copies[i].active.as_mut().unwrap();
+            // Progress under the old rating.
+            let elapsed = ns_to_sec(now_ns - a.rated_at_ns);
+            if a.cur_duration_s > 0.0 {
+                a.frac_done = (a.frac_done + elapsed / a.cur_duration_s).min(1.0);
+            }
+            let remaining = ((1.0 - a.frac_done) * new_d).max(0.0);
+            // Only reschedule when the estimate moved by >0.01% (avoids
+            // event churn from no-op rebalances).
+            let old_remaining = a.cur_duration_s * (1.0 - a.frac_done);
+            a.rated_at_ns = now_ns;
+            a.cur_duration_s = new_d;
+            if (remaining - old_remaining).abs() > old_remaining * 1e-4 + 1e-9 {
+                self.engine.cancel(a.token);
+                let tok = self.engine.schedule_in(sec_to_ns(remaining), Ev::PhaseEnd(i));
+                let a = self.copies[i].active.as_mut().unwrap();
+                a.token = tok;
+            }
+        }
+        self.scratch.active = active;
+        self.scratch.envs = envs;
+    }
+
+    /// Environments for the active kernels, applying bandwidth
+    /// arbitration, C2C sharing, time-slice serialization and MPS
+    /// interference.
+    fn compute_envs(&mut self, active: &[usize], envs: &mut Vec<ExecEnv>) {
+        let clock_frac = self.power.clock_frac(&self.gpu);
+        let n_active = active.len();
+        let exclusive = self
+            .copies
+            .first()
+            .map(|c| c.part.exclusive_time)
+            .unwrap_or(false);
+
+        // --- HBM arbitration ---
+        // Desired bandwidth per kernel: what it needs to not be memory-
+        // bound, capped by its partition allocation (or the GPU total for
+        // shared schemes).
+        let mut hbm_desire = std::mem::take(&mut self.scratch.hbm_desire);
+        let mut hbm_cap = std::mem::take(&mut self.scratch.hbm_cap);
+        hbm_desire.clear();
+        hbm_desire.resize(n_active, 0.0);
+        hbm_cap.clear();
+        hbm_cap.resize(n_active, 0.0);
+        let mut shared_pool = 0.0;
+        let mut any_shared = false;
+        for (j, &i) in active.iter().enumerate() {
+            let c = &self.copies[i];
+            let (phase, k) = c.active.as_ref().unwrap().kernel_idx;
+            let kernel = &c.app.phases[phase].kernels[k];
+            let cap = if c.part.bw_shared {
+                any_shared = true;
+                // Contended shared pool loses efficiency per extra sharer
+                // (row conflicts, arbitration): MIG's hard caps avoid
+                // this, which is why 7x1g generally wins Fig. 5 except
+                // for bandwidth-hungry Qiskit/NekRS (§V-A).
+                shared_pool =
+                    self.gpu.mem_bw_gibs * (1.0 - 0.01 * (n_active - 1) as f64).max(0.85);
+                shared_pool
+            } else {
+                c.part.mem_bw_cap_gibs
+            };
+            hbm_cap[j] = cap;
+            // Time needed by compute alone at the current clock, from
+            // the cache filled at kernel start (compute scales 1/clock).
+            let t_c = c.active.as_ref().unwrap().t_compute_boost_s / clock_frac.max(1e-9);
+            let desire = if kernel.hbm_bytes > 0.0 {
+                if t_c > 0.0 {
+                    (kernel.hbm_bytes / gibs(1.0) / t_c / kernel.bw_eff).min(cap)
+                } else {
+                    cap
+                }
+            } else {
+                0.0
+            };
+            hbm_desire[j] = desire;
+        }
+        let hbm_grant = if any_shared && !exclusive {
+            water_fill(&hbm_desire, &hbm_cap, shared_pool)
+        } else {
+            // Dedicated caps (MIG) or time-sliced (serialized anyway).
+            hbm_cap.clone()
+        };
+
+        // --- C2C arbitration (shared across ALL instances, §III-D) ---
+        let c2c_pool = self.nvlink.direct_both_cap_gibs;
+        let mut c2c_desire = std::mem::take(&mut self.scratch.c2c_desire);
+        let mut c2c_cap = std::mem::take(&mut self.scratch.c2c_cap);
+        c2c_desire.clear();
+        c2c_desire.resize(n_active, 0.0);
+        c2c_cap.clear();
+        c2c_cap.resize(n_active, 0.0);
+        for (j, &i) in active.iter().enumerate() {
+            let c = &self.copies[i];
+            let (phase, k) = c.active.as_ref().unwrap().kernel_idx;
+            let kernel = &c.app.phases[phase].kernels[k];
+            // Offloaded data reads are host→device; STREAM-Nvlink drives
+            // both directions (Table IVb rates differ per direction).
+            let dir = if kernel.c2c_read_only { Dir::H2D } else { Dir::Both };
+            c2c_cap[j] = self.nvlink.direct_bw_gibs(c.part.sms, dir);
+            c2c_desire[j] = if kernel.c2c_bytes > 0.0 { c2c_cap[j] } else { 0.0 };
+        }
+        // Time-sliced kernels are serialized: each sees the whole link
+        // while it runs (the serialization is charged via `interference`),
+        // so only concurrent schemes share the C2C pool.
+        let c2c_grant = if exclusive {
+            c2c_cap.clone()
+        } else {
+            water_fill(&c2c_desire, &c2c_cap, c2c_pool)
+        };
+
+        // --- Assemble ---
+        envs.clear();
+        envs.extend(active.iter().enumerate().map(|(j, &i)| {
+            let c = &self.copies[i];
+            let mut interference = 1.0;
+            let mut time_share = 1.0;
+            if exclusive && n_active > 1 {
+                // Round-robin serialization + context-switch cost
+                // stretches the whole kernel.
+                time_share = n_active as f64 * (1.0 + TS_SWITCH_PENALTY);
+            } else if c.part.interference > 0.0 && n_active > 1 {
+                // Shared-L2/cache interference grows with co-runner
+                // count and slows the compute pipeline (§IV-A: "MPS
+                // always underperforms by 1-5% compared to MIG").
+                interference = 1.0 + c.part.interference * (n_active - 1) as f64;
+            }
+            ExecEnv {
+                sms: c.part.sms,
+                clock_frac,
+                bw_gibs: hbm_grant[j].max(1.0),
+                c2c_bw_gibs: c2c_grant[j].max(1.0),
+                interference,
+                time_share,
+            }
+        }));
+        self.scratch.hbm_desire = hbm_desire;
+        self.scratch.hbm_cap = hbm_cap;
+        self.scratch.c2c_desire = c2c_desire;
+        self.scratch.c2c_cap = c2c_cap;
+    }
+
+    /// Aggregate instantaneous usage for the power model and GPM sampler.
+    fn usage(&self) -> GpuUsage {
+        let mut active = Vec::with_capacity(self.copies.len());
+        self.fill_active_kernels(&mut active);
+        let mut u = GpuUsage {
+            context_active: self.any_running(),
+            ..GpuUsage::default()
+        };
+        if active.is_empty() {
+            return u;
+        }
+        let exclusive = self.copies[active[0]].part.exclusive_time;
+        let n = active.len() as f64;
+        for &i in &active {
+            let c = &self.copies[i];
+            let a = c.active.as_ref().unwrap();
+            let (phase, k) = a.kernel_idx;
+            let kernel = &c.app.phases[phase].kernels[k];
+            let d = a.cur_duration_s;
+            let share = if exclusive { 1.0 / n } else { 1.0 };
+            u.sm_busy_frac += share * c.part.sms as f64 / self.gpu.sms as f64;
+            let fr = kernel.flop_rate_tflops(d);
+            for p in crate::gpu::pipelines::ALL_PIPELINES {
+                u.flop_rate_tflops[p.index()] += fr * kernel.mix.frac(p);
+            }
+            u.hbm_rate_tbs += kernel.hbm_rate_tbs(d);
+            u.c2c_rate_tbs += kernel.c2c_rate_tbs(d);
+        }
+        u.sm_busy_frac = u.sm_busy_frac.min(1.0);
+        u
+    }
+
+    fn sample_power(&mut self, now: f64) {
+        let usage = self.usage();
+        let changed = self.power.govern(
+            &self.gpu,
+            &self.power_model,
+            &usage,
+            self.cfg.power_period_s,
+        );
+        let w = self
+            .power_model
+            .reported_w(&self.gpu, &usage, self.power.clock_mhz);
+        self.collector.push_power(PowerSample {
+            t_s: now,
+            power_w: w,
+            clock_mhz: self.power.clock_mhz,
+            throttled: self.power.throttled,
+        });
+        if changed {
+            self.rebalance(false);
+        }
+    }
+
+    fn sample_gpm(&mut self, now: f64) {
+        let mut active = std::mem::take(&mut self.scratch.active);
+        self.fill_active_kernels(&mut active);
+        let mut occ = 0.0;
+        let mut pipe = [0.0f64; 5];
+        let usage = self.usage();
+        let exclusive = !active.is_empty() && self.copies[active[0]].part.exclusive_time;
+        let n = active.len().max(1) as f64;
+        for &i in &active {
+            let c = &self.copies[i];
+            let (phase, k) = c.active.as_ref().unwrap().kernel_idx;
+            let kernel = &c.app.phases[phase].kernels[k];
+            let share = if exclusive { 1.0 / n } else { 1.0 };
+            occ += share * kernel.occupancy(&self.gpu, c.part.sms) * c.part.sms as f64
+                / self.gpu.sms as f64;
+            for p in crate::gpu::pipelines::ALL_PIPELINES {
+                // Utilization = achieved/peak for that pipeline GPU-wide.
+                let peak =
+                    self.gpu.pipeline_flops(p, self.gpu.sms, self.power.clock_mhz) / 1e12;
+                if peak > 0.0 {
+                    pipe[p.index()] += usage.flop_rate_tflops[p.index()] / peak;
+                }
+            }
+        }
+        // Memory in use: running copies' resident footprints + contexts.
+        let mem_used: f64 = self
+            .copies
+            .iter()
+            .filter(|c| c.started && !c.finished())
+            .map(|c| c.app.footprint_gib.min(c.part.mem_capacity_gib))
+            .sum::<f64>()
+            + self.ctx_total_gib;
+        self.collector.push_gpm(GpmSample {
+            t_s: now,
+            sm_util: usage.sm_busy_frac,
+            sm_occupancy: occ,
+            pipe_util: pipe,
+            bw_util: usage.hbm_rate_tbs * 1e12 / gibs(self.gpu.mem_bw_gibs),
+            mem_used_gib: mem_used,
+        });
+        self.scratch.active = active;
+    }
+}
+
+/// Max-min fair allocation: distribute `pool` across demands, each capped
+/// by `caps[i]`; unsatisfied demands share the surplus evenly
+/// (water-filling). Zero-demand entries get their cap (uncontended).
+pub fn water_fill(desires: &[f64], caps: &[f64], pool: f64) -> Vec<f64> {
+    assert_eq!(desires.len(), caps.len());
+    let n = desires.len();
+    let mut grant = vec![0.0; n];
+    let mut remaining = pool;
+    let mut unsat: Vec<usize> = (0..n).filter(|&i| desires[i] > 0.0).collect();
+    // Entries with no demand are uncontended: give them their cap.
+    for i in 0..n {
+        if desires[i] == 0.0 {
+            grant[i] = caps[i];
+        }
+    }
+    while !unsat.is_empty() && remaining > 1e-9 {
+        let share = remaining / unsat.len() as f64;
+        let mut satisfied = Vec::new();
+        for &i in &unsat {
+            let want = desires[i].min(caps[i]);
+            if want <= share {
+                grant[i] = want;
+                remaining -= want;
+                satisfied.push(i);
+            }
+        }
+        if satisfied.is_empty() {
+            for &i in &unsat {
+                grant[i] = share.min(caps[i]);
+            }
+            break;
+        }
+        unsat.retain(|i| !satisfied.contains(i));
+    }
+    grant
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::ProfileId;
+
+    fn cfg() -> SimConfig {
+        SimConfig::fast_test()
+    }
+
+    #[test]
+    fn water_fill_basics() {
+        // Pool 100, demands 80/80, caps 100: each gets 50.
+        let g = water_fill(&[80.0, 80.0], &[100.0, 100.0], 100.0);
+        assert!((g[0] - 50.0).abs() < 1e-9 && (g[1] - 50.0).abs() < 1e-9);
+        // Small demand satisfied, big one takes the rest.
+        let g = water_fill(&[10.0, 200.0], &[100.0, 100.0], 100.0);
+        assert!((g[0] - 10.0).abs() < 1e-9);
+        assert!((g[1] - 90.0).abs() < 1e-9);
+        // Zero demand -> cap (uncontended).
+        let g = water_fill(&[0.0, 50.0], &[70.0, 70.0], 100.0);
+        assert_eq!(g[0], 70.0);
+        assert!((g[1] - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_full_run_close_to_analytic() {
+        let spec = CorunSpec::homogeneous(Scheme::Full, AppId::Lammps);
+        let (m, _) = simulate(&spec, &cfg()).unwrap();
+        let app = apps::model(AppId::Lammps).scaled(cfg().workload_scale);
+        let env = ExecEnv {
+            sms: 132,
+            clock_frac: 1.0,
+            bw_gibs: 3175.0,
+            c2c_bw_gibs: 331.0,
+            interference: 1.0,
+            time_share: 1.0,
+        };
+        // The sim additionally charges the one-time startup phase.
+        let analytic = app.runtime_quiet_s(&GpuSpec::gh_h100_96gb(), &env)
+            + app.startup_s * cfg().workload_scale;
+        assert!(
+            (m.makespan_s - analytic).abs() / analytic < 0.05,
+            "sim {} vs analytic {}",
+            m.makespan_s,
+            analytic
+        );
+        assert_eq!(m.copy_runtimes_s.len(), 1);
+    }
+
+    #[test]
+    fn serial_is_n_times_single() {
+        let one = CorunSpec::homogeneous(Scheme::Full, AppId::Hotspot);
+        let (m1, _) = simulate(&one, &cfg()).unwrap();
+        let ser = CorunSpec::serial(AppId::Hotspot, 3);
+        let (m3, _) = simulate(&ser, &cfg()).unwrap();
+        assert!(
+            (m3.makespan_s - 3.0 * m1.makespan_s).abs() / m3.makespan_s < 0.02,
+            "serial {} vs 3x single {}",
+            m3.makespan_s,
+            3.0 * m1.makespan_s
+        );
+        // Serial energy ~ 3x single energy.
+        assert!((m3.energy_j - 3.0 * m1.energy_j).abs() / m3.energy_j < 0.05);
+    }
+
+    #[test]
+    fn mig_corun_isolated_runtimes_equal() {
+        let spec = CorunSpec::homogeneous(
+            Scheme::Mig {
+                profile: ProfileId::P1g12gb,
+                copies: 7,
+            },
+            AppId::Lammps,
+        );
+        let (m, _) = simulate(&spec, &cfg()).unwrap();
+        assert_eq!(m.copy_runtimes_s.len(), 7);
+        let t0 = m.copy_runtimes_s[0];
+        for t in &m.copy_runtimes_s {
+            assert!((t - t0).abs() / t0 < 0.02, "MIG copies should be isolated");
+        }
+    }
+
+    #[test]
+    fn nekrs_corun_speedup_matches_fig5_band() {
+        let (serial, _) = simulate(&CorunSpec::serial(AppId::NekRs, 7), &cfg()).unwrap();
+        let (mig, _) = simulate(
+            &CorunSpec::homogeneous(
+                Scheme::Mig {
+                    profile: ProfileId::P1g12gb,
+                    copies: 7,
+                },
+                AppId::NekRs,
+            ),
+            &cfg(),
+        )
+        .unwrap();
+        let speedup = serial.makespan_s / mig.makespan_s;
+        assert!(
+            (1.9..3.0).contains(&speedup),
+            "NekRS 7x1g speedup {speedup:.2} (paper: 2.4)"
+        );
+    }
+
+    #[test]
+    fn qiskit_corun_near_flat() {
+        let (serial, _) = simulate(&CorunSpec::serial(AppId::Qiskit30, 7), &cfg()).unwrap();
+        let (mig, _) = simulate(
+            &CorunSpec::homogeneous(
+                Scheme::Mig {
+                    profile: ProfileId::P1g12gb,
+                    copies: 7,
+                },
+                AppId::Qiskit30,
+            ),
+            &cfg(),
+        )
+        .unwrap();
+        let speedup = serial.makespan_s / mig.makespan_s;
+        assert!(
+            (0.80..1.10).contains(&speedup),
+            "Qiskit 7x1g speedup {speedup:.2} (paper: ~1)"
+        );
+    }
+
+    #[test]
+    fn timeslice_serializes() {
+        let (ts, _) = simulate(
+            &CorunSpec::homogeneous(Scheme::TimeSlice { copies: 7 }, AppId::Hotspot),
+            &cfg(),
+        )
+        .unwrap();
+        let (serial, _) = simulate(&CorunSpec::serial(AppId::Hotspot, 7), &cfg()).unwrap();
+        // Compute-bound: time-slicing ≈ serial + switch overhead.
+        let ratio = ts.makespan_s / serial.makespan_s;
+        assert!(
+            (1.0..1.2).contains(&ratio),
+            "TS/serial ratio {ratio:.3} for compute-bound app"
+        );
+    }
+
+    #[test]
+    fn qiskit_full_gpu_throttles_but_7x1g_does_not() {
+        // Fig. 7a.
+        let (full, _) = simulate(
+            &CorunSpec::homogeneous(Scheme::Full, AppId::Qiskit30),
+            &cfg(),
+        )
+        .unwrap();
+        assert!(
+            full.throttled_time_s > 0.3 * full.makespan_s,
+            "full-GPU Qiskit should throttle (throttled {:.1}s of {:.1}s)",
+            full.throttled_time_s,
+            full.makespan_s
+        );
+        let (mig, _) = simulate(
+            &CorunSpec::homogeneous(
+                Scheme::Mig {
+                    profile: ProfileId::P1g12gb,
+                    copies: 7,
+                },
+                AppId::Qiskit30,
+            ),
+            &cfg(),
+        )
+        .unwrap();
+        assert!(
+            mig.throttled_time_s < 0.05 * mig.makespan_s,
+            "7x1g Qiskit should not throttle"
+        );
+        assert!(mig.max_power_w < 700.0, "max power {}", mig.max_power_w);
+        assert!(mig.max_power_w > 600.0, "max power {}", mig.max_power_w);
+    }
+
+    #[test]
+    fn footprint_admission_enforced() {
+        // Llama3-fp16 (16.5 GiB) cannot run on 1g.12gb without offload.
+        let spec = CorunSpec::homogeneous(
+            Scheme::Mig {
+                profile: ProfileId::P1g12gb,
+                copies: 1,
+            },
+            AppId::Llama3Fp16,
+        );
+        assert!(simulate(&spec, &cfg()).is_err());
+        // With an offload plan it runs.
+        let app = apps::model(AppId::Llama3Fp16);
+        let plan = OffloadPlan::plan(&app, 10.94).unwrap();
+        let spec = CorunSpec {
+            offload: vec![Some(plan)],
+            ..CorunSpec::homogeneous(
+                Scheme::Mig {
+                    profile: ProfileId::P1g12gb,
+                    copies: 1,
+                },
+                AppId::Llama3Fp16,
+            )
+        };
+        let (m, _) = simulate(&spec, &cfg()).unwrap();
+        assert!(m.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let spec = CorunSpec::homogeneous(
+            Scheme::Mps {
+                sm_pct: 13,
+                copies: 7,
+            },
+            AppId::Faiss,
+        );
+        let (a, _) = simulate(&spec, &cfg()).unwrap();
+        let (b, _) = simulate(&spec, &cfg()).unwrap();
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+}

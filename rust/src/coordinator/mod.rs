@@ -1,0 +1,18 @@
+//! The L3 coordinator: orchestrates workloads over sharing schemes on the
+//! simulated GPU, collects GPM metrics, and exposes experiment drivers.
+//!
+//! - `corun`: the co-run discrete-event simulator (Figs. 2-7 engine) —
+//!   processor-sharing of HBM/C2C bandwidth, DVFS/power coupling,
+//!   time-slice serialization, MPS interference.
+//! - `scaling`: per-profile single-app runs (Fig. 4).
+//! - `scheduler`: cluster-level trace-driven job scheduler over static
+//!   MIG layouts, with a reward-driven offload-aware policy (the system
+//!   the §VI-B metric is meant to serve).
+//! - `report`: rendering helpers shared by the experiment drivers.
+
+pub mod corun;
+pub mod report;
+pub mod scaling;
+pub mod scheduler;
+
+pub use corun::{simulate, CorunSpec};

@@ -1,0 +1,102 @@
+//! Rendering and persistence helpers shared by the experiment drivers.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Where an experiment's JSON output lands.
+pub fn results_path(results_dir: &str, experiment: &str) -> PathBuf {
+    Path::new(results_dir).join(format!("{experiment}.json"))
+}
+
+/// Persist an experiment result as pretty JSON; creates the directory.
+pub fn write_results(results_dir: &str, experiment: &str, doc: &Json) -> crate::Result<PathBuf> {
+    std::fs::create_dir_all(results_dir)?;
+    let path = results_path(results_dir, experiment);
+    std::fs::write(&path, doc.pretty())?;
+    Ok(path)
+}
+
+/// Render a simple ASCII bar for figure-like series (the paper's bar
+/// charts become rows of bars in the terminal).
+pub fn bar(value: f64, max: f64, width: usize) -> String {
+    let filled = if max > 0.0 {
+        ((value / max).clamp(0.0, 1.0) * width as f64).round() as usize
+    } else {
+        0
+    };
+    let mut s = String::with_capacity(width);
+    for i in 0..width {
+        s.push(if i < filled { '#' } else { '.' });
+    }
+    s
+}
+
+/// Render a time-series sparkline (for the Fig. 7 power traces).
+pub fn sparkline(values: &[f64], lo: f64, hi: f64) -> String {
+    const LEVELS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    values
+        .iter()
+        .map(|&v| {
+            let t = if hi > lo { ((v - lo) / (hi - lo)).clamp(0.0, 1.0) } else { 0.0 };
+            LEVELS[((t * 7.0).round()) as usize]
+        })
+        .collect()
+}
+
+/// Downsample a trace to at most `n` points (mean pooling), for terminal
+/// rendering of long power traces.
+pub fn downsample(values: &[f64], n: usize) -> Vec<f64> {
+    if values.len() <= n || n == 0 {
+        return values.to_vec();
+    }
+    let chunk = values.len() as f64 / n as f64;
+    (0..n)
+        .map(|i| {
+            let a = (i as f64 * chunk) as usize;
+            let b = (((i + 1) as f64 * chunk) as usize).min(values.len()).max(a + 1);
+            values[a..b].iter().sum::<f64>() / (b - a) as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_rendering() {
+        assert_eq!(bar(0.5, 1.0, 10), "#####.....");
+        assert_eq!(bar(2.0, 1.0, 4), "####");
+        assert_eq!(bar(0.0, 1.0, 4), "....");
+        assert_eq!(bar(1.0, 0.0, 4), "....");
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[0.0, 0.5, 1.0], 0.0, 1.0);
+        assert_eq!(s.chars().count(), 3);
+        let levels: Vec<char> = s.chars().collect();
+        assert!(levels[0] < levels[2]);
+    }
+
+    #[test]
+    fn downsample_preserves_mean() {
+        let v: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let d = downsample(&v, 10);
+        assert_eq!(d.len(), 10);
+        let mean_orig = v.iter().sum::<f64>() / v.len() as f64;
+        let mean_ds = d.iter().sum::<f64>() / d.len() as f64;
+        assert!((mean_orig - mean_ds).abs() < 1.0);
+    }
+
+    #[test]
+    fn write_and_read_results() {
+        let dir = std::env::temp_dir().join("migsim-test-results");
+        let mut doc = Json::obj();
+        doc.set("x", 1u64);
+        let p = write_results(dir.to_str().unwrap(), "unit", &doc).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+        let _ = std::fs::remove_file(p);
+    }
+}

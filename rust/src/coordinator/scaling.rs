@@ -1,0 +1,101 @@
+//! Performance-resource scaling runs (Fig. 4): one copy of an app on each
+//! MIG profile, 1g.12gb → 7g.96gb, performance normalized to the 1g run.
+
+use crate::config::SimConfig;
+use crate::coordinator::corun::{simulate, CorunSpec};
+use crate::mig::profile::{GiProfile, ALL_PROFILES};
+use crate::sharing::Scheme;
+use crate::workload::AppId;
+
+/// One app's scaling curve.
+#[derive(Debug, Clone)]
+pub struct ScalingCurve {
+    pub app: &'static str,
+    /// (profile name, runtime s, relative performance vs 1g).
+    pub points: Vec<(&'static str, f64, f64)>,
+}
+
+/// Run the Fig. 4 sweep for one app. Profiles whose memory cannot hold the
+/// app are skipped (None runtime is not recorded).
+pub fn scaling_curve(app: AppId, cfg: &SimConfig) -> crate::Result<ScalingCurve> {
+    let mut runtimes = Vec::new();
+    for &pid in ALL_PROFILES.iter() {
+        let p = GiProfile::get(pid);
+        let spec = CorunSpec::homogeneous(
+            Scheme::Mig {
+                profile: pid,
+                copies: 1,
+            },
+            app,
+        );
+        match simulate(&spec, cfg) {
+            Ok((m, _)) => runtimes.push((p.name, m.makespan_s)),
+            Err(_) => continue, // footprint too large for this profile
+        }
+    }
+    anyhow::ensure!(!runtimes.is_empty(), "no profile could run {app:?}");
+    let t_1g = runtimes[0].1;
+    Ok(ScalingCurve {
+        app: app.name(),
+        points: runtimes
+            .into_iter()
+            .map(|(name, t)| (name, t, t_1g / t))
+            .collect(),
+    })
+}
+
+/// The ideal-scaling reference of Fig. 4's dashed line: resources
+/// (memory slices) double along the profile ladder.
+pub fn ideal_scaling() -> Vec<(&'static str, f64)> {
+    ALL_PROFILES
+        .iter()
+        .map(|&pid| {
+            let p = GiProfile::get(pid);
+            (p.name, p.memory_slices as f64 / 1.0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qiskit_scales_near_ideal() {
+        let c = scaling_curve(AppId::Qiskit30, &SimConfig::fast_test()).unwrap();
+        assert_eq!(c.points.first().unwrap().0, "1g.12gb");
+        let last = c.points.last().unwrap();
+        assert_eq!(last.0, "7g.96gb");
+        assert!(
+            last.2 > 6.0 && last.2 < 9.0,
+            "qiskit 7g speedup {}",
+            last.2
+        );
+        // Monotone non-decreasing performance along the ladder.
+        for w in c.points.windows(2) {
+            assert!(w[1].2 >= w[0].2 * 0.98, "{:?}", c.points);
+        }
+    }
+
+    #[test]
+    fn nekrs_scales_poorly() {
+        let c = scaling_curve(AppId::NekRs, &SimConfig::fast_test()).unwrap();
+        let last = c.points.last().unwrap();
+        assert!(last.2 < 2.8, "nekrs should scale poorly, got {}", last.2);
+    }
+
+    #[test]
+    fn large_apps_skip_small_profiles() {
+        let c = scaling_curve(AppId::Llama3Fp16, &SimConfig::fast_test()).unwrap();
+        // 16.5 GiB does not fit 11 GiB: first feasible profile is 24gb.
+        assert!(c.points.iter().all(|(n, _, _)| !n.contains("12gb")));
+        assert!(!c.points.is_empty());
+    }
+
+    #[test]
+    fn ideal_reference_doubles() {
+        let ideal = ideal_scaling();
+        assert_eq!(ideal[0].1, 1.0);
+        assert_eq!(ideal.last().unwrap().1, 8.0);
+    }
+}

@@ -1,0 +1,411 @@
+//! Cluster-level job scheduler over a statically-partitioned GPU — the
+//! system the paper's reward metric exists to serve ("to facilitate the
+//! choice of a suitable MIG configuration for GPU sharing").
+//!
+//! A `StaticConfig` fixes the MIG layout (MIG cannot be reconfigured
+//! while jobs run, §II-B3). Jobs arrive from a `JobTrace`, wait FIFO,
+//! and are dispatched by a `Policy`:
+//!
+//! - `FirstFit`: first free instance with enough memory.
+//! - `SmallestFit`: smallest free instance that fits (classic best-fit
+//!   against SM waste).
+//! - `OffloadAware`: smallest-fit, but also considers squeezing the job
+//!   onto one-size-smaller instances via NVLink-C2C offloading when the
+//!   §VI-B reward at the configured α favours it.
+//!
+//! Job runtimes come from the calibrated workload models (quiet-partition
+//! analytic runtimes — queueing, not power, is the object here); the
+//! simulator is a simple event loop over arrivals/completions.
+
+use crate::gpu::GpuSpec;
+use crate::mig::profile::GiProfile;
+use crate::mig::{MigManager, ProfileId};
+use crate::offload::OffloadPlan;
+use crate::sharing::ContextModel;
+use crate::util::stats::{percentile, Accum};
+use crate::workload::trace::{Job, JobTrace};
+use crate::workload::{apps, ExecEnv};
+use anyhow::bail;
+use std::collections::VecDeque;
+
+/// A static MIG layout for the whole GPU.
+#[derive(Debug, Clone)]
+pub struct StaticConfig {
+    pub name: String,
+    pub profiles: Vec<ProfileId>,
+}
+
+impl StaticConfig {
+    /// The configurations compared by the scheduler experiment.
+    pub fn candidates() -> Vec<StaticConfig> {
+        use ProfileId::*;
+        vec![
+            StaticConfig {
+                name: "7x1g.12gb".into(),
+                profiles: vec![P1g12gb; 7],
+            },
+            StaticConfig {
+                name: "3x2g.24gb+1g.12gb".into(),
+                profiles: vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb],
+            },
+            StaticConfig {
+                // 2x3g uses all 8 memory slices: nothing else fits.
+                name: "2x3g.48gb".into(),
+                profiles: vec![P3g48gb, P3g48gb],
+            },
+            StaticConfig {
+                name: "4g.48gb+3g.48gb".into(),
+                profiles: vec![P4g48gb, P3g48gb],
+            },
+            StaticConfig {
+                name: "1x7g.96gb".into(),
+                profiles: vec![P7g96gb],
+            },
+        ]
+    }
+
+    /// Validate against the slice budget.
+    pub fn validate(&self, spec: &GpuSpec) -> crate::Result<()> {
+        let mut mgr = MigManager::new(spec.clone());
+        for p in &self.profiles {
+            mgr.create_full(*p)?;
+        }
+        Ok(())
+    }
+}
+
+/// Dispatch policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    FirstFit,
+    SmallestFit,
+    /// Smallest-fit extended with §VI offloading at the given α.
+    OffloadAware { alpha_centi: u32 },
+}
+
+impl Policy {
+    pub fn label(&self) -> String {
+        match self {
+            Policy::FirstFit => "first-fit".into(),
+            Policy::SmallestFit => "smallest-fit".into(),
+            Policy::OffloadAware { alpha_centi } => {
+                format!("offload-aware(α={:.2})", *alpha_centi as f64 / 100.0)
+            }
+        }
+    }
+}
+
+/// Outcome of one scheduled trace.
+#[derive(Debug, Clone)]
+pub struct ScheduleReport {
+    pub config: String,
+    pub policy: String,
+    pub jobs: u32,
+    pub makespan_s: f64,
+    pub mean_wait_s: f64,
+    pub p95_wait_s: f64,
+    pub mean_turnaround_s: f64,
+    /// Fraction of instance-seconds busy over the makespan.
+    pub instance_utilization: f64,
+    /// Jobs that ran with offloading.
+    pub offloaded_jobs: u32,
+    /// Jobs that could not run on any instance of the config.
+    pub rejected_jobs: u32,
+}
+
+struct Instance {
+    profile: GiProfile,
+    busy_until: f64,
+    busy_accum: f64,
+}
+
+/// Simulate a trace over a static config with a policy.
+pub fn schedule(
+    trace: &JobTrace,
+    config: &StaticConfig,
+    policy: Policy,
+    workload_scale: f64,
+) -> crate::Result<ScheduleReport> {
+    let spec = GpuSpec::gh_h100_96gb();
+    config.validate(&spec)?;
+    let ctx = ContextModel::default();
+    let ctx_gib = ctx.mig_per_process_gib;
+    let mut instances: Vec<Instance> = config
+        .profiles
+        .iter()
+        .map(|&p| Instance {
+            profile: GiProfile::get(p),
+            busy_until: 0.0,
+            busy_accum: 0.0,
+        })
+        .collect();
+
+    // Precompute per-app runtime on each distinct profile (quiet).
+    let runtime_on = |app: crate::workload::AppId,
+                      prof: &GiProfile,
+                      offload: bool|
+     -> crate::Result<Option<(f64, bool)>> {
+        let model = apps::model(app).scaled(workload_scale);
+        let cap = prof.mem_gib - ctx_gib;
+        let plan = if model.footprint_gib <= cap {
+            None
+        } else if offload {
+            match OffloadPlan::plan(&model, cap) {
+                Ok(p) => Some(p),
+                Err(_) => return Ok(None),
+            }
+        } else {
+            return Ok(None);
+        };
+        let offloaded = plan.is_some();
+        let run_model = plan.as_ref().map(|p| p.apply(&model)).unwrap_or(model);
+        let env = ExecEnv {
+            sms: prof.sms,
+            clock_frac: 1.0,
+            bw_gibs: prof.mem_bw_gibs,
+            c2c_bw_gibs: 207.0,
+            interference: 1.0,
+            time_share: 1.0,
+        };
+        let t = run_model.runtime_quiet_s(&spec, &env)
+            + run_model.startup_s * workload_scale;
+        Ok(Some((t, offloaded)))
+    };
+
+    let mut queue: VecDeque<&Job> = VecDeque::new();
+    let mut job_iter = trace.jobs.iter().peekable();
+    let mut now = 0.0f64;
+    let mut wait = Accum::new();
+    let mut waits = Vec::new();
+    let mut turnaround = Accum::new();
+    let mut completed = 0u32;
+    let mut offloaded_jobs = 0u32;
+    let mut rejected = 0u32;
+    let mut makespan = 0.0f64;
+
+    // Event loop: advance to the earlier of (next arrival, earliest
+    // instance free time) and try to dispatch the queue head.
+    loop {
+        // Pull all arrivals at or before `now`.
+        while let Some(j) = job_iter.peek() {
+            if j.arrival_s <= now {
+                queue.push_back(job_iter.next().unwrap());
+            } else {
+                break;
+            }
+        }
+        // Try to dispatch queued jobs.
+        let mut dispatched_any = true;
+        while dispatched_any && !queue.is_empty() {
+            dispatched_any = false;
+            let job = *queue.front().unwrap();
+            // Candidate instances free now, per policy ordering.
+            let mut free: Vec<usize> = instances
+                .iter()
+                .enumerate()
+                .filter(|(_, ins)| ins.busy_until <= now)
+                .map(|(i, _)| i)
+                .collect();
+            if let Policy::SmallestFit | Policy::OffloadAware { .. } = policy {
+                free.sort_by_key(|&i| instances[i].profile.sms);
+            }
+            let mut choice: Option<(usize, f64, bool)> = None;
+            for &i in &free {
+                let allow_offload = matches!(policy, Policy::OffloadAware { .. });
+                if let Some((t, off)) = runtime_on(job.app, &instances[i].profile, allow_offload)? {
+                    // Offload-aware: accept an offloaded placement only if
+                    // the reward at α favours it over waiting for the next
+                    // bigger class (approximated: reject offload when the
+                    // perf hit exceeds 1/(α+0.1) x the fit's runtime).
+                    if off {
+                        let alpha = match policy {
+                            Policy::OffloadAware { alpha_centi } => alpha_centi as f64 / 100.0,
+                            _ => 0.0,
+                        };
+                        if let Some(Some((t_fit, _))) = instances
+                            .iter()
+                            .find(|ins| {
+                                apps::model(job.app).footprint_gib
+                                    <= ins.profile.mem_gib - ctx_gib
+                            })
+                            .map(|ins| runtime_on(job.app, &ins.profile, false).ok().flatten())
+                        {
+                            if t > t_fit * (1.0 + 1.0 / (alpha + 0.1)) {
+                                continue; // offload too costly at this α
+                            }
+                        }
+                    }
+                    choice = Some((i, t, off));
+                    break;
+                }
+            }
+            match choice {
+                Some((i, t, off)) => {
+                    queue.pop_front();
+                    let w = now - job.arrival_s;
+                    wait.push(w);
+                    waits.push(w);
+                    turnaround.push(w + t);
+                    instances[i].busy_until = now + t;
+                    instances[i].busy_accum += t;
+                    makespan = makespan.max(now + t);
+                    completed += 1;
+                    if off {
+                        offloaded_jobs += 1;
+                    }
+                    dispatched_any = true;
+                }
+                None => {
+                    // Either all instances busy, or the job fits nowhere
+                    // in this config at all.
+                    let fits_somewhere = instances.iter().any(|ins| {
+                        let allow = matches!(policy, Policy::OffloadAware { .. });
+                        runtime_on(job.app, &ins.profile, allow)
+                            .ok()
+                            .flatten()
+                            .is_some()
+                    });
+                    if !fits_somewhere {
+                        queue.pop_front();
+                        rejected += 1;
+                        dispatched_any = true;
+                    }
+                }
+            }
+        }
+        // Advance time.
+        let next_arrival = job_iter.peek().map(|j| j.arrival_s);
+        let next_free = instances
+            .iter()
+            .map(|i| i.busy_until)
+            .filter(|&t| t > now)
+            .fold(f64::INFINITY, f64::min);
+        now = match (next_arrival, queue.is_empty()) {
+            (Some(a), true) => a.min(if next_free.is_finite() { next_free } else { a }),
+            (Some(a), false) => {
+                if next_free.is_finite() {
+                    a.min(next_free)
+                } else {
+                    a
+                }
+            }
+            (None, false) => {
+                if !next_free.is_finite() {
+                    bail!("deadlock: queued jobs but no instance will free");
+                }
+                next_free
+            }
+            (None, true) => break,
+        };
+    }
+
+    let util = if makespan > 0.0 {
+        instances.iter().map(|i| i.busy_accum).sum::<f64>()
+            / (makespan * instances.len() as f64)
+    } else {
+        0.0
+    };
+    Ok(ScheduleReport {
+        config: config.name.clone(),
+        policy: policy.label(),
+        jobs: completed,
+        makespan_s: makespan,
+        mean_wait_s: wait.mean(),
+        p95_wait_s: if waits.is_empty() { 0.0 } else { percentile(&waits, 95.0) },
+        mean_turnaround_s: turnaround.mean(),
+        instance_utilization: util,
+        offloaded_jobs,
+        rejected_jobs: rejected,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::AppId;
+
+    fn trace() -> JobTrace {
+        JobTrace::poisson(60, 1.2, &JobTrace::suite_mix(), 11)
+    }
+
+    #[test]
+    fn all_candidate_configs_are_valid() {
+        let spec = GpuSpec::gh_h100_96gb();
+        for c in StaticConfig::candidates() {
+            c.validate(&spec).unwrap_or_else(|e| panic!("{}: {e}", c.name));
+        }
+    }
+
+    #[test]
+    fn finer_partitioning_cuts_waiting_for_small_jobs() {
+        let t = trace();
+        let seven = schedule(
+            &t,
+            &StaticConfig::candidates()[0],
+            Policy::SmallestFit,
+            0.05,
+        )
+        .unwrap();
+        let one = schedule(
+            &t,
+            &StaticConfig::candidates()[4],
+            Policy::SmallestFit,
+            0.05,
+        )
+        .unwrap();
+        assert_eq!(seven.jobs + seven.rejected_jobs, 60);
+        assert!(
+            seven.mean_wait_s < one.mean_wait_s,
+            "7x1g wait {:.2}s should beat 1x7g wait {:.2}s",
+            seven.mean_wait_s,
+            one.mean_wait_s
+        );
+    }
+
+    #[test]
+    fn smallest_fit_beats_first_fit_on_mixed_config() {
+        let t = trace();
+        let cfg = &StaticConfig::candidates()[3]; // 4g+3g
+        let ff = schedule(&t, cfg, Policy::FirstFit, 0.05).unwrap();
+        let sf = schedule(&t, cfg, Policy::SmallestFit, 0.05).unwrap();
+        // Best-fit should never be materially worse on turnaround.
+        assert!(sf.mean_turnaround_s <= ff.mean_turnaround_s * 1.10);
+    }
+
+    #[test]
+    fn offload_aware_places_large_jobs_on_small_slices() {
+        // A trace of only large llama jobs on 7x1g: without offloading
+        // everything is rejected; offload-aware runs them.
+        let jobs: Vec<Job> = (0..6)
+            .map(|i| Job {
+                id: i,
+                app: AppId::Llama3Fp16,
+                arrival_s: i as f64 * 2.0,
+            })
+            .collect();
+        let t = JobTrace { jobs };
+        let cfg = &StaticConfig::candidates()[0];
+        let plain = schedule(&t, cfg, Policy::SmallestFit, 0.05).unwrap();
+        assert_eq!(plain.rejected_jobs, 6, "16.5 GiB cannot fit 11 GiB");
+        let off = schedule(&t, cfg, Policy::OffloadAware { alpha_centi: 0 }, 0.05).unwrap();
+        assert_eq!(off.rejected_jobs, 0);
+        assert_eq!(off.offloaded_jobs, 6);
+        assert!(off.jobs == 6 && off.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn utilization_bounded_and_consistent() {
+        let t = trace();
+        for c in StaticConfig::candidates() {
+            let r = schedule(&t, &c, Policy::SmallestFit, 0.05).unwrap();
+            assert!(
+                (0.0..=1.0 + 1e-9).contains(&r.instance_utilization),
+                "{}: util {}",
+                c.name,
+                r.instance_utilization
+            );
+            assert!(r.mean_turnaround_s >= r.mean_wait_s);
+            assert_eq!(r.jobs + r.rejected_jobs, 60);
+        }
+    }
+}

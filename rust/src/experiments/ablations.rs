@@ -1,0 +1,246 @@
+//! Ablation studies beyond the paper's figures — the design-choice
+//! sweeps DESIGN.md calls out:
+//!
+//! - `copies`: how throughput/energy scale as the GPU is split into
+//!   1..7 MIG 1g instances (marginal utility of finer partitioning —
+//!   extends Figs. 5/6 along the partition-count axis).
+//! - `alpha`: a dense α sweep of the §VI-B reward model, locating the
+//!   policy crossover points Fig. 8 samples at {0, 0.1, 0.5, 1}.
+//! - `mps`: MPS SM-percentage sweep (the paper fixes 13%; this shows
+//!   the sensitivity of the co-run result to the per-client share).
+
+use super::ExperimentOutput;
+use crate::config::SimConfig;
+use crate::coordinator::corun::{simulate, CorunSpec};
+use crate::mig::ProfileId;
+use crate::reward::{select_best, ConfigEval, GpuTotals};
+use crate::sharing::Scheme;
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+use crate::workload::{apps, AppId};
+
+/// Ablation A: partition-count sweep for a representative app pair.
+pub fn copies_sweep(cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
+    let mut tables = Vec::new();
+    let mut json = Json::obj();
+    for app in [AppId::NekRs, AppId::Hotspot] {
+        let mut t = Table::new(&format!(
+            "Ablation — MIG 1g.12gb partition count, {} (vs serial of same copies)",
+            app.name()
+        ))
+        .header(&["copies", "makespan (s)", "throughput vs serial", "energy vs serial", "occupancy"]);
+        let mut arr = Vec::new();
+        for copies in 1..=7u32 {
+            let (serial, _) = simulate(&CorunSpec::serial(app, copies), cfg)?;
+            let (m, _) = simulate(
+                &CorunSpec::homogeneous(
+                    Scheme::Mig {
+                        profile: ProfileId::P1g12gb,
+                        copies,
+                    },
+                    app,
+                ),
+                cfg,
+            )?;
+            let speedup = serial.makespan_s / m.makespan_s;
+            let energy = m.energy_j / serial.energy_j;
+            t.row(vec![
+                format!("{copies}"),
+                fnum(m.makespan_s, 2),
+                format!("{}x", fnum(speedup, 2)),
+                fnum(energy, 2),
+                fnum(m.avg_occupancy, 3),
+            ]);
+            let mut o = Json::obj();
+            o.set("copies", copies)
+                .set("speedup", speedup)
+                .set("energy_ratio", energy)
+                .set("occupancy", m.avg_occupancy);
+            arr.push(o);
+        }
+        json.set(app.name(), Json::Arr(arr));
+        tables.push(t);
+    }
+    Ok(ExperimentOutput {
+        id: "ablate-copies",
+        title: "Partition-count ablation",
+        tables,
+        json,
+        notes: vec![
+            "under-utilizers gain monotonically with finer partitioning; compute-bound apps pay the wasted-SM tax".into(),
+        ],
+    })
+}
+
+/// Ablation B: dense α sweep of the reward model — crossover points.
+pub fn alpha_sweep(cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
+    let alphas: Vec<f64> = (0..=20).map(|i| i as f64 * 0.05).collect();
+    let mut tables = Vec::new();
+    let mut json = Json::obj();
+    for (_, large) in apps::offload_study() {
+        // Reuse fig8's evaluation machinery.
+        let evals = super::fig8::evaluate_configs(large, cfg)?;
+        let gpu = crate::gpu::GpuSpec::gh_h100_96gb();
+        let perf_full = evals
+            .iter()
+            .find(|e| e.config == "full GPU")
+            .map(|e| e.perf)
+            .unwrap();
+        let totals = GpuTotals {
+            sms: gpu.sms,
+            mem_gib: gpu.mem_usable_gib,
+            perf_full_gpu: perf_full,
+        };
+        let mut t = Table::new(&format!("Ablation — α sweep, {}", large.name()))
+            .header(&["α", "winner", "R(winner)"]);
+        let mut arr = Vec::new();
+        let mut crossovers: Vec<(f64, String)> = Vec::new();
+        let mut last: Option<String> = None;
+        for &a in &alphas {
+            let (best, rewards) = select_best(&evals, &totals, a);
+            let name = evals[best].config.clone();
+            if last.as_deref() != Some(name.as_str()) {
+                crossovers.push((a, name.clone()));
+                last = Some(name.clone());
+            }
+            t.row(vec![
+                fnum(a, 2),
+                name.clone(),
+                fnum(rewards[best].reward, 3),
+            ]);
+            let mut o = Json::obj();
+            o.set("alpha", a)
+                .set("winner", name.as_str())
+                .set("reward", rewards[best].reward);
+            arr.push(o);
+        }
+        let mut doc = Json::obj();
+        doc.set("sweep", Json::Arr(arr)).set(
+            "crossovers",
+            Json::Arr(
+                crossovers
+                    .iter()
+                    .map(|(a, n)| {
+                        let mut o = Json::obj();
+                        o.set("alpha", *a).set("winner", n.as_str());
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        json.set(large.name(), doc);
+        tables.push(t);
+    }
+    Ok(ExperimentOutput {
+        id: "ablate-alpha",
+        title: "Reward-model α sweep (crossover points)",
+        tables,
+        json,
+        notes: vec!["winner transitions mark where the policy flips from utilization-first to performance-first".into()],
+    })
+}
+
+/// Ablation C: MPS SM-percentage sweep.
+pub fn mps_sweep(cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
+    let mut tables = Vec::new();
+    let mut json = Json::obj();
+    for app in [AppId::NekRs, AppId::Qiskit30] {
+        let (serial, _) = simulate(&CorunSpec::serial(app, 7), cfg)?;
+        let mut t = Table::new(&format!("Ablation — MPS SM%% sweep, 7x {}", app.name()))
+            .header(&["SM %", "SMs/client", "throughput vs serial", "energy vs serial"]);
+        let mut arr = Vec::new();
+        for pct in [10u32, 13, 14, 20, 30, 50] {
+            let scheme = Scheme::Mps {
+                sm_pct: pct,
+                copies: 7,
+            };
+            let (m, _) = simulate(&CorunSpec::homogeneous(scheme, app), cfg)?;
+            let parts = crate::sharing::scheme::partitions(
+                &scheme,
+                &crate::gpu::GpuSpec::gh_h100_96gb(),
+            )?;
+            let speedup = serial.makespan_s / m.makespan_s;
+            t.row(vec![
+                format!("{pct}%"),
+                format!("{}", parts[0].sms),
+                format!("{}x", fnum(speedup, 2)),
+                fnum(m.energy_j / serial.energy_j, 2),
+            ]);
+            let mut o = Json::obj();
+            o.set("sm_pct", pct)
+                .set("speedup", speedup)
+                .set("energy_ratio", m.energy_j / serial.energy_j);
+            arr.push(o);
+        }
+        json.set(app.name(), Json::Arr(arr));
+        tables.push(t);
+    }
+    Ok(ExperimentOutput {
+        id: "ablate-mps",
+        title: "MPS SM-percentage ablation",
+        tables,
+        json,
+        notes: vec![
+            "over-provisioning SM shares (>1/7 each) trades per-client speed for contention".into(),
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        SimConfig {
+            workload_scale: 0.04,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn copies_sweep_monotone_for_underutilizer() {
+        let out = copies_sweep(&cfg()).unwrap();
+        let nekrs = out.json.get("nekrs").unwrap().as_arr().unwrap();
+        assert_eq!(nekrs.len(), 7);
+        let s1 = nekrs[0].get("speedup").unwrap().as_f64().unwrap();
+        let s7 = nekrs[6].get("speedup").unwrap().as_f64().unwrap();
+        assert!(s7 > s1 * 1.5, "NekRS gains with partitions: {s1} -> {s7}");
+        // Single copy on 1g vs serial-of-1 is a slowdown (smaller GPU).
+        assert!(s1 < 1.0);
+    }
+
+    #[test]
+    fn alpha_sweep_has_crossovers() {
+        let out = alpha_sweep(&cfg()).unwrap();
+        for app in ["qiskit-31q", "faiss-ivf16384", "llama3-fp16"] {
+            let cx = out
+                .json
+                .get(app)
+                .unwrap()
+                .get("crossovers")
+                .unwrap()
+                .as_arr()
+                .unwrap();
+            assert!(
+                cx.len() >= 2,
+                "{app}: expected at least one winner transition, got {}",
+                cx.len()
+            );
+            // First winner (α=0) differs from the last (α=1).
+            let first = cx.first().unwrap().get("winner").unwrap().as_str().unwrap();
+            let last = cx.last().unwrap().get("winner").unwrap().as_str().unwrap();
+            assert_ne!(first, last, "{app}");
+        }
+    }
+
+    #[test]
+    fn mps_sweep_shapes() {
+        let out = mps_sweep(&cfg()).unwrap();
+        let q = out.json.get("qiskit").unwrap().as_arr().unwrap();
+        assert_eq!(q.len(), 6);
+        for entry in q {
+            let s = entry.get("speedup").unwrap().as_f64().unwrap();
+            assert!(s > 0.5 && s < 2.0, "qiskit MPS speedup sane: {s}");
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Experiment drivers: one per table/figure in the paper's evaluation.
+//!
+//! | id          | paper artefact                         |
+//! |-------------|----------------------------------------|
+//! | `table1`    | Table I — GPU generations              |
+//! | `table2`    | Table II — MIG profiles & waste        |
+//! | `table4`    | Table IV — C2C bandwidth               |
+//! | `smcount`   | §III-C — SM-count probe                |
+//! | `ctx`       | §IV-B — context memory overhead        |
+//! | `fig2`      | Fig. 2 — SM occupancy × schemes        |
+//! | `fig3`      | Fig. 3 — memory capacity + bandwidth   |
+//! | `fig4`      | Fig. 4 — performance-resource scaling  |
+//! | `fig5`      | Fig. 5 — co-run system throughput      |
+//! | `fig6`      | Fig. 6 — co-run energy                 |
+//! | `fig7`      | Fig. 7 — power traces & throttling     |
+//! | `fig8`      | Fig. 8 — reward-based selection        |
+//!
+//! Each driver returns rendered tables plus a JSON document that is
+//! persisted under `results/`.
+
+pub mod ablations;
+pub mod fig8;
+pub mod figures;
+pub mod sched;
+pub mod tables;
+
+use crate::config::SimConfig;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Output of one experiment driver.
+pub struct ExperimentOutput {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub tables: Vec<Table>,
+    pub json: Json,
+    pub notes: Vec<String>,
+}
+
+impl ExperimentOutput {
+    pub fn render(&self) -> String {
+        let mut s = format!("=== {} — {} ===\n\n", self.id, self.title);
+        for t in &self.tables {
+            s.push_str(&t.render());
+            s.push('\n');
+        }
+        for n in &self.notes {
+            s.push_str(&format!("note: {n}\n"));
+        }
+        s
+    }
+}
+
+/// All experiment ids in paper order, plus the ablation sweeps.
+pub const ALL_IDS: [&str; 16] = [
+    "table1", "table2", "table4", "smcount", "ctx", "fig2", "fig3", "fig4", "fig5", "fig6",
+    "fig7", "fig8", "ablate-copies", "ablate-alpha", "ablate-mps", "sched",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
+    match id {
+        "table1" => tables::table1(),
+        "table2" => tables::table2(),
+        "table4" => tables::table4(),
+        "smcount" => tables::smcount(),
+        "ctx" => tables::ctx_overhead(),
+        "fig2" => figures::fig2(cfg),
+        "fig3" => figures::fig3(cfg),
+        "fig4" => figures::fig4(cfg),
+        "fig5" => figures::fig5(cfg),
+        "fig6" => figures::fig6(cfg),
+        "fig7" => figures::fig7(cfg),
+        "fig8" => fig8::fig8(cfg),
+        "ablate-copies" => ablations::copies_sweep(cfg),
+        "ablate-alpha" => ablations::alpha_sweep(cfg),
+        "ablate-mps" => ablations::mps_sweep(cfg),
+        "sched" => sched::sched(cfg),
+        other => anyhow::bail!("unknown experiment '{other}' (known: {})", ALL_IDS.join(", ")),
+    }
+}
+
+/// Run every experiment, persisting results; returns rendered reports.
+pub fn run_all(cfg: &SimConfig) -> crate::Result<Vec<String>> {
+    let mut out = Vec::new();
+    for id in ALL_IDS {
+        let res = run(id, cfg)?;
+        crate::coordinator::report::write_results(&cfg.results_dir, id, &res.json)?;
+        out.push(res.render());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(run("fig99", &SimConfig::fast_test()).is_err());
+    }
+
+    #[test]
+    fn static_tables_run() {
+        for id in ["table1", "table2", "table4", "smcount", "ctx"] {
+            let out = run(id, &SimConfig::fast_test()).unwrap();
+            assert!(!out.tables.is_empty(), "{id} produced no tables");
+            assert!(!out.render().is_empty());
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Static-model experiments: Tables I, II, IV and the two probes.
+
+use super::ExperimentOutput;
+use crate::gpu::nvlink::{Dir, NvlinkModel};
+use crate::gpu::GpuSpec;
+use crate::mig::profile::GiProfile;
+use crate::util::json::Json;
+use crate::util::table::{fnum, pct, Table};
+use crate::workload::probe;
+
+/// Table I: characteristics of four generations of Nvidia GPUs.
+pub fn table1() -> crate::Result<ExperimentOutput> {
+    let mut t = Table::new("Table I — Characteristics of four generations of Nvidia GPUs")
+        .header(&["GPU", "Capacity (GB)", "Bandwidth (TB/s)", "FP32 (TFLOPS)", "Tensor FP16", "SMs"]);
+    let mut arr = Vec::new();
+    for g in GpuSpec::generations() {
+        t.row(vec![
+            g.name.clone(),
+            fnum(g.mem_capacity_gib, 0),
+            fnum(g.mem_bw_gibs / 1000.0, 1),
+            fnum(g.fp32_tflops, 1),
+            fnum(g.fp16_tensor_tflops, 0),
+            format!("{}", g.sms),
+        ]);
+        let mut o = Json::obj();
+        o.set("name", g.name.as_str())
+            .set("capacity_gb", g.mem_capacity_gib)
+            .set("bw_tbs", g.mem_bw_gibs / 1000.0)
+            .set("fp32_tflops", g.fp32_tflops)
+            .set("tensor_tflops", g.fp16_tensor_tflops)
+            .set("sms", g.sms);
+        arr.push(o);
+    }
+    let mut json = Json::obj();
+    json.set("generations", Json::Arr(arr));
+    Ok(ExperimentOutput {
+        id: "table1",
+        title: "GPU generations (Table I)",
+        tables: vec![t],
+        json,
+        notes: vec!["compute and memory roughly double per generation".into()],
+    })
+}
+
+/// Table II: MIG profiles with usable and wasted resources.
+pub fn table2() -> crate::Result<ExperimentOutput> {
+    let spec = GpuSpec::gh_h100_96gb();
+    let mut t = Table::new("Table II — MIG profiles, GH H100-96GB").header(&[
+        "Profile",
+        "Max inst",
+        "SMs usable",
+        "SMs wasted (naive)",
+        "SMs wasted (paper)",
+        "Mem (GiB)",
+        "Mem wasted (GiB)",
+        "%GPU mem",
+        "L2",
+        "CEs",
+        "BW (GiB/s)",
+    ]);
+    let mut arr = Vec::new();
+    for p in GiProfile::all() {
+        let naive = p.wasted_sm_naive(spec.sms);
+        t.row(vec![
+            p.name.to_string(),
+            format!("{}", p.max_instances),
+            format!("{}", p.sms),
+            pct(naive, 0),
+            p.wasted_sm_paper_pct.to_string(),
+            fnum(p.mem_gib, 1),
+            fnum(p.wasted_mem_paper_gib, 1),
+            p.mem_fraction_label(),
+            p.mem_fraction_label(),
+            format!("{}", p.copy_engines),
+            fnum(p.mem_bw_gibs, 0),
+        ]);
+        let mut o = Json::obj();
+        o.set("profile", p.name)
+            .set("max_instances", p.max_instances)
+            .set("sms", p.sms)
+            .set("wasted_sm_naive", naive)
+            .set("mem_gib", p.mem_gib)
+            .set("wasted_mem_gib", p.wasted_mem_paper_gib)
+            .set("copy_engines", p.copy_engines)
+            .set("bw_gibs", p.mem_bw_gibs);
+        arr.push(o);
+    }
+    let mut json = Json::obj();
+    json.set("profiles", Json::Arr(arr));
+    Ok(ExperimentOutput {
+        id: "table2",
+        title: "MIG profiles & resource waste (Table II)",
+        tables: vec![t],
+        json,
+        notes: vec![
+            "7x1g.12gb exposes 112/132 SMs: 15% of SMs cannot be used (the 7-GI limit)".into(),
+            "paper wasted-SM column is GPU-wide best-case packing as reported".into(),
+        ],
+    })
+}
+
+/// Table IV: NVLink-C2C bandwidth — cudaMemcpy vs direct in-kernel access.
+pub fn table4() -> crate::Result<ExperimentOutput> {
+    let nv = NvlinkModel::default();
+    let rows: Vec<(&str, Option<u32>, u32, f64)> = GiProfile::all()
+        .iter()
+        .map(|p| (p.name, Some(p.copy_engines), p.sms, p.mem_bw_gibs))
+        .collect::<Vec<_>>();
+
+    let mut ta = Table::new("Table IVa — cudaMemcpy bandwidth over C2C (GiB/s)").header(&[
+        "Profile", "BOTH", "D2H", "H2D", "Local", "Local %", "D2H/H2D",
+    ]);
+    let mut tb = Table::new("Table IVb — direct in-kernel access bandwidth (GiB/s)").header(&[
+        "Profile", "BOTH", "D2H", "H2D", "Local", "Local %", "D2H/H2D",
+    ]);
+    let spec = GpuSpec::gh_h100_96gb();
+    let total_stream = spec.stream_bw_gibs;
+    let mut arr_a = Vec::new();
+    let mut arr_b = Vec::new();
+
+    let mut push_rows = |name: &str, ces: Option<u32>, sms: u32, alloc_bw: f64| {
+        // (a) memcpy
+        let both = nv.memcpy_bw_gibs(ces, Dir::Both);
+        let d2h = nv.memcpy_bw_gibs(ces, Dir::D2H);
+        let h2d = nv.memcpy_bw_gibs(ces, Dir::H2D);
+        let local = nv.local_memcpy_gibs(alloc_bw);
+        ta.row(vec![
+            name.to_string(),
+            fnum(both, 1),
+            fnum(d2h, 1),
+            fnum(h2d, 1),
+            fnum(local, 1),
+            pct(local / total_stream, 0),
+            fnum(d2h / h2d, 3),
+        ]);
+        let mut oa = Json::obj();
+        oa.set("profile", name)
+            .set("both", both)
+            .set("d2h", d2h)
+            .set("h2d", h2d)
+            .set("local", local);
+        arr_a.push(oa);
+        // (b) direct
+        let both = nv.direct_bw_gibs(sms, Dir::Both);
+        let d2h = nv.direct_bw_gibs(sms, Dir::D2H);
+        let h2d = nv.direct_bw_gibs(sms, Dir::H2D);
+        let local = nv.local_direct_gibs(alloc_bw);
+        tb.row(vec![
+            name.to_string(),
+            fnum(both, 0),
+            fnum(d2h, 0),
+            fnum(h2d, 0),
+            fnum(local, 0),
+            pct(local / spec.mem_bw_gibs, 0),
+            fnum(d2h / h2d, 2),
+        ]);
+        let mut ob = Json::obj();
+        ob.set("profile", name)
+            .set("both", both)
+            .set("d2h", d2h)
+            .set("h2d", h2d)
+            .set("local", local);
+        arr_b.push(ob);
+    };
+
+    for (name, ces, sms, alloc) in rows {
+        push_rows(name, ces, sms, alloc);
+    }
+    push_rows("No MIG", None, spec.sms, spec.mem_bw_gibs);
+
+    let mut json = Json::obj();
+    json.set("memcpy", Json::Arr(arr_a))
+        .set("direct", Json::Arr(arr_b));
+    Ok(ExperimentOutput {
+        id: "table4",
+        title: "NVLink-C2C bandwidth (Table IV)",
+        tables: vec![ta, tb],
+        json,
+        notes: vec![
+            "memcpy unidirectional is stuck at one CE regardless of profile (the paper's 'CE bug')".into(),
+            "direct D2H saturates C2C even on the smallest 1g instance (key §III-D observation)".into(),
+        ],
+    })
+}
+
+/// §III-C: SM-count probe.
+pub fn smcount() -> crate::Result<ExperimentOutput> {
+    let mut t = Table::new("§III-C — SM-count probe (runtime-doubling method)").header(&[
+        "Profile",
+        "Reported SMs",
+        "Measured SMs",
+        "Doubling at n",
+        "Match",
+    ]);
+    let mut arr = Vec::new();
+    for r in probe::probe_all_profiles() {
+        t.row(vec![
+            r.profile.to_string(),
+            format!("{}", r.reported_sms),
+            format!("{}", r.measured_sms),
+            format!("{}", r.doubling_n),
+            if r.reported_sms == r.measured_sms {
+                "yes".into()
+            } else {
+                "NO".into()
+            },
+        ]);
+        let mut o = Json::obj();
+        o.set("profile", r.profile)
+            .set("reported", r.reported_sms)
+            .set("measured", r.measured_sms);
+        arr.push(o);
+    }
+    let mut json = Json::obj();
+    json.set("probes", Json::Arr(arr));
+    Ok(ExperimentOutput {
+        id: "smcount",
+        title: "SM-count probe (§III-C)",
+        tables: vec![t],
+        json,
+        notes: vec!["probe and driver-reported SM counts match in all situations".into()],
+    })
+}
+
+/// §IV-B: context-overhead probe.
+pub fn ctx_overhead() -> crate::Result<ExperimentOutput> {
+    let mut t = Table::new("§IV-B — GPU-context memory overhead (null-context probe)").header(&[
+        "Scheme",
+        "Processes",
+        "Per-process (MiB)",
+        "Total (MiB)",
+    ]);
+    let mut arr = Vec::new();
+    for r in probe::probe_context_overhead(7) {
+        t.row(vec![
+            r.scheme.clone(),
+            format!("{}", r.processes),
+            fnum(r.per_process_gib * 1024.0, 0),
+            fnum(r.total_gib * 1024.0, 0),
+        ]);
+        let mut o = Json::obj();
+        o.set("scheme", r.scheme.as_str())
+            .set("per_process_gib", r.per_process_gib)
+            .set("total_gib", r.total_gib);
+        arr.push(o);
+    }
+    let mut json = Json::obj();
+    json.set("context_overhead", Json::Arr(arr));
+    Ok(ExperimentOutput {
+        id: "ctx",
+        title: "Context memory overhead (§IV-B)",
+        tables: vec![t],
+        json,
+        notes: vec![
+            "~60 MB/process under MIG, ~600 MB/process under time-slicing, ~600 MB total under MPS"
+                .into(),
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_six_profiles() {
+        let out = table2().unwrap();
+        assert_eq!(out.tables[0].n_rows(), 6);
+        assert_eq!(out.json.get("profiles").unwrap().as_arr().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn table4_reproduces_key_cells() {
+        let out = table4().unwrap();
+        let memcpy = out.json.get("memcpy").unwrap().as_arr().unwrap();
+        // Every MIG row: D2H 39.6 (the CE bug).
+        for row in &memcpy[..6] {
+            assert_eq!(row.get("d2h").unwrap().as_f64(), Some(39.6));
+        }
+        // No-MIG D2H is ~7x higher.
+        let nomig = memcpy.last().unwrap();
+        assert_eq!(nomig.get("d2h").unwrap().as_f64(), Some(276.3));
+        let direct = out.json.get("direct").unwrap().as_arr().unwrap();
+        let d1g = direct[0].get("d2h").unwrap().as_f64().unwrap();
+        assert!(d1g > 330.0, "1g direct D2H saturates: {d1g}");
+    }
+
+    #[test]
+    fn smcount_all_match() {
+        let out = smcount().unwrap();
+        let s = out.render();
+        assert!(!s.contains("| NO"), "a probe mismatched:\n{s}");
+    }
+}

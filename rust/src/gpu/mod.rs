@@ -1,0 +1,17 @@
+//! GPU hardware model: specs (Table I generations + the Grace Hopper
+//! H100-96GB testbed), SM scheduling with the tail effect, memory
+//! capacity/bandwidth, copy engines, the NVLink-C2C interconnect
+//! (Table IV behaviour, including the copy-engine "bug"), and the power /
+//! DVFS / throttling model behind Fig. 7.
+
+pub mod nvlink;
+pub mod pipelines;
+pub mod power;
+pub mod sm;
+pub mod spec;
+
+pub use nvlink::NvlinkModel;
+pub use pipelines::{Pipeline, PipelineMix};
+pub use power::{GpuUsage, PowerModel, PowerState};
+pub use sm::{occupancy, tail_efficiency, waves};
+pub use spec::GpuSpec;

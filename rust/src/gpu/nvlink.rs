@@ -1,0 +1,216 @@
+//! NVLink-C2C interconnect model (§II-C, §III-D, Table IV).
+//!
+//! Two CPU↔GPU transfer paths exist inside a MIG instance:
+//!
+//! * **cudaMemcpy / copy engines** — Table IVa. Unidirectional transfers
+//!   are stuck at a *single* copy engine's rate regardless of how many CEs
+//!   the profile owns (the paper calls this out as a likely driver bug:
+//!   "increasing the MIG instance size does not provide bandwidth
+//!   improvement"). Bidirectional transfers do use two CEs when available.
+//! * **direct in-kernel access** — Table IVb. SMs read/write CPU memory at
+//!   cacheline granularity; device-to-host saturates C2C even from the
+//!   smallest instance, host-to-device needs enough SMs in flight (a
+//!   saturation curve in the SM count).
+//!
+//! Local-memory bandwidth is split across MIG instances in proportion to
+//! their memory slices (Table II / IVb observation).
+
+/// Transfer direction over C2C.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    H2D,
+    D2H,
+    /// Simultaneous copies in both directions (aggregate bandwidth).
+    Both,
+}
+
+/// Calibrated C2C + copy-engine constants (GiB/s), from Table IV.
+#[derive(Debug, Clone)]
+pub struct NvlinkModel {
+    /// Single-CE rates (the MIG memcpy ceiling per direction).
+    pub ce_d2h_gibs: f64,
+    pub ce_h2d_gibs: f64,
+    /// Full-GPU (no-MIG) memcpy rates — all CEs available.
+    pub nomig_d2h_gibs: f64,
+    pub nomig_h2d_gibs: f64,
+    pub nomig_both_gibs: f64,
+    /// Direct-access ceilings per direction.
+    pub direct_d2h_cap_gibs: f64,
+    pub direct_h2d_cap_gibs: f64,
+    pub direct_both_cap_gibs: f64,
+    /// H2D direct saturation curve: bw = min(cap, bmax * s / (s + k)).
+    pub direct_h2d_bmax: f64,
+    pub direct_h2d_k: f64,
+    /// Efficiency of memcpy on local HBM relative to the profile's
+    /// bandwidth allocation (Table IVa local column ≈ 0.87 × Table II BW).
+    pub local_memcpy_eff: f64,
+}
+
+impl Default for NvlinkModel {
+    fn default() -> Self {
+        NvlinkModel {
+            ce_d2h_gibs: 39.6,
+            ce_h2d_gibs: 44.0,
+            nomig_d2h_gibs: 276.3,
+            nomig_h2d_gibs: 333.1,
+            nomig_both_gibs: 329.1,
+            direct_d2h_cap_gibs: 343.0,
+            direct_h2d_cap_gibs: 348.0,
+            direct_both_cap_gibs: 331.0,
+            direct_h2d_bmax: 565.0,
+            direct_h2d_k: 27.7,
+            local_memcpy_eff: 0.87,
+        }
+    }
+}
+
+impl NvlinkModel {
+    /// cudaMemcpy bandwidth over C2C for a MIG instance owning `ces` copy
+    /// engines, or for the unpartitioned GPU (`ces = None`).
+    pub fn memcpy_bw_gibs(&self, ces: Option<u32>, dir: Dir) -> f64 {
+        match ces {
+            None => match dir {
+                Dir::D2H => self.nomig_d2h_gibs,
+                Dir::H2D => self.nomig_h2d_gibs,
+                Dir::Both => self.nomig_both_gibs,
+            },
+            Some(n) => {
+                assert!(n >= 1, "instance with zero copy engines");
+                match dir {
+                    // The "CE bug": unidirectional never exceeds one CE.
+                    Dir::D2H => self.ce_d2h_gibs,
+                    Dir::H2D => self.ce_h2d_gibs,
+                    Dir::Both => {
+                        if n >= 2 {
+                            // Two CEs stream concurrently, slightly below
+                            // the plain sum (shared C2C arbitration).
+                            (self.ce_d2h_gibs + self.ce_h2d_gibs) * 0.947
+                        } else {
+                            // One CE time-shares directions.
+                            (self.ce_d2h_gibs + self.ce_h2d_gibs) / 2.0
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Direct in-kernel access bandwidth over C2C with `sms` SMs issuing.
+    pub fn direct_bw_gibs(&self, sms: u32, dir: Dir) -> f64 {
+        assert!(sms >= 1);
+        let h2d = (self.direct_h2d_bmax * sms as f64 / (sms as f64 + self.direct_h2d_k))
+            .min(self.direct_h2d_cap_gibs);
+        match dir {
+            Dir::D2H => self.direct_d2h_cap_gibs * self.d2h_sm_factor(sms),
+            Dir::H2D => h2d,
+            Dir::Both => {
+                let d2h = self.direct_d2h_cap_gibs * self.d2h_sm_factor(sms);
+                ((d2h + h2d) / 2.0 + 8.0).min(self.direct_both_cap_gibs)
+            }
+        }
+    }
+
+    /// D2H saturates even on 16 SMs; mildly declines on bigger instances
+    /// (343 on 1g → 336-338 beyond), matching Table IVb.
+    fn d2h_sm_factor(&self, sms: u32) -> f64 {
+        if sms <= 16 {
+            1.0
+        } else {
+            0.982
+        }
+    }
+
+    /// Local HBM bandwidth achieved by a memcpy within the instance, given
+    /// the instance's bandwidth allocation.
+    pub fn local_memcpy_gibs(&self, alloc_bw_gibs: f64) -> f64 {
+        alloc_bw_gibs * self.local_memcpy_eff
+    }
+
+    /// Local HBM bandwidth achieved by the direct (STREAM-style) kernel:
+    /// the full allocation (Table IVb locals equal Table II's BW column).
+    pub fn local_direct_gibs(&self, alloc_bw_gibs: f64) -> f64 {
+        alloc_bw_gibs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_err;
+
+    const TOL: f64 = 0.05;
+
+    #[test]
+    fn table4a_memcpy_mig_rows() {
+        let m = NvlinkModel::default();
+        // Unidirectional identical for every MIG profile (the CE bug).
+        for ces in [1u32, 2, 3, 4, 8] {
+            assert_eq!(m.memcpy_bw_gibs(Some(ces), Dir::D2H), 39.6);
+            assert_eq!(m.memcpy_bw_gibs(Some(ces), Dir::H2D), 44.0);
+        }
+        // 1g: BOTH 41.7; >=2 CE: 79.2.
+        assert!(rel_err(m.memcpy_bw_gibs(Some(1), Dir::Both), 41.7) < TOL);
+        assert!(rel_err(m.memcpy_bw_gibs(Some(2), Dir::Both), 79.2) < TOL);
+        assert!(rel_err(m.memcpy_bw_gibs(Some(8), Dir::Both), 79.2) < TOL);
+    }
+
+    #[test]
+    fn table4a_memcpy_nomig_row() {
+        let m = NvlinkModel::default();
+        assert!(rel_err(m.memcpy_bw_gibs(None, Dir::Both), 329.1) < TOL);
+        assert!(rel_err(m.memcpy_bw_gibs(None, Dir::D2H), 276.3) < TOL);
+        assert!(rel_err(m.memcpy_bw_gibs(None, Dir::H2D), 333.1) < TOL);
+    }
+
+    #[test]
+    fn table4b_direct_access_rows() {
+        let m = NvlinkModel::default();
+        // (sms, both, d2h, h2d) from Table IVb.
+        let rows = [
+            (16u32, 282.0, 343.0, 207.0),
+            (32, 334.0, 338.0, 303.0),
+            (60, 331.0, 336.0, 348.0),
+            (64, 330.0, 338.0, 347.0),
+            (132, 331.0, 336.0, 348.0),
+        ];
+        for (sms, both, d2h, h2d) in rows {
+            assert!(
+                rel_err(m.direct_bw_gibs(sms, Dir::Both), both) < TOL,
+                "both sms={sms}: {} vs {both}",
+                m.direct_bw_gibs(sms, Dir::Both)
+            );
+            assert!(
+                rel_err(m.direct_bw_gibs(sms, Dir::D2H), d2h) < TOL,
+                "d2h sms={sms}: {} vs {d2h}",
+                m.direct_bw_gibs(sms, Dir::D2H)
+            );
+            assert!(
+                rel_err(m.direct_bw_gibs(sms, Dir::H2D), h2d) < TOL,
+                "h2d sms={sms}: {} vs {h2d}",
+                m.direct_bw_gibs(sms, Dir::H2D)
+            );
+        }
+    }
+
+    #[test]
+    fn key_observation_direct_saturates_on_smallest_instance() {
+        // §III-D: "even for the smallest MIG profile, the direct access
+        // benchmark is able to saturate the Nvlink-C2C interconnect in
+        // device-to-host direction" — and beats memcpy by ~8.7x.
+        let m = NvlinkModel::default();
+        let direct = m.direct_bw_gibs(16, Dir::D2H);
+        let memcpy = m.memcpy_bw_gibs(Some(1), Dir::D2H);
+        assert!(direct / memcpy > 8.0);
+        assert!(direct > 340.0);
+    }
+
+    #[test]
+    fn local_bandwidths() {
+        let m = NvlinkModel::default();
+        // Table IVa local column ~0.87x the allocation.
+        assert!(rel_err(m.local_memcpy_gibs(406.0), 357.5) < TOL);
+        assert!(rel_err(m.local_memcpy_gibs(3175.0), 2732.4) < TOL);
+        // Table IVb local column equals the allocation.
+        assert_eq!(m.local_direct_gibs(1611.0), 1611.0);
+    }
+}

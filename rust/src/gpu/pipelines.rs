@@ -1,0 +1,162 @@
+//! Compute pipelines (§III-A/III-B: per-datatype pipeline utilization).
+//!
+//! The paper's GPM metrics report pipeline utilization per datatype
+//! (double/single/half + tensor). Each workload declares a `PipelineMix` —
+//! its FLOP distribution across pipelines — which drives both kernel
+//! duration and per-pipeline utilization metrics (Table III "used
+//! pipelines" column).
+
+use std::fmt;
+
+/// GPU compute pipelines tracked by the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pipeline {
+    Fp64,
+    Fp32,
+    Fp16,
+    /// HMMA: fp16/bf16 tensor core.
+    TensorFp16,
+    /// IMMA: int8 tensor core.
+    TensorInt8,
+}
+
+pub const ALL_PIPELINES: [Pipeline; 5] = [
+    Pipeline::Fp64,
+    Pipeline::Fp32,
+    Pipeline::Fp16,
+    Pipeline::TensorFp16,
+    Pipeline::TensorInt8,
+];
+
+impl Pipeline {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Pipeline::Fp64 => "FP64",
+            Pipeline::Fp32 => "FP32",
+            Pipeline::Fp16 => "FP16",
+            Pipeline::TensorFp16 => "HMMA",
+            Pipeline::TensorInt8 => "IMMA",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        match self {
+            Pipeline::Fp64 => 0,
+            Pipeline::Fp32 => 1,
+            Pipeline::Fp16 => 2,
+            Pipeline::TensorFp16 => 3,
+            Pipeline::TensorInt8 => 4,
+        }
+    }
+}
+
+impl fmt::Display for Pipeline {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Fractional FLOP distribution over pipelines; fractions sum to 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineMix {
+    fracs: [f64; 5],
+}
+
+impl PipelineMix {
+    /// Build from (pipeline, fraction) pairs; normalizes to sum 1.
+    pub fn new(parts: &[(Pipeline, f64)]) -> PipelineMix {
+        let mut fracs = [0.0; 5];
+        for &(p, f) in parts {
+            assert!(f >= 0.0, "negative pipeline fraction");
+            fracs[p.index()] += f;
+        }
+        let total: f64 = fracs.iter().sum();
+        assert!(total > 0.0, "empty pipeline mix");
+        fracs.iter_mut().for_each(|f| *f /= total);
+        PipelineMix { fracs }
+    }
+
+    pub fn pure(p: Pipeline) -> PipelineMix {
+        PipelineMix::new(&[(p, 1.0)])
+    }
+
+    pub fn frac(&self, p: Pipeline) -> f64 {
+        self.fracs[p.index()]
+    }
+
+    /// Pipelines with non-zero usage, for the Table III "used pipelines"
+    /// column.
+    pub fn used(&self) -> Vec<Pipeline> {
+        ALL_PIPELINES
+            .iter()
+            .copied()
+            .filter(|p| self.frac(*p) > 1e-9)
+            .collect()
+    }
+
+    /// Effective FLOP/s when `flops` are distributed across pipelines that
+    /// run at different peaks: harmonic combination (pipelines execute the
+    /// kernel's instruction stream, so time adds).
+    pub fn effective_flops(&self, peak_of: impl Fn(Pipeline) -> f64) -> f64 {
+        let mut inv = 0.0;
+        for p in ALL_PIPELINES {
+            let f = self.frac(p);
+            if f > 0.0 {
+                let peak = peak_of(p);
+                assert!(peak > 0.0, "zero peak for used pipeline {p}");
+                inv += f / peak;
+            }
+        }
+        1.0 / inv
+    }
+}
+
+impl fmt::Display for PipelineMix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self
+            .used()
+            .iter()
+            .map(|p| format!("{}:{:.0}%", p.label(), self.frac(*p) * 100.0))
+            .collect();
+        f.write_str(&parts.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes() {
+        let m = PipelineMix::new(&[(Pipeline::Fp32, 2.0), (Pipeline::Fp64, 2.0)]);
+        assert!((m.frac(Pipeline::Fp32) - 0.5).abs() < 1e-12);
+        assert!((m.frac(Pipeline::Fp64) - 0.5).abs() < 1e-12);
+        assert_eq!(m.used().len(), 2);
+    }
+
+    #[test]
+    fn effective_flops_harmonic() {
+        // 50/50 split between a 10 and a 30 FLOP/s pipeline:
+        // time per flop = .5/10 + .5/30 = 1/15 -> 15 FLOP/s.
+        let m = PipelineMix::new(&[(Pipeline::Fp32, 0.5), (Pipeline::Fp64, 0.5)]);
+        let eff = m.effective_flops(|p| match p {
+            Pipeline::Fp32 => 30.0,
+            Pipeline::Fp64 => 10.0,
+            _ => 1.0,
+        });
+        assert!((eff - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pure_mix() {
+        let m = PipelineMix::pure(Pipeline::TensorFp16);
+        assert_eq!(m.frac(Pipeline::TensorFp16), 1.0);
+        assert_eq!(m.used(), vec![Pipeline::TensorFp16]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty pipeline mix")]
+    fn empty_mix_panics() {
+        PipelineMix::new(&[]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Streaming-multiprocessor scheduling model.
+//!
+//! Captures the two §IV-A causes of compute underutilization:
+//! 1. the **tail effect** — the last wave of thread blocks leaves SMs idle
+//!    (more severe on larger partitions), and
+//! 2. **occupancy** — active warps relative to the hardware maximum.
+//!
+//! Also implements the §III-C SM-count probe: a fixed-duration kernel is
+//! launched with increasing block counts; the first block count whose
+//! runtime doubles reveals `N_SM + 1`.
+
+/// Number of scheduling waves for `blocks` thread blocks on `sms` SMs with
+/// `blocks_per_sm` concurrently resident blocks per SM.
+pub fn waves(blocks: u64, sms: u32, blocks_per_sm: u32) -> u64 {
+    assert!(sms > 0 && blocks_per_sm > 0);
+    let slots = sms as u64 * blocks_per_sm as u64;
+    blocks.div_ceil(slots)
+}
+
+/// Tail efficiency in (0,1]: mean SM-slot usage across all waves.
+/// 1.0 means every wave is full; small block counts on large partitions
+/// give low efficiency (the §IV-A tail effect).
+pub fn tail_efficiency(blocks: u64, sms: u32, blocks_per_sm: u32) -> f64 {
+    if blocks == 0 {
+        return 1.0;
+    }
+    let slots = sms as u64 * blocks_per_sm as u64;
+    let w = waves(blocks, sms, blocks_per_sm);
+    blocks as f64 / (w * slots) as f64
+}
+
+/// Achieved occupancy in [0,1]: average active warps relative to the
+/// hardware maximum, accounting for partially-filled waves.
+///
+/// `warps_per_block` is the block's warp footprint; `max_warps_per_sm` is
+/// the hardware limit (64 on Hopper); `resident_limit` is how many blocks
+/// an SM can host concurrently given register/smem limits.
+pub fn occupancy(
+    blocks: u64,
+    warps_per_block: u32,
+    sms: u32,
+    max_warps_per_sm: u32,
+    resident_limit: u32,
+) -> f64 {
+    if blocks == 0 {
+        return 0.0;
+    }
+    // Warps resident per SM when the machine is saturated:
+    let resident_warps =
+        (resident_limit.min(max_warps_per_sm / warps_per_block.max(1)) * warps_per_block)
+            .min(max_warps_per_sm);
+    let full_occ = resident_warps as f64 / max_warps_per_sm as f64;
+    // Scale by the tail: partially-filled waves have fewer active warps.
+    full_occ * tail_efficiency(blocks, sms, resident_limit)
+}
+
+/// §III-C probe: simulate the runtime of the fixed-work kernel at block
+/// count `n` on a partition with `sms` SMs, in units of Δt (the 1-block
+/// runtime). One block occupies one SM fully, so runtime = wave count.
+pub fn probe_runtime_units(n: u64, sms: u32) -> u64 {
+    waves(n, sms, 1)
+}
+
+/// Run the §III-C measurement loop: returns the inferred SM count, i.e.
+/// the smallest n whose runtime is 2Δt, minus 1.
+pub fn measure_sm_count(sms: u32) -> u32 {
+    let mut n = 1u64;
+    loop {
+        if probe_runtime_units(n, sms) >= 2 {
+            return (n - 1) as u32;
+        }
+        n += 1;
+        assert!(n < 100_000, "probe runaway");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waves_basics() {
+        assert_eq!(waves(1, 132, 1), 1);
+        assert_eq!(waves(132, 132, 1), 1);
+        assert_eq!(waves(133, 132, 1), 2);
+        assert_eq!(waves(264, 132, 2), 1);
+    }
+
+    #[test]
+    fn tail_efficiency_bounds_and_shape() {
+        // One extra block on a full wave halves efficiency-ish.
+        let full = tail_efficiency(132, 132, 1);
+        assert!((full - 1.0).abs() < 1e-12);
+        let spill = tail_efficiency(133, 132, 1);
+        assert!(spill < 0.51 && spill > 0.49);
+        // Tail effect is worse on more SMs for a fixed small block count
+        // (§IV-A: "on larger GPUs ... more SMs left idle").
+        let small_gpu = tail_efficiency(40, 16, 1);
+        let big_gpu = tail_efficiency(40, 132, 1);
+        assert!(big_gpu < small_gpu);
+    }
+
+    #[test]
+    fn occupancy_monotone_in_blocks() {
+        let lo = occupancy(16, 8, 132, 64, 8);
+        let hi = occupancy(4096, 8, 132, 64, 8);
+        assert!(hi >= lo);
+        assert!(hi <= 1.0 && lo >= 0.0);
+    }
+
+    #[test]
+    fn occupancy_zero_blocks() {
+        assert_eq!(occupancy(0, 8, 132, 64, 8), 0.0);
+    }
+
+    #[test]
+    fn sm_probe_recovers_counts() {
+        // The measured Table II SM counts must be recovered exactly.
+        for sms in [16u32, 26, 32, 60, 64, 132] {
+            assert_eq!(measure_sm_count(sms), sms);
+        }
+    }
+
+    #[test]
+    fn probe_runtime_steps() {
+        // n = SMs -> 1 unit; n = SMs+1 -> 2 units (the paper's detection
+        // criterion).
+        assert_eq!(probe_runtime_units(16, 16), 1);
+        assert_eq!(probe_runtime_units(17, 16), 2);
+    }
+}

@@ -1,0 +1,174 @@
+//! GPU hardware specifications.
+//!
+//! `generations()` carries the paper's Table I; `gh_h100_96gb()` is the
+//! detailed model of the testbed GPU (§III): H100-96GB in a Grace Hopper
+//! superchip — 132 SMs, 96 GB HBM3 (94.5 GiB usable), 700 W cap, clocks
+//! 1980 MHz boost / 1815 MHz observed throttle floor (Fig. 7a).
+
+use super::pipelines::Pipeline;
+
+/// Static description of a GPU.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    pub sms: u32,
+    /// Total HBM capacity in GiB (marketing number).
+    pub mem_capacity_gib: f64,
+    /// Usable capacity in GiB (after reserved carve-outs; 94.5 on the
+    /// testbed, per Table II's 7g.96gb row).
+    pub mem_usable_gib: f64,
+    /// Peak HBM bandwidth in GiB/s as partitionable by MIG (Table II's
+    /// 7g.96gb row: 3175 GiB/s).
+    pub mem_bw_gibs: f64,
+    /// Achieved full-GPU STREAM-copy bandwidth (Table IVb "No MIG" local:
+    /// 2741 GiB/s) — the efficiency the copy benchmark reaches.
+    pub stream_bw_gibs: f64,
+    pub l2_mib: f64,
+    pub copy_engines: u32,
+    /// Boost clock in MHz.
+    pub clock_max_mhz: f64,
+    /// Observed throttle floor in MHz (Fig. 7a: 1980 -> 1815).
+    pub clock_min_mhz: f64,
+    /// DVFS step granularity in MHz.
+    pub clock_step_mhz: f64,
+    /// Peak throughput per pipeline in TFLOPS at boost clock.
+    pub fp64_tflops: f64,
+    pub fp32_tflops: f64,
+    pub fp16_tensor_tflops: f64,
+    /// Board power cap (W) and idle draw (W).
+    pub power_cap_w: f64,
+    pub idle_power_w: f64,
+    /// Maximum resident warps per SM (Hopper: 64).
+    pub max_warps_per_sm: u32,
+    pub max_threads_per_block: u32,
+}
+
+impl GpuSpec {
+    /// The paper's testbed: Grace Hopper H100-96GB.
+    pub fn gh_h100_96gb() -> GpuSpec {
+        GpuSpec {
+            name: "GH200-H100-96GB".to_string(),
+            sms: 132,
+            mem_capacity_gib: 96.0,
+            mem_usable_gib: 94.5,
+            mem_bw_gibs: 3175.0,
+            stream_bw_gibs: 2741.4,
+            l2_mib: 50.0,
+            copy_engines: 8,
+            clock_max_mhz: 1980.0,
+            clock_min_mhz: 1815.0,
+            clock_step_mhz: 15.0,
+            fp64_tflops: 30.0,
+            fp32_tflops: 60.0,
+            fp16_tensor_tflops: 1000.0,
+            power_cap_w: 700.0,
+            idle_power_w: 90.0,
+            max_warps_per_sm: 64,
+            max_threads_per_block: 1024,
+        }
+    }
+
+    /// Table I: the four GPU generations the paper motivates with.
+    pub fn generations() -> Vec<GpuSpec> {
+        let gen = |name: &str,
+                   cap: f64,
+                   bw_tbs: f64,
+                   fp32: f64,
+                   tensor: f64,
+                   sms: u32| GpuSpec {
+            name: name.to_string(),
+            sms,
+            mem_capacity_gib: cap,
+            mem_usable_gib: cap,
+            mem_bw_gibs: bw_tbs * 1000.0,
+            stream_bw_gibs: bw_tbs * 1000.0 * 0.86,
+            l2_mib: 40.0,
+            copy_engines: 8,
+            clock_max_mhz: 1800.0,
+            clock_min_mhz: 1600.0,
+            clock_step_mhz: 15.0,
+            fp64_tflops: fp32 / 2.0,
+            fp32_tflops: fp32,
+            fp16_tensor_tflops: tensor,
+            power_cap_w: 700.0,
+            idle_power_w: 80.0,
+            max_warps_per_sm: 64,
+            max_threads_per_block: 1024,
+        };
+        vec![
+            gen("V100", 32.0, 1.1, 16.4, 130.0, 80),
+            gen("A100", 80.0, 2.0, 19.5, 312.0, 108),
+            gen("H100", 144.0, 4.9, 60.0, 1000.0, 132),
+            gen("B200", 192.0, 8.0, 80.0, 2500.0, 160),
+        ]
+    }
+
+    /// Peak FLOP/s of a pipeline at the given clock with `sms` SMs active.
+    pub fn pipeline_flops(&self, pipe: Pipeline, sms: u32, clock_mhz: f64) -> f64 {
+        let peak_tflops = match pipe {
+            Pipeline::Fp64 => self.fp64_tflops,
+            Pipeline::Fp32 => self.fp32_tflops,
+            Pipeline::Fp16 => self.fp32_tflops * 2.0,
+            Pipeline::TensorFp16 => self.fp16_tensor_tflops,
+            Pipeline::TensorInt8 => self.fp16_tensor_tflops * 2.0,
+        };
+        peak_tflops * 1e12 * (sms as f64 / self.sms as f64) * (clock_mhz / self.clock_max_mhz)
+    }
+
+    /// Usable memory in bytes.
+    pub fn mem_usable_bytes(&self) -> f64 {
+        crate::util::units::gib(self.mem_usable_gib)
+    }
+
+    /// Per-SM fp32 FLOPs per cycle (sanity metric for the roofline notes).
+    pub fn fp32_flops_per_sm_cycle(&self) -> f64 {
+        self.fp32_tflops * 1e12 / (self.sms as f64 * self.clock_max_mhz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let gens = GpuSpec::generations();
+        assert_eq!(gens.len(), 4);
+        let h100 = &gens[2];
+        assert_eq!(h100.name, "H100");
+        assert_eq!(h100.sms, 132);
+        assert_eq!(h100.mem_capacity_gib, 144.0);
+        assert_eq!(h100.fp32_tflops, 60.0);
+        assert_eq!(h100.fp16_tensor_tflops, 1000.0);
+    }
+
+    #[test]
+    fn testbed_matches_paper_section3() {
+        let g = GpuSpec::gh_h100_96gb();
+        assert_eq!(g.sms, 132);
+        assert_eq!(g.mem_capacity_gib, 96.0);
+        assert_eq!(g.mem_usable_gib, 94.5);
+        assert_eq!(g.power_cap_w, 700.0);
+        assert_eq!(g.clock_max_mhz, 1980.0);
+        assert_eq!(g.clock_min_mhz, 1815.0);
+    }
+
+    #[test]
+    fn pipeline_flops_scale_linearly() {
+        let g = GpuSpec::gh_h100_96gb();
+        let full = g.pipeline_flops(Pipeline::Fp32, 132, 1980.0);
+        assert!((full - 60e12).abs() / 60e12 < 1e-9);
+        let half_sms = g.pipeline_flops(Pipeline::Fp32, 66, 1980.0);
+        assert!((half_sms - 30e12).abs() / 30e12 < 1e-9);
+        let throttled = g.pipeline_flops(Pipeline::Fp32, 132, 990.0);
+        assert!((throttled - 30e12).abs() / 30e12 < 1e-9);
+    }
+
+    #[test]
+    fn fp32_per_sm_cycle_plausible() {
+        // H100 ballpark: ~230 fp32 FLOPs per SM-cycle at boost.
+        let g = GpuSpec::gh_h100_96gb();
+        let v = g.fp32_flops_per_sm_cycle();
+        assert!(v > 150.0 && v < 300.0, "got {v}");
+    }
+}

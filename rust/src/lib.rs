@@ -1,0 +1,42 @@
+//! # migsim — GPU sharing & underutilization simulator
+//!
+//! Reproduction of *"Taming GPU Underutilization via Static Partitioning and
+//! Fine-grained CPU Offloading"* (Schieffer, Shi, Ren, Peng — CS.DC 2026).
+//!
+//! The crate models a Grace Hopper H100-96GB system and its GPU-sharing
+//! mechanisms (full GPU, time-slicing, MPS, MIG), a GPM-like metrics
+//! sampler, an NVLink-C2C offloading scheme, and the paper's reward model —
+//! driven by a discrete-event simulator calibrated to the paper's measured
+//! tables. Real compute for the workload suite is executed through
+//! AOT-compiled JAX/Pallas kernels via the PJRT runtime (`runtime`).
+//!
+//! Layering:
+//! - `util`, `sim`, `bench`: from-scratch substrates (JSON, PRNG, stats,
+//!   tables, bench harness, discrete-event engine).
+//! - `gpu`, `mig`, `sharing`: the hardware + partitioning models.
+//! - `workload`, `metrics`, `offload`, `reward`: the paper's method.
+//! - `coordinator`, `experiments`: drivers that regenerate every table and
+//!   figure in the paper's evaluation.
+//! - `runtime`: PJRT loader/executor for `artifacts/*.hlo.txt`.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod gpu;
+pub mod metrics;
+pub mod mig;
+pub mod offload;
+pub mod reward;
+pub mod runtime;
+pub mod sharing;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Library version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,258 @@
+//! migsim CLI — leader entrypoint.
+//!
+//! Commands:
+//!   experiment <id|all>   regenerate a paper table/figure (results/ JSON)
+//!   run                   run one workload under one sharing scheme
+//!   list                  list workloads, schemes and experiments
+//!   probe                 SM-count + context-overhead probes
+//!   reward                reward sweep for an app across configurations
+//!   runtime               PJRT artifact smoke check (artifacts/)
+
+use migsim::cli::{render_help, Args, CommandSpec};
+use migsim::config::SimConfig;
+use migsim::coordinator::corun::{simulate, CorunSpec};
+use migsim::sharing::Scheme;
+use migsim::workload::{apps, AppId};
+
+fn commands() -> Vec<CommandSpec> {
+    vec![
+        CommandSpec {
+            name: "experiment",
+            summary: "regenerate a paper table/figure (or 'all')",
+            usage: "migsim experiment <table1|table2|table4|smcount|ctx|fig2..fig8|all> [--scale X] [--seed N]",
+        },
+        CommandSpec {
+            name: "run",
+            summary: "run one workload under a sharing scheme",
+            usage: "migsim run --app <name> [--scheme full|mig|mig-shared|mps|timeslice] [--copies N] [--profile 1g.12gb] [--offload] [--scale X]",
+        },
+        CommandSpec {
+            name: "list",
+            summary: "list workloads, schemes, experiments",
+            usage: "migsim list",
+        },
+        CommandSpec {
+            name: "probe",
+            summary: "run the SM-count and context probes",
+            usage: "migsim probe",
+        },
+        CommandSpec {
+            name: "reward",
+            summary: "reward-model sweep (Fig. 8 study)",
+            usage: "migsim reward [--scale X]",
+        },
+        CommandSpec {
+            name: "runtime",
+            summary: "load + execute AOT artifacts via PJRT (smoke check)",
+            usage: "migsim runtime [--artifacts DIR] [--artifact NAME]",
+        },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+        print!("{}", render_help("migsim", &commands()));
+        return;
+    }
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn sim_config(args: &Args) -> migsim::Result<SimConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => SimConfig::load(std::path::Path::new(path))?,
+        None => SimConfig::default(),
+    };
+    cfg.workload_scale = args
+        .opt_f64("scale", cfg.workload_scale)
+        .map_err(anyhow::Error::msg)?;
+    cfg.seed = args.opt_u64("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn dispatch(args: &Args) -> migsim::Result<()> {
+    match args.command.as_str() {
+        "experiment" => cmd_experiment(args),
+        "run" => cmd_run(args),
+        "list" => cmd_list(),
+        "probe" => cmd_probe(),
+        "reward" => cmd_reward(args),
+        "runtime" => cmd_runtime(args),
+        other => anyhow::bail!("unknown command '{other}'; try --help"),
+    }
+}
+
+fn cmd_experiment(args: &Args) -> migsim::Result<()> {
+    args.check_known(&["scale", "seed", "config", "json"])
+        .map_err(anyhow::Error::msg)?;
+    let cfg = sim_config(args)?;
+    let id = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    if id == "all" {
+        for report in migsim::experiments::run_all(&cfg)? {
+            println!("{report}");
+        }
+        println!("results written under {}/", cfg.results_dir);
+        return Ok(());
+    }
+    let out = migsim::experiments::run(id, &cfg)?;
+    if args.flag("json") {
+        println!("{}", out.json.pretty());
+    } else {
+        print!("{}", out.render());
+    }
+    let path = migsim::coordinator::report::write_results(&cfg.results_dir, id, &out.json)?;
+    eprintln!("-- wrote {}", path.display());
+    Ok(())
+}
+
+fn parse_scheme(args: &Args) -> migsim::Result<Scheme> {
+    let copies = args.opt_u64("copies", 7).map_err(anyhow::Error::msg)? as u32;
+    let profile_name = args.opt_or("profile", "1g.12gb");
+    let profile = migsim::mig::profile::GiProfile::by_name(profile_name)
+        .map(|p| p.id)
+        .ok_or_else(|| anyhow::anyhow!("unknown MIG profile '{profile_name}'"))?;
+    Ok(match args.opt_or("scheme", "full") {
+        "full" => Scheme::Full,
+        "mig" => Scheme::Mig { profile, copies },
+        "mig-shared" => Scheme::MigSharedGi { copies },
+        "mps" => Scheme::Mps {
+            sm_pct: args.opt_u64("sm-pct", 13).map_err(anyhow::Error::msg)? as u32,
+            copies,
+        },
+        "timeslice" => Scheme::TimeSlice { copies },
+        other => anyhow::bail!("unknown scheme '{other}'"),
+    })
+}
+
+fn cmd_run(args: &Args) -> migsim::Result<()> {
+    args.check_known(&[
+        "app", "apps", "scheme", "copies", "profile", "sm-pct", "offload", "scale", "seed",
+        "config", "traces",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    let cfg = sim_config(args)?;
+    let scheme = parse_scheme(args)?;
+    let mut spec = if let Some(list) = args.opt("apps") {
+        // Heterogeneous mix: one app per partition, comma-separated.
+        let apps: Vec<AppId> = list
+            .split(',')
+            .map(|name| {
+                AppId::by_name(name.trim())
+                    .ok_or_else(|| anyhow::anyhow!("unknown app '{name}' (see `migsim list`)"))
+            })
+            .collect::<migsim::Result<_>>()?;
+        let n = apps.len();
+        CorunSpec {
+            scheme,
+            apps,
+            sequential: false,
+            offload: vec![None; n],
+            record_traces: false,
+            fault_at: None,
+        }
+    } else {
+        let app_name = args
+            .opt("app")
+            .ok_or_else(|| anyhow::anyhow!("--app or --apps is required (see `migsim list`)"))?;
+        let app = AppId::by_name(app_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown app '{app_name}' (see `migsim list`)"))?;
+        CorunSpec::homogeneous(scheme, app)
+    };
+    if args.flag("traces") {
+        spec.record_traces = true;
+    }
+    if args.flag("offload") {
+        let gpu = migsim::gpu::GpuSpec::gh_h100_96gb();
+        let parts = migsim::sharing::scheme::partitions(&scheme, &gpu)?;
+        for (i, p) in parts.iter().enumerate() {
+            let model = apps::model(spec.apps[i]);
+            spec.offload[i] = Some(migsim::offload::OffloadPlan::plan(
+                &model,
+                p.mem_capacity_gib - p.context_overhead_gib,
+            )?);
+        }
+    }
+    let (m, _) = simulate(&spec, &cfg)?;
+    println!("{}", m.summary_line());
+    println!(
+        "copies: {}  throughput: {:.3}/s  peak mem: {:.1} GiB  events: {}",
+        m.copy_runtimes_s.len(),
+        m.throughput(),
+        m.peak_mem_gib,
+        m.events
+    );
+    Ok(())
+}
+
+fn cmd_list() -> migsim::Result<()> {
+    println!("workloads (Table III):");
+    for id in apps::all() {
+        let m = apps::model(id);
+        println!(
+            "  {:<18} {:<44} {:>6.1} GiB  {}",
+            m.name, m.description, m.footprint_gib, m.input
+        );
+    }
+    println!("\nschemes: full | mig (--profile, --copies) | mig-shared | mps (--sm-pct) | timeslice");
+    println!("profiles: 1g.12gb 1g.24gb 2g.24gb 3g.48gb 4g.48gb 7g.96gb");
+    println!("\nexperiments: {}", migsim::experiments::ALL_IDS.join(" "));
+    Ok(())
+}
+
+fn cmd_probe() -> migsim::Result<()> {
+    let out = migsim::experiments::run("smcount", &SimConfig::default())?;
+    print!("{}", out.render());
+    let out = migsim::experiments::run("ctx", &SimConfig::default())?;
+    print!("{}", out.render());
+    Ok(())
+}
+
+fn cmd_reward(args: &Args) -> migsim::Result<()> {
+    args.check_known(&["scale", "seed", "config"])
+        .map_err(anyhow::Error::msg)?;
+    let cfg = sim_config(args)?;
+    let out = migsim::experiments::run("fig8", &cfg)?;
+    print!("{}", out.render());
+    Ok(())
+}
+
+fn cmd_runtime(args: &Args) -> migsim::Result<()> {
+    args.check_known(&["artifacts", "artifact"])
+        .map_err(anyhow::Error::msg)?;
+    let dir = args.opt_or("artifacts", "artifacts");
+    let registry = migsim::runtime::Registry::load(std::path::Path::new(dir))?;
+    println!("{} artifacts in {dir}/", registry.len());
+    let mut exec = migsim::runtime::Executor::new()?;
+    for name in registry.names() {
+        if let Some(only) = args.opt("artifact") {
+            if only != name {
+                continue;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let stats = exec.smoke_run(&registry, &name)?;
+        println!(
+            "  {:<22} compile+run {:>8.1} ms   outputs: {}  checksum {:+.3e}",
+            name,
+            t0.elapsed().as_secs_f64() * 1e3,
+            stats.outputs,
+            stats.checksum
+        );
+    }
+    Ok(())
+}

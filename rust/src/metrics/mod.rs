@@ -1,0 +1,395 @@
+//! GPM-like metrics collection (§III-A).
+//!
+//! Mirrors the paper's measurement stack: GPM samples (SM utilization,
+//! SM occupancy, per-pipeline utilization, memory bandwidth/capacity) at
+//! 0.2 s, NVML power/clock polling at 20 ms, energy by integrating the
+//! power trace (§V-B). The co-run simulator feeds the collector; the
+//! experiment drivers read the aggregates that become Figs. 2-7.
+
+use crate::util::stats::Accum;
+use crate::util::units;
+
+/// One GPM sample (0.2 s period in the paper).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GpmSample {
+    pub t_s: f64,
+    /// Fraction of time SMs were busy in the window.
+    pub sm_util: f64,
+    /// Active warps relative to hardware maximum.
+    pub sm_occupancy: f64,
+    /// Per-pipeline utilization [fp64, fp32, fp16, hmma, imma].
+    pub pipe_util: [f64; 5],
+    /// HBM bandwidth utilization (fraction of total GPU bandwidth).
+    pub bw_util: f64,
+    /// Used memory (GiB), including context overhead.
+    pub mem_used_gib: f64,
+}
+
+/// One NVML power poll (20 ms period).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerSample {
+    pub t_s: f64,
+    pub power_w: f64,
+    pub clock_mhz: f64,
+    pub throttled: bool,
+}
+
+/// Collector for one simulated run.
+#[derive(Debug, Default)]
+pub struct Collector {
+    /// Keep full traces (needed for Fig. 7; off for bulk experiments).
+    pub record_traces: bool,
+    pub gpm: Vec<GpmSample>,
+    pub power: Vec<PowerSample>,
+    energy_j: f64,
+    last_power: Option<(f64, f64)>,
+    occ: Accum,
+    sm_util: Accum,
+    bw_util: Accum,
+    mem_used: Accum,
+    power_acc: Accum,
+    throttled_time_s: f64,
+    peak_mem_gib: f64,
+}
+
+impl Collector {
+    pub fn new(record_traces: bool) -> Collector {
+        Collector {
+            record_traces,
+            ..Default::default()
+        }
+    }
+
+    /// Ingest a power poll; integrates energy trapezoidally. Samples that
+    /// are not newer than the last one are dropped (the simulator emits a
+    /// closing sample at the makespan, which the periodic poller may
+    /// already have passed).
+    pub fn push_power(&mut self, s: PowerSample) {
+        if let Some((t0, w0)) = self.last_power {
+            if s.t_s < t0 {
+                return;
+            }
+            self.energy_j += 0.5 * (w0 + s.power_w) * (s.t_s - t0);
+            if s.throttled {
+                self.throttled_time_s += s.t_s - t0;
+            }
+        }
+        self.last_power = Some((s.t_s, s.power_w));
+        self.power_acc.push(s.power_w);
+        if self.record_traces {
+            self.power.push(s);
+        }
+    }
+
+    /// Ingest a GPM sample.
+    pub fn push_gpm(&mut self, s: GpmSample) {
+        self.occ.push(s.sm_occupancy);
+        self.sm_util.push(s.sm_util);
+        self.bw_util.push(s.bw_util);
+        self.mem_used.push(s.mem_used_gib);
+        self.peak_mem_gib = self.peak_mem_gib.max(s.mem_used_gib);
+        if self.record_traces {
+            self.gpm.push(s);
+        }
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    pub fn avg_occupancy(&self) -> f64 {
+        self.occ.mean()
+    }
+
+    pub fn avg_sm_util(&self) -> f64 {
+        self.sm_util.mean()
+    }
+
+    pub fn avg_bw_util(&self) -> f64 {
+        self.bw_util.mean()
+    }
+
+    pub fn avg_mem_used_gib(&self) -> f64 {
+        self.mem_used.mean()
+    }
+
+    pub fn peak_mem_gib(&self) -> f64 {
+        self.peak_mem_gib
+    }
+
+    pub fn avg_power_w(&self) -> f64 {
+        self.power_acc.mean()
+    }
+
+    pub fn max_power_w(&self) -> f64 {
+        self.power_acc.max()
+    }
+
+    pub fn throttled_time_s(&self) -> f64 {
+        self.throttled_time_s
+    }
+
+    /// Throttling intervals `(start, end)` extracted from the power trace
+    /// (requires `record_traces`) — the pink regions of Fig. 7.
+    pub fn throttle_intervals(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut open: Option<f64> = None;
+        for s in &self.power {
+            match (s.throttled, open) {
+                (true, None) => open = Some(s.t_s),
+                (false, Some(st)) => {
+                    out.push((st, s.t_s));
+                    open = None;
+                }
+                _ => {}
+            }
+        }
+        if let (Some(st), Some(last)) = (open, self.power.last()) {
+            out.push((st, last.t_s));
+        }
+        out
+    }
+}
+
+/// Final metrics for one run (one scheme × one workload set).
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub scheme: String,
+    pub makespan_s: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    pub max_power_w: f64,
+    pub throttled_time_s: f64,
+    pub avg_occupancy: f64,
+    pub avg_sm_util: f64,
+    pub avg_bw_util: f64,
+    pub avg_mem_used_gib: f64,
+    pub peak_mem_gib: f64,
+    /// Wall-clock runtime of each co-running copy.
+    pub copy_runtimes_s: Vec<f64>,
+    /// Copies killed by an injected fault (0 in normal runs).
+    pub failed_copies: u32,
+    /// Simulator event count (perf diagnostics).
+    pub events: u64,
+}
+
+impl RunMetrics {
+    /// Task throughput in completed copies per second.
+    pub fn throughput(&self) -> f64 {
+        self.copy_runtimes_s.len() as f64 / self.makespan_s
+    }
+
+    /// Memory capacity utilization relative to total usable memory.
+    pub fn mem_capacity_util(&self, total_gib: f64) -> f64 {
+        self.avg_mem_used_gib / total_gib
+    }
+
+    pub fn to_json(&self) -> crate::util::Json {
+        let mut o = crate::util::Json::obj();
+        o.set("scheme", self.scheme.as_str())
+            .set("makespan_s", self.makespan_s)
+            .set("energy_j", self.energy_j)
+            .set("avg_power_w", self.avg_power_w)
+            .set("max_power_w", self.max_power_w)
+            .set("throttled_time_s", self.throttled_time_s)
+            .set("avg_occupancy", self.avg_occupancy)
+            .set("avg_sm_util", self.avg_sm_util)
+            .set("avg_bw_util", self.avg_bw_util)
+            .set("avg_mem_used_gib", self.avg_mem_used_gib)
+            .set("peak_mem_gib", self.peak_mem_gib)
+            .set("failed_copies", self.failed_copies)
+            .set("events", self.events)
+            .set("copy_runtimes_s", self.copy_runtimes_s.clone());
+        o
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<18} makespan {:>9}  E {:>8.0} J  P̄ {:>5.0} W  occ {:>5.1}%  bw {:>5.1}%  thr {:>6}",
+            self.scheme,
+            units::human_time(self.makespan_s),
+            self.energy_j,
+            self.avg_power_w,
+            self.avg_occupancy * 100.0,
+            self.avg_bw_util * 100.0,
+            units::human_time(self.throttled_time_s),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_integration_constant_power() {
+        let mut c = Collector::new(false);
+        for i in 0..=100 {
+            c.push_power(PowerSample {
+                t_s: i as f64 * 0.02,
+                power_w: 350.0,
+                clock_mhz: 1980.0,
+                throttled: false,
+            });
+        }
+        // 350 W × 2 s = 700 J.
+        assert!((c.energy_j() - 700.0).abs() < 1e-9);
+        assert_eq!(c.throttled_time_s(), 0.0);
+    }
+
+    #[test]
+    fn throttle_intervals_extracted() {
+        let mut c = Collector::new(true);
+        for i in 0..10 {
+            c.push_power(PowerSample {
+                t_s: i as f64 * 0.02,
+                power_w: 700.0,
+                clock_mhz: 1900.0,
+                throttled: (3..6).contains(&i),
+            });
+        }
+        let iv = c.throttle_intervals();
+        assert_eq!(iv.len(), 1);
+        assert!((iv[0].0 - 0.06).abs() < 1e-9);
+        assert!((iv[0].1 - 0.12).abs() < 1e-9);
+        assert!(c.throttled_time_s() > 0.0);
+    }
+
+    #[test]
+    fn gpm_aggregates() {
+        let mut c = Collector::new(false);
+        for (occ, bw) in [(0.2, 0.5), (0.4, 0.7)] {
+            c.push_gpm(GpmSample {
+                sm_occupancy: occ,
+                bw_util: bw,
+                mem_used_gib: 10.0,
+                ..Default::default()
+            });
+        }
+        assert!((c.avg_occupancy() - 0.3).abs() < 1e-12);
+        assert!((c.avg_bw_util() - 0.6).abs() < 1e-12);
+        assert_eq!(c.peak_mem_gib(), 10.0);
+    }
+
+    #[test]
+    fn run_metrics_json_and_throughput() {
+        let m = RunMetrics {
+            scheme: "MIG 7x1g.12gb".into(),
+            makespan_s: 70.0,
+            energy_j: 1000.0,
+            avg_power_w: 300.0,
+            max_power_w: 400.0,
+            throttled_time_s: 0.0,
+            avg_occupancy: 0.5,
+            avg_sm_util: 0.9,
+            avg_bw_util: 0.4,
+            avg_mem_used_gib: 50.0,
+            peak_mem_gib: 60.0,
+            copy_runtimes_s: vec![70.0; 7],
+            failed_copies: 0,
+            events: 123,
+        };
+        assert!((m.throughput() - 0.1).abs() < 1e-12);
+        assert!((m.mem_capacity_util(94.5) - 50.0 / 94.5).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("scheme").unwrap().as_str(), Some("MIG 7x1g.12gb"));
+        assert_eq!(j.get("copy_runtimes_s").unwrap().as_arr().unwrap().len(), 7);
+    }
+}
+
+/// CSV export of recorded traces (for plotting Fig. 7-style figures
+/// outside the terminal).
+pub mod export {
+    use super::Collector;
+    use std::io::Write;
+    use std::path::Path;
+
+    /// Write the power trace as `t_s,power_w,clock_mhz,throttled`.
+    pub fn power_csv(c: &Collector, path: &Path) -> crate::Result<()> {
+        anyhow::ensure!(
+            c.record_traces,
+            "collector was not recording traces (use with_traces())"
+        );
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "t_s,power_w,clock_mhz,throttled")?;
+        for s in &c.power {
+            writeln!(f, "{},{},{},{}", s.t_s, s.power_w, s.clock_mhz, s.throttled as u8)?;
+        }
+        Ok(())
+    }
+
+    /// Write the GPM trace as
+    /// `t_s,sm_util,sm_occupancy,bw_util,mem_used_gib,fp64,fp32,fp16,hmma,imma`.
+    pub fn gpm_csv(c: &Collector, path: &Path) -> crate::Result<()> {
+        anyhow::ensure!(c.record_traces, "collector was not recording traces");
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            f,
+            "t_s,sm_util,sm_occupancy,bw_util,mem_used_gib,fp64,fp32,fp16,hmma,imma"
+        )?;
+        for s in &c.gpm {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{},{}",
+                s.t_s,
+                s.sm_util,
+                s.sm_occupancy,
+                s.bw_util,
+                s.mem_used_gib,
+                s.pipe_util[0],
+                s.pipe_util[1],
+                s.pipe_util[2],
+                s.pipe_util[3],
+                s.pipe_util[4]
+            )?;
+        }
+        Ok(())
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::metrics::{GpmSample, PowerSample};
+
+        #[test]
+        fn csv_round_trip_lines() {
+            let mut c = Collector::new(true);
+            for i in 0..5 {
+                c.push_power(PowerSample {
+                    t_s: i as f64 * 0.02,
+                    power_w: 500.0 + i as f64,
+                    clock_mhz: 1980.0,
+                    throttled: i == 3,
+                });
+                c.push_gpm(GpmSample {
+                    t_s: i as f64 * 0.2,
+                    sm_util: 0.5,
+                    sm_occupancy: 0.4,
+                    pipe_util: [0.0, 0.1, 0.0, 0.2, 0.0],
+                    bw_util: 0.3,
+                    mem_used_gib: 10.0,
+                });
+            }
+            let dir = std::env::temp_dir();
+            let p1 = dir.join("migsim_power_test.csv");
+            let p2 = dir.join("migsim_gpm_test.csv");
+            power_csv(&c, &p1).unwrap();
+            gpm_csv(&c, &p2).unwrap();
+            let power = std::fs::read_to_string(&p1).unwrap();
+            assert_eq!(power.lines().count(), 6);
+            assert!(power.lines().nth(4).unwrap().ends_with(",1"));
+            let gpm = std::fs::read_to_string(&p2).unwrap();
+            assert!(gpm.starts_with("t_s,sm_util"));
+            assert_eq!(gpm.lines().count(), 6);
+            let _ = std::fs::remove_file(p1);
+            let _ = std::fs::remove_file(p2);
+        }
+
+        #[test]
+        fn requires_recording() {
+            let c = Collector::new(false);
+            let p = std::env::temp_dir().join("migsim_noop.csv");
+            assert!(power_csv(&c, &p).is_err());
+        }
+    }
+}

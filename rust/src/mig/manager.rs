@@ -1,0 +1,336 @@
+//! MIG lifecycle manager: GPU instances (GI) and compute instances (CI)
+//! with slice-budget placement validation and the static-reconfiguration
+//! constraint (§II-B3: the configuration cannot change while work runs).
+
+use super::profile::{GiProfile, ProfileId, TOTAL_COMPUTE_SLICES, TOTAL_MEMORY_SLICES};
+use crate::gpu::GpuSpec;
+use anyhow::{anyhow, bail};
+
+/// Handle to a GPU instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GiId(pub u32);
+
+/// Handle to a compute instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CiId(pub u32);
+
+/// A created GPU instance.
+#[derive(Debug, Clone)]
+pub struct GpuInstance {
+    pub id: GiId,
+    pub profile: GiProfile,
+    pub cis: Vec<CiId>,
+    /// Compute slices already claimed by CIs.
+    pub ci_slices_used: u32,
+}
+
+/// A created compute instance — what workloads actually run on.
+#[derive(Debug, Clone)]
+pub struct ComputeInstance {
+    pub id: CiId,
+    pub gi: GiId,
+    pub compute_slices: u32,
+    /// SMs available to this CI.
+    pub sms: u32,
+    /// Memory visible to this CI (shared across CIs of the same GI).
+    pub mem_gib: f64,
+    /// Bandwidth allocation of the owning GI (shared across its CIs).
+    pub mem_bw_gibs: f64,
+    pub copy_engines: u32,
+    /// True while a workload is running (blocks reconfiguration).
+    pub busy: bool,
+    /// Number of sibling CIs on the same GI (they share memory + L2,
+    /// MPS-style — used by the contention model).
+    pub siblings: u32,
+}
+
+/// The MIG manager for one physical GPU.
+#[derive(Debug)]
+pub struct MigManager {
+    spec: GpuSpec,
+    gis: Vec<GpuInstance>,
+    cis: Vec<ComputeInstance>,
+    next_gi: u32,
+    next_ci: u32,
+    compute_slices_used: u32,
+    memory_slices_used: u32,
+}
+
+impl MigManager {
+    pub fn new(spec: GpuSpec) -> MigManager {
+        MigManager {
+            spec,
+            gis: Vec::new(),
+            cis: Vec::new(),
+            next_gi: 0,
+            next_ci: 0,
+            compute_slices_used: 0,
+            memory_slices_used: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &GpuSpec {
+        &self.spec
+    }
+
+    pub fn compute_slices_free(&self) -> u32 {
+        TOTAL_COMPUTE_SLICES - self.compute_slices_used
+    }
+
+    pub fn memory_slices_free(&self) -> u32 {
+        TOTAL_MEMORY_SLICES - self.memory_slices_used
+    }
+
+    /// Create a GPU instance of the given profile, enforcing the slice
+    /// budget and the 7-GI limit.
+    pub fn create_gi(&mut self, profile_id: ProfileId) -> crate::Result<GiId> {
+        let p = GiProfile::get(profile_id);
+        if self.gis.len() as u32 >= TOTAL_COMPUTE_SLICES {
+            bail!("GI limit reached (max {} GPU instances)", TOTAL_COMPUTE_SLICES);
+        }
+        if p.compute_slices > self.compute_slices_free() {
+            bail!(
+                "not enough compute slices for {} (need {}, free {})",
+                p.name,
+                p.compute_slices,
+                self.compute_slices_free()
+            );
+        }
+        if p.memory_slices > self.memory_slices_free() {
+            bail!(
+                "not enough memory slices for {} (need {}, free {})",
+                p.name,
+                p.memory_slices,
+                self.memory_slices_free()
+            );
+        }
+        self.compute_slices_used += p.compute_slices;
+        self.memory_slices_used += p.memory_slices;
+        let id = GiId(self.next_gi);
+        self.next_gi += 1;
+        self.gis.push(GpuInstance {
+            id,
+            profile: p,
+            cis: Vec::new(),
+            ci_slices_used: 0,
+        });
+        Ok(id)
+    }
+
+    /// Create a compute instance over `slices` of the GI's compute slices.
+    pub fn create_ci(&mut self, gi_id: GiId, slices: u32) -> crate::Result<CiId> {
+        let gi = self
+            .gis
+            .iter_mut()
+            .find(|g| g.id == gi_id)
+            .ok_or_else(|| anyhow!("no such GPU instance {gi_id:?}"))?;
+        if slices == 0 {
+            bail!("compute instance needs at least one slice");
+        }
+        let free = gi.profile.compute_slices - gi.ci_slices_used;
+        if slices > free {
+            bail!(
+                "GI {} has {free} free compute slices, requested {slices}",
+                gi.profile.name
+            );
+        }
+        // SMs are divided proportionally to compute slices within the GI
+        // (e.g. 1c.7g.96gb -> floor(132/7) = 18 SMs).
+        let sms = gi.profile.sms * slices / gi.profile.compute_slices;
+        let id = CiId(self.next_ci);
+        self.next_ci += 1;
+        gi.ci_slices_used += slices;
+        gi.cis.push(id);
+        let ci = ComputeInstance {
+            id,
+            gi: gi_id,
+            compute_slices: slices,
+            sms,
+            mem_gib: gi.profile.mem_gib,
+            mem_bw_gibs: gi.profile.mem_bw_gibs,
+            copy_engines: gi.profile.copy_engines,
+            busy: false,
+            siblings: 0,
+        };
+        self.cis.push(ci);
+        self.refresh_siblings(gi_id);
+        Ok(id)
+    }
+
+    /// Convenience: create a GI and one CI covering all its slices.
+    pub fn create_full(&mut self, profile_id: ProfileId) -> crate::Result<CiId> {
+        let gi = self.create_gi(profile_id)?;
+        let slices = GiProfile::get(profile_id).compute_slices;
+        self.create_ci(gi, slices)
+    }
+
+    pub fn ci(&self, id: CiId) -> Option<&ComputeInstance> {
+        self.cis.iter().find(|c| c.id == id)
+    }
+
+    pub fn ci_mut(&mut self, id: CiId) -> Option<&mut ComputeInstance> {
+        self.cis.iter_mut().find(|c| c.id == id)
+    }
+
+    pub fn gi(&self, id: GiId) -> Option<&GpuInstance> {
+        self.gis.iter().find(|g| g.id == id)
+    }
+
+    pub fn cis(&self) -> &[ComputeInstance] {
+        &self.cis
+    }
+
+    pub fn gis(&self) -> &[GpuInstance] {
+        &self.gis
+    }
+
+    /// Destroy a compute instance. Fails while busy — the paper's static
+    /// configuration limitation.
+    pub fn destroy_ci(&mut self, id: CiId) -> crate::Result<()> {
+        let idx = self
+            .cis
+            .iter()
+            .position(|c| c.id == id)
+            .ok_or_else(|| anyhow!("no such compute instance {id:?}"))?;
+        if self.cis[idx].busy {
+            bail!("compute instance is busy; MIG cannot be reconfigured while applications run");
+        }
+        let ci = self.cis.remove(idx);
+        let gi = self.gis.iter_mut().find(|g| g.id == ci.gi).unwrap();
+        gi.ci_slices_used -= ci.compute_slices;
+        gi.cis.retain(|c| *c != id);
+        self.refresh_siblings(ci.gi);
+        Ok(())
+    }
+
+    /// Destroy a GPU instance. Fails if compute instances remain.
+    pub fn destroy_gi(&mut self, id: GiId) -> crate::Result<()> {
+        let idx = self
+            .gis
+            .iter()
+            .position(|g| g.id == id)
+            .ok_or_else(|| anyhow!("no such GPU instance {id:?}"))?;
+        if !self.gis[idx].cis.is_empty() {
+            bail!("GPU instance still has compute instances");
+        }
+        let gi = self.gis.remove(idx);
+        self.compute_slices_used -= gi.profile.compute_slices;
+        self.memory_slices_used -= gi.profile.memory_slices;
+        Ok(())
+    }
+
+    /// Total SMs exposed by all CIs (for waste accounting).
+    pub fn exposed_sms(&self) -> u32 {
+        self.cis.iter().map(|c| c.sms).sum()
+    }
+
+    /// Total memory exposed by all GIs (GiB).
+    pub fn exposed_mem_gib(&self) -> f64 {
+        self.gis.iter().map(|g| g.profile.mem_gib).sum()
+    }
+
+    fn refresh_siblings(&mut self, gi: GiId) {
+        let n = self.cis.iter().filter(|c| c.gi == gi).count() as u32;
+        for c in self.cis.iter_mut().filter(|c| c.gi == gi) {
+            c.siblings = n.saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::ProfileId::*;
+
+    fn mgr() -> MigManager {
+        MigManager::new(GpuSpec::gh_h100_96gb())
+    }
+
+    #[test]
+    fn seven_1g_instances_fit_and_eighth_fails() {
+        let mut m = mgr();
+        for _ in 0..7 {
+            m.create_full(P1g12gb).unwrap();
+        }
+        assert_eq!(m.cis().len(), 7);
+        assert_eq!(m.exposed_sms(), 112); // the §III-C headline
+        assert!(m.create_full(P1g12gb).is_err());
+    }
+
+    #[test]
+    fn memory_slices_limit_1g24() {
+        let mut m = mgr();
+        for _ in 0..4 {
+            m.create_full(P1g24gb).unwrap();
+        }
+        // 4×2 = 8 memory slices used; a fifth must fail even though
+        // compute slices remain.
+        assert_eq!(m.memory_slices_free(), 0);
+        assert!(m.compute_slices_free() > 0);
+        assert!(m.create_full(P1g24gb).is_err());
+    }
+
+    #[test]
+    fn mixed_4g_plus_3g_fits() {
+        let mut m = mgr();
+        m.create_full(P4g48gb).unwrap();
+        m.create_full(P3g48gb).unwrap();
+        assert_eq!(m.compute_slices_free(), 0);
+        assert_eq!(m.memory_slices_free(), 0);
+    }
+
+    #[test]
+    fn ci_subdivision_7g_into_7x1c() {
+        // The paper's MIG 7×1c.7g configuration (Figs. 5/6): one 7g GI,
+        // seven 1-slice CIs sharing memory.
+        let mut m = mgr();
+        let gi = m.create_gi(P7g96gb).unwrap();
+        let mut ids = Vec::new();
+        for _ in 0..7 {
+            ids.push(m.create_ci(gi, 1).unwrap());
+        }
+        assert!(m.create_ci(gi, 1).is_err(), "8th CI must not fit");
+        for id in &ids {
+            let ci = m.ci(*id).unwrap();
+            assert_eq!(ci.sms, 18); // floor(132/7)
+            assert_eq!(ci.mem_gib, 94.5); // shared capacity
+            assert_eq!(ci.siblings, 6);
+        }
+    }
+
+    #[test]
+    fn busy_ci_blocks_reconfiguration() {
+        let mut m = mgr();
+        let ci = m.create_full(P2g24gb).unwrap();
+        m.ci_mut(ci).unwrap().busy = true;
+        assert!(m.destroy_ci(ci).is_err());
+        m.ci_mut(ci).unwrap().busy = false;
+        m.destroy_ci(ci).unwrap();
+    }
+
+    #[test]
+    fn destroy_gi_requires_no_cis() {
+        let mut m = mgr();
+        let gi = m.create_gi(P2g24gb).unwrap();
+        let ci = m.create_ci(gi, 2).unwrap();
+        assert!(m.destroy_gi(gi).is_err());
+        m.destroy_ci(ci).unwrap();
+        m.destroy_gi(gi).unwrap();
+        assert_eq!(m.compute_slices_free(), TOTAL_COMPUTE_SLICES);
+        assert_eq!(m.memory_slices_free(), TOTAL_MEMORY_SLICES);
+    }
+
+    #[test]
+    fn slice_accounting_invariant() {
+        let mut m = mgr();
+        let a = m.create_full(P1g12gb).unwrap();
+        let _b = m.create_full(P2g24gb).unwrap();
+        let used: u32 = m.gis().iter().map(|g| g.profile.compute_slices).sum();
+        assert_eq!(used, TOTAL_COMPUTE_SLICES - m.compute_slices_free());
+        m.destroy_ci(a).unwrap();
+        let gi_a = m.gis()[0].id;
+        m.destroy_gi(gi_a).unwrap();
+        let used: u32 = m.gis().iter().map(|g| g.profile.compute_slices).sum();
+        assert_eq!(used, TOTAL_COMPUTE_SLICES - m.compute_slices_free());
+    }
+}

@@ -1,0 +1,15 @@
+//! Multi-Instance GPU model (§II-B3, Table II).
+//!
+//! - `profile`: the GPU-instance profile table for the GH H100-96GB, with
+//!   the paper's *measured* usable/wasted resources.
+//! - `naming`: the `[Nc.]Mg.XXgb` profile-name grammar.
+//! - `manager`: GPU-instance / compute-instance lifecycle with slice
+//!   placement constraints (8 memory slices, 7 compute slices, max 7 GIs).
+
+pub mod manager;
+pub mod naming;
+pub mod profile;
+
+pub use manager::{ComputeInstance, GpuInstance, MigManager};
+pub use naming::InstanceName;
+pub use profile::{GiProfile, ProfileId};

@@ -1,0 +1,129 @@
+//! MIG instance-name grammar (§II-B3).
+//!
+//! GPU instances are `"<G>g.<M>gb"` (e.g. `3g.48gb`). Compute instances
+//! prefix the compute-slice count: `"<C>c.<G>g.<M>gb"` (e.g. `2c.3g.48gb`);
+//! when the CI spans all of the GI's compute slices the prefix is omitted
+//! (`3c.3g.48gb` ≡ `3g.48gb`).
+
+use std::fmt;
+
+/// A parsed instance name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct InstanceName {
+    /// Compute slices of the compute instance (defaults to `gi_slices`).
+    pub ci_slices: u32,
+    /// Compute slices of the underlying GPU instance.
+    pub gi_slices: u32,
+    /// Memory capacity label in GB (the marketing number: 12, 24, 48, 96).
+    pub mem_gb: u32,
+}
+
+impl InstanceName {
+    /// Parse `"2c.3g.48gb"`, `"3g.48gb"` etc.
+    pub fn parse(s: &str) -> Result<InstanceName, String> {
+        let parts: Vec<&str> = s.split('.').collect();
+        let (ci_part, gi_part, mem_part) = match parts.as_slice() {
+            [g, m] => (None, *g, *m),
+            [c, g, m] => (Some(*c), *g, *m),
+            _ => return Err(format!("bad instance name '{s}'")),
+        };
+        let gi_slices = parse_suffixed(gi_part, 'g').ok_or(format!("bad GI part in '{s}'"))?;
+        let mem_gb = mem_part
+            .strip_suffix("gb")
+            .and_then(|n| n.parse().ok())
+            .ok_or(format!("bad memory part in '{s}'"))?;
+        let ci_slices = match ci_part {
+            None => gi_slices,
+            Some(c) => parse_suffixed(c, 'c').ok_or(format!("bad CI part in '{s}'"))?,
+        };
+        if ci_slices == 0 || gi_slices == 0 {
+            return Err(format!("zero slices in '{s}'"));
+        }
+        if ci_slices > gi_slices {
+            return Err(format!(
+                "compute instance ({ci_slices}c) larger than GPU instance ({gi_slices}g) in '{s}'"
+            ));
+        }
+        Ok(InstanceName {
+            ci_slices,
+            gi_slices,
+            mem_gb,
+        })
+    }
+
+    /// Canonical form: omit the CI prefix when it covers the whole GI.
+    pub fn canonical(&self) -> String {
+        if self.ci_slices == self.gi_slices {
+            format!("{}g.{}gb", self.gi_slices, self.mem_gb)
+        } else {
+            format!("{}c.{}g.{}gb", self.ci_slices, self.gi_slices, self.mem_gb)
+        }
+    }
+
+    /// Whether this names a full-GI compute instance.
+    pub fn is_full_gi(&self) -> bool {
+        self.ci_slices == self.gi_slices
+    }
+}
+
+fn parse_suffixed(s: &str, suffix: char) -> Option<u32> {
+    s.strip_suffix(suffix).and_then(|n| n.parse().ok())
+}
+
+impl fmt::Display for InstanceName {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.canonical())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_gi_names() {
+        let n = InstanceName::parse("3g.48gb").unwrap();
+        assert_eq!((n.ci_slices, n.gi_slices, n.mem_gb), (3, 3, 48));
+        assert!(n.is_full_gi());
+    }
+
+    #[test]
+    fn parses_ci_names() {
+        let n = InstanceName::parse("2c.3g.48gb").unwrap();
+        assert_eq!((n.ci_slices, n.gi_slices, n.mem_gb), (2, 3, 48));
+        assert!(!n.is_full_gi());
+    }
+
+    #[test]
+    fn canonical_omits_full_prefix() {
+        // Paper: "3c.3g.48gb is abbreviated 3g.48gb".
+        let n = InstanceName::parse("3c.3g.48gb").unwrap();
+        assert_eq!(n.canonical(), "3g.48gb");
+        let partial = InstanceName::parse("1c.7g.96gb").unwrap();
+        assert_eq!(partial.canonical(), "1c.7g.96gb");
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        for bad in [
+            "",
+            "48gb",
+            "3g",
+            "g.48gb",
+            "3x.48gb",
+            "4c.3g.48gb", // CI larger than GI
+            "0g.12gb",
+            "3g.48gb.extra.parts",
+        ] {
+            assert!(InstanceName::parse(bad).is_err(), "should reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        for s in ["1g.12gb", "2g.24gb", "1c.2g.24gb", "7g.96gb", "1c.7g.96gb"] {
+            let n = InstanceName::parse(s).unwrap();
+            assert_eq!(n.canonical(), s);
+        }
+    }
+}

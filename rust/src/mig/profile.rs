@@ -1,0 +1,248 @@
+//! MIG GPU-instance profiles for the GH H100-96GB testbed (Table II).
+//!
+//! Each profile row carries the *measured* values from the paper: usable
+//! SM count (via the §III-C probe), usable memory, slice shares, copy
+//! engines, and per-instance memory bandwidth. The wasted-resource columns
+//! are GPU-wide best case, as reported.
+
+/// Identifier for the six GH H100-96GB GPU-instance profiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ProfileId {
+    P1g12gb,
+    P1g24gb,
+    P2g24gb,
+    P3g48gb,
+    P4g48gb,
+    P7g96gb,
+}
+
+pub const ALL_PROFILES: [ProfileId; 6] = [
+    ProfileId::P1g12gb,
+    ProfileId::P1g24gb,
+    ProfileId::P2g24gb,
+    ProfileId::P3g48gb,
+    ProfileId::P4g48gb,
+    ProfileId::P7g96gb,
+];
+
+/// A GPU-instance profile: the unit of MIG provisioning.
+#[derive(Debug, Clone)]
+pub struct GiProfile {
+    pub id: ProfileId,
+    pub name: &'static str,
+    /// Compute slices ("Ng").
+    pub compute_slices: u32,
+    /// Memory slices (x/8 of capacity, L2 and bandwidth).
+    pub memory_slices: u32,
+    /// Maximum concurrent instances of this profile.
+    pub max_instances: u32,
+    /// Measured usable SMs (§III-C probe; deviates from slices×(132/7)).
+    pub sms: u32,
+    /// Usable memory per instance (GiB).
+    pub mem_gib: f64,
+    /// Copy engines owned by the instance.
+    pub copy_engines: u32,
+    /// Per-instance HBM bandwidth allocation (GiB/s), Table II.
+    pub mem_bw_gibs: f64,
+    /// Paper-reported GPU-wide best-case wasted SMs (%). The paper's
+    /// best-case packing accounting is not derivable from the public
+    /// placement rules alone, so we carry the reported value and also
+    /// compute the naive max-instances waste (`wasted_sm_naive`).
+    pub wasted_sm_paper_pct: &'static str,
+    /// Paper-reported GPU-wide best-case wasted memory (GiB).
+    pub wasted_mem_paper_gib: f64,
+}
+
+/// Total compute slices on the device (the 7-GI limit, §III-C).
+pub const TOTAL_COMPUTE_SLICES: u32 = 7;
+/// Total memory slices on the device.
+pub const TOTAL_MEMORY_SLICES: u32 = 8;
+
+impl GiProfile {
+    pub fn get(id: ProfileId) -> GiProfile {
+        use ProfileId::*;
+        match id {
+            P1g12gb => GiProfile {
+                id,
+                name: "1g.12gb",
+                compute_slices: 1,
+                memory_slices: 1,
+                max_instances: 7,
+                sms: 16,
+                mem_gib: 11.0,
+                copy_engines: 1,
+                mem_bw_gibs: 406.0,
+                wasted_sm_paper_pct: "15%",
+                wasted_mem_paper_gib: 17.5,
+            },
+            P1g24gb => GiProfile {
+                id,
+                name: "1g.24gb",
+                compute_slices: 1,
+                memory_slices: 2,
+                max_instances: 4,
+                sms: 26,
+                mem_gib: 23.0,
+                copy_engines: 2,
+                mem_bw_gibs: 812.0,
+                wasted_sm_paper_pct: "21%",
+                wasted_mem_paper_gib: 2.5,
+            },
+            P2g24gb => GiProfile {
+                id,
+                name: "2g.24gb",
+                compute_slices: 2,
+                memory_slices: 2,
+                max_instances: 3,
+                sms: 32,
+                mem_gib: 23.0,
+                copy_engines: 2,
+                mem_bw_gibs: 812.0,
+                wasted_sm_paper_pct: "3%",
+                wasted_mem_paper_gib: 2.5,
+            },
+            P3g48gb => GiProfile {
+                id,
+                name: "3g.48gb",
+                compute_slices: 3,
+                memory_slices: 4,
+                max_instances: 2,
+                sms: 60,
+                mem_gib: 46.5,
+                copy_engines: 3,
+                mem_bw_gibs: 1611.0,
+                wasted_sm_paper_pct: "6/9%",
+                wasted_mem_paper_gib: 1.5,
+            },
+            P4g48gb => GiProfile {
+                id,
+                name: "4g.48gb",
+                compute_slices: 4,
+                memory_slices: 4,
+                max_instances: 1,
+                sms: 64,
+                mem_gib: 46.5,
+                copy_engines: 4,
+                mem_bw_gibs: 1635.0,
+                wasted_sm_paper_pct: "3%",
+                wasted_mem_paper_gib: 1.5,
+            },
+            P7g96gb => GiProfile {
+                id,
+                name: "7g.96gb",
+                compute_slices: 7,
+                memory_slices: 8,
+                max_instances: 1,
+                sms: 132,
+                mem_gib: 94.5,
+                copy_engines: 8,
+                mem_bw_gibs: 3175.0,
+                wasted_sm_paper_pct: "0%",
+                wasted_mem_paper_gib: 0.0,
+            },
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<GiProfile> {
+        ALL_PROFILES
+            .iter()
+            .map(|&id| GiProfile::get(id))
+            .find(|p| p.name == name)
+    }
+
+    pub fn all() -> Vec<GiProfile> {
+        ALL_PROFILES.iter().map(|&id| GiProfile::get(id)).collect()
+    }
+
+    /// Naive GPU-wide SM waste when packing max_instances of this profile:
+    /// `1 - max_inst·sms / total_sms` (this reproduces the 15% headline
+    /// for 7×1g.12gb).
+    pub fn wasted_sm_naive(&self, total_sms: u32) -> f64 {
+        1.0 - (self.max_instances * self.sms) as f64 / total_sms as f64
+    }
+
+    /// Naive GPU-wide memory waste when packing max_instances: usable
+    /// total minus what instances expose (GiB).
+    pub fn wasted_mem_naive(&self, usable_total_gib: f64) -> f64 {
+        usable_total_gib - self.max_instances as f64 * self.mem_gib
+    }
+
+    /// Memory-slice fraction string for the table ("x/8").
+    pub fn mem_fraction_label(&self) -> String {
+        format!("{}/8", self.memory_slices)
+    }
+
+    pub fn mem_bytes(&self) -> f64 {
+        crate::util::units::gib(self.mem_gib)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_sm_counts() {
+        let want = [16u32, 26, 32, 60, 64, 132];
+        for (id, w) in ALL_PROFILES.iter().zip(want) {
+            assert_eq!(GiProfile::get(*id).sms, w);
+        }
+    }
+
+    #[test]
+    fn table2_memory_and_bandwidth() {
+        let mems = [11.0, 23.0, 23.0, 46.5, 46.5, 94.5];
+        let bws = [406.0, 812.0, 812.0, 1611.0, 1635.0, 3175.0];
+        for ((id, m), b) in ALL_PROFILES.iter().zip(mems).zip(bws) {
+            let p = GiProfile::get(*id);
+            assert_eq!(p.mem_gib, m, "{}", p.name);
+            assert_eq!(p.mem_bw_gibs, b, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn headline_15pct_sm_waste() {
+        // §III-C: 7×16 = 112 of 132 SMs -> 15% cannot be used.
+        let p = GiProfile::get(ProfileId::P1g12gb);
+        let waste = p.wasted_sm_naive(132);
+        assert!((waste - 0.1515).abs() < 0.001, "waste={waste}");
+    }
+
+    #[test]
+    fn memory_waste_examples() {
+        // §III-C: seven 1g.12gb instances leave 17.5 GiB unused.
+        let p = GiProfile::get(ProfileId::P1g12gb);
+        assert!((p.wasted_mem_naive(94.5) - 17.5).abs() < 1e-9);
+        let p4 = GiProfile::get(ProfileId::P1g24gb);
+        assert!((p4.wasted_mem_naive(94.5) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_proportional_to_memory_slices() {
+        // Table IVb observation: local bandwidth fraction == memory-slice
+        // fraction (1g=1/8 of ~3250, 2g=2/8, ...), within rounding.
+        for p in GiProfile::all() {
+            let frac = p.mem_bw_gibs / 3175.0;
+            let slice_frac = p.memory_slices as f64 / 8.0;
+            assert!(
+                (frac - slice_frac).abs() < 0.03,
+                "{}: bw frac {frac} vs slice frac {slice_frac}",
+                p.name
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GiProfile::by_name("3g.48gb").unwrap().sms, 60);
+        assert!(GiProfile::by_name("9g.1gb").is_none());
+    }
+
+    #[test]
+    fn max_instances_respect_slice_budget() {
+        for p in GiProfile::all() {
+            assert!(p.max_instances * p.compute_slices <= TOTAL_COMPUTE_SLICES);
+            assert!(p.max_instances * p.memory_slices <= TOTAL_MEMORY_SLICES);
+        }
+    }
+}

@@ -1,0 +1,419 @@
+//! NVLink-C2C memory offloading (§VI-A).
+//!
+//! When a workload's footprint slightly exceeds a MIG instance's memory,
+//! the paper offloads part of the data to CPU memory and accesses it over
+//! the cache-coherent C2C link instead of provisioning the next (2x)
+//! profile.
+//!
+//! Two pieces:
+//! - `OffloadPlan`: the cost model — how much data spills, what fraction
+//!   of the kernel's memory traffic moves to C2C (cold-first placement,
+//!   mirroring cudaMallocManaged/Qiskit-swap behaviour), applied as a
+//!   rewrite of the `AppModel` kernels.
+//! - `SpillAllocator`: a page-granular allocator with device-capacity
+//!   enforcement and cold-first spilling, used by the runtime examples.
+
+use crate::workload::{AppModel, KernelSpec};
+use anyhow::bail;
+use std::collections::BTreeMap;
+
+/// Fraction of an app's HBM traffic attributable to its *cold* data.
+/// Hot data dominates traffic; spilling cold pages first is what makes
+/// offloading cheap for bursty apps like FAISS.
+const COLD_TRAFFIC_SHARE: f64 = 0.10;
+
+/// Copy-engine bandwidth used by swap-mode offloading (GiB/s): a single
+/// CE moving chunks bidirectionally (Table IVa, 1g row).
+const SWAP_CE_BW_GIBS: f64 = 41.7;
+
+/// The offload decision for one app on one instance size.
+#[derive(Debug, Clone)]
+pub struct OffloadPlan {
+    /// Data left in GPU memory (GiB).
+    pub resident_gib: f64,
+    /// Data spilled to CPU memory (GiB).
+    pub spilled_gib: f64,
+    /// Fraction of memory traffic redirected over C2C (direct mode).
+    pub c2c_traffic_frac: f64,
+    /// Swap mode only: GPU-idle time per iteration spent moving chunks
+    /// over a copy engine (Qiskit's native strategy, §VI-A).
+    pub swap_gap_s: f64,
+}
+
+impl OffloadPlan {
+    /// Plan offloading of `app` onto an instance with `capacity_gib`
+    /// usable memory (after context overhead). Fails if even full
+    /// offloading of spillable data cannot make the resident set fit
+    /// (the model only spills data, not activations/workspace: at least
+    /// 25% of the footprint must stay resident).
+    pub fn plan(app: &AppModel, capacity_gib: f64) -> crate::Result<OffloadPlan> {
+        let f = app.footprint_gib;
+        if f <= capacity_gib {
+            return Ok(OffloadPlan {
+                resident_gib: f,
+                spilled_gib: 0.0,
+                c2c_traffic_frac: 0.0,
+                swap_gap_s: 0.0,
+            });
+        }
+        let overflow = f - capacity_gib;
+        let min_resident = f * 0.25;
+        if capacity_gib < min_resident {
+            bail!(
+                "{}: footprint {:.1} GiB cannot be offloaded into {:.1} GiB (needs ≥{:.1} resident)",
+                app.name,
+                f,
+                capacity_gib,
+                min_resident
+            );
+        }
+        // Swap mode (Qiskit): chunked CE transfers between kernels; the
+        // GPU idles during the swap instead of stalling on remote loads.
+        if let Some(swap_frac) = app.swap_frac {
+            return Ok(OffloadPlan {
+                resident_gib: capacity_gib,
+                spilled_gib: overflow,
+                c2c_traffic_frac: 0.0,
+                swap_gap_s: overflow * swap_frac / SWAP_CE_BW_GIBS,
+            });
+        }
+        // Direct mode: cold-first placement — spill cold pages, then hot.
+        let cold_gib = f * app.cold_frac;
+        let hot_gib = f - cold_gib;
+        let spill_cold = overflow.min(cold_gib);
+        let spill_hot = (overflow - spill_cold).max(0.0);
+        let mut frac = 0.0;
+        if cold_gib > 0.0 {
+            frac += COLD_TRAFFIC_SHARE * (spill_cold / cold_gib);
+        }
+        if hot_gib > 0.0 {
+            let hot_share = if app.cold_frac > 0.0 {
+                1.0 - COLD_TRAFFIC_SHARE
+            } else {
+                1.0
+            };
+            frac += hot_share * (spill_hot / hot_gib);
+        }
+        Ok(OffloadPlan {
+            resident_gib: capacity_gib,
+            spilled_gib: overflow,
+            c2c_traffic_frac: frac.clamp(0.0, 1.0),
+            swap_gap_s: 0.0,
+        })
+    }
+
+    /// Rewrite the app's kernels: move `c2c_traffic_frac` of HBM traffic
+    /// onto the C2C link. Kernel geometry is unchanged — the same SMs now
+    /// stall on remote cachelines instead (direct-access path, §III-D).
+    pub fn apply(&self, app: &AppModel) -> AppModel {
+        if self.spilled_gib == 0.0 {
+            return app.clone();
+        }
+        let mut out = app.clone();
+        for ph in &mut out.phases {
+            ph.cpu_s += self.swap_gap_s;
+            for k in &mut ph.kernels {
+                let moved = k.hbm_bytes * self.c2c_traffic_frac;
+                k.hbm_bytes -= moved;
+                k.c2c_bytes += moved;
+            }
+        }
+        out
+    }
+
+    /// Effective footprint on the instance after offloading.
+    pub fn effective_footprint_gib(&self) -> f64 {
+        self.resident_gib
+    }
+}
+
+/// Rewrites a kernel directly (used by property tests).
+pub fn offload_kernel(k: &KernelSpec, frac: f64) -> KernelSpec {
+    let mut out = k.clone();
+    let moved = out.hbm_bytes * frac.clamp(0.0, 1.0);
+    out.hbm_bytes -= moved;
+    out.c2c_bytes += moved;
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Spill allocator
+// ---------------------------------------------------------------------------
+
+/// Where an allocation currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    Device,
+    Host,
+}
+
+#[derive(Debug, Clone)]
+struct Alloc {
+    bytes: u64,
+    placement: Placement,
+    /// Logical access clock for cold-first eviction.
+    last_touch: u64,
+    /// Pinned allocations never spill (workspace/activations).
+    pinned: bool,
+}
+
+/// Handle to an allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AllocId(u64);
+
+/// A device allocator that transparently spills the coldest unpinned
+/// allocations to host memory when capacity is exceeded — the
+/// `cudaMallocManaged`-style mechanism of §VI-A.
+#[derive(Debug)]
+pub struct SpillAllocator {
+    capacity: u64,
+    device_used: u64,
+    host_used: u64,
+    clock: u64,
+    next_id: u64,
+    allocs: BTreeMap<AllocId, Alloc>,
+    /// Counters for tests/diagnostics.
+    pub spill_events: u64,
+    pub spilled_bytes_total: u64,
+}
+
+impl SpillAllocator {
+    pub fn new(capacity_bytes: u64) -> SpillAllocator {
+        SpillAllocator {
+            capacity: capacity_bytes,
+            device_used: 0,
+            host_used: 0,
+            clock: 0,
+            next_id: 0,
+            allocs: BTreeMap::new(),
+            spill_events: 0,
+            spilled_bytes_total: 0,
+        }
+    }
+
+    pub fn device_used(&self) -> u64 {
+        self.device_used
+    }
+
+    pub fn host_used(&self) -> u64 {
+        self.host_used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Allocate on device, spilling cold data if needed. `pinned`
+    /// allocations must fit on device or the call fails.
+    pub fn alloc(&mut self, bytes: u64, pinned: bool) -> crate::Result<AllocId> {
+        if bytes > self.capacity {
+            bail!("allocation of {bytes} B exceeds device capacity {}", self.capacity);
+        }
+        self.make_room(bytes, pinned)?;
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        self.clock += 1;
+        self.allocs.insert(
+            id,
+            Alloc {
+                bytes,
+                placement: Placement::Device,
+                last_touch: self.clock,
+                pinned,
+            },
+        );
+        self.device_used += bytes;
+        Ok(id)
+    }
+
+    fn make_room(&mut self, bytes: u64, for_pinned: bool) -> crate::Result<()> {
+        while self.device_used + bytes > self.capacity {
+            // Evict the coldest unpinned device-resident allocation.
+            let victim = self
+                .allocs
+                .iter()
+                .filter(|(_, a)| a.placement == Placement::Device && !a.pinned)
+                .min_by_key(|(_, a)| a.last_touch)
+                .map(|(id, _)| *id);
+            match victim {
+                Some(id) => {
+                    let a = self.allocs.get_mut(&id).unwrap();
+                    a.placement = Placement::Host;
+                    self.device_used -= a.bytes;
+                    self.host_used += a.bytes;
+                    self.spill_events += 1;
+                    self.spilled_bytes_total += a.bytes;
+                }
+                None => {
+                    if for_pinned {
+                        bail!("cannot make room for pinned allocation of {bytes} B");
+                    }
+                    bail!("device full of pinned allocations; cannot spill");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Record an access; hot data migrates back when there is room.
+    pub fn touch(&mut self, id: AllocId) -> crate::Result<Placement> {
+        self.clock += 1;
+        let clock = self.clock;
+        let (bytes, placement) = {
+            let a = self
+                .allocs
+                .get_mut(&id)
+                .ok_or_else(|| anyhow::anyhow!("touch of unknown allocation"))?;
+            a.last_touch = clock;
+            (a.bytes, a.placement)
+        };
+        if placement == Placement::Host && self.device_used + bytes <= self.capacity {
+            let a = self.allocs.get_mut(&id).unwrap();
+            a.placement = Placement::Device;
+            self.host_used -= bytes;
+            self.device_used += bytes;
+            return Ok(Placement::Device);
+        }
+        Ok(placement)
+    }
+
+    pub fn placement(&self, id: AllocId) -> Option<Placement> {
+        self.allocs.get(&id).map(|a| a.placement)
+    }
+
+    pub fn free(&mut self, id: AllocId) -> crate::Result<()> {
+        let a = self
+            .allocs
+            .remove(&id)
+            .ok_or_else(|| anyhow::anyhow!("double free"))?;
+        match a.placement {
+            Placement::Device => self.device_used -= a.bytes,
+            Placement::Host => self.host_used -= a.bytes,
+        }
+        Ok(())
+    }
+
+    /// Invariant check for property tests.
+    pub fn check_invariants(&self) {
+        let dev: u64 = self
+            .allocs
+            .values()
+            .filter(|a| a.placement == Placement::Device)
+            .map(|a| a.bytes)
+            .sum();
+        let host: u64 = self
+            .allocs
+            .values()
+            .filter(|a| a.placement == Placement::Host)
+            .map(|a| a.bytes)
+            .sum();
+        assert_eq!(dev, self.device_used, "device accounting drift");
+        assert_eq!(host, self.host_used, "host accounting drift");
+        assert!(self.device_used <= self.capacity, "over capacity");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::apps::{self, AppId};
+
+    #[test]
+    fn no_offload_when_it_fits() {
+        let app = apps::model(AppId::Qiskit30);
+        let p = OffloadPlan::plan(&app, 11.0).unwrap();
+        assert_eq!(p.spilled_gib, 0.0);
+        assert_eq!(p.c2c_traffic_frac, 0.0);
+    }
+
+    #[test]
+    fn faiss_large_offload_is_cheap() {
+        // §VI-C: FAISS offloads a small, cold fraction -> tiny penalty.
+        let app = apps::model(AppId::FaissLarge);
+        let p = OffloadPlan::plan(&app, 10.94).unwrap();
+        assert!(p.spilled_gib > 2.9 && p.spilled_gib < 3.2, "{}", p.spilled_gib);
+        assert!(
+            p.c2c_traffic_frac < 0.05,
+            "cold-first spill should be cheap: {}",
+            p.c2c_traffic_frac
+        );
+    }
+
+    #[test]
+    fn llama_fp16_offload_is_expensive() {
+        // Weights are all hot: the traffic fraction ~ overflow/footprint.
+        let app = apps::model(AppId::Llama3Fp16);
+        let p = OffloadPlan::plan(&app, 10.94).unwrap();
+        let expect = (16.5 - 10.94) / 16.5;
+        assert!((p.c2c_traffic_frac - expect).abs() < 0.01);
+    }
+
+    #[test]
+    fn apply_conserves_traffic() {
+        let app = apps::model(AppId::Llama3Fp16);
+        let p = OffloadPlan::plan(&app, 10.94).unwrap();
+        let off = p.apply(&app);
+        let orig = &app.phases[0].kernels[0];
+        let new = &off.phases[0].kernels[0];
+        let before = orig.hbm_bytes + orig.c2c_bytes;
+        let after = new.hbm_bytes + new.c2c_bytes;
+        assert!((before - after).abs() < 1.0);
+        assert!(new.c2c_bytes > 0.0);
+    }
+
+    #[test]
+    fn refuses_hopeless_offload() {
+        let app = apps::model(AppId::Llama3Fp16); // 16.5 GiB
+        assert!(OffloadPlan::plan(&app, 3.0).is_err());
+    }
+
+    #[test]
+    fn allocator_spills_cold_first() {
+        let mut a = SpillAllocator::new(100);
+        let cold = a.alloc(40, false).unwrap();
+        let warm = a.alloc(40, false).unwrap();
+        a.touch(warm).unwrap();
+        // 30 more bytes force one eviction: `cold` is the victim.
+        let hot = a.alloc(30, false).unwrap();
+        assert_eq!(a.placement(cold), Some(Placement::Host));
+        assert_eq!(a.placement(warm), Some(Placement::Device));
+        assert_eq!(a.placement(hot), Some(Placement::Device));
+        a.check_invariants();
+    }
+
+    #[test]
+    fn pinned_never_spills() {
+        let mut a = SpillAllocator::new(100);
+        let pinned = a.alloc(80, true).unwrap();
+        let data = a.alloc(20, false).unwrap();
+        // Pinned + no spillable room: next pinned alloc fails.
+        assert!(a.alloc(30, true).is_err());
+        // Unpinned alloc spills `data`.
+        let more = a.alloc(20, false).unwrap();
+        assert_eq!(a.placement(pinned), Some(Placement::Device));
+        assert_eq!(a.placement(data), Some(Placement::Host));
+        assert_eq!(a.placement(more), Some(Placement::Device));
+        a.check_invariants();
+    }
+
+    #[test]
+    fn touch_migrates_back() {
+        let mut a = SpillAllocator::new(100);
+        let x = a.alloc(60, false).unwrap();
+        let y = a.alloc(60, false).unwrap(); // spills x
+        assert_eq!(a.placement(x), Some(Placement::Host));
+        a.free(y).unwrap();
+        assert_eq!(a.touch(x).unwrap(), Placement::Device);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn free_and_errors() {
+        let mut a = SpillAllocator::new(10);
+        assert!(a.alloc(11, false).is_err());
+        let x = a.alloc(10, false).unwrap();
+        a.free(x).unwrap();
+        assert!(a.free(x).is_err(), "double free must fail");
+        assert_eq!(a.device_used(), 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! The paper's reward model (§VI-B):
+//!
+//! ```text
+//! W_SM  = (N_SM / N_SM,GPU) · (1 − Occ)
+//! W_MEM = (M_instance − M_app) / M_GPU
+//! R     = (P / P_GPU) / (α + W_MEM + W_SM)
+//! ```
+//!
+//! α = 0 prioritizes reducing resource underutilization; α → 1 shifts to a
+//! performance-first policy. Both waste terms are in [0, 1], so α is
+//! swept over the same range (the paper uses {0, 0.1, 0.5, 1}).
+
+use crate::util::table::{fnum, Table};
+
+/// Measured quantities for one (app, configuration) pair.
+#[derive(Debug, Clone)]
+pub struct ConfigEval {
+    /// Configuration label, e.g. "MIG 1g.12gb + offloading".
+    pub config: String,
+    /// Application performance on this configuration (any unit, higher is
+    /// better — inverse runtime or tokens/s).
+    pub perf: f64,
+    /// Average GPU-level occupancy achieved on the instance.
+    pub occupancy: f64,
+    /// SMs of the instance.
+    pub sms: u32,
+    /// Instance memory capacity (GiB).
+    pub mem_instance_gib: f64,
+    /// Peak memory used by the app on this instance (GiB) — after
+    /// offloading this is the *resident* footprint.
+    pub mem_app_gib: f64,
+}
+
+/// GPU-level constants for normalization.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuTotals {
+    pub sms: u32,
+    pub mem_gib: f64,
+    /// Performance of the app on the full GPU (P_GPU).
+    pub perf_full_gpu: f64,
+}
+
+/// The reward-model outputs for one configuration.
+#[derive(Debug, Clone)]
+pub struct Reward {
+    pub config: String,
+    pub rel_perf: f64,
+    pub w_sm: f64,
+    pub w_mem: f64,
+    pub reward: f64,
+}
+
+/// Compute W_SM, W_MEM and R for one configuration.
+pub fn reward(eval: &ConfigEval, totals: &GpuTotals, alpha: f64) -> Reward {
+    assert!(alpha >= 0.0, "alpha must be non-negative");
+    assert!(totals.perf_full_gpu > 0.0, "P_GPU must be positive");
+    let w_sm = (eval.sms as f64 / totals.sms as f64) * (1.0 - eval.occupancy.clamp(0.0, 1.0));
+    let w_mem = ((eval.mem_instance_gib - eval.mem_app_gib) / totals.mem_gib).max(0.0);
+    let rel_perf = eval.perf / totals.perf_full_gpu;
+    let denom = alpha + w_sm + w_mem;
+    // α = 0 with zero waste would divide by zero; the paper's terms never
+    // both vanish for real workloads, but guard for robustness.
+    let reward = rel_perf / denom.max(1e-6);
+    Reward {
+        config: eval.config.clone(),
+        rel_perf,
+        w_sm,
+        w_mem,
+        reward,
+    }
+}
+
+/// Evaluate all configurations at one α and return them with the argmax
+/// flagged first in the returned index.
+pub fn select_best(evals: &[ConfigEval], totals: &GpuTotals, alpha: f64) -> (usize, Vec<Reward>) {
+    assert!(!evals.is_empty());
+    let rewards: Vec<Reward> = evals.iter().map(|e| reward(e, totals, alpha)).collect();
+    let best = rewards
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.reward.partial_cmp(&b.1.reward).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    (best, rewards)
+}
+
+/// Render a reward sweep as a table (one row per config, one column per α).
+pub fn sweep_table(
+    app: &str,
+    evals: &[ConfigEval],
+    totals: &GpuTotals,
+    alphas: &[f64],
+) -> Table {
+    let mut header: Vec<String> = vec!["config".to_string(), "P/P_GPU".into(), "W_SM".into(), "W_MEM".into()];
+    for a in alphas {
+        header.push(format!("R(α={a})"));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&format!("Reward sweep — {app}")).header(&header_refs);
+    let best_per_alpha: Vec<usize> = alphas
+        .iter()
+        .map(|&a| select_best(evals, totals, a).0)
+        .collect();
+    for (i, e) in evals.iter().enumerate() {
+        let r0 = reward(e, totals, alphas[0]);
+        let mut row = vec![
+            e.config.clone(),
+            fnum(r0.rel_perf, 3),
+            fnum(r0.w_sm, 3),
+            fnum(r0.w_mem, 3),
+        ];
+        for (ai, &a) in alphas.iter().enumerate() {
+            let r = reward(e, totals, a);
+            let marker = if best_per_alpha[ai] == i { " *" } else { "" };
+            row.push(format!("{}{}", fnum(r.reward, 3), marker));
+        }
+        t.row(row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn totals() -> GpuTotals {
+        GpuTotals {
+            sms: 132,
+            mem_gib: 94.5,
+            perf_full_gpu: 1.0,
+        }
+    }
+
+    fn eval(config: &str, perf: f64, occ: f64, sms: u32, m_inst: f64, m_app: f64) -> ConfigEval {
+        ConfigEval {
+            config: config.into(),
+            perf,
+            occupancy: occ,
+            sms,
+            mem_instance_gib: m_inst,
+            mem_app_gib: m_app,
+        }
+    }
+
+    #[test]
+    fn formula_matches_paper_definitions() {
+        let e = eval("1g", 0.2, 0.5, 16, 11.0, 8.0);
+        let r = reward(&e, &totals(), 0.1);
+        let w_sm = (16.0 / 132.0) * 0.5;
+        let w_mem = 3.0 / 94.5;
+        assert!((r.w_sm - w_sm).abs() < 1e-12);
+        assert!((r.w_mem - w_mem).abs() < 1e-12);
+        assert!((r.reward - 0.2 / (0.1 + w_sm + w_mem)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_zero_prefers_low_waste() {
+        // Same performance; the config with less waste wins at α=0.
+        let evals = vec![
+            eval("wasteful", 0.5, 0.3, 132, 94.5, 8.0),
+            eval("tight", 0.5, 0.9, 16, 11.0, 10.9),
+        ];
+        let (best, _) = select_best(&evals, &totals(), 0.0);
+        assert_eq!(evals[best].config, "tight");
+    }
+
+    #[test]
+    fn alpha_one_prefers_performance() {
+        // 3x faster but wasteful vs slow-and-tight: α=1 flips the choice.
+        let evals = vec![
+            eval("fast-wasteful", 1.0, 0.4, 132, 94.5, 8.0),
+            eval("slow-tight", 0.15, 0.95, 16, 11.0, 10.9),
+        ];
+        let (best0, _) = select_best(&evals, &totals(), 0.0);
+        let (best1, _) = select_best(&evals, &totals(), 1.0);
+        assert_eq!(evals[best0].config, "slow-tight");
+        assert_eq!(evals[best1].config, "fast-wasteful");
+    }
+
+    #[test]
+    fn w_mem_clamped_nonnegative() {
+        // Offloaded apps can "use" exactly the instance capacity.
+        let e = eval("offload", 0.3, 0.8, 16, 11.0, 11.0);
+        let r = reward(&e, &totals(), 0.0);
+        assert_eq!(r.w_mem, 0.0);
+    }
+
+    #[test]
+    fn sweep_table_marks_winners() {
+        let evals = vec![
+            eval("a", 1.0, 0.4, 132, 94.5, 8.0),
+            eval("b", 0.15, 0.95, 16, 11.0, 10.9),
+        ];
+        let t = sweep_table("demo", &evals, &totals(), &[0.0, 1.0]);
+        let s = t.render();
+        assert!(s.contains('*'), "winner marker missing:\n{s}");
+    }
+}

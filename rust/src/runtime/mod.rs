@@ -1,0 +1,350 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!
+//! Python never runs on this path — the interchange format is HLO *text*
+//! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids). See /opt/xla-example/README.md.
+//!
+//! - `Registry`: parses `artifacts/manifest.json` (name → file, input
+//!   shapes/dtypes, FLOP/byte estimates).
+//! - `Executor`: PJRT CPU client with a compile cache; `execute` runs an
+//!   artifact with caller literals, `smoke_run` feeds synthetic inputs.
+
+use crate::util::json::Json;
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Context};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One input tensor specification.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub shape: Vec<i64>,
+    /// Only "f32" is supported end-to-end (models cast internally).
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<i64>().max(1) as usize
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<InputSpec>,
+    pub description: String,
+    /// Analytic cost estimates recorded by the AOT step (for roofline
+    /// notes and the e2e driver's achieved-rate reporting).
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// The artifact registry loaded from `manifest.json`.
+#[derive(Debug, Default)]
+pub struct Registry {
+    artifacts: Vec<Artifact>,
+    dir: PathBuf,
+}
+
+impl Registry {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Registry> {
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!(
+                "reading {} (run `make artifacts` first)",
+                manifest.display()
+            )
+        })?;
+        Self::from_json_text(&text, dir)
+    }
+
+    /// Parse a manifest document (separated for tests).
+    pub fn from_json_text(text: &str, dir: &Path) -> crate::Result<Registry> {
+        let json = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arr = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = Vec::new();
+        for entry in arr {
+            let name = entry
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = entry
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let mut inputs = Vec::new();
+            for inp in entry
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?
+            {
+                let shape: Vec<i64> = inp
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("input missing shape"))?
+                    .iter()
+                    .map(|d| d.as_f64().unwrap_or(0.0) as i64)
+                    .collect();
+                let dtype = inp
+                    .get("dtype")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("f32")
+                    .to_string();
+                if dtype != "f32" {
+                    bail!("artifact {name}: unsupported input dtype {dtype} (models must take f32)");
+                }
+                inputs.push(InputSpec { shape, dtype });
+            }
+            artifacts.push(Artifact {
+                name,
+                file: dir.join(file),
+                inputs,
+                description: entry
+                    .get("description")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                flops: entry.get("flops").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                bytes: entry.get("bytes").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            });
+        }
+        Ok(Registry {
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// Result of a smoke execution.
+#[derive(Debug, Clone, Copy)]
+pub struct SmokeStats {
+    pub outputs: usize,
+    /// Sum of the first output's elements — a cheap numeric fingerprint.
+    pub checksum: f64,
+    pub elements: usize,
+}
+
+/// PJRT executor with a compile cache.
+pub struct Executor {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    pub fn new() -> crate::Result<Executor> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Executor {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    pub fn compile(&mut self, reg: &Registry, name: &str) -> crate::Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let art = reg
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?;
+        let path = art
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e}", art.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with the given input literals. Outputs are the
+    /// decomposed result tuple (models are lowered with
+    /// `return_tuple=True`).
+    pub fn execute(
+        &mut self,
+        reg: &Registry,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        self.compile(reg, name)?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing result tuple of {name}: {e}"))
+    }
+
+    /// Build deterministic synthetic inputs for an artifact.
+    pub fn synthetic_inputs(art: &Artifact, seed: u64) -> crate::Result<Vec<xla::Literal>> {
+        let mut rng = Rng::new(seed);
+        art.inputs
+            .iter()
+            .map(|spec| {
+                let n = spec.elements();
+                let data: Vec<f32> = (0..n).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+                let lit = xla::Literal::vec1(&data);
+                if spec.shape.is_empty() {
+                    Ok(xla::Literal::scalar(data[0]))
+                } else {
+                    lit.reshape(&spec.shape)
+                        .map_err(|e| anyhow!("reshape {:?}: {e}", spec.shape))
+                }
+            })
+            .collect()
+    }
+
+    /// Execute with synthetic inputs and fingerprint the first output.
+    pub fn smoke_run(&mut self, reg: &Registry, name: &str) -> crate::Result<SmokeStats> {
+        let art = reg
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?
+            .clone();
+        let inputs = Self::synthetic_inputs(&art, 0xA0_7)?;
+        let outputs = self.execute(reg, name, &inputs)?;
+        anyhow::ensure!(!outputs.is_empty(), "{name} returned an empty tuple");
+        let first = &outputs[0];
+        let v: Vec<f32> = first
+            .convert(xla::PrimitiveType::F32)
+            .map_err(|e| anyhow!("{e}"))?
+            .to_vec()
+            .map_err(|e| anyhow!("{e}"))?;
+        let checksum: f64 = v.iter().map(|&x| x as f64).sum();
+        anyhow::ensure!(
+            checksum.is_finite(),
+            "{name} produced a non-finite checksum"
+        );
+        Ok(SmokeStats {
+            outputs: outputs.len(),
+            checksum,
+            elements: v.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "artifacts": [
+        {"name": "toy", "file": "toy.hlo.txt",
+         "inputs": [{"shape": [2, 2], "dtype": "f32"}],
+         "description": "demo", "flops": 12.0, "bytes": 32.0}
+      ]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let reg = Registry::from_json_text(MANIFEST, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(reg.len(), 1);
+        let a = reg.get("toy").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 2]);
+        assert_eq!(a.inputs[0].elements(), 4);
+        assert!(reg.get("missing").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_dtype() {
+        let bad = MANIFEST.replace("f32", "s32");
+        assert!(Registry::from_json_text(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn executor_builds_and_runs_builder_computation() {
+        // No artifacts needed: exercise the PJRT path with XlaBuilder.
+        let client = xla::PjRtClient::cpu().unwrap();
+        let builder = xla::XlaBuilder::new("t");
+        let p = builder
+            .parameter_s(0, &xla::Shape::array::<f32>(vec![2]), "p")
+            .unwrap();
+        let comp = p.add_(&p).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let x = xla::Literal::vec1(&[1.5f32, 2.5f32]);
+        let out = exe.execute::<xla::Literal>(&[x]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![3.0f32, 5.0f32]);
+    }
+
+    #[test]
+    fn synthetic_inputs_deterministic() {
+        let art = Artifact {
+            name: "x".into(),
+            file: PathBuf::from("/x"),
+            inputs: vec![InputSpec {
+                shape: vec![3, 4],
+                dtype: "f32".into(),
+            }],
+            description: String::new(),
+            flops: 0.0,
+            bytes: 0.0,
+        };
+        let a = Executor::synthetic_inputs(&art, 7).unwrap();
+        let b = Executor::synthetic_inputs(&art, 7).unwrap();
+        assert_eq!(
+            a[0].to_vec::<f32>().unwrap(),
+            b[0].to_vec::<f32>().unwrap()
+        );
+        assert_eq!(a[0].element_count(), 12);
+    }
+
+    /// Full round trip against real artifacts when they exist (after
+    /// `make artifacts`); skipped otherwise so unit tests don't depend on
+    /// the python toolchain.
+    #[test]
+    fn artifacts_smoke_if_present() {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+            return;
+        }
+        let reg = Registry::load(dir).unwrap();
+        let mut exec = Executor::new().unwrap();
+        for name in reg.names() {
+            let stats = exec.smoke_run(&reg, &name).unwrap();
+            assert!(stats.outputs >= 1, "{name}");
+        }
+    }
+}

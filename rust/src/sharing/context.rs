@@ -1,0 +1,93 @@
+//! GPU-context memory overhead model (§IV-B).
+//!
+//! The paper measures, with a `cudaMalloc(NULL)`-style null-context probe:
+//! ~60 MB per process under MIG 1g.12gb, ~600 MB per process under
+//! time-slicing, and a fixed ~600 MB total under MPS (the server owns the
+//! single shared context). This explains why time-slicing *appears* to
+//! waste less memory at system level — the memory is burned by contexts,
+//! not used by workloads.
+
+use super::scheme::Scheme;
+
+/// Context overhead constants (GiB).
+#[derive(Debug, Clone)]
+pub struct ContextModel {
+    pub mig_per_process_gib: f64,
+    pub timeslice_per_process_gib: f64,
+    pub mps_total_gib: f64,
+    pub full_per_process_gib: f64,
+}
+
+impl Default for ContextModel {
+    fn default() -> Self {
+        ContextModel {
+            mig_per_process_gib: 0.060,
+            timeslice_per_process_gib: 0.600,
+            mps_total_gib: 0.600,
+            full_per_process_gib: 0.600,
+        }
+    }
+}
+
+impl ContextModel {
+    /// Total context memory consumed GPU-wide for `n` processes under the
+    /// given scheme (GiB).
+    pub fn total_gib(&self, scheme: &Scheme, n_processes: u32) -> f64 {
+        match scheme {
+            Scheme::Full => self.full_per_process_gib * n_processes as f64,
+            Scheme::TimeSlice { .. } => self.timeslice_per_process_gib * n_processes as f64,
+            Scheme::Mps { .. } => self.mps_total_gib,
+            Scheme::Mig { .. } | Scheme::MigSharedGi { .. } | Scheme::MigCi { .. } => {
+                self.mig_per_process_gib * n_processes as f64
+            }
+        }
+    }
+
+    /// Per-process context memory charged inside a single partition (GiB).
+    pub fn per_process_gib(&self, scheme: &Scheme) -> f64 {
+        match scheme {
+            Scheme::Full => self.full_per_process_gib,
+            Scheme::TimeSlice { .. } => self.timeslice_per_process_gib,
+            Scheme::Mps { .. } => 0.0, // the server owns the context
+            Scheme::Mig { .. } | Scheme::MigSharedGi { .. } | Scheme::MigCi { .. } => {
+                self.mig_per_process_gib
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::ProfileId;
+
+    #[test]
+    fn paper_measurements() {
+        let m = ContextModel::default();
+        let mig = Scheme::Mig {
+            profile: ProfileId::P1g12gb,
+            copies: 7,
+        };
+        let ts = Scheme::TimeSlice { copies: 7 };
+        let mps = Scheme::Mps {
+            sm_pct: 13,
+            copies: 7,
+        };
+        // ~60 MB/process MIG, ~600 MB/process time-slice, ~600 MB total MPS.
+        assert!((m.total_gib(&mig, 7) - 0.42).abs() < 1e-9);
+        assert!((m.total_gib(&ts, 7) - 4.2).abs() < 1e-9);
+        assert!((m.total_gib(&mps, 7) - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeslice_overhead_dominates() {
+        // §IV-B: time slicing has the highest context-induced overhead.
+        let m = ContextModel::default();
+        let ts = Scheme::TimeSlice { copies: 7 };
+        let mig = Scheme::Mig {
+            profile: ProfileId::P1g12gb,
+            copies: 7,
+        };
+        assert!(m.total_gib(&ts, 7) > 5.0 * m.total_gib(&mig, 7));
+    }
+}

@@ -1,0 +1,162 @@
+//! Green contexts (§II-A): lightweight CUDA contexts pinned to a fixed
+//! set of SMs, giving a *single application* granular control over
+//! kernel→SM mapping (e.g. one 16-SM context and one 32-SM context
+//! executing concurrently).
+//!
+//! Unlike MIG/MPS these partition only compute, inside one process:
+//! memory, bandwidth and the L2 stay fully shared, and there is no
+//! fault isolation to speak of (same process). The model exposes them
+//! as `Partition`s so the kernel-duration model can be applied per
+//! context.
+
+use super::scheme::Partition;
+use crate::gpu::GpuSpec;
+use anyhow::bail;
+
+/// A set of green contexts carved out of one GPU (or one MIG instance).
+#[derive(Debug, Clone)]
+pub struct GreenContextSet {
+    total_sms: u32,
+    used_sms: u32,
+    contexts: Vec<(String, u32)>,
+    /// Bandwidth/memory of the underlying device or instance.
+    mem_capacity_gib: f64,
+    mem_bw_gibs: f64,
+}
+
+impl GreenContextSet {
+    /// Carve green contexts from the whole GPU.
+    pub fn on_gpu(spec: &GpuSpec) -> GreenContextSet {
+        GreenContextSet {
+            total_sms: spec.sms,
+            used_sms: 0,
+            contexts: Vec::new(),
+            mem_capacity_gib: spec.mem_usable_gib,
+            mem_bw_gibs: spec.mem_bw_gibs,
+        }
+    }
+
+    /// Carve green contexts inside a MIG partition.
+    pub fn on_partition(part: &Partition) -> GreenContextSet {
+        GreenContextSet {
+            total_sms: part.sms,
+            used_sms: 0,
+            contexts: Vec::new(),
+            mem_capacity_gib: part.mem_capacity_gib,
+            mem_bw_gibs: part.mem_bw_cap_gibs,
+        }
+    }
+
+    /// Add a context with `sms` SMs. SM sets are disjoint; the total may
+    /// not exceed the device (the driver would reject it).
+    pub fn add(&mut self, label: &str, sms: u32) -> crate::Result<()> {
+        if sms == 0 {
+            bail!("green context needs at least one SM");
+        }
+        if self.used_sms + sms > self.total_sms {
+            bail!(
+                "green contexts exceed device SMs: {} + {sms} > {}",
+                self.used_sms,
+                self.total_sms
+            );
+        }
+        self.used_sms += sms;
+        self.contexts.push((label.to_string(), sms));
+        Ok(())
+    }
+
+    pub fn remaining_sms(&self) -> u32 {
+        self.total_sms - self.used_sms
+    }
+
+    pub fn len(&self) -> usize {
+        self.contexts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.contexts.is_empty()
+    }
+
+    /// Materialize as `Partition`s: compute split, everything else
+    /// shared, no isolation (same process).
+    pub fn partitions(&self) -> Vec<Partition> {
+        self.contexts
+            .iter()
+            .map(|(label, sms)| Partition {
+                label: format!("green:{label}"),
+                sms: *sms,
+                mem_capacity_gib: self.mem_capacity_gib,
+                mem_bw_cap_gibs: self.mem_bw_gibs,
+                bw_shared: true,
+                copy_engines: None,
+                exclusive_time: false,
+                // Same process, same working set: cache interference is
+                // the application's own business — modelled as zero.
+                interference: 0.0,
+                context_overhead_gib: 0.0,
+                error_isolated: false,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuSpec;
+
+    #[test]
+    fn paper_example_16_and_32() {
+        // §II-A: "an application can create two green contexts, one with
+        // 16 SMs and another one with 32 SMs".
+        let spec = GpuSpec::gh_h100_96gb();
+        let mut g = GreenContextSet::on_gpu(&spec);
+        g.add("small", 16).unwrap();
+        g.add("large", 32).unwrap();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.remaining_sms(), 132 - 48);
+        let parts = g.partitions();
+        assert_eq!(parts[0].sms, 16);
+        assert_eq!(parts[1].sms, 32);
+        assert!(parts.iter().all(|p| p.bw_shared && !p.error_isolated));
+        // Memory fully shared: both see the whole capacity.
+        assert_eq!(parts[0].mem_capacity_gib, 94.5);
+    }
+
+    #[test]
+    fn cannot_oversubscribe_sms() {
+        let spec = GpuSpec::gh_h100_96gb();
+        let mut g = GreenContextSet::on_gpu(&spec);
+        g.add("a", 100).unwrap();
+        assert!(g.add("b", 33).is_err());
+        g.add("b", 32).unwrap();
+        assert_eq!(g.remaining_sms(), 0);
+        assert!(g.add("c", 1).is_err());
+    }
+
+    #[test]
+    fn on_mig_partition() {
+        let spec = GpuSpec::gh_h100_96gb();
+        let parts = crate::sharing::scheme::partitions(
+            &crate::sharing::Scheme::Mig {
+                profile: crate::mig::ProfileId::P3g48gb,
+                copies: 1,
+            },
+            &spec,
+        )
+        .unwrap();
+        let mut g = GreenContextSet::on_partition(&parts[0]);
+        g.add("x", 30).unwrap();
+        g.add("y", 30).unwrap();
+        assert!(g.add("z", 1).is_err(), "3g.48gb has exactly 60 SMs");
+        let ps = g.partitions();
+        assert_eq!(ps[0].mem_bw_cap_gibs, 1611.0);
+    }
+
+    #[test]
+    fn zero_sm_context_rejected() {
+        let spec = GpuSpec::gh_h100_96gb();
+        let mut g = GreenContextSet::on_gpu(&spec);
+        assert!(g.add("empty", 0).is_err());
+    }
+}

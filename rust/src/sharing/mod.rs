@@ -1,0 +1,14 @@
+//! GPU sharing schemes (§II-B): time-slicing, MPS, MIG, plus the
+//! unpartitioned full-GPU baseline.
+//!
+//! Each scheme maps to a set of `Partition`s — the resource view each
+//! co-running process gets — plus scheme-wide semantics (temporal
+//! exclusivity, bandwidth sharing, context overhead, error isolation).
+
+pub mod context;
+pub mod green;
+pub mod scheme;
+
+pub use context::ContextModel;
+pub use green::GreenContextSet;
+pub use scheme::{Partition, Scheme};

@@ -1,0 +1,335 @@
+//! Sharing schemes and the `Partition` resource view.
+
+use crate::gpu::GpuSpec;
+use crate::mig::profile::GiProfile;
+use crate::mig::{MigManager, ProfileId};
+use anyhow::bail;
+
+/// A GPU sharing configuration for a co-run experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Whole GPU per process, processes run back-to-back (the serial
+    /// baseline of Figs. 5/6) or one process alone.
+    Full,
+    /// Default time-sliced scheduling: `copies` processes round-robin on
+    /// the whole GPU.
+    TimeSlice { copies: u32 },
+    /// MPS with each client limited to `sm_pct`% of SMs.
+    Mps { sm_pct: u32, copies: u32 },
+    /// MIG: `copies` GPU instances of `profile`, one process each.
+    Mig { profile: ProfileId, copies: u32 },
+    /// MIG 7×1c.7g: one 7g GI subdivided into `copies` compute instances
+    /// sharing memory capacity/bandwidth/L2 (MPS-like within the GI).
+    MigSharedGi { copies: u32 },
+    /// A compute instance of `ci_slices` slices on a GI of `profile`
+    /// (e.g. 1c.2g.24gb in Fig. 8), `copies` CIs on the one GI.
+    MigCi {
+        profile: ProfileId,
+        ci_slices: u32,
+        copies: u32,
+    },
+}
+
+impl Scheme {
+    pub fn label(&self) -> String {
+        match self {
+            Scheme::Full => "full-GPU".to_string(),
+            Scheme::TimeSlice { copies } => format!("time-slice x{copies}"),
+            Scheme::Mps { sm_pct, copies } => format!("MPS {copies}x{sm_pct}%"),
+            Scheme::Mig { profile, copies } => {
+                format!("MIG {copies}x{}", GiProfile::get(*profile).name)
+            }
+            Scheme::MigSharedGi { copies } => format!("MIG {copies}x1c.7g"),
+            Scheme::MigCi {
+                profile,
+                ci_slices,
+                copies,
+            } => {
+                let gi = GiProfile::get(*profile);
+                let name = crate::mig::InstanceName {
+                    ci_slices: *ci_slices,
+                    gi_slices: gi.compute_slices,
+                    mem_gb: (gi.memory_slices * 12) as u32,
+                };
+                format!("MIG {copies}x{}", name.canonical())
+            }
+        }
+    }
+
+    pub fn copies(&self) -> u32 {
+        match self {
+            Scheme::Full => 1,
+            Scheme::TimeSlice { copies }
+            | Scheme::Mps { copies, .. }
+            | Scheme::Mig { copies, .. }
+            | Scheme::MigSharedGi { copies }
+            | Scheme::MigCi { copies, .. } => *copies,
+        }
+    }
+
+    /// The four co-run configurations evaluated in Figs. 5/6.
+    pub fn corun_suite() -> Vec<Scheme> {
+        vec![
+            Scheme::Mig {
+                profile: ProfileId::P1g12gb,
+                copies: 7,
+            },
+            Scheme::MigSharedGi { copies: 7 },
+            Scheme::Mps {
+                sm_pct: 13,
+                copies: 7,
+            },
+            Scheme::TimeSlice { copies: 7 },
+        ]
+    }
+}
+
+/// The per-process resource view under a scheme.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub label: String,
+    /// SMs this process may schedule onto.
+    pub sms: u32,
+    /// Memory capacity visible to the process (GiB).
+    pub mem_capacity_gib: f64,
+    /// Hard bandwidth cap for this partition (GiB/s). For bandwidth-shared
+    /// schemes this is the *total* pool, arbitrated at runtime.
+    pub mem_bw_cap_gibs: f64,
+    /// Whether HBM bandwidth / L2 are shared with co-runners (MPS,
+    /// time-slice, and CIs on a shared GI) — enables the contention and
+    /// cache-interference terms.
+    pub bw_shared: bool,
+    /// Copy engines owned (None = unpartitioned GPU, all engines).
+    pub copy_engines: Option<u32>,
+    /// Only one co-runner's kernels execute at a time (time-slicing).
+    pub exclusive_time: bool,
+    /// Relative kernel slowdown from shared-L2/memory interference when
+    /// co-running (MPS: §IV-A "MPS always underperforms by 1-5%").
+    pub interference: f64,
+    /// Per-process context memory charged inside this partition (GiB).
+    pub context_overhead_gib: f64,
+    /// Whether a fault in this process kills co-runners (MPS: no error
+    /// isolation — §II-B2).
+    pub error_isolated: bool,
+}
+
+/// Build the per-process partitions for a scheme on the given GPU.
+/// Returns one `Partition` per co-running process.
+pub fn partitions(scheme: &Scheme, spec: &GpuSpec) -> crate::Result<Vec<Partition>> {
+    let ctx = super::context::ContextModel::default();
+    match scheme {
+        Scheme::Full => Ok(vec![Partition {
+            label: "full".to_string(),
+            sms: spec.sms,
+            mem_capacity_gib: spec.mem_usable_gib,
+            mem_bw_cap_gibs: spec.mem_bw_gibs,
+            bw_shared: false,
+            copy_engines: None,
+            exclusive_time: false,
+            interference: 0.0,
+            context_overhead_gib: ctx.per_process_gib(scheme),
+            error_isolated: true,
+        }]),
+        Scheme::TimeSlice { copies } => {
+            let p = Partition {
+                label: "time-slice".to_string(),
+                sms: spec.sms,
+                mem_capacity_gib: spec.mem_usable_gib,
+                mem_bw_cap_gibs: spec.mem_bw_gibs,
+                bw_shared: true,
+                copy_engines: None,
+                exclusive_time: true,
+                interference: 0.0,
+                context_overhead_gib: ctx.per_process_gib(scheme),
+                error_isolated: true,
+            };
+            Ok(vec![p; *copies as usize])
+        }
+        Scheme::Mps { sm_pct, copies } => {
+            if *sm_pct == 0 || *sm_pct > 100 {
+                bail!("MPS SM percentage must be in 1..=100");
+            }
+            let sms = ((spec.sms as f64 * *sm_pct as f64 / 100.0).round() as u32).max(1);
+            let p = Partition {
+                label: format!("mps-{sm_pct}%"),
+                sms,
+                mem_capacity_gib: spec.mem_usable_gib,
+                mem_bw_cap_gibs: spec.mem_bw_gibs,
+                bw_shared: true,
+                copy_engines: None,
+                exclusive_time: false,
+                // §IV-A: MPS underperforms MIG by 1-5% from memory/L2
+                // interference; per-co-runner increment applied to the
+                // compute pipeline at runtime.
+                interference: 0.02,
+                context_overhead_gib: ctx.per_process_gib(scheme),
+                error_isolated: false,
+            };
+            Ok(vec![p; *copies as usize])
+        }
+        Scheme::Mig { profile, copies } => {
+            // Validate against the slice budget by actually creating the
+            // instances through the manager.
+            let mut mgr = MigManager::new(spec.clone());
+            let mut out = Vec::new();
+            for i in 0..*copies {
+                let ci_id = mgr.create_full(*profile).map_err(|e| {
+                    anyhow::anyhow!("cannot create {} instance #{}: {e}", GiProfile::get(*profile).name, i + 1)
+                })?;
+                let ci = mgr.ci(ci_id).unwrap().clone();
+                out.push(Partition {
+                    label: format!("{}#{}", GiProfile::get(*profile).name, i),
+                    sms: ci.sms,
+                    mem_capacity_gib: ci.mem_gib,
+                    mem_bw_cap_gibs: ci.mem_bw_gibs,
+                    bw_shared: false,
+                    copy_engines: Some(ci.copy_engines),
+                    exclusive_time: false,
+                    interference: 0.0,
+                    context_overhead_gib: ctx.per_process_gib(scheme),
+                    error_isolated: true,
+                });
+            }
+            Ok(out)
+        }
+        Scheme::MigSharedGi { copies } => {
+            if *copies == 0 || *copies > 7 {
+                bail!("1c.7g compute instances must number 1..=7");
+            }
+            let mut mgr = MigManager::new(spec.clone());
+            let gi = mgr.create_gi(ProfileId::P7g96gb)?;
+            let mut out = Vec::new();
+            for i in 0..*copies {
+                let ci_id = mgr.create_ci(gi, 1)?;
+                let ci = mgr.ci(ci_id).unwrap().clone();
+                out.push(Partition {
+                    label: format!("1c.7g#{i}"),
+                    sms: ci.sms,
+                    mem_capacity_gib: ci.mem_gib,
+                    mem_bw_cap_gibs: ci.mem_bw_gibs,
+                    // CIs on one GI share memory capacity and L2 — MPS-like.
+                    bw_shared: true,
+                    copy_engines: Some(1),
+                    exclusive_time: false,
+                    interference: 0.025,
+                    context_overhead_gib: ctx.per_process_gib(scheme),
+                    error_isolated: true,
+                });
+            }
+            Ok(out)
+        }
+        Scheme::MigCi {
+            profile,
+            ci_slices,
+            copies,
+        } => {
+            let mut mgr = MigManager::new(spec.clone());
+            let gi = mgr.create_gi(*profile)?;
+            let mut out = Vec::new();
+            for i in 0..*copies {
+                let ci_id = mgr.create_ci(gi, *ci_slices).map_err(|e| {
+                    anyhow::anyhow!("cannot create CI #{}: {e}", i + 1)
+                })?;
+                let ci = mgr.ci(ci_id).unwrap().clone();
+                let shared = *copies > 1;
+                out.push(Partition {
+                    label: format!("{}#{i}", scheme.label()),
+                    sms: ci.sms,
+                    mem_capacity_gib: ci.mem_gib,
+                    mem_bw_cap_gibs: ci.mem_bw_gibs,
+                    bw_shared: shared,
+                    copy_engines: Some(1),
+                    exclusive_time: false,
+                    interference: if shared { 0.025 } else { 0.0 },
+                    context_overhead_gib: ctx.per_process_gib(scheme),
+                    error_isolated: true,
+                });
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GpuSpec {
+        GpuSpec::gh_h100_96gb()
+    }
+
+    #[test]
+    fn full_is_whole_gpu() {
+        let ps = partitions(&Scheme::Full, &spec()).unwrap();
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].sms, 132);
+        assert!(!ps[0].bw_shared);
+    }
+
+    #[test]
+    fn mig_7x1g() {
+        let s = Scheme::Mig {
+            profile: ProfileId::P1g12gb,
+            copies: 7,
+        };
+        let ps = partitions(&s, &spec()).unwrap();
+        assert_eq!(ps.len(), 7);
+        for p in &ps {
+            assert_eq!(p.sms, 16);
+            assert_eq!(p.mem_capacity_gib, 11.0);
+            assert_eq!(p.mem_bw_cap_gibs, 406.0);
+            assert!(!p.bw_shared);
+            assert!(p.error_isolated);
+        }
+    }
+
+    #[test]
+    fn mig_overcommit_rejected() {
+        let s = Scheme::Mig {
+            profile: ProfileId::P3g48gb,
+            copies: 3,
+        };
+        assert!(partitions(&s, &spec()).is_err());
+    }
+
+    #[test]
+    fn mps_13pct() {
+        let s = Scheme::Mps {
+            sm_pct: 13,
+            copies: 7,
+        };
+        let ps = partitions(&s, &spec()).unwrap();
+        assert_eq!(ps.len(), 7);
+        // 13% of 132 = 17.16 -> 17 SMs.
+        assert_eq!(ps[0].sms, 17);
+        assert!(ps[0].bw_shared);
+        assert!(!ps[0].error_isolated);
+        assert!(ps[0].interference > 0.0);
+    }
+
+    #[test]
+    fn shared_gi_cis() {
+        let ps = partitions(&Scheme::MigSharedGi { copies: 7 }, &spec()).unwrap();
+        assert_eq!(ps.len(), 7);
+        assert_eq!(ps[0].sms, 18);
+        assert_eq!(ps[0].mem_capacity_gib, 94.5);
+        assert!(ps[0].bw_shared);
+        assert!(ps[0].error_isolated, "MIG CIs keep error isolation");
+    }
+
+    #[test]
+    fn timeslice_exclusive() {
+        let ps = partitions(&Scheme::TimeSlice { copies: 3 }, &spec()).unwrap();
+        assert!(ps.iter().all(|p| p.exclusive_time));
+        assert!((ps[0].context_overhead_gib - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corun_suite_is_the_papers_four() {
+        let labels: Vec<String> = Scheme::corun_suite().iter().map(|s| s.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["MIG 7x1g.12gb", "MIG 7x1c.7g", "MPS 7x13%", "time-slice x7"]
+        );
+    }
+}

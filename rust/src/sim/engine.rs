@@ -1,0 +1,158 @@
+//! The event queue proper. See module docs in `sim/mod.rs`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Opaque token identifying a scheduled event, used for cancellation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventToken(u64);
+
+/// A popped event with its firing time.
+#[derive(Debug, Clone)]
+pub struct Scheduled<E> {
+    pub time_ns: u64,
+    pub token: EventToken,
+    pub event: E,
+}
+
+struct Entry<E> {
+    time_ns: u64,
+    seq: u64,
+    event: E,
+}
+
+// Min-heap by (time, seq): BinaryHeap is a max-heap, so invert the ordering.
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_ns == other.time_ns && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.time_ns, other.seq).cmp(&(self.time_ns, self.seq))
+    }
+}
+
+/// Discrete-event queue with cancellation and deterministic FIFO
+/// tie-breaking. Cancellation is lazy: cancelled tokens are skipped at pop
+/// time, keeping `cancel` O(1).
+pub struct Engine<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now_ns: u64,
+    seq: u64,
+    // Sorted vec of cancelled seqs still in the heap. Typically tiny
+    // (pending kernel-completion re-estimates), so a vec beats a HashSet.
+    cancelled: Vec<u64>,
+    popped: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Engine<E> {
+        Engine {
+            heap: BinaryHeap::with_capacity(1024),
+            now_ns: 0,
+            seq: 0,
+            cancelled: Vec::new(),
+            popped: 0,
+        }
+    }
+
+    /// Current simulation time in nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    /// Current simulation time in seconds.
+    pub fn now(&self) -> f64 {
+        crate::util::units::ns_to_sec(self.now_ns)
+    }
+
+    /// Number of events dispatched so far (for the perf counters).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    /// Pending (non-cancelled) event count.
+    pub fn len(&self) -> usize {
+        self.heap.len() - self.cancelled.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Schedule at an absolute time. Panics on scheduling into the past —
+    /// that is always a simulator bug.
+    pub fn schedule_at(&mut self, time_ns: u64, event: E) -> EventToken {
+        assert!(
+            time_ns >= self.now_ns,
+            "time travel: scheduling at {time_ns} < now {}",
+            self.now_ns
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry {
+            time_ns,
+            seq,
+            event,
+        });
+        EventToken(seq)
+    }
+
+    /// Schedule relative to now.
+    pub fn schedule_in(&mut self, delta_ns: u64, event: E) -> EventToken {
+        self.schedule_at(self.now_ns.saturating_add(delta_ns), event)
+    }
+
+    /// Cancel a previously scheduled event. Cancelling an already-fired or
+    /// already-cancelled token is a no-op.
+    pub fn cancel(&mut self, token: EventToken) {
+        if let Err(i) = self.cancelled.binary_search(&token.0) {
+            self.cancelled.insert(i, token.0);
+        }
+    }
+
+    /// Pop the next non-cancelled event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
+        while let Some(entry) = self.heap.pop() {
+            if let Ok(i) = self.cancelled.binary_search(&entry.seq) {
+                self.cancelled.remove(i);
+                continue;
+            }
+            self.now_ns = entry.time_ns;
+            self.popped += 1;
+            return Some(Scheduled {
+                time_ns: entry.time_ns,
+                token: EventToken(entry.seq),
+                event: entry.event,
+            });
+        }
+        None
+    }
+
+    /// Peek the firing time of the next live event without advancing.
+    pub fn peek_time_ns(&mut self) -> Option<u64> {
+        // Drain cancelled heads first so the peek is accurate.
+        while let Some(head) = self.heap.peek() {
+            if let Ok(i) = self.cancelled.binary_search(&head.seq) {
+                self.cancelled.remove(i);
+                self.heap.pop();
+            } else {
+                return Some(head.time_ns);
+            }
+        }
+        None
+    }
+}

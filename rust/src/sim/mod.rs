@@ -1,0 +1,84 @@
+//! Discrete-event simulation engine.
+//!
+//! The engine is deliberately small and allocation-free on the hot path:
+//! a binary heap of `(time_ns, seq, event)` entries with a monotonic
+//! sequence number for FIFO tie-breaking (deterministic replay), plus
+//! cancellable timer tokens. The GPU co-run simulator
+//! (`coordinator::corun`) drives its state machine on top of this queue.
+
+mod engine;
+
+pub use engine::{Engine, EventToken, Scheduled};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum Ev {
+        A,
+        B(u32),
+    }
+
+    #[test]
+    fn orders_by_time_then_fifo() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule_at(10, Ev::B(1));
+        e.schedule_at(5, Ev::A);
+        e.schedule_at(10, Ev::B(2));
+        let mut seen = Vec::new();
+        while let Some(Scheduled { time_ns, event, .. }) = e.pop() {
+            seen.push((time_ns, event));
+        }
+        assert_eq!(seen, vec![(5, Ev::A), (10, Ev::B(1)), (10, Ev::B(2))]);
+    }
+
+    #[test]
+    fn now_advances_monotonically() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule_in(3, Ev::A);
+        e.schedule_in(1, Ev::A);
+        assert_eq!(e.now_ns(), 0);
+        e.pop();
+        assert_eq!(e.now_ns(), 1);
+        e.pop();
+        assert_eq!(e.now_ns(), 3);
+    }
+
+    #[test]
+    fn cancellation() {
+        let mut e: Engine<Ev> = Engine::new();
+        let t1 = e.schedule_at(1, Ev::A);
+        let _t2 = e.schedule_at(2, Ev::B(9));
+        e.cancel(t1);
+        let first = e.pop().unwrap();
+        assert_eq!(first.event, Ev::B(9));
+        assert!(e.pop().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "time travel")]
+    fn rejects_past_events() {
+        let mut e: Engine<Ev> = Engine::new();
+        e.schedule_at(10, Ev::A);
+        e.pop();
+        e.schedule_at(5, Ev::A);
+    }
+
+    #[test]
+    fn stress_many_events_deterministic() {
+        let run = || {
+            let mut e: Engine<u64> = Engine::new();
+            let mut rng = crate::util::Rng::new(42);
+            for i in 0..10_000u64 {
+                e.schedule_at(rng.below(1_000_000), i);
+            }
+            let mut order = Vec::with_capacity(10_000);
+            while let Some(s) = e.pop() {
+                order.push(s.event);
+            }
+            order
+        };
+        assert_eq!(run(), run());
+    }
+}

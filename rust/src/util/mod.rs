@@ -1,0 +1,13 @@
+//! From-scratch utility substrates: JSON, PRNG, statistics, ASCII tables,
+//! and unit helpers. The offline build environment ships no serde facade,
+//! no rand, and no prettytable — these modules replace them.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use table::Table;

@@ -1,0 +1,168 @@
+//! ASCII table renderer for the experiment reports.
+//!
+//! Every `migsim experiment <id>` prints its paper table/figure through this
+//! renderer so outputs are uniform and easy to diff against the paper.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple ASCII table with a title, a header row and data rows.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    separators: Vec<usize>, // row indices after which to draw a rule
+}
+
+impl Table {
+    pub fn new(title: &str) -> Table {
+        Table {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Set the header; all columns default to Right alignment except col 0.
+    pub fn header(mut self, cols: &[&str]) -> Table {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self.aligns = (0..cols.len())
+            .map(|i| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        if col < self.aligns.len() {
+            self.aligns[col] = a;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Draw a horizontal rule after the last pushed row.
+    pub fn rule(&mut self) -> &mut Self {
+        self.separators.push(self.rows.len());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let rule: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let w = widths[i];
+                let cell = &cells[i];
+                let pad = w - cell.chars().count();
+                match aligns[i] {
+                    Align::Left => s.push_str(&format!(" {}{} |", cell, " ".repeat(pad))),
+                    Align::Right => s.push_str(&format!(" {}{} |", " ".repeat(pad), cell)),
+                }
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncols]));
+        out.push('\n');
+        out.push_str(&rule);
+        out.push('\n');
+        for (i, row) in self.rows.iter().enumerate() {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+            if self.separators.contains(&(i + 1)) && i + 1 != self.rows.len() {
+                out.push_str(&rule);
+                out.push('\n');
+            }
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        out
+    }
+}
+
+/// Format a float with `prec` decimals, trimming "-0".
+pub fn fnum(x: f64, prec: usize) -> String {
+    let s = format!("{x:.prec$}");
+    if s.starts_with("-0.") && s[1..].parse::<f64>() == Ok(0.0) {
+        s[1..].to_string()
+    } else {
+        s
+    }
+}
+
+/// Format a ratio as a percentage string, e.g. 0.153 -> "15.3%".
+pub fn pct(x: f64, prec: usize) -> String {
+    format!("{}%", fnum(x * 100.0, prec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").header(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["bbbb".into(), "22.5".into()]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        assert!(s.contains("| a    |     1 |"));
+        assert!(s.contains("| bbbb |  22.5 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("x").header(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn pct_and_fnum() {
+        assert_eq!(pct(0.153, 1), "15.3%");
+        assert_eq!(fnum(2.0, 2), "2.00");
+        assert_eq!(fnum(-0.0001, 2), "0.00");
+    }
+}

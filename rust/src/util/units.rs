@@ -1,0 +1,85 @@
+//! Unit helpers. The simulator's base units are:
+//! - time:   f64 seconds (`Sec`), u64 nanoseconds inside the event queue
+//! - data:   f64 bytes
+//! - power:  f64 watts
+//! - clock:  f64 MHz
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+pub const MS: f64 = 1e-3;
+pub const US: f64 = 1e-6;
+pub const NS_PER_SEC: u64 = 1_000_000_000;
+
+/// Convert seconds to the integer nanosecond clock used by the event queue.
+pub fn sec_to_ns(s: f64) -> u64 {
+    debug_assert!(s >= 0.0, "negative duration: {s}");
+    (s * NS_PER_SEC as f64).round() as u64
+}
+
+/// Convert event-queue nanoseconds back to seconds.
+pub fn ns_to_sec(ns: u64) -> f64 {
+    ns as f64 / NS_PER_SEC as f64
+}
+
+pub fn gib(x: f64) -> f64 {
+    x * GIB
+}
+
+pub fn bytes_to_gib(b: f64) -> f64 {
+    b / GIB
+}
+
+/// GiB/s to bytes/s.
+pub fn gibs(x: f64) -> f64 {
+    x * GIB
+}
+
+/// Human-readable bytes.
+pub fn human_bytes(b: f64) -> String {
+    if b >= GIB {
+        format!("{:.1} GiB", b / GIB)
+    } else if b >= MIB {
+        format!("{:.1} MiB", b / MIB)
+    } else if b >= KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Human-readable seconds.
+pub fn human_time(s: f64) -> String {
+    if s >= 60.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ns_roundtrip() {
+        for s in [0.0, 1e-9, 0.02, 1.5, 3600.0] {
+            assert!((ns_to_sec(sec_to_ns(s)) - s).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn human() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(2.0 * MIB), "2.0 MiB");
+        assert_eq!(human_time(0.0205), "20.50 ms");
+        assert_eq!(human_time(90.0), "1.5 min");
+    }
+}

@@ -1,0 +1,21 @@
+//! Workload models for the paper's application suite (Table III).
+//!
+//! Each application is modelled as repeated macro-iterations of a CPU
+//! phase followed by one or more GPU kernels, parameterized by FLOPs,
+//! HBM traffic, C2C traffic, launch geometry and pipeline mix. Parameters
+//! are calibrated so the *full-GPU* behaviour matches the paper's Figs.
+//! 2–3 (occupancy, bandwidth/capacity utilization) — everything else
+//! (scaling, co-run throughput, energy, throttling) is then emergent from
+//! the hardware model.
+//!
+//! `apps` holds the twelve calibrated models (10 suite members + the §VI
+//! large variants), `model` the data types and the kernel-duration model,
+//! `probe` the §III-C SM probe and §IV-B context probe.
+
+pub mod apps;
+pub mod model;
+pub mod probe;
+pub mod trace;
+
+pub use apps::{suite, AppId};
+pub use model::{AppModel, ExecEnv, KernelSpec, MacroPhase};

@@ -1,0 +1,403 @@
+//! Workload data types and the kernel performance model.
+//!
+//! A kernel's duration on a partition is a three-way roofline:
+//!
+//! ```text
+//! t_c   = flops / (pipeline_peak(sms, clock) · tail_eff)
+//! t_m   = hbm_bytes / (bw_alloc · bw_eff)
+//! t_x   = c2c_bytes / c2c_bw
+//! t_mem = max(t_m, t_x) + ½·min(t_m, t_x)   (partial MLP overlap of the
+//!                                            local and remote streams)
+//! t     = max(t_c, t_mem)
+//! ```
+//!
+//! `tail_eff` is the §IV-A wave-quantization term from `gpu::sm`; `bw_eff`
+//! is the application's achievable fraction of its bandwidth allocation
+//! (coalescing quality). Clock only scales the compute term — memory and
+//! C2C run off their own clock domains, which is what makes memory-bound
+//! workloads insensitive to DVFS throttling (Fig. 7a).
+
+use crate::gpu::{occupancy, tail_efficiency, GpuSpec, PipelineMix};
+
+/// Per-SM memory-issue ceiling (GiB/s): a partition cannot draw more HBM
+/// bandwidth than its SMs can issue requests for. Calibrated from Table
+/// II, whose per-profile bandwidths track SM counts at ~25-27 GiB/s/SM;
+/// this is what makes a 1c.2g.24gb CI (16 SMs on a 812 GiB/s GI) perform
+/// like a 1g instance on memory-bound work.
+pub const SM_BW_ISSUE_GIBS: f64 = 27.5;
+
+/// One GPU kernel launch (aggregated: a model kernel may stand for a fused
+/// sequence of real launches with the same signature).
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    pub name: &'static str,
+    pub mix: PipelineMix,
+    /// Total FLOPs per launch.
+    pub flops: f64,
+    /// HBM traffic per launch (bytes).
+    pub hbm_bytes: f64,
+    /// NVLink-C2C traffic per launch (bytes); non-zero for STREAM-Nvlink
+    /// and for offloaded workloads.
+    pub c2c_bytes: f64,
+    /// Whether C2C traffic is read-dominant (offloaded data reads travel
+    /// host→device, capped at the H2D direct rate — 207 GiB/s on 16 SMs,
+    /// Table IVb). STREAM-Nvlink streams both directions.
+    pub c2c_read_only: bool,
+    /// Launch geometry for occupancy/tail modelling.
+    pub blocks: u64,
+    pub warps_per_block: u32,
+    /// Blocks concurrently resident per SM (register/smem limit).
+    pub resident_per_sm: u32,
+    /// Achievable fraction of the bandwidth allocation (0..1].
+    pub bw_eff: f64,
+}
+
+/// The execution environment a kernel currently sees.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecEnv {
+    /// SMs available to this process.
+    pub sms: u32,
+    /// SM clock as a fraction of boost (DVFS state).
+    pub clock_frac: f64,
+    /// HBM bandwidth actually granted (GiB/s) — the partition cap, reduced
+    /// by contention on shared schemes.
+    pub bw_gibs: f64,
+    /// C2C bandwidth granted (GiB/s); 0 forbids C2C traffic.
+    pub c2c_bw_gibs: f64,
+    /// Multiplicative slowdown of the *compute* pipeline from shared-L2 /
+    /// cache interference (1.0 = none). Memory-bound streaming traffic is
+    /// unaffected — which is why Qiskit/NekRS favour MPS's flexible
+    /// bandwidth over MIG's hard caps (§V-A) while compute-bound apps
+    /// favour MIG's isolation.
+    pub interference: f64,
+    /// Temporal share factor (>= 1): time-slicing serializes kernels, so
+    /// the whole kernel (compute and memory) stretches by this factor.
+    pub time_share: f64,
+}
+
+impl KernelSpec {
+    /// Kernel duration in seconds under `env` on `spec`.
+    pub fn duration_s(&self, spec: &GpuSpec, env: &ExecEnv) -> f64 {
+        assert!(env.sms >= 1, "kernel with no SMs");
+        let tail = tail_efficiency(self.blocks, env.sms, self.resident_per_sm);
+        let peak = self.mix.effective_flops(|p| {
+            spec.pipeline_flops(p, env.sms, env.clock_frac * spec.clock_max_mhz)
+        });
+        let t_compute = if self.flops > 0.0 {
+            self.flops / (peak * tail)
+        } else {
+            0.0
+        };
+        let t_mem = if self.hbm_bytes > 0.0 {
+            let bw = env.bw_gibs.min(env.sms as f64 * SM_BW_ISSUE_GIBS);
+            self.hbm_bytes / (crate::util::units::gibs(bw) * self.bw_eff)
+        } else {
+            0.0
+        };
+        let t_c2c = if self.c2c_bytes > 0.0 {
+            assert!(env.c2c_bw_gibs > 0.0, "C2C traffic with no C2C bandwidth");
+            self.c2c_bytes / crate::util::units::gibs(env.c2c_bw_gibs)
+        } else {
+            0.0
+        };
+        // Local HBM and remote C2C streams overlap only partially: memory-
+        // level parallelism hides 40% of the shorter stream (calibrated
+        // against §VI-C's offloading slowdowns).
+        let t_memory = t_mem.max(t_c2c) + 0.6 * t_mem.min(t_c2c);
+        (t_compute * env.interference.max(1.0)).max(t_memory) * env.time_share.max(1.0)
+    }
+
+    /// Achieved warp occupancy while this kernel runs on `sms` SMs.
+    pub fn occupancy(&self, spec: &GpuSpec, sms: u32) -> f64 {
+        occupancy(
+            self.blocks,
+            self.warps_per_block,
+            sms,
+            spec.max_warps_per_sm,
+            self.resident_per_sm,
+        )
+    }
+
+    /// Achieved FLOP rate by pipeline while running (TFLOP/s), for the
+    /// power model.
+    pub fn flop_rate_tflops(&self, duration_s: f64) -> f64 {
+        if duration_s <= 0.0 {
+            0.0
+        } else {
+            self.flops / duration_s / 1e12
+        }
+    }
+
+    /// Achieved HBM byte rate while running (TB/s).
+    pub fn hbm_rate_tbs(&self, duration_s: f64) -> f64 {
+        if duration_s <= 0.0 {
+            0.0
+        } else {
+            self.hbm_bytes / duration_s / 1e12
+        }
+    }
+
+    /// Achieved C2C byte rate while running (TB/s).
+    pub fn c2c_rate_tbs(&self, duration_s: f64) -> f64 {
+        if duration_s <= 0.0 {
+            0.0
+        } else {
+            self.c2c_bytes / duration_s / 1e12
+        }
+    }
+}
+
+/// A macro-iteration: CPU-side work followed by GPU kernels, repeated.
+#[derive(Debug, Clone)]
+pub struct MacroPhase {
+    /// CPU-side time per iteration (s) — does not scale with GPU size.
+    pub cpu_s: f64,
+    pub kernels: Vec<KernelSpec>,
+    pub repeats: u32,
+}
+
+/// A modelled application.
+#[derive(Debug, Clone)]
+pub struct AppModel {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub input: &'static str,
+    /// Peak GPU memory footprint (GiB) — Table III problem sizes fit the
+    /// 11 GiB of 1g.12gb; §VI large variants exceed it.
+    pub footprint_gib: f64,
+    /// Fraction of the footprint that is "cold" (spillable with little
+    /// traffic) — drives the §VI offload cost (e.g. FAISS's short burst).
+    pub cold_frac: f64,
+    /// Relative CPU-time inflation when 7 copies co-run (host contention).
+    pub cpu_corun_inflation: f64,
+    /// Offloading mode (§VI-A): `None` uses direct C2C access
+    /// (cudaMallocManaged-style, the default); `Some(f)` models a native
+    /// chunked-swap strategy (Qiskit) that transfers `f` of the spilled
+    /// data per iteration over a copy engine, stalling the GPU.
+    pub swap_frac: Option<f64>,
+    /// One-time startup (context init, data/model load) during which the
+    /// GPU idles — the inter-job idle the serial baseline of Figs. 5/6
+    /// pays seven times but a co-run pays only once per copy,
+    /// concurrently.
+    pub startup_s: f64,
+    pub phases: Vec<MacroPhase>,
+    /// Unit label for the performance metric P (§VI-C): "runs/s" uses
+    /// inverse runtime; "tok/s" scales by work per iteration.
+    pub perf_unit: &'static str,
+}
+
+impl AppModel {
+    /// Total kernel launches across the run.
+    pub fn total_kernels(&self) -> u64 {
+        self.phases
+            .iter()
+            .map(|p| p.repeats as u64 * p.kernels.len() as u64)
+            .sum()
+    }
+
+    /// Analytic runtime on a quiet partition (no contention, boost clock).
+    pub fn runtime_quiet_s(&self, spec: &GpuSpec, env: &ExecEnv) -> f64 {
+        self.phases
+            .iter()
+            .map(|ph| {
+                let per_iter: f64 = ph.cpu_s
+                    + ph.kernels
+                        .iter()
+                        .map(|k| k.duration_s(spec, env))
+                        .sum::<f64>();
+                per_iter * ph.repeats as f64
+            })
+            .sum()
+    }
+
+    /// Time-weighted SM occupancy over the whole quiet run — the Fig. 2
+    /// metric (CPU gaps count as zero occupancy).
+    pub fn avg_occupancy_quiet(&self, spec: &GpuSpec, env: &ExecEnv) -> f64 {
+        let total = self.runtime_quiet_s(spec, env);
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let weighted: f64 = self
+            .phases
+            .iter()
+            .map(|ph| {
+                ph.repeats as f64
+                    * ph.kernels
+                        .iter()
+                        .map(|k| k.duration_s(spec, env) * k.occupancy(spec, env.sms))
+                        .sum::<f64>()
+            })
+            .sum();
+        weighted / total
+    }
+
+    /// Average HBM bandwidth utilization relative to `total_bw_gibs` over
+    /// the quiet run — the Fig. 3 (lower) metric.
+    pub fn avg_bw_util_quiet(&self, spec: &GpuSpec, env: &ExecEnv, total_bw_gibs: f64) -> f64 {
+        let total = self.runtime_quiet_s(spec, env);
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let bytes: f64 = self
+            .phases
+            .iter()
+            .map(|ph| {
+                ph.repeats as f64 * ph.kernels.iter().map(|k| k.hbm_bytes).sum::<f64>()
+            })
+            .sum();
+        bytes / total / crate::util::units::gibs(total_bw_gibs)
+    }
+
+    /// Scale iteration counts (for fast tests / longer runs).
+    pub fn scaled(&self, factor: f64) -> AppModel {
+        assert!(factor > 0.0);
+        let mut out = self.clone();
+        for ph in &mut out.phases {
+            ph.repeats = ((ph.repeats as f64 * factor).round() as u32).max(1);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{Pipeline, PipelineMix};
+
+    fn spec() -> GpuSpec {
+        GpuSpec::gh_h100_96gb()
+    }
+
+    fn full_env() -> ExecEnv {
+        ExecEnv {
+            sms: 132,
+            clock_frac: 1.0,
+            bw_gibs: 3175.0,
+            c2c_bw_gibs: 340.0,
+            interference: 1.0,
+            time_share: 1.0,
+        }
+    }
+
+    fn compute_kernel() -> KernelSpec {
+        KernelSpec {
+            name: "k",
+            mix: PipelineMix::pure(Pipeline::Fp32),
+            flops: 6e12,
+            hbm_bytes: 1e9,
+            c2c_bytes: 0.0,
+            c2c_read_only: true,
+            blocks: 1 << 16,
+            warps_per_block: 8,
+            resident_per_sm: 8,
+            bw_eff: 0.8,
+        }
+    }
+
+    #[test]
+    fn compute_bound_scales_with_sms_and_clock() {
+        let s = spec();
+        let k = compute_kernel();
+        let t_full = k.duration_s(&s, &full_env());
+        // ~0.1 s on 60 TFLOP/s.
+        assert!((t_full - 0.1).abs() / 0.1 < 0.05, "t_full={t_full}");
+        let t_half_clock = k.duration_s(
+            &s,
+            &ExecEnv {
+                clock_frac: 0.5,
+                ..full_env()
+            },
+        );
+        assert!((t_half_clock / t_full - 2.0).abs() < 0.02);
+        let t_16sm = k.duration_s(
+            &s,
+            &ExecEnv {
+                sms: 16,
+                ..full_env()
+            },
+        );
+        assert!(t_16sm / t_full > 7.0, "strong scaling ratio");
+    }
+
+    #[test]
+    fn memory_bound_ignores_clock() {
+        let s = spec();
+        let k = KernelSpec {
+            flops: 1e9,
+            hbm_bytes: 64e9,
+            ..compute_kernel()
+        };
+        let t1 = k.duration_s(&s, &full_env());
+        let t2 = k.duration_s(
+            &s,
+            &ExecEnv {
+                clock_frac: 0.92,
+                ..full_env()
+            },
+        );
+        assert_eq!(t1, t2, "memory-bound kernels are DVFS-insensitive");
+    }
+
+    #[test]
+    fn c2c_bound_kernel() {
+        let s = spec();
+        let k = KernelSpec {
+            flops: 0.0,
+            hbm_bytes: 0.0,
+            c2c_bytes: 34e9,
+            ..compute_kernel()
+        };
+        let t = k.duration_s(&s, &full_env());
+        // 34 GB over ~340 GiB/s ≈ 93 ms.
+        assert!((t - 0.0931).abs() < 0.01, "t={t}");
+    }
+
+    #[test]
+    fn runtime_and_occupancy_aggregate() {
+        let s = spec();
+        let app = AppModel {
+            name: "toy",
+            description: "",
+            input: "",
+            footprint_gib: 1.0,
+            cold_frac: 0.0,
+            cpu_corun_inflation: 1.0,
+            swap_frac: None,
+            startup_s: 0.0,
+            phases: vec![MacroPhase {
+                cpu_s: 0.1,
+                kernels: vec![compute_kernel()],
+                repeats: 10,
+            }],
+            perf_unit: "runs/s",
+        };
+        let t = app.runtime_quiet_s(&s, &full_env());
+        assert!((t - 10.0 * (0.1 + 0.1)).abs() < 0.02, "t={t}");
+        let occ = app.avg_occupancy_quiet(&s, &full_env());
+        // Kernel occupancy 1.0 (full residency) × ~50% busy.
+        assert!((occ - 0.5).abs() < 0.05, "occ={occ}");
+        assert_eq!(app.total_kernels(), 10);
+    }
+
+    #[test]
+    fn scaled_preserves_at_least_one_iter() {
+        let s = AppModel {
+            name: "toy",
+            description: "",
+            input: "",
+            footprint_gib: 1.0,
+            cold_frac: 0.0,
+            cpu_corun_inflation: 1.0,
+            swap_frac: None,
+            startup_s: 0.0,
+            phases: vec![MacroPhase {
+                cpu_s: 0.0,
+                kernels: vec![compute_kernel()],
+                repeats: 7,
+            }],
+            perf_unit: "runs/s",
+        };
+        assert_eq!(s.scaled(0.01).phases[0].repeats, 1);
+        assert_eq!(s.scaled(2.0).phases[0].repeats, 14);
+    }
+}

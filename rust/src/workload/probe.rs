@@ -1,0 +1,102 @@
+//! Measurement probes from the paper's methodology:
+//! - §III-C: the SM-count probe (fixed-work kernel, increasing block
+//!   count, detect the runtime doubling at N_SM + 1);
+//! - §IV-B: the null-context probe quantifying per-process context memory
+//!   overhead under each sharing scheme.
+
+use crate::gpu::sm;
+use crate::mig::profile::{GiProfile, ALL_PROFILES};
+use crate::sharing::{ContextModel, Scheme};
+
+/// Result of probing one MIG profile.
+#[derive(Debug, Clone)]
+pub struct SmProbeResult {
+    pub profile: &'static str,
+    /// SM count reported by the (modelled) driver.
+    pub reported_sms: u32,
+    /// SM count recovered by the runtime-doubling probe.
+    pub measured_sms: u32,
+    /// Block count at which runtime first doubled.
+    pub doubling_n: u64,
+}
+
+/// Run the §III-C probe across all MIG profiles. In the paper "those two
+/// values matched in all situations" — the test below asserts the same.
+pub fn probe_all_profiles() -> Vec<SmProbeResult> {
+    ALL_PROFILES
+        .iter()
+        .map(|&id| {
+            let p = GiProfile::get(id);
+            let measured = sm::measure_sm_count(p.sms);
+            SmProbeResult {
+                profile: p.name,
+                reported_sms: p.sms,
+                measured_sms: measured,
+                doubling_n: measured as u64 + 1,
+            }
+        })
+        .collect()
+}
+
+/// Result of the context-overhead probe for one scheme.
+#[derive(Debug, Clone)]
+pub struct ContextProbeResult {
+    pub scheme: String,
+    pub processes: u32,
+    pub per_process_gib: f64,
+    pub total_gib: f64,
+}
+
+/// Run the §IV-B null-context probe for the co-run schemes.
+pub fn probe_context_overhead(processes: u32) -> Vec<ContextProbeResult> {
+    let model = ContextModel::default();
+    let schemes = [
+        Scheme::Mig {
+            profile: crate::mig::ProfileId::P1g12gb,
+            copies: processes,
+        },
+        Scheme::TimeSlice { copies: processes },
+        Scheme::Mps {
+            sm_pct: 13,
+            copies: processes,
+        },
+    ];
+    schemes
+        .iter()
+        .map(|s| ContextProbeResult {
+            scheme: s.label(),
+            processes,
+            per_process_gib: model.per_process_gib(s),
+            total_gib: model.total_gib(s, processes),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_matches_reported_everywhere() {
+        for r in probe_all_profiles() {
+            assert_eq!(
+                r.measured_sms, r.reported_sms,
+                "{}: probe disagrees with driver",
+                r.profile
+            );
+            assert_eq!(r.doubling_n, r.reported_sms as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn context_probe_reproduces_section4b() {
+        let rs = probe_context_overhead(7);
+        let mig = &rs[0];
+        let ts = &rs[1];
+        let mps = &rs[2];
+        assert!((mig.per_process_gib - 0.060).abs() < 1e-9);
+        assert!((ts.per_process_gib - 0.600).abs() < 1e-9);
+        assert!((mps.total_gib - 0.600).abs() < 1e-9);
+        assert!(ts.total_gib > mig.total_gib);
+    }
+}

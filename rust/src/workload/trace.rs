@@ -1,0 +1,168 @@
+//! Job-arrival traces for the cluster-level scheduler experiments.
+//!
+//! The paper's motivation is multi-tenant sharing: jobs of the Table III
+//! mix arriving over time onto one statically-partitioned GPU. No public
+//! trace exists for this setting, so traces are synthesized (Poisson
+//! arrivals over a configurable app mix) with the deterministic in-repo
+//! PRNG, and can be persisted/loaded as JSON for reproducible runs.
+
+use crate::util::json::Json;
+use crate::util::Rng;
+use crate::workload::{apps, AppId};
+use anyhow::anyhow;
+
+/// One job in a trace.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u32,
+    pub app: AppId,
+    pub arrival_s: f64,
+}
+
+/// A job-arrival trace.
+#[derive(Debug, Clone, Default)]
+pub struct JobTrace {
+    pub jobs: Vec<Job>,
+}
+
+impl JobTrace {
+    /// Synthesize `n` jobs with exponential inter-arrivals (mean
+    /// `mean_interarrival_s`) drawn from `mix` (app, weight) pairs.
+    pub fn poisson(
+        n: u32,
+        mean_interarrival_s: f64,
+        mix: &[(AppId, f64)],
+        seed: u64,
+    ) -> JobTrace {
+        assert!(!mix.is_empty() && mean_interarrival_s > 0.0);
+        let total_w: f64 = mix.iter().map(|(_, w)| w).sum();
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let mut jobs = Vec::with_capacity(n as usize);
+        for id in 0..n {
+            // Exponential inter-arrival.
+            t += -mean_interarrival_s * (1.0 - rng.f64()).ln();
+            let mut pick = rng.f64() * total_w;
+            let mut app = mix[0].0;
+            for (a, w) in mix {
+                if pick < *w {
+                    app = *a;
+                    break;
+                }
+                pick -= w;
+            }
+            jobs.push(Job {
+                id,
+                app,
+                arrival_s: t,
+            });
+        }
+        JobTrace { jobs }
+    }
+
+    /// The paper's suite as a uniform mix.
+    pub fn suite_mix() -> Vec<(AppId, f64)> {
+        apps::suite().into_iter().map(|a| (a, 1.0)).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set(
+            "jobs",
+            Json::Arr(
+                self.jobs
+                    .iter()
+                    .map(|j| {
+                        let mut o = Json::obj();
+                        o.set("id", j.id)
+                            .set("app", j.app.name())
+                            .set("arrival_s", j.arrival_s);
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        doc
+    }
+
+    pub fn from_json(doc: &Json) -> crate::Result<JobTrace> {
+        let arr = doc
+            .get("jobs")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow!("trace missing 'jobs'"))?;
+        let mut jobs = Vec::with_capacity(arr.len());
+        for j in arr {
+            let name = j
+                .get("app")
+                .and_then(|a| a.as_str())
+                .ok_or_else(|| anyhow!("job missing app"))?;
+            jobs.push(Job {
+                id: j.get("id").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                app: AppId::by_name(name).ok_or_else(|| anyhow!("unknown app '{name}'"))?,
+                arrival_s: j
+                    .get("arrival_s")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow!("job missing arrival"))?,
+            });
+        }
+        Ok(JobTrace { jobs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_properties() {
+        let trace = JobTrace::poisson(500, 10.0, &JobTrace::suite_mix(), 42);
+        assert_eq!(trace.len(), 500);
+        // Arrivals strictly increasing.
+        for w in trace.jobs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+        // Mean inter-arrival within 15% of requested.
+        let span = trace.jobs.last().unwrap().arrival_s;
+        let mean = span / 500.0;
+        assert!((mean - 10.0).abs() / 10.0 < 0.15, "mean={mean}");
+        // All suite apps appear.
+        for app in apps::suite() {
+            assert!(
+                trace.jobs.iter().any(|j| j.app == app),
+                "{} missing from mix",
+                app.name()
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = JobTrace::poisson(50, 5.0, &JobTrace::suite_mix(), 7);
+        let b = JobTrace::poisson(50, 5.0, &JobTrace::suite_mix(), 7);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.app, y.app);
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+        let c = JobTrace::poisson(50, 5.0, &JobTrace::suite_mix(), 8);
+        assert!(a.jobs.iter().zip(&c.jobs).any(|(x, y)| x.arrival_s != y.arrival_s));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let a = JobTrace::poisson(20, 3.0, &JobTrace::suite_mix(), 9);
+        let doc = a.to_json();
+        let b = JobTrace::from_json(&doc).unwrap();
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.jobs[7].app, b.jobs[7].app);
+        assert_eq!(a.jobs[7].arrival_s, b.jobs[7].arrival_s);
+    }
+}

@@ -1,0 +1,286 @@
+//! Integration tests: cross-module behaviour of the full stack —
+//! experiments over the coordinator, offloading through the simulator,
+//! CLI parsing into runs, results persistence, and (when artifacts are
+//! built) the PJRT runtime.
+
+use migsim::config::SimConfig;
+use migsim::coordinator::corun::{simulate, CorunSpec};
+use migsim::experiments;
+use migsim::mig::ProfileId;
+use migsim::offload::OffloadPlan;
+use migsim::sharing::Scheme;
+use migsim::util::json::Json;
+use migsim::workload::{apps, AppId};
+
+fn cfg() -> SimConfig {
+    SimConfig {
+        workload_scale: 0.04,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn every_experiment_runs_and_serializes() {
+    let c = cfg();
+    for id in experiments::ALL_IDS {
+        let out = experiments::run(id, &c).unwrap_or_else(|e| panic!("{id}: {e}"));
+        // JSON document must round-trip through our own parser.
+        let text = out.json.pretty();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert_eq!(back, out.json, "{id} JSON not canonical");
+        assert!(!out.render().is_empty());
+    }
+}
+
+#[test]
+fn fig5_fig6_consistency() {
+    // Fig. 5 and Fig. 6 run the same sims: an app's MIG energy ratio and
+    // throughput gain must be mutually consistent (energy ≈ avg-power
+    // ratio / speedup within a loose band).
+    let c = cfg();
+    let f5 = experiments::run("fig5", &c).unwrap();
+    let f6 = experiments::run("fig6", &c).unwrap();
+    let tp = f5.json.get("throughput").unwrap().as_arr().unwrap();
+    let en = f6.json.get("energy").unwrap().as_arr().unwrap();
+    assert_eq!(tp.len(), en.len());
+    for (t, e) in tp.iter().zip(en) {
+        assert_eq!(t.get("app").unwrap(), e.get("app").unwrap());
+        let speed = t.get("mig_7x1g").unwrap().as_f64().unwrap();
+        let energy = e.get("mig_7x1g").unwrap().as_f64().unwrap();
+        // Faster co-runs must not cost proportionally more energy.
+        assert!(
+            energy <= 1.30 / speed.min(1.5) + 0.75,
+            "{}: speed {speed:.2} energy {energy:.2}",
+            t.get("app").unwrap()
+        );
+    }
+}
+
+#[test]
+fn offload_end_to_end_slowdown_ordering() {
+    // Large llama on 1g+offload must be slower than on 2g.24gb but must
+    // complete, and its resident footprint must fit the slice.
+    let c = cfg();
+    let app = apps::model(AppId::Llama3Fp16);
+    let plan = OffloadPlan::plan(&app, 10.94).unwrap();
+    assert!(plan.spilled_gib > 5.0);
+    let off_spec = CorunSpec {
+        offload: vec![Some(plan)],
+        ..CorunSpec::homogeneous(
+            Scheme::Mig {
+                profile: ProfileId::P1g12gb,
+                copies: 1,
+            },
+            AppId::Llama3Fp16,
+        )
+    };
+    let (off, _) = simulate(&off_spec, &c).unwrap();
+    let (two_g, _) = simulate(
+        &CorunSpec::homogeneous(
+            Scheme::Mig {
+                profile: ProfileId::P2g24gb,
+                copies: 1,
+            },
+            AppId::Llama3Fp16,
+        ),
+        &c,
+    )
+    .unwrap();
+    let (full, _) = simulate(
+        &CorunSpec::homogeneous(Scheme::Full, AppId::Llama3Fp16),
+        &c,
+    )
+    .unwrap();
+    assert!(off.makespan_s > two_g.makespan_s, "offload pays a C2C cost");
+    assert!(two_g.makespan_s > full.makespan_s);
+    assert!(off.peak_mem_gib <= 11.0 + 1e-6);
+}
+
+#[test]
+fn heterogeneous_corun_mix() {
+    // Different apps on different MIG instances at once.
+    let spec = CorunSpec {
+        scheme: Scheme::Mig {
+            profile: ProfileId::P1g12gb,
+            copies: 7,
+        },
+        apps: vec![
+            AppId::Qiskit30,
+            AppId::NekRs,
+            AppId::Faiss,
+            AppId::Hotspot,
+            AppId::Lammps,
+            AppId::Llama3Q8,
+            AppId::StreamGpu,
+        ],
+        sequential: false,
+        offload: vec![None; 7],
+        record_traces: false,
+        fault_at: None,
+    };
+    let (m, _) = simulate(&spec, &cfg()).unwrap();
+    assert_eq!(m.copy_runtimes_s.len(), 7);
+    // All copies finished; occupancy positive; no NaNs anywhere.
+    assert!(m.copy_runtimes_s.iter().all(|t| t.is_finite() && *t > 0.0));
+    assert!(m.avg_occupancy > 0.0 && m.avg_occupancy < 1.0);
+    assert!(m.energy_j.is_finite() && m.energy_j > 0.0);
+}
+
+#[test]
+fn jitter_changes_runtimes_but_not_feasibility() {
+    let mut c = cfg();
+    c.jitter_rel = 0.1;
+    c.seed = 1;
+    let spec = CorunSpec::homogeneous(
+        Scheme::Mig {
+            profile: ProfileId::P1g12gb,
+            copies: 7,
+        },
+        AppId::Faiss,
+    );
+    let (a, _) = simulate(&spec, &c).unwrap();
+    c.seed = 2;
+    let (b, _) = simulate(&spec, &c).unwrap();
+    assert_ne!(a.makespan_s, b.makespan_s, "jitter should differ by seed");
+    let rel = (a.makespan_s - b.makespan_s).abs() / a.makespan_s;
+    assert!(rel < 0.2, "jitter should stay moderate: {rel}");
+}
+
+#[test]
+fn mps_error_domain_is_shared_mig_is_not() {
+    let gpu = migsim::gpu::GpuSpec::gh_h100_96gb();
+    let mps = migsim::sharing::scheme::partitions(
+        &Scheme::Mps {
+            sm_pct: 13,
+            copies: 7,
+        },
+        &gpu,
+    )
+    .unwrap();
+    assert!(mps.iter().all(|p| !p.error_isolated));
+    let mig = migsim::sharing::scheme::partitions(
+        &Scheme::Mig {
+            profile: ProfileId::P1g12gb,
+            copies: 7,
+        },
+        &gpu,
+    )
+    .unwrap();
+    assert!(mig.iter().all(|p| p.error_isolated));
+}
+
+#[test]
+fn cli_args_to_run_shape() {
+    let a = migsim::cli::Args::parse(
+        ["run", "--app", "nekrs", "--scheme", "mig", "--copies", "7"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap();
+    assert_eq!(a.command, "run");
+    assert_eq!(a.opt("app"), Some("nekrs"));
+    assert_eq!(a.opt_u64("copies", 1).unwrap(), 7);
+}
+
+#[test]
+fn results_are_written_and_valid() {
+    let c = SimConfig {
+        results_dir: std::env::temp_dir()
+            .join("migsim-int-results")
+            .to_str()
+            .unwrap()
+            .to_string(),
+        ..cfg()
+    };
+    let out = experiments::run("table2", &c).unwrap();
+    let path =
+        migsim::coordinator::report::write_results(&c.results_dir, "table2", &out.json).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(Json::parse(&text).is_ok());
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn runtime_round_trip_if_artifacts_present() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime round trip: run `make artifacts` first");
+        return;
+    }
+    let reg = migsim::runtime::Registry::load(dir).unwrap();
+    assert!(reg.len() >= 8, "expected the full artifact catalogue");
+    let mut exec = migsim::runtime::Executor::new().unwrap();
+    // Deterministic across executions.
+    let s1 = exec.smoke_run(&reg, "faiss_query").unwrap();
+    let s2 = exec.smoke_run(&reg, "faiss_query").unwrap();
+    assert_eq!(s1.checksum, s2.checksum);
+    assert_eq!(s1.elements, 8192);
+}
+
+#[test]
+fn workload_scale_preserves_ratios() {
+    // The headline speedup must be scale-invariant (modulo sampling).
+    let mut gains = Vec::new();
+    for scale in [0.04, 0.12] {
+        let c = SimConfig {
+            workload_scale: scale,
+            ..SimConfig::default()
+        };
+        let (serial, _) = simulate(&CorunSpec::serial(AppId::NekRs, 7), &c).unwrap();
+        let (mig, _) = simulate(
+            &CorunSpec::homogeneous(
+                Scheme::Mig {
+                    profile: ProfileId::P1g12gb,
+                    copies: 7,
+                },
+                AppId::NekRs,
+            ),
+            &c,
+        )
+        .unwrap();
+        gains.push(serial.makespan_s / mig.makespan_s);
+    }
+    let rel = (gains[0] - gains[1]).abs() / gains[1];
+    assert!(rel < 0.1, "scale sensitivity too high: {gains:?}");
+}
+
+#[test]
+fn fault_injection_mps_kills_corunners_mig_contains() {
+    // §II-B2: MPS has no error isolation — a fatal fault in one client
+    // returns errors in every co-runner. MIG contains the blast radius.
+    let c = cfg();
+    let mut mps = CorunSpec::homogeneous(
+        Scheme::Mps {
+            sm_pct: 13,
+            copies: 7,
+        },
+        AppId::Lammps,
+    );
+    mps.fault_at = Some((2, 0.3));
+    let (m, _) = simulate(&mps, &c).unwrap();
+    assert_eq!(m.failed_copies, 7, "MPS fault must kill all co-runners");
+
+    let mut mig = CorunSpec::homogeneous(
+        Scheme::Mig {
+            profile: ProfileId::P1g12gb,
+            copies: 7,
+        },
+        AppId::Lammps,
+    );
+    mig.fault_at = Some((2, 0.3));
+    let (m, _) = simulate(&mig, &c).unwrap();
+    assert_eq!(m.failed_copies, 1, "MIG contains the fault to one instance");
+    // The six survivors still completed a full run, so the makespan is a
+    // real one (longer than the fault time).
+    assert!(m.makespan_s > 0.3);
+}
+
+#[test]
+fn fault_free_runs_report_zero_failures() {
+    let (m, _) = simulate(
+        &CorunSpec::homogeneous(Scheme::Full, AppId::Hotspot),
+        &cfg(),
+    )
+    .unwrap();
+    assert_eq!(m.failed_copies, 0);
+}

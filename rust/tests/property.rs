@@ -1,0 +1,259 @@
+//! Property-based tests (proptest is unavailable offline; the in-repo
+//! deterministic PRNG drives randomized case generation with fixed seeds
+//! — failures reproduce exactly).
+
+use migsim::coordinator::corun::water_fill;
+use migsim::gpu::{GpuSpec, GpuUsage, PowerModel, PowerState};
+use migsim::mig::{profile::ALL_PROFILES, MigManager};
+use migsim::offload::SpillAllocator;
+use migsim::reward::{reward, ConfigEval, GpuTotals};
+use migsim::sim::Engine;
+use migsim::util::json::Json;
+use migsim::util::Rng;
+
+const CASES: usize = 200;
+
+#[test]
+fn water_fill_conserves_and_respects_caps() {
+    let mut rng = Rng::new(0xF111);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(8) as usize;
+        let desires: Vec<f64> = (0..n).map(|_| rng.range(0.0, 500.0)).collect();
+        let caps: Vec<f64> = (0..n).map(|_| rng.range(50.0, 500.0)).collect();
+        let pool = rng.range(50.0, 1200.0);
+        let grant = water_fill(&desires, &caps, pool);
+        let mut granted_from_pool = 0.0;
+        for i in 0..n {
+            assert!(grant[i] >= -1e-9, "negative grant");
+            assert!(grant[i] <= caps[i] + 1e-9, "cap violated");
+            if desires[i] > 0.0 {
+                assert!(grant[i] <= desires[i].min(caps[i]) + 1e-9, "over-grant");
+                granted_from_pool += grant[i];
+            }
+        }
+        assert!(
+            granted_from_pool <= pool + 1e-6,
+            "pool over-committed: {granted_from_pool} > {pool}"
+        );
+        // Max-min fairness: if someone got less than demand, nobody with
+        // demand got more than (their grant + epsilon) unless satisfied.
+        let unsat: Vec<usize> = (0..n)
+            .filter(|&i| desires[i] > 0.0 && grant[i] + 1e-6 < desires[i].min(caps[i]))
+            .collect();
+        if let Some(&i) = unsat.first() {
+            for j in 0..n {
+                if desires[j] > 0.0 && grant[j] > grant[i] + 1e-6 {
+                    assert!(
+                        grant[j] >= desires[j].min(caps[j]) - 1e-6 || grant[j] <= caps[j],
+                        "unfair allocation: {j} got {} while {i} starved at {}",
+                        grant[j],
+                        grant[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn spill_allocator_invariants_under_random_ops() {
+    let mut rng = Rng::new(0xA110C);
+    for case in 0..60 {
+        let cap = 1000 + rng.below(5000);
+        let mut alloc = SpillAllocator::new(cap);
+        let mut live = Vec::new();
+        for _ in 0..200 {
+            match rng.below(10) {
+                0..=4 => {
+                    let sz = 1 + rng.below(cap / 2);
+                    let pinned = rng.chance(0.2);
+                    if let Ok(id) = alloc.alloc(sz, pinned) {
+                        live.push(id);
+                    }
+                }
+                5..=6 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let id = live.swap_remove(i);
+                        alloc.free(id).unwrap();
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        alloc.touch(live[i]).unwrap();
+                    }
+                }
+            }
+            alloc.check_invariants();
+        }
+        assert!(alloc.device_used() <= cap, "case {case}");
+    }
+}
+
+#[test]
+fn mig_manager_slice_accounting_under_random_ops() {
+    let mut rng = Rng::new(0x3161);
+    for _ in 0..60 {
+        let mut mgr = MigManager::new(GpuSpec::gh_h100_96gb());
+        let mut cis = Vec::new();
+        for _ in 0..80 {
+            if rng.chance(0.6) {
+                let p = *rng.choose(&ALL_PROFILES);
+                if let Ok(ci) = mgr.create_full(p) {
+                    cis.push(ci);
+                }
+            } else if !cis.is_empty() {
+                let i = rng.below(cis.len() as u64) as usize;
+                let ci = cis.swap_remove(i);
+                let gi = mgr.ci(ci).unwrap().gi;
+                mgr.destroy_ci(ci).unwrap();
+                mgr.destroy_gi(gi).unwrap();
+            }
+            // Invariants: slice budgets never exceeded.
+            let used_c: u32 = mgr.gis().iter().map(|g| g.profile.compute_slices).sum();
+            let used_m: u32 = mgr.gis().iter().map(|g| g.profile.memory_slices).sum();
+            assert!(used_c <= 7 && used_m <= 8);
+            assert_eq!(used_c, 7 - mgr.compute_slices_free());
+            assert_eq!(used_m, 8 - mgr.memory_slices_free());
+            assert!(mgr.gis().len() <= 7);
+            // Exposed SMs never exceed the physical count.
+            assert!(mgr.exposed_sms() <= 132);
+        }
+    }
+}
+
+#[test]
+fn json_fuzz_roundtrip() {
+    let mut rng = Rng::new(0x1503);
+    fn gen(rng: &mut Rng, depth: u32) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.range(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let len = rng.below(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| char::from_u32(0x20 + rng.below(0x50) as u32).unwrap())
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o.set(&format!("k{i}"), gen(rng, depth + 1));
+                }
+                o
+            }
+        }
+    }
+    for _ in 0..CASES {
+        let v = gen(&mut rng, 0);
+        assert_eq!(Json::parse(&v.compact()).unwrap(), v);
+        assert_eq!(Json::parse(&v.pretty()).unwrap(), v);
+    }
+}
+
+#[test]
+fn engine_never_goes_backwards_random_schedules() {
+    let mut rng = Rng::new(0xE6E);
+    for _ in 0..40 {
+        let mut e: Engine<u32> = Engine::new();
+        let mut pending = 0u32;
+        for i in 0..500u32 {
+            e.schedule_in(rng.below(10_000), i);
+            pending += 1;
+        }
+        let mut last = 0;
+        let mut popped = 0;
+        while let Some(s) = e.pop() {
+            assert!(s.time_ns >= last, "time went backwards");
+            last = s.time_ns;
+            popped += 1;
+            // Randomly schedule more or cancel.
+            if rng.chance(0.2) && popped < 2000 {
+                e.schedule_in(rng.below(5_000), 999);
+                pending += 1;
+            }
+        }
+        assert!(popped <= pending);
+    }
+}
+
+#[test]
+fn reward_monotonicity_properties() {
+    let mut rng = Rng::new(0x4E4A);
+    let totals = GpuTotals {
+        sms: 132,
+        mem_gib: 94.5,
+        perf_full_gpu: 1.0,
+    };
+    for _ in 0..CASES {
+        let e = ConfigEval {
+            config: "x".into(),
+            perf: rng.range(0.01, 1.5),
+            occupancy: rng.range(0.0, 1.0),
+            sms: 1 + rng.below(132) as u32,
+            mem_instance_gib: rng.range(5.0, 94.5),
+            mem_app_gib: rng.range(0.1, 94.5),
+        };
+        // R decreases in α.
+        let r0 = reward(&e, &totals, 0.0).reward;
+        let r1 = reward(&e, &totals, 0.5).reward;
+        let r2 = reward(&e, &totals, 1.0).reward;
+        assert!(r0 >= r1 && r1 >= r2, "R must fall as α grows");
+        // R increases in perf, all else equal.
+        let mut faster = e.clone();
+        faster.perf *= 1.5;
+        assert!(reward(&faster, &totals, 0.3).reward > reward(&e, &totals, 0.3).reward);
+        // R increases in occupancy (less SM waste), all else equal.
+        let mut busier = e.clone();
+        busier.occupancy = (e.occupancy + 0.3).min(1.0);
+        assert!(
+            reward(&busier, &totals, 0.3).reward >= reward(&e, &totals, 0.3).reward,
+            "higher occupancy must not reduce reward"
+        );
+        // Waste terms stay in [0, ~1].
+        let r = reward(&e, &totals, 0.0);
+        assert!((0.0..=1.0).contains(&r.w_sm));
+        assert!((0.0..=1.0).contains(&r.w_mem));
+    }
+}
+
+#[test]
+fn power_governor_stability_random_loads() {
+    // The governor must never oscillate unboundedly nor leave the
+    // [min, max] clock band under any constant load.
+    let spec = GpuSpec::gh_h100_96gb();
+    let model = PowerModel::h100();
+    let mut rng = Rng::new(0x90BE);
+    for _ in 0..CASES {
+        let mut usage = GpuUsage {
+            context_active: true,
+            sm_busy_frac: rng.range(0.0, 1.0),
+            hbm_rate_tbs: rng.range(0.0, 3.4),
+            c2c_rate_tbs: rng.range(0.0, 0.35),
+            ..Default::default()
+        };
+        usage.flop_rate_tflops[1] = rng.range(0.0, 60.0);
+        usage.flop_rate_tflops[3] = rng.range(0.0, 600.0);
+        let mut ps = PowerState::new(&spec);
+        let mut clocks = Vec::new();
+        for _ in 0..300 {
+            ps.govern(&spec, &model, &usage, 0.02);
+            assert!(ps.clock_mhz >= spec.clock_min_mhz - 1e-9);
+            assert!(ps.clock_mhz <= spec.clock_max_mhz + 1e-9);
+            clocks.push(ps.clock_mhz);
+        }
+        // Settled: last 50 polls move at most one step per poll and stay
+        // within a small band.
+        let tail = &clocks[250..];
+        let lo = tail.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = tail.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            hi - lo <= 4.0 * spec.clock_step_mhz + 1e-9,
+            "governor oscillates: band {lo}..{hi}"
+        );
+    }
+}
