@@ -65,7 +65,7 @@ fn main() {
         bw_gibs: 406.0,
         c2c_bw_gibs: 282.0,
         interference: 1.0,
-            time_share: 1.0,
+        time_share: 1.0,
     };
     b.bench_with_work("model/kernel_duration", Some(1.0), "calls", || {
         kernel.duration_s(&spec, &env)

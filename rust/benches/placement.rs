@@ -1,0 +1,91 @@
+//! Placement hot-path microbenchmarks: per-decision cost of the three
+//! serving policies over a warm cost cache (the steady state of a long
+//! serving run), the cold-cache cost model evaluation, and a full
+//! `cluster::serve` run in events/s.
+//!
+//!     cargo bench --offline --bench placement
+
+use migsim::bench::Bencher;
+use migsim::cluster::{serve, Fleet, LayoutPreset, Planner, PolicyKind, ServeConfig};
+use migsim::workload::AppId;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Per-decision placement cost with a warm cache: a table scan over
+    // the fleet's idle slots. 8 GPUs of mixed layouts ≈ 30 slots.
+    let fleet = Fleet::new(8, LayoutPreset::Mixed).unwrap();
+    let apps = [
+        AppId::Faiss,
+        AppId::Hotspot,
+        AppId::Llama3Fp16,
+        AppId::Qiskit30,
+        AppId::NekRs,
+    ];
+    for policy in [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ] {
+        let mut planner = Planner::new(0.05);
+        // Warm the cache.
+        for app in apps {
+            migsim::bench::black_box(planner.place(&fleet, app, policy));
+        }
+        b.bench_with_work(
+            &format!("place/warm_{}", policy.label()),
+            Some(apps.len() as f64),
+            "decisions",
+            || {
+                let mut acc = 0usize;
+                for app in apps {
+                    if planner.place(&fleet, app, policy).is_some() {
+                        acc += 1;
+                    }
+                }
+                acc
+            },
+        );
+    }
+
+    // Cold cost-model evaluation (runtime + rates for app x profile).
+    b.bench_with_work("place/cold_cost_model", Some(apps.len() as f64), "evals", || {
+        let mut planner = Planner::new(0.05);
+        let mut acc = 0usize;
+        for app in apps {
+            if planner
+                .cost(app, migsim::mig::ProfileId::P1g12gb, true)
+                .is_some()
+            {
+                acc += 1;
+            }
+        }
+        acc
+    });
+
+    // End-to-end serving runs (arrivals + placement + completion events).
+    for (label, policy) in [
+        ("serve/first_fit_60jobs", PolicyKind::FirstFit),
+        (
+            "serve/offload_aware_60jobs",
+            PolicyKind::OffloadAware { alpha_centi: 10 },
+        ),
+    ] {
+        let cfg = ServeConfig {
+            gpus: 4,
+            policy,
+            layout: LayoutPreset::AllSmall,
+            arrival_rate_hz: 2.0,
+            jobs: 60,
+            deadline_s: 30.0,
+            reconfig: true,
+            seed: 7,
+            workload_scale: 0.05,
+        };
+        b.bench_with_work(label, Some(60.0), "jobs", || {
+            serve(&cfg).unwrap().completed
+        });
+    }
+
+    b.finish("placement");
+}

@@ -1,0 +1,377 @@
+//! The GPU fleet: N statically-partitioned GPUs, each carrying a MIG
+//! layout (a list of GI profiles validated against the slice budget) whose
+//! instances act as serving slots.
+//!
+//! A node can be *repartitioned* while fully idle (the §II-B3 static-
+//! configuration constraint, lifted to the fleet level: reconfiguration is
+//! allowed, but only on a drained GPU and only through layouts that the
+//! `MigManager` slice-budget validation accepts). While a reconfiguration
+//! is in flight the node serves nothing.
+
+use crate::gpu::GpuSpec;
+use crate::mig::profile::{GiProfile, ProfileId};
+use crate::mig::MigManager;
+use anyhow::{bail, ensure};
+
+/// What a serving slot (one MIG instance) is doing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SlotState {
+    Idle,
+    Busy {
+        job: u32,
+        started_s: f64,
+        until_s: f64,
+    },
+}
+
+/// One MIG instance acting as a serving slot.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub profile: GiProfile,
+    pub state: SlotState,
+    /// Cumulative busy time (slot-seconds of service).
+    pub busy_accum_s: f64,
+}
+
+impl Slot {
+    fn new(profile_id: ProfileId) -> Slot {
+        Slot {
+            profile: GiProfile::get(profile_id),
+            state: SlotState::Idle,
+            busy_accum_s: 0.0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.state == SlotState::Idle
+    }
+}
+
+/// Initial per-GPU layout assignment for a fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayoutPreset {
+    /// Cycle through four complementary layouts (fine slices on GPU 0,
+    /// progressively coarser on the rest) — the operator's hedge when the
+    /// job mix is unknown.
+    Mixed,
+    /// Every GPU split into 7x1g.12gb — maximum slot count, no slice
+    /// admits a >11 GiB job without offloading or reconfiguration.
+    AllSmall,
+    /// Every GPU left whole (1x7g.96gb).
+    AllBig,
+}
+
+impl LayoutPreset {
+    pub fn parse(s: &str) -> Option<LayoutPreset> {
+        match s {
+            "mixed" => Some(LayoutPreset::Mixed),
+            "small" => Some(LayoutPreset::AllSmall),
+            "big" => Some(LayoutPreset::AllBig),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayoutPreset::Mixed => "mixed",
+            LayoutPreset::AllSmall => "small",
+            LayoutPreset::AllBig => "big",
+        }
+    }
+
+    /// The layout for GPU `idx` under this preset.
+    pub fn layout_for(&self, idx: usize) -> Vec<ProfileId> {
+        use ProfileId::*;
+        match self {
+            LayoutPreset::AllSmall => class_layout(P1g12gb),
+            LayoutPreset::AllBig => class_layout(P7g96gb),
+            LayoutPreset::Mixed => match idx % 4 {
+                0 => class_layout(P1g12gb),
+                1 => class_layout(P2g24gb),
+                2 => class_layout(P4g48gb),
+                _ => class_layout(P3g48gb),
+            },
+        }
+    }
+}
+
+/// The canonical packed whole-GPU layout whose *largest* instance is
+/// `class`: the single source of truth shared by the fleet presets and by
+/// `reconfig::plan_for_footprint`, so reconfiguration targets always match
+/// the preset shapes (`plan_reconfig` compares layouts for equality).
+pub fn class_layout(class: ProfileId) -> Vec<ProfileId> {
+    use ProfileId::*;
+    match class {
+        P1g12gb => vec![P1g12gb; 7],
+        P1g24gb => vec![P1g24gb; 4],
+        P2g24gb => vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb],
+        P3g48gb => vec![P3g48gb, P3g48gb],
+        P4g48gb => vec![P4g48gb, P3g48gb],
+        P7g96gb => vec![P7g96gb],
+    }
+}
+
+/// Check a layout against the MIG slice budget by actually creating the
+/// instances through the manager (the single source of placement truth).
+pub fn validate_layout(layout: &[ProfileId]) -> crate::Result<()> {
+    ensure!(!layout.is_empty(), "a GPU layout needs at least one instance");
+    let mut mgr = MigManager::new(GpuSpec::gh_h100_96gb());
+    for p in layout {
+        mgr.create_full(*p)?;
+    }
+    Ok(())
+}
+
+/// One GPU of the fleet.
+#[derive(Debug)]
+pub struct GpuNode {
+    pub id: usize,
+    pub layout: Vec<ProfileId>,
+    pub slots: Vec<Slot>,
+    /// `Some(t)` while a MIG reconfiguration completes at time `t`.
+    pub reconfiguring_until: Option<f64>,
+    /// The layout being installed by the in-flight reconfiguration.
+    pub pending_layout: Option<Vec<ProfileId>>,
+    /// Completed reconfigurations (diagnostics).
+    pub reconfigs: u32,
+}
+
+impl GpuNode {
+    pub fn new(id: usize, layout: Vec<ProfileId>) -> crate::Result<GpuNode> {
+        validate_layout(&layout)?;
+        let slots = layout.iter().map(|&p| Slot::new(p)).collect();
+        Ok(GpuNode {
+            id,
+            layout,
+            slots,
+            reconfiguring_until: None,
+            pending_layout: None,
+            reconfigs: 0,
+        })
+    }
+
+    pub fn reconfiguring(&self) -> bool {
+        self.reconfiguring_until.is_some()
+    }
+
+    /// True when every slot is idle (a precondition for reconfiguration).
+    pub fn all_idle(&self) -> bool {
+        self.slots.iter().all(|s| s.is_idle())
+    }
+
+    /// SMs currently running jobs on this node.
+    pub fn busy_sms(&self) -> u32 {
+        self.slots
+            .iter()
+            .filter(|s| !s.is_idle())
+            .map(|s| s.profile.sms)
+            .sum()
+    }
+
+    /// The layout this node will have once any in-flight reconfiguration
+    /// lands (used when deciding whether yet another reconfiguration is
+    /// needed for a queued job).
+    pub fn effective_layout(&self) -> &[ProfileId] {
+        self.pending_layout.as_deref().unwrap_or(&self.layout)
+    }
+
+    /// Start repartitioning to `target`; the node serves nothing until
+    /// `until_s`. Fails on a busy or already-reconfiguring node and on an
+    /// invalid target layout — MIG cannot change under running work.
+    pub fn begin_reconfig(&mut self, target: Vec<ProfileId>, until_s: f64) -> crate::Result<()> {
+        if !self.all_idle() {
+            bail!("GPU {} has running jobs; MIG cannot be reconfigured", self.id);
+        }
+        if self.reconfiguring() {
+            bail!("GPU {} is already reconfiguring", self.id);
+        }
+        validate_layout(&target)?;
+        self.pending_layout = Some(target);
+        self.reconfiguring_until = Some(until_s);
+        Ok(())
+    }
+
+    /// Complete the in-flight reconfiguration: install the pending layout
+    /// and rebuild the (empty) slots.
+    pub fn finish_reconfig(&mut self) {
+        if let Some(layout) = self.pending_layout.take() {
+            self.slots = layout.iter().map(|&p| Slot::new(p)).collect();
+            self.layout = layout;
+            self.reconfigs += 1;
+        }
+        self.reconfiguring_until = None;
+    }
+}
+
+/// The multi-GPU fleet.
+#[derive(Debug)]
+pub struct Fleet {
+    pub nodes: Vec<GpuNode>,
+    pub spec: GpuSpec,
+}
+
+impl Fleet {
+    pub fn new(gpus: u32, preset: LayoutPreset) -> crate::Result<Fleet> {
+        ensure!(gpus >= 1, "fleet needs at least one GPU");
+        let nodes = (0..gpus as usize)
+            .map(|i| GpuNode::new(i, preset.layout_for(i)))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Fleet {
+            nodes,
+            spec: GpuSpec::gh_h100_96gb(),
+        })
+    }
+
+    /// Physical SMs across the fleet.
+    pub fn total_sms(&self) -> u32 {
+        self.spec.sms * self.nodes.len() as u32
+    }
+
+    pub fn busy_sms(&self) -> u32 {
+        self.nodes.iter().map(|n| n.busy_sms()).sum()
+    }
+
+    /// Mark a slot busy with `job` until `until_s`.
+    pub fn start_job(&mut self, gpu: usize, slot: usize, job: u32, now: f64, until_s: f64) {
+        let s = &mut self.nodes[gpu].slots[slot];
+        assert!(s.is_idle(), "placing onto a busy slot");
+        s.state = SlotState::Busy {
+            job,
+            started_s: now,
+            until_s,
+        };
+    }
+
+    /// Free a slot; returns the job that was running there.
+    pub fn finish_job(&mut self, gpu: usize, slot: usize, now: f64) -> Option<u32> {
+        let s = &mut self.nodes[gpu].slots[slot];
+        match s.state {
+            SlotState::Busy { job, started_s, .. } => {
+                s.busy_accum_s += now - started_s;
+                s.state = SlotState::Idle;
+                Some(job)
+            }
+            SlotState::Idle => None,
+        }
+    }
+
+    /// Instantaneous fragmentation: the fraction of *idle* SMs stranded in
+    /// slots whose memory cannot directly host the smallest pending job
+    /// (`needed_gib` = footprint + context). 0 when nothing is pending or
+    /// nothing is idle — idle capacity only counts as fragmented while
+    /// work is actually waiting for it.
+    pub fn fragmentation(&self, needed_gib: Option<f64>) -> f64 {
+        let needed = match needed_gib {
+            Some(n) => n,
+            None => return 0.0,
+        };
+        let mut idle_sms = 0u32;
+        let mut stranded_sms = 0u32;
+        for node in &self.nodes {
+            if node.reconfiguring() {
+                continue;
+            }
+            for s in &node.slots {
+                if s.is_idle() {
+                    idle_sms += s.profile.sms;
+                    if s.profile.mem_gib < needed {
+                        stranded_sms += s.profile.sms;
+                    }
+                }
+            }
+        }
+        if idle_sms == 0 {
+            0.0
+        } else {
+            stranded_sms as f64 / idle_sms as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::ProfileId::*;
+
+    #[test]
+    fn presets_build_valid_fleets() {
+        for preset in [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig] {
+            let f = Fleet::new(5, preset).unwrap();
+            assert_eq!(f.nodes.len(), 5);
+            for n in &f.nodes {
+                assert!(!n.slots.is_empty());
+                validate_layout(&n.layout).unwrap();
+            }
+        }
+        assert!(Fleet::new(0, LayoutPreset::Mixed).is_err());
+    }
+
+    #[test]
+    fn every_class_layout_is_valid_and_led_by_its_class() {
+        for class in crate::mig::profile::ALL_PROFILES {
+            let layout = class_layout(class);
+            validate_layout(&layout).unwrap();
+            assert_eq!(layout[0], class, "largest instance leads the layout");
+        }
+    }
+
+    #[test]
+    fn invalid_layout_rejected() {
+        // 3x3g overflows the 8 memory slices.
+        assert!(validate_layout(&[P3g48gb, P3g48gb, P3g48gb]).is_err());
+        assert!(GpuNode::new(0, vec![]).is_err());
+    }
+
+    #[test]
+    fn job_lifecycle_accounting() {
+        let mut f = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
+        assert_eq!(f.busy_sms(), 0);
+        f.start_job(0, 2, 42, 1.0, 5.0);
+        assert_eq!(f.busy_sms(), 16);
+        assert!(!f.nodes[0].all_idle());
+        assert_eq!(f.finish_job(0, 2, 5.0), Some(42));
+        assert_eq!(f.busy_sms(), 0);
+        assert!((f.nodes[0].slots[2].busy_accum_s - 4.0).abs() < 1e-12);
+        assert_eq!(f.finish_job(0, 2, 5.0), None, "double finish is a no-op");
+    }
+
+    #[test]
+    fn reconfig_requires_idle_and_validates() {
+        let mut f = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
+        f.start_job(0, 0, 1, 0.0, 10.0);
+        assert!(f.nodes[0]
+            .begin_reconfig(vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 5.0)
+            .is_err());
+        f.finish_job(0, 0, 10.0);
+        // Invalid target rejected even on an idle node.
+        assert!(f.nodes[0].begin_reconfig(vec![P4g48gb, P4g48gb], 12.0).is_err());
+        f.nodes[0]
+            .begin_reconfig(vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 12.0)
+            .unwrap();
+        assert!(f.nodes[0].reconfiguring());
+        assert_eq!(f.nodes[0].effective_layout().len(), 4);
+        // Cannot stack a second reconfiguration.
+        assert!(f.nodes[0].begin_reconfig(vec![P7g96gb], 13.0).is_err());
+        f.nodes[0].finish_reconfig();
+        assert!(!f.nodes[0].reconfiguring());
+        assert_eq!(f.nodes[0].slots.len(), 4);
+        assert_eq!(f.nodes[0].reconfigs, 1);
+        assert_eq!(f.nodes[0].slots[0].profile.name, "2g.24gb");
+    }
+
+    #[test]
+    fn fragmentation_counts_stranded_idle_sms() {
+        let mut f = Fleet::new(1, LayoutPreset::Mixed).unwrap(); // 7x1g
+        // A 16 GiB job cannot use any idle 1g slot: everything stranded.
+        assert!((f.fragmentation(Some(16.0)) - 1.0).abs() < 1e-12);
+        // A small job fits everywhere: no fragmentation.
+        assert_eq!(f.fragmentation(Some(4.0)), 0.0);
+        // Nothing pending: no fragmentation by definition.
+        assert_eq!(f.fragmentation(None), 0.0);
+        // All busy: nothing idle to strand.
+        for i in 0..7 {
+            f.start_job(0, i, i as u32, 0.0, 1.0);
+        }
+        assert_eq!(f.fragmentation(Some(16.0)), 0.0);
+    }
+}

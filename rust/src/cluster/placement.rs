@@ -1,0 +1,420 @@
+//! Placement policies: which idle MIG slot should an arriving job get?
+//!
+//! Three policies, in increasing awareness:
+//! - `FirstFit`: first idle slot whose memory directly fits the job.
+//! - `BestFit`: the *smallest* fitting idle slot — classic best-fit, which
+//!   minimizes SM fragmentation by keeping big slices free for big jobs.
+//! - `OffloadAware`: reward-maximizing admission (§VI-B). Every idle slot
+//!   is a candidate — directly when the job fits, via an NVLink-C2C
+//!   `OffloadPlan` when it does not — and the slot with the highest reward
+//!   at the policy's α wins. This is what turns "queue for a big slice"
+//!   into "run now on a small slice, spill the cold data over C2C".
+//!
+//! The `Planner` caches per-(app, profile, offload) costs so the placement
+//! hot path is a table scan over idle slots, not repeated model evaluation
+//! (see `benches/placement.rs`).
+
+use super::fleet::Fleet;
+use crate::gpu::nvlink::{Dir, NvlinkModel};
+use crate::gpu::{pipelines::ALL_PIPELINES, GpuSpec};
+use crate::mig::profile::{GiProfile, ProfileId};
+use crate::offload::OffloadPlan;
+use crate::reward::{reward, ConfigEval, GpuTotals};
+use crate::sharing::ContextModel;
+use crate::workload::{apps, AppId, ExecEnv};
+use std::collections::HashMap;
+
+/// The dispatch policy of the serving layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    FirstFit,
+    BestFit,
+    /// Reward-maximizing admission with offloading, α in centi-units.
+    OffloadAware { alpha_centi: u32 },
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "first-fit" => Some(PolicyKind::FirstFit),
+            "best-fit" => Some(PolicyKind::BestFit),
+            "offload-aware" => Some(PolicyKind::OffloadAware { alpha_centi: 10 }),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PolicyKind::FirstFit => "first-fit".into(),
+            PolicyKind::BestFit => "best-fit".into(),
+            PolicyKind::OffloadAware { alpha_centi } => {
+                format!("offload-aware(α={:.2})", *alpha_centi as f64 / 100.0)
+            }
+        }
+    }
+
+    pub fn allows_offload(&self) -> bool {
+        matches!(self, PolicyKind::OffloadAware { .. })
+    }
+}
+
+/// The modelled cost of running one app on one profile (possibly with
+/// offloading): service time plus the average activity rates the fleet
+/// power model integrates while the job runs.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementCost {
+    pub runtime_s: f64,
+    /// Resident footprint on the instance (GiB), after any offloading.
+    pub resident_gib: f64,
+    pub offloaded: bool,
+    /// Average achieved occupancy on the instance (reward input).
+    pub occupancy: f64,
+    /// Average per-pipeline FLOP rates while running (TFLOP/s).
+    pub flop_tflops: [f64; 5],
+    /// Average HBM traffic while running (TB/s).
+    pub hbm_tbs: f64,
+    /// Average C2C traffic while running (TB/s).
+    pub c2c_tbs: f64,
+}
+
+/// Cost evaluator + cache shared by all policies.
+pub struct Planner {
+    spec: GpuSpec,
+    nvlink: NvlinkModel,
+    ctx_gib: f64,
+    scale: f64,
+    cache: HashMap<(AppId, ProfileId, bool), Option<PlacementCost>>,
+    full_runtime: HashMap<AppId, f64>,
+}
+
+impl Planner {
+    pub fn new(workload_scale: f64) -> Planner {
+        assert!(workload_scale > 0.0);
+        Planner {
+            spec: GpuSpec::gh_h100_96gb(),
+            nvlink: NvlinkModel::default(),
+            ctx_gib: ContextModel::default().mig_per_process_gib,
+            scale: workload_scale,
+            cache: HashMap::new(),
+            full_runtime: HashMap::new(),
+        }
+    }
+
+    pub fn ctx_gib(&self) -> f64 {
+        self.ctx_gib
+    }
+
+    /// Cost of running `app` on `profile`. `allow_offload = false` returns
+    /// `None` unless the footprint fits directly; `true` additionally
+    /// tries an `OffloadPlan` (which may still fail: ≥25% must stay
+    /// resident). Memoized.
+    pub fn cost(
+        &mut self,
+        app: AppId,
+        profile: ProfileId,
+        allow_offload: bool,
+    ) -> Option<PlacementCost> {
+        let key = (app, profile, allow_offload);
+        if let Some(c) = self.cache.get(&key) {
+            return *c;
+        }
+        let c = self.compute_cost(app, profile, allow_offload);
+        self.cache.insert(key, c);
+        c
+    }
+
+    fn compute_cost(
+        &self,
+        app: AppId,
+        profile: ProfileId,
+        allow_offload: bool,
+    ) -> Option<PlacementCost> {
+        let prof = GiProfile::get(profile);
+        let model = apps::model(app).scaled(self.scale);
+        let cap = prof.mem_gib - self.ctx_gib;
+        let plan = if model.footprint_gib <= cap {
+            None
+        } else if allow_offload {
+            match OffloadPlan::plan(&model, cap) {
+                Ok(p) => Some(p),
+                Err(_) => return None,
+            }
+        } else {
+            return None;
+        };
+        let offloaded = plan.as_ref().map(|p| p.spilled_gib > 0.0).unwrap_or(false);
+        let resident_gib = plan
+            .as_ref()
+            .map(|p| p.effective_footprint_gib())
+            .unwrap_or(model.footprint_gib);
+        let run_model = plan.as_ref().map(|p| p.apply(&model)).unwrap_or(model);
+        let env = ExecEnv {
+            sms: prof.sms,
+            clock_frac: 1.0,
+            bw_gibs: prof.mem_bw_gibs,
+            // Offloaded data reads travel host→device over the shared C2C
+            // link; the achievable direct rate depends on the SMs in
+            // flight (Table IVb saturation curve).
+            c2c_bw_gibs: self.nvlink.direct_bw_gibs(prof.sms, Dir::H2D),
+            interference: 1.0,
+            time_share: 1.0,
+        };
+        let runtime_s =
+            run_model.runtime_quiet_s(&self.spec, &env) + run_model.startup_s * self.scale;
+        if runtime_s <= 0.0 {
+            return None;
+        }
+        // Average activity rates for the fleet energy model.
+        let mut flop_tflops = [0.0f64; 5];
+        let mut hbm_bytes = 0.0;
+        let mut c2c_bytes = 0.0;
+        for ph in &run_model.phases {
+            let reps = ph.repeats as f64;
+            for k in &ph.kernels {
+                hbm_bytes += reps * k.hbm_bytes;
+                c2c_bytes += reps * k.c2c_bytes;
+                for p in ALL_PIPELINES {
+                    flop_tflops[p.index()] += reps * k.flops * k.mix.frac(p);
+                }
+            }
+        }
+        for f in &mut flop_tflops {
+            *f /= runtime_s * 1e12;
+        }
+        Some(PlacementCost {
+            runtime_s,
+            resident_gib,
+            offloaded,
+            occupancy: run_model.avg_occupancy_quiet(&self.spec, &env),
+            flop_tflops,
+            hbm_tbs: hbm_bytes / runtime_s / 1e12,
+            c2c_tbs: c2c_bytes / runtime_s / 1e12,
+        })
+    }
+
+    /// Runtime of `app` on the whole GPU (the P_GPU reward basis).
+    pub fn full_gpu_runtime_s(&mut self, app: AppId) -> f64 {
+        if let Some(t) = self.full_runtime.get(&app) {
+            return *t;
+        }
+        let model = apps::model(app).scaled(self.scale);
+        let env = ExecEnv {
+            sms: self.spec.sms,
+            clock_frac: 1.0,
+            bw_gibs: self.spec.mem_bw_gibs,
+            c2c_bw_gibs: self.nvlink.direct_both_cap_gibs,
+            interference: 1.0,
+            time_share: 1.0,
+        };
+        let t = model.runtime_quiet_s(&self.spec, &env) + model.startup_s * self.scale;
+        self.full_runtime.insert(app, t);
+        t
+    }
+
+    /// §VI-B reward of running `app` on `profile` at cost `c`.
+    pub fn reward_of(
+        &mut self,
+        app: AppId,
+        profile: ProfileId,
+        c: &PlacementCost,
+        alpha: f64,
+    ) -> f64 {
+        let prof = GiProfile::get(profile);
+        let p_gpu = 1.0 / self.full_gpu_runtime_s(app).max(1e-9);
+        let eval = ConfigEval {
+            config: prof.name.to_string(),
+            perf: 1.0 / c.runtime_s.max(1e-9),
+            occupancy: c.occupancy,
+            sms: prof.sms,
+            mem_instance_gib: prof.mem_gib,
+            mem_app_gib: c.resident_gib + self.ctx_gib,
+        };
+        let totals = GpuTotals {
+            sms: self.spec.sms,
+            mem_gib: self.spec.mem_usable_gib,
+            perf_full_gpu: p_gpu,
+        };
+        reward(&eval, &totals, alpha).reward
+    }
+
+    /// Pick an idle slot for `app` under `policy`. Returns
+    /// `(gpu, slot, cost)`. Deterministic: ties break toward smaller
+    /// instances, then lower GPU/slot index.
+    pub fn place(
+        &mut self,
+        fleet: &Fleet,
+        app: AppId,
+        policy: PolicyKind,
+    ) -> Option<(usize, usize, PlacementCost)> {
+        match policy {
+            PolicyKind::FirstFit => {
+                for (g, node) in fleet.nodes.iter().enumerate() {
+                    if node.reconfiguring() {
+                        continue;
+                    }
+                    for (s, slot) in node.slots.iter().enumerate() {
+                        if !slot.is_idle() {
+                            continue;
+                        }
+                        if let Some(c) = self.cost(app, slot.profile.id, false) {
+                            return Some((g, s, c));
+                        }
+                    }
+                }
+                None
+            }
+            PolicyKind::BestFit => {
+                let mut best: Option<(u32, usize, usize, PlacementCost)> = None;
+                for (g, node) in fleet.nodes.iter().enumerate() {
+                    if node.reconfiguring() {
+                        continue;
+                    }
+                    for (s, slot) in node.slots.iter().enumerate() {
+                        if !slot.is_idle() {
+                            continue;
+                        }
+                        if let Some(c) = self.cost(app, slot.profile.id, false) {
+                            let sms = slot.profile.sms;
+                            if best.as_ref().map(|(b, ..)| sms < *b).unwrap_or(true) {
+                                best = Some((sms, g, s, c));
+                            }
+                        }
+                    }
+                }
+                best.map(|(_, g, s, c)| (g, s, c))
+            }
+            PolicyKind::OffloadAware { alpha_centi } => {
+                let alpha = alpha_centi as f64 / 100.0;
+                let mut best: Option<(f64, u32, usize, usize, PlacementCost)> = None;
+                for (g, node) in fleet.nodes.iter().enumerate() {
+                    if node.reconfiguring() {
+                        continue;
+                    }
+                    for (s, slot) in node.slots.iter().enumerate() {
+                        if !slot.is_idle() {
+                            continue;
+                        }
+                        let c = match self.cost(app, slot.profile.id, true) {
+                            Some(c) => c,
+                            None => continue,
+                        };
+                        let r = self.reward_of(app, slot.profile.id, &c, alpha);
+                        let sms = slot.profile.sms;
+                        let better = match &best {
+                            None => true,
+                            Some((br, bsms, ..)) => {
+                                r > *br + 1e-12 || ((r - *br).abs() <= 1e-12 && sms < *bsms)
+                            }
+                        };
+                        if better {
+                            best = Some((r, sms, g, s, c));
+                        }
+                    }
+                }
+                best.map(|(_, _, g, s, c)| (g, s, c))
+            }
+        }
+    }
+
+    /// Whether `app` could run on *some* profile of the node layouts the
+    /// fleet currently has or is reconfiguring toward — the trigger guard
+    /// for dynamic reconfiguration.
+    pub fn fits_current_layouts(&mut self, fleet: &Fleet, app: AppId, allow_offload: bool) -> bool {
+        for node in &fleet.nodes {
+            for &p in node.effective_layout() {
+                if self.cost(app, p, allow_offload).is_some() {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Whether `app` is servable at all on this hardware (largest profile,
+    /// offloading allowed when the policy supports it).
+    pub fn servable(&mut self, app: AppId, allow_offload: bool) -> bool {
+        self.cost(app, ProfileId::P7g96gb, allow_offload).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::{Fleet, LayoutPreset};
+
+    #[test]
+    fn cost_direct_vs_offload() {
+        let mut pl = Planner::new(0.05);
+        // Small job fits 1g directly; the offload-allowed cost is identical
+        // (no spill happens).
+        let direct = pl.cost(AppId::Faiss, ProfileId::P1g12gb, false).unwrap();
+        let relaxed = pl.cost(AppId::Faiss, ProfileId::P1g12gb, true).unwrap();
+        assert!(!direct.offloaded && !relaxed.offloaded);
+        assert_eq!(direct.runtime_s, relaxed.runtime_s);
+        // 16.5 GiB llama does not fit 1g directly but offloads.
+        assert!(pl.cost(AppId::Llama3Fp16, ProfileId::P1g12gb, false).is_none());
+        let off = pl.cost(AppId::Llama3Fp16, ProfileId::P1g12gb, true).unwrap();
+        assert!(off.offloaded);
+        assert!(off.resident_gib <= 11.0 - pl.ctx_gib() + 1e-9);
+        assert!(off.c2c_tbs > 0.0, "offloaded runs drive C2C traffic");
+        // Offloading on 1g is slower than running directly on 2g.
+        let two_g = pl.cost(AppId::Llama3Fp16, ProfileId::P2g24gb, false).unwrap();
+        assert!(off.runtime_s > two_g.runtime_s);
+    }
+
+    #[test]
+    fn first_fit_vs_best_fit_slot_choice() {
+        // Mixed GPU 2 layout is [4g.48gb, 3g.48gb]; a small job should go
+        // to the 3g slot under best-fit but the 4g slot under first-fit.
+        let mut fleet = Fleet::new(3, LayoutPreset::Mixed).unwrap();
+        // Occupy every slot on GPUs 0 and 1 so only GPU 2 is free.
+        for g in 0..2 {
+            for s in 0..fleet.nodes[g].slots.len() {
+                fleet.start_job(g, s, 0, 0.0, 100.0);
+            }
+        }
+        let mut pl = Planner::new(0.05);
+        let (g_ff, s_ff, _) = pl.place(&fleet, AppId::Hotspot, PolicyKind::FirstFit).unwrap();
+        assert_eq!((g_ff, s_ff), (2, 0), "first-fit takes the 4g slot");
+        let (g_bf, s_bf, _) = pl.place(&fleet, AppId::Hotspot, PolicyKind::BestFit).unwrap();
+        assert_eq!((g_bf, s_bf), (2, 1), "best-fit takes the smaller 3g slot");
+    }
+
+    #[test]
+    fn offload_aware_admits_large_jobs_onto_small_slices() {
+        let fleet = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
+        let mut pl = Planner::new(0.05);
+        for policy in [PolicyKind::FirstFit, PolicyKind::BestFit] {
+            assert!(
+                pl.place(&fleet, AppId::Llama3Fp16, policy).is_none(),
+                "{:?} must not fit 16.5 GiB into 11 GiB",
+                policy
+            );
+        }
+        let (_, _, c) = pl
+            .place(&fleet, AppId::Llama3Fp16, PolicyKind::OffloadAware { alpha_centi: 10 })
+            .unwrap();
+        assert!(c.offloaded);
+    }
+
+    #[test]
+    fn servable_and_layout_fit_guards() {
+        let fleet = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
+        let mut pl = Planner::new(0.05);
+        assert!(pl.servable(AppId::Llama3Fp16, false), "fits 7g directly");
+        assert!(!pl.fits_current_layouts(&fleet, AppId::Llama3Fp16, false));
+        assert!(pl.fits_current_layouts(&fleet, AppId::Llama3Fp16, true));
+        assert!(pl.fits_current_layouts(&fleet, AppId::Faiss, false));
+    }
+
+    #[test]
+    fn reward_prefers_tight_fit_at_low_alpha() {
+        let mut pl = Planner::new(0.05);
+        // FAISS scales poorly: a 1g slice wastes far less than 7g.
+        let c1 = pl.cost(AppId::Faiss, ProfileId::P1g12gb, false).unwrap();
+        let c7 = pl.cost(AppId::Faiss, ProfileId::P7g96gb, false).unwrap();
+        let r1 = pl.reward_of(AppId::Faiss, ProfileId::P1g12gb, &c1, 0.1);
+        let r7 = pl.reward_of(AppId::Faiss, ProfileId::P7g96gb, &c7, 0.1);
+        assert!(r1 > r7, "r1={r1} r7={r7}");
+    }
+}

@@ -1,0 +1,227 @@
+//! The admission queue: arriving jobs wait FIFO with a queueing deadline.
+//!
+//! A job is *admitted* when a placement policy assigns it a slot; it is
+//! *expired* if its deadline passes while it still waits (the client gave
+//! up), and *rejected* immediately when no layout this fleet could ever
+//! reconfigure to — offloading included — can host it.
+
+use crate::workload::apps;
+use crate::workload::trace::Job;
+use std::collections::VecDeque;
+
+/// Lifecycle state of a job in the serving system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    Expired,
+    Rejected,
+}
+
+/// A job plus its serving metadata.
+#[derive(Debug, Clone)]
+pub struct QueuedJob {
+    pub job: Job,
+    /// Absolute time at which the job abandons the queue.
+    pub deadline_s: f64,
+    pub state: JobState,
+    pub placed_s: Option<f64>,
+    pub finished_s: Option<f64>,
+    pub offloaded: bool,
+    pub gpu: Option<usize>,
+}
+
+/// FIFO admission queue with deadline accounting.
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    /// All jobs ever admitted, indexed by job id (ids are dense 0..n).
+    pub jobs: Vec<QueuedJob>,
+    pending: VecDeque<u32>,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> AdmissionQueue {
+        AdmissionQueue::default()
+    }
+
+    /// Register an arriving job with a relative queueing deadline. Job ids
+    /// must arrive in order (they index `jobs`).
+    pub fn admit(&mut self, job: Job, deadline_rel_s: f64) {
+        assert_eq!(job.id as usize, self.jobs.len(), "job ids must be dense");
+        let deadline_s = job.arrival_s + deadline_rel_s;
+        self.jobs.push(QueuedJob {
+            job,
+            deadline_s,
+            state: JobState::Pending,
+            placed_s: None,
+            finished_s: None,
+            offloaded: false,
+            gpu: None,
+        });
+        self.pending.push_back(self.jobs.len() as u32 - 1);
+    }
+
+    /// Pending job ids, oldest first.
+    pub fn pending_ids(&self) -> impl Iterator<Item = u32> + '_ {
+        self.pending.iter().copied()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn unqueue(&mut self, id: u32) {
+        if let Some(pos) = self.pending.iter().position(|&p| p == id) {
+            self.pending.remove(pos);
+        }
+    }
+
+    /// Transition a pending job to running on `gpu`.
+    pub fn mark_running(&mut self, id: u32, now: f64, gpu: usize, offloaded: bool) {
+        let j = &mut self.jobs[id as usize];
+        assert_eq!(j.state, JobState::Pending, "placing a non-pending job");
+        j.state = JobState::Running;
+        j.placed_s = Some(now);
+        j.gpu = Some(gpu);
+        j.offloaded = offloaded;
+        self.unqueue(id);
+    }
+
+    pub fn mark_completed(&mut self, id: u32, now: f64) {
+        let j = &mut self.jobs[id as usize];
+        assert_eq!(j.state, JobState::Running, "completing a non-running job");
+        j.state = JobState::Completed;
+        j.finished_s = Some(now);
+    }
+
+    /// Expire a job if it is still pending; returns whether it expired.
+    pub fn expire_if_pending(&mut self, id: u32, now: f64) -> bool {
+        if self.jobs[id as usize].state != JobState::Pending {
+            return false;
+        }
+        let j = &mut self.jobs[id as usize];
+        j.state = JobState::Expired;
+        j.finished_s = Some(now);
+        self.unqueue(id);
+        true
+    }
+
+    /// Reject a just-admitted job outright (unservable footprint).
+    pub fn reject(&mut self, id: u32, now: f64) {
+        let j = &mut self.jobs[id as usize];
+        assert_eq!(j.state, JobState::Pending);
+        j.state = JobState::Rejected;
+        j.finished_s = Some(now);
+        self.unqueue(id);
+    }
+
+    pub fn count(&self, state: JobState) -> u32 {
+        self.jobs.iter().filter(|j| j.state == state).count() as u32
+    }
+
+    pub fn all_resolved(&self) -> bool {
+        self.jobs.iter().all(|j| {
+            matches!(
+                j.state,
+                JobState::Completed | JobState::Expired | JobState::Rejected
+            )
+        })
+    }
+
+    /// Smallest direct memory footprint among pending jobs (GiB) — the
+    /// fleet fragmentation reference.
+    pub fn smallest_pending_footprint_gib(&self) -> Option<f64> {
+        self.pending
+            .iter()
+            .map(|&id| apps::model(self.jobs[id as usize].job.app).footprint_gib)
+            .reduce(f64::min)
+    }
+
+    /// Queueing waits of completed jobs (seconds).
+    pub fn completed_waits(&self) -> Vec<f64> {
+        self.jobs
+            .iter()
+            .filter(|j| j.state == JobState::Completed)
+            .map(|j| j.placed_s.unwrap() - j.job.arrival_s)
+            .collect()
+    }
+
+    /// Latest resolution instant (completion/expiry/rejection) — the
+    /// serving horizon for throughput accounting.
+    pub fn horizon_s(&self) -> f64 {
+        self.jobs
+            .iter()
+            .filter_map(|j| j.finished_s)
+            .fold(0.0f64, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::AppId;
+
+    fn job(id: u32, arrival: f64, app: AppId) -> Job {
+        Job {
+            id,
+            app,
+            arrival_s: arrival,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_transitions() {
+        let mut q = AdmissionQueue::new();
+        q.admit(job(0, 0.0, AppId::Faiss), 10.0);
+        q.admit(job(1, 1.0, AppId::Hotspot), 10.0);
+        q.admit(job(2, 2.0, AppId::Lammps), 10.0);
+        assert_eq!(q.pending_ids().collect::<Vec<_>>(), vec![0, 1, 2]);
+        q.mark_running(1, 1.5, 0, false);
+        assert_eq!(q.pending_ids().collect::<Vec<_>>(), vec![0, 2]);
+        q.mark_completed(1, 4.0);
+        assert_eq!(q.count(JobState::Completed), 1);
+        assert!(!q.all_resolved());
+        q.mark_running(0, 2.0, 1, true);
+        q.mark_completed(0, 9.0);
+        assert!(q.expire_if_pending(2, 12.0));
+        assert!(q.all_resolved());
+        assert_eq!(q.horizon_s(), 12.0);
+        // Wait of job 0 is placed - arrival = 2.0.
+        let waits = q.completed_waits();
+        assert_eq!(waits.len(), 2);
+        assert!(waits.iter().any(|w| (*w - 2.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn expiry_only_hits_pending() {
+        let mut q = AdmissionQueue::new();
+        q.admit(job(0, 0.0, AppId::Faiss), 5.0);
+        q.mark_running(0, 1.0, 0, false);
+        assert!(!q.expire_if_pending(0, 5.0), "running jobs never expire");
+        assert_eq!(q.jobs[0].deadline_s, 5.0);
+    }
+
+    #[test]
+    fn smallest_pending_footprint() {
+        let mut q = AdmissionQueue::new();
+        assert_eq!(q.smallest_pending_footprint_gib(), None);
+        q.admit(job(0, 0.0, AppId::Llama3Fp16), 5.0); // 16.5 GiB
+        q.admit(job(1, 0.0, AppId::Hotspot), 5.0); // 0.05 GiB
+        let f = q.smallest_pending_footprint_gib().unwrap();
+        assert!((f - 0.05).abs() < 1e-12);
+        q.mark_running(1, 0.0, 0, false);
+        let f = q.smallest_pending_footprint_gib().unwrap();
+        assert!((f - 16.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reject_resolves_job() {
+        let mut q = AdmissionQueue::new();
+        q.admit(job(0, 3.0, AppId::Faiss), 5.0);
+        q.reject(0, 3.0);
+        assert_eq!(q.count(JobState::Rejected), 1);
+        assert_eq!(q.pending_len(), 0);
+        assert!(q.all_resolved());
+    }
+}

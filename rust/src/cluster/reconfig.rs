@@ -1,0 +1,104 @@
+//! Dynamic MIG reconfiguration for the serving fleet.
+//!
+//! MIG layouts are static while work runs (§II-B3), so the serving layer
+//! can only repartition a *fully drained* GPU, and doing so costs real
+//! time: destroying the old GIs and creating the new ones is a sequence of
+//! driver operations, each in the hundreds-of-milliseconds to seconds
+//! range (`nvidia-smi mig -dgi/-cgi`). The latency model below charges a
+//! base cost plus a per-instance cost in both directions; during that
+//! window the GPU serves nothing, which is exactly the trade-off the
+//! offload-aware policy avoids by squeezing jobs into existing slices.
+//!
+//! Target layouts are *valid-partition-preserving*: `plan_for_footprint`
+//! only ever proposes layouts that the `MigManager` slice budget accepts
+//! (re-validated at `GpuNode::begin_reconfig` time).
+
+use super::fleet::{class_layout, Fleet};
+use crate::mig::profile::{GiProfile, ProfileId};
+
+/// Fixed driver/setup cost of any reconfiguration (s).
+pub const RECONFIG_BASE_S: f64 = 1.0;
+/// Cost per GPU instance destroyed or created (s).
+pub const RECONFIG_PER_INSTANCE_S: f64 = 0.5;
+
+/// Modeled latency of switching a drained GPU from `old` to `new`.
+pub fn latency_s(old: &[ProfileId], new: &[ProfileId]) -> f64 {
+    RECONFIG_BASE_S + RECONFIG_PER_INSTANCE_S * (old.len() + new.len()) as f64
+}
+
+/// The canonical target layout for hosting a job whose footprint (plus
+/// context overhead) is `need_gib`: the smallest profile class that fits
+/// it directly, packed out with complementary instances so the rest of the
+/// GPU keeps serving small jobs. `None` when nothing fits (the job is
+/// unservable without offloading).
+pub fn plan_for_footprint(need_gib: f64) -> Option<Vec<ProfileId>> {
+    use ProfileId::*;
+    [P1g12gb, P2g24gb, P3g48gb, P7g96gb]
+        .into_iter()
+        .find(|&class| need_gib <= GiProfile::get(class).mem_gib)
+        .map(class_layout)
+}
+
+/// Choose a reconfiguration that would let a job of `need_gib` run: the
+/// first fully-idle, not-already-reconfiguring GPU whose layout would
+/// change. Returns `(gpu index, target layout)`.
+pub fn plan_reconfig(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<ProfileId>)> {
+    let target = plan_for_footprint(need_gib)?;
+    for (g, node) in fleet.nodes.iter().enumerate() {
+        if node.reconfiguring() || !node.all_idle() {
+            continue;
+        }
+        if node.layout == target {
+            continue; // already shaped right; the job fits without change
+        }
+        return Some((g, target));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::{validate_layout, Fleet, LayoutPreset};
+
+    #[test]
+    fn footprint_classes_map_to_valid_layouts() {
+        for need in [0.5, 10.9, 11.1, 22.9, 23.1, 46.0, 60.0, 94.5] {
+            let layout = plan_for_footprint(need).unwrap();
+            validate_layout(&layout).unwrap();
+            // The target actually hosts the footprint.
+            let max_mem = layout
+                .iter()
+                .map(|&p| GiProfile::get(p).mem_gib)
+                .fold(0.0f64, f64::max);
+            assert!(max_mem >= need, "need {need} vs max slot {max_mem}");
+        }
+        assert!(plan_for_footprint(95.0).is_none());
+    }
+
+    #[test]
+    fn latency_scales_with_instance_churn() {
+        use ProfileId::*;
+        let small = vec![P1g12gb; 7];
+        let big = vec![P7g96gb];
+        let l = latency_s(&small, &big);
+        assert!((l - (1.0 + 0.5 * 8.0)).abs() < 1e-12);
+        assert!(latency_s(&big, &small) > latency_s(&big, &big));
+    }
+
+    #[test]
+    fn plan_reconfig_picks_idle_gpu_and_skips_matching_layout() {
+        let mut fleet = Fleet::new(2, LayoutPreset::AllSmall).unwrap();
+        // A 16 GiB job needs the 2g class; GPU 0 is busy, GPU 1 idle.
+        fleet.start_job(0, 0, 1, 0.0, 10.0);
+        let (g, target) = plan_reconfig(&fleet, 16.0).unwrap();
+        assert_eq!(g, 1);
+        assert_eq!(target[0], ProfileId::P2g24gb);
+        // Once GPU 1 already has the target layout, no reconfig is planned.
+        fleet.nodes[1].begin_reconfig(target.clone(), 5.0).unwrap();
+        fleet.nodes[1].finish_reconfig();
+        assert!(plan_reconfig(&fleet, 16.0).is_none());
+        // Unservable footprints never produce a plan.
+        assert!(plan_reconfig(&fleet, 95.0).is_none());
+    }
+}

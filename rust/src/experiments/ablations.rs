@@ -28,7 +28,13 @@ pub fn copies_sweep(cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
             "Ablation — MIG 1g.12gb partition count, {} (vs serial of same copies)",
             app.name()
         ))
-        .header(&["copies", "makespan (s)", "throughput vs serial", "energy vs serial", "occupancy"]);
+        .header(&[
+            "copies",
+            "makespan (s)",
+            "throughput vs serial",
+            "energy vs serial",
+            "occupancy",
+        ]);
         let mut arr = Vec::new();
         for copies in 1..=7u32 {
             let (serial, _) = simulate(&CorunSpec::serial(app, copies), cfg)?;

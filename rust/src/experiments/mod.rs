@@ -22,6 +22,7 @@ pub mod ablations;
 pub mod fig8;
 pub mod figures;
 pub mod sched;
+pub mod serve;
 pub mod tables;
 
 use crate::config::SimConfig;
@@ -51,10 +52,11 @@ impl ExperimentOutput {
     }
 }
 
-/// All experiment ids in paper order, plus the ablation sweeps.
-pub const ALL_IDS: [&str; 16] = [
+/// All experiment ids in paper order, plus the ablation sweeps and the
+/// online-serving study.
+pub const ALL_IDS: [&str; 17] = [
     "table1", "table2", "table4", "smcount", "ctx", "fig2", "fig3", "fig4", "fig5", "fig6",
-    "fig7", "fig8", "ablate-copies", "ablate-alpha", "ablate-mps", "sched",
+    "fig7", "fig8", "ablate-copies", "ablate-alpha", "ablate-mps", "sched", "serve",
 ];
 
 /// Run one experiment by id.
@@ -76,6 +78,7 @@ pub fn run(id: &str, cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
         "ablate-alpha" => ablations::alpha_sweep(cfg),
         "ablate-mps" => ablations::mps_sweep(cfg),
         "sched" => sched::sched(cfg),
+        "serve" => serve::serve_experiment(cfg),
         other => anyhow::bail!("unknown experiment '{other}' (known: {})", ALL_IDS.join(", ")),
     }
 }

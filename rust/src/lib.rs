@@ -17,10 +17,19 @@
 //! - `workload`, `metrics`, `offload`, `reward`: the paper's method.
 //! - `coordinator`, `experiments`: drivers that regenerate every table and
 //!   figure in the paper's evaluation.
-//! - `runtime`: PJRT loader/executor for `artifacts/*.hlo.txt`.
+//! - `cluster`: the online serving layer — a multi-GPU fleet, an
+//!   admission queue with deadlines, pluggable placement policies
+//!   (first-fit / best-fit / offload-aware), and dynamic MIG
+//!   reconfiguration. It consumes the four passive models below it
+//!   (`mig` layouts, `offload` plans, `workload` runtimes, the `reward`
+//!   metric) as policy inputs and closes the loop the paper's
+//!   introduction motivates: `migsim serve`.
+//! - `runtime`: PJRT loader/executor for `artifacts/*.hlo.txt`
+//!   (feature-gated behind `pjrt`; a stub otherwise).
 
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

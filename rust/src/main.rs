@@ -6,6 +6,7 @@
 //!   list                  list workloads, schemes and experiments
 //!   probe                 SM-count + context-overhead probes
 //!   reward                reward sweep for an app across configurations
+//!   serve                 online cluster serving over a multi-GPU fleet
 //!   runtime               PJRT artifact smoke check (artifacts/)
 
 use migsim::cli::{render_help, Args, CommandSpec};
@@ -40,6 +41,11 @@ fn commands() -> Vec<CommandSpec> {
             name: "reward",
             summary: "reward-model sweep (Fig. 8 study)",
             usage: "migsim reward [--scale X]",
+        },
+        CommandSpec {
+            name: "serve",
+            summary: "online cluster serving: admission + placement + reconfig",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--json]",
         },
         CommandSpec {
             name: "runtime",
@@ -88,6 +94,7 @@ fn dispatch(args: &Args) -> migsim::Result<()> {
         "list" => cmd_list(),
         "probe" => cmd_probe(),
         "reward" => cmd_reward(args),
+        "serve" => cmd_serve(args),
         "runtime" => cmd_runtime(args),
         other => anyhow::bail!("unknown command '{other}'; try --help"),
     }
@@ -228,6 +235,61 @@ fn cmd_reward(args: &Args) -> migsim::Result<()> {
     let cfg = sim_config(args)?;
     let out = migsim::experiments::run("fig8", &cfg)?;
     print!("{}", out.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> migsim::Result<()> {
+    args.check_known(&[
+        "gpus",
+        "policy",
+        "arrival-rate",
+        "jobs",
+        "deadline",
+        "layout",
+        "no-reconfig",
+        "seed",
+        "scale",
+        "config",
+        "json",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    let cfg = sim_config(args)?;
+    let policy_name = args.opt_or("policy", "first-fit");
+    let policy = migsim::cluster::PolicyKind::parse(policy_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown policy '{policy_name}' (first-fit|best-fit|offload-aware)")
+    })?;
+    let layout_name = args.opt_or("layout", "mixed");
+    let layout = migsim::cluster::LayoutPreset::parse(layout_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown layout '{layout_name}' (mixed|small|big)"))?;
+    let serve_cfg = migsim::cluster::ServeConfig {
+        gpus: args.opt_u64("gpus", 4).map_err(anyhow::Error::msg)? as u32,
+        policy,
+        layout,
+        arrival_rate_hz: args
+            .opt_f64("arrival-rate", 1.0)
+            .map_err(anyhow::Error::msg)?,
+        jobs: args.opt_u64("jobs", 60).map_err(anyhow::Error::msg)? as u32,
+        // Deadlines track the workload scale so saturation behaviour is
+        // comparable between quick and paper-sized runs.
+        deadline_s: args
+            .opt_f64("deadline", 600.0 * cfg.workload_scale)
+            .map_err(anyhow::Error::msg)?,
+        reconfig: !args.flag("no-reconfig"),
+        seed: cfg.seed,
+        workload_scale: cfg.workload_scale,
+    };
+    let report = migsim::cluster::serve(&serve_cfg)?;
+    if args.flag("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        println!("{}", report.summary());
+    }
+    let path = migsim::coordinator::report::write_results(
+        &cfg.results_dir,
+        "serve-run",
+        &report.to_json(),
+    )?;
+    eprintln!("-- wrote {}", path.display());
     Ok(())
 }
 

@@ -57,6 +57,9 @@ impl OffloadPlan {
             });
         }
         let overflow = f - capacity_gib;
+        // Boundary semantics: a capacity of *exactly* 25% of the footprint
+        // is admissible (strict `<` rejects only capacities below the
+        // minimum resident set).
         let min_resident = f * 0.25;
         if capacity_gib < min_resident {
             bail!(
@@ -365,6 +368,26 @@ mod tests {
     fn refuses_hopeless_offload() {
         let app = apps::model(AppId::Llama3Fp16); // 16.5 GiB
         assert!(OffloadPlan::plan(&app, 3.0).is_err());
+    }
+
+    #[test]
+    fn exact_quarter_capacity_is_accepted() {
+        // Regression: capacity == footprint * 0.25 sits exactly on the
+        // minimum-resident boundary and must be accepted — only strictly
+        // smaller capacities fail.
+        let app = apps::model(AppId::Llama3Fp16); // 16.5 GiB, direct mode
+        let cap = app.footprint_gib * 0.25;
+        let p = OffloadPlan::plan(&app, cap).unwrap();
+        assert_eq!(p.resident_gib, cap);
+        assert!((p.spilled_gib - app.footprint_gib * 0.75).abs() < 1e-9);
+        assert!((p.c2c_traffic_frac - 0.75).abs() < 1e-9);
+        assert!(OffloadPlan::plan(&app, cap - 1e-6).is_err());
+        // Swap-mode apps honour the same boundary.
+        let qiskit = apps::model(AppId::Qiskit31);
+        let qcap = qiskit.footprint_gib * 0.25;
+        let qp = OffloadPlan::plan(&qiskit, qcap).unwrap();
+        assert!(qp.swap_gap_s > 0.0);
+        assert!(OffloadPlan::plan(&qiskit, qcap - 1e-6).is_err());
     }
 
     #[test]

@@ -91,7 +91,12 @@ pub fn sweep_table(
     totals: &GpuTotals,
     alphas: &[f64],
 ) -> Table {
-    let mut header: Vec<String> = vec!["config".to_string(), "P/P_GPU".into(), "W_SM".into(), "W_MEM".into()];
+    let mut header: Vec<String> = vec![
+        "config".to_string(),
+        "P/P_GPU".into(),
+        "W_SM".into(),
+        "W_MEM".into(),
+    ];
     for a in alphas {
         header.push(format!("R(α={a})"));
     }

@@ -11,8 +11,10 @@
 //!   artifact with caller literals, `smoke_run` feeds synthetic inputs.
 
 use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Context};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -154,11 +156,48 @@ pub struct SmokeStats {
 }
 
 /// PJRT executor with a compile cache.
+#[cfg(feature = "pjrt")]
 pub struct Executor {
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+/// Stub executor built when the `pjrt` feature is off (the default): the
+/// whole simulator works — only real PJRT execution is unavailable.
+/// Construction fails with a clear message instead of a link error, so
+/// `migsim runtime` degrades gracefully on machines without the XLA
+/// toolchain.
+#[cfg(not(feature = "pjrt"))]
+pub struct Executor {
+    #[allow(dead_code)]
+    private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executor {
+    pub fn new() -> crate::Result<Executor> {
+        bail!(
+            "migsim was built without the `pjrt` feature; PJRT execution is \
+             unavailable. On a machine with the XLA toolchain, add the `xla` \
+             dependency in rust/Cargo.toml (see the [features] comment) and \
+             rebuild with `--features pjrt`."
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&mut self, _reg: &Registry, name: &str) -> crate::Result<()> {
+        bail!("cannot compile '{name}': built without the `pjrt` feature")
+    }
+
+    pub fn smoke_run(&mut self, _reg: &Registry, name: &str) -> crate::Result<SmokeStats> {
+        bail!("cannot execute '{name}': built without the `pjrt` feature")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Executor {
     pub fn new() -> crate::Result<Executor> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
@@ -291,6 +330,14 @@ mod tests {
         assert!(Registry::from_json_text(&bad, Path::new("/tmp")).is_err());
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_executor_fails_with_clear_message() {
+        let err = Executor::new().err().expect("stub must not construct");
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+
+    #[cfg(feature = "pjrt")]
     #[test]
     fn executor_builds_and_runs_builder_computation() {
         // No artifacts needed: exercise the PJRT path with XlaBuilder.
@@ -308,6 +355,7 @@ mod tests {
         assert_eq!(out.to_vec::<f32>().unwrap(), vec![3.0f32, 5.0f32]);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn synthetic_inputs_deterministic() {
         let art = Artifact {
@@ -333,6 +381,7 @@ mod tests {
     /// Full round trip against real artifacts when they exist (after
     /// `make artifacts`); skipped otherwise so unit tests don't depend on
     /// the python toolchain.
+    #[cfg(feature = "pjrt")]
     #[test]
     fn artifacts_smoke_if_present() {
         let dir = Path::new("artifacts");

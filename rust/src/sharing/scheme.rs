@@ -174,7 +174,11 @@ pub fn partitions(scheme: &Scheme, spec: &GpuSpec) -> crate::Result<Vec<Partitio
             let mut out = Vec::new();
             for i in 0..*copies {
                 let ci_id = mgr.create_full(*profile).map_err(|e| {
-                    anyhow::anyhow!("cannot create {} instance #{}: {e}", GiProfile::get(*profile).name, i + 1)
+                    anyhow::anyhow!(
+                        "cannot create {} instance #{}: {e}",
+                        GiProfile::get(*profile).name,
+                        i + 1
+                    )
                 })?;
                 let ci = mgr.ci(ci_id).unwrap().clone();
                 out.push(Partition {

@@ -410,7 +410,7 @@ fn autodock(
         cold_frac: 0.0,
         cpu_corun_inflation: 1.2,
         swap_frac: None,
-            startup_s: 1.5,
+        startup_s: 1.5,
         phases: vec![MacroPhase {
             cpu_s: 0.0002,
             kernels: vec![KernelSpec {
@@ -440,7 +440,7 @@ fn llmc(name: &'static str, input: &'static str, steps: u32) -> AppModel {
         cold_frac: 0.1,
         cpu_corun_inflation: 1.15,
         swap_frac: None,
-            startup_s: 4.0,
+        startup_s: 4.0,
         phases: vec![MacroPhase {
             cpu_s: 0.003,
             kernels: vec![
@@ -492,7 +492,7 @@ fn llama3(
         cold_frac: 0.0, // weights are read every token: nothing is cold
         cpu_corun_inflation: 1.1,
         swap_frac: None,
-            startup_s: 8.0,
+        startup_s: 8.0,
         phases: vec![MacroPhase {
             cpu_s: 0.0005,
             kernels: vec![KernelSpec {

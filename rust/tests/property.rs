@@ -2,10 +2,11 @@
 //! deterministic PRNG drives randomized case generation with fixed seeds
 //! — failures reproduce exactly).
 
+use migsim::cluster::{serve, LayoutPreset, PolicyKind, ServeConfig};
 use migsim::coordinator::corun::water_fill;
 use migsim::gpu::{GpuSpec, GpuUsage, PowerModel, PowerState};
 use migsim::mig::{profile::ALL_PROFILES, MigManager};
-use migsim::offload::SpillAllocator;
+use migsim::offload::{AllocId, Placement, SpillAllocator};
 use migsim::reward::{reward, ConfigEval, GpuTotals};
 use migsim::sim::Engine;
 use migsim::util::json::Json;
@@ -89,6 +90,91 @@ fn spill_allocator_invariants_under_random_ops() {
         }
         assert!(alloc.device_used() <= cap, "case {case}");
     }
+}
+
+#[test]
+fn spill_allocator_pinned_stability_and_clean_teardown() {
+    // Stronger randomized invariants than the churn test above: pinned
+    // allocations must never leave the device at any point, touched hot
+    // data must be device-resident whenever it fits, and freeing
+    // everything must return both device and host accounting to zero.
+    let mut rng = Rng::new(0x51A11);
+    for case in 0..40 {
+        let cap = 500 + rng.below(4000);
+        let mut a = SpillAllocator::new(cap);
+        let mut live: Vec<(AllocId, bool)> = Vec::new();
+        for _ in 0..150 {
+            match rng.below(10) {
+                0..=4 => {
+                    let sz = 1 + rng.below(cap / 3);
+                    let pinned = rng.chance(0.3);
+                    if let Ok(id) = a.alloc(sz, pinned) {
+                        live.push((id, pinned));
+                    }
+                }
+                5 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let (id, _) = live.swap_remove(i);
+                        a.free(id).unwrap();
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        a.touch(live[i].0).unwrap();
+                    }
+                }
+            }
+            a.check_invariants();
+            for (id, pinned) in &live {
+                if *pinned {
+                    assert_eq!(
+                        a.placement(*id),
+                        Some(Placement::Device),
+                        "case {case}: pinned allocation spilled"
+                    );
+                }
+            }
+        }
+        // Teardown: freeing every live allocation returns both device and
+        // host accounting to zero.
+        for (id, _) in live.drain(..) {
+            a.free(id).unwrap();
+            a.check_invariants();
+        }
+        assert_eq!(a.device_used(), 0, "case {case}");
+        assert_eq!(a.host_used(), 0, "case {case}");
+    }
+}
+
+#[test]
+fn cluster_serve_is_deterministic_for_a_fixed_seed() {
+    let cfg = ServeConfig {
+        gpus: 3,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: 1.5,
+        jobs: 40,
+        deadline_s: 25.0,
+        reconfig: true,
+        seed: 0xC0FFEE,
+        workload_scale: 0.05,
+    };
+    let a = serve(&cfg).unwrap();
+    let b = serve(&cfg).unwrap();
+    assert_eq!(
+        a.to_json().compact(),
+        b.to_json().compact(),
+        "identical seeds must reproduce the full report bit-for-bit"
+    );
+    // A different seed draws a different arrival stream.
+    let c = serve(&ServeConfig {
+        seed: 0xC0FFEF,
+        ..cfg
+    })
+    .unwrap();
+    assert_ne!(a.to_json().compact(), c.to_json().compact());
 }
 
 #[test]
