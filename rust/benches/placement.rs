@@ -1,58 +1,116 @@
-//! Placement hot-path microbenchmarks: per-decision cost of the three
-//! serving policies over a warm cost cache (the steady state of a long
-//! serving run), the cold-cache cost model evaluation, and a full
-//! `cluster::serve` run in events/s.
+//! Placement hot-path benchmarks: per-decision cost of the three serving
+//! policies through the indexed per-profile walk (`Planner::place`) vs
+//! the naive full fleet scan (`Planner::place_scan`), the cold-cache cost
+//! model evaluation, and end-to-end `cluster::serve` runs at fleet scale
+//! (64 GPUs, 10k jobs) in events/s.
 //!
-//!     cargo bench --offline --bench placement
+//! The warm-decision fleet is in loaded steady state (every GPU busy
+//! except the last) — the regime a long serving run actually dispatches
+//! in, where the naive scan walks ~240 slots per decision and the indexed
+//! walk touches ≤6 profile classes.
+//!
+//! Besides the human-readable report (and the standard
+//! `results/bench/placement.json`), this bench emits
+//! `BENCH_placement.json` — machine-readable ns/decision, naive-vs-indexed
+//! speedups, and serve events/s — so the perf trajectory is tracked
+//! across PRs.
+//!
+//!     cargo bench --offline --bench placement          # full measurement
+//!     cargo bench --offline --bench placement -- --smoke   # CI bit-rot check
 
-use migsim::bench::Bencher;
+use migsim::bench::{black_box, BenchConfig, BenchResult, Bencher};
 use migsim::cluster::{serve, Fleet, LayoutPreset, Planner, PolicyKind, ServeConfig};
+use migsim::util::json::Json;
 use migsim::workload::AppId;
+use std::time::Duration;
+
+const APPS: [AppId; 5] = [
+    AppId::Faiss,
+    AppId::Hotspot,
+    AppId::Llama3Fp16,
+    AppId::Qiskit30,
+    AppId::NekRs,
+];
+
+fn ns_per_work(r: &BenchResult) -> f64 {
+    r.mean_s * 1e9 / r.work_per_iter.unwrap_or(1.0)
+}
 
 fn main() {
     let mut b = Bencher::new();
+    let smoke = b.smoke();
+    let gpus: u32 = if smoke { 8 } else { 64 };
 
-    // Per-decision placement cost with a warm cache: a table scan over
-    // the fleet's idle slots. 8 GPUs of mixed layouts ≈ 30 slots.
-    let fleet = Fleet::new(8, LayoutPreset::Mixed).unwrap();
-    let apps = [
-        AppId::Faiss,
-        AppId::Hotspot,
-        AppId::Llama3Fp16,
-        AppId::Qiskit30,
-        AppId::NekRs,
-    ];
-    for policy in [
+    // A loaded steady-state fleet: every GPU fully busy except the last,
+    // so naive first-fit cannot shortcut on slot (0, 0).
+    let mut fleet = Fleet::new(gpus, LayoutPreset::Mixed).unwrap();
+    for g in 0..(gpus as usize - 1) {
+        for s in 0..fleet.nodes[g].slots.len() {
+            fleet.start_job(g, s, 0, 0.0, 1e9);
+        }
+    }
+
+    let policies = [
         PolicyKind::FirstFit,
         PolicyKind::BestFit,
         PolicyKind::OffloadAware { alpha_centi: 10 },
-    ] {
+    ];
+    let mut decisions = Vec::new();
+    for policy in policies {
         let mut planner = Planner::new(0.05);
-        // Warm the cache.
-        for app in apps {
-            migsim::bench::black_box(planner.place(&fleet, app, policy));
+        // Warm the cost/reward caches through both paths.
+        for app in APPS {
+            black_box(planner.place(&fleet, app, policy));
+            black_box(planner.place_scan(&fleet, app, policy));
         }
-        b.bench_with_work(
-            &format!("place/warm_{}", policy.label()),
-            Some(apps.len() as f64),
-            "decisions",
-            || {
-                let mut acc = 0usize;
-                for app in apps {
-                    if planner.place(&fleet, app, policy).is_some() {
-                        acc += 1;
+        let warm = b
+            .bench_with_work(
+                &format!("place/warm_{}", policy.label()),
+                Some(APPS.len() as f64),
+                "decisions",
+                || {
+                    let mut acc = 0usize;
+                    for app in APPS {
+                        if planner.place(&fleet, app, policy).is_some() {
+                            acc += 1;
+                        }
                     }
-                }
-                acc
-            },
-        );
+                    acc
+                },
+            )
+            .cloned();
+        let naive = b
+            .bench_with_work(
+                &format!("place/naive_{}", policy.label()),
+                Some(APPS.len() as f64),
+                "decisions",
+                || {
+                    let mut acc = 0usize;
+                    for app in APPS {
+                        if planner.place_scan(&fleet, app, policy).is_some() {
+                            acc += 1;
+                        }
+                    }
+                    acc
+                },
+            )
+            .cloned();
+        if let (Some(warm), Some(naive)) = (warm, naive) {
+            let (wi, ni) = (ns_per_work(&warm), ns_per_work(&naive));
+            let mut o = Json::obj();
+            o.set("policy", policy.label().as_str())
+                .set("indexed_ns_per_decision", wi)
+                .set("naive_ns_per_decision", ni)
+                .set("speedup", ni / wi.max(1e-12));
+            decisions.push(o);
+        }
     }
 
     // Cold cost-model evaluation (runtime + rates for app x profile).
-    b.bench_with_work("place/cold_cost_model", Some(apps.len() as f64), "evals", || {
+    b.bench_with_work("place/cold_cost_model", Some(APPS.len() as f64), "evals", || {
         let mut planner = Planner::new(0.05);
         let mut acc = 0usize;
-        for app in apps {
+        for app in APPS {
             if planner
                 .cost(app, migsim::mig::ProfileId::P1g12gb, true)
                 .is_some()
@@ -63,29 +121,66 @@ fn main() {
         acc
     });
 
-    // End-to-end serving runs (arrivals + placement + completion events).
-    for (label, policy) in [
-        ("serve/first_fit_60jobs", PolicyKind::FirstFit),
-        (
-            "serve/offload_aware_60jobs",
-            PolicyKind::OffloadAware { alpha_centi: 10 },
-        ),
+    // End-to-end serving at fleet scale: arrivals + indexed placement +
+    // incremental integrals + completions. Macro runs get their own
+    // (lighter) iteration budget.
+    let jobs: u32 = if smoke { 300 } else { 10_000 };
+    let mut mb = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(200),
+        max_iters: 8,
+    });
+    let mut serve_results = Vec::new();
+    for (tag, policy) in [
+        ("first_fit", PolicyKind::FirstFit),
+        ("offload_aware", PolicyKind::OffloadAware { alpha_centi: 10 }),
     ] {
         let cfg = ServeConfig {
-            gpus: 4,
+            gpus,
             policy,
-            layout: LayoutPreset::AllSmall,
-            arrival_rate_hz: 2.0,
-            jobs: 60,
-            deadline_s: 30.0,
+            layout: LayoutPreset::Mixed,
+            arrival_rate_hz: if smoke { 4.0 } else { 30.0 },
+            jobs,
+            deadline_s: 45.0,
             reconfig: true,
             seed: 7,
             workload_scale: 0.05,
         };
-        b.bench_with_work(label, Some(60.0), "jobs", || {
-            serve(&cfg).unwrap().completed
-        });
+        let report = serve(&cfg).unwrap();
+        let res = mb
+            .bench_with_work(
+                &format!("serve/{tag}_{jobs}jobs_{gpus}gpus"),
+                Some(report.events as f64),
+                "events",
+                || serve(&cfg).unwrap().completed,
+            )
+            .cloned();
+        if let Some(res) = res {
+            let mut o = Json::obj();
+            o.set("policy", policy.label().as_str())
+                .set("gpus", cfg.gpus)
+                .set("jobs", cfg.jobs)
+                .set("completed", report.completed)
+                .set("events", report.events)
+                .set("events_per_s", report.events as f64 / res.mean_s)
+                .set("jobs_per_s", cfg.jobs as f64 / res.mean_s)
+                .set("wall_s_per_run", res.mean_s);
+            serve_results.push(o);
+        }
+    }
+
+    // Machine-readable perf trajectory for the PR log.
+    let mut doc = Json::obj();
+    doc.set("suite", "placement")
+        .set("smoke", smoke)
+        .set("gpus", gpus)
+        .set("decisions", Json::Arr(decisions))
+        .set("serve", Json::Arr(serve_results));
+    if std::fs::write("BENCH_placement.json", doc.pretty()).is_ok() {
+        println!("-- wrote BENCH_placement.json");
     }
 
     b.finish("placement");
+    mb.finish("placement_serve");
 }

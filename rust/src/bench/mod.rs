@@ -29,6 +29,20 @@ impl Default for BenchConfig {
     }
 }
 
+impl BenchConfig {
+    /// Smoke-mode config: a single untimed-quality iteration per bench,
+    /// so CI can execute every bench binary end-to-end (`cargo bench --
+    /// --smoke`) without paying for statistics.
+    pub fn smoke() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            min_time: Duration::ZERO,
+            max_iters: 1,
+        }
+    }
+}
+
 /// Result of a benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -87,6 +101,7 @@ pub struct Bencher {
     config: BenchConfig,
     results: Vec<BenchResult>,
     filter: Option<String>,
+    smoke: bool,
 }
 
 impl Default for Bencher {
@@ -99,15 +114,30 @@ impl Bencher {
     pub fn new() -> Bencher {
         // `cargo bench -- <filter>` support.
         let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        // `cargo bench -- --smoke` (or MIGSIM_BENCH_SMOKE=1): one
+        // iteration per bench — a bit-rot check, not a measurement.
+        let smoke = std::env::args().skip(1).any(|a| a == "--smoke")
+            || std::env::var_os("MIGSIM_BENCH_SMOKE").is_some();
         Bencher {
-            config: BenchConfig::default(),
+            config: if smoke {
+                BenchConfig::smoke()
+            } else {
+                BenchConfig::default()
+            },
             results: Vec::new(),
             filter,
+            smoke,
         }
     }
 
+    /// Whether smoke mode is active — benches should also shrink their
+    /// *workloads* (fleet sizes, job counts), not just iteration counts.
+    pub fn smoke(&self) -> bool {
+        self.smoke
+    }
+
     pub fn with_config(mut self, c: BenchConfig) -> Bencher {
-        self.config = c;
+        self.config = if self.smoke { BenchConfig::smoke() } else { c };
         self
     }
 

@@ -7,11 +7,34 @@
 //! allowed, but only on a drained GPU and only through layouts that the
 //! `MigManager` slice-budget validation accepts). While a reconfiguration
 //! is in flight the node serves nothing.
+//!
+//! ## The incremental index
+//!
+//! `Fleet` maintains a `FleetIndex` alongside the raw nodes so the serving
+//! hot path is O(changed state), not O(fleet):
+//! - per-`ProfileId` idle-slot sets in deterministic `(gpu, slot)` order —
+//!   a placement decision becomes a walk over ≤6 profile classes instead
+//!   of a full `gpus × slots` scan;
+//! - the set of fully-idle, non-reconfiguring nodes (the reconfiguration
+//!   planner's candidates);
+//! - per-profile effective-layout node counts (the O(classes)
+//!   `fits_current_layouts` guard);
+//! - a live fleet busy-SM counter (the utilization integral);
+//! - an availability *epoch* that bumps whenever capacity comes back
+//!   (job finish, reconfig completion), so the dispatcher can memoize
+//!   placement failures until the fleet could possibly satisfy them.
+//!
+//! Mutations must flow through the `Fleet` methods (`start_job`,
+//! `finish_job`, `begin_reconfig`, `finish_reconfig`); mutating
+//! `fleet.nodes[..]` directly bypasses the index. The `*_scan` variants
+//! recompute the same quantities from the raw slots and serve as the
+//! differential-test oracle.
 
 use crate::gpu::GpuSpec;
-use crate::mig::profile::{GiProfile, ProfileId};
+use crate::mig::profile::{GiProfile, ProfileId, ALL_PROFILES, NUM_PROFILES};
 use crate::mig::MigManager;
 use anyhow::{bail, ensure};
+use std::collections::BTreeSet;
 
 /// What a serving slot (one MIG instance) is doing.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -134,6 +157,10 @@ pub struct GpuNode {
     pub pending_layout: Option<Vec<ProfileId>>,
     /// Completed reconfigurations (diagnostics).
     pub reconfigs: u32,
+    /// Live counter of busy slots (maintained by `Fleet`).
+    busy_slots: u32,
+    /// Live counter of SMs running jobs (maintained by `Fleet`).
+    busy_sms_count: u32,
 }
 
 impl GpuNode {
@@ -147,6 +174,8 @@ impl GpuNode {
             reconfiguring_until: None,
             pending_layout: None,
             reconfigs: 0,
+            busy_slots: 0,
+            busy_sms_count: 0,
         })
     }
 
@@ -156,11 +185,17 @@ impl GpuNode {
 
     /// True when every slot is idle (a precondition for reconfiguration).
     pub fn all_idle(&self) -> bool {
-        self.slots.iter().all(|s| s.is_idle())
+        self.busy_slots == 0
     }
 
-    /// SMs currently running jobs on this node.
+    /// SMs currently running jobs on this node (O(1) live counter).
     pub fn busy_sms(&self) -> u32 {
+        self.busy_sms_count
+    }
+
+    /// SMs currently running jobs, recomputed from the slots — the
+    /// differential-test oracle for `busy_sms`.
+    pub fn busy_sms_scan(&self) -> u32 {
         self.slots
             .iter()
             .filter(|s| !s.is_idle())
@@ -178,6 +213,7 @@ impl GpuNode {
     /// Start repartitioning to `target`; the node serves nothing until
     /// `until_s`. Fails on a busy or already-reconfiguring node and on an
     /// invalid target layout — MIG cannot change under running work.
+    /// Prefer `Fleet::begin_reconfig`, which also maintains the index.
     pub fn begin_reconfig(&mut self, target: Vec<ProfileId>, until_s: f64) -> crate::Result<()> {
         if !self.all_idle() {
             bail!("GPU {} has running jobs; MIG cannot be reconfigured", self.id);
@@ -192,7 +228,8 @@ impl GpuNode {
     }
 
     /// Complete the in-flight reconfiguration: install the pending layout
-    /// and rebuild the (empty) slots.
+    /// and rebuild the (empty) slots. Prefer `Fleet::finish_reconfig`,
+    /// which also maintains the index.
     pub fn finish_reconfig(&mut self) {
         if let Some(layout) = self.pending_layout.take() {
             self.slots = layout.iter().map(|&p| Slot::new(p)).collect();
@@ -203,11 +240,61 @@ impl GpuNode {
     }
 }
 
+/// Incremental placement/aggregate index over the fleet — see the module
+/// docs for what each piece buys the serving hot path.
+#[derive(Debug)]
+struct FleetIndex {
+    /// Idle slots per profile class, in deterministic `(gpu, slot)` order.
+    /// Slots of reconfiguring nodes are excluded (they serve nothing).
+    idle: [BTreeSet<(usize, usize)>; NUM_PROFILES],
+    /// Fully-idle, non-reconfiguring nodes (reconfiguration candidates).
+    idle_nodes: BTreeSet<usize>,
+    /// Number of nodes whose *effective* layout contains each profile.
+    layout_nodes: [u32; NUM_PROFILES],
+    /// SMs currently running jobs across the fleet.
+    busy_sms: u32,
+    /// Bumped whenever capacity comes back (job finish / reconfig done):
+    /// a placement that failed at epoch E keeps failing while the epoch
+    /// stays E, because every other mutation only removes capacity.
+    epoch: u64,
+}
+
+impl FleetIndex {
+    fn new() -> FleetIndex {
+        FleetIndex {
+            idle: std::array::from_fn(|_| BTreeSet::new()),
+            idle_nodes: BTreeSet::new(),
+            layout_nodes: [0; NUM_PROFILES],
+            busy_sms: 0,
+            epoch: 0,
+        }
+    }
+
+    /// Adjust the per-profile node counts for the *distinct* profiles of
+    /// one node's layout.
+    fn adjust_layout_nodes(&mut self, layout: &[ProfileId], add: bool) {
+        let mut seen = [false; NUM_PROFILES];
+        for p in layout {
+            seen[p.index()] = true;
+        }
+        for (i, s) in seen.iter().enumerate() {
+            if *s {
+                if add {
+                    self.layout_nodes[i] += 1;
+                } else {
+                    self.layout_nodes[i] -= 1;
+                }
+            }
+        }
+    }
+}
+
 /// The multi-GPU fleet.
 #[derive(Debug)]
 pub struct Fleet {
     pub nodes: Vec<GpuNode>,
     pub spec: GpuSpec,
+    index: FleetIndex,
 }
 
 impl Fleet {
@@ -216,9 +303,18 @@ impl Fleet {
         let nodes = (0..gpus as usize)
             .map(|i| GpuNode::new(i, preset.layout_for(i)))
             .collect::<crate::Result<Vec<_>>>()?;
+        let mut index = FleetIndex::new();
+        for (g, node) in nodes.iter().enumerate() {
+            for (s, slot) in node.slots.iter().enumerate() {
+                index.idle[slot.profile.id.index()].insert((g, s));
+            }
+            index.idle_nodes.insert(g);
+            index.adjust_layout_nodes(&node.layout, true);
+        }
         Ok(Fleet {
             nodes,
             spec: GpuSpec::gh_h100_96gb(),
+            index,
         })
     }
 
@@ -227,40 +323,163 @@ impl Fleet {
         self.spec.sms * self.nodes.len() as u32
     }
 
+    /// SMs currently running jobs (O(1) live counter).
     pub fn busy_sms(&self) -> u32 {
-        self.nodes.iter().map(|n| n.busy_sms()).sum()
+        self.index.busy_sms
+    }
+
+    /// SMs currently running jobs, recomputed from the slots — the
+    /// differential-test oracle for `busy_sms`.
+    pub fn busy_sms_scan(&self) -> u32 {
+        self.nodes.iter().map(|n| n.busy_sms_scan()).sum()
+    }
+
+    /// Availability epoch: bumps whenever a slot (or a whole node) comes
+    /// back. A placement failure memoized at epoch E stays valid while the
+    /// epoch is still E.
+    pub fn epoch(&self) -> u64 {
+        self.index.epoch
+    }
+
+    /// First idle slot of `profile` in `(gpu, slot)` order, excluding
+    /// reconfiguring nodes.
+    pub fn first_idle(&self, profile: ProfileId) -> Option<(usize, usize)> {
+        self.index.idle[profile.index()].iter().next().copied()
+    }
+
+    /// Number of idle slots of `profile` (reconfiguring nodes excluded).
+    pub fn idle_count(&self, profile: ProfileId) -> usize {
+        self.index.idle[profile.index()].len()
+    }
+
+    /// Whether any node's *effective* layout (post-reconfiguration if one
+    /// is in flight) contains `profile`.
+    pub fn has_layout_class(&self, profile: ProfileId) -> bool {
+        self.index.layout_nodes[profile.index()] > 0
+    }
+
+    /// Fully-idle, non-reconfiguring nodes in ascending id order — the
+    /// reconfiguration planner's candidate walk.
+    pub fn idle_nodes(&self) -> impl Iterator<Item = usize> + '_ {
+        self.index.idle_nodes.iter().copied()
     }
 
     /// Mark a slot busy with `job` until `until_s`.
     pub fn start_job(&mut self, gpu: usize, slot: usize, job: u32, now: f64, until_s: f64) {
-        let s = &mut self.nodes[gpu].slots[slot];
+        let node = &mut self.nodes[gpu];
+        let s = &mut node.slots[slot];
         assert!(s.is_idle(), "placing onto a busy slot");
         s.state = SlotState::Busy {
             job,
             started_s: now,
             until_s,
         };
+        let sms = s.profile.sms;
+        let pid = s.profile.id;
+        node.busy_slots += 1;
+        node.busy_sms_count += sms;
+        self.index.busy_sms += sms;
+        self.index.idle[pid.index()].remove(&(gpu, slot));
+        self.index.idle_nodes.remove(&gpu);
     }
 
     /// Free a slot; returns the job that was running there.
     pub fn finish_job(&mut self, gpu: usize, slot: usize, now: f64) -> Option<u32> {
-        let s = &mut self.nodes[gpu].slots[slot];
-        match s.state {
-            SlotState::Busy { job, started_s, .. } => {
-                s.busy_accum_s += now - started_s;
-                s.state = SlotState::Idle;
-                Some(job)
-            }
-            SlotState::Idle => None,
+        let node = &mut self.nodes[gpu];
+        let s = &mut node.slots[slot];
+        let (job, started_s) = match s.state {
+            SlotState::Busy { job, started_s, .. } => (job, started_s),
+            SlotState::Idle => return None,
+        };
+        s.busy_accum_s += now - started_s;
+        s.state = SlotState::Idle;
+        let sms = s.profile.sms;
+        let pid = s.profile.id;
+        node.busy_slots -= 1;
+        node.busy_sms_count -= sms;
+        let node_idle = node.busy_slots == 0 && !node.reconfiguring();
+        self.index.busy_sms -= sms;
+        self.index.idle[pid.index()].insert((gpu, slot));
+        if node_idle {
+            self.index.idle_nodes.insert(gpu);
         }
+        self.index.epoch += 1;
+        Some(job)
+    }
+
+    /// Start repartitioning `gpu` to `target` (index-maintaining wrapper
+    /// around `GpuNode::begin_reconfig`). While the reconfiguration is in
+    /// flight the node's slots leave the idle index — it serves nothing.
+    pub fn begin_reconfig(
+        &mut self,
+        gpu: usize,
+        target: Vec<ProfileId>,
+        until_s: f64,
+    ) -> crate::Result<()> {
+        self.nodes[gpu].begin_reconfig(target, until_s)?;
+        // Success implies the node was fully idle: every slot was in the
+        // idle index and comes out of it now.
+        for (s, slot) in self.nodes[gpu].slots.iter().enumerate() {
+            self.index.idle[slot.profile.id.index()].remove(&(gpu, s));
+        }
+        self.index.idle_nodes.remove(&gpu);
+        // The effective layout flips from the installed one to the pending
+        // target (`effective_layout` returns the pending layout while the
+        // reconfiguration is in flight).
+        let node = &self.nodes[gpu];
+        self.index.adjust_layout_nodes(&node.layout, false);
+        self.index.adjust_layout_nodes(node.effective_layout(), true);
+        Ok(())
+    }
+
+    /// Complete an in-flight reconfiguration on `gpu` (index-maintaining
+    /// wrapper around `GpuNode::finish_reconfig`). No-op when the node is
+    /// not reconfiguring.
+    pub fn finish_reconfig(&mut self, gpu: usize) {
+        if !self.nodes[gpu].reconfiguring() {
+            return;
+        }
+        self.nodes[gpu].finish_reconfig();
+        for (s, slot) in self.nodes[gpu].slots.iter().enumerate() {
+            self.index.idle[slot.profile.id.index()].insert((gpu, s));
+        }
+        self.index.idle_nodes.insert(gpu);
+        self.index.epoch += 1;
     }
 
     /// Instantaneous fragmentation: the fraction of *idle* SMs stranded in
     /// slots whose memory cannot directly host the smallest pending job
     /// (`needed_gib` = footprint + context). 0 when nothing is pending or
     /// nothing is idle — idle capacity only counts as fragmented while
-    /// work is actually waiting for it.
+    /// work is actually waiting for it. O(profile classes) via the index.
     pub fn fragmentation(&self, needed_gib: Option<f64>) -> f64 {
+        let needed = match needed_gib {
+            Some(n) => n,
+            None => return 0.0,
+        };
+        let mut idle_sms = 0u32;
+        let mut stranded_sms = 0u32;
+        for pid in ALL_PROFILES {
+            let n = self.index.idle[pid.index()].len() as u32;
+            if n == 0 {
+                continue;
+            }
+            let prof = GiProfile::get(pid);
+            idle_sms += n * prof.sms;
+            if prof.mem_gib < needed {
+                stranded_sms += n * prof.sms;
+            }
+        }
+        if idle_sms == 0 {
+            0.0
+        } else {
+            stranded_sms as f64 / idle_sms as f64
+        }
+    }
+
+    /// Fragmentation recomputed by a full slot scan — the
+    /// differential-test oracle for `fragmentation`.
+    pub fn fragmentation_scan(&self, needed_gib: Option<f64>) -> f64 {
         let needed = match needed_gib {
             Some(n) => n,
             None => return 0.0,
@@ -339,20 +558,19 @@ mod tests {
     fn reconfig_requires_idle_and_validates() {
         let mut f = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
         f.start_job(0, 0, 1, 0.0, 10.0);
-        assert!(f.nodes[0]
-            .begin_reconfig(vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 5.0)
+        assert!(f
+            .begin_reconfig(0, vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 5.0)
             .is_err());
         f.finish_job(0, 0, 10.0);
         // Invalid target rejected even on an idle node.
-        assert!(f.nodes[0].begin_reconfig(vec![P4g48gb, P4g48gb], 12.0).is_err());
-        f.nodes[0]
-            .begin_reconfig(vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 12.0)
+        assert!(f.begin_reconfig(0, vec![P4g48gb, P4g48gb], 12.0).is_err());
+        f.begin_reconfig(0, vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 12.0)
             .unwrap();
         assert!(f.nodes[0].reconfiguring());
         assert_eq!(f.nodes[0].effective_layout().len(), 4);
         // Cannot stack a second reconfiguration.
-        assert!(f.nodes[0].begin_reconfig(vec![P7g96gb], 13.0).is_err());
-        f.nodes[0].finish_reconfig();
+        assert!(f.begin_reconfig(0, vec![P7g96gb], 13.0).is_err());
+        f.finish_reconfig(0);
         assert!(!f.nodes[0].reconfiguring());
         assert_eq!(f.nodes[0].slots.len(), 4);
         assert_eq!(f.nodes[0].reconfigs, 1);
@@ -373,5 +591,95 @@ mod tests {
             f.start_job(0, i, i as u32, 0.0, 1.0);
         }
         assert_eq!(f.fragmentation(Some(16.0)), 0.0);
+    }
+
+    /// Scan-derived truth for the idle index (first idle slot of a
+    /// profile, excluding reconfiguring nodes).
+    fn first_idle_scan(f: &Fleet, pid: ProfileId) -> Option<(usize, usize)> {
+        for (g, node) in f.nodes.iter().enumerate() {
+            if node.reconfiguring() {
+                continue;
+            }
+            for (s, slot) in node.slots.iter().enumerate() {
+                if slot.is_idle() && slot.profile.id == pid {
+                    return Some((g, s));
+                }
+            }
+        }
+        None
+    }
+
+    fn assert_index_matches_scan(f: &Fleet) {
+        assert_eq!(f.busy_sms(), f.busy_sms_scan());
+        for pid in ALL_PROFILES {
+            assert_eq!(f.first_idle(pid), first_idle_scan(f, pid), "{pid:?}");
+        }
+        for needed in [0.5, 12.0, 24.0, 47.0, 95.0] {
+            assert_eq!(
+                f.fragmentation(Some(needed)),
+                f.fragmentation_scan(Some(needed)),
+                "needed={needed}"
+            );
+        }
+        let idle_scan: Vec<usize> = f
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| !n.reconfiguring() && n.all_idle())
+            .map(|(g, _)| g)
+            .collect();
+        assert_eq!(f.idle_nodes().collect::<Vec<_>>(), idle_scan);
+        for pid in ALL_PROFILES {
+            let present_scan = f
+                .nodes
+                .iter()
+                .any(|n| n.effective_layout().contains(&pid));
+            assert_eq!(f.has_layout_class(pid), present_scan, "{pid:?}");
+        }
+    }
+
+    #[test]
+    fn index_tracks_scan_truth_through_randomized_lifecycle() {
+        let mut rng = crate::util::Rng::new(0x1D7E);
+        let mut f = Fleet::new(4, LayoutPreset::Mixed).unwrap();
+        let mut epoch = f.epoch();
+        for step in 0..400u32 {
+            let g = rng.below(4) as usize;
+            match rng.below(4) {
+                0 => {
+                    // Start a job on the first idle slot of node g.
+                    if !f.nodes[g].reconfiguring() {
+                        if let Some(s) =
+                            f.nodes[g].slots.iter().position(|s| s.is_idle())
+                        {
+                            f.start_job(g, s, step, step as f64, step as f64 + 5.0);
+                        }
+                    }
+                }
+                1 => {
+                    // Finish the first busy slot of node g.
+                    if let Some(s) =
+                        f.nodes[g].slots.iter().position(|s| !s.is_idle())
+                    {
+                        let before = f.epoch();
+                        f.finish_job(g, s, step as f64);
+                        assert!(f.epoch() > before, "finish must bump the epoch");
+                    }
+                }
+                2 => {
+                    let target = class_layout(ALL_PROFILES[rng.below(6) as usize]);
+                    let _ = f.begin_reconfig(g, target, step as f64 + 3.0);
+                }
+                _ => {
+                    let was = f.nodes[g].reconfiguring();
+                    f.finish_reconfig(g);
+                    if was {
+                        assert!(f.epoch() > epoch, "reconfig done must bump the epoch");
+                    }
+                }
+            }
+            epoch = f.epoch();
+            assert_index_matches_scan(&f);
+        }
     }
 }

@@ -12,11 +12,27 @@
 //! deterministic for a fixed seed.
 //!
 //! Module map:
-//! - `fleet`: GPUs, layouts, slots, the reconfiguration state machine.
-//! - `queue`: FIFO admission with deadlines and lifecycle accounting.
+//! - `fleet`: GPUs, layouts, slots, the reconfiguration state machine,
+//!   and the incremental per-profile idle index.
+//! - `queue`: FIFO admission with deadlines, lifecycle accounting, and
+//!   live pending/resolution counters.
 //! - `placement`: first-fit / best-fit / offload-aware policies over a
-//!   memoized cost model (runtime + power rates per app×profile).
+//!   dense memoized cost model (runtime + power rates per app×profile);
+//!   placement decisions walk ≤6 profile classes via the fleet index.
 //! - `reconfig`: valid-partition-preserving layout planning + latency.
+//!
+//! ## The hot path, and its oracle
+//!
+//! Per-event cost is O(changed state), not O(fleet): placement walks the
+//! per-profile idle index; the energy/fragmentation/utilization integrals
+//! consume live counters (fleet busy-SMs, per-class idle counts, per-app
+//! pending buckets) and a per-GPU power cache that only recomputes GPUs
+//! whose running set changed; dispatch reuses scratch buffers and
+//! memoizes placement failures per app until the fleet epoch shows
+//! capacity returning. `ServeMode::NaiveOracle` keeps the original
+//! full-rescan implementation of every one of those decisions; both modes
+//! produce bit-identical `ServeReport`s for a fixed seed (differentially
+//! tested in `tests/integration.rs`).
 //!
 //! Outputs (`ServeReport`): admitted throughput, p50/p95/p99 queueing
 //! latency, fleet utilization, fragmentation, and energy integrated
@@ -37,7 +53,7 @@ use crate::util::json::Json;
 use crate::util::stats::{percentile, Accum};
 use crate::util::units::{ns_to_sec, sec_to_ns};
 use crate::workload::trace::JobTrace;
-use crate::workload::{apps, AppId};
+use crate::workload::AppId;
 use anyhow::ensure;
 use std::collections::BTreeMap;
 
@@ -75,6 +91,15 @@ impl Default for ServeConfig {
     }
 }
 
+/// Which serve implementation runs: the indexed O(changed-state) hot path
+/// (the default) or the naive full-rescan oracle kept for differential
+/// testing — for a fixed config both produce bit-identical reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    Indexed,
+    NaiveOracle,
+}
+
 /// The serving job mix: the paper's suite plus the §VI large variants
 /// (which exceed a 1g.12gb slice and make offloading matter).
 pub fn serve_mix() -> Vec<(AppId, f64)> {
@@ -100,6 +125,8 @@ pub struct ServeReport {
     pub offloaded: u32,
     /// MIG reconfigurations performed across the fleet.
     pub reconfigs: u32,
+    /// Simulation events dispatched by the serving loop.
+    pub events: u64,
     /// Serving horizon: last completion/expiry instant (s).
     pub makespan_s: f64,
     /// Admitted throughput: completed jobs per second of horizon.
@@ -130,6 +157,7 @@ impl ServeReport {
             .set("rejected", self.rejected)
             .set("offloaded", self.offloaded)
             .set("reconfigs", self.reconfigs)
+            .set("events", self.events)
             .set("makespan_s", self.makespan_s)
             .set("throughput_jobs_s", self.throughput_jobs_s)
             .set("wait_mean_s", self.wait_mean_s)
@@ -147,7 +175,7 @@ impl ServeReport {
             "serve {} on {} x{} @ {:.2} jobs/s\n\
              jobs: {} completed, {} expired, {} rejected ({} offloaded, {} reconfigs)\n\
              throughput {:.3} jobs/s over {:.1} s  wait p50/p95/p99 {:.2}/{:.2}/{:.2} s\n\
-             utilization {:.1}%  fragmentation {:.1}%  energy {:.1} kJ",
+             utilization {:.1}%  fragmentation {:.1}%  energy {:.1} kJ  ({} events)",
             self.policy,
             self.layout,
             self.gpus,
@@ -165,6 +193,7 @@ impl ServeReport {
             self.utilization * 100.0,
             self.fragmentation * 100.0,
             self.energy_j / 1e3,
+            self.events,
         )
     }
 }
@@ -177,8 +206,14 @@ enum Ev {
     ReconfigDone(usize),
 }
 
-/// Run one serving simulation. Deterministic for a fixed config.
+/// Run one serving simulation on the indexed hot path. Deterministic for
+/// a fixed config.
 pub fn serve(cfg: &ServeConfig) -> crate::Result<ServeReport> {
+    serve_with(cfg, ServeMode::Indexed)
+}
+
+/// Run one serving simulation under an explicit `ServeMode`.
+pub fn serve_with(cfg: &ServeConfig, mode: ServeMode) -> crate::Result<ServeReport> {
     ensure!(cfg.gpus >= 1, "serve needs at least one GPU");
     ensure!(cfg.jobs >= 1, "serve needs at least one job");
     ensure!(cfg.arrival_rate_hz > 0.0, "arrival rate must be positive");
@@ -194,10 +229,8 @@ pub fn serve(cfg: &ServeConfig) -> crate::Result<ServeReport> {
     }
 
     let power_model = PowerModel::h100();
-    // Activity rates of running jobs, keyed by (gpu, slot). BTreeMap so
-    // float summation order — and thus the energy integral — is
-    // deterministic.
-    let mut running: BTreeMap<(usize, usize), PlacementCost> = BTreeMap::new();
+    let mut power = PowerTracker::new(mode, &fleet);
+    let mut scratch = DispatchScratch::new();
     // Pending deadline events, cancelled on placement so the event loop
     // (and the energy integral) ends at the last real state change
     // instead of idling until `last arrival + deadline`.
@@ -216,15 +249,28 @@ pub fn serve(cfg: &ServeConfig) -> crate::Result<ServeReport> {
         // past the horizon would skew the energy comparison between runs
         // (the metrics all cover [0, horizon]). Mid-run idle gaps between
         // arrivals still count — the fleet is powered on, waiting.
-        let work_remains =
-            queue.jobs.len() < cfg.jobs as usize || !queue.all_resolved();
+        let resolved = match mode {
+            ServeMode::Indexed => queue.all_resolved(),
+            ServeMode::NaiveOracle => queue.all_resolved_scan(),
+        };
+        let work_remains = queue.jobs.len() < cfg.jobs as usize || !resolved;
         if dt > 0.0 && work_remains {
-            energy_j += dt * fleet_power_w(&fleet, &power_model, &running);
-            let needed = queue
-                .smallest_pending_footprint_gib()
-                .map(|f| f + planner.ctx_gib());
-            frag_integral += dt * fleet.fragmentation(needed);
-            busy_sm_integral += dt * fleet.busy_sms() as f64;
+            energy_j += dt * power.power_w(&fleet, &power_model);
+            let smallest = match mode {
+                ServeMode::Indexed => queue.smallest_pending_footprint_gib(),
+                ServeMode::NaiveOracle => queue.smallest_pending_footprint_scan(),
+            };
+            let needed = smallest.map(|f| f + planner.ctx_gib());
+            let frag = match mode {
+                ServeMode::Indexed => fleet.fragmentation(needed),
+                ServeMode::NaiveOracle => fleet.fragmentation_scan(needed),
+            };
+            frag_integral += dt * frag;
+            let busy = match mode {
+                ServeMode::Indexed => fleet.busy_sms(),
+                ServeMode::NaiveOracle => fleet.busy_sms_scan(),
+            };
+            busy_sm_integral += dt * busy as f64;
         }
         last_t = now;
         match ev.event {
@@ -240,13 +286,15 @@ pub fn serve(cfg: &ServeConfig) -> crate::Result<ServeReport> {
                         Some(engine.schedule_at(sec_to_ns(abandon_s), Ev::Deadline(id)));
                     dispatch(
                         cfg,
+                        mode,
                         now,
                         &mut fleet,
                         &mut queue,
                         &mut planner,
                         &mut engine,
-                        &mut running,
+                        &mut power,
                         &mut deadline_tokens,
+                        &mut scratch,
                     );
                 } else {
                     queue.reject(id, now);
@@ -259,36 +307,42 @@ pub fn serve(cfg: &ServeConfig) -> crate::Result<ServeReport> {
             Ev::JobDone { gpu, slot } => {
                 if let Some(job) = fleet.finish_job(gpu, slot, now) {
                     queue.mark_completed(job, now);
-                    running.remove(&(gpu, slot));
+                    power.on_finish(gpu, slot);
                     dispatch(
                         cfg,
+                        mode,
                         now,
                         &mut fleet,
                         &mut queue,
                         &mut planner,
                         &mut engine,
-                        &mut running,
+                        &mut power,
                         &mut deadline_tokens,
+                        &mut scratch,
                     );
                 }
             }
             Ev::ReconfigDone(gpu) => {
-                fleet.nodes[gpu].finish_reconfig();
+                fleet.finish_reconfig(gpu);
+                power.on_reconfig_done(gpu, fleet.nodes[gpu].slots.len());
                 dispatch(
                     cfg,
+                    mode,
                     now,
                     &mut fleet,
                     &mut queue,
                     &mut planner,
                     &mut engine,
-                    &mut running,
+                    &mut power,
                     &mut deadline_tokens,
+                    &mut scratch,
                 );
             }
         }
     }
 
     debug_assert!(queue.all_resolved(), "events drained with unresolved jobs");
+    debug_assert!(queue.all_resolved_scan(), "resolution counter diverged");
     let horizon = queue.horizon_s().max(1e-9);
     let waits = queue.completed_waits();
     let pct = |p: f64| {
@@ -317,6 +371,7 @@ pub fn serve(cfg: &ServeConfig) -> crate::Result<ServeReport> {
         rejected: queue.count(JobState::Rejected),
         offloaded,
         reconfigs: fleet.nodes.iter().map(|n| n.reconfigs).sum(),
+        events: engine.popped(),
         makespan_s: horizon,
         throughput_jobs_s: completed as f64 / horizon,
         wait_mean_s: wacc.mean(),
@@ -329,6 +384,25 @@ pub fn serve(cfg: &ServeConfig) -> crate::Result<ServeReport> {
     })
 }
 
+/// Reusable dispatch state: the pending-id snapshot buffer and the
+/// per-app placement-failure memo. A placement that failed at fleet
+/// epoch E keeps failing while the epoch stays E — every mutation since
+/// only *removed* capacity — so repeat attempts for the same app are
+/// skipped without touching the planner.
+struct DispatchScratch {
+    ids: Vec<u32>,
+    failed_at_epoch: [Option<u64>; AppId::COUNT],
+}
+
+impl DispatchScratch {
+    fn new() -> DispatchScratch {
+        DispatchScratch {
+            ids: Vec::new(),
+            failed_at_epoch: [None; AppId::COUNT],
+        }
+    }
+}
+
 /// Try to place every pending job (FIFO with backfilling: a blocked head
 /// does not starve smaller jobs behind it). When a job fits no layout the
 /// fleet currently has — or is already reconfiguring toward — and
@@ -337,44 +411,206 @@ pub fn serve(cfg: &ServeConfig) -> crate::Result<ServeReport> {
 #[allow(clippy::too_many_arguments)]
 fn dispatch(
     cfg: &ServeConfig,
+    mode: ServeMode,
     now: f64,
     fleet: &mut Fleet,
     queue: &mut AdmissionQueue,
     planner: &mut Planner,
     engine: &mut Engine<Ev>,
-    running: &mut BTreeMap<(usize, usize), PlacementCost>,
+    power: &mut PowerTracker,
     deadline_tokens: &mut [Option<EventToken>],
+    scratch: &mut DispatchScratch,
 ) {
-    let ids: Vec<u32> = queue.pending_ids().collect();
-    for id in ids {
+    let DispatchScratch {
+        ids,
+        failed_at_epoch,
+    } = scratch;
+    ids.clear();
+    ids.extend(queue.pending_ids());
+    for &id in ids.iter() {
         let app = queue.jobs[id as usize].job.app;
-        if let Some((g, s, c)) = planner.place(fleet, app, cfg.policy) {
+        let placed = match mode {
+            ServeMode::Indexed => {
+                if failed_at_epoch[app.index()] == Some(fleet.epoch()) {
+                    // Provably still fails: no capacity came back since
+                    // the last failed attempt for this app.
+                    None
+                } else {
+                    let r = planner.place(fleet, app, cfg.policy);
+                    if r.is_none() {
+                        failed_at_epoch[app.index()] = Some(fleet.epoch());
+                    }
+                    r
+                }
+            }
+            ServeMode::NaiveOracle => planner.place_scan(fleet, app, cfg.policy),
+        };
+        if let Some((g, s, c)) = placed {
             queue.mark_running(id, now, g, c.offloaded);
             if let Some(tok) = deadline_tokens[id as usize].take() {
                 engine.cancel(tok);
             }
             let until = now + c.runtime_s;
             fleet.start_job(g, s, id, now, until);
-            running.insert((g, s), c);
+            power.on_start(g, s, c);
             engine.schedule_at(sec_to_ns(until), Ev::JobDone { gpu: g, slot: s });
-        } else if cfg.reconfig
-            && !planner.fits_current_layouts(fleet, app, cfg.policy.allows_offload())
-        {
-            let need = apps::model(app).footprint_gib + planner.ctx_gib();
-            if let Some((g, target)) = reconfig::plan_reconfig(fleet, need) {
-                let until = now + reconfig::latency_s(&fleet.nodes[g].layout, &target);
-                if fleet.nodes[g].begin_reconfig(target, until).is_ok() {
-                    engine.schedule_at(sec_to_ns(until), Ev::ReconfigDone(g));
+        } else if cfg.reconfig {
+            let fits = match mode {
+                ServeMode::Indexed => {
+                    planner.fits_current_layouts(fleet, app, cfg.policy.allows_offload())
+                }
+                ServeMode::NaiveOracle => {
+                    planner.fits_current_layouts_scan(fleet, app, cfg.policy.allows_offload())
+                }
+            };
+            if !fits {
+                // Memoized footprint: same constant either mode would
+                // compute, without rebuilding the app model per attempt.
+                let need = planner.footprint_gib(app) + planner.ctx_gib();
+                let plan = match mode {
+                    ServeMode::Indexed => reconfig::plan_reconfig(fleet, need),
+                    ServeMode::NaiveOracle => reconfig::plan_reconfig_scan(fleet, need),
+                };
+                if let Some((g, target)) = plan {
+                    let until = now + reconfig::latency_s(&fleet.nodes[g].layout, &target);
+                    if fleet.begin_reconfig(g, target, until).is_ok() {
+                        engine.schedule_at(sec_to_ns(until), Ev::ReconfigDone(g));
+                    }
                 }
             }
         }
     }
 }
 
-/// Instantaneous fleet power: per-GPU `PowerModel` demand from the running
-/// jobs' average activity rates (no DVFS governor here — serving jobs on
-/// MIG slices stays under the cap, which `reported_w` enforces anyway).
-fn fleet_power_w(
+/// Live per-GPU power bookkeeping. The naive oracle rebuilds every GPU's
+/// usage from the full running map on each integration step; the indexed
+/// path recomputes only GPUs whose running set changed and caches the
+/// per-GPU reported watts (summed in the same ascending-GPU order, so the
+/// energy integral is bit-identical).
+enum PowerTracker {
+    Naive {
+        /// Activity rates of running jobs, keyed by (gpu, slot). BTreeMap
+        /// so float summation order — and thus the energy integral — is
+        /// deterministic.
+        running: BTreeMap<(usize, usize), PlacementCost>,
+    },
+    Indexed {
+        nodes: Vec<NodePower>,
+    },
+}
+
+struct NodePower {
+    /// Running-job costs by slot index (iterated in slot order — the same
+    /// order the naive BTreeMap visits a GPU's jobs in).
+    costs: Vec<Option<PlacementCost>>,
+    dirty: bool,
+    watts: f64,
+}
+
+impl PowerTracker {
+    fn new(mode: ServeMode, fleet: &Fleet) -> PowerTracker {
+        match mode {
+            ServeMode::NaiveOracle => PowerTracker::Naive {
+                running: BTreeMap::new(),
+            },
+            ServeMode::Indexed => PowerTracker::Indexed {
+                nodes: fleet
+                    .nodes
+                    .iter()
+                    .map(|n| NodePower {
+                        costs: vec![None; n.slots.len()],
+                        dirty: true,
+                        watts: 0.0,
+                    })
+                    .collect(),
+            },
+        }
+    }
+
+    fn on_start(&mut self, gpu: usize, slot: usize, c: PlacementCost) {
+        match self {
+            PowerTracker::Naive { running } => {
+                running.insert((gpu, slot), c);
+            }
+            PowerTracker::Indexed { nodes } => {
+                nodes[gpu].costs[slot] = Some(c);
+                nodes[gpu].dirty = true;
+            }
+        }
+    }
+
+    fn on_finish(&mut self, gpu: usize, slot: usize) {
+        match self {
+            PowerTracker::Naive { running } => {
+                running.remove(&(gpu, slot));
+            }
+            PowerTracker::Indexed { nodes } => {
+                nodes[gpu].costs[slot] = None;
+                nodes[gpu].dirty = true;
+            }
+        }
+    }
+
+    /// A reconfiguration landed on `gpu`: the slot count changed (the
+    /// node is drained, so there are no running costs to carry over).
+    fn on_reconfig_done(&mut self, gpu: usize, slots: usize) {
+        match self {
+            PowerTracker::Naive { .. } => {}
+            PowerTracker::Indexed { nodes } => {
+                nodes[gpu].costs.clear();
+                nodes[gpu].costs.resize(slots, None);
+                nodes[gpu].dirty = true;
+            }
+        }
+    }
+
+    /// Instantaneous fleet power (W).
+    fn power_w(&mut self, fleet: &Fleet, model: &PowerModel) -> f64 {
+        match self {
+            PowerTracker::Naive { running } => fleet_power_w_scan(fleet, model, running),
+            PowerTracker::Indexed { nodes } => {
+                for (g, np) in nodes.iter_mut().enumerate() {
+                    if np.dirty {
+                        np.watts = node_power_w(fleet, model, g, &np.costs);
+                        np.dirty = false;
+                    }
+                }
+                nodes.iter().map(|np| np.watts).sum()
+            }
+        }
+    }
+}
+
+/// Per-GPU `PowerModel` demand from one node's running jobs (indexed
+/// path). Accumulation order matches the naive scan: rates added in
+/// ascending slot order into a fresh `GpuUsage`.
+fn node_power_w(
+    fleet: &Fleet,
+    model: &PowerModel,
+    gpu: usize,
+    costs: &[Option<PlacementCost>],
+) -> f64 {
+    let spec = &fleet.spec;
+    let busy = fleet.nodes[gpu].busy_sms();
+    let mut u = GpuUsage {
+        context_active: busy > 0,
+        sm_busy_frac: busy as f64 / spec.sms as f64,
+        ..GpuUsage::default()
+    };
+    for c in costs.iter().flatten() {
+        for (i, f) in c.flop_tflops.iter().enumerate() {
+            u.flop_rate_tflops[i] += *f;
+        }
+        u.hbm_rate_tbs += c.hbm_tbs;
+        u.c2c_rate_tbs += c.c2c_tbs;
+    }
+    model.reported_w(spec, &u, spec.clock_max_mhz)
+}
+
+/// Instantaneous fleet power, rebuilt from scratch — the oracle (no DVFS
+/// governor here — serving jobs on MIG slices stays under the cap, which
+/// `reported_w` enforces anyway).
+fn fleet_power_w_scan(
     fleet: &Fleet,
     model: &PowerModel,
     running: &BTreeMap<(usize, usize), PlacementCost>,
@@ -382,7 +618,7 @@ fn fleet_power_w(
     let spec = &fleet.spec;
     let mut usages: Vec<GpuUsage> = vec![GpuUsage::default(); fleet.nodes.len()];
     for (g, node) in fleet.nodes.iter().enumerate() {
-        let busy = node.busy_sms();
+        let busy = node.busy_sms_scan();
         usages[g].context_active = busy > 0;
         usages[g].sm_busy_frac = busy as f64 / spec.sms as f64;
     }
@@ -423,6 +659,7 @@ mod tests {
         let r = serve(&base_cfg()).unwrap();
         assert_eq!(r.completed + r.expired + r.rejected, 30);
         assert!(r.completed > 0);
+        assert!(r.events > 0);
         assert!(r.makespan_s > 0.0);
         assert!(r.throughput_jobs_s > 0.0);
         assert!((0.0..=1.0).contains(&r.utilization), "{}", r.utilization);
@@ -490,6 +727,20 @@ mod tests {
             static_.completed
         );
         assert!(static_.expired > 0, "static small layout strands large jobs");
+    }
+
+    #[test]
+    fn indexed_and_oracle_modes_agree_bit_for_bit() {
+        // The full policy × layout × seed grid lives in
+        // tests/integration.rs; this is the in-module smoke version.
+        let cfg = ServeConfig {
+            policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+            arrival_rate_hz: 2.0,
+            ..base_cfg()
+        };
+        let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
+        let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
+        assert_eq!(fast.to_json().pretty(), oracle.to_json().pretty());
     }
 
     #[test]

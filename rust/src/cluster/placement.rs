@@ -10,19 +10,40 @@
 //!   at the policy's α wins. This is what turns "queue for a big slice"
 //!   into "run now on a small slice, spill the cold data over C2C".
 //!
-//! The `Planner` caches per-(app, profile, offload) costs so the placement
-//! hot path is a table scan over idle slots, not repeated model evaluation
-//! (see `benches/placement.rs`).
+//! ## The indexed hot path
+//!
+//! All three policies share one observation: the modelled cost (and hence
+//! the §VI-B reward) of a placement depends only on `(app, profile)` —
+//! never on *which* slot of that profile hosts the job. So a placement
+//! decision reduces to a walk over at most `NUM_PROFILES` (6) profile
+//! classes against the fleet's per-profile idle-slot index
+//! (`Fleet::first_idle`), instead of a full `gpus × slots` scan:
+//! - first-fit: the minimum `(gpu, slot)` among each admissible class's
+//!   first idle slot;
+//! - best-fit: the first admissible class in `ALL_PROFILES` order (which
+//!   ascends by SMs) with any idle slot;
+//! - offload-aware: fold the per-class candidates in `(gpu, slot)` order
+//!   with the same (reward, SMs) preference the naive scan applies per
+//!   slot — provably the same choice, because all slots of a class tie.
+//!
+//! `Planner::place_scan` keeps the naive full scan as the
+//! differential-test oracle: for any fleet state both paths return the
+//! identical `(gpu, slot, cost)`.
+//!
+//! The `Planner` memoizes per-(app, profile, offload) costs in a dense
+//! `[AppId::COUNT × NUM_PROFILES × 2]` array (no hashing on the hot
+//! path), per-(app, offload) admissibility bitmasks — the precomputed
+//! profile preference table — and per-(app, profile) rewards at the
+//! policy's α (see `benches/placement.rs`).
 
 use super::fleet::Fleet;
 use crate::gpu::nvlink::{Dir, NvlinkModel};
 use crate::gpu::{pipelines::ALL_PIPELINES, GpuSpec};
-use crate::mig::profile::{GiProfile, ProfileId};
+use crate::mig::profile::{GiProfile, ProfileId, ALL_PROFILES, NUM_PROFILES};
 use crate::offload::OffloadPlan;
 use crate::reward::{reward, ConfigEval, GpuTotals};
 use crate::sharing::ContextModel;
 use crate::workload::{apps, AppId, ExecEnv};
-use std::collections::HashMap;
 
 /// The dispatch policy of the serving layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,21 +55,31 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// Parse a policy name. `offload-aware` takes an optional α suffix
+    /// (`offload-aware:0.25`); bare `offload-aware` defaults to α=0.10.
     pub fn parse(s: &str) -> Option<PolicyKind> {
         match s {
-            "first-fit" => Some(PolicyKind::FirstFit),
-            "best-fit" => Some(PolicyKind::BestFit),
-            "offload-aware" => Some(PolicyKind::OffloadAware { alpha_centi: 10 }),
-            _ => None,
+            "first-fit" => return Some(PolicyKind::FirstFit),
+            "best-fit" => return Some(PolicyKind::BestFit),
+            "offload-aware" => return Some(PolicyKind::OffloadAware { alpha_centi: 10 }),
+            _ => {}
         }
+        let alpha: f64 = s.strip_prefix("offload-aware:")?.parse().ok()?;
+        if !alpha.is_finite() || !(0.0..=100.0).contains(&alpha) {
+            return None;
+        }
+        Some(PolicyKind::OffloadAware {
+            alpha_centi: (alpha * 100.0).round() as u32,
+        })
     }
 
+    /// Canonical name; `parse(label())` round-trips.
     pub fn label(&self) -> String {
         match self {
             PolicyKind::FirstFit => "first-fit".into(),
             PolicyKind::BestFit => "best-fit".into(),
             PolicyKind::OffloadAware { alpha_centi } => {
-                format!("offload-aware(α={:.2})", *alpha_centi as f64 / 100.0)
+                format!("offload-aware:{:.2}", *alpha_centi as f64 / 100.0)
             }
         }
     }
@@ -77,31 +108,66 @@ pub struct PlacementCost {
     pub c2c_tbs: f64,
 }
 
-/// Cost evaluator + cache shared by all policies.
+const N_COST: usize = AppId::COUNT * NUM_PROFILES * 2;
+
+/// Cost evaluator + cache shared by all policies. All memo tables are
+/// dense arrays indexed by `AppId::index` / `ProfileId::index` — the hot
+/// path never hashes.
 pub struct Planner {
     spec: GpuSpec,
     nvlink: NvlinkModel,
     ctx_gib: f64,
     scale: f64,
-    cache: HashMap<(AppId, ProfileId, bool), Option<PlacementCost>>,
-    full_runtime: HashMap<AppId, f64>,
+    /// Outer `Option` = "computed?"; inner = the (possibly impossible)
+    /// placement cost. `[app × profile × offload]`.
+    cost_cache: Vec<Option<Option<PlacementCost>>>,
+    /// Admissible-profile bitmask per `[app × offload]` — the per-app
+    /// profile preference table (bit i ⇔ `ALL_PROFILES[i]` can host).
+    admissible: [Option<u8>; AppId::COUNT * 2],
+    /// Whole-GPU runtime per app (the P_GPU reward basis).
+    full_runtime: [Option<f64>; AppId::COUNT],
+    /// §VI-B rewards `[app × profile]` at `reward_alpha_centi`.
+    reward_cache: Vec<Option<f64>>,
+    reward_alpha_centi: Option<u32>,
+    /// Direct (unscaled) footprint per app, for reconfiguration sizing —
+    /// precomputed so the dispatch hot path never rebuilds app models.
+    footprint: [f64; AppId::COUNT],
 }
 
 impl Planner {
     pub fn new(workload_scale: f64) -> Planner {
         assert!(workload_scale > 0.0);
+        let mut footprint = [0.0f64; AppId::COUNT];
+        for app in apps::all() {
+            footprint[app.index()] = apps::model(app).footprint_gib;
+        }
         Planner {
             spec: GpuSpec::gh_h100_96gb(),
             nvlink: NvlinkModel::default(),
             ctx_gib: ContextModel::default().mig_per_process_gib,
             scale: workload_scale,
-            cache: HashMap::new(),
-            full_runtime: HashMap::new(),
+            cost_cache: vec![None; N_COST],
+            admissible: [None; AppId::COUNT * 2],
+            full_runtime: [None; AppId::COUNT],
+            reward_cache: vec![None; AppId::COUNT * NUM_PROFILES],
+            reward_alpha_centi: None,
+            footprint,
         }
     }
 
     pub fn ctx_gib(&self) -> f64 {
         self.ctx_gib
+    }
+
+    /// Direct memory footprint of `app` (GiB) — the reconfiguration-sizing
+    /// input.
+    pub fn footprint_gib(&self, app: AppId) -> f64 {
+        self.footprint[app.index()]
+    }
+
+    #[inline]
+    fn cost_idx(app: AppId, profile: ProfileId, allow_offload: bool) -> usize {
+        (app.index() * NUM_PROFILES + profile.index()) * 2 + allow_offload as usize
     }
 
     /// Cost of running `app` on `profile`. `allow_offload = false` returns
@@ -114,12 +180,12 @@ impl Planner {
         profile: ProfileId,
         allow_offload: bool,
     ) -> Option<PlacementCost> {
-        let key = (app, profile, allow_offload);
-        if let Some(c) = self.cache.get(&key) {
-            return *c;
+        let i = Self::cost_idx(app, profile, allow_offload);
+        if let Some(c) = self.cost_cache[i] {
+            return c;
         }
         let c = self.compute_cost(app, profile, allow_offload);
-        self.cache.insert(key, c);
+        self.cost_cache[i] = Some(c);
         c
     }
 
@@ -192,10 +258,28 @@ impl Planner {
         })
     }
 
+    /// Bitmask of profiles that can host `app` (bit i ⇔ `ALL_PROFILES[i]`),
+    /// memoized per (app, offload) — the precomputed preference table the
+    /// indexed policies walk.
+    fn admissible_mask(&mut self, app: AppId, allow_offload: bool) -> u8 {
+        let i = app.index() * 2 + allow_offload as usize;
+        if let Some(m) = self.admissible[i] {
+            return m;
+        }
+        let mut m = 0u8;
+        for pid in ALL_PROFILES {
+            if self.cost(app, pid, allow_offload).is_some() {
+                m |= 1 << pid.index();
+            }
+        }
+        self.admissible[i] = Some(m);
+        m
+    }
+
     /// Runtime of `app` on the whole GPU (the P_GPU reward basis).
     pub fn full_gpu_runtime_s(&mut self, app: AppId) -> f64 {
-        if let Some(t) = self.full_runtime.get(&app) {
-            return *t;
+        if let Some(t) = self.full_runtime[app.index()] {
+            return t;
         }
         let model = apps::model(app).scaled(self.scale);
         let env = ExecEnv {
@@ -207,7 +291,7 @@ impl Planner {
             time_share: 1.0,
         };
         let t = model.runtime_quiet_s(&self.spec, &env) + model.startup_s * self.scale;
-        self.full_runtime.insert(app, t);
+        self.full_runtime[app.index()] = Some(t);
         t
     }
 
@@ -237,10 +321,113 @@ impl Planner {
         reward(&eval, &totals, alpha).reward
     }
 
-    /// Pick an idle slot for `app` under `policy`. Returns
-    /// `(gpu, slot, cost)`. Deterministic: ties break toward smaller
-    /// instances, then lower GPU/slot index.
+    /// `reward_of` memoized per (app, profile) at a fixed α — the value
+    /// depends on nothing else, so the offload-aware walk reads a dense
+    /// table. Switching α (a different policy instance) flushes the table.
+    fn cached_reward(
+        &mut self,
+        app: AppId,
+        profile: ProfileId,
+        alpha_centi: u32,
+        c: &PlacementCost,
+    ) -> f64 {
+        if self.reward_alpha_centi != Some(alpha_centi) {
+            self.reward_cache.iter_mut().for_each(|r| *r = None);
+            self.reward_alpha_centi = Some(alpha_centi);
+        }
+        let i = app.index() * NUM_PROFILES + profile.index();
+        if let Some(r) = self.reward_cache[i] {
+            return r;
+        }
+        let r = self.reward_of(app, profile, c, alpha_centi as f64 / 100.0);
+        self.reward_cache[i] = Some(r);
+        r
+    }
+
+    /// Pick an idle slot for `app` under `policy`, via the fleet's
+    /// per-profile idle index: a walk over ≤`NUM_PROFILES` classes.
+    /// Returns `(gpu, slot, cost)`. Deterministic, and bit-identical to
+    /// `place_scan` (ties break toward smaller instances, then lower
+    /// GPU/slot index).
     pub fn place(
+        &mut self,
+        fleet: &Fleet,
+        app: AppId,
+        policy: PolicyKind,
+    ) -> Option<(usize, usize, PlacementCost)> {
+        match policy {
+            PolicyKind::FirstFit => {
+                let mask = self.admissible_mask(app, false);
+                let mut best: Option<(usize, usize, ProfileId)> = None;
+                for pid in ALL_PROFILES {
+                    if mask & (1 << pid.index()) == 0 {
+                        continue;
+                    }
+                    if let Some((g, s)) = fleet.first_idle(pid) {
+                        if best.map(|(bg, bs, _)| (g, s) < (bg, bs)).unwrap_or(true) {
+                            best = Some((g, s, pid));
+                        }
+                    }
+                }
+                best.map(|(g, s, pid)| (g, s, self.cost(app, pid, false).unwrap()))
+            }
+            PolicyKind::BestFit => {
+                let mask = self.admissible_mask(app, false);
+                // ALL_PROFILES ascends by SMs: the first admissible class
+                // with an idle slot *is* the best fit.
+                for pid in ALL_PROFILES {
+                    if mask & (1 << pid.index()) == 0 {
+                        continue;
+                    }
+                    if let Some((g, s)) = fleet.first_idle(pid) {
+                        return Some((g, s, self.cost(app, pid, false).unwrap()));
+                    }
+                }
+                None
+            }
+            PolicyKind::OffloadAware { alpha_centi } => {
+                // One candidate per admissible class with an idle slot, at
+                // the class's first (gpu, slot). Folding them in (gpu,
+                // slot) order with the per-slot preference of the naive
+                // scan reproduces its choice exactly: within a class every
+                // slot ties on (reward, SMs), so only first encounters
+                // matter, and the scan encounters classes in first-slot
+                // order.
+                let mask = self.admissible_mask(app, true);
+                let mut cands = [(0usize, 0usize, ProfileId::P1g12gb); NUM_PROFILES];
+                let mut n = 0;
+                for pid in ALL_PROFILES {
+                    if mask & (1 << pid.index()) == 0 {
+                        continue;
+                    }
+                    if let Some((g, s)) = fleet.first_idle(pid) {
+                        cands[n] = (g, s, pid);
+                        n += 1;
+                    }
+                }
+                cands[..n].sort_unstable();
+                let mut best: Option<(f64, u32, usize, usize, ProfileId)> = None;
+                for &(g, s, pid) in &cands[..n] {
+                    let c = self.cost(app, pid, true).unwrap();
+                    let r = self.cached_reward(app, pid, alpha_centi, &c);
+                    let sms = GiProfile::get(pid).sms;
+                    let better = match &best {
+                        None => true,
+                        Some((br, bsms, ..)) => r > *br || (r == *br && sms < *bsms),
+                    };
+                    if better {
+                        best = Some((r, sms, g, s, pid));
+                    }
+                }
+                best.map(|(_, _, g, s, pid)| (g, s, self.cost(app, pid, true).unwrap()))
+            }
+        }
+    }
+
+    /// The naive full `gpus × slots` scan — the differential-test oracle
+    /// for `place` (and the baseline `benches/placement.rs` measures the
+    /// indexed walk against).
+    pub fn place_scan(
         &mut self,
         fleet: &Fleet,
         app: AppId,
@@ -284,7 +471,6 @@ impl Planner {
                 best.map(|(_, g, s, c)| (g, s, c))
             }
             PolicyKind::OffloadAware { alpha_centi } => {
-                let alpha = alpha_centi as f64 / 100.0;
                 let mut best: Option<(f64, u32, usize, usize, PlacementCost)> = None;
                 for (g, node) in fleet.nodes.iter().enumerate() {
                     if node.reconfiguring() {
@@ -298,13 +484,14 @@ impl Planner {
                             Some(c) => c,
                             None => continue,
                         };
-                        let r = self.reward_of(app, slot.profile.id, &c, alpha);
+                        let r = self.cached_reward(app, slot.profile.id, alpha_centi, &c);
                         let sms = slot.profile.sms;
+                        // Exact comparisons (no epsilon): tie-breaking
+                        // must be order-insensitive for the class-level
+                        // walk in `place` to match slot-level scanning.
                         let better = match &best {
                             None => true,
-                            Some((br, bsms, ..)) => {
-                                r > *br + 1e-12 || ((r - *br).abs() <= 1e-12 && sms < *bsms)
-                            }
+                            Some((br, bsms, ..)) => r > *br || (r == *br && sms < *bsms),
                         };
                         if better {
                             best = Some((r, sms, g, s, c));
@@ -318,8 +505,25 @@ impl Planner {
 
     /// Whether `app` could run on *some* profile of the node layouts the
     /// fleet currently has or is reconfiguring toward — the trigger guard
-    /// for dynamic reconfiguration.
+    /// for dynamic reconfiguration. O(profile classes) via the fleet's
+    /// layout-class counts.
     pub fn fits_current_layouts(&mut self, fleet: &Fleet, app: AppId, allow_offload: bool) -> bool {
+        for pid in ALL_PROFILES {
+            if fleet.has_layout_class(pid) && self.cost(app, pid, allow_offload).is_some() {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// `fits_current_layouts` by full node×layout scan — the
+    /// differential-test oracle.
+    pub fn fits_current_layouts_scan(
+        &mut self,
+        fleet: &Fleet,
+        app: AppId,
+        allow_offload: bool,
+    ) -> bool {
         for node in &fleet.nodes {
             for &p in node.effective_layout() {
                 if self.cost(app, p, allow_offload).is_some() {
@@ -398,6 +602,45 @@ mod tests {
     }
 
     #[test]
+    fn indexed_place_matches_naive_scan_across_fleet_states() {
+        // Pseudo-random occupancy churn over a mixed fleet: every policy
+        // must pick the identical slot through the index and the scan.
+        let mut rng = crate::util::Rng::new(0x9A7E);
+        let mut fleet = Fleet::new(5, LayoutPreset::Mixed).unwrap();
+        let mut pl = Planner::new(0.05);
+        let apps = [
+            AppId::Faiss,
+            AppId::Hotspot,
+            AppId::Llama3Fp16,
+            AppId::Qiskit31,
+            AppId::NekRs,
+        ];
+        let policies = [
+            PolicyKind::FirstFit,
+            PolicyKind::BestFit,
+            PolicyKind::OffloadAware { alpha_centi: 10 },
+            PolicyKind::OffloadAware { alpha_centi: 60 },
+        ];
+        for step in 0..120u32 {
+            let g = rng.below(5) as usize;
+            if rng.below(2) == 0 {
+                if let Some(s) = fleet.nodes[g].slots.iter().position(|s| s.is_idle()) {
+                    fleet.start_job(g, s, step, step as f64, step as f64 + 9.0);
+                }
+            } else if let Some(s) = fleet.nodes[g].slots.iter().position(|s| !s.is_idle()) {
+                fleet.finish_job(g, s, step as f64);
+            }
+            for &app in &apps {
+                for &policy in &policies {
+                    let fast = pl.place(&fleet, app, policy).map(|(g, s, _)| (g, s));
+                    let slow = pl.place_scan(&fleet, app, policy).map(|(g, s, _)| (g, s));
+                    assert_eq!(fast, slow, "step {step} {app:?} {policy:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn servable_and_layout_fit_guards() {
         let fleet = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
         let mut pl = Planner::new(0.05);
@@ -405,6 +648,20 @@ mod tests {
         assert!(!pl.fits_current_layouts(&fleet, AppId::Llama3Fp16, false));
         assert!(pl.fits_current_layouts(&fleet, AppId::Llama3Fp16, true));
         assert!(pl.fits_current_layouts(&fleet, AppId::Faiss, false));
+        // Indexed and scan guards agree, including mid-reconfiguration.
+        let mut fleet = fleet;
+        fleet
+            .begin_reconfig(0, crate::cluster::fleet::class_layout(ProfileId::P2g24gb), 5.0)
+            .unwrap();
+        for app in [AppId::Llama3Fp16, AppId::Faiss, AppId::Qiskit31] {
+            for allow in [false, true] {
+                assert_eq!(
+                    pl.fits_current_layouts(&fleet, app, allow),
+                    pl.fits_current_layouts_scan(&fleet, app, allow),
+                    "{app:?} allow={allow}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -416,5 +673,42 @@ mod tests {
         let r1 = pl.reward_of(AppId::Faiss, ProfileId::P1g12gb, &c1, 0.1);
         let r7 = pl.reward_of(AppId::Faiss, ProfileId::P7g96gb, &c7, 0.1);
         assert!(r1 > r7, "r1={r1} r7={r7}");
+    }
+
+    #[test]
+    fn policy_parse_accepts_alpha_and_round_trips() {
+        assert_eq!(PolicyKind::parse("first-fit"), Some(PolicyKind::FirstFit));
+        assert_eq!(PolicyKind::parse("best-fit"), Some(PolicyKind::BestFit));
+        assert_eq!(
+            PolicyKind::parse("offload-aware"),
+            Some(PolicyKind::OffloadAware { alpha_centi: 10 })
+        );
+        assert_eq!(
+            PolicyKind::parse("offload-aware:0.25"),
+            Some(PolicyKind::OffloadAware { alpha_centi: 25 })
+        );
+        assert_eq!(
+            PolicyKind::parse("offload-aware:1"),
+            Some(PolicyKind::OffloadAware { alpha_centi: 100 })
+        );
+        assert_eq!(PolicyKind::parse("offload-aware:-1"), None);
+        assert_eq!(PolicyKind::parse("offload-aware:nan"), None);
+        assert_eq!(PolicyKind::parse("offload-aware:"), None);
+        assert_eq!(PolicyKind::parse("bogus"), None);
+        for policy in [
+            PolicyKind::FirstFit,
+            PolicyKind::BestFit,
+            PolicyKind::OffloadAware { alpha_centi: 10 },
+            PolicyKind::OffloadAware { alpha_centi: 25 },
+            PolicyKind::OffloadAware { alpha_centi: 7 },
+            PolicyKind::OffloadAware { alpha_centi: 150 },
+        ] {
+            assert_eq!(
+                PolicyKind::parse(&policy.label()),
+                Some(policy),
+                "label {} must round-trip",
+                policy.label()
+            );
+        }
     }
 }

@@ -4,10 +4,21 @@
 //! *expired* if its deadline passes while it still waits (the client gave
 //! up), and *rejected* immediately when no layout this fleet could ever
 //! reconfigure to — offloading included — can host it.
+//!
+//! The queue keeps live counters alongside the raw job list so the
+//! serving hot path never rescans it: pending ids live in a `BTreeSet`
+//! (admission order == id order, so ascending iteration is FIFO with
+//! O(log n) removal), resolution is a counter (`all_resolved` is O(1)),
+//! and pending jobs are bucketed per app so the smallest pending
+//! footprint — the fragmentation reference — is an O(apps) lookup over
+//! footprints precomputed at construction. The `*_scan` variants
+//! recompute the same quantities from the raw list and serve as the
+//! differential-test oracle.
 
 use crate::workload::apps;
 use crate::workload::trace::Job;
-use std::collections::VecDeque;
+use crate::workload::AppId;
+use std::collections::BTreeSet;
 
 /// Lifecycle state of a job in the serving system.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,16 +44,38 @@ pub struct QueuedJob {
 }
 
 /// FIFO admission queue with deadline accounting.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct AdmissionQueue {
     /// All jobs ever admitted, indexed by job id (ids are dense 0..n).
     pub jobs: Vec<QueuedJob>,
-    pending: VecDeque<u32>,
+    pending: BTreeSet<u32>,
+    /// Pending job count per app (dense, `AppId::index`).
+    pending_by_app: [u32; AppId::COUNT],
+    /// Direct memory footprint per app (GiB), precomputed once.
+    footprints: [f64; AppId::COUNT],
+    /// Jobs in a terminal state (completed/expired/rejected).
+    resolved: u32,
+}
+
+impl Default for AdmissionQueue {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl AdmissionQueue {
     pub fn new() -> AdmissionQueue {
-        AdmissionQueue::default()
+        let mut footprints = [0.0f64; AppId::COUNT];
+        for app in apps::all() {
+            footprints[app.index()] = apps::model(app).footprint_gib;
+        }
+        AdmissionQueue {
+            jobs: Vec::new(),
+            pending: BTreeSet::new(),
+            pending_by_app: [0; AppId::COUNT],
+            footprints,
+            resolved: 0,
+        }
     }
 
     /// Register an arriving job with a relative queueing deadline. Job ids
@@ -50,6 +83,7 @@ impl AdmissionQueue {
     pub fn admit(&mut self, job: Job, deadline_rel_s: f64) {
         assert_eq!(job.id as usize, self.jobs.len(), "job ids must be dense");
         let deadline_s = job.arrival_s + deadline_rel_s;
+        self.pending_by_app[job.app.index()] += 1;
         self.jobs.push(QueuedJob {
             job,
             deadline_s,
@@ -59,10 +93,11 @@ impl AdmissionQueue {
             offloaded: false,
             gpu: None,
         });
-        self.pending.push_back(self.jobs.len() as u32 - 1);
+        self.pending.insert(self.jobs.len() as u32 - 1);
     }
 
-    /// Pending job ids, oldest first.
+    /// Pending job ids, oldest first (ids are dense and admitted in
+    /// arrival order, so ascending id order *is* FIFO order).
     pub fn pending_ids(&self) -> impl Iterator<Item = u32> + '_ {
         self.pending.iter().copied()
     }
@@ -72,8 +107,9 @@ impl AdmissionQueue {
     }
 
     fn unqueue(&mut self, id: u32) {
-        if let Some(pos) = self.pending.iter().position(|&p| p == id) {
-            self.pending.remove(pos);
+        let app = self.jobs[id as usize].job.app;
+        if self.pending.remove(&id) {
+            self.pending_by_app[app.index()] -= 1;
         }
     }
 
@@ -93,6 +129,7 @@ impl AdmissionQueue {
         assert_eq!(j.state, JobState::Running, "completing a non-running job");
         j.state = JobState::Completed;
         j.finished_s = Some(now);
+        self.resolved += 1;
     }
 
     /// Expire a job if it is still pending; returns whether it expired.
@@ -103,6 +140,7 @@ impl AdmissionQueue {
         let j = &mut self.jobs[id as usize];
         j.state = JobState::Expired;
         j.finished_s = Some(now);
+        self.resolved += 1;
         self.unqueue(id);
         true
     }
@@ -113,6 +151,7 @@ impl AdmissionQueue {
         assert_eq!(j.state, JobState::Pending);
         j.state = JobState::Rejected;
         j.finished_s = Some(now);
+        self.resolved += 1;
         self.unqueue(id);
     }
 
@@ -120,7 +159,14 @@ impl AdmissionQueue {
         self.jobs.iter().filter(|j| j.state == state).count() as u32
     }
 
+    /// Whether every admitted job reached a terminal state (O(1)).
     pub fn all_resolved(&self) -> bool {
+        self.resolved as usize == self.jobs.len()
+    }
+
+    /// `all_resolved` recomputed from the raw states — the
+    /// differential-test oracle.
+    pub fn all_resolved_scan(&self) -> bool {
         self.jobs.iter().all(|j| {
             matches!(
                 j.state,
@@ -130,8 +176,27 @@ impl AdmissionQueue {
     }
 
     /// Smallest direct memory footprint among pending jobs (GiB) — the
-    /// fleet fragmentation reference.
+    /// fleet fragmentation reference. O(apps) over the pending buckets;
+    /// the min of a multiset is order-independent, so this is bit-equal
+    /// to the full scan.
     pub fn smallest_pending_footprint_gib(&self) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for (i, &n) in self.pending_by_app.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let f = self.footprints[i];
+            best = Some(match best {
+                Some(b) => b.min(f),
+                None => f,
+            });
+        }
+        best
+    }
+
+    /// `smallest_pending_footprint_gib` recomputed by scanning every
+    /// pending job — the differential-test oracle.
+    pub fn smallest_pending_footprint_scan(&self) -> Option<f64> {
         self.pending
             .iter()
             .map(|&id| apps::model(self.jobs[id as usize].job.app).footprint_gib)
@@ -222,6 +287,45 @@ mod tests {
         q.reject(0, 3.0);
         assert_eq!(q.count(JobState::Rejected), 1);
         assert_eq!(q.pending_len(), 0);
+        assert!(q.all_resolved());
+    }
+
+    #[test]
+    fn counters_track_scan_truth_through_lifecycle() {
+        let mut q = AdmissionQueue::new();
+        let apps = [
+            AppId::Faiss,
+            AppId::Llama3Fp16,
+            AppId::Hotspot,
+            AppId::Faiss,
+            AppId::NekRs,
+            AppId::Qiskit31,
+        ];
+        for (i, app) in apps.iter().enumerate() {
+            q.admit(job(i as u32, i as f64, *app), 20.0);
+            assert_eq!(
+                q.smallest_pending_footprint_gib(),
+                q.smallest_pending_footprint_scan()
+            );
+        }
+        q.mark_running(2, 2.5, 0, false);
+        q.mark_running(0, 3.0, 1, false);
+        q.reject(5, 5.0);
+        assert_eq!(
+            q.smallest_pending_footprint_gib(),
+            q.smallest_pending_footprint_scan()
+        );
+        assert_eq!(q.all_resolved(), q.all_resolved_scan());
+        q.mark_completed(2, 6.0);
+        q.mark_completed(0, 7.0);
+        assert!(q.expire_if_pending(1, 25.0));
+        assert!(q.expire_if_pending(3, 25.0));
+        assert!(q.expire_if_pending(4, 25.0));
+        assert_eq!(
+            q.smallest_pending_footprint_gib(),
+            q.smallest_pending_footprint_scan()
+        );
+        assert_eq!(q.all_resolved(), q.all_resolved_scan());
         assert!(q.all_resolved());
     }
 }

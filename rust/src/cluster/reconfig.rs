@@ -41,15 +41,29 @@ pub fn plan_for_footprint(need_gib: f64) -> Option<Vec<ProfileId>> {
 
 /// Choose a reconfiguration that would let a job of `need_gib` run: the
 /// first fully-idle, not-already-reconfiguring GPU whose layout would
-/// change. Returns `(gpu index, target layout)`.
+/// change. Returns `(gpu index, target layout)`. Walks the fleet's
+/// idle-node index (ascending id order — the same order the full scan
+/// visits eligible nodes in).
 pub fn plan_reconfig(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<ProfileId>)> {
+    let target = plan_for_footprint(need_gib)?;
+    for g in fleet.idle_nodes() {
+        if fleet.nodes[g].layout == target {
+            continue; // already shaped right; the job fits without change
+        }
+        return Some((g, target));
+    }
+    None
+}
+
+/// `plan_reconfig` by full fleet scan — the differential-test oracle.
+pub fn plan_reconfig_scan(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<ProfileId>)> {
     let target = plan_for_footprint(need_gib)?;
     for (g, node) in fleet.nodes.iter().enumerate() {
         if node.reconfiguring() || !node.all_idle() {
             continue;
         }
         if node.layout == target {
-            continue; // already shaped right; the job fits without change
+            continue;
         }
         return Some((g, target));
     }
@@ -94,10 +108,14 @@ mod tests {
         let (g, target) = plan_reconfig(&fleet, 16.0).unwrap();
         assert_eq!(g, 1);
         assert_eq!(target[0], ProfileId::P2g24gb);
+        assert_eq!(plan_reconfig(&fleet, 16.0), plan_reconfig_scan(&fleet, 16.0));
         // Once GPU 1 already has the target layout, no reconfig is planned.
-        fleet.nodes[1].begin_reconfig(target.clone(), 5.0).unwrap();
-        fleet.nodes[1].finish_reconfig();
+        fleet.begin_reconfig(1, target.clone(), 5.0).unwrap();
+        // Mid-reconfiguration, GPU 1 is no candidate either way.
+        assert_eq!(plan_reconfig(&fleet, 16.0), plan_reconfig_scan(&fleet, 16.0));
+        fleet.finish_reconfig(1);
         assert!(plan_reconfig(&fleet, 16.0).is_none());
+        assert!(plan_reconfig_scan(&fleet, 16.0).is_none());
         // Unservable footprints never produce a plan.
         assert!(plan_reconfig(&fleet, 95.0).is_none());
     }

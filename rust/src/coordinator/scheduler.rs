@@ -88,8 +88,10 @@ impl Policy {
         match self {
             Policy::FirstFit => "first-fit".into(),
             Policy::SmallestFit => "smallest-fit".into(),
+            // Same rendering as cluster::PolicyKind::label, so the sched
+            // and serve experiment outputs label the policy identically.
             Policy::OffloadAware { alpha_centi } => {
-                format!("offload-aware(α={:.2})", *alpha_centi as f64 / 100.0)
+                format!("offload-aware:{:.2}", *alpha_centi as f64 / 100.0)
             }
         }
     }

@@ -53,10 +53,11 @@ impl ExperimentOutput {
 }
 
 /// All experiment ids in paper order, plus the ablation sweeps and the
-/// online-serving study.
-pub const ALL_IDS: [&str; 17] = [
+/// online-serving studies.
+pub const ALL_IDS: [&str; 18] = [
     "table1", "table2", "table4", "smcount", "ctx", "fig2", "fig3", "fig4", "fig5", "fig6",
     "fig7", "fig8", "ablate-copies", "ablate-alpha", "ablate-mps", "sched", "serve",
+    "serve-scale",
 ];
 
 /// Run one experiment by id.
@@ -79,6 +80,7 @@ pub fn run(id: &str, cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
         "ablate-mps" => ablations::mps_sweep(cfg),
         "sched" => sched::sched(cfg),
         "serve" => serve::serve_experiment(cfg),
+        "serve-scale" => serve::serve_scale_experiment(cfg),
         other => anyhow::bail!("unknown experiment '{other}' (known: {})", ALL_IDS.join(", ")),
     }
 }

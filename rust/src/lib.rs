@@ -23,7 +23,10 @@
 //!   reconfiguration. It consumes the four passive models below it
 //!   (`mig` layouts, `offload` plans, `workload` runtimes, the `reward`
 //!   metric) as policy inputs and closes the loop the paper's
-//!   introduction motivates: `migsim serve`.
+//!   introduction motivates: `migsim serve`. Its event loop is
+//!   O(changed state) per event (indexed placement, incremental
+//!   integrals), with the naive full-rescan implementation retained as a
+//!   bit-identical differential-test oracle (`ServeMode`).
 //! - `runtime`: PJRT loader/executor for `artifacts/*.hlo.txt`
 //!   (feature-gated behind `pjrt`; a stub otherwise).
 

@@ -45,7 +45,7 @@ fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "serve",
             summary: "online cluster serving: admission + placement + reconfig",
-            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--json]",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--json]",
         },
         CommandSpec {
             name: "runtime",
@@ -256,7 +256,10 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
     let cfg = sim_config(args)?;
     let policy_name = args.opt_or("policy", "first-fit");
     let policy = migsim::cluster::PolicyKind::parse(policy_name).ok_or_else(|| {
-        anyhow::anyhow!("unknown policy '{policy_name}' (first-fit|best-fit|offload-aware)")
+        anyhow::anyhow!(
+            "unknown policy '{policy_name}' (first-fit|best-fit|offload-aware[:ALPHA], \
+             e.g. offload-aware:0.25)"
+        )
     })?;
     let layout_name = args.opt_or("layout", "mixed");
     let layout = migsim::cluster::LayoutPreset::parse(layout_name)

@@ -16,7 +16,13 @@ pub enum ProfileId {
     P7g96gb,
 }
 
-pub const ALL_PROFILES: [ProfileId; 6] = [
+/// Number of distinct GI profiles — the dimension of the dense
+/// per-profile tables in the serving hot path (`cluster::placement`).
+pub const NUM_PROFILES: usize = 6;
+
+/// Profiles in ascending SM (and slice) order: walking this array is the
+/// best-fit preference order, and `ProfileId::index` follows it.
+pub const ALL_PROFILES: [ProfileId; NUM_PROFILES] = [
     ProfileId::P1g12gb,
     ProfileId::P1g24gb,
     ProfileId::P2g24gb,
@@ -24,6 +30,15 @@ pub const ALL_PROFILES: [ProfileId; 6] = [
     ProfileId::P4g48gb,
     ProfileId::P7g96gb,
 ];
+
+impl ProfileId {
+    /// Dense index into `[_; NUM_PROFILES]` tables (matches `ALL_PROFILES`
+    /// order).
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
 
 /// A GPU-instance profile: the unit of MIG provisioning.
 #[derive(Debug, Clone)]
@@ -230,6 +245,21 @@ mod tests {
                 p.name
             );
         }
+    }
+
+    #[test]
+    fn dense_index_matches_all_profiles_order_and_sms_ascend() {
+        // The placement hot path walks ALL_PROFILES as the best-fit
+        // preference order and indexes dense tables via ProfileId::index;
+        // both invariants live here.
+        let mut prev_sms = 0;
+        for (i, &id) in ALL_PROFILES.iter().enumerate() {
+            assert_eq!(id.index(), i);
+            let sms = GiProfile::get(id).sms;
+            assert!(sms > prev_sms, "ALL_PROFILES must ascend by SMs");
+            prev_sms = sms;
+        }
+        assert_eq!(ALL_PROFILES.len(), NUM_PROFILES);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The event queue proper. See module docs in `sim/mod.rs`.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet, VecDeque};
 
 /// Opaque token identifying a scheduled event, used for cancellation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -39,16 +39,63 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+/// Tracks which event seqs have *left the heap* (fired, or skipped at pop
+/// time after cancellation), so `cancel` can reject stale tokens in O(1).
+///
+/// Seqs are dense and consumed roughly in order, so the set is a
+/// watermark plus a small bitmap window: every seq below `start_seq` is
+/// consumed, and `words` covers `[start_seq, start_seq + 64*words.len())`.
+/// Fully-consumed leading words advance the watermark, keeping the window
+/// no wider than the span of still-live events.
+#[derive(Debug, Default)]
+struct ConsumedSet {
+    /// All seqs below this are consumed. Always a multiple of 64.
+    start_seq: u64,
+    words: VecDeque<u64>,
+}
+
+impl ConsumedSet {
+    fn contains(&self, seq: u64) -> bool {
+        if seq < self.start_seq {
+            return true;
+        }
+        match self.words.get(((seq - self.start_seq) / 64) as usize) {
+            Some(w) => w & (1u64 << (seq % 64)) != 0,
+            None => false,
+        }
+    }
+
+    fn insert(&mut self, seq: u64) {
+        if seq < self.start_seq {
+            return; // already below the watermark
+        }
+        let idx = ((seq - self.start_seq) / 64) as usize;
+        while self.words.len() <= idx {
+            self.words.push_back(0);
+        }
+        self.words[idx] |= 1u64 << (seq % 64);
+        // Advance the watermark past fully-consumed leading words.
+        while self.words.front() == Some(&u64::MAX) {
+            self.words.pop_front();
+            self.start_seq += 64;
+        }
+    }
+}
+
 /// Discrete-event queue with cancellation and deterministic FIFO
 /// tie-breaking. Cancellation is lazy: cancelled tokens are skipped at pop
-/// time, keeping `cancel` O(1).
+/// time, keeping `cancel` O(1). A fired-watermark (`ConsumedSet`) makes
+/// cancelling an already-fired token a true no-op — it used to leak a
+/// stale seq into the cancelled set, under-reporting `len()` until the
+/// subtraction underflowed once the heap drained.
 pub struct Engine<E> {
     heap: BinaryHeap<Entry<E>>,
     now_ns: u64,
     seq: u64,
-    // Sorted vec of cancelled seqs still in the heap. Typically tiny
-    // (pending kernel-completion re-estimates), so a vec beats a HashSet.
-    cancelled: Vec<u64>,
+    /// Cancelled seqs still sitting in the heap (invariant: a subset of
+    /// the heap, enforced by the `consumed` guard in `cancel`).
+    cancelled: HashSet<u64>,
+    consumed: ConsumedSet,
     popped: u64,
 }
 
@@ -64,7 +111,8 @@ impl<E> Engine<E> {
             heap: BinaryHeap::with_capacity(1024),
             now_ns: 0,
             seq: 0,
-            cancelled: Vec::new(),
+            cancelled: HashSet::new(),
+            consumed: ConsumedSet::default(),
             popped: 0,
         }
     }
@@ -116,19 +164,20 @@ impl<E> Engine<E> {
         self.schedule_at(self.now_ns.saturating_add(delta_ns), event)
     }
 
-    /// Cancel a previously scheduled event. Cancelling an already-fired or
-    /// already-cancelled token is a no-op.
+    /// Cancel a previously scheduled event. Cancelling an already-fired,
+    /// already-skipped or already-cancelled token is a no-op.
     pub fn cancel(&mut self, token: EventToken) {
-        if let Err(i) = self.cancelled.binary_search(&token.0) {
-            self.cancelled.insert(i, token.0);
+        if self.consumed.contains(token.0) {
+            return; // token already left the heap; nothing to cancel
         }
+        self.cancelled.insert(token.0);
     }
 
     /// Pop the next non-cancelled event, advancing the clock.
     pub fn pop(&mut self) -> Option<Scheduled<E>> {
         while let Some(entry) = self.heap.pop() {
-            if let Ok(i) = self.cancelled.binary_search(&entry.seq) {
-                self.cancelled.remove(i);
+            self.consumed.insert(entry.seq);
+            if self.cancelled.remove(&entry.seq) {
                 continue;
             }
             self.now_ns = entry.time_ns;
@@ -145,14 +194,17 @@ impl<E> Engine<E> {
     /// Peek the firing time of the next live event without advancing.
     pub fn peek_time_ns(&mut self) -> Option<u64> {
         // Drain cancelled heads first so the peek is accurate.
-        while let Some(head) = self.heap.peek() {
-            if let Ok(i) = self.cancelled.binary_search(&head.seq) {
-                self.cancelled.remove(i);
+        loop {
+            let (seq, time_ns) = match self.heap.peek() {
+                Some(head) => (head.seq, head.time_ns),
+                None => return None,
+            };
+            if self.cancelled.remove(&seq) {
+                self.consumed.insert(seq);
                 self.heap.pop();
             } else {
-                return Some(head.time_ns);
+                return Some(time_ns);
             }
         }
-        None
     }
 }

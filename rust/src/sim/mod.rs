@@ -1,10 +1,13 @@
 //! Discrete-event simulation engine.
 //!
-//! The engine is deliberately small and allocation-free on the hot path:
+//! The engine is deliberately small and allocation-light on the hot path:
 //! a binary heap of `(time_ns, seq, event)` entries with a monotonic
 //! sequence number for FIFO tie-breaking (deterministic replay), plus
-//! cancellable timer tokens. The GPU co-run simulator
-//! (`coordinator::corun`) drives its state machine on top of this queue.
+//! cancellable timer tokens. Cancellation is lazy and O(1); a
+//! fired-watermark (`ConsumedSet`) keeps stale cancels of already-fired
+//! tokens from corrupting the pending count. The GPU co-run simulator
+//! (`coordinator::corun`) and the cluster serving loop (`cluster::serve`)
+//! drive their state machines on top of this queue.
 
 mod engine;
 
@@ -53,6 +56,65 @@ mod tests {
         e.cancel(t1);
         let first = e.pop().unwrap();
         assert_eq!(first.event, Ev::B(9));
+        assert!(e.pop().is_none());
+    }
+
+    #[test]
+    fn cancel_after_fire_is_a_noop() {
+        // Regression: cancelling a token that already fired used to leak
+        // its seq into the cancelled set, making `len()` under-report and
+        // eventually underflow once the heap drained.
+        let mut e: Engine<Ev> = Engine::new();
+        let t1 = e.schedule_at(1, Ev::A);
+        let _t2 = e.schedule_at(2, Ev::B(1));
+        assert_eq!(e.len(), 2);
+        let fired = e.pop().unwrap();
+        assert_eq!(fired.token, t1);
+        e.cancel(t1);
+        assert_eq!(e.len(), 1, "stale cancel must not shrink the queue");
+        e.cancel(t1);
+        assert_eq!(e.len(), 1);
+        assert!(e.pop().is_some());
+        assert_eq!(e.len(), 0); // underflowed (debug panic) before the fix
+        assert!(e.pop().is_none());
+    }
+
+    #[test]
+    fn cancel_of_already_skipped_token_is_a_noop() {
+        // A cancelled token that was silently skipped at pop time is just
+        // as consumed as a fired one.
+        let mut e: Engine<Ev> = Engine::new();
+        let t1 = e.schedule_at(1, Ev::A);
+        e.schedule_at(2, Ev::A);
+        e.cancel(t1);
+        assert_eq!(e.len(), 1);
+        assert_eq!(e.pop().unwrap().time_ns, 2); // skips + consumes t1
+        e.cancel(t1);
+        assert_eq!(e.len(), 0);
+        assert!(e.pop().is_none());
+    }
+
+    #[test]
+    fn consumed_watermark_survives_out_of_order_firing() {
+        // Fire events far out of seq order, then stale-cancel every one
+        // of them: len() must stay exact throughout.
+        let mut e: Engine<u64> = Engine::new();
+        let mut tokens = Vec::new();
+        for i in 0..200u64 {
+            // Later seqs fire earlier (descending times).
+            tokens.push(e.schedule_at(1_000 - i, i));
+        }
+        for _ in 0..200 {
+            e.pop().unwrap();
+        }
+        for t in tokens {
+            e.cancel(t);
+        }
+        assert_eq!(e.len(), 0);
+        let live = e.schedule_in(5, 999);
+        assert_eq!(e.len(), 1);
+        e.cancel(live);
+        assert_eq!(e.len(), 0);
         assert!(e.pop().is_none());
     }
 

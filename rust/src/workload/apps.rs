@@ -39,6 +39,16 @@ pub enum AppId {
 }
 
 impl AppId {
+    /// Number of application models — the dimension of dense per-app
+    /// tables in the serving hot path (`cluster::placement`).
+    pub const COUNT: usize = 15;
+
+    /// Dense index into `[_; AppId::COUNT]` tables (matches `all()` order).
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
     pub fn name(&self) -> &'static str {
         model(*self).name
     }
@@ -523,6 +533,18 @@ mod tests {
     use super::*;
     use crate::gpu::GpuSpec;
     use crate::workload::model::ExecEnv;
+
+    #[test]
+    fn dense_index_covers_every_app_once() {
+        let apps = all();
+        assert_eq!(apps.len(), AppId::COUNT);
+        let mut seen = [false; AppId::COUNT];
+        for app in apps {
+            assert!(!seen[app.index()], "duplicate index for {:?}", app);
+            seen[app.index()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
 
     fn spec() -> GpuSpec {
         GpuSpec::gh_h100_96gb()

@@ -284,3 +284,49 @@ fn fault_free_runs_report_zero_failures() {
     .unwrap();
     assert_eq!(m.failed_copies, 0);
 }
+
+#[test]
+fn indexed_serve_matches_naive_oracle_across_policy_layout_seed_grid() {
+    // The serving hot path (indexed placement, incremental integrals,
+    // memoized dispatch) must reproduce the naive full-rescan oracle's
+    // ServeReport *bit for bit* — every metric, including the float
+    // energy/fragmentation integrals — across the policy × layout ×
+    // (seed, reconfig) grid.
+    use migsim::cluster::{serve_with, LayoutPreset, PolicyKind, ServeConfig, ServeMode};
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+        PolicyKind::OffloadAware { alpha_centi: 40 },
+    ];
+    let layouts = [
+        LayoutPreset::Mixed,
+        LayoutPreset::AllSmall,
+        LayoutPreset::AllBig,
+    ];
+    let runs = [(7u64, true), (0xC0FFEE, false), (0x5EED, true)];
+    for &policy in &policies {
+        for &layout in &layouts {
+            for &(seed, reconfig) in &runs {
+                let cfg = ServeConfig {
+                    gpus: 3,
+                    policy,
+                    layout,
+                    arrival_rate_hz: 2.0,
+                    jobs: 40,
+                    deadline_s: 25.0,
+                    reconfig,
+                    seed,
+                    workload_scale: 0.05,
+                };
+                let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
+                let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
+                assert_eq!(
+                    fast.to_json().pretty(),
+                    oracle.to_json().pretty(),
+                    "diverged: policy={policy:?} layout={layout:?} seed={seed:#x} reconfig={reconfig}"
+                );
+            }
+        }
+    }
+}
