@@ -45,7 +45,7 @@ fn main() {
     // so naive first-fit cannot shortcut on slot (0, 0).
     let mut fleet = Fleet::new(gpus, LayoutPreset::Mixed).unwrap();
     for g in 0..(gpus as usize - 1) {
-        for s in 0..fleet.nodes[g].slots.len() {
+        for s in 0..fleet.gpus[g].slots.len() {
             fleet.start_job(g, s, 0, 0.0, 1e9);
         }
     }

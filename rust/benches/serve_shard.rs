@@ -1,0 +1,139 @@
+//! Sharded-serve scaling benchmark: end-to-end `cluster::serve_sharded`
+//! wall time and events/s as the worker-thread count grows, on a
+//! 512-GPU, 10k-job near-saturated trace split across 8 node shards
+//! (16 GPUs / 2 shards / 400 jobs in `--smoke` mode), plus the unsharded
+//! single-loop baseline the shards are differentially tested against.
+//!
+//! Besides the human-readable report (and the standard
+//! `results/bench/serve_shard.json`), this bench emits
+//! `BENCH_serve_shard.json` — machine-readable wall time, events/s,
+//! speedup-vs-1-thread and speedup-vs-unsharded per thread count — so the
+//! scaling trajectory is tracked across PRs. The merged `ServeReport` is
+//! asserted bit-identical across every thread count before anything is
+//! timed.
+//!
+//!     cargo bench --offline --bench serve_shard          # full measurement
+//!     cargo bench --offline --bench serve_shard -- --smoke   # CI check (runs the 2-thread cell)
+
+use migsim::bench::{BenchConfig, Bencher};
+use migsim::cluster::{
+    serve, serve_sharded, LayoutPreset, PolicyKind, ServeConfig, ShardServeConfig,
+};
+use migsim::util::json::Json;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(300),
+        max_iters: 6,
+    });
+    let smoke = b.smoke();
+    let gpus: u32 = if smoke { 16 } else { 512 };
+    let nodes: u32 = if smoke { 2 } else { 8 };
+    let jobs: u32 = if smoke { 400 } else { 10_000 };
+    let threads: &[u32] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+
+    // Near-saturated: per-GPU offered load matches the serve-scale
+    // experiment, so queues stay deep and dispatch dominates.
+    let base = ServeConfig {
+        gpus,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: gpus as f64 * 2.5,
+        jobs,
+        deadline_s: 45.0,
+        reconfig: true,
+        seed: 7,
+        workload_scale: 0.05,
+    };
+
+    // Unsharded single-loop baseline: one queue, one clock, one core —
+    // what the sharded control plane is replacing at this scale.
+    let single = serve(&base).unwrap();
+    let single_res = b
+        .bench_with_work(
+            &format!("serve_shard/unsharded_{jobs}jobs_{gpus}gpus"),
+            Some(single.events as f64),
+            "events",
+            || serve(&base).unwrap().completed,
+        )
+        .cloned();
+
+    let mut canonical: Option<String> = None;
+    let mut runs = Vec::new();
+    let mut wall_1t: Option<f64> = None;
+    for &th in threads {
+        let scfg = ShardServeConfig::new(base.clone(), nodes, th);
+        let report = serve_sharded(&scfg).unwrap();
+        let rendered = report.report.to_json().pretty();
+        match &canonical {
+            None => canonical = Some(rendered),
+            Some(c) => assert_eq!(
+                *c, rendered,
+                "sharded serve diverged at {th} threads — determinism bug"
+            ),
+        }
+        let res = b
+            .bench_with_work(
+                &format!("serve_shard/{nodes}nodes_{th}threads_{jobs}jobs_{gpus}gpus"),
+                Some(report.report.events as f64),
+                "events",
+                || serve_sharded(&scfg).unwrap().report.completed,
+            )
+            .cloned();
+        if let Some(res) = res {
+            if th == 1 {
+                wall_1t = Some(res.mean_s);
+            }
+            let mut o = Json::obj();
+            o.set("threads", th)
+                .set("nodes", nodes)
+                .set("wall_s", res.mean_s)
+                .set("events", report.report.events)
+                .set("events_per_s", report.report.events as f64 / res.mean_s)
+                .set("handoffs", report.handoffs)
+                .set("epochs", report.epochs);
+            // Speedups only when their baseline actually ran this
+            // invocation (a `-- <filter>` can skip the 1-thread or
+            // unsharded cells; a fabricated 1.0/0.0 would poison the
+            // perf-trajectory artifact).
+            if let Some(w) = wall_1t {
+                o.set("speedup_vs_1thread", w / res.mean_s);
+            }
+            if let Some(s) = &single_res {
+                o.set("speedup_vs_unsharded", s.mean_s / res.mean_s);
+            }
+            runs.push(o);
+        }
+    }
+
+    // Machine-readable scaling trajectory for the PR log.
+    let mut doc = Json::obj();
+    doc.set("suite", "serve_shard")
+        .set("smoke", smoke)
+        .set("gpus", gpus)
+        .set("nodes", nodes)
+        .set("jobs", jobs)
+        .set("lookahead_s", ShardServeConfig::new(base.clone(), nodes, 1).lookahead_s)
+        .set(
+            "unsharded",
+            match &single_res {
+                Some(s) => {
+                    let mut o = Json::obj();
+                    o.set("wall_s", s.mean_s)
+                        .set("events", single.events)
+                        .set("events_per_s", single.events as f64 / s.mean_s);
+                    o
+                }
+                None => Json::Null,
+            },
+        )
+        .set("runs", Json::Arr(runs));
+    if std::fs::write("BENCH_serve_shard.json", doc.pretty()).is_ok() {
+        println!("-- wrote BENCH_serve_shard.json");
+    }
+
+    b.finish("serve_shard");
+}

@@ -2,22 +2,26 @@
 //! layout (a list of GI profiles validated against the slice budget) whose
 //! instances act as serving slots.
 //!
-//! A node can be *repartitioned* while fully idle (the §II-B3 static-
+//! A GPU can be *repartitioned* while fully idle (the §II-B3 static-
 //! configuration constraint, lifted to the fleet level: reconfiguration is
 //! allowed, but only on a drained GPU and only through layouts that the
 //! `MigManager` slice-budget validation accepts). While a reconfiguration
-//! is in flight the node serves nothing.
+//! is in flight the GPU serves nothing.
+//!
+//! ("Node" here means a *shard* of the sharded serving control plane —
+//! see `cluster::shard` — never an individual GPU; a `Fleet` is the GPU
+//! set owned by one such node.)
 //!
 //! ## The incremental index
 //!
-//! `Fleet` maintains a `FleetIndex` alongside the raw nodes so the serving
+//! `Fleet` maintains a `FleetIndex` alongside the raw GPUs so the serving
 //! hot path is O(changed state), not O(fleet):
 //! - per-`ProfileId` idle-slot sets in deterministic `(gpu, slot)` order —
 //!   a placement decision becomes a walk over ≤6 profile classes instead
 //!   of a full `gpus × slots` scan;
-//! - the set of fully-idle, non-reconfiguring nodes (the reconfiguration
+//! - the set of fully-idle, non-reconfiguring GPUs (the reconfiguration
 //!   planner's candidates);
-//! - per-profile effective-layout node counts (the O(classes)
+//! - per-profile effective-layout GPU counts (the O(classes)
 //!   `fits_current_layouts` guard);
 //! - a live fleet busy-SM counter (the utilization integral);
 //! - an availability *epoch* that bumps whenever capacity comes back
@@ -26,7 +30,7 @@
 //!
 //! Mutations must flow through the `Fleet` methods (`start_job`,
 //! `finish_job`, `begin_reconfig`, `finish_reconfig`); mutating
-//! `fleet.nodes[..]` directly bypasses the index. The `*_scan` variants
+//! `fleet.gpus[..]` directly bypasses the index. The `*_scan` variants
 //! recompute the same quantities from the raw slots and serve as the
 //! differential-test oracle.
 
@@ -147,7 +151,7 @@ pub fn validate_layout(layout: &[ProfileId]) -> crate::Result<()> {
 
 /// One GPU of the fleet.
 #[derive(Debug)]
-pub struct GpuNode {
+pub struct FleetGpu {
     pub id: usize,
     pub layout: Vec<ProfileId>,
     pub slots: Vec<Slot>,
@@ -163,11 +167,11 @@ pub struct GpuNode {
     busy_sms_count: u32,
 }
 
-impl GpuNode {
-    pub fn new(id: usize, layout: Vec<ProfileId>) -> crate::Result<GpuNode> {
+impl FleetGpu {
+    pub fn new(id: usize, layout: Vec<ProfileId>) -> crate::Result<FleetGpu> {
         validate_layout(&layout)?;
         let slots = layout.iter().map(|&p| Slot::new(p)).collect();
-        Ok(GpuNode {
+        Ok(FleetGpu {
             id,
             layout,
             slots,
@@ -188,7 +192,7 @@ impl GpuNode {
         self.busy_slots == 0
     }
 
-    /// SMs currently running jobs on this node (O(1) live counter).
+    /// SMs currently running jobs on this GPU (O(1) live counter).
     pub fn busy_sms(&self) -> u32 {
         self.busy_sms_count
     }
@@ -203,15 +207,15 @@ impl GpuNode {
             .sum()
     }
 
-    /// The layout this node will have once any in-flight reconfiguration
+    /// The layout this GPU will have once any in-flight reconfiguration
     /// lands (used when deciding whether yet another reconfiguration is
     /// needed for a queued job).
     pub fn effective_layout(&self) -> &[ProfileId] {
         self.pending_layout.as_deref().unwrap_or(&self.layout)
     }
 
-    /// Start repartitioning to `target`; the node serves nothing until
-    /// `until_s`. Fails on a busy or already-reconfiguring node and on an
+    /// Start repartitioning to `target`; the GPU serves nothing until
+    /// `until_s`. Fails on a busy or already-reconfiguring GPU and on an
     /// invalid target layout — MIG cannot change under running work.
     /// Prefer `Fleet::begin_reconfig`, which also maintains the index.
     pub fn begin_reconfig(&mut self, target: Vec<ProfileId>, until_s: f64) -> crate::Result<()> {
@@ -245,12 +249,12 @@ impl GpuNode {
 #[derive(Debug)]
 struct FleetIndex {
     /// Idle slots per profile class, in deterministic `(gpu, slot)` order.
-    /// Slots of reconfiguring nodes are excluded (they serve nothing).
+    /// Slots of reconfiguring GPUs are excluded (they serve nothing).
     idle: [BTreeSet<(usize, usize)>; NUM_PROFILES],
-    /// Fully-idle, non-reconfiguring nodes (reconfiguration candidates).
-    idle_nodes: BTreeSet<usize>,
-    /// Number of nodes whose *effective* layout contains each profile.
-    layout_nodes: [u32; NUM_PROFILES],
+    /// Fully-idle, non-reconfiguring GPUs (reconfiguration candidates).
+    idle_gpus: BTreeSet<usize>,
+    /// Number of GPUs whose *effective* layout contains each profile.
+    layout_gpus: [u32; NUM_PROFILES],
     /// SMs currently running jobs across the fleet.
     busy_sms: u32,
     /// Bumped whenever capacity comes back (job finish / reconfig done):
@@ -263,16 +267,16 @@ impl FleetIndex {
     fn new() -> FleetIndex {
         FleetIndex {
             idle: std::array::from_fn(|_| BTreeSet::new()),
-            idle_nodes: BTreeSet::new(),
-            layout_nodes: [0; NUM_PROFILES],
+            idle_gpus: BTreeSet::new(),
+            layout_gpus: [0; NUM_PROFILES],
             busy_sms: 0,
             epoch: 0,
         }
     }
 
-    /// Adjust the per-profile node counts for the *distinct* profiles of
-    /// one node's layout.
-    fn adjust_layout_nodes(&mut self, layout: &[ProfileId], add: bool) {
+    /// Adjust the per-profile GPU counts for the *distinct* profiles of
+    /// one GPU's layout.
+    fn adjust_layout_gpus(&mut self, layout: &[ProfileId], add: bool) {
         let mut seen = [false; NUM_PROFILES];
         for p in layout {
             seen[p.index()] = true;
@@ -280,9 +284,9 @@ impl FleetIndex {
         for (i, s) in seen.iter().enumerate() {
             if *s {
                 if add {
-                    self.layout_nodes[i] += 1;
+                    self.layout_gpus[i] += 1;
                 } else {
-                    self.layout_nodes[i] -= 1;
+                    self.layout_gpus[i] -= 1;
                 }
             }
         }
@@ -292,7 +296,7 @@ impl FleetIndex {
 /// The multi-GPU fleet.
 #[derive(Debug)]
 pub struct Fleet {
-    pub nodes: Vec<GpuNode>,
+    pub gpus: Vec<FleetGpu>,
     pub spec: GpuSpec,
     index: FleetIndex,
 }
@@ -300,19 +304,19 @@ pub struct Fleet {
 impl Fleet {
     pub fn new(gpus: u32, preset: LayoutPreset) -> crate::Result<Fleet> {
         ensure!(gpus >= 1, "fleet needs at least one GPU");
-        let nodes = (0..gpus as usize)
-            .map(|i| GpuNode::new(i, preset.layout_for(i)))
+        let gpus = (0..gpus as usize)
+            .map(|i| FleetGpu::new(i, preset.layout_for(i)))
             .collect::<crate::Result<Vec<_>>>()?;
         let mut index = FleetIndex::new();
-        for (g, node) in nodes.iter().enumerate() {
-            for (s, slot) in node.slots.iter().enumerate() {
+        for (g, gpu) in gpus.iter().enumerate() {
+            for (s, slot) in gpu.slots.iter().enumerate() {
                 index.idle[slot.profile.id.index()].insert((g, s));
             }
-            index.idle_nodes.insert(g);
-            index.adjust_layout_nodes(&node.layout, true);
+            index.idle_gpus.insert(g);
+            index.adjust_layout_gpus(&gpu.layout, true);
         }
         Ok(Fleet {
-            nodes,
+            gpus,
             spec: GpuSpec::gh_h100_96gb(),
             index,
         })
@@ -320,7 +324,7 @@ impl Fleet {
 
     /// Physical SMs across the fleet.
     pub fn total_sms(&self) -> u32 {
-        self.spec.sms * self.nodes.len() as u32
+        self.spec.sms * self.gpus.len() as u32
     }
 
     /// SMs currently running jobs (O(1) live counter).
@@ -331,10 +335,10 @@ impl Fleet {
     /// SMs currently running jobs, recomputed from the slots — the
     /// differential-test oracle for `busy_sms`.
     pub fn busy_sms_scan(&self) -> u32 {
-        self.nodes.iter().map(|n| n.busy_sms_scan()).sum()
+        self.gpus.iter().map(|n| n.busy_sms_scan()).sum()
     }
 
-    /// Availability epoch: bumps whenever a slot (or a whole node) comes
+    /// Availability epoch: bumps whenever a slot (or a whole GPU) comes
     /// back. A placement failure memoized at epoch E stays valid while the
     /// epoch is still E.
     pub fn epoch(&self) -> u64 {
@@ -342,32 +346,52 @@ impl Fleet {
     }
 
     /// First idle slot of `profile` in `(gpu, slot)` order, excluding
-    /// reconfiguring nodes.
+    /// reconfiguring GPUs.
     pub fn first_idle(&self, profile: ProfileId) -> Option<(usize, usize)> {
         self.index.idle[profile.index()].iter().next().copied()
     }
 
-    /// Number of idle slots of `profile` (reconfiguring nodes excluded).
+    /// Number of idle slots of `profile` (reconfiguring GPUs excluded).
     pub fn idle_count(&self, profile: ProfileId) -> usize {
         self.index.idle[profile.index()].len()
     }
 
-    /// Whether any node's *effective* layout (post-reconfiguration if one
-    /// is in flight) contains `profile`.
-    pub fn has_layout_class(&self, profile: ProfileId) -> bool {
-        self.index.layout_nodes[profile.index()] > 0
+    /// SMs of idle serving slots (reconfiguring GPUs excluded) — the
+    /// cross-node load-balancing signal. O(profile classes) via the index.
+    pub fn idle_slot_sms(&self) -> u32 {
+        ALL_PROFILES
+            .into_iter()
+            .map(|p| self.idle_count(p) as u32 * GiProfile::get(p).sms)
+            .sum()
     }
 
-    /// Fully-idle, non-reconfiguring nodes in ascending id order — the
+    /// Memory of the largest idle serving slot (GiB; 0 when nothing is
+    /// idle, reconfiguring GPUs excluded) — the cross-node placement
+    /// compatibility signal. O(profile classes) via the index.
+    pub fn largest_idle_slot_gib(&self) -> f64 {
+        ALL_PROFILES
+            .into_iter()
+            .filter(|&p| self.idle_count(p) > 0)
+            .map(|p| GiProfile::get(p).mem_gib)
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Whether any GPU's *effective* layout (post-reconfiguration if one
+    /// is in flight) contains `profile`.
+    pub fn has_layout_class(&self, profile: ProfileId) -> bool {
+        self.index.layout_gpus[profile.index()] > 0
+    }
+
+    /// Fully-idle, non-reconfiguring GPUs in ascending id order — the
     /// reconfiguration planner's candidate walk.
-    pub fn idle_nodes(&self) -> impl Iterator<Item = usize> + '_ {
-        self.index.idle_nodes.iter().copied()
+    pub fn idle_gpus(&self) -> impl Iterator<Item = usize> + '_ {
+        self.index.idle_gpus.iter().copied()
     }
 
     /// Mark a slot busy with `job` until `until_s`.
     pub fn start_job(&mut self, gpu: usize, slot: usize, job: u32, now: f64, until_s: f64) {
-        let node = &mut self.nodes[gpu];
-        let s = &mut node.slots[slot];
+        let g = &mut self.gpus[gpu];
+        let s = &mut g.slots[slot];
         assert!(s.is_idle(), "placing onto a busy slot");
         s.state = SlotState::Busy {
             job,
@@ -376,17 +400,17 @@ impl Fleet {
         };
         let sms = s.profile.sms;
         let pid = s.profile.id;
-        node.busy_slots += 1;
-        node.busy_sms_count += sms;
+        g.busy_slots += 1;
+        g.busy_sms_count += sms;
         self.index.busy_sms += sms;
         self.index.idle[pid.index()].remove(&(gpu, slot));
-        self.index.idle_nodes.remove(&gpu);
+        self.index.idle_gpus.remove(&gpu);
     }
 
     /// Free a slot; returns the job that was running there.
     pub fn finish_job(&mut self, gpu: usize, slot: usize, now: f64) -> Option<u32> {
-        let node = &mut self.nodes[gpu];
-        let s = &mut node.slots[slot];
+        let g = &mut self.gpus[gpu];
+        let s = &mut g.slots[slot];
         let (job, started_s) = match s.state {
             SlotState::Busy { job, started_s, .. } => (job, started_s),
             SlotState::Idle => return None,
@@ -395,55 +419,55 @@ impl Fleet {
         s.state = SlotState::Idle;
         let sms = s.profile.sms;
         let pid = s.profile.id;
-        node.busy_slots -= 1;
-        node.busy_sms_count -= sms;
-        let node_idle = node.busy_slots == 0 && !node.reconfiguring();
+        g.busy_slots -= 1;
+        g.busy_sms_count -= sms;
+        let gpu_idle = g.busy_slots == 0 && !g.reconfiguring();
         self.index.busy_sms -= sms;
         self.index.idle[pid.index()].insert((gpu, slot));
-        if node_idle {
-            self.index.idle_nodes.insert(gpu);
+        if gpu_idle {
+            self.index.idle_gpus.insert(gpu);
         }
         self.index.epoch += 1;
         Some(job)
     }
 
     /// Start repartitioning `gpu` to `target` (index-maintaining wrapper
-    /// around `GpuNode::begin_reconfig`). While the reconfiguration is in
-    /// flight the node's slots leave the idle index — it serves nothing.
+    /// around `FleetGpu::begin_reconfig`). While the reconfiguration is in
+    /// flight the GPU's slots leave the idle index — it serves nothing.
     pub fn begin_reconfig(
         &mut self,
         gpu: usize,
         target: Vec<ProfileId>,
         until_s: f64,
     ) -> crate::Result<()> {
-        self.nodes[gpu].begin_reconfig(target, until_s)?;
-        // Success implies the node was fully idle: every slot was in the
+        self.gpus[gpu].begin_reconfig(target, until_s)?;
+        // Success implies the GPU was fully idle: every slot was in the
         // idle index and comes out of it now.
-        for (s, slot) in self.nodes[gpu].slots.iter().enumerate() {
+        for (s, slot) in self.gpus[gpu].slots.iter().enumerate() {
             self.index.idle[slot.profile.id.index()].remove(&(gpu, s));
         }
-        self.index.idle_nodes.remove(&gpu);
+        self.index.idle_gpus.remove(&gpu);
         // The effective layout flips from the installed one to the pending
         // target (`effective_layout` returns the pending layout while the
         // reconfiguration is in flight).
-        let node = &self.nodes[gpu];
-        self.index.adjust_layout_nodes(&node.layout, false);
-        self.index.adjust_layout_nodes(node.effective_layout(), true);
+        let g = &self.gpus[gpu];
+        self.index.adjust_layout_gpus(&g.layout, false);
+        self.index.adjust_layout_gpus(g.effective_layout(), true);
         Ok(())
     }
 
     /// Complete an in-flight reconfiguration on `gpu` (index-maintaining
-    /// wrapper around `GpuNode::finish_reconfig`). No-op when the node is
+    /// wrapper around `FleetGpu::finish_reconfig`). No-op when the GPU is
     /// not reconfiguring.
     pub fn finish_reconfig(&mut self, gpu: usize) {
-        if !self.nodes[gpu].reconfiguring() {
+        if !self.gpus[gpu].reconfiguring() {
             return;
         }
-        self.nodes[gpu].finish_reconfig();
-        for (s, slot) in self.nodes[gpu].slots.iter().enumerate() {
+        self.gpus[gpu].finish_reconfig();
+        for (s, slot) in self.gpus[gpu].slots.iter().enumerate() {
             self.index.idle[slot.profile.id.index()].insert((gpu, s));
         }
-        self.index.idle_nodes.insert(gpu);
+        self.index.idle_gpus.insert(gpu);
         self.index.epoch += 1;
     }
 
@@ -486,11 +510,11 @@ impl Fleet {
         };
         let mut idle_sms = 0u32;
         let mut stranded_sms = 0u32;
-        for node in &self.nodes {
-            if node.reconfiguring() {
+        for g in &self.gpus {
+            if g.reconfiguring() {
                 continue;
             }
-            for s in &node.slots {
+            for s in &g.slots {
                 if s.is_idle() {
                     idle_sms += s.profile.sms;
                     if s.profile.mem_gib < needed {
@@ -516,8 +540,8 @@ mod tests {
     fn presets_build_valid_fleets() {
         for preset in [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig] {
             let f = Fleet::new(5, preset).unwrap();
-            assert_eq!(f.nodes.len(), 5);
-            for n in &f.nodes {
+            assert_eq!(f.gpus.len(), 5);
+            for n in &f.gpus {
                 assert!(!n.slots.is_empty());
                 validate_layout(&n.layout).unwrap();
             }
@@ -538,7 +562,7 @@ mod tests {
     fn invalid_layout_rejected() {
         // 3x3g overflows the 8 memory slices.
         assert!(validate_layout(&[P3g48gb, P3g48gb, P3g48gb]).is_err());
-        assert!(GpuNode::new(0, vec![]).is_err());
+        assert!(FleetGpu::new(0, vec![]).is_err());
     }
 
     #[test]
@@ -547,10 +571,10 @@ mod tests {
         assert_eq!(f.busy_sms(), 0);
         f.start_job(0, 2, 42, 1.0, 5.0);
         assert_eq!(f.busy_sms(), 16);
-        assert!(!f.nodes[0].all_idle());
+        assert!(!f.gpus[0].all_idle());
         assert_eq!(f.finish_job(0, 2, 5.0), Some(42));
         assert_eq!(f.busy_sms(), 0);
-        assert!((f.nodes[0].slots[2].busy_accum_s - 4.0).abs() < 1e-12);
+        assert!((f.gpus[0].slots[2].busy_accum_s - 4.0).abs() < 1e-12);
         assert_eq!(f.finish_job(0, 2, 5.0), None, "double finish is a no-op");
     }
 
@@ -562,19 +586,19 @@ mod tests {
             .begin_reconfig(0, vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 5.0)
             .is_err());
         f.finish_job(0, 0, 10.0);
-        // Invalid target rejected even on an idle node.
+        // Invalid target rejected even on an idle GPU.
         assert!(f.begin_reconfig(0, vec![P4g48gb, P4g48gb], 12.0).is_err());
         f.begin_reconfig(0, vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 12.0)
             .unwrap();
-        assert!(f.nodes[0].reconfiguring());
-        assert_eq!(f.nodes[0].effective_layout().len(), 4);
+        assert!(f.gpus[0].reconfiguring());
+        assert_eq!(f.gpus[0].effective_layout().len(), 4);
         // Cannot stack a second reconfiguration.
         assert!(f.begin_reconfig(0, vec![P7g96gb], 13.0).is_err());
         f.finish_reconfig(0);
-        assert!(!f.nodes[0].reconfiguring());
-        assert_eq!(f.nodes[0].slots.len(), 4);
-        assert_eq!(f.nodes[0].reconfigs, 1);
-        assert_eq!(f.nodes[0].slots[0].profile.name, "2g.24gb");
+        assert!(!f.gpus[0].reconfiguring());
+        assert_eq!(f.gpus[0].slots.len(), 4);
+        assert_eq!(f.gpus[0].reconfigs, 1);
+        assert_eq!(f.gpus[0].slots[0].profile.name, "2g.24gb");
     }
 
     #[test]
@@ -594,13 +618,13 @@ mod tests {
     }
 
     /// Scan-derived truth for the idle index (first idle slot of a
-    /// profile, excluding reconfiguring nodes).
+    /// profile, excluding reconfiguring GPUs).
     fn first_idle_scan(f: &Fleet, pid: ProfileId) -> Option<(usize, usize)> {
-        for (g, node) in f.nodes.iter().enumerate() {
-            if node.reconfiguring() {
+        for (g, gpu) in f.gpus.iter().enumerate() {
+            if gpu.reconfiguring() {
                 continue;
             }
-            for (s, slot) in node.slots.iter().enumerate() {
+            for (s, slot) in gpu.slots.iter().enumerate() {
                 if slot.is_idle() && slot.profile.id == pid {
                     return Some((g, s));
                 }
@@ -622,16 +646,34 @@ mod tests {
             );
         }
         let idle_scan: Vec<usize> = f
-            .nodes
+            .gpus
             .iter()
             .enumerate()
             .filter(|(_, n)| !n.reconfiguring() && n.all_idle())
             .map(|(g, _)| g)
             .collect();
-        assert_eq!(f.idle_nodes().collect::<Vec<_>>(), idle_scan);
+        assert_eq!(f.idle_gpus().collect::<Vec<_>>(), idle_scan);
+        let idle_sms_scan: u32 = f
+            .gpus
+            .iter()
+            .filter(|g| !g.reconfiguring())
+            .flat_map(|g| g.slots.iter())
+            .filter(|s| s.is_idle())
+            .map(|s| s.profile.sms)
+            .sum();
+        assert_eq!(f.idle_slot_sms(), idle_sms_scan);
+        let largest_scan = f
+            .gpus
+            .iter()
+            .filter(|g| !g.reconfiguring())
+            .flat_map(|g| g.slots.iter())
+            .filter(|s| s.is_idle())
+            .map(|s| s.profile.mem_gib)
+            .fold(0.0f64, f64::max);
+        assert_eq!(f.largest_idle_slot_gib(), largest_scan);
         for pid in ALL_PROFILES {
             let present_scan = f
-                .nodes
+                .gpus
                 .iter()
                 .any(|n| n.effective_layout().contains(&pid));
             assert_eq!(f.has_layout_class(pid), present_scan, "{pid:?}");
@@ -647,19 +689,19 @@ mod tests {
             let g = rng.below(4) as usize;
             match rng.below(4) {
                 0 => {
-                    // Start a job on the first idle slot of node g.
-                    if !f.nodes[g].reconfiguring() {
+                    // Start a job on the first idle slot of GPU g.
+                    if !f.gpus[g].reconfiguring() {
                         if let Some(s) =
-                            f.nodes[g].slots.iter().position(|s| s.is_idle())
+                            f.gpus[g].slots.iter().position(|s| s.is_idle())
                         {
                             f.start_job(g, s, step, step as f64, step as f64 + 5.0);
                         }
                     }
                 }
                 1 => {
-                    // Finish the first busy slot of node g.
+                    // Finish the first busy slot of GPU g.
                     if let Some(s) =
-                        f.nodes[g].slots.iter().position(|s| !s.is_idle())
+                        f.gpus[g].slots.iter().position(|s| !s.is_idle())
                     {
                         let before = f.epoch();
                         f.finish_job(g, s, step as f64);
@@ -671,7 +713,7 @@ mod tests {
                     let _ = f.begin_reconfig(g, target, step as f64 + 3.0);
                 }
                 _ => {
-                    let was = f.nodes[g].reconfiguring();
+                    let was = f.gpus[g].reconfiguring();
                     f.finish_reconfig(g);
                     if was {
                         assert!(f.epoch() > epoch, "reconfig done must bump the epoch");

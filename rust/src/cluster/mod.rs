@@ -1,8 +1,9 @@
 //! Online cluster serving: offload-aware admission, placement, and
 //! dynamic MIG reconfiguration over a multi-GPU fleet.
 //!
-//! This is the closed loop the rest of the crate feeds: a Poisson stream
-//! of Table III jobs (plus the §VI large variants) arrives at a fleet of
+//! This is the closed loop the rest of the crate feeds: a stream of
+//! Table III jobs (plus the §VI large variants) — synthetic Poisson by
+//! default, or a replayed `JobTrace` arrival log — arrives at a fleet of
 //! statically-partitioned GH200 GPUs; an admission queue holds them
 //! against a deadline; a placement policy (`placement::PolicyKind`) maps
 //! each job to a MIG slot — directly, or through an NVLink-C2C
@@ -20,8 +21,12 @@
 //!   dense memoized cost model (runtime + power rates per app×profile);
 //!   placement decisions walk ≤6 profile classes via the fleet index.
 //! - `reconfig`: valid-partition-preserving layout planning + latency.
+//! - `shard`: the serving event loop itself (one `Shard` = one node of
+//!   the control plane), plus the sharded multi-node runner: N parallel
+//!   per-node event loops lock-stepped in lookahead-bounded epochs with a
+//!   deterministic cross-node dispatcher (`serve_sharded`).
 //!
-//! ## The hot path, and its oracle
+//! ## The hot path, and its oracles
 //!
 //! Per-event cost is O(changed state), not O(fleet): placement walks the
 //! per-profile idle index; the energy/fragmentation/utilization integrals
@@ -34,6 +39,11 @@
 //! produce bit-identical `ServeReport`s for a fixed seed (differentially
 //! tested in `tests/integration.rs`).
 //!
+//! Beyond one node: `serve` *is* a single-shard run of the `shard`
+//! machinery, which makes it the oracle for the sharded path — a 1-node
+//! sharded run reproduces it bit-for-bit, and an N-node run is
+//! bit-identical for every worker thread count.
+//!
 //! Outputs (`ServeReport`): admitted throughput, p50/p95/p99 queueing
 //! latency, fleet utilization, fragmentation, and energy integrated
 //! through the `gpu::PowerModel`.
@@ -42,20 +52,20 @@ pub mod fleet;
 pub mod placement;
 pub mod queue;
 pub mod reconfig;
+pub mod shard;
 
 pub use fleet::{Fleet, LayoutPreset};
 pub use placement::{PlacementCost, Planner, PolicyKind};
 pub use queue::{AdmissionQueue, JobState};
+pub use shard::{
+    serve_sharded, serve_sharded_replay, RouteKind, ShardServeConfig, ShardSummary,
+    ShardedServeReport,
+};
 
-use crate::gpu::{GpuUsage, PowerModel};
-use crate::sim::{Engine, EventToken};
 use crate::util::json::Json;
-use crate::util::stats::{percentile, Accum};
-use crate::util::units::{ns_to_sec, sec_to_ns};
 use crate::workload::trace::JobTrace;
 use crate::workload::AppId;
 use anyhow::ensure;
-use std::collections::BTreeMap;
 
 /// Configuration of one serving run.
 #[derive(Debug, Clone)]
@@ -198,14 +208,6 @@ impl ServeReport {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Ev {
-    Arrival(u32),
-    Deadline(u32),
-    JobDone { gpu: usize, slot: usize },
-    ReconfigDone(usize),
-}
-
 /// Run one serving simulation on the indexed hot path. Deterministic for
 /// a fixed config.
 pub fn serve(cfg: &ServeConfig) -> crate::Result<ServeReport> {
@@ -218,422 +220,24 @@ pub fn serve_with(cfg: &ServeConfig, mode: ServeMode) -> crate::Result<ServeRepo
     ensure!(cfg.jobs >= 1, "serve needs at least one job");
     ensure!(cfg.arrival_rate_hz > 0.0, "arrival rate must be positive");
     ensure!(cfg.deadline_s > 0.0, "deadline must be positive");
-
-    let mut planner = Planner::new(cfg.workload_scale);
-    let mut fleet = Fleet::new(cfg.gpus, cfg.layout)?;
     let trace = JobTrace::poisson(cfg.jobs, 1.0 / cfg.arrival_rate_hz, &serve_mix(), cfg.seed);
-    let mut queue = AdmissionQueue::new();
-    let mut engine: Engine<Ev> = Engine::new();
-    for job in &trace.jobs {
-        engine.schedule_at(sec_to_ns(job.arrival_s), Ev::Arrival(job.id));
-    }
-
-    let power_model = PowerModel::h100();
-    let mut power = PowerTracker::new(mode, &fleet);
-    let mut scratch = DispatchScratch::new();
-    // Pending deadline events, cancelled on placement so the event loop
-    // (and the energy integral) ends at the last real state change
-    // instead of idling until `last arrival + deadline`.
-    let mut deadline_tokens: Vec<Option<EventToken>> = vec![None; cfg.jobs as usize];
-    let mut energy_j = 0.0f64;
-    let mut frag_integral = 0.0f64;
-    let mut busy_sm_integral = 0.0f64;
-    let mut last_t = 0.0f64;
-
-    while let Some(ev) = engine.pop() {
-        let now = ns_to_sec(ev.time_ns);
-        let dt = now - last_t;
-        // Integrate only while serving work remains (jobs still to arrive
-        // or unresolved). Once the final job resolves, the only events
-        // left are trailing reconfig completions, and charging idle power
-        // past the horizon would skew the energy comparison between runs
-        // (the metrics all cover [0, horizon]). Mid-run idle gaps between
-        // arrivals still count — the fleet is powered on, waiting.
-        let resolved = match mode {
-            ServeMode::Indexed => queue.all_resolved(),
-            ServeMode::NaiveOracle => queue.all_resolved_scan(),
-        };
-        let work_remains = queue.jobs.len() < cfg.jobs as usize || !resolved;
-        if dt > 0.0 && work_remains {
-            energy_j += dt * power.power_w(&fleet, &power_model);
-            let smallest = match mode {
-                ServeMode::Indexed => queue.smallest_pending_footprint_gib(),
-                ServeMode::NaiveOracle => queue.smallest_pending_footprint_scan(),
-            };
-            let needed = smallest.map(|f| f + planner.ctx_gib());
-            let frag = match mode {
-                ServeMode::Indexed => fleet.fragmentation(needed),
-                ServeMode::NaiveOracle => fleet.fragmentation_scan(needed),
-            };
-            frag_integral += dt * frag;
-            let busy = match mode {
-                ServeMode::Indexed => fleet.busy_sms(),
-                ServeMode::NaiveOracle => fleet.busy_sms_scan(),
-            };
-            busy_sm_integral += dt * busy as f64;
-        }
-        last_t = now;
-        match ev.event {
-            Ev::Arrival(id) => {
-                let job = trace.jobs[id as usize].clone();
-                let app = job.app;
-                queue.admit(job, cfg.deadline_s);
-                if planner.servable(app, cfg.policy.allows_offload()) {
-                    // The queue's deadline_s is the single source of truth
-                    // for when this job abandons.
-                    let abandon_s = queue.jobs[id as usize].deadline_s;
-                    deadline_tokens[id as usize] =
-                        Some(engine.schedule_at(sec_to_ns(abandon_s), Ev::Deadline(id)));
-                    dispatch(
-                        cfg,
-                        mode,
-                        now,
-                        &mut fleet,
-                        &mut queue,
-                        &mut planner,
-                        &mut engine,
-                        &mut power,
-                        &mut deadline_tokens,
-                        &mut scratch,
-                    );
-                } else {
-                    queue.reject(id, now);
-                }
-            }
-            Ev::Deadline(id) => {
-                deadline_tokens[id as usize] = None;
-                queue.expire_if_pending(id, now);
-            }
-            Ev::JobDone { gpu, slot } => {
-                if let Some(job) = fleet.finish_job(gpu, slot, now) {
-                    queue.mark_completed(job, now);
-                    power.on_finish(gpu, slot);
-                    dispatch(
-                        cfg,
-                        mode,
-                        now,
-                        &mut fleet,
-                        &mut queue,
-                        &mut planner,
-                        &mut engine,
-                        &mut power,
-                        &mut deadline_tokens,
-                        &mut scratch,
-                    );
-                }
-            }
-            Ev::ReconfigDone(gpu) => {
-                fleet.finish_reconfig(gpu);
-                power.on_reconfig_done(gpu, fleet.nodes[gpu].slots.len());
-                dispatch(
-                    cfg,
-                    mode,
-                    now,
-                    &mut fleet,
-                    &mut queue,
-                    &mut planner,
-                    &mut engine,
-                    &mut power,
-                    &mut deadline_tokens,
-                    &mut scratch,
-                );
-            }
-        }
-    }
-
-    debug_assert!(queue.all_resolved(), "events drained with unresolved jobs");
-    debug_assert!(queue.all_resolved_scan(), "resolution counter diverged");
-    let horizon = queue.horizon_s().max(1e-9);
-    let waits = queue.completed_waits();
-    let pct = |p: f64| {
-        if waits.is_empty() {
-            0.0
-        } else {
-            percentile(&waits, p)
-        }
-    };
-    let mut wacc = Accum::new();
-    waits.iter().for_each(|&w| wacc.push(w));
-    let completed = queue.count(JobState::Completed);
-    let offloaded = queue
-        .jobs
-        .iter()
-        .filter(|j| j.state == JobState::Completed && j.offloaded)
-        .count() as u32;
-    Ok(ServeReport {
-        policy: cfg.policy.label(),
-        layout: cfg.layout.label().to_string(),
-        gpus: cfg.gpus,
-        jobs: cfg.jobs,
-        arrival_rate_hz: cfg.arrival_rate_hz,
-        completed,
-        expired: queue.count(JobState::Expired),
-        rejected: queue.count(JobState::Rejected),
-        offloaded,
-        reconfigs: fleet.nodes.iter().map(|n| n.reconfigs).sum(),
-        events: engine.popped(),
-        makespan_s: horizon,
-        throughput_jobs_s: completed as f64 / horizon,
-        wait_mean_s: wacc.mean(),
-        wait_p50_s: pct(50.0),
-        wait_p95_s: pct(95.0),
-        wait_p99_s: pct(99.0),
-        utilization: busy_sm_integral / (fleet.total_sms() as f64 * horizon),
-        fragmentation: frag_integral / horizon,
-        energy_j,
-    })
+    shard::run_single(cfg, mode, &trace.jobs)
 }
 
-/// Reusable dispatch state: the pending-id snapshot buffer and the
-/// per-app placement-failure memo. A placement that failed at fleet
-/// epoch E keeps failing while the epoch stays E — every mutation since
-/// only *removed* capacity — so repeat attempts for the same app are
-/// skipped without touching the planner.
-struct DispatchScratch {
-    ids: Vec<u32>,
-    failed_at_epoch: [Option<u64>; AppId::COUNT],
-}
-
-impl DispatchScratch {
-    fn new() -> DispatchScratch {
-        DispatchScratch {
-            ids: Vec::new(),
-            failed_at_epoch: [None; AppId::COUNT],
-        }
-    }
-}
-
-/// Try to place every pending job (FIFO with backfilling: a blocked head
-/// does not starve smaller jobs behind it). When a job fits no layout the
-/// fleet currently has — or is already reconfiguring toward — and
-/// reconfiguration is enabled, repartition one drained GPU toward the
-/// job's profile class.
-#[allow(clippy::too_many_arguments)]
-fn dispatch(
-    cfg: &ServeConfig,
-    mode: ServeMode,
-    now: f64,
-    fleet: &mut Fleet,
-    queue: &mut AdmissionQueue,
-    planner: &mut Planner,
-    engine: &mut Engine<Ev>,
-    power: &mut PowerTracker,
-    deadline_tokens: &mut [Option<EventToken>],
-    scratch: &mut DispatchScratch,
-) {
-    let DispatchScratch {
-        ids,
-        failed_at_epoch,
-    } = scratch;
-    ids.clear();
-    ids.extend(queue.pending_ids());
-    for &id in ids.iter() {
-        let app = queue.jobs[id as usize].job.app;
-        let placed = match mode {
-            ServeMode::Indexed => {
-                if failed_at_epoch[app.index()] == Some(fleet.epoch()) {
-                    // Provably still fails: no capacity came back since
-                    // the last failed attempt for this app.
-                    None
-                } else {
-                    let r = planner.place(fleet, app, cfg.policy);
-                    if r.is_none() {
-                        failed_at_epoch[app.index()] = Some(fleet.epoch());
-                    }
-                    r
-                }
-            }
-            ServeMode::NaiveOracle => planner.place_scan(fleet, app, cfg.policy),
-        };
-        if let Some((g, s, c)) = placed {
-            queue.mark_running(id, now, g, c.offloaded);
-            if let Some(tok) = deadline_tokens[id as usize].take() {
-                engine.cancel(tok);
-            }
-            let until = now + c.runtime_s;
-            fleet.start_job(g, s, id, now, until);
-            power.on_start(g, s, c);
-            engine.schedule_at(sec_to_ns(until), Ev::JobDone { gpu: g, slot: s });
-        } else if cfg.reconfig {
-            let fits = match mode {
-                ServeMode::Indexed => {
-                    planner.fits_current_layouts(fleet, app, cfg.policy.allows_offload())
-                }
-                ServeMode::NaiveOracle => {
-                    planner.fits_current_layouts_scan(fleet, app, cfg.policy.allows_offload())
-                }
-            };
-            if !fits {
-                // Memoized footprint: same constant either mode would
-                // compute, without rebuilding the app model per attempt.
-                let need = planner.footprint_gib(app) + planner.ctx_gib();
-                let plan = match mode {
-                    ServeMode::Indexed => reconfig::plan_reconfig(fleet, need),
-                    ServeMode::NaiveOracle => reconfig::plan_reconfig_scan(fleet, need),
-                };
-                if let Some((g, target)) = plan {
-                    let until = now + reconfig::latency_s(&fleet.nodes[g].layout, &target);
-                    if fleet.begin_reconfig(g, target, until).is_ok() {
-                        engine.schedule_at(sec_to_ns(until), Ev::ReconfigDone(g));
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Live per-GPU power bookkeeping. The naive oracle rebuilds every GPU's
-/// usage from the full running map on each integration step; the indexed
-/// path recomputes only GPUs whose running set changed and caches the
-/// per-GPU reported watts (summed in the same ascending-GPU order, so the
-/// energy integral is bit-identical).
-enum PowerTracker {
-    Naive {
-        /// Activity rates of running jobs, keyed by (gpu, slot). BTreeMap
-        /// so float summation order — and thus the energy integral — is
-        /// deterministic.
-        running: BTreeMap<(usize, usize), PlacementCost>,
-    },
-    Indexed {
-        nodes: Vec<NodePower>,
-    },
-}
-
-struct NodePower {
-    /// Running-job costs by slot index (iterated in slot order — the same
-    /// order the naive BTreeMap visits a GPU's jobs in).
-    costs: Vec<Option<PlacementCost>>,
-    dirty: bool,
-    watts: f64,
-}
-
-impl PowerTracker {
-    fn new(mode: ServeMode, fleet: &Fleet) -> PowerTracker {
-        match mode {
-            ServeMode::NaiveOracle => PowerTracker::Naive {
-                running: BTreeMap::new(),
-            },
-            ServeMode::Indexed => PowerTracker::Indexed {
-                nodes: fleet
-                    .nodes
-                    .iter()
-                    .map(|n| NodePower {
-                        costs: vec![None; n.slots.len()],
-                        dirty: true,
-                        watts: 0.0,
-                    })
-                    .collect(),
-            },
-        }
-    }
-
-    fn on_start(&mut self, gpu: usize, slot: usize, c: PlacementCost) {
-        match self {
-            PowerTracker::Naive { running } => {
-                running.insert((gpu, slot), c);
-            }
-            PowerTracker::Indexed { nodes } => {
-                nodes[gpu].costs[slot] = Some(c);
-                nodes[gpu].dirty = true;
-            }
-        }
-    }
-
-    fn on_finish(&mut self, gpu: usize, slot: usize) {
-        match self {
-            PowerTracker::Naive { running } => {
-                running.remove(&(gpu, slot));
-            }
-            PowerTracker::Indexed { nodes } => {
-                nodes[gpu].costs[slot] = None;
-                nodes[gpu].dirty = true;
-            }
-        }
-    }
-
-    /// A reconfiguration landed on `gpu`: the slot count changed (the
-    /// node is drained, so there are no running costs to carry over).
-    fn on_reconfig_done(&mut self, gpu: usize, slots: usize) {
-        match self {
-            PowerTracker::Naive { .. } => {}
-            PowerTracker::Indexed { nodes } => {
-                nodes[gpu].costs.clear();
-                nodes[gpu].costs.resize(slots, None);
-                nodes[gpu].dirty = true;
-            }
-        }
-    }
-
-    /// Instantaneous fleet power (W).
-    fn power_w(&mut self, fleet: &Fleet, model: &PowerModel) -> f64 {
-        match self {
-            PowerTracker::Naive { running } => fleet_power_w_scan(fleet, model, running),
-            PowerTracker::Indexed { nodes } => {
-                for (g, np) in nodes.iter_mut().enumerate() {
-                    if np.dirty {
-                        np.watts = node_power_w(fleet, model, g, &np.costs);
-                        np.dirty = false;
-                    }
-                }
-                nodes.iter().map(|np| np.watts).sum()
-            }
-        }
-    }
-}
-
-/// Per-GPU `PowerModel` demand from one node's running jobs (indexed
-/// path). Accumulation order matches the naive scan: rates added in
-/// ascending slot order into a fresh `GpuUsage`.
-fn node_power_w(
-    fleet: &Fleet,
-    model: &PowerModel,
-    gpu: usize,
-    costs: &[Option<PlacementCost>],
-) -> f64 {
-    let spec = &fleet.spec;
-    let busy = fleet.nodes[gpu].busy_sms();
-    let mut u = GpuUsage {
-        context_active: busy > 0,
-        sm_busy_frac: busy as f64 / spec.sms as f64,
-        ..GpuUsage::default()
-    };
-    for c in costs.iter().flatten() {
-        for (i, f) in c.flop_tflops.iter().enumerate() {
-            u.flop_rate_tflops[i] += *f;
-        }
-        u.hbm_rate_tbs += c.hbm_tbs;
-        u.c2c_rate_tbs += c.c2c_tbs;
-    }
-    model.reported_w(spec, &u, spec.clock_max_mhz)
-}
-
-/// Instantaneous fleet power, rebuilt from scratch — the oracle (no DVFS
-/// governor here — serving jobs on MIG slices stays under the cap, which
-/// `reported_w` enforces anyway).
-fn fleet_power_w_scan(
-    fleet: &Fleet,
-    model: &PowerModel,
-    running: &BTreeMap<(usize, usize), PlacementCost>,
-) -> f64 {
-    let spec = &fleet.spec;
-    let mut usages: Vec<GpuUsage> = vec![GpuUsage::default(); fleet.nodes.len()];
-    for (g, node) in fleet.nodes.iter().enumerate() {
-        let busy = node.busy_sms_scan();
-        usages[g].context_active = busy > 0;
-        usages[g].sm_busy_frac = busy as f64 / spec.sms as f64;
-    }
-    for (&(g, _), c) in running {
-        let u = &mut usages[g];
-        for (i, f) in c.flop_tflops.iter().enumerate() {
-            u.flop_rate_tflops[i] += *f;
-        }
-        u.hbm_rate_tbs += c.hbm_tbs;
-        u.c2c_rate_tbs += c.c2c_tbs;
-    }
-    usages
-        .iter()
-        .map(|u| model.reported_w(spec, u, spec.clock_max_mhz))
-        .sum()
+/// Run one serving simulation over a replayed arrival trace instead of
+/// the synthetic Poisson stream. The trace is canonicalized (sorted by
+/// arrival, densely re-id'd); `cfg.jobs` and `cfg.seed` are ignored —
+/// the trace *is* the arrival process. Replaying the trace a synthetic
+/// run was built from reproduces that run's `ServeReport` bit-for-bit.
+pub fn serve_replay(cfg: &ServeConfig, trace: &JobTrace) -> crate::Result<ServeReport> {
+    ensure!(cfg.gpus >= 1, "serve needs at least one GPU");
+    ensure!(cfg.arrival_rate_hz > 0.0, "arrival rate must be positive");
+    ensure!(cfg.deadline_s > 0.0, "deadline must be positive");
+    let jobs = trace.canonicalized()?.jobs;
+    ensure!(!jobs.is_empty(), "replay trace has no jobs");
+    let mut cfg = cfg.clone();
+    cfg.jobs = jobs.len() as u32;
+    shard::run_single(&cfg, ServeMode::Indexed, &jobs)
 }
 
 #[cfg(test)]
@@ -757,5 +361,17 @@ mod tests {
             back.get("completed").unwrap().as_u64(),
             Some(r.completed as u64)
         );
+    }
+
+    #[test]
+    fn replay_of_the_synthetic_trace_reproduces_the_report() {
+        // The trace-replay round trip: persist the arrival log a
+        // synthetic run draws, reload it, replay — identical report.
+        let cfg = base_cfg();
+        let synth = serve(&cfg).unwrap();
+        let trace = JobTrace::poisson(cfg.jobs, 1.0 / cfg.arrival_rate_hz, &serve_mix(), cfg.seed);
+        let reloaded = JobTrace::from_json(&trace.to_json()).unwrap();
+        let replay = serve_replay(&cfg, &reloaded).unwrap();
+        assert_eq!(synth.to_json().pretty(), replay.to_json().pretty());
     }
 }

@@ -435,11 +435,11 @@ impl Planner {
     ) -> Option<(usize, usize, PlacementCost)> {
         match policy {
             PolicyKind::FirstFit => {
-                for (g, node) in fleet.nodes.iter().enumerate() {
-                    if node.reconfiguring() {
+                for (g, gpu) in fleet.gpus.iter().enumerate() {
+                    if gpu.reconfiguring() {
                         continue;
                     }
-                    for (s, slot) in node.slots.iter().enumerate() {
+                    for (s, slot) in gpu.slots.iter().enumerate() {
                         if !slot.is_idle() {
                             continue;
                         }
@@ -452,11 +452,11 @@ impl Planner {
             }
             PolicyKind::BestFit => {
                 let mut best: Option<(u32, usize, usize, PlacementCost)> = None;
-                for (g, node) in fleet.nodes.iter().enumerate() {
-                    if node.reconfiguring() {
+                for (g, gpu) in fleet.gpus.iter().enumerate() {
+                    if gpu.reconfiguring() {
                         continue;
                     }
-                    for (s, slot) in node.slots.iter().enumerate() {
+                    for (s, slot) in gpu.slots.iter().enumerate() {
                         if !slot.is_idle() {
                             continue;
                         }
@@ -472,11 +472,11 @@ impl Planner {
             }
             PolicyKind::OffloadAware { alpha_centi } => {
                 let mut best: Option<(f64, u32, usize, usize, PlacementCost)> = None;
-                for (g, node) in fleet.nodes.iter().enumerate() {
-                    if node.reconfiguring() {
+                for (g, gpu) in fleet.gpus.iter().enumerate() {
+                    if gpu.reconfiguring() {
                         continue;
                     }
-                    for (s, slot) in node.slots.iter().enumerate() {
+                    for (s, slot) in gpu.slots.iter().enumerate() {
                         if !slot.is_idle() {
                             continue;
                         }
@@ -503,7 +503,7 @@ impl Planner {
         }
     }
 
-    /// Whether `app` could run on *some* profile of the node layouts the
+    /// Whether `app` could run on *some* profile of the per-GPU layouts the
     /// fleet currently has or is reconfiguring toward — the trigger guard
     /// for dynamic reconfiguration. O(profile classes) via the fleet's
     /// layout-class counts.
@@ -516,7 +516,7 @@ impl Planner {
         false
     }
 
-    /// `fits_current_layouts` by full node×layout scan — the
+    /// `fits_current_layouts` by full GPU×layout scan — the
     /// differential-test oracle.
     pub fn fits_current_layouts_scan(
         &mut self,
@@ -524,8 +524,8 @@ impl Planner {
         app: AppId,
         allow_offload: bool,
     ) -> bool {
-        for node in &fleet.nodes {
-            for &p in node.effective_layout() {
+        for gpu in &fleet.gpus {
+            for &p in gpu.effective_layout() {
                 if self.cost(app, p, allow_offload).is_some() {
                     return true;
                 }
@@ -573,7 +573,7 @@ mod tests {
         let mut fleet = Fleet::new(3, LayoutPreset::Mixed).unwrap();
         // Occupy every slot on GPUs 0 and 1 so only GPU 2 is free.
         for g in 0..2 {
-            for s in 0..fleet.nodes[g].slots.len() {
+            for s in 0..fleet.gpus[g].slots.len() {
                 fleet.start_job(g, s, 0, 0.0, 100.0);
             }
         }
@@ -624,10 +624,10 @@ mod tests {
         for step in 0..120u32 {
             let g = rng.below(5) as usize;
             if rng.below(2) == 0 {
-                if let Some(s) = fleet.nodes[g].slots.iter().position(|s| s.is_idle()) {
+                if let Some(s) = fleet.gpus[g].slots.iter().position(|s| s.is_idle()) {
                     fleet.start_job(g, s, step, step as f64, step as f64 + 9.0);
                 }
-            } else if let Some(s) = fleet.nodes[g].slots.iter().position(|s| !s.is_idle()) {
+            } else if let Some(s) = fleet.gpus[g].slots.iter().position(|s| !s.is_idle()) {
                 fleet.finish_job(g, s, step as f64);
             }
             for &app in &apps {

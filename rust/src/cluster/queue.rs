@@ -2,8 +2,12 @@
 //!
 //! A job is *admitted* when a placement policy assigns it a slot; it is
 //! *expired* if its deadline passes while it still waits (the client gave
-//! up), and *rejected* immediately when no layout this fleet could ever
-//! reconfigure to — offloading included — can host it.
+//! up), *rejected* immediately when no layout this fleet could ever
+//! reconfigure to — offloading included — can host it, and *forwarded*
+//! when the sharded control plane hands it off to another node's queue
+//! (terminal here; the destination queue owns it from then on and admits
+//! it via `admit_handoff`, preserving the original arrival time and
+//! absolute deadline).
 //!
 //! The queue keeps live counters alongside the raw job list so the
 //! serving hot path never rescans it: pending ids live in a `BTreeSet`
@@ -28,6 +32,9 @@ pub enum JobState {
     Completed,
     Expired,
     Rejected,
+    /// Handed off to another node shard's queue (terminal in this queue;
+    /// the destination accounts the job's real outcome).
+    Forwarded,
 }
 
 /// A job plus its serving metadata.
@@ -41,6 +48,8 @@ pub struct QueuedJob {
     pub finished_s: Option<f64>,
     pub offloaded: bool,
     pub gpu: Option<usize>,
+    /// Arrived here via a cross-node handoff (never forwarded again).
+    pub handoff: bool,
 }
 
 /// FIFO admission queue with deadline accounting.
@@ -81,8 +90,20 @@ impl AdmissionQueue {
     /// Register an arriving job with a relative queueing deadline. Job ids
     /// must arrive in order (they index `jobs`).
     pub fn admit(&mut self, job: Job, deadline_rel_s: f64) {
-        assert_eq!(job.id as usize, self.jobs.len(), "job ids must be dense");
         let deadline_s = job.arrival_s + deadline_rel_s;
+        self.admit_at(job, deadline_s, false);
+    }
+
+    /// Register a job handed off from another node shard: its deadline is
+    /// the absolute instant fixed at the original admission (the clock
+    /// does not restart on migration), and it is marked so it never
+    /// forwards again.
+    pub fn admit_handoff(&mut self, job: Job, deadline_abs_s: f64) {
+        self.admit_at(job, deadline_abs_s, true);
+    }
+
+    fn admit_at(&mut self, job: Job, deadline_s: f64, handoff: bool) {
+        assert_eq!(job.id as usize, self.jobs.len(), "job ids must be dense");
         self.pending_by_app[job.app.index()] += 1;
         self.jobs.push(QueuedJob {
             job,
@@ -92,6 +113,7 @@ impl AdmissionQueue {
             finished_s: None,
             offloaded: false,
             gpu: None,
+            handoff,
         });
         self.pending.insert(self.jobs.len() as u32 - 1);
     }
@@ -155,6 +177,20 @@ impl AdmissionQueue {
         self.unqueue(id);
     }
 
+    /// Hand a pending job off to another node shard: terminal here (it no
+    /// longer pends, counts as resolved for this queue's loop-termination
+    /// accounting) but contributes to no outcome metric — the destination
+    /// queue records the job's completion or expiry. `finished_s` stays
+    /// `None` so the handoff instant never extends this shard's horizon.
+    pub fn mark_forwarded(&mut self, id: u32) {
+        let j = &mut self.jobs[id as usize];
+        assert_eq!(j.state, JobState::Pending, "forwarding a non-pending job");
+        assert!(!j.handoff, "a handed-off job never forwards again");
+        j.state = JobState::Forwarded;
+        self.resolved += 1;
+        self.unqueue(id);
+    }
+
     pub fn count(&self, state: JobState) -> u32 {
         self.jobs.iter().filter(|j| j.state == state).count() as u32
     }
@@ -164,13 +200,18 @@ impl AdmissionQueue {
         self.resolved as usize == self.jobs.len()
     }
 
+    /// Admitted jobs not yet in a terminal state (O(1)).
+    pub fn unresolved(&self) -> u32 {
+        self.jobs.len() as u32 - self.resolved
+    }
+
     /// `all_resolved` recomputed from the raw states — the
     /// differential-test oracle.
     pub fn all_resolved_scan(&self) -> bool {
         self.jobs.iter().all(|j| {
             matches!(
                 j.state,
-                JobState::Completed | JobState::Expired | JobState::Rejected
+                JobState::Completed | JobState::Expired | JobState::Rejected | JobState::Forwarded
             )
         })
     }
@@ -288,6 +329,33 @@ mod tests {
         assert_eq!(q.count(JobState::Rejected), 1);
         assert_eq!(q.pending_len(), 0);
         assert!(q.all_resolved());
+    }
+
+    #[test]
+    fn handoff_lifecycle_and_forward_accounting() {
+        let mut q = AdmissionQueue::new();
+        q.admit(job(0, 1.0, AppId::Llama3Fp16), 10.0); // abandons at 11.0
+        assert_eq!(q.unresolved(), 1);
+        q.mark_forwarded(0);
+        assert_eq!(q.pending_len(), 0);
+        assert!(q.all_resolved());
+        assert!(q.all_resolved_scan());
+        assert_eq!(q.unresolved(), 0);
+        assert_eq!(q.count(JobState::Forwarded), 1);
+        assert_eq!(q.count(JobState::Expired), 0);
+        assert_eq!(q.horizon_s(), 0.0, "forwarding never extends the horizon");
+
+        // Destination queue: absolute deadline preserved, wait accounting
+        // spans the handoff (original arrival, not re-arrival).
+        let mut dst = AdmissionQueue::new();
+        dst.admit_handoff(job(0, 1.0, AppId::Llama3Fp16), 11.0);
+        assert!(dst.jobs[0].handoff);
+        assert_eq!(dst.jobs[0].deadline_s, 11.0);
+        dst.mark_running(0, 5.0, 0, false);
+        dst.mark_completed(0, 9.0);
+        let waits = dst.completed_waits();
+        assert_eq!(waits.len(), 1);
+        assert!((waits[0] - 4.0).abs() < 1e-12, "wait = placed - arrival");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //!
 //! Target layouts are *valid-partition-preserving*: `plan_for_footprint`
 //! only ever proposes layouts that the `MigManager` slice budget accepts
-//! (re-validated at `GpuNode::begin_reconfig` time).
+//! (re-validated at `FleetGpu::begin_reconfig` time).
 
 use super::fleet::{class_layout, Fleet};
 use crate::mig::profile::{GiProfile, ProfileId};
@@ -42,12 +42,12 @@ pub fn plan_for_footprint(need_gib: f64) -> Option<Vec<ProfileId>> {
 /// Choose a reconfiguration that would let a job of `need_gib` run: the
 /// first fully-idle, not-already-reconfiguring GPU whose layout would
 /// change. Returns `(gpu index, target layout)`. Walks the fleet's
-/// idle-node index (ascending id order — the same order the full scan
-/// visits eligible nodes in).
+/// idle-GPU index (ascending id order — the same order the full scan
+/// visits eligible GPUs in).
 pub fn plan_reconfig(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<ProfileId>)> {
     let target = plan_for_footprint(need_gib)?;
-    for g in fleet.idle_nodes() {
-        if fleet.nodes[g].layout == target {
+    for g in fleet.idle_gpus() {
+        if fleet.gpus[g].layout == target {
             continue; // already shaped right; the job fits without change
         }
         return Some((g, target));
@@ -58,11 +58,11 @@ pub fn plan_reconfig(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<Profile
 /// `plan_reconfig` by full fleet scan — the differential-test oracle.
 pub fn plan_reconfig_scan(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<ProfileId>)> {
     let target = plan_for_footprint(need_gib)?;
-    for (g, node) in fleet.nodes.iter().enumerate() {
-        if node.reconfiguring() || !node.all_idle() {
+    for (g, gpu) in fleet.gpus.iter().enumerate() {
+        if gpu.reconfiguring() || !gpu.all_idle() {
             continue;
         }
-        if node.layout == target {
+        if gpu.layout == target {
             continue;
         }
         return Some((g, target));

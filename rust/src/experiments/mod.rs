@@ -54,10 +54,10 @@ impl ExperimentOutput {
 
 /// All experiment ids in paper order, plus the ablation sweeps and the
 /// online-serving studies.
-pub const ALL_IDS: [&str; 18] = [
+pub const ALL_IDS: [&str; 19] = [
     "table1", "table2", "table4", "smcount", "ctx", "fig2", "fig3", "fig4", "fig5", "fig6",
     "fig7", "fig8", "ablate-copies", "ablate-alpha", "ablate-mps", "sched", "serve",
-    "serve-scale",
+    "serve-scale", "serve-shard",
 ];
 
 /// Run one experiment by id.
@@ -81,6 +81,7 @@ pub fn run(id: &str, cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
         "sched" => sched::sched(cfg),
         "serve" => serve::serve_experiment(cfg),
         "serve-scale" => serve::serve_scale_experiment(cfg),
+        "serve-shard" => serve::serve_shard_experiment(cfg),
         other => anyhow::bail!("unknown experiment '{other}' (known: {})", ALL_IDS.join(", ")),
     }
 }

@@ -26,7 +26,12 @@
 //!   introduction motivates: `migsim serve`. Its event loop is
 //!   O(changed state) per event (indexed placement, incremental
 //!   integrals), with the naive full-rescan implementation retained as a
-//!   bit-identical differential-test oracle (`ServeMode`).
+//!   bit-identical differential-test oracle (`ServeMode`). At cluster
+//!   scale the loop shards across *nodes* (`cluster::shard`): parallel
+//!   per-node event loops on worker threads, lock-stepped in
+//!   lookahead-bounded epochs with a deterministic cross-node dispatcher
+//!   — bit-identical for every thread count, with the single loop as the
+//!   1-node oracle (`migsim serve --nodes N --threads T`).
 //! - `runtime`: PJRT loader/executor for `artifacts/*.hlo.txt`
 //!   (feature-gated behind `pjrt`; a stub otherwise).
 

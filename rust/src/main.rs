@@ -45,7 +45,7 @@ fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "serve",
             summary: "online cluster serving: admission + placement + reconfig",
-            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--json]",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--trace FILE] [--save-trace FILE] [--json]",
         },
         CommandSpec {
             name: "runtime",
@@ -251,6 +251,13 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         "scale",
         "config",
         "json",
+        "nodes",
+        "threads",
+        "lookahead",
+        "route",
+        "no-forward",
+        "trace",
+        "save-trace",
     ])
     .map_err(anyhow::Error::msg)?;
     let cfg = sim_config(args)?;
@@ -281,17 +288,92 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         seed: cfg.seed,
         workload_scale: cfg.workload_scale,
     };
-    let report = migsim::cluster::serve(&serve_cfg)?;
-    if args.flag("json") {
-        println!("{}", report.to_json().pretty());
-    } else {
-        println!("{}", report.summary());
+
+    // Trace replay: feed the queue from a persisted arrival log instead
+    // of the synthetic Poisson stream. The trace *is* the arrival
+    // process, so the synthetic-stream knobs must not be combined with
+    // it — accepting them silently would misattribute the results.
+    if args.opt("trace").is_some() {
+        for opt in ["jobs", "arrival-rate", "seed"] {
+            anyhow::ensure!(
+                args.opt(opt).is_none(),
+                "--{opt} has no effect with --trace (the trace defines the arrival stream)"
+            );
+        }
     }
-    let path = migsim::coordinator::report::write_results(
-        &cfg.results_dir,
-        "serve-run",
-        &report.to_json(),
-    )?;
+    let trace = match args.opt("trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
+            let doc = migsim::util::json::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing trace {path}: {e}"))?;
+            Some(migsim::workload::trace::JobTrace::from_json(&doc)?)
+        }
+        None => None,
+    };
+    if let Some(path) = args.opt("save-trace") {
+        // Persist the canonical arrival log this run serves, so it can be
+        // replayed later (`--trace`) to reproduce the report bit-for-bit.
+        let t = match &trace {
+            Some(t) => t.canonicalized()?,
+            None => migsim::workload::trace::JobTrace::poisson(
+                serve_cfg.jobs,
+                1.0 / serve_cfg.arrival_rate_hz,
+                &migsim::cluster::serve_mix(),
+                serve_cfg.seed,
+            ),
+        };
+        std::fs::write(path, t.to_json().pretty())
+            .map_err(|e| anyhow::anyhow!("writing trace {path}: {e}"))?;
+        eprintln!("-- wrote {path}");
+    }
+
+    let nodes = args.opt_u64("nodes", 1).map_err(anyhow::Error::msg)? as u32;
+    let threads = args.opt_u64("threads", 1).map_err(anyhow::Error::msg)? as u32;
+    if nodes <= 1 {
+        // The dispatcher options only do anything with multiple node
+        // shards (a 1-node run has trivial routing and no handoffs, at
+        // any thread count); dropping them silently would let a user
+        // believe they benchmarked a routing policy they never ran.
+        for opt in ["lookahead", "route"] {
+            anyhow::ensure!(
+                args.opt(opt).is_none(),
+                "--{opt} requires a multi-node run (--nodes N > 1)"
+            );
+        }
+        anyhow::ensure!(
+            !args.flag("no-forward"),
+            "--no-forward requires a multi-node run (--nodes N > 1)"
+        );
+    }
+    let (doc, summary) = if nodes > 1 || threads > 1 {
+        let mut scfg = migsim::cluster::ShardServeConfig::new(serve_cfg, nodes, threads);
+        scfg.lookahead_s = args
+            .opt_f64("lookahead", scfg.lookahead_s)
+            .map_err(anyhow::Error::msg)?;
+        let route_name = args.opt_or("route", "round-robin");
+        scfg.route = migsim::cluster::RouteKind::parse(route_name).ok_or_else(|| {
+            anyhow::anyhow!("unknown route '{route_name}' (round-robin|least-loaded)")
+        })?;
+        scfg.forward = !args.flag("no-forward");
+        let report = match &trace {
+            Some(t) => migsim::cluster::serve_sharded_replay(&scfg, t)?,
+            None => migsim::cluster::serve_sharded(&scfg)?,
+        };
+        (report.to_json(), report.summary())
+    } else {
+        let report = match &trace {
+            Some(t) => migsim::cluster::serve_replay(&serve_cfg, t)?,
+            None => migsim::cluster::serve(&serve_cfg)?,
+        };
+        (report.to_json(), report.summary())
+    };
+    if args.flag("json") {
+        println!("{}", doc.pretty());
+    } else {
+        println!("{summary}");
+    }
+    let path = migsim::coordinator::report::write_results(&cfg.results_dir, "serve-run", &doc)?;
     eprintln!("-- wrote {}", path.display());
     Ok(())
 }

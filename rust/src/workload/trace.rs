@@ -9,7 +9,7 @@
 use crate::util::json::Json;
 use crate::util::Rng;
 use crate::workload::{apps, AppId};
-use anyhow::anyhow;
+use anyhow::{anyhow, ensure};
 
 /// One job in a trace.
 #[derive(Debug, Clone)]
@@ -71,6 +71,29 @@ impl JobTrace {
 
     pub fn is_empty(&self) -> bool {
         self.jobs.is_empty()
+    }
+
+    /// A copy of this trace normalized for replay: arrivals validated
+    /// (finite, non-negative), jobs stably sorted by arrival time, and
+    /// ids re-labelled densely 0..n in that order — the shape the serving
+    /// queues require. A trace synthesized by `poisson` is already
+    /// canonical, so on it this is an exact copy (replay round-trips
+    /// bit-for-bit).
+    pub fn canonicalized(&self) -> crate::Result<JobTrace> {
+        let mut jobs = self.jobs.clone();
+        for j in &jobs {
+            ensure!(
+                j.arrival_s.is_finite() && j.arrival_s >= 0.0,
+                "job {} has invalid arrival {}",
+                j.id,
+                j.arrival_s
+            );
+        }
+        jobs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.id = i as u32;
+        }
+        Ok(JobTrace { jobs })
     }
 
     pub fn to_json(&self) -> Json {
@@ -154,6 +177,35 @@ mod tests {
         }
         let c = JobTrace::poisson(50, 5.0, &JobTrace::suite_mix(), 8);
         assert!(a.jobs.iter().zip(&c.jobs).any(|(x, y)| x.arrival_s != y.arrival_s));
+    }
+
+    #[test]
+    fn canonicalized_sorts_relabels_and_validates() {
+        // A poisson trace is already canonical: exact copy.
+        let p = JobTrace::poisson(30, 2.0, &JobTrace::suite_mix(), 5);
+        let c = p.canonicalized().unwrap();
+        for (a, b) in p.jobs.iter().zip(&c.jobs) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.app, b.app);
+            assert_eq!(a.arrival_s, b.arrival_s);
+        }
+        // Out-of-order external traces are sorted and re-id'd densely.
+        let messy = JobTrace {
+            jobs: vec![
+                Job { id: 7, app: AppId::Faiss, arrival_s: 5.0 },
+                Job { id: 2, app: AppId::Hotspot, arrival_s: 1.0 },
+                Job { id: 4, app: AppId::Lammps, arrival_s: 3.0 },
+            ],
+        };
+        let c = messy.canonicalized().unwrap();
+        assert_eq!(c.jobs.iter().map(|j| j.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(c.jobs[0].app, AppId::Hotspot);
+        assert_eq!(c.jobs[2].arrival_s, 5.0);
+        // Invalid arrivals are rejected.
+        let bad = JobTrace {
+            jobs: vec![Job { id: 0, app: AppId::Faiss, arrival_s: -1.0 }],
+        };
+        assert!(bad.canonicalized().is_err());
     }
 
     #[test]

@@ -286,6 +286,124 @@ fn fault_free_runs_report_zero_failures() {
 }
 
 #[test]
+fn sharded_serve_matches_oracle_and_is_thread_invariant() {
+    // The sharded control plane's two oracle properties, over a policy ×
+    // seed × route grid:
+    // 1. nodes = 1 degenerates to the single-loop `serve` bit-for-bit at
+    //    any thread count (the sharding machinery adds nothing);
+    // 2. nodes > 1 is a different system (partitioned fleet, lookahead
+    //    dispatch latency) but its merged ServeReport — and the handoff /
+    //    epoch diagnostics — are bit-identical for threads ∈ {1, 2, 4}.
+    use migsim::cluster::{
+        serve, serve_sharded, LayoutPreset, PolicyKind, RouteKind, ServeConfig, ShardServeConfig,
+    };
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    for &policy in &policies {
+        for &seed in &[7u64, 0xC0FFEE] {
+            let base = ServeConfig {
+                gpus: 4,
+                policy,
+                layout: LayoutPreset::Mixed,
+                arrival_rate_hz: 2.0,
+                jobs: 40,
+                deadline_s: 25.0,
+                reconfig: true,
+                seed,
+                workload_scale: 0.05,
+            };
+            let oracle = serve(&base).unwrap().to_json().pretty();
+            for route in [RouteKind::RoundRobin, RouteKind::LeastLoaded] {
+                for threads in [1u32, 2] {
+                    let mut scfg = ShardServeConfig::new(base.clone(), 1, threads);
+                    scfg.route = route;
+                    let r = serve_sharded(&scfg).unwrap();
+                    assert_eq!(
+                        r.report.to_json().pretty(),
+                        oracle,
+                        "1-node sharded diverged from serve(): {policy:?} seed={seed:#x} \
+                         route={route:?} threads={threads}"
+                    );
+                }
+                for nodes in [2u32, 4] {
+                    let mut first: Option<String> = None;
+                    for threads in [1u32, 2, 4] {
+                        let mut scfg = ShardServeConfig::new(base.clone(), nodes, threads);
+                        scfg.route = route;
+                        let r = serve_sharded(&scfg).unwrap();
+                        let key = format!(
+                            "{}|handoffs={}|epochs={}",
+                            r.report.to_json().pretty(),
+                            r.handoffs,
+                            r.epochs
+                        );
+                        match &first {
+                            None => first = Some(key),
+                            Some(f) => assert_eq!(
+                                *f, key,
+                                "thread count changed the report: {policy:?} seed={seed:#x} \
+                                 route={route:?} nodes={nodes} threads={threads}"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_trace_replay_round_trips_through_disk() {
+    // Record a synthetic run's arrival log, persist it, reload it, replay
+    // it — single-loop and sharded reports must both come back
+    // bit-identical (f64 serialization is exact: shortest-round-trip
+    // Display + parse::<f64>).
+    use migsim::cluster::{
+        serve, serve_mix, serve_replay, serve_sharded, serve_sharded_replay, LayoutPreset,
+        PolicyKind, ServeConfig, ShardServeConfig,
+    };
+    use migsim::workload::trace::JobTrace;
+    let cfg = ServeConfig {
+        gpus: 3,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: 1.5,
+        jobs: 35,
+        deadline_s: 30.0,
+        reconfig: true,
+        seed: 0xBEEF,
+        workload_scale: 0.05,
+    };
+    let synth = serve(&cfg).unwrap();
+    let trace = JobTrace::poisson(cfg.jobs, 1.0 / cfg.arrival_rate_hz, &serve_mix(), cfg.seed);
+    let path = std::env::temp_dir().join(format!(
+        "migsim-int-replay-trace-{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&path, trace.to_json().pretty()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let reloaded = JobTrace::from_json(&Json::parse(&text).unwrap()).unwrap();
+    let replay = serve_replay(&cfg, &reloaded).unwrap();
+    assert_eq!(
+        synth.to_json().pretty(),
+        replay.to_json().pretty(),
+        "replayed trace must reproduce the synthetic run"
+    );
+    // The sharded path replays the same file identically too.
+    let scfg = ShardServeConfig::new(cfg, 3, 2);
+    let sharded_synth = serve_sharded(&scfg).unwrap();
+    let sharded_replay = serve_sharded_replay(&scfg, &reloaded).unwrap();
+    assert_eq!(
+        sharded_synth.to_json().pretty(),
+        sharded_replay.to_json().pretty()
+    );
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
 fn indexed_serve_matches_naive_oracle_across_policy_layout_seed_grid() {
     // The serving hot path (indexed placement, incremental integrals,
     // memoized dispatch) must reproduce the naive full-rescan oracle's

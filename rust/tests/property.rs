@@ -2,7 +2,9 @@
 //! deterministic PRNG drives randomized case generation with fixed seeds
 //! — failures reproduce exactly).
 
-use migsim::cluster::{serve, LayoutPreset, PolicyKind, ServeConfig};
+use migsim::cluster::{
+    serve, serve_sharded, LayoutPreset, PolicyKind, RouteKind, ServeConfig, ShardServeConfig,
+};
 use migsim::coordinator::corun::water_fill;
 use migsim::gpu::{GpuSpec, GpuUsage, PowerModel, PowerState};
 use migsim::mig::{profile::ALL_PROFILES, MigManager};
@@ -175,6 +177,70 @@ fn cluster_serve_is_deterministic_for_a_fixed_seed() {
     })
     .unwrap();
     assert_ne!(a.to_json().compact(), c.to_json().compact());
+}
+
+#[test]
+fn sharded_serve_properties_under_random_configs() {
+    // Randomized shard-count × route × forward × seed configurations:
+    // 1. the merged report is bit-identical at 1 vs 2 worker threads;
+    // 2. every job resolves exactly once globally (handoffs neither lose
+    //    nor duplicate jobs);
+    // 3. per-shard handoff flows balance (Σ in == Σ out == total), i.e.
+    //    cross-shard dispatch conserves jobs at equal timestamps too.
+    let mut rng = Rng::new(0x5AAD);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig];
+    for case in 0..10 {
+        let nodes = 1 + rng.below(4) as u32;
+        let base = ServeConfig {
+            gpus: nodes + rng.below(5) as u32,
+            policy: *rng.choose(&policies),
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 3.0),
+            jobs: 20 + rng.below(25) as u32,
+            deadline_s: 12.0 + rng.range(0.0, 20.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+        };
+        let mut scfg = ShardServeConfig::new(base, nodes, 1);
+        scfg.route = if rng.chance(0.5) {
+            RouteKind::RoundRobin
+        } else {
+            RouteKind::LeastLoaded
+        };
+        scfg.forward = rng.chance(0.7);
+        scfg.lookahead_s = 0.5 + rng.range(0.0, 4.0);
+        let a = serve_sharded(&scfg).unwrap();
+        let b = serve_sharded(&ShardServeConfig {
+            threads: 2,
+            ..scfg.clone()
+        })
+        .unwrap();
+        assert_eq!(
+            a.report.to_json().compact(),
+            b.report.to_json().compact(),
+            "case {case}: thread count changed the report ({scfg:?})"
+        );
+        assert_eq!(a.handoffs, b.handoffs, "case {case}");
+        let rep = &a.report;
+        assert_eq!(
+            rep.completed + rep.expired + rep.rejected,
+            rep.jobs,
+            "case {case}: jobs lost or duplicated ({scfg:?})"
+        );
+        let inn: u32 = a.shards.iter().map(|s| s.handoffs_in).sum();
+        let out: u32 = a.shards.iter().map(|s| s.handoffs_out).sum();
+        assert_eq!(inn, a.handoffs, "case {case}");
+        assert_eq!(out, a.handoffs, "case {case}");
+        if !scfg.forward || nodes == 1 {
+            assert_eq!(a.handoffs, 0, "case {case}: forwarding was disabled");
+        }
+    }
 }
 
 #[test]
