@@ -44,9 +44,11 @@ fn main() {
     // A loaded steady-state fleet: every GPU fully busy except the last,
     // so naive first-fit cannot shortcut on slot (0, 0).
     let mut fleet = Fleet::new(gpus, LayoutPreset::Mixed).unwrap();
+    let mut job = 0u32;
     for g in 0..(gpus as usize - 1) {
         for s in 0..fleet.gpus[g].slots.len() {
-            fleet.start_job(g, s, 0, 0.0, 1e9);
+            fleet.start_job(g, s, job, 0.0, 1e9, 0.5);
+            job += 1;
         }
     }
 
@@ -106,6 +108,68 @@ fn main() {
         }
     }
 
+    // Batched (MPS-within-MIG) placement: same loaded regime at batch 4
+    // with every occupied slot holding one resident, so each decision
+    // walks the per-(profile, occupancy) classes and the memory gate.
+    const BATCH: u32 = 4;
+    let mut bfleet = Fleet::with_batch(gpus, LayoutPreset::Mixed, BATCH).unwrap();
+    let mut job = 0u32;
+    for g in 0..(gpus as usize - 1) {
+        for s in 0..bfleet.gpus[g].slots.len() {
+            bfleet.start_job(g, s, job, 0.0, 1e9, 0.5);
+            job += 1;
+        }
+    }
+    for policy in policies {
+        let mut planner = Planner::with_batch(0.05, BATCH);
+        for app in APPS {
+            black_box(planner.place(&bfleet, app, policy));
+            black_box(planner.place_scan(&bfleet, app, policy));
+        }
+        let warm = b
+            .bench_with_work(
+                &format!("place_batch{BATCH}/warm_{}", policy.label()),
+                Some(APPS.len() as f64),
+                "decisions",
+                || {
+                    let mut acc = 0usize;
+                    for app in APPS {
+                        if planner.place(&bfleet, app, policy).is_some() {
+                            acc += 1;
+                        }
+                    }
+                    acc
+                },
+            )
+            .cloned();
+        let naive = b
+            .bench_with_work(
+                &format!("place_batch{BATCH}/naive_{}", policy.label()),
+                Some(APPS.len() as f64),
+                "decisions",
+                || {
+                    let mut acc = 0usize;
+                    for app in APPS {
+                        if planner.place_scan(&bfleet, app, policy).is_some() {
+                            acc += 1;
+                        }
+                    }
+                    acc
+                },
+            )
+            .cloned();
+        if let (Some(warm), Some(naive)) = (warm, naive) {
+            let (wi, ni) = (ns_per_work(&warm), ns_per_work(&naive));
+            let mut o = Json::obj();
+            o.set("policy", policy.label().as_str())
+                .set("batch", BATCH)
+                .set("indexed_ns_per_decision", wi)
+                .set("naive_ns_per_decision", ni)
+                .set("speedup", ni / wi.max(1e-12));
+            decisions.push(o);
+        }
+    }
+
     // Cold cost-model evaluation (runtime + rates for app x profile).
     b.bench_with_work("place/cold_cost_model", Some(APPS.len() as f64), "evals", || {
         let mut planner = Planner::new(0.05);
@@ -132,9 +196,12 @@ fn main() {
         max_iters: 8,
     });
     let mut serve_results = Vec::new();
-    for (tag, policy) in [
-        ("first_fit", PolicyKind::FirstFit),
-        ("offload_aware", PolicyKind::OffloadAware { alpha_centi: 10 }),
+    for (tag, policy, batch) in [
+        ("first_fit", PolicyKind::FirstFit, 1u32),
+        ("offload_aware", PolicyKind::OffloadAware { alpha_centi: 10 }, 1),
+        // End-to-end batched serving: the same stream with 4-deep
+        // MPS-within-MIG co-residency.
+        ("offload_aware_b4", PolicyKind::OffloadAware { alpha_centi: 10 }, 4),
     ] {
         let cfg = ServeConfig {
             gpus,
@@ -146,6 +213,7 @@ fn main() {
             reconfig: true,
             seed: 7,
             workload_scale: 0.05,
+            batch,
         };
         let report = serve(&cfg).unwrap();
         let res = mb
@@ -159,6 +227,7 @@ fn main() {
         if let Some(res) = res {
             let mut o = Json::obj();
             o.set("policy", policy.label().as_str())
+                .set("batch", cfg.batch)
                 .set("gpus", cfg.gpus)
                 .set("jobs", cfg.jobs)
                 .set("completed", report.completed)

@@ -47,6 +47,7 @@ fn main() {
         reconfig: true,
         seed: 7,
         workload_scale: 0.05,
+        batch: 1,
     };
 
     // Unsharded single-loop baseline: one queue, one clock, one core —

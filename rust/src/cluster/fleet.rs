@@ -2,6 +2,16 @@
 //! layout (a list of GI profiles validated against the slice budget) whose
 //! instances act as serving slots.
 //!
+//! ## Slot-level continuous batching (MPS-within-MIG)
+//!
+//! A slot hosts up to `batch` co-resident jobs under MPS semantics (the
+//! paper's `MigSharedGi`-style sharing, applied inside one instance): each
+//! resident keeps running until its own completion, and the slice's
+//! memory must hold every resident's footprint plus a per-process context
+//! (§IV-B). `batch = 1` is *exactly* the classic one-job-per-slot system —
+//! every index, counter and report it produces is bit-identical to the
+//! pre-batching code.
+//!
 //! A GPU can be *repartitioned* while fully idle (the §II-B3 static-
 //! configuration constraint, lifted to the fleet level: reconfiguration is
 //! allowed, but only on a drained GPU and only through layouts that the
@@ -16,17 +26,22 @@
 //!
 //! `Fleet` maintains a `FleetIndex` alongside the raw GPUs so the serving
 //! hot path is O(changed state), not O(fleet):
-//! - per-`ProfileId` idle-slot sets in deterministic `(gpu, slot)` order —
-//!   a placement decision becomes a walk over ≤6 profile classes instead
-//!   of a full `gpus × slots` scan;
+//! - per-`(ProfileId, occupancy)` open-slot sets in deterministic
+//!   `(gpu, slot)` order — a placement decision becomes a walk over
+//!   ≤ `6 × batch` co-residency classes instead of a full `gpus × slots`
+//!   scan (`open[m][p]` holds slots of profile `p` with exactly `m`
+//!   residents; full slots — `m == batch` — are in no set);
 //! - the set of fully-idle, non-reconfiguring GPUs (the reconfiguration
 //!   planner's candidates);
 //! - per-profile effective-layout GPU counts (the O(classes)
 //!   `fits_current_layouts` guard);
-//! - a live fleet busy-SM counter (the utilization integral);
+//! - a live fleet busy-SM counter (the utilization integral; a slot's SMs
+//!   count busy while it has *any* resident — MPS shares the SMs, it does
+//!   not partition them);
 //! - an availability *epoch* that bumps whenever capacity comes back
-//!   (job finish, reconfig completion), so the dispatcher can memoize
-//!   placement failures until the fleet could possibly satisfy them.
+//!   (a resident finishing frees a seat, reconfig completion frees a
+//!   GPU), so the dispatcher can memoize placement failures until the
+//!   fleet could possibly satisfy them.
 //!
 //! Mutations must flow through the `Fleet` methods (`start_job`,
 //! `finish_job`, `begin_reconfig`, `finish_reconfig`); mutating
@@ -40,23 +55,31 @@ use crate::mig::MigManager;
 use anyhow::{bail, ensure};
 use std::collections::BTreeSet;
 
-/// What a serving slot (one MIG instance) is doing.
+/// Largest supported per-slot co-residency (the paper's co-run studies
+/// share one GI between at most seven clients — `Scheme::MigSharedGi`
+/// tops out at 7×1c.7g).
+pub const MAX_BATCH: u32 = 7;
+
+/// One job resident on a serving slot.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub enum SlotState {
-    Idle,
-    Busy {
-        job: u32,
-        started_s: f64,
-        until_s: f64,
-    },
+pub struct Resident {
+    pub job: u32,
+    pub started_s: f64,
+    pub until_s: f64,
+    /// Memory charged to the slice for this job: resident footprint after
+    /// any offloading, plus the per-process MIG context (GiB).
+    pub charged_gib: f64,
 }
 
-/// One MIG instance acting as a serving slot.
+/// One MIG instance acting as a serving slot for up to `Fleet::batch`
+/// co-resident jobs.
 #[derive(Debug, Clone)]
 pub struct Slot {
     pub profile: GiProfile,
-    pub state: SlotState,
-    /// Cumulative busy time (slot-seconds of service).
+    /// Co-resident jobs, in admission order.
+    pub residents: Vec<Resident>,
+    /// Cumulative per-job service time (job-seconds; may exceed wall time
+    /// when residents overlap).
     pub busy_accum_s: f64,
 }
 
@@ -64,13 +87,40 @@ impl Slot {
     fn new(profile_id: ProfileId) -> Slot {
         Slot {
             profile: GiProfile::get(profile_id),
-            state: SlotState::Idle,
+            residents: Vec::new(),
             busy_accum_s: 0.0,
         }
     }
 
     pub fn is_idle(&self) -> bool {
-        self.state == SlotState::Idle
+        self.residents.is_empty()
+    }
+
+    /// Number of co-resident jobs.
+    pub fn occupancy(&self) -> usize {
+        self.residents.len()
+    }
+
+    /// Memory charged by the current residents (GiB). Recomputed from the
+    /// resident list on demand — no incremental float state — so fully
+    /// draining a slot restores exactly 0.0 and the scan paths are
+    /// trivially bit-equal.
+    pub fn charged_gib(&self) -> f64 {
+        self.residents.iter().map(|r| r.charged_gib).sum()
+    }
+
+    /// Batched-slot memory admission: can the slice still charge
+    /// `need_gib` more (a candidate's resident footprint + per-process
+    /// context)? This is the **single source** of the comparison — the
+    /// indexed walk (`Fleet::first_open_fitting`) and the naive
+    /// `Planner::place_scan` must evaluate the literally identical
+    /// expression for their bit-identity to hold. Exact comparison, no
+    /// epsilon. Callers skip it for empty slots: the cost model's solo
+    /// cap already gated those, and re-checking could disagree with that
+    /// gate by a rounding bit (`batch = 1` must reproduce the unbatched
+    /// system exactly).
+    pub fn fits(&self, need_gib: f64) -> bool {
+        self.charged_gib() + need_gib <= self.profile.mem_gib
     }
 }
 
@@ -161,7 +211,7 @@ pub struct FleetGpu {
     pub pending_layout: Option<Vec<ProfileId>>,
     /// Completed reconfigurations (diagnostics).
     pub reconfigs: u32,
-    /// Live counter of busy slots (maintained by `Fleet`).
+    /// Live counter of occupied slots (≥1 resident; maintained by `Fleet`).
     busy_slots: u32,
     /// Live counter of SMs running jobs (maintained by `Fleet`).
     busy_sms_count: u32,
@@ -187,12 +237,13 @@ impl FleetGpu {
         self.reconfiguring_until.is_some()
     }
 
-    /// True when every slot is idle (a precondition for reconfiguration).
+    /// True when every slot is empty (a precondition for reconfiguration).
     pub fn all_idle(&self) -> bool {
         self.busy_slots == 0
     }
 
-    /// SMs currently running jobs on this GPU (O(1) live counter).
+    /// SMs currently running jobs on this GPU (O(1) live counter). A slot
+    /// counts with any resident — MPS shares SMs, it does not split them.
     pub fn busy_sms(&self) -> u32 {
         self.busy_sms_count
     }
@@ -248,25 +299,30 @@ impl FleetGpu {
 /// docs for what each piece buys the serving hot path.
 #[derive(Debug)]
 struct FleetIndex {
-    /// Idle slots per profile class, in deterministic `(gpu, slot)` order.
+    /// Open slots bucketed by `[occupancy][profile]`, in deterministic
+    /// `(gpu, slot)` order: `open[m][p]` holds slots of profile `p` with
+    /// exactly `m` residents (`m < batch`; full slots are in no set).
     /// Slots of reconfiguring GPUs are excluded (they serve nothing).
-    idle: [BTreeSet<(usize, usize)>; NUM_PROFILES],
+    open: Vec<[BTreeSet<(usize, usize)>; NUM_PROFILES]>,
     /// Fully-idle, non-reconfiguring GPUs (reconfiguration candidates).
     idle_gpus: BTreeSet<usize>,
     /// Number of GPUs whose *effective* layout contains each profile.
     layout_gpus: [u32; NUM_PROFILES],
     /// SMs currently running jobs across the fleet.
     busy_sms: u32,
-    /// Bumped whenever capacity comes back (job finish / reconfig done):
-    /// a placement that failed at epoch E keeps failing while the epoch
-    /// stays E, because every other mutation only removes capacity.
+    /// Bumped whenever capacity comes back (a resident finishing frees a
+    /// seat / reconfig done frees a GPU): a placement that failed at
+    /// epoch E keeps failing while the epoch stays E, because every other
+    /// mutation only removes capacity.
     epoch: u64,
 }
 
 impl FleetIndex {
-    fn new() -> FleetIndex {
+    fn new(batch: u32) -> FleetIndex {
         FleetIndex {
-            idle: std::array::from_fn(|_| BTreeSet::new()),
+            open: (0..batch)
+                .map(|_| std::array::from_fn(|_| BTreeSet::new()))
+                .collect(),
             idle_gpus: BTreeSet::new(),
             layout_gpus: [0; NUM_PROFILES],
             busy_sms: 0,
@@ -298,19 +354,32 @@ impl FleetIndex {
 pub struct Fleet {
     pub gpus: Vec<FleetGpu>,
     pub spec: GpuSpec,
+    /// Max co-resident jobs per slot (1 = classic one-job-per-slot).
+    batch: u32,
     index: FleetIndex,
 }
 
 impl Fleet {
+    /// A classic one-job-per-slot fleet (`batch = 1`).
     pub fn new(gpus: u32, preset: LayoutPreset) -> crate::Result<Fleet> {
+        Fleet::with_batch(gpus, preset, 1)
+    }
+
+    /// A fleet whose slots host up to `batch` co-resident jobs under MPS
+    /// semantics. `batch = 1` reproduces the unbatched system exactly.
+    pub fn with_batch(gpus: u32, preset: LayoutPreset, batch: u32) -> crate::Result<Fleet> {
         ensure!(gpus >= 1, "fleet needs at least one GPU");
+        ensure!(
+            (1..=MAX_BATCH).contains(&batch),
+            "per-slot batch must be 1..={MAX_BATCH}, got {batch}"
+        );
         let gpus = (0..gpus as usize)
             .map(|i| FleetGpu::new(i, preset.layout_for(i)))
             .collect::<crate::Result<Vec<_>>>()?;
-        let mut index = FleetIndex::new();
+        let mut index = FleetIndex::new(batch);
         for (g, gpu) in gpus.iter().enumerate() {
             for (s, slot) in gpu.slots.iter().enumerate() {
-                index.idle[slot.profile.id.index()].insert((g, s));
+                index.open[0][slot.profile.id.index()].insert((g, s));
             }
             index.idle_gpus.insert(g);
             index.adjust_layout_gpus(&gpu.layout, true);
@@ -318,8 +387,14 @@ impl Fleet {
         Ok(Fleet {
             gpus,
             spec: GpuSpec::gh_h100_96gb(),
+            batch,
             index,
         })
+    }
+
+    /// Max co-resident jobs per slot.
+    pub fn batch(&self) -> u32 {
+        self.batch
     }
 
     /// Physical SMs across the fleet.
@@ -338,26 +413,55 @@ impl Fleet {
         self.gpus.iter().map(|n| n.busy_sms_scan()).sum()
     }
 
-    /// Availability epoch: bumps whenever a slot (or a whole GPU) comes
+    /// Availability epoch: bumps whenever a seat (or a whole GPU) comes
     /// back. A placement failure memoized at epoch E stays valid while the
     /// epoch is still E.
     pub fn epoch(&self) -> u64 {
         self.index.epoch
     }
 
-    /// First idle slot of `profile` in `(gpu, slot)` order, excluding
+    /// First *empty* slot of `profile` in `(gpu, slot)` order, excluding
     /// reconfiguring GPUs.
     pub fn first_idle(&self, profile: ProfileId) -> Option<(usize, usize)> {
-        self.index.idle[profile.index()].iter().next().copied()
+        self.index.open[0][profile.index()].iter().next().copied()
     }
 
-    /// Number of idle slots of `profile` (reconfiguring GPUs excluded).
+    /// Number of empty slots of `profile` (reconfiguring GPUs excluded).
     pub fn idle_count(&self, profile: ProfileId) -> usize {
-        self.index.idle[profile.index()].len()
+        self.index.open[0][profile.index()].len()
     }
 
-    /// SMs of idle serving slots (reconfiguring GPUs excluded) — the
-    /// cross-node load-balancing signal. O(profile classes) via the index.
+    /// Number of slots of `profile` holding exactly `occ` residents
+    /// (`occ < batch`; reconfiguring GPUs excluded).
+    pub fn open_count(&self, profile: ProfileId, occ: usize) -> usize {
+        self.index.open[occ][profile.index()].len()
+    }
+
+    /// First slot of `profile` holding exactly `occ` residents — in
+    /// `(gpu, slot)` order, reconfiguring GPUs excluded — whose slice can
+    /// still charge `need_gib` more memory (`Slot::fits`; empty slots
+    /// skip the check — see there).
+    ///
+    /// Worst case this walks the whole `(profile, occ)` set: occupied
+    /// slots whose residents fill the slice (e.g. offloaded jobs at
+    /// their solo cap) stay in the set while failing every memory check,
+    /// so a class probe degrades from O(1) toward O(open slots of the
+    /// class). Bucketing the sets by remaining headroom would restore
+    /// O(1) — a ROADMAP follow-up.
+    pub fn first_open_fitting(
+        &self,
+        profile: ProfileId,
+        occ: usize,
+        need_gib: f64,
+    ) -> Option<(usize, usize)> {
+        self.index.open[occ][profile.index()]
+            .iter()
+            .copied()
+            .find(|&(g, s)| occ == 0 || self.gpus[g].slots[s].fits(need_gib))
+    }
+
+    /// SMs of empty serving slots (reconfiguring GPUs excluded).
+    /// O(profile classes) via the index.
     pub fn idle_slot_sms(&self) -> u32 {
         ALL_PROFILES
             .into_iter()
@@ -365,14 +469,70 @@ impl Fleet {
             .sum()
     }
 
-    /// Memory of the largest idle serving slot (GiB; 0 when nothing is
-    /// idle, reconfiguring GPUs excluded) — the cross-node placement
-    /// compatibility signal. O(profile classes) via the index.
+    /// Open SM-*seats* across the fleet: every non-reconfiguring slot
+    /// contributes `sms × (batch − occupancy)` — the fractional-occupancy
+    /// load signal the cross-node dispatcher balances on. At `batch = 1`
+    /// this is exactly the idle-slot SM count. O(classes × batch).
+    pub fn open_sm_seats(&self) -> u32 {
+        let mut total = 0u32;
+        for (m, sets) in self.index.open.iter().enumerate() {
+            for p in ALL_PROFILES {
+                total += sets[p.index()].len() as u32
+                    * GiProfile::get(p).sms
+                    * (self.batch - m as u32);
+            }
+        }
+        total
+    }
+
+    /// `open_sm_seats` recomputed by a full slot scan — the
+    /// differential-test oracle.
+    pub fn open_sm_seats_scan(&self) -> u32 {
+        self.gpus
+            .iter()
+            .filter(|g| !g.reconfiguring())
+            .flat_map(|g| g.slots.iter())
+            .map(|s| s.profile.sms * (self.batch - s.occupancy() as u32))
+            .sum()
+    }
+
+    /// Memory of the largest *empty* serving slot (GiB; 0 when nothing is
+    /// idle, reconfiguring GPUs excluded). O(profile classes).
     pub fn largest_idle_slot_gib(&self) -> f64 {
         ALL_PROFILES
             .into_iter()
             .filter(|&p| self.idle_count(p) > 0)
             .map(|p| GiProfile::get(p).mem_gib)
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Memory of the largest slot that can still accept a co-resident
+    /// (any occupancy `< batch`; GiB; 0 when every slot is full or
+    /// reconfiguring) — the cross-node placement-compatibility signal
+    /// under batching. At `batch = 1` this equals `largest_idle_slot_gib`
+    /// exactly. O(classes × batch).
+    pub fn largest_open_slot_gib(&self) -> f64 {
+        ALL_PROFILES
+            .into_iter()
+            .filter(|&p| {
+                self.index
+                    .open
+                    .iter()
+                    .any(|sets| !sets[p.index()].is_empty())
+            })
+            .map(|p| GiProfile::get(p).mem_gib)
+            .fold(0.0f64, f64::max)
+    }
+
+    /// `largest_open_slot_gib` recomputed by a full slot scan — the
+    /// differential-test oracle.
+    pub fn largest_open_slot_gib_scan(&self) -> f64 {
+        self.gpus
+            .iter()
+            .filter(|g| !g.reconfiguring())
+            .flat_map(|g| g.slots.iter())
+            .filter(|s| (s.occupancy() as u32) < self.batch)
+            .map(|s| s.profile.mem_gib)
             .fold(0.0f64, f64::max)
     }
 
@@ -388,52 +548,82 @@ impl Fleet {
         self.index.idle_gpus.iter().copied()
     }
 
-    /// Mark a slot busy with `job` until `until_s`.
-    pub fn start_job(&mut self, gpu: usize, slot: usize, job: u32, now: f64, until_s: f64) {
+    /// Admit `job` onto a slot seat until `until_s`, charging
+    /// `charged_gib` (resident footprint + per-process context) against
+    /// the slice's memory. The slot must have a free seat; memory-fit is
+    /// the placement policy's responsibility (`first_open_fitting`).
+    pub fn start_job(
+        &mut self,
+        gpu: usize,
+        slot: usize,
+        job: u32,
+        now: f64,
+        until_s: f64,
+        charged_gib: f64,
+    ) {
+        let batch = self.batch as usize;
         let g = &mut self.gpus[gpu];
         let s = &mut g.slots[slot];
-        assert!(s.is_idle(), "placing onto a busy slot");
-        s.state = SlotState::Busy {
+        let occ = s.residents.len();
+        assert!(occ < batch, "placing onto a full slot");
+        debug_assert!(
+            occ == 0 || s.charged_gib() + charged_gib <= s.profile.mem_gib + 1e-9,
+            "slot memory overcommitted"
+        );
+        s.residents.push(Resident {
             job,
             started_s: now,
             until_s,
-        };
+            charged_gib,
+        });
         let sms = s.profile.sms;
         let pid = s.profile.id;
-        g.busy_slots += 1;
-        g.busy_sms_count += sms;
-        self.index.busy_sms += sms;
-        self.index.idle[pid.index()].remove(&(gpu, slot));
+        if occ == 0 {
+            g.busy_slots += 1;
+            g.busy_sms_count += sms;
+            self.index.busy_sms += sms;
+        }
+        self.index.open[occ][pid.index()].remove(&(gpu, slot));
+        if occ + 1 < batch {
+            self.index.open[occ + 1][pid.index()].insert((gpu, slot));
+        }
         self.index.idle_gpus.remove(&gpu);
     }
 
-    /// Free a slot; returns the job that was running there.
-    pub fn finish_job(&mut self, gpu: usize, slot: usize, now: f64) -> Option<u32> {
+    /// Remove resident `job` from a slot; returns whether it was found
+    /// (false makes a double finish a no-op).
+    pub fn finish_job(&mut self, gpu: usize, slot: usize, job: u32, now: f64) -> bool {
+        let batch = self.batch as usize;
         let g = &mut self.gpus[gpu];
         let s = &mut g.slots[slot];
-        let (job, started_s) = match s.state {
-            SlotState::Busy { job, started_s, .. } => (job, started_s),
-            SlotState::Idle => return None,
+        let occ = s.residents.len();
+        let pos = match s.residents.iter().position(|r| r.job == job) {
+            Some(p) => p,
+            None => return false,
         };
-        s.busy_accum_s += now - started_s;
-        s.state = SlotState::Idle;
+        let r = s.residents.remove(pos);
+        s.busy_accum_s += now - r.started_s;
         let sms = s.profile.sms;
         let pid = s.profile.id;
-        g.busy_slots -= 1;
-        g.busy_sms_count -= sms;
-        let gpu_idle = g.busy_slots == 0 && !g.reconfiguring();
-        self.index.busy_sms -= sms;
-        self.index.idle[pid.index()].insert((gpu, slot));
-        if gpu_idle {
-            self.index.idle_gpus.insert(gpu);
+        if occ < batch {
+            self.index.open[occ][pid.index()].remove(&(gpu, slot));
+        }
+        self.index.open[occ - 1][pid.index()].insert((gpu, slot));
+        if occ == 1 {
+            g.busy_slots -= 1;
+            g.busy_sms_count -= sms;
+            self.index.busy_sms -= sms;
+            if g.busy_slots == 0 && !g.reconfiguring() {
+                self.index.idle_gpus.insert(gpu);
+            }
         }
         self.index.epoch += 1;
-        Some(job)
+        true
     }
 
     /// Start repartitioning `gpu` to `target` (index-maintaining wrapper
     /// around `FleetGpu::begin_reconfig`). While the reconfiguration is in
-    /// flight the GPU's slots leave the idle index — it serves nothing.
+    /// flight the GPU's slots leave the open index — it serves nothing.
     pub fn begin_reconfig(
         &mut self,
         gpu: usize,
@@ -442,9 +632,9 @@ impl Fleet {
     ) -> crate::Result<()> {
         self.gpus[gpu].begin_reconfig(target, until_s)?;
         // Success implies the GPU was fully idle: every slot was in the
-        // idle index and comes out of it now.
+        // occupancy-0 open set and comes out of it now.
         for (s, slot) in self.gpus[gpu].slots.iter().enumerate() {
-            self.index.idle[slot.profile.id.index()].remove(&(gpu, s));
+            self.index.open[0][slot.profile.id.index()].remove(&(gpu, s));
         }
         self.index.idle_gpus.remove(&gpu);
         // The effective layout flips from the installed one to the pending
@@ -465,7 +655,7 @@ impl Fleet {
         }
         self.gpus[gpu].finish_reconfig();
         for (s, slot) in self.gpus[gpu].slots.iter().enumerate() {
-            self.index.idle[slot.profile.id.index()].insert((gpu, s));
+            self.index.open[0][slot.profile.id.index()].insert((gpu, s));
         }
         self.index.idle_gpus.insert(gpu);
         self.index.epoch += 1;
@@ -475,7 +665,9 @@ impl Fleet {
     /// slots whose memory cannot directly host the smallest pending job
     /// (`needed_gib` = footprint + context). 0 when nothing is pending or
     /// nothing is idle — idle capacity only counts as fragmented while
-    /// work is actually waiting for it. O(profile classes) via the index.
+    /// work is actually waiting for it. Partially-occupied slots are not
+    /// idle capacity: their SMs are already serving. O(profile classes)
+    /// via the index.
     pub fn fragmentation(&self, needed_gib: Option<f64>) -> f64 {
         let needed = match needed_gib {
             Some(n) => n,
@@ -484,7 +676,7 @@ impl Fleet {
         let mut idle_sms = 0u32;
         let mut stranded_sms = 0u32;
         for pid in ALL_PROFILES {
-            let n = self.index.idle[pid.index()].len() as u32;
+            let n = self.index.open[0][pid.index()].len() as u32;
             if n == 0 {
                 continue;
             }
@@ -541,12 +733,15 @@ mod tests {
         for preset in [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig] {
             let f = Fleet::new(5, preset).unwrap();
             assert_eq!(f.gpus.len(), 5);
+            assert_eq!(f.batch(), 1);
             for n in &f.gpus {
                 assert!(!n.slots.is_empty());
                 validate_layout(&n.layout).unwrap();
             }
         }
         assert!(Fleet::new(0, LayoutPreset::Mixed).is_err());
+        assert!(Fleet::with_batch(1, LayoutPreset::Mixed, 0).is_err());
+        assert!(Fleet::with_batch(1, LayoutPreset::Mixed, MAX_BATCH + 1).is_err());
     }
 
     #[test]
@@ -569,23 +764,64 @@ mod tests {
     fn job_lifecycle_accounting() {
         let mut f = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
         assert_eq!(f.busy_sms(), 0);
-        f.start_job(0, 2, 42, 1.0, 5.0);
+        f.start_job(0, 2, 42, 1.0, 5.0, 0.5);
         assert_eq!(f.busy_sms(), 16);
         assert!(!f.gpus[0].all_idle());
-        assert_eq!(f.finish_job(0, 2, 5.0), Some(42));
+        assert!(f.finish_job(0, 2, 42, 5.0));
         assert_eq!(f.busy_sms(), 0);
         assert!((f.gpus[0].slots[2].busy_accum_s - 4.0).abs() < 1e-12);
-        assert_eq!(f.finish_job(0, 2, 5.0), None, "double finish is a no-op");
+        assert!(!f.finish_job(0, 2, 42, 5.0), "double finish is a no-op");
+    }
+
+    #[test]
+    fn batched_slot_lifecycle_and_memory_accounting() {
+        let mut f = Fleet::with_batch(1, LayoutPreset::AllBig, 3).unwrap();
+        assert_eq!(f.batch(), 3);
+        assert_eq!(f.open_sm_seats(), 132 * 3);
+        f.start_job(0, 0, 1, 0.0, 10.0, 2.0);
+        // Occupied slot: SMs fully busy, GPU no longer idle, seat count
+        // down by one, still open to co-residents.
+        assert_eq!(f.busy_sms(), 132);
+        assert_eq!(f.open_sm_seats(), 132 * 2);
+        assert_eq!(f.idle_gpus().count(), 0);
+        assert_eq!(f.first_idle(P7g96gb), None, "no empty slot left");
+        assert_eq!(f.first_open_fitting(P7g96gb, 1, 3.0), Some((0, 0)));
+        f.start_job(0, 0, 2, 1.0, 8.0, 3.0);
+        assert_eq!(f.gpus[0].slots[0].occupancy(), 2);
+        assert!((f.gpus[0].slots[0].charged_gib() - 5.0).abs() < 1e-12);
+        assert_eq!(f.busy_sms(), 132, "co-residents share the same SMs");
+        assert_eq!(f.open_sm_seats(), 132);
+        // Memory gate: a co-resident that would overflow the slice is not
+        // offered the slot.
+        assert_eq!(f.first_open_fitting(P7g96gb, 2, 90.0), None);
+        assert_eq!(f.first_open_fitting(P7g96gb, 2, 80.0), Some((0, 0)));
+        f.start_job(0, 0, 3, 1.5, 9.0, 1.0);
+        assert_eq!(f.open_sm_seats(), 0, "slot full");
+        // Finishing the middle resident frees a seat and bumps the epoch.
+        let e = f.epoch();
+        assert!(f.finish_job(0, 0, 2, 4.0));
+        assert!(f.epoch() > e);
+        assert_eq!(f.open_sm_seats(), 132);
+        assert_eq!(f.gpus[0].slots[0].occupancy(), 2);
+        assert!((f.gpus[0].slots[0].charged_gib() - 3.0).abs() < 1e-12);
+        // Draining restores the empty-slot state exactly.
+        assert!(f.finish_job(0, 0, 1, 10.0));
+        assert!(f.finish_job(0, 0, 3, 9.0));
+        assert_eq!(f.busy_sms(), 0);
+        assert_eq!(f.gpus[0].slots[0].charged_gib(), 0.0, "drained slot charges 0.0 exactly");
+        assert_eq!(f.open_sm_seats(), 132 * 3);
+        assert_eq!(f.first_idle(P7g96gb), Some((0, 0)));
+        assert_eq!(f.idle_gpus().collect::<Vec<_>>(), vec![0]);
     }
 
     #[test]
     fn reconfig_requires_idle_and_validates() {
         let mut f = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
-        f.start_job(0, 0, 1, 0.0, 10.0);
+        f.start_job(0, 0, 1, 0.0, 10.0, 0.5);
         assert!(f
             .begin_reconfig(0, vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 5.0)
             .is_err());
-        f.finish_job(0, 0, 10.0);
+        f.finish_job(0, 0, 1, 10.0);
         // Invalid target rejected even on an idle GPU.
         assert!(f.begin_reconfig(0, vec![P4g48gb, P4g48gb], 12.0).is_err());
         f.begin_reconfig(0, vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 12.0)
@@ -612,20 +848,20 @@ mod tests {
         assert_eq!(f.fragmentation(None), 0.0);
         // All busy: nothing idle to strand.
         for i in 0..7 {
-            f.start_job(0, i, i as u32, 0.0, 1.0);
+            f.start_job(0, i, i as u32, 0.0, 1.0, 0.5);
         }
         assert_eq!(f.fragmentation(Some(16.0)), 0.0);
     }
 
-    /// Scan-derived truth for the idle index (first idle slot of a
-    /// profile, excluding reconfiguring GPUs).
-    fn first_idle_scan(f: &Fleet, pid: ProfileId) -> Option<(usize, usize)> {
+    /// Scan-derived truth for the open index (first slot of a profile at
+    /// an exact occupancy, excluding reconfiguring GPUs; no memory check).
+    fn first_open_scan(f: &Fleet, pid: ProfileId, occ: usize) -> Option<(usize, usize)> {
         for (g, gpu) in f.gpus.iter().enumerate() {
             if gpu.reconfiguring() {
                 continue;
             }
             for (s, slot) in gpu.slots.iter().enumerate() {
-                if slot.is_idle() && slot.profile.id == pid {
+                if slot.occupancy() == occ && slot.profile.id == pid {
                     return Some((g, s));
                 }
             }
@@ -636,7 +872,24 @@ mod tests {
     fn assert_index_matches_scan(f: &Fleet) {
         assert_eq!(f.busy_sms(), f.busy_sms_scan());
         for pid in ALL_PROFILES {
-            assert_eq!(f.first_idle(pid), first_idle_scan(f, pid), "{pid:?}");
+            assert_eq!(f.first_idle(pid), first_open_scan(f, pid, 0), "{pid:?}");
+            for occ in 0..f.batch() as usize {
+                let count_scan = f
+                    .gpus
+                    .iter()
+                    .filter(|g| !g.reconfiguring())
+                    .flat_map(|g| g.slots.iter())
+                    .filter(|s| s.occupancy() == occ && s.profile.id == pid)
+                    .count();
+                assert_eq!(f.open_count(pid, occ), count_scan, "{pid:?} occ={occ}");
+                // A large need never matches an occupied slot; need 0.0
+                // accepts any open slot — both must agree with the scan.
+                assert_eq!(
+                    f.first_open_fitting(pid, occ, 0.0),
+                    first_open_scan(f, pid, occ),
+                    "{pid:?} occ={occ}"
+                );
+            }
         }
         for needed in [0.5, 12.0, 24.0, 47.0, 95.0] {
             assert_eq!(
@@ -662,6 +915,14 @@ mod tests {
             .map(|s| s.profile.sms)
             .sum();
         assert_eq!(f.idle_slot_sms(), idle_sms_scan);
+        assert_eq!(f.open_sm_seats(), f.open_sm_seats_scan());
+        assert_eq!(f.largest_open_slot_gib(), f.largest_open_slot_gib_scan());
+        if f.batch() == 1 {
+            // The batched headroom signals must degenerate to the idle
+            // signals exactly — the two API families may never drift.
+            assert_eq!(f.open_sm_seats(), f.idle_slot_sms());
+            assert_eq!(f.largest_open_slot_gib(), f.largest_idle_slot_gib());
+        }
         let largest_scan = f
             .gpus
             .iter()
@@ -682,46 +943,66 @@ mod tests {
 
     #[test]
     fn index_tracks_scan_truth_through_randomized_lifecycle() {
-        let mut rng = crate::util::Rng::new(0x1D7E);
-        let mut f = Fleet::new(4, LayoutPreset::Mixed).unwrap();
-        let mut epoch = f.epoch();
-        for step in 0..400u32 {
-            let g = rng.below(4) as usize;
-            match rng.below(4) {
-                0 => {
-                    // Start a job on the first idle slot of GPU g.
-                    if !f.gpus[g].reconfiguring() {
+        for batch in [1u32, 3] {
+            let mut rng = crate::util::Rng::new(0x1D7E + batch as u64);
+            let mut f = Fleet::with_batch(4, LayoutPreset::Mixed, batch).unwrap();
+            let mut epoch = f.epoch();
+            let mut next_job = 0u32;
+            for step in 0..400u32 {
+                let g = rng.below(4) as usize;
+                match rng.below(4) {
+                    0 => {
+                        // Start a job on the first open seat of GPU g.
+                        if !f.gpus[g].reconfiguring() {
+                            if let Some(s) = f.gpus[g]
+                                .slots
+                                .iter()
+                                .position(|s| (s.occupancy() as u32) < batch)
+                            {
+                                f.start_job(
+                                    g,
+                                    s,
+                                    next_job,
+                                    step as f64,
+                                    step as f64 + 5.0,
+                                    0.25,
+                                );
+                                next_job += 1;
+                            }
+                        }
+                    }
+                    1 => {
+                        // Finish the oldest resident of the first occupied
+                        // slot of GPU g.
                         if let Some(s) =
-                            f.gpus[g].slots.iter().position(|s| s.is_idle())
+                            f.gpus[g].slots.iter().position(|s| !s.is_idle())
                         {
-                            f.start_job(g, s, step, step as f64, step as f64 + 5.0);
+                            let job = f.gpus[g].slots[s].residents[0].job;
+                            let before = f.epoch();
+                            assert!(f.finish_job(g, s, job, step as f64));
+                            assert!(f.epoch() > before, "finish must bump the epoch");
+                        }
+                    }
+                    2 => {
+                        let target = class_layout(ALL_PROFILES[rng.below(6) as usize]);
+                        let _ = f.begin_reconfig(g, target, step as f64 + 3.0);
+                    }
+                    _ => {
+                        let was = f.gpus[g].reconfiguring();
+                        f.finish_reconfig(g);
+                        if was {
+                            assert!(f.epoch() > epoch, "reconfig done must bump the epoch");
                         }
                     }
                 }
-                1 => {
-                    // Finish the first busy slot of GPU g.
-                    if let Some(s) =
-                        f.gpus[g].slots.iter().position(|s| !s.is_idle())
-                    {
-                        let before = f.epoch();
-                        f.finish_job(g, s, step as f64);
-                        assert!(f.epoch() > before, "finish must bump the epoch");
+                epoch = f.epoch();
+                for gpu in &f.gpus {
+                    for s in &gpu.slots {
+                        assert!((s.occupancy() as u32) <= batch, "occupancy over batch");
                     }
                 }
-                2 => {
-                    let target = class_layout(ALL_PROFILES[rng.below(6) as usize]);
-                    let _ = f.begin_reconfig(g, target, step as f64 + 3.0);
-                }
-                _ => {
-                    let was = f.gpus[g].reconfiguring();
-                    f.finish_reconfig(g);
-                    if was {
-                        assert!(f.epoch() > epoch, "reconfig done must bump the epoch");
-                    }
-                }
+                assert_index_matches_scan(&f);
             }
-            epoch = f.epoch();
-            assert_index_matches_scan(&f);
         }
     }
 }

@@ -1,27 +1,52 @@
-//! Placement policies: which idle MIG slot should an arriving job get?
+//! Placement policies: which serving-slot seat should an arriving job get?
 //!
 //! Three policies, in increasing awareness:
-//! - `FirstFit`: first idle slot whose memory directly fits the job.
-//! - `BestFit`: the *smallest* fitting idle slot — classic best-fit, which
-//!   minimizes SM fragmentation by keeping big slices free for big jobs.
-//! - `OffloadAware`: reward-maximizing admission (§VI-B). Every idle slot
-//!   is a candidate — directly when the job fits, via an NVLink-C2C
-//!   `OffloadPlan` when it does not — and the slot with the highest reward
-//!   at the policy's α wins. This is what turns "queue for a big slice"
-//!   into "run now on a small slice, spill the cold data over C2C".
+//! - `FirstFit`: first feasible seat — an empty slot whose memory directly
+//!   fits the job, or (under batching) an occupied slot with a free seat
+//!   and enough memory headroom.
+//! - `BestFit`: the seat on the *smallest* fitting profile — classic
+//!   best-fit, which minimizes SM fragmentation by keeping big slices
+//!   free for big jobs; within a profile it prefers the *most occupied*
+//!   open slot (densest packing keeps empty slots free).
+//! - `OffloadAware`: reward-maximizing admission (§VI-B). Every feasible
+//!   seat is a candidate — directly when the job fits, via an NVLink-C2C
+//!   `OffloadPlan` when it does not — and the seat with the highest reward
+//!   at the policy's α wins. Co-residency trades performance (the job
+//!   runs slower) against SM waste (a packed slice strands fewer SMs),
+//!   so well-scaling apps keep preferring empty slices while poorly
+//!   scaling ones may score higher co-resident — exactly the §VI-B
+//!   arbitration, now over co-residency classes too.
+//!
+//! ## The contention cost model (MPS-within-MIG)
+//!
+//! The modelled cost of a placement depends only on the co-residency
+//! class `(app, profile, occupancy)` — never on *which* slot hosts the
+//! job. At occupancy `n` the `n` clients share the slice exactly as the
+//! paper's `Scheme::MigSharedGi` co-runs share one GI: each gets an equal
+//! SM share (the MPS cap model of `sharing::scheme`), an equal share of
+//! the slice's HBM bandwidth pool, and pays the per-co-runner compute
+//! interference measured for shared-GI co-runs; the C2C direct rate
+//! follows the reduced SMs in flight (Table IVb saturation curve). At
+//! `n = 1` every term reduces to the unbatched environment bit-for-bit.
+//! A job's runtime is fixed by the occupancy *at admission* (residents
+//! already running are not re-fit — see ROADMAP follow-ups).
+//!
+//! Memory is the batching gate (`ContextModel`): a seat is only feasible
+//! if the slice still holds every resident's footprint plus a per-process
+//! context after the newcomer joins. Offload plans are computed against
+//! the solo cap, so a spilled job's resident set fills the slice and it
+//! naturally refuses co-residents.
 //!
 //! ## The indexed hot path
 //!
-//! All three policies share one observation: the modelled cost (and hence
-//! the §VI-B reward) of a placement depends only on `(app, profile)` —
-//! never on *which* slot of that profile hosts the job. So a placement
-//! decision reduces to a walk over at most `NUM_PROFILES` (6) profile
-//! classes against the fleet's per-profile idle-slot index
-//! (`Fleet::first_idle`), instead of a full `gpus × slots` scan:
-//! - first-fit: the minimum `(gpu, slot)` among each admissible class's
-//!   first idle slot;
-//! - best-fit: the first admissible class in `ALL_PROFILES` order (which
-//!   ascends by SMs) with any idle slot;
+//! A placement decision reduces to a walk over at most
+//! `NUM_PROFILES × batch` co-residency classes against the fleet's
+//! per-(profile, occupancy) open-slot index (`Fleet::first_open_fitting`),
+//! instead of a full `gpus × slots` scan:
+//! - first-fit: the minimum `(gpu, slot)` among each feasible class's
+//!   first fitting slot;
+//! - best-fit: fold the class-firsts with the scan's strict preference
+//!   (smaller SMs, then higher occupancy, then lower `(gpu, slot)`);
 //! - offload-aware: fold the per-class candidates in `(gpu, slot)` order
 //!   with the same (reward, SMs) preference the naive scan applies per
 //!   slot — provably the same choice, because all slots of a class tie.
@@ -30,18 +55,21 @@
 //! differential-test oracle: for any fleet state both paths return the
 //! identical `(gpu, slot, cost)`.
 //!
-//! The `Planner` memoizes per-(app, profile, offload) costs in a dense
-//! `[AppId::COUNT × NUM_PROFILES × 2]` array (no hashing on the hot
-//! path), per-(app, offload) admissibility bitmasks — the precomputed
-//! profile preference table — and per-(app, profile) rewards at the
-//! policy's α (see `benches/placement.rs`).
+//! The `Planner` memoizes per-(app, profile, offload, occupancy) costs in
+//! a dense `[AppId::COUNT × NUM_PROFILES × 2 × batch]` array (no hashing
+//! on the hot path), per-(app, offload) admissibility bitmasks — the
+//! precomputed profile preference table; admissibility is occupancy-
+//! independent, co-residency only stretches the runtime — and
+//! per-(app, profile, occupancy) rewards at the policy's α (see
+//! `benches/placement.rs`).
 
-use super::fleet::Fleet;
+use super::fleet::{Fleet, MAX_BATCH};
 use crate::gpu::nvlink::{Dir, NvlinkModel};
 use crate::gpu::{pipelines::ALL_PIPELINES, GpuSpec};
 use crate::mig::profile::{GiProfile, ProfileId, ALL_PROFILES, NUM_PROFILES};
 use crate::offload::OffloadPlan;
 use crate::reward::{reward, ConfigEval, GpuTotals};
+use crate::sharing::scheme::{partitions, Scheme};
 use crate::sharing::ContextModel;
 use crate::workload::{apps, AppId, ExecEnv};
 
@@ -89,13 +117,15 @@ impl PolicyKind {
     }
 }
 
-/// The modelled cost of running one app on one profile (possibly with
-/// offloading): service time plus the average activity rates the fleet
-/// power model integrates while the job runs.
+/// The modelled cost of running one app on one profile at one co-residency
+/// (possibly with offloading): service time plus the average activity
+/// rates the fleet power model integrates while the job runs.
 #[derive(Debug, Clone, Copy)]
 pub struct PlacementCost {
     pub runtime_s: f64,
     /// Resident footprint on the instance (GiB), after any offloading.
+    /// Occupancy-independent: the offload plan is sized against the solo
+    /// cap, co-residency only changes how fast the data is consumed.
     pub resident_gib: f64,
     pub offloaded: bool,
     /// Average achieved occupancy on the instance (reward input).
@@ -108,25 +138,32 @@ pub struct PlacementCost {
     pub c2c_tbs: f64,
 }
 
-const N_COST: usize = AppId::COUNT * NUM_PROFILES * 2;
-
 /// Cost evaluator + cache shared by all policies. All memo tables are
-/// dense arrays indexed by `AppId::index` / `ProfileId::index` — the hot
-/// path never hashes.
+/// dense arrays indexed by `AppId::index` / `ProfileId::index` /
+/// occupancy − 1 — the hot path never hashes.
 pub struct Planner {
     spec: GpuSpec,
     nvlink: NvlinkModel,
     ctx_gib: f64,
     scale: f64,
+    /// Max co-resident jobs per slot this planner sizes its tables for
+    /// (must match the fleet it plans over).
+    batch: u32,
+    /// Per-co-runner compute-pipeline interference under shared-GI MPS
+    /// co-residency, pulled from the `Scheme::MigSharedGi` partition model
+    /// — the co-run characterization feeding the cluster cost model.
+    shared_interference: f64,
     /// Outer `Option` = "computed?"; inner = the (possibly impossible)
-    /// placement cost. `[app × profile × offload]`.
+    /// placement cost. `[app × profile × offload × occupancy]`.
     cost_cache: Vec<Option<Option<PlacementCost>>>,
     /// Admissible-profile bitmask per `[app × offload]` — the per-app
     /// profile preference table (bit i ⇔ `ALL_PROFILES[i]` can host).
+    /// Occupancy-independent: co-residency stretches the runtime but
+    /// never flips feasibility.
     admissible: [Option<u8>; AppId::COUNT * 2],
     /// Whole-GPU runtime per app (the P_GPU reward basis).
     full_runtime: [Option<f64>; AppId::COUNT],
-    /// §VI-B rewards `[app × profile]` at `reward_alpha_centi`.
+    /// §VI-B rewards `[app × profile × occupancy]` at `reward_alpha_centi`.
     reward_cache: Vec<Option<f64>>,
     reward_alpha_centi: Option<u32>,
     /// Direct (unscaled) footprint per app, for reconfiguration sizing —
@@ -135,21 +172,38 @@ pub struct Planner {
 }
 
 impl Planner {
+    /// A planner for the classic one-job-per-slot system (`batch = 1`).
     pub fn new(workload_scale: f64) -> Planner {
+        Planner::with_batch(workload_scale, 1)
+    }
+
+    /// A planner sized for slots hosting up to `batch` co-resident jobs.
+    pub fn with_batch(workload_scale: f64, batch: u32) -> Planner {
         assert!(workload_scale > 0.0);
+        assert!(
+            (1..=MAX_BATCH).contains(&batch),
+            "per-slot batch must be 1..={MAX_BATCH}, got {batch}"
+        );
         let mut footprint = [0.0f64; AppId::COUNT];
         for app in apps::all() {
             footprint[app.index()] = apps::model(app).footprint_gib;
         }
+        let spec = GpuSpec::gh_h100_96gb();
+        let shared_interference = partitions(&Scheme::MigSharedGi { copies: 2 }, &spec)
+            .expect("MigSharedGi partition model")[0]
+            .interference;
+        let b = batch as usize;
         Planner {
-            spec: GpuSpec::gh_h100_96gb(),
+            spec,
             nvlink: NvlinkModel::default(),
             ctx_gib: ContextModel::default().mig_per_process_gib,
             scale: workload_scale,
-            cost_cache: vec![None; N_COST],
+            batch,
+            shared_interference,
+            cost_cache: vec![None; AppId::COUNT * NUM_PROFILES * 2 * b],
             admissible: [None; AppId::COUNT * 2],
             full_runtime: [None; AppId::COUNT],
-            reward_cache: vec![None; AppId::COUNT * NUM_PROFILES],
+            reward_cache: vec![None; AppId::COUNT * NUM_PROFILES * b],
             reward_alpha_centi: None,
             footprint,
         }
@@ -159,6 +213,11 @@ impl Planner {
         self.ctx_gib
     }
 
+    /// Max co-resident jobs per slot this planner is sized for.
+    pub fn batch(&self) -> u32 {
+        self.batch
+    }
+
     /// Direct memory footprint of `app` (GiB) — the reconfiguration-sizing
     /// input.
     pub fn footprint_gib(&self, app: AppId) -> f64 {
@@ -166,25 +225,41 @@ impl Planner {
     }
 
     #[inline]
-    fn cost_idx(app: AppId, profile: ProfileId, allow_offload: bool) -> usize {
-        (app.index() * NUM_PROFILES + profile.index()) * 2 + allow_offload as usize
+    fn cost_idx(&self, app: AppId, profile: ProfileId, allow_offload: bool, occ: u32) -> usize {
+        ((app.index() * NUM_PROFILES + profile.index()) * 2 + allow_offload as usize)
+            * self.batch as usize
+            + (occ as usize - 1)
     }
 
-    /// Cost of running `app` on `profile`. `allow_offload = false` returns
-    /// `None` unless the footprint fits directly; `true` additionally
-    /// tries an `OffloadPlan` (which may still fail: ≥25% must stay
-    /// resident). Memoized.
+    /// Cost of running `app` alone on `profile` — the unbatched
+    /// (occupancy 1) class, which is also the admissibility gate.
     pub fn cost(
         &mut self,
         app: AppId,
         profile: ProfileId,
         allow_offload: bool,
     ) -> Option<PlacementCost> {
-        let i = Self::cost_idx(app, profile, allow_offload);
+        self.cost_at(app, profile, allow_offload, 1)
+    }
+
+    /// Cost of running `app` on `profile` with `occ` co-residents in
+    /// total (itself included; `1..=batch`). `allow_offload = false`
+    /// returns `None` unless the footprint fits directly; `true`
+    /// additionally tries an `OffloadPlan` (which may still fail: ≥25%
+    /// must stay resident). Memoized.
+    pub fn cost_at(
+        &mut self,
+        app: AppId,
+        profile: ProfileId,
+        allow_offload: bool,
+        occ: u32,
+    ) -> Option<PlacementCost> {
+        debug_assert!((1..=self.batch).contains(&occ));
+        let i = self.cost_idx(app, profile, allow_offload, occ);
         if let Some(c) = self.cost_cache[i] {
             return c;
         }
-        let c = self.compute_cost(app, profile, allow_offload);
+        let c = self.compute_cost(app, profile, allow_offload, occ);
         self.cost_cache[i] = Some(c);
         c
     }
@@ -194,6 +269,7 @@ impl Planner {
         app: AppId,
         profile: ProfileId,
         allow_offload: bool,
+        occ: u32,
     ) -> Option<PlacementCost> {
         let prof = GiProfile::get(profile);
         let model = apps::model(app).scaled(self.scale);
@@ -214,15 +290,19 @@ impl Planner {
             .map(|p| p.effective_footprint_gib())
             .unwrap_or(model.footprint_gib);
         let run_model = plan.as_ref().map(|p| p.apply(&model)).unwrap_or(model);
+        // MPS-within-MIG co-residency (`occ` clients on the slice): equal
+        // SM share, equal share of the slice's bandwidth pool, and the
+        // per-co-runner compute interference of shared-GI co-runs. The
+        // C2C direct rate follows the SMs in flight (Table IVb saturation
+        // curve), so it shrinks with the SM share automatically. At
+        // occ = 1 every term reduces to the unbatched environment exactly.
+        let sms = (prof.sms / occ).max(1);
         let env = ExecEnv {
-            sms: prof.sms,
+            sms,
             clock_frac: 1.0,
-            bw_gibs: prof.mem_bw_gibs,
-            // Offloaded data reads travel host→device over the shared C2C
-            // link; the achievable direct rate depends on the SMs in
-            // flight (Table IVb saturation curve).
-            c2c_bw_gibs: self.nvlink.direct_bw_gibs(prof.sms, Dir::H2D),
-            interference: 1.0,
+            bw_gibs: prof.mem_bw_gibs / occ as f64,
+            c2c_bw_gibs: self.nvlink.direct_bw_gibs(sms, Dir::H2D),
+            interference: 1.0 + self.shared_interference * (occ as f64 - 1.0),
             time_share: 1.0,
         };
         let runtime_s =
@@ -260,7 +340,7 @@ impl Planner {
 
     /// Bitmask of profiles that can host `app` (bit i ⇔ `ALL_PROFILES[i]`),
     /// memoized per (app, offload) — the precomputed preference table the
-    /// indexed policies walk.
+    /// indexed policies walk. Occupancy-independent.
     fn admissible_mask(&mut self, app: AppId, allow_offload: bool) -> u8 {
         let i = app.index() * 2 + allow_offload as usize;
         if let Some(m) = self.admissible[i] {
@@ -321,13 +401,15 @@ impl Planner {
         reward(&eval, &totals, alpha).reward
     }
 
-    /// `reward_of` memoized per (app, profile) at a fixed α — the value
-    /// depends on nothing else, so the offload-aware walk reads a dense
-    /// table. Switching α (a different policy instance) flushes the table.
+    /// `reward_of` memoized per (app, profile, occupancy) at a fixed α —
+    /// the value depends on nothing else, so the offload-aware walk reads
+    /// a dense table. Switching α (a different policy instance) flushes
+    /// the table.
     fn cached_reward(
         &mut self,
         app: AppId,
         profile: ProfileId,
+        occ: u32,
         alpha_centi: u32,
         c: &PlacementCost,
     ) -> f64 {
@@ -335,7 +417,8 @@ impl Planner {
             self.reward_cache.iter_mut().for_each(|r| *r = None);
             self.reward_alpha_centi = Some(alpha_centi);
         }
-        let i = app.index() * NUM_PROFILES + profile.index();
+        let i = (app.index() * NUM_PROFILES + profile.index()) * self.batch as usize
+            + (occ as usize - 1);
         if let Some(r) = self.reward_cache[i] {
             return r;
         }
@@ -344,82 +427,120 @@ impl Planner {
         r
     }
 
-    /// Pick an idle slot for `app` under `policy`, via the fleet's
-    /// per-profile idle index: a walk over ≤`NUM_PROFILES` classes.
-    /// Returns `(gpu, slot, cost)`. Deterministic, and bit-identical to
-    /// `place_scan` (ties break toward smaller instances, then lower
-    /// GPU/slot index).
+    /// Pick a slot seat for `app` under `policy`, via the fleet's
+    /// per-(profile, occupancy) open index: a walk over
+    /// ≤ `NUM_PROFILES × batch` co-residency classes. Returns
+    /// `(gpu, slot, cost)` with the cost at the occupancy the job would
+    /// run at. Deterministic, and bit-identical to `place_scan`.
     pub fn place(
         &mut self,
         fleet: &Fleet,
         app: AppId,
         policy: PolicyKind,
     ) -> Option<(usize, usize, PlacementCost)> {
+        debug_assert_eq!(fleet.batch(), self.batch, "planner/fleet batch mismatch");
+        let kmax = fleet.batch() as usize;
         match policy {
             PolicyKind::FirstFit => {
                 let mask = self.admissible_mask(app, false);
-                let mut best: Option<(usize, usize, ProfileId)> = None;
+                let mut best: Option<(usize, usize, ProfileId, u32)> = None;
                 for pid in ALL_PROFILES {
                     if mask & (1 << pid.index()) == 0 {
                         continue;
                     }
-                    if let Some((g, s)) = fleet.first_idle(pid) {
-                        if best.map(|(bg, bs, _)| (g, s) < (bg, bs)).unwrap_or(true) {
-                            best = Some((g, s, pid));
+                    let need = self.cost(app, pid, false).unwrap().resident_gib + self.ctx_gib;
+                    for m in 0..kmax {
+                        if let Some((g, s)) = fleet.first_open_fitting(pid, m, need) {
+                            if best
+                                .map(|(bg, bs, _, _)| (g, s) < (bg, bs))
+                                .unwrap_or(true)
+                            {
+                                best = Some((g, s, pid, m as u32 + 1));
+                            }
                         }
                     }
                 }
-                best.map(|(g, s, pid)| (g, s, self.cost(app, pid, false).unwrap()))
+                best.map(|(g, s, pid, occ)| {
+                    (g, s, self.cost_at(app, pid, false, occ).unwrap())
+                })
             }
             PolicyKind::BestFit => {
                 let mask = self.admissible_mask(app, false);
-                // ALL_PROFILES ascends by SMs: the first admissible class
-                // with an idle slot *is* the best fit.
+                // ALL_PROFILES ascends by SMs; within a profile prefer the
+                // most occupied open slot (densest packing keeps empty
+                // slots free), then the lowest (gpu, slot). Folding the
+                // class-firsts with the scan's strict preference keeps the
+                // two paths identical even if two profiles tie on SMs.
+                let mut best: Option<(u32, usize, usize, usize, ProfileId)> = None;
                 for pid in ALL_PROFILES {
                     if mask & (1 << pid.index()) == 0 {
                         continue;
                     }
-                    if let Some((g, s)) = fleet.first_idle(pid) {
-                        return Some((g, s, self.cost(app, pid, false).unwrap()));
+                    let need = self.cost(app, pid, false).unwrap().resident_gib + self.ctx_gib;
+                    let sms = GiProfile::get(pid).sms;
+                    for m in 0..kmax {
+                        if let Some((g, s)) = fleet.first_open_fitting(pid, m, need) {
+                            let better = match &best {
+                                None => true,
+                                Some((bsms, bm, bg, bs, _)) => {
+                                    sms < *bsms
+                                        || (sms == *bsms
+                                            && (m > *bm
+                                                || (m == *bm && (g, s) < (*bg, *bs))))
+                                }
+                            };
+                            if better {
+                                best = Some((sms, m, g, s, pid));
+                            }
+                        }
                     }
                 }
-                None
+                best.map(|(_, m, g, s, pid)| {
+                    (g, s, self.cost_at(app, pid, false, m as u32 + 1).unwrap())
+                })
             }
             PolicyKind::OffloadAware { alpha_centi } => {
-                // One candidate per admissible class with an idle slot, at
-                // the class's first (gpu, slot). Folding them in (gpu,
-                // slot) order with the per-slot preference of the naive
-                // scan reproduces its choice exactly: within a class every
-                // slot ties on (reward, SMs), so only first encounters
-                // matter, and the scan encounters classes in first-slot
-                // order.
+                // One candidate per (profile, occupancy) class with a
+                // fitting open slot, at the class's first (gpu, slot).
+                // Folding them in (gpu, slot) order with the per-slot
+                // preference of the naive scan reproduces its choice
+                // exactly: within a class every slot ties on (reward,
+                // SMs), so only first encounters matter, and the scan
+                // encounters classes in first-fitting-slot order.
                 let mask = self.admissible_mask(app, true);
-                let mut cands = [(0usize, 0usize, ProfileId::P1g12gb); NUM_PROFILES];
+                let mut cands =
+                    [(0usize, 0usize, ProfileId::P1g12gb, 0u8); NUM_PROFILES * MAX_BATCH as usize];
                 let mut n = 0;
                 for pid in ALL_PROFILES {
                     if mask & (1 << pid.index()) == 0 {
                         continue;
                     }
-                    if let Some((g, s)) = fleet.first_idle(pid) {
-                        cands[n] = (g, s, pid);
-                        n += 1;
+                    let need = self.cost(app, pid, true).unwrap().resident_gib + self.ctx_gib;
+                    for m in 0..kmax {
+                        if let Some((g, s)) = fleet.first_open_fitting(pid, m, need) {
+                            cands[n] = (g, s, pid, m as u8);
+                            n += 1;
+                        }
                     }
                 }
                 cands[..n].sort_unstable();
-                let mut best: Option<(f64, u32, usize, usize, ProfileId)> = None;
-                for &(g, s, pid) in &cands[..n] {
-                    let c = self.cost(app, pid, true).unwrap();
-                    let r = self.cached_reward(app, pid, alpha_centi, &c);
+                let mut best: Option<(f64, u32, usize, usize, ProfileId, u8)> = None;
+                for &(g, s, pid, m) in &cands[..n] {
+                    let occ = m as u32 + 1;
+                    let c = self.cost_at(app, pid, true, occ).unwrap();
+                    let r = self.cached_reward(app, pid, occ, alpha_centi, &c);
                     let sms = GiProfile::get(pid).sms;
                     let better = match &best {
                         None => true,
                         Some((br, bsms, ..)) => r > *br || (r == *br && sms < *bsms),
                     };
                     if better {
-                        best = Some((r, sms, g, s, pid));
+                        best = Some((r, sms, g, s, pid, m));
                     }
                 }
-                best.map(|(_, _, g, s, pid)| (g, s, self.cost(app, pid, true).unwrap()))
+                best.map(|(_, _, g, s, pid, m)| {
+                    (g, s, self.cost_at(app, pid, true, m as u32 + 1).unwrap())
+                })
             }
         }
     }
@@ -433,6 +554,8 @@ impl Planner {
         app: AppId,
         policy: PolicyKind,
     ) -> Option<(usize, usize, PlacementCost)> {
+        debug_assert_eq!(fleet.batch(), self.batch, "planner/fleet batch mismatch");
+        let kmax = fleet.batch();
         match policy {
             PolicyKind::FirstFit => {
                 for (g, gpu) in fleet.gpus.iter().enumerate() {
@@ -440,10 +563,14 @@ impl Planner {
                         continue;
                     }
                     for (s, slot) in gpu.slots.iter().enumerate() {
-                        if !slot.is_idle() {
+                        let occ = slot.occupancy() as u32;
+                        if occ >= kmax {
                             continue;
                         }
-                        if let Some(c) = self.cost(app, slot.profile.id, false) {
+                        if let Some(c) = self.cost_at(app, slot.profile.id, false, occ + 1) {
+                            if occ > 0 && !slot.fits(c.resident_gib + self.ctx_gib) {
+                                continue;
+                            }
                             return Some((g, s, c));
                         }
                     }
@@ -451,24 +578,36 @@ impl Planner {
                 None
             }
             PolicyKind::BestFit => {
-                let mut best: Option<(u32, usize, usize, PlacementCost)> = None;
+                let mut best: Option<(u32, usize, usize, usize, PlacementCost)> = None;
                 for (g, gpu) in fleet.gpus.iter().enumerate() {
                     if gpu.reconfiguring() {
                         continue;
                     }
                     for (s, slot) in gpu.slots.iter().enumerate() {
-                        if !slot.is_idle() {
+                        let occ = slot.occupancy();
+                        if occ as u32 >= kmax {
                             continue;
                         }
-                        if let Some(c) = self.cost(app, slot.profile.id, false) {
+                        if let Some(c) =
+                            self.cost_at(app, slot.profile.id, false, occ as u32 + 1)
+                        {
+                            if occ > 0 && !slot.fits(c.resident_gib + self.ctx_gib) {
+                                continue;
+                            }
                             let sms = slot.profile.sms;
-                            if best.as_ref().map(|(b, ..)| sms < *b).unwrap_or(true) {
-                                best = Some((sms, g, s, c));
+                            let better = match &best {
+                                None => true,
+                                Some((bsms, bocc, ..)) => {
+                                    sms < *bsms || (sms == *bsms && occ > *bocc)
+                                }
+                            };
+                            if better {
+                                best = Some((sms, occ, g, s, c));
                             }
                         }
                     }
                 }
-                best.map(|(_, g, s, c)| (g, s, c))
+                best.map(|(_, _, g, s, c)| (g, s, c))
             }
             PolicyKind::OffloadAware { alpha_centi } => {
                 let mut best: Option<(f64, u32, usize, usize, PlacementCost)> = None;
@@ -477,14 +616,19 @@ impl Planner {
                         continue;
                     }
                     for (s, slot) in gpu.slots.iter().enumerate() {
-                        if !slot.is_idle() {
+                        let occ = slot.occupancy() as u32;
+                        if occ >= kmax {
                             continue;
                         }
-                        let c = match self.cost(app, slot.profile.id, true) {
+                        let c = match self.cost_at(app, slot.profile.id, true, occ + 1) {
                             Some(c) => c,
                             None => continue,
                         };
-                        let r = self.cached_reward(app, slot.profile.id, alpha_centi, &c);
+                        if occ > 0 && !slot.fits(c.resident_gib + self.ctx_gib) {
+                            continue;
+                        }
+                        let r =
+                            self.cached_reward(app, slot.profile.id, occ + 1, alpha_centi, &c);
                         let sms = slot.profile.sms;
                         // Exact comparisons (no epsilon): tie-breaking
                         // must be order-insensitive for the class-level
@@ -567,6 +711,68 @@ mod tests {
     }
 
     #[test]
+    fn contention_slowdown_monotone_and_batch1_identical() {
+        // The co-residency classes: runtime must be monotone
+        // non-decreasing in the number of co-residents, the resident
+        // footprint must not depend on occupancy, and a batch-1 planner's
+        // costs must be bit-identical to a batched planner's occupancy-1
+        // column (the `--batch 1` reproduction guarantee).
+        let mut p1 = Planner::new(0.05);
+        let mut pk = Planner::with_batch(0.05, MAX_BATCH);
+        let apps = [
+            AppId::Faiss,
+            AppId::Hotspot,
+            AppId::Llama3Fp16,
+            AppId::Qiskit31,
+            AppId::NekRs,
+        ];
+        for app in apps {
+            for pid in ALL_PROFILES {
+                for allow in [false, true] {
+                    let solo = p1.cost(app, pid, allow);
+                    let col1 = pk.cost_at(app, pid, allow, 1);
+                    match (solo, col1) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits());
+                            assert_eq!(a.resident_gib.to_bits(), b.resident_gib.to_bits());
+                            assert_eq!(a.occupancy.to_bits(), b.occupancy.to_bits());
+                            assert_eq!(a.hbm_tbs.to_bits(), b.hbm_tbs.to_bits());
+                        }
+                        _ => panic!("{app:?} {pid:?} allow={allow}: admissibility diverged"),
+                    }
+                    let mut prev: Option<PlacementCost> = None;
+                    for occ in 1..=MAX_BATCH {
+                        let c = pk.cost_at(app, pid, allow, occ);
+                        assert_eq!(
+                            c.is_some(),
+                            solo.is_some(),
+                            "admissibility must be occupancy-independent"
+                        );
+                        if let Some(c) = c {
+                            if let Some(p) = prev {
+                                assert!(
+                                    c.runtime_s >= p.runtime_s,
+                                    "{app:?} {pid:?} occ={occ}: slowdown not monotone \
+                                     ({} < {})",
+                                    c.runtime_s,
+                                    p.runtime_s
+                                );
+                                assert_eq!(
+                                    c.resident_gib.to_bits(),
+                                    p.resident_gib.to_bits(),
+                                    "resident footprint is occupancy-independent"
+                                );
+                            }
+                            prev = Some(c);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn first_fit_vs_best_fit_slot_choice() {
         // Mixed GPU 2 layout is [4g.48gb, 3g.48gb]; a small job should go
         // to the 3g slot under best-fit but the 4g slot under first-fit.
@@ -574,7 +780,7 @@ mod tests {
         // Occupy every slot on GPUs 0 and 1 so only GPU 2 is free.
         for g in 0..2 {
             for s in 0..fleet.gpus[g].slots.len() {
-                fleet.start_job(g, s, 0, 0.0, 100.0);
+                fleet.start_job(g, s, 0, 0.0, 100.0, 0.5);
             }
         }
         let mut pl = Planner::new(0.05);
@@ -582,6 +788,93 @@ mod tests {
         assert_eq!((g_ff, s_ff), (2, 0), "first-fit takes the 4g slot");
         let (g_bf, s_bf, _) = pl.place(&fleet, AppId::Hotspot, PolicyKind::BestFit).unwrap();
         assert_eq!((g_bf, s_bf), (2, 1), "best-fit takes the smaller 3g slot");
+    }
+
+    #[test]
+    fn batching_admits_onto_occupied_slots_when_nothing_is_empty() {
+        // One 7g slot, batch 3: the first job takes the empty slot; the
+        // next co-locates (first-fit) with a longer modelled runtime; a
+        // full slot admits nothing.
+        let mut fleet = Fleet::with_batch(1, LayoutPreset::AllBig, 3).unwrap();
+        let mut pl = Planner::with_batch(0.05, 3);
+        let (g, s, c1) = pl.place(&fleet, AppId::Hotspot, PolicyKind::FirstFit).unwrap();
+        assert_eq!((g, s), (0, 0));
+        fleet.start_job(g, s, 0, 0.0, c1.runtime_s, c1.resident_gib + pl.ctx_gib());
+        let (g, s, c2) = pl.place(&fleet, AppId::Hotspot, PolicyKind::FirstFit).unwrap();
+        assert_eq!((g, s), (0, 0), "co-locates on the occupied slot");
+        assert!(c2.runtime_s > c1.runtime_s, "co-residency slows the job");
+        fleet.start_job(g, s, 1, 0.0, c2.runtime_s, c2.resident_gib + pl.ctx_gib());
+        let (_, _, c3) = pl.place(&fleet, AppId::Hotspot, PolicyKind::FirstFit).unwrap();
+        assert!(c3.runtime_s > c2.runtime_s);
+        fleet.start_job(0, 0, 2, 0.0, c3.runtime_s, c3.resident_gib + pl.ctx_gib());
+        assert!(
+            pl.place(&fleet, AppId::Hotspot, PolicyKind::FirstFit).is_none(),
+            "full slot admits nothing"
+        );
+        // An unbatched planner/fleet pair refuses the second job outright.
+        let mut f1 = Fleet::new(1, LayoutPreset::AllBig).unwrap();
+        let mut p1 = Planner::new(0.05);
+        let (g, s, c) = p1.place(&f1, AppId::Hotspot, PolicyKind::FirstFit).unwrap();
+        f1.start_job(g, s, 0, 0.0, c.runtime_s, c.resident_gib + p1.ctx_gib());
+        assert!(p1.place(&f1, AppId::Hotspot, PolicyKind::FirstFit).is_none());
+    }
+
+    #[test]
+    fn offload_aware_weighs_co_residency_by_reward() {
+        // Two 7g slots, batch 2: the reward model arbitrates between the
+        // empty slot (faster run, more SM waste for a poor scaler) and
+        // co-residency (slower run, denser packing). Whatever it picks,
+        // the indexed walk and the naive scan must agree at every step,
+        // and once every seat is taken the policy must return None
+        // rather than overcommit.
+        let mut fleet = Fleet::with_batch(2, LayoutPreset::AllBig, 2).unwrap();
+        let mut pl = Planner::with_batch(0.05, 2);
+        let policy = PolicyKind::OffloadAware { alpha_centi: 10 };
+        for job in 0..4u32 {
+            let fast = pl.place(&fleet, AppId::Faiss, policy);
+            let scan = pl.place_scan(&fleet, AppId::Faiss, policy);
+            assert_eq!(
+                fast.map(|(g, s, _)| (g, s)),
+                scan.map(|(g, s, _)| (g, s)),
+                "job {job}"
+            );
+            let (g, s, c) = fast.unwrap();
+            let occ_runtime = c.runtime_s;
+            // The cost handed back is the cost at the occupancy joined.
+            let expect = pl
+                .cost_at(
+                    AppId::Faiss,
+                    ProfileId::P7g96gb,
+                    true,
+                    fleet.gpus[g].slots[s].occupancy() as u32 + 1,
+                )
+                .unwrap();
+            assert_eq!(occ_runtime.to_bits(), expect.runtime_s.to_bits());
+            fleet.start_job(g, s, job, 0.0, c.runtime_s, c.resident_gib + pl.ctx_gib());
+        }
+        // 2 slots × 2 seats are gone: nothing left to offer.
+        assert!(pl.place(&fleet, AppId::Faiss, policy).is_none());
+        assert!(pl.place_scan(&fleet, AppId::Faiss, policy).is_none());
+    }
+
+    #[test]
+    fn batching_respects_the_slice_memory_budget() {
+        // Offloaded llama fills a 1g slice to its solo cap: the slice's
+        // memory cannot hold a second resident, so batching never
+        // overcommits it — even at batch 4.
+        let mut fleet = Fleet::with_batch(1, LayoutPreset::AllSmall, 4).unwrap();
+        let mut pl = Planner::with_batch(0.05, 4);
+        let policy = PolicyKind::OffloadAware { alpha_centi: 10 };
+        let (g, s, c) = pl.place(&fleet, AppId::Llama3Fp16, policy).unwrap();
+        assert!(c.offloaded);
+        fleet.start_job(g, s, 0, 0.0, c.runtime_s, c.resident_gib + pl.ctx_gib());
+        // The occupied slot is memory-full; the next llama must take a
+        // different (empty) slot, never co-locate.
+        let (g2, s2, _) = pl.place(&fleet, AppId::Llama3Fp16, policy).unwrap();
+        assert_ne!((g2, s2), (g, s), "memory-full slot refuses co-residents");
+        // And both paths agree on that.
+        let scan = pl.place_scan(&fleet, AppId::Llama3Fp16, policy).map(|(g, s, _)| (g, s));
+        assert_eq!(scan, Some((g2, s2)));
     }
 
     #[test]
@@ -603,38 +896,57 @@ mod tests {
 
     #[test]
     fn indexed_place_matches_naive_scan_across_fleet_states() {
-        // Pseudo-random occupancy churn over a mixed fleet: every policy
-        // must pick the identical slot through the index and the scan.
-        let mut rng = crate::util::Rng::new(0x9A7E);
-        let mut fleet = Fleet::new(5, LayoutPreset::Mixed).unwrap();
-        let mut pl = Planner::new(0.05);
-        let apps = [
-            AppId::Faiss,
-            AppId::Hotspot,
-            AppId::Llama3Fp16,
-            AppId::Qiskit31,
-            AppId::NekRs,
-        ];
-        let policies = [
-            PolicyKind::FirstFit,
-            PolicyKind::BestFit,
-            PolicyKind::OffloadAware { alpha_centi: 10 },
-            PolicyKind::OffloadAware { alpha_centi: 60 },
-        ];
-        for step in 0..120u32 {
-            let g = rng.below(5) as usize;
-            if rng.below(2) == 0 {
-                if let Some(s) = fleet.gpus[g].slots.iter().position(|s| s.is_idle()) {
-                    fleet.start_job(g, s, step, step as f64, step as f64 + 9.0);
+        // Pseudo-random occupancy churn over a mixed fleet at several
+        // batch depths: every policy must pick the identical slot through
+        // the index and the scan.
+        for batch in [1u32, 2, 4] {
+            let mut rng = crate::util::Rng::new(0x9A7E + batch as u64);
+            let mut fleet = Fleet::with_batch(5, LayoutPreset::Mixed, batch).unwrap();
+            let mut pl = Planner::with_batch(0.05, batch);
+            let apps = [
+                AppId::Faiss,
+                AppId::Hotspot,
+                AppId::Llama3Fp16,
+                AppId::Qiskit31,
+                AppId::NekRs,
+            ];
+            let policies = [
+                PolicyKind::FirstFit,
+                PolicyKind::BestFit,
+                PolicyKind::OffloadAware { alpha_centi: 10 },
+                PolicyKind::OffloadAware { alpha_centi: 60 },
+            ];
+            let mut next_job = 0u32;
+            for step in 0..120u32 {
+                let g = rng.below(5) as usize;
+                if rng.below(2) == 0 {
+                    // Admit through the policy machinery so charged memory
+                    // is realistic (memory gates stay meaningful).
+                    let app = apps[rng.below(apps.len() as u64) as usize];
+                    let policy = policies[rng.below(policies.len() as u64) as usize];
+                    if let Some((pg, ps, c)) = pl.place(&fleet, app, policy) {
+                        fleet.start_job(
+                            pg,
+                            ps,
+                            next_job,
+                            step as f64,
+                            step as f64 + 9.0,
+                            c.resident_gib + pl.ctx_gib(),
+                        );
+                        next_job += 1;
+                    }
+                } else if let Some(s) =
+                    fleet.gpus[g].slots.iter().position(|s| !s.is_idle())
+                {
+                    let job = fleet.gpus[g].slots[s].residents[0].job;
+                    fleet.finish_job(g, s, job, step as f64);
                 }
-            } else if let Some(s) = fleet.gpus[g].slots.iter().position(|s| !s.is_idle()) {
-                fleet.finish_job(g, s, step as f64);
-            }
-            for &app in &apps {
-                for &policy in &policies {
-                    let fast = pl.place(&fleet, app, policy).map(|(g, s, _)| (g, s));
-                    let slow = pl.place_scan(&fleet, app, policy).map(|(g, s, _)| (g, s));
-                    assert_eq!(fast, slow, "step {step} {app:?} {policy:?}");
+                for &app in &apps {
+                    for &policy in &policies {
+                        let fast = pl.place(&fleet, app, policy).map(|(g, s, _)| (g, s));
+                        let slow = pl.place_scan(&fleet, app, policy).map(|(g, s, _)| (g, s));
+                        assert_eq!(fast, slow, "batch {batch} step {step} {app:?} {policy:?}");
+                    }
                 }
             }
         }

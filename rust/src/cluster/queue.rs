@@ -359,6 +359,70 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_handoffs_keep_dense_fifo_ids() {
+        // admit / admit_handoff interleave freely (a handoff can fire
+        // between pre-scheduled arrivals); the queue only requires ids
+        // dense in admission order, and ascending-id iteration stays FIFO
+        // by that order.
+        let mut q = AdmissionQueue::new();
+        q.admit(job(0, 1.0, AppId::Faiss), 10.0);
+        q.admit_handoff(job(1, 0.25, AppId::Hotspot), 9.0); // older arrival, later admission
+        q.admit(job(2, 2.0, AppId::Lammps), 10.0);
+        q.admit_handoff(job(3, 0.75, AppId::NekRs), 9.5);
+        assert_eq!(q.pending_ids().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        for (i, j) in q.jobs.iter().enumerate() {
+            assert_eq!(j.job.id as usize, i, "ids must stay dense");
+        }
+        assert!(q.jobs[1].handoff && q.jobs[3].handoff);
+        assert_eq!(q.jobs[1].deadline_s, 9.0, "handoff deadline is absolute");
+        assert_eq!(q.jobs[0].deadline_s, 11.0, "local deadline is relative");
+        assert_eq!(
+            q.smallest_pending_footprint_gib(),
+            q.smallest_pending_footprint_scan()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "dense")]
+    fn non_dense_admission_id_is_rejected() {
+        let mut q = AdmissionQueue::new();
+        q.admit(job(1, 0.0, AppId::Faiss), 5.0); // id 1 into an empty queue
+    }
+
+    #[test]
+    fn forwarded_job_rejected_at_destination_counts_exactly_once() {
+        // A job that is forwarded by its origin shard and then rejected at
+        // the destination must appear exactly once in the global
+        // completed/expired/rejected totals — the origin's Forwarded state
+        // resolves its loop accounting but contributes no outcome.
+        let mut origin = AdmissionQueue::new();
+        origin.admit(job(0, 1.0, AppId::Llama3Fp16), 10.0);
+        origin.mark_forwarded(0);
+        assert!(origin.all_resolved() && origin.all_resolved_scan());
+        assert_eq!(origin.count(JobState::Forwarded), 1);
+
+        let mut dst = AdmissionQueue::new();
+        dst.admit_handoff(job(0, 1.0, AppId::Llama3Fp16), 11.0);
+        dst.reject(0, 4.0);
+        assert!(dst.all_resolved());
+
+        let outcomes = |q: &AdmissionQueue| {
+            q.count(JobState::Completed) + q.count(JobState::Expired) + q.count(JobState::Rejected)
+        };
+        assert_eq!(outcomes(&origin), 0, "origin contributes no outcome");
+        assert_eq!(outcomes(&dst), 1, "destination owns the single outcome");
+        assert_eq!(origin.horizon_s(), 0.0, "forwarding never extends the horizon");
+        assert_eq!(dst.horizon_s(), 4.0);
+        // A handed-off job never forwards again — the one-hop invariant.
+        let mut twice = AdmissionQueue::new();
+        twice.admit_handoff(job(0, 1.0, AppId::Faiss), 11.0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            twice.mark_forwarded(0)
+        }));
+        assert!(r.is_err(), "double forward must be refused");
+    }
+
+    #[test]
     fn counters_track_scan_truth_through_lifecycle() {
         let mut q = AdmissionQueue::new();
         let apps = [

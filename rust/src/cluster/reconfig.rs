@@ -104,7 +104,7 @@ mod tests {
     fn plan_reconfig_picks_idle_gpu_and_skips_matching_layout() {
         let mut fleet = Fleet::new(2, LayoutPreset::AllSmall).unwrap();
         // A 16 GiB job needs the 2g class; GPU 0 is busy, GPU 1 idle.
-        fleet.start_job(0, 0, 1, 0.0, 10.0);
+        fleet.start_job(0, 0, 1, 0.0, 10.0, 0.5);
         let (g, target) = plan_reconfig(&fleet, 16.0).unwrap();
         assert_eq!(g, 1);
         assert_eq!(target[0], ProfileId::P2g24gb);

@@ -32,10 +32,12 @@
 //!   the fewest pending-or-undelivered jobs as of the previous barrier.
 //! - *Overflow handoffs*: a pending job that sat through a full epoch
 //!   without placing, and has deadline slack left, is offered back to the
-//!   coordinator, which forwards it (at most one hop) to the
-//!   most-idle-slot-SMs shard whose largest idle slot can host it under
-//!   the run's policy — or, when reconfiguration is enabled, to any shard
-//!   with idle headroom (the destination can repartition); with neither,
+//!   coordinator, which forwards it (at most one hop) to the shard with
+//!   the most open SM-seats (batched headroom: `sms × (batch − occupancy)`
+//!   summed over slots — exactly idle-slot SMs at batch 1) whose largest
+//!   open slot can host it under the run's policy — or, when
+//!   reconfiguration is enabled, to any shard with open headroom (the
+//!   destination can repartition); with neither,
 //!   the job stays put rather than migrate toward certain expiry. The job
 //!   leaves its origin queue as `JobState::Forwarded` and re-arrives at
 //!   the target at the next epoch start — paying the lookahead as
@@ -69,12 +71,14 @@ use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
 
-/// Serving events, all local to one shard.
+/// Serving events, all local to one shard. `JobDone` names the finishing
+/// job: under slot-level batching several residents share one slot and
+/// complete independently.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Ev {
     Arrival(u32),
     Deadline(u32),
-    JobDone { gpu: usize, slot: usize },
+    JobDone { gpu: usize, slot: usize, job: u32 },
     ReconfigDone(usize),
 }
 
@@ -133,12 +137,13 @@ struct BarrierInfo {
     unresolved: u32,
     /// Arrivals scheduled into the shard's engine but not yet admitted.
     arrivals_pending: u32,
-    /// SMs of idle serving slots, reconfiguring GPUs excluded (the
-    /// load-balancing signal).
-    idle_sms: u32,
-    /// Memory of the largest idle serving slot (GiB; 0 when none) — the
-    /// dispatcher's placement-compatibility signal.
-    largest_idle_gib: f64,
+    /// Open SM-seats — every non-reconfiguring slot contributes
+    /// `sms × (batch − occupancy)`, the batched-headroom load signal
+    /// (exactly the idle-slot SM count at batch 1).
+    open_sm_seats: u32,
+    /// Memory of the largest slot still accepting a co-resident (GiB; 0
+    /// when none) — the dispatcher's placement-compatibility signal.
+    largest_open_gib: f64,
     candidates: Vec<Handoff>,
 }
 
@@ -206,7 +211,7 @@ impl Shard {
         lookahead_s: f64,
         forward: bool,
     ) -> crate::Result<Shard> {
-        let fleet = Fleet::new(gpus, cfg.layout)?;
+        let fleet = Fleet::with_batch(gpus, cfg.layout, cfg.batch)?;
         let power = PowerTracker::new(mode, &fleet);
         Ok(Shard {
             id,
@@ -216,7 +221,7 @@ impl Shard {
             forward,
             fleet,
             queue: AdmissionQueue::new(),
-            planner: Planner::new(cfg.workload_scale),
+            planner: Planner::with_batch(cfg.workload_scale, cfg.batch),
             engine: Engine::new(),
             power,
             power_model: PowerModel::h100(),
@@ -381,10 +386,10 @@ impl Shard {
                 self.deadline_tokens[qid as usize] = None;
                 self.queue.expire_if_pending(qid, now);
             }
-            Ev::JobDone { gpu, slot } => {
-                if let Some(job) = self.fleet.finish_job(gpu, slot, now) {
+            Ev::JobDone { gpu, slot, job } => {
+                if self.fleet.finish_job(gpu, slot, job, now) {
                     self.queue.mark_completed(job, now);
-                    self.power.on_finish(gpu, slot);
+                    self.power.on_finish(gpu, slot, job);
                     dispatch(
                         &self.params,
                         self.mode,
@@ -488,8 +493,8 @@ impl Shard {
             pending: self.queue.pending_len() as u32,
             unresolved: self.queue.unresolved(),
             arrivals_pending: self.expected - self.queue.jobs.len() as u32,
-            idle_sms: self.fleet.idle_slot_sms(),
-            largest_idle_gib: self.fleet.largest_idle_slot_gib(),
+            open_sm_seats: self.fleet.open_sm_seats(),
+            largest_open_gib: self.fleet.largest_open_slot_gib(),
             candidates,
         }
     }
@@ -651,10 +656,13 @@ fn dispatch(
             if let Some(tok) = deadline_tokens[id as usize].take() {
                 engine.cancel(tok);
             }
+            // `c` is the cost at the occupancy the job joins the slot at;
+            // residents already running keep their admission-time runtime
+            // (the deterministic static-slowdown model).
             let until = now + c.runtime_s;
-            fleet.start_job(g, s, id, now, until);
-            power.on_start(g, s, c);
-            engine.schedule_at(sec_to_ns(until), Ev::JobDone { gpu: g, slot: s });
+            fleet.start_job(g, s, id, now, until, c.resident_gib + planner.ctx_gib());
+            power.on_start(g, s, id, c);
+            engine.schedule_at(sec_to_ns(until), Ev::JobDone { gpu: g, slot: s, job: id });
         } else if cfg.reconfig {
             let fits = match mode {
                 ServeMode::Indexed => {
@@ -687,13 +695,16 @@ fn dispatch(
 /// usage from the full running map on each integration step; the indexed
 /// path recomputes only GPUs whose running set changed and caches the
 /// per-GPU reported watts (summed in the same ascending-GPU order, so the
-/// energy integral is bit-identical).
+/// energy integral is bit-identical). Under slot-level batching each
+/// co-resident contributes its own activity rates, keyed by job so
+/// residents of one slot finish independently.
 enum PowerTracker {
     Naive {
-        /// Activity rates of running jobs, keyed by (gpu, slot). BTreeMap
-        /// so float summation order — and thus the energy integral — is
-        /// deterministic.
-        running: BTreeMap<(usize, usize), PlacementCost>,
+        /// Activity rates of running jobs, keyed by (gpu, slot, job).
+        /// BTreeMap so float summation order — and thus the energy
+        /// integral — is deterministic (and, with one resident per slot,
+        /// identical to the pre-batching (gpu, slot) order).
+        running: BTreeMap<(usize, usize, u32), PlacementCost>,
     },
     Indexed {
         gpus: Vec<GpuPower>,
@@ -701,9 +712,10 @@ enum PowerTracker {
 }
 
 struct GpuPower {
-    /// Running-job costs by slot index (iterated in slot order — the same
-    /// order the naive BTreeMap visits a GPU's jobs in).
-    costs: Vec<Option<PlacementCost>>,
+    /// Running-resident costs per slot, keyed by job id (iterated in slot
+    /// order, then ascending job id — the same order the naive BTreeMap
+    /// visits a GPU's residents in).
+    costs: Vec<BTreeMap<u32, PlacementCost>>,
     dirty: bool,
     watts: f64,
 }
@@ -719,7 +731,7 @@ impl PowerTracker {
                     .gpus
                     .iter()
                     .map(|g| GpuPower {
-                        costs: vec![None; g.slots.len()],
+                        costs: vec![BTreeMap::new(); g.slots.len()],
                         dirty: true,
                         watts: 0.0,
                     })
@@ -728,25 +740,25 @@ impl PowerTracker {
         }
     }
 
-    fn on_start(&mut self, gpu: usize, slot: usize, c: PlacementCost) {
+    fn on_start(&mut self, gpu: usize, slot: usize, job: u32, c: PlacementCost) {
         match self {
             PowerTracker::Naive { running } => {
-                running.insert((gpu, slot), c);
+                running.insert((gpu, slot, job), c);
             }
             PowerTracker::Indexed { gpus } => {
-                gpus[gpu].costs[slot] = Some(c);
+                gpus[gpu].costs[slot].insert(job, c);
                 gpus[gpu].dirty = true;
             }
         }
     }
 
-    fn on_finish(&mut self, gpu: usize, slot: usize) {
+    fn on_finish(&mut self, gpu: usize, slot: usize, job: u32) {
         match self {
             PowerTracker::Naive { running } => {
-                running.remove(&(gpu, slot));
+                running.remove(&(gpu, slot, job));
             }
             PowerTracker::Indexed { gpus } => {
-                gpus[gpu].costs[slot] = None;
+                gpus[gpu].costs[slot].remove(&job);
                 gpus[gpu].dirty = true;
             }
         }
@@ -759,7 +771,7 @@ impl PowerTracker {
             PowerTracker::Naive { .. } => {}
             PowerTracker::Indexed { gpus } => {
                 gpus[gpu].costs.clear();
-                gpus[gpu].costs.resize(slots, None);
+                gpus[gpu].costs.resize(slots, BTreeMap::new());
                 gpus[gpu].dirty = true;
             }
         }
@@ -782,14 +794,14 @@ impl PowerTracker {
     }
 }
 
-/// Per-GPU `PowerModel` demand from one GPU's running jobs (indexed
+/// Per-GPU `PowerModel` demand from one GPU's running residents (indexed
 /// path). Accumulation order matches the naive scan: rates added in
-/// ascending slot order into a fresh `GpuUsage`.
+/// ascending (slot, job) order into a fresh `GpuUsage`.
 fn gpu_power_w(
     fleet: &Fleet,
     model: &PowerModel,
     gpu: usize,
-    costs: &[Option<PlacementCost>],
+    costs: &[BTreeMap<u32, PlacementCost>],
 ) -> f64 {
     let spec = &fleet.spec;
     let busy = fleet.gpus[gpu].busy_sms();
@@ -798,7 +810,7 @@ fn gpu_power_w(
         sm_busy_frac: busy as f64 / spec.sms as f64,
         ..GpuUsage::default()
     };
-    for c in costs.iter().flatten() {
+    for c in costs.iter().flat_map(|m| m.values()) {
         for (i, f) in c.flop_tflops.iter().enumerate() {
             u.flop_rate_tflops[i] += *f;
         }
@@ -814,7 +826,7 @@ fn gpu_power_w(
 fn fleet_power_w_scan(
     fleet: &Fleet,
     model: &PowerModel,
-    running: &BTreeMap<(usize, usize), PlacementCost>,
+    running: &BTreeMap<(usize, usize, u32), PlacementCost>,
 ) -> f64 {
     let spec = &fleet.spec;
     let mut usages: Vec<GpuUsage> = vec![GpuUsage::default(); fleet.gpus.len()];
@@ -823,7 +835,7 @@ fn fleet_power_w_scan(
         usages[g].context_active = busy > 0;
         usages[g].sm_busy_frac = busy as f64 / spec.sms as f64;
     }
-    for (&(g, _), c) in running {
+    for (&(g, _, _), c) in running {
         let u = &mut usages[g];
         for (i, f) in c.flop_tflops.iter().enumerate() {
             u.flop_rate_tflops[i] += *f;
@@ -1072,8 +1084,8 @@ fn serve_sharded_impl(
             pending: 0,
             unresolved: 0,
             arrivals_pending: s.expected,
-            idle_sms: s.fleet.idle_slot_sms(),
-            largest_idle_gib: s.fleet.largest_idle_slot_gib(),
+            open_sm_seats: s.fleet.open_sm_seats(),
+            largest_open_gib: s.fleet.largest_open_slot_gib(),
             candidates: Vec::new(),
         })
         .collect();
@@ -1110,19 +1122,20 @@ fn serve_sharded_impl(
 
         // 1. Overflow handoffs, decided strictly from last-barrier state:
         // candidates in ascending global-id order go to the shard with
-        // the most idle slot-SMs (ties toward the lower id) *among shards
-        // whose largest idle slot can actually host the job* — falling
-        // back to any shard with idle headroom only when reconfiguration
-        // is enabled (the target can repartition toward the job). Each
-        // assignment debits one smallest-slice worth of the target's
-        // headroom so a single barrier cannot dogpile one shard.
+        // the most open SM-seats (batched headroom; ties toward the lower
+        // id) *among shards whose largest open slot can actually host the
+        // job* — falling back to any shard with open headroom only when
+        // reconfiguration is enabled (the target can repartition toward
+        // the job). Each assignment debits one smallest-slice seat of the
+        // target's headroom so a single barrier cannot dogpile one shard.
         if scfg.forward && nodes > 1 {
             let mut cands: Vec<Handoff> = Vec::new();
             for info in &infos {
                 cands.extend(info.candidates.iter().cloned());
             }
             cands.sort_by_key(|h| h.global_id);
-            let mut idle_left: Vec<i64> = infos.iter().map(|i| i.idle_sms as i64).collect();
+            let mut idle_left: Vec<i64> =
+                infos.iter().map(|i| i.open_sm_seats as i64).collect();
             for h in cands {
                 let pick = |compatible_only: bool, idle_left: &[i64]| -> Option<usize> {
                     let mut best: Option<usize> = None;
@@ -1130,7 +1143,7 @@ fn serve_sharded_impl(
                         if s == h.origin || left < handoff_slice_sms {
                             continue;
                         }
-                        if compatible_only && infos[s].largest_idle_gib < h.min_host_gib {
+                        if compatible_only && infos[s].largest_open_gib < h.min_host_gib {
                             continue;
                         }
                         if best.map(|b| left > idle_left[b]).unwrap_or(true) {
@@ -1435,6 +1448,7 @@ mod tests {
             reconfig: true,
             seed: 11,
             workload_scale: 0.05,
+            batch: 1,
         }
     }
 
@@ -1615,6 +1629,88 @@ mod tests {
                 assert!((j.job.arrival_s - 0.25).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn batched_sharded_runs_are_thread_invariant_and_exact() {
+        // Slot-level batching under the sharded control plane: the merged
+        // report stays bit-identical across thread counts, and the global
+        // accounting stays exact, for batch depths > 1.
+        for batch in [2u32, 4] {
+            let base = ServeConfig {
+                batch,
+                ..base_cfg()
+            };
+            let mut first: Option<String> = None;
+            for threads in [1u32, 2] {
+                let mut scfg = ShardServeConfig::new(base.clone(), 2, threads);
+                scfg.route = RouteKind::LeastLoaded;
+                let r = serve_sharded(&scfg).unwrap();
+                let rep = &r.report;
+                assert_eq!(rep.completed + rep.expired + rep.rejected, rep.jobs);
+                let key = format!("{}|{}", rep.to_json().pretty(), r.handoffs);
+                match &first {
+                    None => first = Some(key),
+                    Some(f) => assert_eq!(*f, key, "batch={batch} threads={threads}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn handoffs_interleaved_with_prescheduled_arrivals_keep_dense_fifo_ids() {
+        // Queue ids are assigned when arrivals *fire*, not when they are
+        // scheduled: a handoff injected after far-future arrivals were
+        // pre-scheduled fires first and must take the next dense queue id.
+        // The invariant under test: queue ids are dense 0..n in admission
+        // (fire) order, every arrival admits exactly once, and the
+        // qid→lid mapping stays a bijection.
+        let cfg = base_cfg();
+        let mut shard = Shard::new(0, 2, &cfg, ServeMode::Indexed, 1.0, true).unwrap();
+        // Pre-scheduled synthetic arrivals at t = 5, 6, 7 (global ids 0..3).
+        for (i, t) in [5.0f64, 6.0, 7.0].iter().enumerate() {
+            shard.push_arrival(Job {
+                id: i as u32,
+                app: AppId::Faiss,
+                arrival_s: *t,
+            });
+        }
+        // A handoff decided at an earlier barrier fires at t = 2 — before
+        // every pre-scheduled arrival — with an older original arrival.
+        shard.push_handoff(
+            Handoff {
+                global_id: 99,
+                origin: 1,
+                origin_local: 0,
+                app: AppId::Hotspot,
+                arrival_s: 0.5,
+                deadline_abs_s: 60.0,
+                min_host_gib: 11.0,
+            },
+            2.0,
+        );
+        shard.run_until(None);
+        // Dense ids in fire order: the handoff (global 99) admits first.
+        assert_eq!(shard.queue.jobs.len(), 4);
+        for (qid, qj) in shard.queue.jobs.iter().enumerate() {
+            assert_eq!(qj.job.id as usize, qid, "queue ids must stay dense");
+        }
+        let fired_gids: Vec<u32> = shard
+            .queue
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(qid, _)| shard.metas[shard.qid_to_lid[qid] as usize].global_id)
+            .collect();
+        assert_eq!(fired_gids, vec![99, 0, 1, 2]);
+        assert!(shard.queue.jobs[0].handoff);
+        assert!((shard.queue.jobs[0].job.arrival_s - 0.5).abs() < 1e-12);
+        // qid→lid is a bijection over 0..4.
+        let mut lids: Vec<u32> = shard.qid_to_lid.clone();
+        lids.sort_unstable();
+        assert_eq!(lids, vec![0, 1, 2, 3]);
+        assert!(shard.queue.all_resolved());
+        assert!(shard.queue.all_resolved_scan());
     }
 
     #[test]

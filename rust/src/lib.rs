@@ -31,7 +31,11 @@
 //!   per-node event loops on worker threads, lock-stepped in
 //!   lookahead-bounded epochs with a deterministic cross-node dispatcher
 //!   — bit-identical for every thread count, with the single loop as the
-//!   1-node oracle (`migsim serve --nodes N --threads T`).
+//!   1-node oracle (`migsim serve --nodes N --threads T`). Slots batch:
+//!   a MIG slice hosts up to K co-resident jobs under MPS-within-MIG
+//!   semantics, costed by the `sharing::MigSharedGi` contention model
+//!   (`migsim serve --batch K`; `--batch 1` is the classic system,
+//!   bit-for-bit).
 //! - `runtime`: PJRT loader/executor for `artifacts/*.hlo.txt`
 //!   (feature-gated behind `pjrt`; a stub otherwise).
 

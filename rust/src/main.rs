@@ -45,7 +45,7 @@ fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "serve",
             summary: "online cluster serving: admission + placement + reconfig",
-            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--trace FILE] [--save-trace FILE] [--json]",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--trace FILE] [--save-trace FILE] [--json]",
         },
         CommandSpec {
             name: "runtime",
@@ -242,6 +242,7 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
     args.check_known(&[
         "gpus",
         "policy",
+        "batch",
         "arrival-rate",
         "jobs",
         "deadline",
@@ -287,6 +288,9 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         reconfig: !args.flag("no-reconfig"),
         seed: cfg.seed,
         workload_scale: cfg.workload_scale,
+        // MPS-within-MIG continuous batching: up to K co-resident jobs
+        // per slot (1 = classic one-job-per-slot; validated downstream).
+        batch: args.opt_u64("batch", 1).map_err(anyhow::Error::msg)? as u32,
     };
 
     // Trace replay: feed the queue from a persisted arrival log instead

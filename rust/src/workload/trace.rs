@@ -217,4 +217,62 @@ mod tests {
         assert_eq!(a.jobs[7].app, b.jobs[7].app);
         assert_eq!(a.jobs[7].arrival_s, b.jobs[7].arrival_s);
     }
+
+    #[test]
+    fn empty_and_single_job_traces_canonicalize_and_round_trip() {
+        let empty = JobTrace { jobs: vec![] };
+        let c = empty.canonicalized().unwrap();
+        assert!(c.is_empty());
+        assert_eq!(
+            JobTrace::from_json(&empty.to_json()).unwrap().len(),
+            0,
+            "empty trace survives serialization"
+        );
+        let single = JobTrace {
+            jobs: vec![Job {
+                id: 17, // sparse id: canonicalization must densify
+                app: AppId::Hotspot,
+                arrival_s: 0.0, // arrival exactly at t = 0 is valid
+            }],
+        };
+        let c = single.canonicalized().unwrap();
+        assert_eq!(c.jobs[0].id, 0);
+        assert_eq!(c.jobs[0].arrival_s, 0.0);
+        let back = JobTrace::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.to_json().pretty(), c.to_json().pretty());
+    }
+
+    #[test]
+    fn duplicate_timestamps_keep_stable_order() {
+        // Equal arrivals are a legal trace (simultaneous submissions);
+        // canonicalization must keep their relative order (stable sort),
+        // so replay admission order is well-defined and reproducible.
+        let t = JobTrace {
+            jobs: vec![
+                Job { id: 3, app: AppId::Faiss, arrival_s: 1.0 },
+                Job { id: 9, app: AppId::Hotspot, arrival_s: 1.0 },
+                Job { id: 1, app: AppId::Lammps, arrival_s: 1.0 },
+                Job { id: 0, app: AppId::NekRs, arrival_s: 0.5 },
+            ],
+        };
+        let c = t.canonicalized().unwrap();
+        assert_eq!(c.jobs.iter().map(|j| j.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(c.jobs[0].app, AppId::NekRs);
+        assert_eq!(c.jobs[1].app, AppId::Faiss, "ties keep input order");
+        assert_eq!(c.jobs[2].app, AppId::Hotspot);
+        assert_eq!(c.jobs[3].app, AppId::Lammps);
+        // Canonicalization is idempotent on its own output.
+        let cc = c.canonicalized().unwrap();
+        assert_eq!(cc.to_json().pretty(), c.to_json().pretty());
+    }
+
+    #[test]
+    fn non_finite_arrivals_rejected() {
+        for bad in [f64::NAN, f64::INFINITY, -0.001] {
+            let t = JobTrace {
+                jobs: vec![Job { id: 0, app: AppId::Faiss, arrival_s: bad }],
+            };
+            assert!(t.canonicalized().is_err(), "arrival {bad} must be rejected");
+        }
+    }
 }

@@ -1,0 +1,175 @@
+//! Golden-fixture regression tests: canonical `ServeReport` JSON for a
+//! small policy × layout × seed (× batch) grid is checked into
+//! `tests/fixtures/` and compared **byte-for-byte**, so determinism drift
+//! is caught against a committed artifact rather than only
+//! self-differentially (a bug that shifts both the indexed path and the
+//! naive oracle in lockstep is invisible to the differential tests but
+//! not to these).
+//!
+//! ## Blessing protocol
+//!
+//! A missing fixture is *blessed*: the test writes the current output to
+//! `tests/fixtures/<name>.json` and passes with a notice — commit the new
+//! files with the change that introduced them. CI fails when a committed
+//! fixture no longer matches (`git diff` guard in the workflow), so drift
+//! cannot land silently. After an *intentional* behaviour change, delete
+//! the affected fixtures, re-run the test to re-bless, and commit the
+//! regenerated files alongside the change.
+
+use migsim::cluster::{
+    serve, serve_sharded, LayoutPreset, PolicyKind, RouteKind, ServeConfig, ShardServeConfig,
+};
+use migsim::util::json::Json;
+use std::path::PathBuf;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+/// Policy labels contain `:` (e.g. `offload-aware:0.10`) — not a safe
+/// filename character everywhere.
+fn sanitize(label: &str) -> String {
+    label.replace(':', "-")
+}
+
+/// Compare `rendered` against the committed fixture `name`, blessing it
+/// when absent. Returns whether the fixture was newly blessed.
+fn check_fixture(name: &str, rendered: &str) -> bool {
+    let dir = fixture_dir();
+    let path = dir.join(name);
+    if !path.exists() {
+        std::fs::create_dir_all(&dir).expect("create tests/fixtures");
+        // Write-then-rename so concurrently-running fixture tests never
+        // observe a partially written file.
+        let tmp = dir.join(format!("{name}.tmp-{}", std::process::id()));
+        std::fs::write(&tmp, rendered).expect("write fixture");
+        std::fs::rename(&tmp, &path).expect("install fixture");
+        eprintln!("blessed new golden fixture {} — commit it", path.display());
+        return true;
+    }
+    let want = std::fs::read_to_string(&path).expect("read fixture");
+    assert_eq!(
+        rendered,
+        want,
+        "determinism drift against committed fixture {name}: the serve \
+         output no longer matches the golden artifact byte-for-byte. If \
+         the change is intentional, delete the fixture, re-run to \
+         re-bless, and commit the regenerated file with your change.",
+    );
+    false
+}
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig {
+        gpus: 3,
+        policy: PolicyKind::FirstFit,
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: 2.0,
+        jobs: 40,
+        deadline_s: 25.0,
+        reconfig: true,
+        seed: 7,
+        workload_scale: 0.05,
+        batch: 1,
+    }
+}
+
+#[test]
+fn serve_reports_match_committed_fixtures() {
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall];
+    let seeds = [7u64, 0xC0FFEE];
+    let mut blessed = 0usize;
+    for &policy in &policies {
+        for &layout in &layouts {
+            for &seed in &seeds {
+                let cfg = ServeConfig {
+                    policy,
+                    layout,
+                    seed,
+                    ..base_cfg()
+                };
+                let rendered = format!("{}\n", serve(&cfg).unwrap().to_json().pretty());
+                let name = format!(
+                    "serve_{}_{}_{:x}_b1.json",
+                    sanitize(&policy.label()),
+                    layout.label(),
+                    seed
+                );
+                if check_fixture(&name, &rendered) {
+                    blessed += 1;
+                }
+            }
+        }
+    }
+    if blessed > 0 {
+        eprintln!("{blessed} fixture(s) blessed — `git add rust/tests/fixtures` and commit");
+    }
+}
+
+#[test]
+fn batched_serve_reports_match_committed_fixtures() {
+    // The MPS-within-MIG batching layer gets its own golden artifacts: a
+    // drift in the contention model, the memory gate, or the seat-level
+    // dispatch shows up here even if both serve modes drift together.
+    let mut blessed = 0usize;
+    for batch in [2u32, 4] {
+        let cfg = ServeConfig {
+            policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+            arrival_rate_hz: 3.0,
+            batch,
+            ..base_cfg()
+        };
+        let rendered = format!("{}\n", serve(&cfg).unwrap().to_json().pretty());
+        let name = format!("serve_offload-aware-0.10_mixed_7_b{batch}.json");
+        if check_fixture(&name, &rendered) {
+            blessed += 1;
+        }
+    }
+    if blessed > 0 {
+        eprintln!("{blessed} fixture(s) blessed — `git add rust/tests/fixtures` and commit");
+    }
+}
+
+#[test]
+fn sharded_serve_report_matches_committed_fixture() {
+    // One sharded fixture pins the cross-node dispatcher (routing,
+    // handoffs, epochs) end-to-end, diagnostics included.
+    let mut scfg = ShardServeConfig::new(base_cfg(), 2, 2);
+    scfg.route = RouteKind::LeastLoaded;
+    let r = serve_sharded(&scfg).unwrap();
+    let rendered = format!("{}\n", r.to_json().pretty());
+    if check_fixture("serve_sharded_least-loaded_n2_7_b1.json", &rendered) {
+        eprintln!("fixture blessed — `git add rust/tests/fixtures` and commit");
+    }
+}
+
+#[test]
+fn committed_fixtures_are_valid_canonical_json() {
+    // Whatever is committed must parse with the in-repo parser and be in
+    // canonical pretty form (ending with exactly one newline) — catches
+    // hand-edited fixtures early.
+    let dir = fixture_dir();
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(_) => return, // nothing blessed yet
+    };
+    for entry in entries {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{}: invalid JSON: {e}", path.display()));
+        assert_eq!(
+            text,
+            format!("{}\n", doc.pretty()),
+            "{}: fixture must be canonical pretty JSON with one trailing newline",
+            path.display()
+        );
+    }
+}

@@ -314,6 +314,7 @@ fn sharded_serve_matches_oracle_and_is_thread_invariant() {
                 reconfig: true,
                 seed,
                 workload_scale: 0.05,
+                batch: 1,
             };
             let oracle = serve(&base).unwrap().to_json().pretty();
             for route in [RouteKind::RoundRobin, RouteKind::LeastLoaded] {
@@ -376,6 +377,7 @@ fn serve_trace_replay_round_trips_through_disk() {
         reconfig: true,
         seed: 0xBEEF,
         workload_scale: 0.05,
+        batch: 1,
     };
     let synth = serve(&cfg).unwrap();
     let trace = JobTrace::poisson(cfg.jobs, 1.0 / cfg.arrival_rate_hz, &serve_mix(), cfg.seed);
@@ -436,6 +438,7 @@ fn indexed_serve_matches_naive_oracle_across_policy_layout_seed_grid() {
                     reconfig,
                     seed,
                     workload_scale: 0.05,
+                    batch: 1,
                 };
                 let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
                 let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
@@ -447,4 +450,185 @@ fn indexed_serve_matches_naive_oracle_across_policy_layout_seed_grid() {
             }
         }
     }
+}
+
+#[test]
+fn batched_serve_matches_naive_oracle_across_policy_layout_seed_batch_grid() {
+    // The batching acceptance gate: with K > 1 the per-(profile,
+    // occupancy) open index, the occupancy-indexed cost/reward tables,
+    // the per-resident power cache and the seat-level dispatch must all
+    // agree with the naive full-rescan oracle's ServeReport *bit for
+    // bit* — every metric, including the float energy/fragmentation
+    // integrals — across the policy × layout × seed × K grid.
+    use migsim::cluster::{serve_with, LayoutPreset, PolicyKind, ServeConfig, ServeMode};
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [
+        LayoutPreset::Mixed,
+        LayoutPreset::AllSmall,
+        LayoutPreset::AllBig,
+    ];
+    for &policy in &policies {
+        for &layout in &layouts {
+            for &seed in &[7u64, 0xC0FFEE] {
+                for &batch in &[2u32, 4] {
+                    let cfg = ServeConfig {
+                        gpus: 3,
+                        policy,
+                        layout,
+                        // Saturating enough that co-residency actually
+                        // happens on every layout.
+                        arrival_rate_hz: 3.0,
+                        jobs: 40,
+                        deadline_s: 25.0,
+                        reconfig: true,
+                        seed,
+                        workload_scale: 0.05,
+                        batch,
+                    };
+                    let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
+                    let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
+                    assert_eq!(
+                        fast.to_json().pretty(),
+                        oracle.to_json().pretty(),
+                        "diverged: policy={policy:?} layout={layout:?} seed={seed:#x} \
+                         batch={batch}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_one_reproduces_the_unbatched_sharded_serve_bit_for_bit() {
+    // `--batch 1` must be the PR 3 system exactly — unsharded and
+    // sharded, at every thread count. The config is built with
+    // `ServeConfig::default()`'s batch, so this also pins the default.
+    use migsim::cluster::{
+        serve, serve_sharded, LayoutPreset, PolicyKind, ServeConfig, ShardServeConfig,
+    };
+    let base = ServeConfig {
+        gpus: 4,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: 2.0,
+        jobs: 40,
+        deadline_s: 25.0,
+        reconfig: true,
+        seed: 0xC0FFEE,
+        workload_scale: 0.05,
+        ..ServeConfig::default()
+    };
+    assert_eq!(base.batch, 1, "the default batch is the unbatched system");
+    let single = serve(&base).unwrap().to_json().pretty();
+    for threads in [1u32, 2] {
+        let scfg = ShardServeConfig::new(base.clone(), 1, threads);
+        let r = serve_sharded(&scfg).unwrap();
+        assert_eq!(r.report.to_json().pretty(), single, "threads={threads}");
+    }
+    for nodes in [2u32, 4] {
+        let mut first: Option<String> = None;
+        for threads in [1u32, 2, 4] {
+            let scfg = ShardServeConfig::new(base.clone(), nodes, threads);
+            let r = serve_sharded(&scfg).unwrap();
+            let key = r.report.to_json().pretty();
+            match &first {
+                None => first = Some(key),
+                Some(f) => assert_eq!(*f, key, "nodes={nodes} threads={threads}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_edge_cases_round_trip_through_disk_bit_for_bit() {
+    // Satellite: empty trace, single job, duplicate arrival timestamps,
+    // and non-monotone input — each canonicalizes and round-trips
+    // through an actual file byte-for-byte.
+    use migsim::workload::trace::{Job, JobTrace};
+    use migsim::workload::AppId;
+    let cases: Vec<(&str, JobTrace)> = vec![
+        ("empty", JobTrace { jobs: vec![] }),
+        (
+            "single",
+            JobTrace {
+                jobs: vec![Job {
+                    id: 0,
+                    app: AppId::Faiss,
+                    arrival_s: 1.25,
+                }],
+            },
+        ),
+        (
+            "duplicate-timestamps",
+            JobTrace {
+                jobs: vec![
+                    Job { id: 0, app: AppId::Faiss, arrival_s: 2.0 },
+                    Job { id: 1, app: AppId::Hotspot, arrival_s: 2.0 },
+                    Job { id: 2, app: AppId::Lammps, arrival_s: 2.0 },
+                ],
+            },
+        ),
+        (
+            "non-monotone",
+            JobTrace {
+                jobs: vec![
+                    Job { id: 9, app: AppId::Faiss, arrival_s: 5.5 },
+                    Job { id: 3, app: AppId::Hotspot, arrival_s: 0.125 },
+                    Job { id: 4, app: AppId::NekRs, arrival_s: 3.0 },
+                    Job { id: 1, app: AppId::Lammps, arrival_s: 3.0 },
+                ],
+            },
+        ),
+    ];
+    for (name, trace) in cases {
+        let canon = trace.canonicalized().unwrap();
+        // Canonical shape: dense ids in arrival order, stable among ties.
+        for (i, j) in canon.jobs.iter().enumerate() {
+            assert_eq!(j.id as usize, i, "{name}: ids must be dense");
+        }
+        for w in canon.jobs.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s, "{name}: must be sorted");
+        }
+        let text = canon.to_json().pretty();
+        let path = std::env::temp_dir().join(format!(
+            "migsim-trace-edge-{}-{}.json",
+            name,
+            std::process::id()
+        ));
+        std::fs::write(&path, &text).unwrap();
+        let reread = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(reread, text, "{name}: disk round trip must be exact");
+        let back = JobTrace::from_json(&Json::parse(&reread).unwrap()).unwrap();
+        assert_eq!(
+            back.to_json().pretty(),
+            text,
+            "{name}: parse→serialize must be bit-identical"
+        );
+        // Canonicalization is idempotent.
+        assert_eq!(back.canonicalized().unwrap().to_json().pretty(), text);
+        let _ = std::fs::remove_file(path);
+    }
+    // Duplicate timestamps keep their relative (stable) order.
+    let dup = JobTrace {
+        jobs: vec![
+            Job { id: 5, app: AppId::Faiss, arrival_s: 2.0 },
+            Job { id: 6, app: AppId::Hotspot, arrival_s: 2.0 },
+        ],
+    }
+    .canonicalized()
+    .unwrap();
+    assert_eq!(dup.jobs[0].app, AppId::Faiss);
+    assert_eq!(dup.jobs[1].app, AppId::Hotspot);
+    // An empty trace is rejected by replay (nothing to serve).
+    let empty = JobTrace { jobs: vec![] };
+    assert!(migsim::cluster::serve_replay(
+        &migsim::cluster::ServeConfig::default(),
+        &empty
+    )
+    .is_err());
 }

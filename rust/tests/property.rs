@@ -162,6 +162,7 @@ fn cluster_serve_is_deterministic_for_a_fixed_seed() {
         reconfig: true,
         seed: 0xC0FFEE,
         workload_scale: 0.05,
+        batch: 1,
     };
     let a = serve(&cfg).unwrap();
     let b = serve(&cfg).unwrap();
@@ -206,6 +207,9 @@ fn sharded_serve_properties_under_random_configs() {
             reconfig: rng.chance(0.5),
             seed: rng.below(1 << 30),
             workload_scale: 0.05,
+            // Random batch depth: the sharded invariants must hold with
+            // co-residency in play too.
+            batch: 1 + rng.below(3) as u32,
         };
         let mut scfg = ShardServeConfig::new(base, nodes, 1);
         scfg.route = if rng.chance(0.5) {
@@ -239,6 +243,128 @@ fn sharded_serve_properties_under_random_configs() {
         assert_eq!(out, a.handoffs, "case {case}");
         if !scfg.forward || nodes == 1 {
             assert_eq!(a.handoffs, 0, "case {case}: forwarding was disabled");
+        }
+    }
+}
+
+#[test]
+fn batched_slot_accounting_invariants_under_random_churn() {
+    // Randomized shared-slot accounting (the MPS-within-MIG invariants):
+    // occupancy never exceeds K, the slice memory budget is never
+    // overcommitted, the co-residency slowdown is monotone non-decreasing
+    // in residents, the incremental index tracks the scan truth, and
+    // fully draining the fleet restores the unbatched placement decisions
+    // exactly.
+    use migsim::cluster::{Fleet, Planner};
+    use migsim::workload::AppId;
+    let apps = [
+        AppId::Faiss,
+        AppId::Hotspot,
+        AppId::Llama3Fp16,
+        AppId::Qiskit31,
+        AppId::NekRs,
+    ];
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    for batch in [2u32, 4, 7] {
+        let mut rng = Rng::new(0xBA7C + batch as u64);
+        let mut fleet = Fleet::with_batch(3, LayoutPreset::Mixed, batch).unwrap();
+        let mut pl = Planner::with_batch(0.05, batch);
+        let seats0 = fleet.open_sm_seats();
+        let mut running: Vec<(usize, usize, u32)> = Vec::new();
+        let mut next_job = 0u32;
+        for step in 0..250u32 {
+            if rng.chance(0.55) {
+                let app = *rng.choose(&apps);
+                let policy = *rng.choose(&policies);
+                if let Some((g, s, c)) = pl.place(&fleet, app, policy) {
+                    // Differential: the naive scan picks the same seat.
+                    let scan = pl.place_scan(&fleet, app, policy).map(|(g, s, _)| (g, s));
+                    assert_eq!(scan, Some((g, s)), "batch {batch} step {step}");
+                    fleet.start_job(
+                        g,
+                        s,
+                        next_job,
+                        step as f64,
+                        step as f64 + 5.0,
+                        c.resident_gib + pl.ctx_gib(),
+                    );
+                    running.push((g, s, next_job));
+                    next_job += 1;
+                }
+            } else if !running.is_empty() {
+                let i = rng.below(running.len() as u64) as usize;
+                let (g, s, job) = running.swap_remove(i);
+                assert!(fleet.finish_job(g, s, job, step as f64));
+            }
+            // Invariants after every mutation.
+            assert_eq!(fleet.busy_sms(), fleet.busy_sms_scan());
+            assert_eq!(fleet.open_sm_seats(), fleet.open_sm_seats_scan());
+            assert_eq!(
+                fleet.largest_open_slot_gib(),
+                fleet.largest_open_slot_gib_scan()
+            );
+            for gpu in &fleet.gpus {
+                for slot in &gpu.slots {
+                    assert!(
+                        slot.occupancy() as u32 <= batch,
+                        "batch {batch}: occupancy exceeded K"
+                    );
+                    assert!(
+                        slot.charged_gib() <= slot.profile.mem_gib + 1e-9,
+                        "batch {batch}: slice memory overcommitted \
+                         ({} GiB charged on {})",
+                        slot.charged_gib(),
+                        slot.profile.name
+                    );
+                }
+            }
+        }
+        // Slowdown monotonicity over every co-residency class.
+        for app in apps {
+            for pid in migsim::mig::profile::ALL_PROFILES {
+                for allow in [false, true] {
+                    let mut prev: Option<f64> = None;
+                    for occ in 1..=batch {
+                        if let Some(c) = pl.cost_at(app, pid, allow, occ) {
+                            if let Some(p) = prev {
+                                assert!(
+                                    c.runtime_s >= p,
+                                    "{app:?} {pid:?} occ={occ}: slowdown not monotone"
+                                );
+                            }
+                            prev = Some(c.runtime_s);
+                        }
+                    }
+                }
+            }
+        }
+        // Drain everything: the fleet must be exactly the unbatched-empty
+        // state again — zero charge, full seats, and placement decisions
+        // identical to a fresh fleet's.
+        for (g, s, job) in running.drain(..) {
+            assert!(fleet.finish_job(g, s, job, 1e6));
+        }
+        assert_eq!(fleet.busy_sms(), 0);
+        assert_eq!(fleet.open_sm_seats(), seats0);
+        for gpu in &fleet.gpus {
+            for slot in &gpu.slots {
+                assert_eq!(slot.charged_gib(), 0.0, "drained slot must charge 0.0 exactly");
+            }
+        }
+        let fresh = Fleet::with_batch(3, LayoutPreset::Mixed, batch).unwrap();
+        let mut fresh_pl = Planner::with_batch(0.05, batch);
+        for app in apps {
+            for policy in policies {
+                assert_eq!(
+                    pl.place(&fleet, app, policy).map(|(g, s, _)| (g, s)),
+                    fresh_pl.place(&fresh, app, policy).map(|(g, s, _)| (g, s)),
+                    "drained fleet must place like a fresh one ({app:?} {policy:?})"
+                );
+            }
         }
     }
 }
