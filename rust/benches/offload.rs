@@ -1,0 +1,196 @@
+//! Host-memory-plane benchmarks: per-decision cost of the contended
+//! offload-aware walk (per-share class enumeration + host-pool gate)
+//! through the indexed path (`Planner::place`) vs the naive full fleet
+//! scan (`Planner::place_scan`), and end-to-end `cluster::serve` runs on
+//! an offload-heavy all-small fleet with the plane off, with C2C link
+//! contention on, and with a finite Grace pool.
+//!
+//! Besides the human-readable report (and the standard
+//! `results/bench/offload.json`), this bench emits `BENCH_offload.json`
+//! — machine-readable ns/decision, contended-vs-naive speedups, and
+//! serve events/s per plane configuration — so the perf trajectory of
+//! the contended path is tracked across PRs.
+//!
+//!     cargo bench --offline --bench offload          # full measurement
+//!     cargo bench --offline --bench offload -- --smoke   # CI bit-rot check
+
+use migsim::bench::{black_box, BenchConfig, BenchResult, Bencher};
+use migsim::cluster::hostmem::gib_to_bytes;
+use migsim::cluster::{serve, Fleet, LayoutPreset, Planner, PolicyKind, ServeConfig};
+use migsim::util::json::Json;
+use migsim::workload::AppId;
+use std::time::Duration;
+
+const APPS: [AppId; 5] = [
+    AppId::Faiss,
+    AppId::Hotspot,
+    AppId::Llama3Fp16,
+    AppId::Qiskit31,
+    AppId::FaissLarge,
+];
+
+fn ns_per_work(r: &BenchResult) -> f64 {
+    r.mean_s * 1e9 / r.work_per_iter.unwrap_or(1.0)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let smoke = b.smoke();
+    let gpus: u32 = if smoke { 8 } else { 64 };
+    let policy = PolicyKind::OffloadAware { alpha_centi: 10 };
+
+    // An offload-heavy steady state: all-small fleet where every GPU but
+    // the last carries one offloaded llama (a distinct link-share level
+    // mix) plus direct residents on part of its remaining slots — the
+    // regime where the contended walk has real per-share classes and the
+    // memory/host gates actually fire.
+    let mut fleet = Fleet::with_batch(gpus, LayoutPreset::AllSmall, 1).unwrap();
+    let mut seed_pl = Planner::with_opts(0.05, 1, true, 0.0);
+    let mut job = 0u32;
+    for g in 0..(gpus as usize - 1) {
+        let c = seed_pl.cost(AppId::Llama3Fp16, migsim::mig::ProfileId::P1g12gb, true).unwrap();
+        fleet.start_job(
+            g,
+            0,
+            job,
+            0.0,
+            1e9,
+            c.resident_gib + seed_pl.ctx_gib(),
+            gib_to_bytes(c.host_gib),
+        );
+        job += 1;
+        // Fill slots 1..4 with direct residents so first-fit shortcuts
+        // cannot trivialize the walk.
+        for s in 1..4 {
+            fleet.start_job(g, s, job, 0.0, 1e9, 0.5, 0);
+            job += 1;
+        }
+    }
+
+    let mut decisions = Vec::new();
+    for (tag, contention) in [("private_link", false), ("contended_link", true)] {
+        let mut planner = Planner::with_opts(0.05, 1, contention, 0.0);
+        for app in APPS {
+            black_box(planner.place(&fleet, app, policy));
+            black_box(planner.place_scan(&fleet, app, policy));
+        }
+        let warm = b
+            .bench_with_work(
+                &format!("offload/warm_{tag}"),
+                Some(APPS.len() as f64),
+                "decisions",
+                || {
+                    let mut acc = 0usize;
+                    for app in APPS {
+                        if planner.place(&fleet, app, policy).is_some() {
+                            acc += 1;
+                        }
+                    }
+                    acc
+                },
+            )
+            .cloned();
+        let naive = b
+            .bench_with_work(
+                &format!("offload/naive_{tag}"),
+                Some(APPS.len() as f64),
+                "decisions",
+                || {
+                    let mut acc = 0usize;
+                    for app in APPS {
+                        if planner.place_scan(&fleet, app, policy).is_some() {
+                            acc += 1;
+                        }
+                    }
+                    acc
+                },
+            )
+            .cloned();
+        if let (Some(warm), Some(naive)) = (warm, naive) {
+            let (wi, ni) = (ns_per_work(&warm), ns_per_work(&naive));
+            let mut o = Json::obj();
+            o.set("mode", tag)
+                .set("indexed_ns_per_decision", wi)
+                .set("naive_ns_per_decision", ni)
+                .set("speedup", ni / wi.max(1e-12));
+            decisions.push(o);
+        }
+    }
+
+    // End-to-end serving: the same offload-heavy stream with the plane
+    // off, with link contention, and with a finite Grace pool gating
+    // admission. Macro runs get their own (lighter) iteration budget.
+    let jobs: u32 = if smoke { 300 } else { 5_000 };
+    let mut mb = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(200),
+        max_iters: 8,
+    });
+    let mut serve_results = Vec::new();
+    for (tag, contention, pool) in [
+        ("plane_off", false, f64::INFINITY),
+        ("contended_inf_pool", true, f64::INFINITY),
+        ("contended_finite_pool", true, 16.0),
+    ] {
+        let cfg = ServeConfig {
+            gpus,
+            policy,
+            layout: LayoutPreset::AllSmall,
+            arrival_rate_hz: if smoke { 4.0 } else { 20.0 },
+            jobs,
+            deadline_s: 45.0,
+            reconfig: false,
+            seed: 7,
+            workload_scale: 0.05,
+            batch: 1,
+            host_pool_gib: pool,
+            c2c_contention: contention,
+            energy_weight: 0.0,
+        };
+        let report = serve(&cfg).unwrap();
+        let res = mb
+            .bench_with_work(
+                &format!("serve_offload/{tag}_{jobs}jobs_{gpus}gpus"),
+                Some(report.events as f64),
+                "events",
+                || serve(&cfg).unwrap().completed,
+            )
+            .cloned();
+        if let Some(res) = res {
+            let mut o = Json::obj();
+            o.set("mode", tag)
+                .set("c2c_contention", contention)
+                .set(
+                    "pool_gib",
+                    if pool.is_infinite() {
+                        Json::Str("inf".into())
+                    } else {
+                        Json::Num(pool)
+                    },
+                )
+                .set("gpus", cfg.gpus)
+                .set("jobs", cfg.jobs)
+                .set("completed", report.completed)
+                .set("offloaded", report.offloaded)
+                .set("events", report.events)
+                .set("events_per_s", report.events as f64 / res.mean_s)
+                .set("wall_s_per_run", res.mean_s);
+            serve_results.push(o);
+        }
+    }
+
+    // Machine-readable perf trajectory for the PR log.
+    let mut doc = Json::obj();
+    doc.set("suite", "offload")
+        .set("smoke", smoke)
+        .set("gpus", gpus)
+        .set("decisions", Json::Arr(decisions))
+        .set("serve", Json::Arr(serve_results));
+    if std::fs::write("BENCH_offload.json", doc.pretty()).is_ok() {
+        println!("-- wrote BENCH_offload.json");
+    }
+
+    b.finish("offload");
+    mb.finish("offload_serve");
+}

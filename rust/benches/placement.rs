@@ -47,7 +47,7 @@ fn main() {
     let mut job = 0u32;
     for g in 0..(gpus as usize - 1) {
         for s in 0..fleet.gpus[g].slots.len() {
-            fleet.start_job(g, s, job, 0.0, 1e9, 0.5);
+            fleet.start_job(g, s, job, 0.0, 1e9, 0.5, 0);
             job += 1;
         }
     }
@@ -116,7 +116,7 @@ fn main() {
     let mut job = 0u32;
     for g in 0..(gpus as usize - 1) {
         for s in 0..bfleet.gpus[g].slots.len() {
-            bfleet.start_job(g, s, job, 0.0, 1e9, 0.5);
+            bfleet.start_job(g, s, job, 0.0, 1e9, 0.5, 0);
             job += 1;
         }
     }
@@ -214,6 +214,7 @@ fn main() {
             seed: 7,
             workload_scale: 0.05,
             batch,
+            ..ServeConfig::default()
         };
         let report = serve(&cfg).unwrap();
         let res = mb

@@ -48,6 +48,7 @@ fn main() {
         seed: 7,
         workload_scale: 0.05,
         batch: 1,
+        ..ServeConfig::default()
     };
 
     // Unsharded single-loop baseline: one queue, one clock, one core —

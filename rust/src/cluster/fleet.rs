@@ -43,12 +43,25 @@
 //!   GPU), so the dispatcher can memoize placement failures until the
 //!   fleet could possibly satisfy them.
 //!
+//! ## The host-memory plane
+//!
+//! A `Fleet` is the GPU set of one node, and a node carries one Grace
+//! host-memory pool (`cluster::hostmem::HostPool`): every offloaded
+//! resident charges its spilled bytes against it for as long as it runs
+//! (integer-byte accounting — draining the fleet restores the pool to its
+//! initial bytes exactly). Each GPU additionally keeps a live count of
+//! its *offloading* residents (`FleetGpu::offloaders`) — the C2C
+//! link-share aggregate the contention-aware cost model divides the
+//! direct-access bandwidth by. Both have `*_scan` oracles recomputed from
+//! the raw resident lists.
+//!
 //! Mutations must flow through the `Fleet` methods (`start_job`,
 //! `finish_job`, `begin_reconfig`, `finish_reconfig`); mutating
 //! `fleet.gpus[..]` directly bypasses the index. The `*_scan` variants
 //! recompute the same quantities from the raw slots and serve as the
 //! differential-test oracle.
 
+use super::hostmem::HostPool;
 use crate::gpu::GpuSpec;
 use crate::mig::profile::{GiProfile, ProfileId, ALL_PROFILES, NUM_PROFILES};
 use crate::mig::MigManager;
@@ -69,6 +82,11 @@ pub struct Resident {
     /// Memory charged to the slice for this job: resident footprint after
     /// any offloading, plus the per-process MIG context (GiB).
     pub charged_gib: f64,
+    /// Bytes parked in the node's Grace host pool while this job runs
+    /// (its offload spill; 0 for a job running fully resident). A
+    /// resident with `host_bytes > 0` is an *offloader* and time-shares
+    /// the GPU's C2C link.
+    pub host_bytes: u64,
 }
 
 /// One MIG instance acting as a serving slot for up to `Fleet::batch`
@@ -215,6 +233,10 @@ pub struct FleetGpu {
     busy_slots: u32,
     /// Live counter of SMs running jobs (maintained by `Fleet`).
     busy_sms_count: u32,
+    /// Live count of offloading residents across this GPU's slices — the
+    /// C2C link-share aggregate (maintained by `Fleet`). The single
+    /// NVLink-C2C link is time-shared by all of them.
+    offloaders_count: u32,
 }
 
 impl FleetGpu {
@@ -230,6 +252,7 @@ impl FleetGpu {
             reconfigs: 0,
             busy_slots: 0,
             busy_sms_count: 0,
+            offloaders_count: 0,
         })
     }
 
@@ -256,6 +279,23 @@ impl FleetGpu {
             .filter(|s| !s.is_idle())
             .map(|s| s.profile.sms)
             .sum()
+    }
+
+    /// Offloading residents currently sharing this GPU's C2C link (O(1)
+    /// live counter). A newcomer that offloads would share the link
+    /// `offloaders() + 1` ways.
+    pub fn offloaders(&self) -> u32 {
+        self.offloaders_count
+    }
+
+    /// Offloading residents recomputed from the slots — the
+    /// differential-test oracle for `offloaders`.
+    pub fn offloaders_scan(&self) -> u32 {
+        self.slots
+            .iter()
+            .flat_map(|s| s.residents.iter())
+            .filter(|r| r.host_bytes > 0)
+            .count() as u32
     }
 
     /// The layout this GPU will have once any in-flight reconfiguration
@@ -356,6 +396,8 @@ pub struct Fleet {
     pub spec: GpuSpec,
     /// Max co-resident jobs per slot (1 = classic one-job-per-slot).
     batch: u32,
+    /// The node's Grace host-memory pool (offload spill lives here).
+    host_pool: HostPool,
     index: FleetIndex,
 }
 
@@ -366,8 +408,20 @@ impl Fleet {
     }
 
     /// A fleet whose slots host up to `batch` co-resident jobs under MPS
-    /// semantics. `batch = 1` reproduces the unbatched system exactly.
+    /// semantics, with an unlimited host pool. `batch = 1` reproduces the
+    /// unbatched system exactly.
     pub fn with_batch(gpus: u32, preset: LayoutPreset, batch: u32) -> crate::Result<Fleet> {
+        Fleet::with_hostmem(gpus, preset, batch, f64::INFINITY)
+    }
+
+    /// A fleet whose node carries a finite Grace host pool of
+    /// `host_pool_gib` GiB (`inf` = unlimited, the pre-plane model).
+    pub fn with_hostmem(
+        gpus: u32,
+        preset: LayoutPreset,
+        batch: u32,
+        host_pool_gib: f64,
+    ) -> crate::Result<Fleet> {
         ensure!(gpus >= 1, "fleet needs at least one GPU");
         ensure!(
             (1..=MAX_BATCH).contains(&batch),
@@ -388,6 +442,7 @@ impl Fleet {
             gpus,
             spec: GpuSpec::gh_h100_96gb(),
             batch,
+            host_pool: HostPool::new(host_pool_gib)?,
             index,
         })
     }
@@ -395,6 +450,47 @@ impl Fleet {
     /// Max co-resident jobs per slot.
     pub fn batch(&self) -> u32 {
         self.batch
+    }
+
+    /// Node host-pool capacity (`None` = unlimited).
+    pub fn host_capacity_bytes(&self) -> Option<u64> {
+        self.host_pool.capacity_bytes()
+    }
+
+    /// Bytes currently parked in the node's host pool (O(1) live
+    /// counter).
+    pub fn host_used_bytes(&self) -> u64 {
+        self.host_pool.used_bytes()
+    }
+
+    /// `host_used_bytes` recomputed from the raw resident lists — the
+    /// differential-test oracle. Integer bytes, so equality is exact.
+    pub fn host_used_bytes_scan(&self) -> u64 {
+        self.gpus
+            .iter()
+            .flat_map(|g| g.slots.iter())
+            .flat_map(|s| s.residents.iter())
+            .map(|r| r.host_bytes)
+            .sum()
+    }
+
+    /// Remaining host-pool headroom (`u64::MAX` when unlimited).
+    pub fn host_headroom_bytes(&self) -> u64 {
+        self.host_pool.headroom_bytes()
+    }
+
+    /// Host-pool admission gate: can `bytes` more spill be parked?
+    pub fn host_fits(&self, bytes: u64) -> bool {
+        self.host_pool.fits(bytes)
+    }
+
+    /// `host_fits` evaluated against the scanned (not live) pool usage —
+    /// the naive oracle's gate.
+    pub fn host_fits_scan(&self, bytes: u64) -> bool {
+        match self.host_pool.capacity_bytes() {
+            None => true,
+            Some(c) => self.host_used_bytes_scan().saturating_add(bytes) <= c,
+        }
     }
 
     /// Physical SMs across the fleet.
@@ -458,6 +554,35 @@ impl Fleet {
             .iter()
             .copied()
             .find(|&(g, s)| occ == 0 || self.gpus[g].slots[s].fits(need_gib))
+    }
+
+    /// Like `first_open_fitting`, but one candidate per distinct C2C
+    /// link-share level: walking the `(profile, occ)` open set in
+    /// `(gpu, slot)` order, record the first fitting slot for each
+    /// distinct offloader count among the slots' GPUs. The contended
+    /// offload-aware walk needs this because slots of one class no longer
+    /// tie on cost when their GPUs host different numbers of
+    /// co-offloaders — but within one share level they still do.
+    /// Output entries `(gpu, slot, existing_offloaders)` come out in
+    /// ascending `(gpu, slot)` order.
+    pub fn first_open_fitting_per_share(
+        &self,
+        profile: ProfileId,
+        occ: usize,
+        need_gib: f64,
+        out: &mut Vec<(usize, usize, u32)>,
+    ) {
+        out.clear();
+        for &(g, s) in self.index.open[occ][profile.index()].iter() {
+            if occ != 0 && !self.gpus[g].slots[s].fits(need_gib) {
+                continue;
+            }
+            let share = self.gpus[g].offloaders();
+            if out.iter().any(|&(_, _, sh)| sh == share) {
+                continue;
+            }
+            out.push((g, s, share));
+        }
     }
 
     /// SMs of empty serving slots (reconfiguring GPUs excluded).
@@ -536,6 +661,38 @@ impl Fleet {
             .fold(0.0f64, f64::max)
     }
 
+    /// Largest remaining memory headroom (GiB) among *occupied* slots
+    /// that still have a free seat — the `Slot::fits`-based cross-node
+    /// compatibility signal for forwarding a job onto a partially-filled
+    /// slot: a target shard whose only open seats sit on memory-full
+    /// slots must not receive jobs that would bounce on arrival. 0 when
+    /// no occupied slot has a seat (always at `batch = 1`). Walks the
+    /// occupied open sets (O(open occupied slots); barrier-time only).
+    pub fn max_open_headroom_gib(&self) -> f64 {
+        let mut best = 0.0f64;
+        for sets in self.index.open.iter().skip(1) {
+            for p in ALL_PROFILES {
+                for &(g, s) in sets[p.index()].iter() {
+                    let slot = &self.gpus[g].slots[s];
+                    best = best.max(slot.profile.mem_gib - slot.charged_gib());
+                }
+            }
+        }
+        best
+    }
+
+    /// `max_open_headroom_gib` recomputed by a full slot scan — the
+    /// differential-test oracle.
+    pub fn max_open_headroom_gib_scan(&self) -> f64 {
+        self.gpus
+            .iter()
+            .filter(|g| !g.reconfiguring())
+            .flat_map(|g| g.slots.iter())
+            .filter(|s| s.occupancy() >= 1 && (s.occupancy() as u32) < self.batch)
+            .map(|s| s.profile.mem_gib - s.charged_gib())
+            .fold(0.0f64, f64::max)
+    }
+
     /// Whether any GPU's *effective* layout (post-reconfiguration if one
     /// is in flight) contains `profile`.
     pub fn has_layout_class(&self, profile: ProfileId) -> bool {
@@ -550,8 +707,11 @@ impl Fleet {
 
     /// Admit `job` onto a slot seat until `until_s`, charging
     /// `charged_gib` (resident footprint + per-process context) against
-    /// the slice's memory. The slot must have a free seat; memory-fit is
-    /// the placement policy's responsibility (`first_open_fitting`).
+    /// the slice's memory and `host_bytes` of offload spill against the
+    /// node's Grace pool (0 for a fully-resident job). The slot must have
+    /// a free seat; memory-fit and host-pool headroom are the placement
+    /// policy's responsibility (`first_open_fitting`, `host_fits`).
+    #[allow(clippy::too_many_arguments)]
     pub fn start_job(
         &mut self,
         gpu: usize,
@@ -560,8 +720,10 @@ impl Fleet {
         now: f64,
         until_s: f64,
         charged_gib: f64,
+        host_bytes: u64,
     ) {
         let batch = self.batch as usize;
+        debug_assert!(self.host_pool.fits(host_bytes), "host pool overcommitted");
         let g = &mut self.gpus[gpu];
         let s = &mut g.slots[slot];
         let occ = s.residents.len();
@@ -575,6 +737,7 @@ impl Fleet {
             started_s: now,
             until_s,
             charged_gib,
+            host_bytes,
         });
         let sms = s.profile.sms;
         let pid = s.profile.id;
@@ -582,6 +745,10 @@ impl Fleet {
             g.busy_slots += 1;
             g.busy_sms_count += sms;
             self.index.busy_sms += sms;
+        }
+        if host_bytes > 0 {
+            g.offloaders_count += 1;
+            self.host_pool.charge(host_bytes);
         }
         self.index.open[occ][pid.index()].remove(&(gpu, slot));
         if occ + 1 < batch {
@@ -605,6 +772,10 @@ impl Fleet {
         s.busy_accum_s += now - r.started_s;
         let sms = s.profile.sms;
         let pid = s.profile.id;
+        if r.host_bytes > 0 {
+            g.offloaders_count -= 1;
+            self.host_pool.release(r.host_bytes);
+        }
         if occ < batch {
             self.index.open[occ][pid.index()].remove(&(gpu, slot));
         }
@@ -764,7 +935,7 @@ mod tests {
     fn job_lifecycle_accounting() {
         let mut f = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
         assert_eq!(f.busy_sms(), 0);
-        f.start_job(0, 2, 42, 1.0, 5.0, 0.5);
+        f.start_job(0, 2, 42, 1.0, 5.0, 0.5, 0);
         assert_eq!(f.busy_sms(), 16);
         assert!(!f.gpus[0].all_idle());
         assert!(f.finish_job(0, 2, 42, 5.0));
@@ -778,7 +949,7 @@ mod tests {
         let mut f = Fleet::with_batch(1, LayoutPreset::AllBig, 3).unwrap();
         assert_eq!(f.batch(), 3);
         assert_eq!(f.open_sm_seats(), 132 * 3);
-        f.start_job(0, 0, 1, 0.0, 10.0, 2.0);
+        f.start_job(0, 0, 1, 0.0, 10.0, 2.0, 0);
         // Occupied slot: SMs fully busy, GPU no longer idle, seat count
         // down by one, still open to co-residents.
         assert_eq!(f.busy_sms(), 132);
@@ -786,7 +957,7 @@ mod tests {
         assert_eq!(f.idle_gpus().count(), 0);
         assert_eq!(f.first_idle(P7g96gb), None, "no empty slot left");
         assert_eq!(f.first_open_fitting(P7g96gb, 1, 3.0), Some((0, 0)));
-        f.start_job(0, 0, 2, 1.0, 8.0, 3.0);
+        f.start_job(0, 0, 2, 1.0, 8.0, 3.0, 0);
         assert_eq!(f.gpus[0].slots[0].occupancy(), 2);
         assert!((f.gpus[0].slots[0].charged_gib() - 5.0).abs() < 1e-12);
         assert_eq!(f.busy_sms(), 132, "co-residents share the same SMs");
@@ -795,7 +966,7 @@ mod tests {
         // offered the slot.
         assert_eq!(f.first_open_fitting(P7g96gb, 2, 90.0), None);
         assert_eq!(f.first_open_fitting(P7g96gb, 2, 80.0), Some((0, 0)));
-        f.start_job(0, 0, 3, 1.5, 9.0, 1.0);
+        f.start_job(0, 0, 3, 1.5, 9.0, 1.0, 0);
         assert_eq!(f.open_sm_seats(), 0, "slot full");
         // Finishing the middle resident frees a seat and bumps the epoch.
         let e = f.epoch();
@@ -817,7 +988,7 @@ mod tests {
     #[test]
     fn reconfig_requires_idle_and_validates() {
         let mut f = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
-        f.start_job(0, 0, 1, 0.0, 10.0, 0.5);
+        f.start_job(0, 0, 1, 0.0, 10.0, 0.5, 0);
         assert!(f
             .begin_reconfig(0, vec![P2g24gb, P2g24gb, P2g24gb, P1g12gb], 5.0)
             .is_err());
@@ -848,7 +1019,7 @@ mod tests {
         assert_eq!(f.fragmentation(None), 0.0);
         // All busy: nothing idle to strand.
         for i in 0..7 {
-            f.start_job(0, i, i as u32, 0.0, 1.0, 0.5);
+            f.start_job(0, i, i as u32, 0.0, 1.0, 0.5, 0);
         }
         assert_eq!(f.fragmentation(Some(16.0)), 0.0);
     }
@@ -917,6 +1088,11 @@ mod tests {
         assert_eq!(f.idle_slot_sms(), idle_sms_scan);
         assert_eq!(f.open_sm_seats(), f.open_sm_seats_scan());
         assert_eq!(f.largest_open_slot_gib(), f.largest_open_slot_gib_scan());
+        assert_eq!(f.max_open_headroom_gib(), f.max_open_headroom_gib_scan());
+        assert_eq!(f.host_used_bytes(), f.host_used_bytes_scan());
+        for gpu in &f.gpus {
+            assert_eq!(gpu.offloaders(), gpu.offloaders_scan(), "gpu {}", gpu.id);
+        }
         if f.batch() == 1 {
             // The batched headroom signals must degenerate to the idle
             // signals exactly — the two API families may never drift.
@@ -939,6 +1115,71 @@ mod tests {
                 .any(|n| n.effective_layout().contains(&pid));
             assert_eq!(f.has_layout_class(pid), present_scan, "{pid:?}");
         }
+    }
+
+    #[test]
+    fn host_pool_and_offloader_accounting_lifecycle() {
+        // Finite pool: charges at start, releases at finish, exact zero
+        // after a full drain; per-GPU offloader counts track residents
+        // with host bytes.
+        let mut f = Fleet::with_hostmem(2, LayoutPreset::AllSmall, 1, 8.0).unwrap();
+        assert_eq!(f.host_capacity_bytes(), Some(8 << 30));
+        let spill_a = 5 << 30;
+        let spill_b = 2 << 30;
+        assert!(f.host_fits(spill_a));
+        f.start_job(0, 0, 1, 0.0, 10.0, 10.9, spill_a);
+        assert_eq!(f.gpus[0].offloaders(), 1);
+        assert_eq!(f.host_used_bytes(), spill_a);
+        assert!(f.host_fits(spill_b));
+        assert!(!f.host_fits(4 << 30), "8 GiB pool refuses 5 + 4");
+        f.start_job(1, 0, 2, 0.0, 10.0, 10.9, spill_b);
+        assert_eq!(f.gpus[1].offloaders(), 1);
+        // A fully-resident job is no offloader and charges nothing.
+        f.start_job(0, 1, 3, 0.0, 10.0, 0.5, 0);
+        assert_eq!(f.gpus[0].offloaders(), 1);
+        assert_eq!(f.host_used_bytes(), spill_a + spill_b);
+        assert_eq!(f.host_used_bytes(), f.host_used_bytes_scan());
+        assert!(f.finish_job(0, 0, 1, 5.0));
+        assert_eq!(f.gpus[0].offloaders(), 0);
+        assert_eq!(f.host_used_bytes(), spill_b);
+        assert!(f.finish_job(1, 0, 2, 6.0));
+        assert!(f.finish_job(0, 1, 3, 7.0));
+        assert_eq!(f.host_used_bytes(), 0, "drain restores the pool exactly");
+        assert_eq!(f.host_headroom_bytes(), 8 << 30);
+        // The unlimited pool never gates.
+        let inf = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
+        assert_eq!(inf.host_capacity_bytes(), None);
+        assert!(inf.host_fits(u64::MAX));
+        assert!(Fleet::with_hostmem(1, LayoutPreset::AllSmall, 1, 0.0).is_err());
+    }
+
+    #[test]
+    fn per_share_open_walk_matches_scan_truth() {
+        // Three all-big GPUs with 0 / 1 / 2 offloaders: the per-share walk
+        // must surface the first open slot of each distinct link-share
+        // level, in (gpu, slot) order.
+        let mut f = Fleet::with_batch(3, LayoutPreset::AllBig, 4).unwrap();
+        f.start_job(1, 0, 1, 0.0, 10.0, 20.0, 1 << 30);
+        f.start_job(2, 0, 2, 0.0, 10.0, 20.0, 1 << 30);
+        f.start_job(2, 0, 3, 0.0, 10.0, 20.0, 1 << 30);
+        let mut out = Vec::new();
+        // Empty slots (occ 0): only GPU 0's slot is empty.
+        f.first_open_fitting_per_share(P7g96gb, 0, 5.0, &mut out);
+        assert_eq!(out, vec![(0, 0, 0)]);
+        // Occupied open seats (occ 1 / 2) carry their GPU's share level.
+        f.first_open_fitting_per_share(P7g96gb, 1, 5.0, &mut out);
+        assert_eq!(out, vec![(1, 0, 1)]);
+        f.first_open_fitting_per_share(P7g96gb, 2, 5.0, &mut out);
+        assert_eq!(out, vec![(2, 0, 2)]);
+        // The memory gate still applies to occupied slots.
+        f.first_open_fitting_per_share(P7g96gb, 1, 90.0, &mut out);
+        assert!(out.is_empty());
+        // Duplicate share levels keep only the first (gpu, slot).
+        let mut g = Fleet::with_batch(2, LayoutPreset::AllBig, 2).unwrap();
+        g.start_job(0, 0, 1, 0.0, 10.0, 20.0, 1 << 30);
+        g.start_job(1, 0, 2, 0.0, 10.0, 20.0, 1 << 30);
+        g.first_open_fitting_per_share(P7g96gb, 1, 5.0, &mut out);
+        assert_eq!(out, vec![(0, 0, 1)]);
     }
 
     #[test]
@@ -966,6 +1207,10 @@ mod tests {
                                     step as f64,
                                     step as f64 + 5.0,
                                     0.25,
+                                    // Every third job parks spill in the
+                                    // host pool (exercises the offloader
+                                    // counters through the lifecycle).
+                                    if next_job % 3 == 0 { 1 << 28 } else { 0 },
                                 );
                                 next_job += 1;
                             }

@@ -1,0 +1,247 @@
+//! The host-memory resource plane: finite Grace pools and contended
+//! C2C links as first-class cluster resources.
+//!
+//! The paper's offloading story (§VI-A) bridges the gap between coarse
+//! MIG slices and application memory by spilling data to CPU DRAM and
+//! streaming it back over cache-coherent NVLink-C2C. Two physical
+//! resources back that mechanism, and both are finite and shared:
+//!
+//! - **The Grace host pool.** Each node carries one CPU DRAM pool; every
+//!   offloaded resident parks its spilled bytes there for as long as it
+//!   runs. The pool is a *node*-level resource (one Grace socket per
+//!   superchip node), so admission of an offloaded job must be gated on
+//!   pool headroom — host DRAM is not infinite, and overcommitting it
+//!   would mean paging, not serving.
+//! - **The C2C link.** Each GPU has exactly one NVLink-C2C link to its
+//!   Grace socket. The direct-access bandwidth (`gpu::nvlink`, Table IVb)
+//!   is a property of the *link*, not of a MIG slice: when several
+//!   offloading residents run on one GPU — across slices — they
+//!   time-share it. Modeling the link as private to each job (as the
+//!   pre-plane serving layer did) is optimistic exactly where the paper
+//!   warns of shared-resource interference; MISO and the
+//!   fragmentation-aware MIG schedulers report the same failure mode for
+//!   other contended channels.
+//!
+//! This module holds the plane's configuration and the pool accounting
+//! primitive. The live state lives where the rest of the serving state
+//! lives: `cluster::fleet` carries the per-node `HostPool` and per-GPU
+//! offload-resident counters (the link-share aggregate), and
+//! `cluster::placement` folds the contention level into its cost tables
+//! — a job sharing the link with `n − 1` co-offloaders sees `1/n` of the
+//! direct-access rate, the classic equal-time-share model.
+//!
+//! ## Exactness
+//!
+//! Pool accounting is integer bytes (`gib_to_bytes` rounds once, at
+//! admission), so charging and releasing the same residents — in any
+//! order — restores the pool to its initial bytes *exactly*: no float
+//! drift, and the scan oracle (`Fleet::host_used_bytes_scan`) is
+//! trivially bit-equal. With `pool_gib = inf` and `c2c_contention = off`
+//! (the defaults) every gate passes and every share is 1, so the serving
+//! layer reproduces the pre-plane reports bit-for-bit — the golden
+//! fixtures enforce that.
+
+use anyhow::ensure;
+
+/// Configuration of the host-memory plane for one serving run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostMemConfig {
+    /// Grace host-memory pool per node (GiB). `f64::INFINITY` disables
+    /// the admission gate (the pre-plane behaviour).
+    pub pool_gib: f64,
+    /// Time-share the per-GPU C2C link across co-offloading residents.
+    /// `false` keeps the pre-plane private-link model.
+    pub c2c_contention: bool,
+}
+
+impl Default for HostMemConfig {
+    fn default() -> Self {
+        HostMemConfig {
+            pool_gib: f64::INFINITY,
+            c2c_contention: false,
+        }
+    }
+}
+
+impl HostMemConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        ensure!(
+            self.pool_gib > 0.0,
+            "host pool must be positive GiB (or inf), got {}",
+            self.pool_gib
+        );
+        Ok(())
+    }
+}
+
+/// Parse a `--host-pool` argument: `inf` (no limit) or a positive GiB
+/// count.
+pub fn parse_pool_gib(s: &str) -> Option<f64> {
+    if s == "inf" {
+        return Some(f64::INFINITY);
+    }
+    let v: f64 = s.parse().ok()?;
+    if v.is_finite() && v > 0.0 {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+/// GiB → bytes with one deterministic rounding. All pool accounting is
+/// integer bytes from here on. This is the shared `util::units`
+/// converter, the same function backing `OffloadPlan::host_bytes`, so
+/// plan-level and plane-level accounting agree by construction (and a
+/// test below pins it).
+pub use crate::util::units::gib_to_bytes;
+
+/// One node's Grace host-memory pool: capacity + live integer-byte
+/// accounting. `None` capacity means unlimited (the pre-plane model).
+#[derive(Debug, Clone)]
+pub struct HostPool {
+    capacity_bytes: Option<u64>,
+    used_bytes: u64,
+}
+
+impl HostPool {
+    /// A pool of `pool_gib` GiB; `inf` builds an unlimited pool.
+    pub fn new(pool_gib: f64) -> crate::Result<HostPool> {
+        ensure!(
+            pool_gib > 0.0,
+            "host pool must be positive GiB (or inf), got {pool_gib}"
+        );
+        Ok(HostPool {
+            capacity_bytes: if pool_gib.is_infinite() {
+                None
+            } else {
+                Some(gib_to_bytes(pool_gib))
+            },
+            used_bytes: 0,
+        })
+    }
+
+    pub fn capacity_bytes(&self) -> Option<u64> {
+        self.capacity_bytes
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    /// Remaining headroom; `u64::MAX` when unlimited. Saturating: if a
+    /// release-build caller ever overcommitted (charge only
+    /// debug-asserts), an exhausted pool reports 0 headroom rather than
+    /// wrapping to near-`u64::MAX` and reading as unlimited.
+    pub fn headroom_bytes(&self) -> u64 {
+        match self.capacity_bytes {
+            None => u64::MAX,
+            Some(c) => c.saturating_sub(self.used_bytes),
+        }
+    }
+
+    /// Would charging `bytes` more stay within capacity?
+    pub fn fits(&self, bytes: u64) -> bool {
+        match self.capacity_bytes {
+            None => true,
+            Some(c) => self.used_bytes.saturating_add(bytes) <= c,
+        }
+    }
+
+    /// Charge `bytes` (an offloaded resident's spilled data). The
+    /// admission gate (`fits`) is the caller's responsibility; in debug
+    /// builds overcommit is a bug, not a clamp.
+    pub fn charge(&mut self, bytes: u64) {
+        debug_assert!(self.fits(bytes), "host pool overcommitted");
+        self.used_bytes += bytes;
+    }
+
+    /// Release `bytes` previously charged. Integer accounting: releasing
+    /// exactly what was charged restores the initial bytes exactly.
+    pub fn release(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.used_bytes, "releasing more than charged");
+        self.used_bytes -= bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_the_preplane_model() {
+        let c = HostMemConfig::default();
+        assert!(c.pool_gib.is_infinite());
+        assert!(!c.c2c_contention);
+        c.validate().unwrap();
+        let bad = |g: f64| HostMemConfig { pool_gib: g, ..Default::default() };
+        assert!(bad(0.0).validate().is_err());
+        assert!(bad(-3.0).validate().is_err());
+    }
+
+    #[test]
+    fn pool_arg_parsing() {
+        assert_eq!(parse_pool_gib("inf"), Some(f64::INFINITY));
+        assert_eq!(parse_pool_gib("24"), Some(24.0));
+        assert_eq!(parse_pool_gib("0.5"), Some(0.5));
+        assert_eq!(parse_pool_gib("0"), None);
+        assert_eq!(parse_pool_gib("-1"), None);
+        assert_eq!(parse_pool_gib("nan"), None);
+        assert_eq!(parse_pool_gib("bogus"), None);
+    }
+
+    #[test]
+    fn bytes_conversion_is_exact_gibs() {
+        assert_eq!(gib_to_bytes(0.0), 0);
+        assert_eq!(gib_to_bytes(1.0), 1 << 30);
+        assert_eq!(gib_to_bytes(5.5), 5 * (1 << 30) + (1 << 29));
+    }
+
+    #[test]
+    fn plan_and_plane_accounting_agree() {
+        // `OffloadPlan::host_bytes` and the plane's converter must be the
+        // same rounding — a drift would let the planner admit a spill the
+        // pool then accounts differently.
+        use crate::offload::OffloadPlan;
+        use crate::workload::{apps, AppId};
+        for app in [AppId::Llama3Fp16, AppId::FaissLarge, AppId::Qiskit31] {
+            let model = apps::model(app);
+            let plan = OffloadPlan::plan(&model, model.footprint_gib * 0.6).unwrap();
+            assert_eq!(plan.host_bytes(), gib_to_bytes(plan.spilled_gib), "{app:?}");
+        }
+    }
+
+    #[test]
+    fn pool_charge_release_restores_exactly() {
+        let mut p = HostPool::new(16.0).unwrap();
+        assert_eq!(p.capacity_bytes(), Some(16 << 30));
+        let a = gib_to_bytes(5.5);
+        let b = gib_to_bytes(3.25);
+        let c = gib_to_bytes(7.25);
+        assert!(p.fits(a));
+        p.charge(a);
+        p.charge(b);
+        // Exactly at capacity: admissible, nothing more is.
+        assert!(p.fits(c));
+        p.charge(c);
+        assert!(!p.fits(1), "pool exactly full must reject one more byte");
+        // Release in a different order than charged: exact zero.
+        p.release(b);
+        p.release(c);
+        p.release(a);
+        assert_eq!(p.used_bytes(), 0);
+        assert_eq!(p.headroom_bytes(), 16 << 30);
+    }
+
+    #[test]
+    fn infinite_pool_never_rejects() {
+        let mut p = HostPool::new(f64::INFINITY).unwrap();
+        assert_eq!(p.capacity_bytes(), None);
+        assert_eq!(p.headroom_bytes(), u64::MAX);
+        assert!(p.fits(u64::MAX));
+        p.charge(1 << 40);
+        assert!(p.fits(u64::MAX - (1 << 40)));
+        p.release(1 << 40);
+        assert_eq!(p.used_bytes(), 0);
+        assert!(HostPool::new(0.0).is_err());
+    }
+}

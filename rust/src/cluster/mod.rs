@@ -17,6 +17,12 @@
 //!   co-resident jobs — MPS-within-MIG continuous batching), the
 //!   reconfiguration state machine, and the incremental
 //!   per-(profile, occupancy) open index.
+//! - `hostmem`: the host-memory resource plane — finite per-node Grace
+//!   pools (offload spill is charged in integer bytes and gated at
+//!   admission) and contended C2C links (each GPU's one link is
+//!   time-shared across its co-offloading residents). The defaults
+//!   (`--host-pool inf --c2c-contention off`) reproduce the pre-plane
+//!   reports bit-for-bit.
 //! - `queue`: FIFO admission with deadlines, lifecycle accounting, and
 //!   live pending/resolution counters.
 //! - `placement`: first-fit / best-fit / offload-aware policies over a
@@ -53,12 +59,14 @@
 //! through the `gpu::PowerModel`.
 
 pub mod fleet;
+pub mod hostmem;
 pub mod placement;
 pub mod queue;
 pub mod reconfig;
 pub mod shard;
 
 pub use fleet::{Fleet, LayoutPreset, MAX_BATCH};
+pub use hostmem::{HostMemConfig, HostPool};
 pub use placement::{PlacementCost, Planner, PolicyKind};
 pub use queue::{AdmissionQueue, JobState};
 pub use shard::{
@@ -94,6 +102,21 @@ pub struct ServeConfig {
     /// model and admitted only while the slice's memory holds every
     /// resident (footprint + per-process context).
     pub batch: u32,
+    /// Grace host-memory pool per node shard (GiB; `f64::INFINITY` — the
+    /// default — disables the gate). Every offloaded job parks its spill
+    /// here while it runs; admission of an offload is gated on pool
+    /// headroom. See `cluster::hostmem`.
+    pub host_pool_gib: f64,
+    /// Time-share each GPU's single C2C link across its co-offloading
+    /// residents (an offloaded job sharing with `n − 1` others sees `1/n`
+    /// of the direct-access rate). `false` — the default — keeps the
+    /// pre-plane private-link model and reproduces its reports
+    /// bit-for-bit.
+    pub c2c_contention: bool,
+    /// Weight of the energy-per-job term in the offload-aware reward
+    /// (`0.0` — the default — is the paper's pure §VI-B reward,
+    /// bit-for-bit).
+    pub energy_weight: f64,
 }
 
 impl Default for ServeConfig {
@@ -109,7 +132,28 @@ impl Default for ServeConfig {
             seed: 0x5EED,
             workload_scale: 1.0,
             batch: 1,
+            host_pool_gib: f64::INFINITY,
+            c2c_contention: false,
+            energy_weight: 0.0,
         }
+    }
+}
+
+impl ServeConfig {
+    /// Validate the host-memory-plane knobs (the rest of the config is
+    /// validated where it is consumed).
+    fn validate_hostmem(&self) -> crate::Result<()> {
+        HostMemConfig {
+            pool_gib: self.host_pool_gib,
+            c2c_contention: self.c2c_contention,
+        }
+        .validate()?;
+        ensure!(
+            self.energy_weight >= 0.0 && self.energy_weight.is_finite(),
+            "energy weight must be finite and non-negative, got {}",
+            self.energy_weight
+        );
+        Ok(())
     }
 }
 
@@ -232,6 +276,7 @@ pub fn serve_with(cfg: &ServeConfig, mode: ServeMode) -> crate::Result<ServeRepo
     ensure!(cfg.jobs >= 1, "serve needs at least one job");
     ensure!(cfg.arrival_rate_hz > 0.0, "arrival rate must be positive");
     ensure!(cfg.deadline_s > 0.0, "deadline must be positive");
+    cfg.validate_hostmem()?;
     let trace = JobTrace::poisson(cfg.jobs, 1.0 / cfg.arrival_rate_hz, &serve_mix(), cfg.seed);
     shard::run_single(cfg, mode, &trace.jobs)
 }
@@ -245,6 +290,7 @@ pub fn serve_replay(cfg: &ServeConfig, trace: &JobTrace) -> crate::Result<ServeR
     ensure!(cfg.gpus >= 1, "serve needs at least one GPU");
     ensure!(cfg.arrival_rate_hz > 0.0, "arrival rate must be positive");
     ensure!(cfg.deadline_s > 0.0, "deadline must be positive");
+    cfg.validate_hostmem()?;
     let jobs = trace.canonicalized()?.jobs;
     ensure!(!jobs.is_empty(), "replay trace has no jobs");
     let mut cfg = cfg.clone();
@@ -268,6 +314,7 @@ mod tests {
             seed: 7,
             workload_scale: 0.05,
             batch: 1,
+            ..ServeConfig::default()
         }
     }
 
@@ -399,6 +446,92 @@ mod tests {
         // Co-residency at occ 2 can at most double the compute term (plus
         // the 2.5% interference): far cheaper than serial execution.
         assert!(batched.makespan_s < 2.1 * solo);
+    }
+
+    #[test]
+    fn finite_pool_starves_the_offload_an_infinite_pool_serves() {
+        // The host-pool gate end-to-end, made deterministic: one
+        // all-small GPU, two llama jobs arriving together, a deadline
+        // shorter than one offloaded service time, no reconfiguration.
+        // With an unlimited pool both offload immediately onto separate
+        // 1g slices and complete; with a pool that holds exactly one
+        // spill the second job cannot park its overflow anywhere and
+        // expires waiting for the first to release the pool.
+        use crate::workload::trace::{Job, JobTrace};
+        let mut pl = Planner::new(0.05);
+        let c = pl
+            .cost(crate::workload::AppId::Llama3Fp16, crate::mig::ProfileId::P1g12gb, true)
+            .unwrap();
+        assert!(c.offloaded && c.host_gib > 0.0);
+        let trace = JobTrace {
+            jobs: (0..2)
+                .map(|id| Job {
+                    id,
+                    app: crate::workload::AppId::Llama3Fp16,
+                    arrival_s: 0.0,
+                })
+                .collect(),
+        };
+        let cfg = ServeConfig {
+            gpus: 1,
+            policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+            layout: LayoutPreset::AllSmall,
+            deadline_s: c.runtime_s * 0.5,
+            reconfig: false,
+            workload_scale: 0.05,
+            ..ServeConfig::default()
+        };
+        let unlimited = serve_replay(&cfg, &trace).unwrap();
+        assert_eq!(unlimited.completed, 2, "unlimited pool serves both");
+        assert_eq!(unlimited.offloaded, 2);
+        let finite = serve_replay(
+            &ServeConfig {
+                host_pool_gib: c.host_gib * 1.5,
+                ..cfg.clone()
+            },
+            &trace,
+        )
+        .unwrap();
+        assert_eq!(finite.completed, 1, "one spill fits, the second starves");
+        assert_eq!(finite.offloaded, 1);
+        assert_eq!(finite.expired, 1);
+    }
+
+    #[test]
+    fn hostmem_plane_is_inert_for_non_offloading_policies() {
+        // First-fit never offloads, so the plane's knobs must not move a
+        // single bit of its report — finite pool and link contention
+        // included. This is the structural half of the fixture-compat
+        // guarantee (the byte-for-byte half lives in tests/golden.rs).
+        let base = base_cfg();
+        let plain = serve(&base).unwrap().to_json().pretty();
+        let planed = serve(&ServeConfig {
+            host_pool_gib: 4.0,
+            c2c_contention: true,
+            ..base
+        })
+        .unwrap()
+        .to_json()
+        .pretty();
+        assert_eq!(plain, planed);
+    }
+
+    #[test]
+    fn hostmem_config_bounds_are_enforced() {
+        for bad in [0.0, -1.0, f64::NAN] {
+            let r = serve(&ServeConfig {
+                host_pool_gib: bad,
+                ..base_cfg()
+            });
+            assert!(r.is_err(), "host pool {bad} must be rejected");
+        }
+        for bad in [-0.5, f64::INFINITY, f64::NAN] {
+            let r = serve(&ServeConfig {
+                energy_weight: bad,
+                ..base_cfg()
+            });
+            assert!(r.is_err(), "energy weight {bad} must be rejected");
+        }
     }
 
     #[test]

@@ -37,6 +37,24 @@
 //! the solo cap, so a spilled job's resident set fills the slice and it
 //! naturally refuses co-residents.
 //!
+//! ## The host-memory plane (`cluster::hostmem`)
+//!
+//! Offloading consumes two finite shared resources the pre-plane policies
+//! modeled as free: the node's Grace host pool and the GPU's single C2C
+//! link. The planner folds both in:
+//! - an offloaded class is only a candidate while the node's pool can
+//!   park its spill (`Fleet::host_fits`) — admission is gated on host
+//!   headroom, not just slice memory;
+//! - with `c2c_contention` on, an offloaded placement's direct-access
+//!   rate is divided by the number of offloaders time-sharing the GPU's
+//!   link (the newcomer included), extending the cost tables with a
+//!   per-GPU contention level (`cost_at_shared`). Within one
+//!   `(profile, occupancy, share)` class all slots still tie, so the
+//!   indexed walk enumerates one candidate per class per share level
+//!   (`Fleet::first_open_fitting_per_share`) and stays provably equal to
+//!   the slot scan. With contention off — or with no co-offloaders —
+//!   every share is 1 and the pre-plane costs are reproduced bit-for-bit.
+//!
 //! ## The indexed hot path
 //!
 //! A placement decision reduces to a walk over at most
@@ -64,14 +82,15 @@
 //! `benches/placement.rs`).
 
 use super::fleet::{Fleet, MAX_BATCH};
+use super::hostmem::gib_to_bytes;
 use crate::gpu::nvlink::{Dir, NvlinkModel};
-use crate::gpu::{pipelines::ALL_PIPELINES, GpuSpec};
+use crate::gpu::{pipelines::ALL_PIPELINES, GpuSpec, GpuUsage, PowerModel};
 use crate::mig::profile::{GiProfile, ProfileId, ALL_PROFILES, NUM_PROFILES};
 use crate::offload::OffloadPlan;
-use crate::reward::{reward, ConfigEval, GpuTotals};
+use crate::reward::{reward_energy, ConfigEval, GpuTotals};
 use crate::sharing::scheme::{partitions, Scheme};
 use crate::sharing::ContextModel;
-use crate::workload::{apps, AppId, ExecEnv};
+use crate::workload::{apps, AppId, AppModel, ExecEnv};
 
 /// The dispatch policy of the serving layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,6 +147,14 @@ pub struct PlacementCost {
     /// cap, co-residency only changes how fast the data is consumed.
     pub resident_gib: f64,
     pub offloaded: bool,
+    /// Spilled data parked in the node's Grace host pool while the job
+    /// runs (GiB; 0.0 when not offloaded). Occupancy- and
+    /// contention-independent, like the resident footprint.
+    pub host_gib: f64,
+    /// SMs the MPS share model allocates to this job
+    /// (`prof.sms / occupancy`, min 1) — the per-job share the
+    /// energy-per-job term attributes, not the whole slice.
+    pub sms_share: u32,
     /// Average achieved occupancy on the instance (reward input).
     pub occupancy: f64,
     /// Average per-pipeline FLOP rates while running (TFLOP/s).
@@ -136,6 +163,27 @@ pub struct PlacementCost {
     pub hbm_tbs: f64,
     /// Average C2C traffic while running (TB/s).
     pub c2c_tbs: f64,
+}
+
+/// Total activity of one model run — per-pipeline FLOPs, HBM bytes, C2C
+/// bytes — accumulated in phase → kernel → pipeline order. The single
+/// aggregation behind both the placement-cost rates and the full-GPU
+/// energy normalizer, so the two can never drift.
+fn activity_totals(model: &AppModel) -> ([f64; 5], f64, f64) {
+    let mut flops = [0.0f64; 5];
+    let mut hbm_bytes = 0.0;
+    let mut c2c_bytes = 0.0;
+    for ph in &model.phases {
+        let reps = ph.repeats as f64;
+        for k in &ph.kernels {
+            hbm_bytes += reps * k.hbm_bytes;
+            c2c_bytes += reps * k.c2c_bytes;
+            for p in ALL_PIPELINES {
+                flops[p.index()] += reps * k.flops * k.mix.frac(p);
+            }
+        }
+    }
+    (flops, hbm_bytes, c2c_bytes)
 }
 
 /// Cost evaluator + cache shared by all policies. All memo tables are
@@ -153,9 +201,25 @@ pub struct Planner {
     /// co-residency, pulled from the `Scheme::MigSharedGi` partition model
     /// — the co-run characterization feeding the cluster cost model.
     shared_interference: f64,
+    /// Time-share the per-GPU C2C link across co-offloading residents: an
+    /// offloaded placement sharing the link with `n − 1` co-offloaders
+    /// sees `1/n` of the direct-access rate. Off = the pre-plane private
+    /// link (every share is 1, bit-identical to the unextended planner).
+    c2c_contention: bool,
+    /// Weight of the energy-per-job reward term (0.0 = the paper's pure
+    /// §VI-B reward, bit-identical to the unextended planner).
+    energy_weight: f64,
+    /// Power model backing the energy-per-job reward term.
+    power_model: PowerModel,
     /// Outer `Option` = "computed?"; inner = the (possibly impossible)
     /// placement cost. `[app × profile × offload × occupancy]`.
     cost_cache: Vec<Option<Option<PlacementCost>>>,
+    /// Contended offload costs at link share `s ≥ 2`:
+    /// `cost_shared[s − 2]` mirrors the `allow_offload = true` plane of
+    /// `cost_cache` (`[app × profile × occupancy]`), allocated lazily per
+    /// share level actually observed. Non-offloaded costs never land
+    /// here — they are share-independent by construction.
+    cost_shared: Vec<Option<Vec<Option<Option<PlacementCost>>>>>,
     /// Admissible-profile bitmask per `[app × offload]` — the per-app
     /// profile preference table (bit i ⇔ `ALL_PROFILES[i]` can host).
     /// Occupancy-independent: co-residency stretches the runtime but
@@ -163,12 +227,22 @@ pub struct Planner {
     admissible: [Option<u8>; AppId::COUNT * 2],
     /// Whole-GPU runtime per app (the P_GPU reward basis).
     full_runtime: [Option<f64>; AppId::COUNT],
-    /// §VI-B rewards `[app × profile × occupancy]` at `reward_alpha_centi`.
+    /// §VI-B rewards `[app × profile × occupancy]` at `reward_alpha_centi`
+    /// (link share 1 only; contended rewards are recomputed on demand —
+    /// same pure function, so the bits agree either way).
     reward_cache: Vec<Option<f64>>,
     reward_alpha_centi: Option<u32>,
+    /// Full-GPU energy per job (the energy-term normalizer), memoized.
+    full_energy: [Option<f64>; AppId::COUNT],
     /// Direct (unscaled) footprint per app, for reconfiguration sizing —
     /// precomputed so the dispatch hot path never rebuilds app models.
     footprint: [f64; AppId::COUNT],
+    /// Reusable candidate buffer for the offload-aware walk
+    /// (`(gpu, slot, profile, occupancy, link share)`).
+    cand_scratch: Vec<(usize, usize, ProfileId, u8, u32)>,
+    /// Reusable per-share class probe buffer
+    /// (`Fleet::first_open_fitting_per_share` output).
+    share_scratch: Vec<(usize, usize, u32)>,
 }
 
 impl Planner {
@@ -177,9 +251,29 @@ impl Planner {
         Planner::with_batch(workload_scale, 1)
     }
 
-    /// A planner sized for slots hosting up to `batch` co-resident jobs.
+    /// A planner sized for slots hosting up to `batch` co-resident jobs,
+    /// with the pre-plane resource model (private C2C links, no energy
+    /// term).
     pub fn with_batch(workload_scale: f64, batch: u32) -> Planner {
+        Planner::with_opts(workload_scale, batch, false, 0.0)
+    }
+
+    /// A fully-configured planner: `c2c_contention` time-shares each
+    /// GPU's C2C link across its co-offloading residents, and
+    /// `energy_weight > 0` folds a normalized energy-per-job term into
+    /// the offload-aware reward. `(false, 0.0)` reproduces the pre-plane
+    /// planner bit-for-bit.
+    pub fn with_opts(
+        workload_scale: f64,
+        batch: u32,
+        c2c_contention: bool,
+        energy_weight: f64,
+    ) -> Planner {
         assert!(workload_scale > 0.0);
+        assert!(
+            energy_weight >= 0.0 && energy_weight.is_finite(),
+            "energy weight must be finite and non-negative"
+        );
         assert!(
             (1..=MAX_BATCH).contains(&batch),
             "per-slot batch must be 1..={MAX_BATCH}, got {batch}"
@@ -200,13 +294,25 @@ impl Planner {
             scale: workload_scale,
             batch,
             shared_interference,
+            c2c_contention,
+            energy_weight,
+            power_model: PowerModel::h100(),
             cost_cache: vec![None; AppId::COUNT * NUM_PROFILES * 2 * b],
+            cost_shared: Vec::new(),
             admissible: [None; AppId::COUNT * 2],
             full_runtime: [None; AppId::COUNT],
             reward_cache: vec![None; AppId::COUNT * NUM_PROFILES * b],
             reward_alpha_centi: None,
+            full_energy: [None; AppId::COUNT],
             footprint,
+            cand_scratch: Vec::new(),
+            share_scratch: Vec::new(),
         }
+    }
+
+    /// Whether this planner time-shares C2C links across co-offloaders.
+    pub fn c2c_contention(&self) -> bool {
+        self.c2c_contention
     }
 
     pub fn ctx_gib(&self) -> f64 {
@@ -259,8 +365,42 @@ impl Planner {
         if let Some(c) = self.cost_cache[i] {
             return c;
         }
-        let c = self.compute_cost(app, profile, allow_offload, occ);
+        let c = self.compute_cost(app, profile, allow_offload, occ, 1);
         self.cost_cache[i] = Some(c);
+        c
+    }
+
+    /// `cost_at` with the job's C2C link shared `share` ways (itself
+    /// included). Only an *offloaded* placement depends on the share —
+    /// its direct-access rate is divided by `share` — so non-offloaded
+    /// costs are returned from the share-1 table unchanged, and
+    /// `share = 1` is the literal `cost_at`. Contended costs are
+    /// memoized per share level.
+    pub fn cost_at_shared(
+        &mut self,
+        app: AppId,
+        profile: ProfileId,
+        allow_offload: bool,
+        occ: u32,
+        share: u32,
+    ) -> Option<PlacementCost> {
+        let base = self.cost_at(app, profile, allow_offload, occ)?;
+        if share <= 1 || !base.offloaded {
+            return Some(base);
+        }
+        let level = (share - 2) as usize;
+        if self.cost_shared.len() <= level {
+            self.cost_shared.resize(level + 1, None);
+        }
+        let size = AppId::COUNT * NUM_PROFILES * self.batch as usize;
+        let table = self.cost_shared[level].get_or_insert_with(|| vec![None; size]);
+        let i = (app.index() * NUM_PROFILES + profile.index()) * self.batch as usize
+            + (occ as usize - 1);
+        if let Some(c) = table[i] {
+            return c;
+        }
+        let c = self.compute_cost(app, profile, allow_offload, occ, share);
+        self.cost_shared[level].as_mut().unwrap()[i] = Some(c);
         c
     }
 
@@ -270,6 +410,7 @@ impl Planner {
         profile: ProfileId,
         allow_offload: bool,
         occ: u32,
+        share: u32,
     ) -> Option<PlacementCost> {
         let prof = GiProfile::get(profile);
         let model = apps::model(app).scaled(self.scale);
@@ -294,14 +435,23 @@ impl Planner {
         // SM share, equal share of the slice's bandwidth pool, and the
         // per-co-runner compute interference of shared-GI co-runs. The
         // C2C direct rate follows the SMs in flight (Table IVb saturation
-        // curve), so it shrinks with the SM share automatically. At
-        // occ = 1 every term reduces to the unbatched environment exactly.
+        // curve), so it shrinks with the SM share automatically; with the
+        // host-memory plane's link contention on, it is additionally
+        // divided by the number of offloaders time-sharing the GPU's one
+        // C2C link (`share`, this job included — equal time share). At
+        // occ = 1, share = 1 every term reduces to the unbatched,
+        // private-link environment exactly (`share = 1` skips the divide
+        // so not even a rounding bit can differ).
         let sms = (prof.sms / occ).max(1);
+        let mut c2c_bw_gibs = self.nvlink.direct_bw_gibs(sms, Dir::H2D);
+        if share > 1 {
+            c2c_bw_gibs /= share as f64;
+        }
         let env = ExecEnv {
             sms,
             clock_frac: 1.0,
             bw_gibs: prof.mem_bw_gibs / occ as f64,
-            c2c_bw_gibs: self.nvlink.direct_bw_gibs(sms, Dir::H2D),
+            c2c_bw_gibs,
             interference: 1.0 + self.shared_interference * (occ as f64 - 1.0),
             time_share: 1.0,
         };
@@ -311,19 +461,7 @@ impl Planner {
             return None;
         }
         // Average activity rates for the fleet energy model.
-        let mut flop_tflops = [0.0f64; 5];
-        let mut hbm_bytes = 0.0;
-        let mut c2c_bytes = 0.0;
-        for ph in &run_model.phases {
-            let reps = ph.repeats as f64;
-            for k in &ph.kernels {
-                hbm_bytes += reps * k.hbm_bytes;
-                c2c_bytes += reps * k.c2c_bytes;
-                for p in ALL_PIPELINES {
-                    flop_tflops[p.index()] += reps * k.flops * k.mix.frac(p);
-                }
-            }
-        }
+        let (mut flop_tflops, hbm_bytes, c2c_bytes) = activity_totals(&run_model);
         for f in &mut flop_tflops {
             *f /= runtime_s * 1e12;
         }
@@ -331,6 +469,8 @@ impl Planner {
             runtime_s,
             resident_gib,
             offloaded,
+            host_gib: plan.as_ref().map(|p| p.spilled_gib).unwrap_or(0.0),
+            sms_share: sms,
             occupancy: run_model.avg_occupancy_quiet(&self.spec, &env),
             flop_tflops,
             hbm_tbs: hbm_bytes / runtime_s / 1e12,
@@ -375,7 +515,52 @@ impl Planner {
         t
     }
 
-    /// §VI-B reward of running `app` on `profile` at cost `c`.
+    /// Modeled energy of one `app` run on the whole GPU (J) — the
+    /// normalizer of the energy-per-job reward term. Memoized.
+    fn full_gpu_energy_j(&mut self, app: AppId) -> f64 {
+        if let Some(e) = self.full_energy[app.index()] {
+            return e;
+        }
+        let t = self.full_gpu_runtime_s(app).max(1e-9);
+        let model = apps::model(app).scaled(self.scale);
+        let (mut flops, hbm_bytes, c2c_bytes) = activity_totals(&model);
+        for f in &mut flops {
+            *f /= t * 1e12;
+        }
+        let mut u = GpuUsage {
+            context_active: true,
+            sm_busy_frac: 1.0,
+            hbm_rate_tbs: hbm_bytes / t / 1e12,
+            c2c_rate_tbs: c2c_bytes / t / 1e12,
+            ..GpuUsage::default()
+        };
+        u.flop_rate_tflops = flops;
+        let e = self.power_model.reported_w(&self.spec, &u, self.spec.clock_max_mhz) * t;
+        self.full_energy[app.index()] = Some(e);
+        e
+    }
+
+    /// Modeled energy of one job at placement cost `c` (J): the power
+    /// demand its activity rates put on the GPU, integrated over its
+    /// (contention-stretched) runtime. The SM term charges only the
+    /// job's MPS share (`c.sms_share`), so co-residents split the
+    /// slice's SM energy instead of each being billed the whole slice.
+    fn job_energy_j(&self, c: &PlacementCost) -> f64 {
+        let mut u = GpuUsage {
+            context_active: true,
+            sm_busy_frac: c.sms_share as f64 / self.spec.sms as f64,
+            hbm_rate_tbs: c.hbm_tbs,
+            c2c_rate_tbs: c.c2c_tbs,
+            ..GpuUsage::default()
+        };
+        u.flop_rate_tflops = c.flop_tflops;
+        self.power_model.reported_w(&self.spec, &u, self.spec.clock_max_mhz) * c.runtime_s
+    }
+
+    /// §VI-B reward of running `app` on `profile` at cost `c`, with the
+    /// planner's energy-per-job term folded in at `energy_weight` (a
+    /// weight of 0.0 skips the term entirely — the paper's pure reward,
+    /// bit-for-bit).
     pub fn reward_of(
         &mut self,
         app: AppId,
@@ -398,7 +583,12 @@ impl Planner {
             mem_gib: self.spec.mem_usable_gib,
             perf_full_gpu: p_gpu,
         };
-        reward(&eval, &totals, alpha).reward
+        let energy_rel = if self.energy_weight != 0.0 {
+            self.job_energy_j(c) / self.full_gpu_energy_j(app).max(1e-9)
+        } else {
+            0.0
+        };
+        reward_energy(&eval, &totals, alpha, self.energy_weight, energy_rel).reward
     }
 
     /// `reward_of` memoized per (app, profile, occupancy) at a fixed α —
@@ -425,6 +615,27 @@ impl Planner {
         let r = self.reward_of(app, profile, c, alpha_centi as f64 / 100.0);
         self.reward_cache[i] = Some(r);
         r
+    }
+
+    /// `cached_reward` for an arbitrary link share: non-offloaded costs
+    /// and share-1 offloads read the dense cache; contended offloads are
+    /// recomputed on demand — `reward_of` is a pure function of
+    /// `(app, profile, c, α)`, so cache hits and fresh computations agree
+    /// bit-for-bit and the indexed walk and the naive scan can mix them
+    /// freely.
+    fn reward_shared(
+        &mut self,
+        app: AppId,
+        profile: ProfileId,
+        occ: u32,
+        share: u32,
+        alpha_centi: u32,
+        c: &PlacementCost,
+    ) -> f64 {
+        if share <= 1 || !c.offloaded {
+            return self.cached_reward(app, profile, occ, alpha_centi, c);
+        }
+        self.reward_of(app, profile, c, alpha_centi as f64 / 100.0)
     }
 
     /// Pick a slot seat for `app` under `policy`, via the fleet's
@@ -501,45 +712,61 @@ impl Planner {
             }
             PolicyKind::OffloadAware { alpha_centi } => {
                 // One candidate per (profile, occupancy) class with a
-                // fitting open slot, at the class's first (gpu, slot).
-                // Folding them in (gpu, slot) order with the per-slot
-                // preference of the naive scan reproduces its choice
-                // exactly: within a class every slot ties on (reward,
-                // SMs), so only first encounters matter, and the scan
-                // encounters classes in first-fitting-slot order.
+                // fitting open slot, at the class's first (gpu, slot) —
+                // refined per C2C link-share level when contention is on
+                // and the class offloads, because then slots of one class
+                // only tie within one share level. Folding the candidates
+                // in (gpu, slot) order with the per-slot preference of
+                // the naive scan reproduces its choice exactly: within a
+                // (profile, occupancy, share) class every slot ties on
+                // (reward, SMs), so only first encounters matter, and the
+                // scan encounters classes in first-fitting-slot order.
+                // Offloaded classes are additionally gated on host-pool
+                // headroom: spill with nowhere to live is not admissible.
                 let mask = self.admissible_mask(app, true);
-                let mut cands =
-                    [(0usize, 0usize, ProfileId::P1g12gb, 0u8); NUM_PROFILES * MAX_BATCH as usize];
-                let mut n = 0;
+                let mut cands = std::mem::take(&mut self.cand_scratch);
+                let mut shares = std::mem::take(&mut self.share_scratch);
+                cands.clear();
                 for pid in ALL_PROFILES {
                     if mask & (1 << pid.index()) == 0 {
                         continue;
                     }
-                    let need = self.cost(app, pid, true).unwrap().resident_gib + self.ctx_gib;
+                    let base = self.cost(app, pid, true).unwrap();
+                    if base.offloaded && !fleet.host_fits(gib_to_bytes(base.host_gib)) {
+                        continue;
+                    }
+                    let need = base.resident_gib + self.ctx_gib;
+                    let contended = self.c2c_contention && base.offloaded;
                     for m in 0..kmax {
-                        if let Some((g, s)) = fleet.first_open_fitting(pid, m, need) {
-                            cands[n] = (g, s, pid, m as u8);
-                            n += 1;
+                        if contended {
+                            fleet.first_open_fitting_per_share(pid, m, need, &mut shares);
+                            for &(g, s, existing) in shares.iter() {
+                                cands.push((g, s, pid, m as u8, existing + 1));
+                            }
+                        } else if let Some((g, s)) = fleet.first_open_fitting(pid, m, need) {
+                            cands.push((g, s, pid, m as u8, 1));
                         }
                     }
                 }
-                cands[..n].sort_unstable();
-                let mut best: Option<(f64, u32, usize, usize, ProfileId, u8)> = None;
-                for &(g, s, pid, m) in &cands[..n] {
+                cands.sort_unstable();
+                let mut best: Option<(f64, u32, usize, usize, ProfileId, u8, u32)> = None;
+                for &(g, s, pid, m, share) in &cands {
                     let occ = m as u32 + 1;
-                    let c = self.cost_at(app, pid, true, occ).unwrap();
-                    let r = self.cached_reward(app, pid, occ, alpha_centi, &c);
+                    let c = self.cost_at_shared(app, pid, true, occ, share).unwrap();
+                    let r = self.reward_shared(app, pid, occ, share, alpha_centi, &c);
                     let sms = GiProfile::get(pid).sms;
                     let better = match &best {
                         None => true,
                         Some((br, bsms, ..)) => r > *br || (r == *br && sms < *bsms),
                     };
                     if better {
-                        best = Some((r, sms, g, s, pid, m));
+                        best = Some((r, sms, g, s, pid, m, share));
                     }
                 }
-                best.map(|(_, _, g, s, pid, m)| {
-                    (g, s, self.cost_at(app, pid, true, m as u32 + 1).unwrap())
+                self.cand_scratch = cands;
+                self.share_scratch = shares;
+                best.map(|(_, _, g, s, pid, m, share)| {
+                    (g, s, self.cost_at_shared(app, pid, true, m as u32 + 1, share).unwrap())
                 })
             }
         }
@@ -615,20 +842,31 @@ impl Planner {
                     if gpu.reconfiguring() {
                         continue;
                     }
+                    // The naive path recomputes the GPU's link share from
+                    // the raw resident lists — the oracle never trusts
+                    // the live counters it is checking.
+                    let share = if self.c2c_contention {
+                        gpu.offloaders_scan() + 1
+                    } else {
+                        1
+                    };
                     for (s, slot) in gpu.slots.iter().enumerate() {
                         let occ = slot.occupancy() as u32;
                         if occ >= kmax {
                             continue;
                         }
-                        let c = match self.cost_at(app, slot.profile.id, true, occ + 1) {
+                        let pid = slot.profile.id;
+                        let c = match self.cost_at_shared(app, pid, true, occ + 1, share) {
                             Some(c) => c,
                             None => continue,
                         };
                         if occ > 0 && !slot.fits(c.resident_gib + self.ctx_gib) {
                             continue;
                         }
-                        let r =
-                            self.cached_reward(app, slot.profile.id, occ + 1, alpha_centi, &c);
+                        if c.offloaded && !fleet.host_fits_scan(gib_to_bytes(c.host_gib)) {
+                            continue;
+                        }
+                        let r = self.reward_shared(app, pid, occ + 1, share, alpha_centi, &c);
                         let sms = slot.profile.sms;
                         // Exact comparisons (no epsilon): tie-breaking
                         // must be order-insensitive for the class-level
@@ -649,11 +887,22 @@ impl Planner {
 
     /// Whether `app` could run on *some* profile of the per-GPU layouts the
     /// fleet currently has or is reconfiguring toward — the trigger guard
-    /// for dynamic reconfiguration. O(profile classes) via the fleet's
+    /// for dynamic reconfiguration. A class that only admits the app by
+    /// offloading counts only while the node's host pool can actually
+    /// park the spill: with the pool exhausted, "fits by offload" would
+    /// starve the job forever while blocking the repartition that could
+    /// rescue it (with an unlimited pool the gate never bites — the
+    /// pre-plane trigger exactly). O(profile classes) via the fleet's
     /// layout-class counts.
     pub fn fits_current_layouts(&mut self, fleet: &Fleet, app: AppId, allow_offload: bool) -> bool {
         for pid in ALL_PROFILES {
-            if fleet.has_layout_class(pid) && self.cost(app, pid, allow_offload).is_some() {
+            if !fleet.has_layout_class(pid) {
+                continue;
+            }
+            if let Some(c) = self.cost(app, pid, allow_offload) {
+                if c.offloaded && !fleet.host_fits(gib_to_bytes(c.host_gib)) {
+                    continue;
+                }
                 return true;
             }
         }
@@ -670,7 +919,10 @@ impl Planner {
     ) -> bool {
         for gpu in &fleet.gpus {
             for &p in gpu.effective_layout() {
-                if self.cost(app, p, allow_offload).is_some() {
+                if let Some(c) = self.cost(app, p, allow_offload) {
+                    if c.offloaded && !fleet.host_fits_scan(gib_to_bytes(c.host_gib)) {
+                        continue;
+                    }
                     return true;
                 }
             }
@@ -773,6 +1025,168 @@ mod tests {
     }
 
     #[test]
+    fn contended_cost_shares_the_link_and_share1_is_identical() {
+        let mut pl = Planner::with_opts(0.05, 1, true, 0.0);
+        let mut base = Planner::new(0.05);
+        // share = 1 is the literal uncontended cost, bit for bit.
+        let solo = base.cost(AppId::Llama3Fp16, ProfileId::P1g12gb, true).unwrap();
+        let s1 = pl.cost_at_shared(AppId::Llama3Fp16, ProfileId::P1g12gb, true, 1, 1).unwrap();
+        assert_eq!(solo.runtime_s.to_bits(), s1.runtime_s.to_bits());
+        assert_eq!(solo.c2c_tbs.to_bits(), s1.c2c_tbs.to_bits());
+        // More co-offloaders on the link → monotone non-decreasing
+        // runtime, identical resident/spill footprints.
+        let pid = ProfileId::P1g12gb;
+        let mut prev = s1;
+        for share in 2..=4u32 {
+            let c = pl.cost_at_shared(AppId::Llama3Fp16, pid, true, 1, share).unwrap();
+            assert!(
+                c.runtime_s >= prev.runtime_s,
+                "share {share}: contention must not speed the job up"
+            );
+            assert_eq!(c.resident_gib.to_bits(), prev.resident_gib.to_bits());
+            assert_eq!(c.host_gib.to_bits(), prev.host_gib.to_bits());
+            prev = c;
+        }
+        assert!(
+            prev.runtime_s > s1.runtime_s,
+            "an offload-heavy app must actually slow under link sharing"
+        );
+        // Non-offloaded costs are share-independent by construction.
+        let d1 = pl.cost_at_shared(AppId::Faiss, ProfileId::P1g12gb, true, 1, 1).unwrap();
+        let d4 = pl.cost_at_shared(AppId::Faiss, ProfileId::P1g12gb, true, 1, 4).unwrap();
+        assert_eq!(d1.runtime_s.to_bits(), d4.runtime_s.to_bits());
+        assert_eq!(d1.host_gib, 0.0);
+    }
+
+    #[test]
+    fn finite_pool_rejects_the_offload_an_infinite_pool_accepted() {
+        // The deterministic host-pool gate: llama spills ~5.6 GiB onto a
+        // 1g slice. An unlimited pool admits it; a pool smaller than the
+        // spill refuses the placement outright (all-small fleet, nothing
+        // else fits); a pool big enough for exactly one spill admits the
+        // first job and refuses the second until the first finishes.
+        let policy = PolicyKind::OffloadAware { alpha_centi: 10 };
+        let mut pl = Planner::new(0.05);
+        let spill = pl.cost(AppId::Llama3Fp16, ProfileId::P1g12gb, true).unwrap().host_gib;
+        assert!(spill > 0.0);
+
+        let inf = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
+        let placed = pl.place(&inf, AppId::Llama3Fp16, policy);
+        assert!(placed.is_some(), "unlimited pool admits the offload");
+
+        let tiny = Fleet::with_hostmem(1, LayoutPreset::AllSmall, 1, spill * 0.5).unwrap();
+        assert!(
+            pl.place(&tiny, AppId::Llama3Fp16, policy).is_none(),
+            "a pool smaller than the spill must reject the offload"
+        );
+        assert!(pl.place_scan(&tiny, AppId::Llama3Fp16, policy).is_none());
+
+        let mut one = Fleet::with_hostmem(1, LayoutPreset::AllSmall, 1, spill * 1.5).unwrap();
+        let (g, s, c) = pl.place(&one, AppId::Llama3Fp16, policy).unwrap();
+        one.start_job(
+            g,
+            s,
+            0,
+            0.0,
+            c.runtime_s,
+            c.resident_gib + pl.ctx_gib(),
+            crate::cluster::hostmem::gib_to_bytes(c.host_gib),
+        );
+        assert!(
+            pl.place(&one, AppId::Llama3Fp16, policy).is_none(),
+            "pool headroom below a second spill must gate admission"
+        );
+        assert!(pl.place_scan(&one, AppId::Llama3Fp16, policy).is_none());
+        // Draining the offloader restores the headroom and the placement.
+        assert!(one.finish_job(g, s, 0, c.runtime_s));
+        assert_eq!(one.host_used_bytes(), 0);
+        assert!(pl.place(&one, AppId::Llama3Fp16, policy).is_some());
+    }
+
+    #[test]
+    fn contended_place_matches_scan_and_prefers_quiet_links() {
+        // Two whole GPUs, one already hosting an offloader: with
+        // contention on, the indexed walk must agree with the naive scan
+        // slot-for-slot, and the second offloader must land on the quiet
+        // GPU (equal reward would pick GPU 0 — only the contention
+        // penalty pushes it away).
+        let policy = PolicyKind::OffloadAware { alpha_centi: 10 };
+        for contention in [false, true] {
+            let mut fleet = Fleet::with_batch(2, LayoutPreset::AllSmall, 1).unwrap();
+            let mut pl = Planner::with_opts(0.05, 1, contention, 0.0);
+            let (g0, s0, c0) = pl.place(&fleet, AppId::Llama3Fp16, policy).unwrap();
+            assert_eq!((g0, s0), (0, 0));
+            assert!(c0.offloaded);
+            fleet.start_job(
+                g0,
+                s0,
+                0,
+                0.0,
+                c0.runtime_s,
+                c0.resident_gib + pl.ctx_gib(),
+                crate::cluster::hostmem::gib_to_bytes(c0.host_gib),
+            );
+            let fast = pl.place(&fleet, AppId::Llama3Fp16, policy).unwrap();
+            let scan = pl.place_scan(&fleet, AppId::Llama3Fp16, policy).unwrap();
+            assert_eq!((fast.0, fast.1), (scan.0, scan.1), "contention={contention}");
+            assert_eq!(fast.2.runtime_s.to_bits(), scan.2.runtime_s.to_bits());
+            if contention {
+                assert_eq!(fast.0, 1, "link sharing must steer to the quiet GPU");
+                assert!(
+                    fast.2.runtime_s.to_bits() == c0.runtime_s.to_bits(),
+                    "on the quiet GPU the job runs at the share-1 rate"
+                );
+            } else {
+                assert_eq!(fast.0, 0, "private links keep first-fit-by-reward order");
+            }
+        }
+    }
+
+    #[test]
+    fn exhausted_pool_flips_the_reconfig_trigger() {
+        // All-small fleet: llama fits the current layouts only by
+        // offloading. With pool headroom that claim is true; with the
+        // pool exhausted it must flip to false — unblocking the
+        // repartition that can actually host the job — and the indexed
+        // guard must agree with the scan in both states.
+        let mut pl = Planner::new(0.05);
+        let spill = pl.cost(AppId::Llama3Fp16, ProfileId::P1g12gb, true).unwrap().host_gib;
+        let mut fleet = Fleet::with_hostmem(2, LayoutPreset::AllSmall, 1, spill * 1.2).unwrap();
+        assert!(pl.fits_current_layouts(&fleet, AppId::Llama3Fp16, true));
+        assert!(pl.fits_current_layouts_scan(&fleet, AppId::Llama3Fp16, true));
+        // Park one spill: headroom drops below a second one.
+        let (g, s, c) = pl
+            .place(&fleet, AppId::Llama3Fp16, PolicyKind::OffloadAware { alpha_centi: 10 })
+            .unwrap();
+        fleet.start_job(
+            g,
+            s,
+            0,
+            0.0,
+            c.runtime_s,
+            c.resident_gib + pl.ctx_gib(),
+            crate::cluster::hostmem::gib_to_bytes(c.host_gib),
+        );
+        assert!(!pl.fits_current_layouts(&fleet, AppId::Llama3Fp16, true));
+        assert!(!pl.fits_current_layouts_scan(&fleet, AppId::Llama3Fp16, true));
+        // Direct-fitting apps are unaffected by the pool state.
+        assert!(pl.fits_current_layouts(&fleet, AppId::Faiss, true));
+    }
+
+    #[test]
+    fn energy_weight_zero_keeps_rewards_identical() {
+        let mut plain = Planner::new(0.05);
+        let mut zero = Planner::with_opts(0.05, 1, false, 0.0);
+        let mut weighted = Planner::with_opts(0.05, 1, false, 5.0);
+        let c = plain.cost(AppId::Faiss, ProfileId::P1g12gb, false).unwrap();
+        let a = plain.reward_of(AppId::Faiss, ProfileId::P1g12gb, &c, 0.1);
+        let b = zero.reward_of(AppId::Faiss, ProfileId::P1g12gb, &c, 0.1);
+        assert_eq!(a.to_bits(), b.to_bits(), "weight 0.0 must be the paper reward");
+        let w = weighted.reward_of(AppId::Faiss, ProfileId::P1g12gb, &c, 0.1);
+        assert!(w < a, "a positive energy weight must shrink the reward");
+    }
+
+    #[test]
     fn first_fit_vs_best_fit_slot_choice() {
         // Mixed GPU 2 layout is [4g.48gb, 3g.48gb]; a small job should go
         // to the 3g slot under best-fit but the 4g slot under first-fit.
@@ -780,7 +1194,7 @@ mod tests {
         // Occupy every slot on GPUs 0 and 1 so only GPU 2 is free.
         for g in 0..2 {
             for s in 0..fleet.gpus[g].slots.len() {
-                fleet.start_job(g, s, 0, 0.0, 100.0, 0.5);
+                fleet.start_job(g, s, 0, 0.0, 100.0, 0.5, 0);
             }
         }
         let mut pl = Planner::new(0.05);
@@ -799,14 +1213,14 @@ mod tests {
         let mut pl = Planner::with_batch(0.05, 3);
         let (g, s, c1) = pl.place(&fleet, AppId::Hotspot, PolicyKind::FirstFit).unwrap();
         assert_eq!((g, s), (0, 0));
-        fleet.start_job(g, s, 0, 0.0, c1.runtime_s, c1.resident_gib + pl.ctx_gib());
+        fleet.start_job(g, s, 0, 0.0, c1.runtime_s, c1.resident_gib + pl.ctx_gib(), 0);
         let (g, s, c2) = pl.place(&fleet, AppId::Hotspot, PolicyKind::FirstFit).unwrap();
         assert_eq!((g, s), (0, 0), "co-locates on the occupied slot");
         assert!(c2.runtime_s > c1.runtime_s, "co-residency slows the job");
-        fleet.start_job(g, s, 1, 0.0, c2.runtime_s, c2.resident_gib + pl.ctx_gib());
+        fleet.start_job(g, s, 1, 0.0, c2.runtime_s, c2.resident_gib + pl.ctx_gib(), 0);
         let (_, _, c3) = pl.place(&fleet, AppId::Hotspot, PolicyKind::FirstFit).unwrap();
         assert!(c3.runtime_s > c2.runtime_s);
-        fleet.start_job(0, 0, 2, 0.0, c3.runtime_s, c3.resident_gib + pl.ctx_gib());
+        fleet.start_job(0, 0, 2, 0.0, c3.runtime_s, c3.resident_gib + pl.ctx_gib(), 0);
         assert!(
             pl.place(&fleet, AppId::Hotspot, PolicyKind::FirstFit).is_none(),
             "full slot admits nothing"
@@ -815,7 +1229,7 @@ mod tests {
         let mut f1 = Fleet::new(1, LayoutPreset::AllBig).unwrap();
         let mut p1 = Planner::new(0.05);
         let (g, s, c) = p1.place(&f1, AppId::Hotspot, PolicyKind::FirstFit).unwrap();
-        f1.start_job(g, s, 0, 0.0, c.runtime_s, c.resident_gib + p1.ctx_gib());
+        f1.start_job(g, s, 0, 0.0, c.runtime_s, c.resident_gib + p1.ctx_gib(), 0);
         assert!(p1.place(&f1, AppId::Hotspot, PolicyKind::FirstFit).is_none());
     }
 
@@ -850,7 +1264,7 @@ mod tests {
                 )
                 .unwrap();
             assert_eq!(occ_runtime.to_bits(), expect.runtime_s.to_bits());
-            fleet.start_job(g, s, job, 0.0, c.runtime_s, c.resident_gib + pl.ctx_gib());
+            fleet.start_job(g, s, job, 0.0, c.runtime_s, c.resident_gib + pl.ctx_gib(), 0);
         }
         // 2 slots × 2 seats are gone: nothing left to offer.
         assert!(pl.place(&fleet, AppId::Faiss, policy).is_none());
@@ -867,7 +1281,7 @@ mod tests {
         let policy = PolicyKind::OffloadAware { alpha_centi: 10 };
         let (g, s, c) = pl.place(&fleet, AppId::Llama3Fp16, policy).unwrap();
         assert!(c.offloaded);
-        fleet.start_job(g, s, 0, 0.0, c.runtime_s, c.resident_gib + pl.ctx_gib());
+        fleet.start_job(g, s, 0, 0.0, c.runtime_s, c.resident_gib + pl.ctx_gib(), 0);
         // The occupied slot is memory-full; the next llama must take a
         // different (empty) slot, never co-locate.
         let (g2, s2, _) = pl.place(&fleet, AppId::Llama3Fp16, policy).unwrap();
@@ -932,6 +1346,7 @@ mod tests {
                             step as f64,
                             step as f64 + 9.0,
                             c.resident_gib + pl.ctx_gib(),
+                            crate::cluster::hostmem::gib_to_bytes(c.host_gib),
                         );
                         next_job += 1;
                     }

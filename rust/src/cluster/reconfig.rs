@@ -12,6 +12,13 @@
 //! Target layouts are *valid-partition-preserving*: `plan_for_footprint`
 //! only ever proposes layouts that the `MigManager` slice budget accepts
 //! (re-validated at `FleetGpu::begin_reconfig` time).
+//!
+//! The host-memory plane feeds the *trigger* side: a job that fits the
+//! current layouts only by offloading no longer suppresses
+//! reconfiguration once the node's Grace pool cannot park its spill
+//! (`Planner::fits_current_layouts` consults `Fleet::host_fits`), so a
+//! drained GPU can be repartitioned toward a direct-fit class instead of
+//! letting the job starve behind an exhausted pool.
 
 use super::fleet::{class_layout, Fleet};
 use crate::mig::profile::{GiProfile, ProfileId};
@@ -104,7 +111,7 @@ mod tests {
     fn plan_reconfig_picks_idle_gpu_and_skips_matching_layout() {
         let mut fleet = Fleet::new(2, LayoutPreset::AllSmall).unwrap();
         // A 16 GiB job needs the 2g class; GPU 0 is busy, GPU 1 idle.
-        fleet.start_job(0, 0, 1, 0.0, 10.0, 0.5);
+        fleet.start_job(0, 0, 1, 0.0, 10.0, 0.5, 0);
         let (g, target) = plan_reconfig(&fleet, 16.0).unwrap();
         assert_eq!(g, 1);
         assert_eq!(target[0], ProfileId::P2g24gb);

@@ -34,8 +34,11 @@
 //!   without placing, and has deadline slack left, is offered back to the
 //!   coordinator, which forwards it (at most one hop) to the shard with
 //!   the most open SM-seats (batched headroom: `sms × (batch − occupancy)`
-//!   summed over slots — exactly idle-slot SMs at batch 1) whose largest
-//!   open slot can host it under the run's policy — or, when
+//!   summed over slots — exactly idle-slot SMs at batch 1) that can host
+//!   it under the run's policy: an empty slot big enough for a direct
+//!   run, an empty slot for the offloaded run *plus host-pool headroom
+//!   for its spill*, or a partially-filled slot whose remaining memory
+//!   passes `Slot::fits` for the job's direct charge — or, when
 //!   reconfiguration is enabled, to any shard with open headroom (the
 //!   destination can repartition); with neither,
 //!   the job stays put rather than migrate toward certain expiry. The job
@@ -126,6 +129,19 @@ struct Handoff {
     /// run's policy (offloading included when the policy allows it) — the
     /// dispatcher's placement-compatibility requirement for a target.
     min_host_gib: f64,
+    /// Memory of the smallest slot class that hosts this job *without*
+    /// offloading (`f64::INFINITY` when none — the job can only run
+    /// spilled). Admissibility is monotone in slice memory, so any empty
+    /// slot at least this large admits the job directly.
+    min_direct_gib: f64,
+    /// Slice memory the job would charge on a direct (non-offloaded)
+    /// placement: footprint + per-process context — the `Slot::fits`
+    /// requirement for joining a partially-filled slot.
+    direct_need_gib: f64,
+    /// Host-pool bytes the job parks when admitted at its smallest class
+    /// (0 when that class fits it directly) — the target shard must have
+    /// this much Grace headroom for the offload path to be viable.
+    host_need_bytes: u64,
 }
 
 /// What a shard reports at an epoch barrier — the only state the
@@ -141,9 +157,18 @@ struct BarrierInfo {
     /// `sms × (batch − occupancy)`, the batched-headroom load signal
     /// (exactly the idle-slot SM count at batch 1).
     open_sm_seats: u32,
-    /// Memory of the largest slot still accepting a co-resident (GiB; 0
-    /// when none) — the dispatcher's placement-compatibility signal.
-    largest_open_gib: f64,
+    /// Memory of the largest *empty* slot (GiB; 0 when none) — the
+    /// empty-slot arm of the placement-compatibility check. At batch 1
+    /// this is exactly the pre-plane largest-open signal.
+    largest_empty_gib: f64,
+    /// Largest remaining memory headroom among occupied slots with a
+    /// free seat (GiB; 0 at batch 1) — the `Slot::fits` arm: a forwarded
+    /// job can join a partially-filled slot only where its direct charge
+    /// actually fits, so full slots never bounce arrivals.
+    max_open_headroom_gib: f64,
+    /// Remaining Grace host-pool headroom (`u64::MAX` when unlimited) —
+    /// the offload arm of the compatibility check.
+    host_headroom_bytes: u64,
     candidates: Vec<Handoff>,
 }
 
@@ -211,7 +236,7 @@ impl Shard {
         lookahead_s: f64,
         forward: bool,
     ) -> crate::Result<Shard> {
-        let fleet = Fleet::with_batch(gpus, cfg.layout, cfg.batch)?;
+        let fleet = Fleet::with_hostmem(gpus, cfg.layout, cfg.batch, cfg.host_pool_gib)?;
         let power = PowerTracker::new(mode, &fleet);
         Ok(Shard {
             id,
@@ -221,7 +246,12 @@ impl Shard {
             forward,
             fleet,
             queue: AdmissionQueue::new(),
-            planner: Planner::with_batch(cfg.workload_scale, cfg.batch),
+            planner: Planner::with_opts(
+                cfg.workload_scale,
+                cfg.batch,
+                cfg.c2c_contention,
+                cfg.energy_weight,
+            ),
             engine: Engine::new(),
             power,
             power_model: PowerModel::h100(),
@@ -440,18 +470,33 @@ impl Shard {
         self.barrier_info(ns_to_sec(input.end_ns))
     }
 
-    /// Memory of the smallest slot class that can host `app` under this
-    /// run's policy (offloading included when the policy allows it).
+    /// The dispatcher's placement-compatibility requirements for `app`
+    /// under this run's policy: `(min_host_gib, min_direct_gib,
+    /// direct_need_gib, host_need_bytes)` — see the `Handoff` fields.
     /// Memoized inside the planner's cost cache, so this is an O(classes)
     /// table walk after the first call per app.
-    fn min_host_gib(&mut self, app: AppId) -> f64 {
+    fn handoff_reqs(&mut self, app: AppId) -> (f64, f64, f64, u64) {
         let allow = self.params.policy.allows_offload();
+        // Unservable apps are rejected at arrival and never pend, so the
+        // infinite fallbacks below are never actually consulted.
+        let mut min_host = f64::INFINITY;
+        let mut host_need = 0u64;
         for pid in crate::mig::profile::ALL_PROFILES {
-            if self.planner.cost(app, pid, allow).is_some() {
-                return GiProfile::get(pid).mem_gib;
+            if let Some(c) = self.planner.cost(app, pid, allow) {
+                min_host = GiProfile::get(pid).mem_gib;
+                host_need = super::hostmem::gib_to_bytes(c.host_gib);
+                break;
             }
         }
-        f64::INFINITY // unservable — never admitted, so never a candidate
+        let mut min_direct = f64::INFINITY;
+        for pid in crate::mig::profile::ALL_PROFILES {
+            if self.planner.cost(app, pid, false).is_some() {
+                min_direct = GiProfile::get(pid).mem_gib;
+                break;
+            }
+        }
+        let direct_need = self.planner.footprint_gib(app) + self.planner.ctx_gib();
+        (min_host, min_direct, direct_need, host_need)
     }
 
     /// Barrier snapshot at time `barrier_s` (the end of the epoch that
@@ -477,6 +522,8 @@ impl Shard {
                 }
                 let (global_id, app, arrival_s, deadline_abs_s) =
                     (meta.global_id, qj.job.app, qj.job.arrival_s, qj.deadline_s);
+                let (min_host_gib, min_direct_gib, direct_need_gib, host_need_bytes) =
+                    self.handoff_reqs(app);
                 candidates.push(Handoff {
                     global_id,
                     origin: self.id,
@@ -484,7 +531,10 @@ impl Shard {
                     app,
                     arrival_s,
                     deadline_abs_s,
-                    min_host_gib: self.min_host_gib(app),
+                    min_host_gib,
+                    min_direct_gib,
+                    direct_need_gib,
+                    host_need_bytes,
                 });
             }
         }
@@ -494,7 +544,9 @@ impl Shard {
             unresolved: self.queue.unresolved(),
             arrivals_pending: self.expected - self.queue.jobs.len() as u32,
             open_sm_seats: self.fleet.open_sm_seats(),
-            largest_open_gib: self.fleet.largest_open_slot_gib(),
+            largest_empty_gib: self.fleet.largest_idle_slot_gib(),
+            max_open_headroom_gib: self.fleet.max_open_headroom_gib(),
+            host_headroom_bytes: self.fleet.host_headroom_bytes(),
             candidates,
         }
     }
@@ -656,11 +708,22 @@ fn dispatch(
             if let Some(tok) = deadline_tokens[id as usize].take() {
                 engine.cancel(tok);
             }
-            // `c` is the cost at the occupancy the job joins the slot at;
-            // residents already running keep their admission-time runtime
-            // (the deterministic static-slowdown model).
+            // `c` is the cost at the occupancy — and, under the
+            // host-memory plane, the C2C link share — the job joins the
+            // slot at; residents already running keep their
+            // admission-time runtime (the deterministic static-slowdown
+            // model: a later offloader joining the link does not re-fit
+            // those already streaming over it — see ROADMAP follow-ups).
             let until = now + c.runtime_s;
-            fleet.start_job(g, s, id, now, until, c.resident_gib + planner.ctx_gib());
+            fleet.start_job(
+                g,
+                s,
+                id,
+                now,
+                until,
+                c.resident_gib + planner.ctx_gib(),
+                super::hostmem::gib_to_bytes(c.host_gib),
+            );
             power.on_start(g, s, id, c);
             engine.schedule_at(sec_to_ns(until), Ev::JobDone { gpu: g, slot: s, job: id });
         } else if cfg.reconfig {
@@ -1033,6 +1096,7 @@ fn serve_sharded_impl(
     ensure!(scfg.lookahead_s > 0.0, "lookahead must be positive");
     ensure!(base.arrival_rate_hz > 0.0, "arrival rate must be positive");
     ensure!(base.deadline_s > 0.0, "deadline must be positive");
+    base.validate_hostmem()?;
     let jobs: Vec<Job> = match trace {
         Some(t) => t.canonicalized()?.jobs,
         None => {
@@ -1085,7 +1149,9 @@ fn serve_sharded_impl(
             unresolved: 0,
             arrivals_pending: s.expected,
             open_sm_seats: s.fleet.open_sm_seats(),
-            largest_open_gib: s.fleet.largest_open_slot_gib(),
+            largest_empty_gib: s.fleet.largest_idle_slot_gib(),
+            max_open_headroom_gib: s.fleet.max_open_headroom_gib(),
+            host_headroom_bytes: s.fleet.host_headroom_bytes(),
             candidates: Vec::new(),
         })
         .collect();
@@ -1123,11 +1189,17 @@ fn serve_sharded_impl(
         // 1. Overflow handoffs, decided strictly from last-barrier state:
         // candidates in ascending global-id order go to the shard with
         // the most open SM-seats (batched headroom; ties toward the lower
-        // id) *among shards whose largest open slot can actually host the
-        // job* — falling back to any shard with open headroom only when
-        // reconfiguration is enabled (the target can repartition toward
-        // the job). Each assignment debits one smallest-slice seat of the
-        // target's headroom so a single barrier cannot dogpile one shard.
+        // id) *among shards that can actually host the job*: an empty
+        // slot big enough for a direct run, an empty slot big enough for
+        // the offloaded run plus Grace-pool headroom for its spill, or —
+        // via `Slot::fits` — a partially-filled slot whose remaining
+        // memory holds the job's direct charge (so a forwarded job is
+        // never bounced by a memory-full slot on arrival). The fallback
+        // to any shard with open headroom fires only when reconfiguration
+        // is enabled (the target can repartition toward the job). Each
+        // assignment debits one smallest-slice seat and the job's host
+        // need from the target so a single barrier cannot dogpile one
+        // shard or oversubscribe its pool.
         if scfg.forward && nodes > 1 {
             let mut cands: Vec<Handoff> = Vec::new();
             for info in &infos {
@@ -1136,33 +1208,43 @@ fn serve_sharded_impl(
             cands.sort_by_key(|h| h.global_id);
             let mut idle_left: Vec<i64> =
                 infos.iter().map(|i| i.open_sm_seats as i64).collect();
+            let mut host_left: Vec<u64> =
+                infos.iter().map(|i| i.host_headroom_bytes).collect();
             for h in cands {
-                let pick = |compatible_only: bool, idle_left: &[i64]| -> Option<usize> {
+                let pick = |strict: bool, idle: &[i64], host: &[u64]| -> Option<usize> {
                     let mut best: Option<usize> = None;
-                    for (s, &left) in idle_left.iter().enumerate() {
+                    for (s, &left) in idle.iter().enumerate() {
                         if s == h.origin || left < handoff_slice_sms {
                             continue;
                         }
-                        if compatible_only && infos[s].largest_open_gib < h.min_host_gib {
-                            continue;
+                        if strict {
+                            let empty_direct = infos[s].largest_empty_gib >= h.min_direct_gib;
+                            let empty_offload = infos[s].largest_empty_gib >= h.min_host_gib
+                                && host[s] >= h.host_need_bytes;
+                            let open_seat =
+                                infos[s].max_open_headroom_gib >= h.direct_need_gib;
+                            if !empty_direct && !empty_offload && !open_seat {
+                                continue;
+                            }
                         }
-                        if best.map(|b| left > idle_left[b]).unwrap_or(true) {
+                        if best.map(|b| left > idle[b]).unwrap_or(true) {
                             best = Some(s);
                         }
                     }
                     best
                 };
-                let target = pick(true, &idle_left).or_else(|| {
-                    // No shard has a compatible idle slot right now; only
+                let target = pick(true, &idle_left, &host_left).or_else(|| {
+                    // No shard has a compatible seat right now; only
                     // forward blind if the destination could repartition.
                     if cfg.reconfig {
-                        pick(false, &idle_left)
+                        pick(false, &idle_left, &host_left)
                     } else {
                         None
                     }
                 });
                 if let Some(t) = target {
                     idle_left[t] -= handoff_slice_sms;
+                    host_left[t] = host_left[t].saturating_sub(h.host_need_bytes);
                     inputs[h.origin].removals.push(h.origin_local);
                     inputs[t].handoffs.push(h);
                     handoffs_total += 1;
@@ -1449,6 +1531,7 @@ mod tests {
             seed: 11,
             workload_scale: 0.05,
             batch: 1,
+            ..ServeConfig::default()
         }
     }
 
@@ -1612,6 +1695,9 @@ mod tests {
                     arrival_s: 0.25,
                     deadline_abs_s: 50.0,
                     min_host_gib: 11.0,
+                    min_direct_gib: 11.0,
+                    direct_need_gib: 1.0,
+                    host_need_bytes: 0,
                 },
                 2.0,
             );
@@ -1686,6 +1772,9 @@ mod tests {
                 arrival_s: 0.5,
                 deadline_abs_s: 60.0,
                 min_host_gib: 11.0,
+                min_direct_gib: 11.0,
+                direct_need_gib: 1.0,
+                host_need_bytes: 0,
             },
             2.0,
         );

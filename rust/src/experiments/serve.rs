@@ -82,6 +82,7 @@ pub fn serve_experiment(cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
                 seed: cfg.seed,
                 workload_scale: scale,
                 batch: 1,
+                ..ServeConfig::default()
             })?;
             report_row(&mut t, &r);
             sweep.push(r.to_json());
@@ -105,6 +106,7 @@ pub fn serve_experiment(cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
             seed: cfg.seed + 1,
             workload_scale: scale,
             batch: 1,
+            ..ServeConfig::default()
         })?;
         let mut row_r = r.clone();
         row_r.policy = if reconfig { "reconfig".into() } else { "static".into() };
@@ -172,6 +174,7 @@ fn scale_grid(cfg: &SimConfig, fleets: &[u32], jobs: u32) -> crate::Result<Exper
                 seed: cfg.seed,
                 workload_scale: scale,
                 batch: 1,
+                ..ServeConfig::default()
             };
             let t0 = std::time::Instant::now();
             let r = serve(&sc)?;
@@ -262,6 +265,7 @@ fn shard_grid(
             seed: cfg.seed,
             workload_scale: scale,
             batch: 1,
+            ..ServeConfig::default()
         };
         let mut wall_1t = 0.0f64;
         let mut canonical: Option<String> = None;
@@ -368,6 +372,7 @@ fn batch_grid(cfg: &SimConfig, gpus: u32, jobs: u32) -> crate::Result<Experiment
                     seed: cfg.seed,
                     workload_scale: scale,
                     batch,
+                    ..ServeConfig::default()
                 };
                 let r = serve_with(&sc, ServeMode::Indexed)?;
                 let oracle = serve_with(&sc, ServeMode::NaiveOracle)?;
@@ -410,6 +415,139 @@ fn batch_grid(cfg: &SimConfig, gpus: u32, jobs: u32) -> crate::Result<Experiment
         notes: vec![
             "each cell is differentially verified: the indexed batched hot path and the naive full-rescan oracle must emit bit-identical reports".into(),
             "K = 1 is the classic one-job-per-slot system; K > 1 admits co-residents under the MigSharedGi-derived contention model while the slice memory fits all residents".into(),
+        ],
+    })
+}
+
+/// The host-memory resource plane under load: a pool size × rate ×
+/// policy sweep over an all-small fleet with C2C link contention on —
+/// the regime where offloading is the only way the §VI large jobs run,
+/// so finite Grace pools and shared links directly shape admission.
+/// Every cell runs both the indexed hot path and the `NaiveOracle` full
+/// rescan and `ensure!`s their reports bit-identical (the contended
+/// differential gate CI runs); the first-fit cells additionally
+/// `ensure!` that the plane is inert for a policy that never offloads —
+/// identical reports across every pool size.
+pub fn serve_offload_experiment(cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
+    // Quick-test configs (scale ≤ 0.1) shrink the grid so tier-1 tests
+    // stay fast; paper-sized runs sweep an 8-GPU fleet with 2k jobs.
+    if cfg.workload_scale <= 0.1 {
+        offload_grid(cfg, 2, 60)
+    } else {
+        offload_grid(cfg, 8, 2_000)
+    }
+}
+
+fn offload_grid(cfg: &SimConfig, gpus: u32, jobs: u32) -> crate::Result<ExperimentOutput> {
+    use crate::cluster::{serve_with, ServeMode};
+    let scale = cfg.workload_scale;
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    // Per-node Grace pools: unlimited, a few concurrent spills, roughly
+    // one spill (llama's 1g overflow is ~5.6 GiB). Footprints do not
+    // scale with the workload scale, so these are scale-invariant.
+    let pools = [f64::INFINITY, 24.0, 6.0];
+    let pool_label = |p: f64| {
+        if p.is_infinite() {
+            "inf".to_string()
+        } else {
+            format!("{p}")
+        }
+    };
+    let mut t = Table::new(
+        "Serving — host-memory plane: pool size x rate x policy, all-small slices, C2C contention on",
+    )
+    .header(&[
+        "pool (GiB)",
+        "policy",
+        "rate (j/s)",
+        "done",
+        "expired",
+        "offl",
+        "thpt (j/s)",
+        "p95 (s)",
+        "util",
+        "E (kJ)",
+    ]);
+    let mut rows = Vec::new();
+    for inter_factor in [10.0, 4.0] {
+        for &policy in &policies {
+            let mut inert: Option<String> = None;
+            for &pool in &pools {
+                let sc = ServeConfig {
+                    gpus,
+                    policy,
+                    layout: LayoutPreset::AllSmall,
+                    arrival_rate_hz: 1.0 / (inter_factor * scale),
+                    jobs,
+                    deadline_s: 900.0 * scale,
+                    // No reconfig: offloading is the only path for large
+                    // jobs, so the pool/link effects are unconfounded.
+                    reconfig: false,
+                    seed: cfg.seed,
+                    workload_scale: scale,
+                    batch: 1,
+                    host_pool_gib: pool,
+                    c2c_contention: true,
+                    energy_weight: 0.0,
+                };
+                let r = serve_with(&sc, ServeMode::Indexed)?;
+                let oracle = serve_with(&sc, ServeMode::NaiveOracle)?;
+                let rendered = r.to_json().pretty();
+                ensure!(
+                    rendered == oracle.to_json().pretty(),
+                    "contended serve diverged from the naive oracle \
+                     (pool={}, policy={}, rate={:.3})",
+                    pool_label(pool),
+                    policy.label(),
+                    sc.arrival_rate_hz
+                );
+                if policy == PolicyKind::FirstFit {
+                    // A policy that never offloads must not feel the
+                    // plane at all: every pool size yields the same bits.
+                    match &inert {
+                        None => inert = Some(rendered),
+                        Some(base) => ensure!(
+                            *base == rendered,
+                            "host-memory plane leaked into a non-offloading policy \
+                             (pool={}, rate={:.3})",
+                            pool_label(pool),
+                            sc.arrival_rate_hz
+                        ),
+                    }
+                }
+                t.row(vec![
+                    pool_label(pool),
+                    r.policy.clone(),
+                    fnum(r.arrival_rate_hz, 2),
+                    format!("{}", r.completed),
+                    format!("{}", r.expired),
+                    format!("{}", r.offloaded),
+                    fnum(r.throughput_jobs_s, 3),
+                    fnum(r.wait_p95_s, 2),
+                    pct(r.utilization, 0),
+                    fnum(r.energy_j / 1e3, 1),
+                ]);
+                let mut o = r.to_json();
+                o.set("pool_gib", pool_label(pool).as_str())
+                    .set("c2c_contention", true);
+                rows.push(o);
+            }
+        }
+        t.rule();
+    }
+    let mut json = Json::obj();
+    json.set("grid", Json::Arr(rows));
+    Ok(ExperimentOutput {
+        id: "serve-offload",
+        title: "Host-memory resource plane (extension)",
+        tables: vec![t],
+        json,
+        notes: vec![
+            "every cell is differentially verified: the contended indexed hot path and the naive full-rescan oracle must emit bit-identical reports".into(),
+            "offload admission is gated on Grace-pool headroom and each GPU's C2C link is time-shared across its co-offloading residents; pool=inf with contention off reproduces the pre-plane golden fixtures byte-for-byte".into(),
         ],
     })
 }
@@ -527,6 +665,32 @@ mod tests {
             "batching never improved completions or utilization:\n{}",
             out.render()
         );
+    }
+
+    #[test]
+    fn offload_grid_gates_differentially_and_pools_bite_somewhere() {
+        // Shrunk instance of the serve-offload experiment. The hard
+        // guarantees are the in-run ensure!s (indexed == oracle in every
+        // contended cell; first-fit bit-identical across pool sizes). On
+        // top of them: offloading must actually happen under the
+        // unlimited pool, and no finite-pool cell may offload more than
+        // the unlimited-pool cell of the same (policy, rate) admitted.
+        let out = offload_grid(&fast_cfg(), 2, 40).unwrap();
+        let grid = out.json.get("grid").unwrap().as_arr().unwrap();
+        assert_eq!(grid.len(), 2 * 2 * 3);
+        let get_u = |r: &Json, k: &str| r.get(k).unwrap().as_u64().unwrap();
+        for chunk in grid.chunks(3) {
+            let policy = chunk[0].get("policy").unwrap().as_str().unwrap().to_string();
+            assert_eq!(chunk[0].get("pool_gib").unwrap().as_str(), Some("inf"));
+            let inf_off = get_u(&chunk[0], "offloaded");
+            if policy.starts_with("offload-aware") {
+                assert!(inf_off > 0, "unlimited pool must admit offloads:\n{}", out.render());
+            } else {
+                for cell in chunk {
+                    assert_eq!(get_u(cell, "offloaded"), 0, "first-fit never offloads");
+                }
+            }
+        }
     }
 
     #[test]

@@ -45,7 +45,7 @@ fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "serve",
             summary: "online cluster serving: admission + placement + reconfig",
-            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--trace FILE] [--save-trace FILE] [--json]",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--trace FILE] [--save-trace FILE] [--json]",
         },
         CommandSpec {
             name: "runtime",
@@ -243,6 +243,9 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         "gpus",
         "policy",
         "batch",
+        "host-pool",
+        "c2c-contention",
+        "energy-weight",
         "arrival-rate",
         "jobs",
         "deadline",
@@ -291,6 +294,23 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         // MPS-within-MIG continuous batching: up to K co-resident jobs
         // per slot (1 = classic one-job-per-slot; validated downstream).
         batch: args.opt_u64("batch", 1).map_err(anyhow::Error::msg)? as u32,
+        // The host-memory plane: finite Grace pool + contended C2C links.
+        // The defaults (inf, off) reproduce the pre-plane reports
+        // bit-for-bit.
+        host_pool_gib: match args.opt("host-pool") {
+            None => f64::INFINITY,
+            Some(s) => migsim::cluster::hostmem::parse_pool_gib(s).ok_or_else(|| {
+                anyhow::anyhow!("--host-pool expects a positive GiB count or 'inf', got '{s}'")
+            })?,
+        },
+        c2c_contention: match args.opt_or("c2c-contention", "off") {
+            "on" => true,
+            "off" => false,
+            other => anyhow::bail!("--c2c-contention expects on|off, got '{other}'"),
+        },
+        energy_weight: args
+            .opt_f64("energy-weight", 0.0)
+            .map_err(anyhow::Error::msg)?,
     };
 
     // Trace replay: feed the queue from a persisted arrival log instead

@@ -128,6 +128,15 @@ impl OffloadPlan {
     pub fn effective_footprint_gib(&self) -> f64 {
         self.resident_gib
     }
+
+    /// Bytes this plan parks in the node's Grace host pool while the job
+    /// runs — the integer the host-memory resource plane
+    /// (`cluster::hostmem`) charges and releases, via the one shared
+    /// `util::units::gib_to_bytes` conversion so plan-level and
+    /// plane-level accounting can never drift.
+    pub fn host_bytes(&self) -> u64 {
+        crate::util::units::gib_to_bytes(self.spilled_gib)
+    }
 }
 
 /// Rewrites a kernel directly (used by property tests).
@@ -362,6 +371,17 @@ mod tests {
         let after = new.hbm_bytes + new.c2c_bytes;
         assert!((before - after).abs() < 1.0);
         assert!(new.c2c_bytes > 0.0);
+    }
+
+    #[test]
+    fn host_bytes_matches_the_spill() {
+        let app = apps::model(AppId::Llama3Fp16);
+        let fits = OffloadPlan::plan(&app, 20.0).unwrap();
+        assert_eq!(fits.host_bytes(), 0, "no spill, no host charge");
+        let spilled = OffloadPlan::plan(&app, 10.94).unwrap();
+        let expect = (spilled.spilled_gib * (1u64 << 30) as f64).round() as u64;
+        assert_eq!(spilled.host_bytes(), expect);
+        assert!(spilled.host_bytes() > 5 << 30, "llama spills over 5 GiB");
     }
 
     #[test]

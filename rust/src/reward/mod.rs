@@ -9,6 +9,20 @@
 //! α = 0 prioritizes reducing resource underutilization; α → 1 shifts to a
 //! performance-first policy. Both waste terms are in [0, 1], so α is
 //! swept over the same range (the paper uses {0, 0.1, 0.5, 1}).
+//!
+//! ## The energy-per-job extension
+//!
+//! `reward_energy` adds an optional power-aware waste term to the
+//! denominator:
+//!
+//! ```text
+//! R = (P / P_GPU) / (α + W_MEM + W_SM + w_E · E_rel)
+//! ```
+//!
+//! where `E_rel` is the job's modeled energy normalized by its full-GPU
+//! run (≈1 for an energy-neutral placement) and `w_E` is the operator's
+//! `--energy-weight`. At `w_E = 0` the term is skipped entirely — not
+//! merely zero-valued — so the paper's reward is reproduced bit-for-bit.
 
 use crate::util::table::{fnum, Table};
 
@@ -47,17 +61,40 @@ pub struct Reward {
     pub rel_perf: f64,
     pub w_sm: f64,
     pub w_mem: f64,
+    /// The weighted energy term added to the denominator (0.0 at
+    /// `energy_weight = 0`).
+    pub w_energy: f64,
     pub reward: f64,
 }
 
 /// Compute W_SM, W_MEM and R for one configuration.
 pub fn reward(eval: &ConfigEval, totals: &GpuTotals, alpha: f64) -> Reward {
+    reward_energy(eval, totals, alpha, 0.0, 0.0)
+}
+
+/// `reward` with the energy-per-job term: the denominator additionally
+/// carries `energy_weight × energy_rel` (job energy normalized by its
+/// full-GPU run). A zero weight skips the addition — `reward` is the
+/// literal special case, bit-for-bit.
+pub fn reward_energy(
+    eval: &ConfigEval,
+    totals: &GpuTotals,
+    alpha: f64,
+    energy_weight: f64,
+    energy_rel: f64,
+) -> Reward {
     assert!(alpha >= 0.0, "alpha must be non-negative");
+    assert!(energy_weight >= 0.0, "energy weight must be non-negative");
     assert!(totals.perf_full_gpu > 0.0, "P_GPU must be positive");
     let w_sm = (eval.sms as f64 / totals.sms as f64) * (1.0 - eval.occupancy.clamp(0.0, 1.0));
     let w_mem = ((eval.mem_instance_gib - eval.mem_app_gib) / totals.mem_gib).max(0.0);
     let rel_perf = eval.perf / totals.perf_full_gpu;
-    let denom = alpha + w_sm + w_mem;
+    let mut denom = alpha + w_sm + w_mem;
+    let mut w_energy = 0.0;
+    if energy_weight != 0.0 {
+        w_energy = energy_weight * energy_rel.max(0.0);
+        denom += w_energy;
+    }
     // α = 0 with zero waste would divide by zero; the paper's terms never
     // both vanish for real workloads, but guard for robustness.
     let reward = rel_perf / denom.max(1e-6);
@@ -66,6 +103,7 @@ pub fn reward(eval: &ConfigEval, totals: &GpuTotals, alpha: f64) -> Reward {
         rel_perf,
         w_sm,
         w_mem,
+        w_energy,
         reward,
     }
 }
@@ -180,6 +218,30 @@ mod tests {
         let (best1, _) = select_best(&evals, &totals(), 1.0);
         assert_eq!(evals[best0].config, "slow-tight");
         assert_eq!(evals[best1].config, "fast-wasteful");
+    }
+
+    #[test]
+    fn zero_energy_weight_is_the_paper_reward_bit_for_bit() {
+        let e = eval("1g", 0.2, 0.5, 16, 11.0, 8.0);
+        for alpha in [0.0, 0.1, 0.5, 1.0] {
+            let base = reward(&e, &totals(), alpha);
+            let ext = reward_energy(&e, &totals(), alpha, 0.0, 7.5);
+            assert_eq!(base.reward.to_bits(), ext.reward.to_bits());
+            assert_eq!(ext.w_energy, 0.0);
+        }
+    }
+
+    #[test]
+    fn energy_term_penalizes_energy_hungry_configs() {
+        let e = eval("1g", 0.2, 0.5, 16, 11.0, 8.0);
+        let cheap = reward_energy(&e, &totals(), 0.1, 0.5, 0.4);
+        let hungry = reward_energy(&e, &totals(), 0.1, 0.5, 2.0);
+        assert!(cheap.reward > hungry.reward);
+        assert!(hungry.w_energy > cheap.w_energy);
+        // Negative normalized energy cannot inflate the reward.
+        let weird = reward_energy(&e, &totals(), 0.1, 0.5, -3.0);
+        let zero = reward_energy(&e, &totals(), 0.1, 0.5, 0.0);
+        assert_eq!(weird.reward.to_bits(), zero.reward.to_bits());
     }
 
     #[test]

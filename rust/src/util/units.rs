@@ -36,6 +36,15 @@ pub fn gibs(x: f64) -> f64 {
     x * GIB
 }
 
+/// GiB to integer bytes with one deterministic rounding — the single
+/// conversion behind host-memory-pool accounting (`cluster::hostmem`)
+/// and `offload::OffloadPlan::host_bytes`, shared so plan-level and
+/// plane-level accounting can never drift.
+pub fn gib_to_bytes(gib: f64) -> u64 {
+    debug_assert!(gib >= 0.0 && gib.is_finite(), "converting {gib} GiB");
+    (gib * GIB).round() as u64
+}
+
 /// Human-readable bytes.
 pub fn human_bytes(b: f64) -> String {
     if b >= GIB {

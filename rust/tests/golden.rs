@@ -71,6 +71,7 @@ fn base_cfg() -> ServeConfig {
         seed: 7,
         workload_scale: 0.05,
         batch: 1,
+        ..ServeConfig::default()
     }
 }
 

@@ -315,6 +315,7 @@ fn sharded_serve_matches_oracle_and_is_thread_invariant() {
                 seed,
                 workload_scale: 0.05,
                 batch: 1,
+                ..ServeConfig::default()
             };
             let oracle = serve(&base).unwrap().to_json().pretty();
             for route in [RouteKind::RoundRobin, RouteKind::LeastLoaded] {
@@ -378,6 +379,7 @@ fn serve_trace_replay_round_trips_through_disk() {
         seed: 0xBEEF,
         workload_scale: 0.05,
         batch: 1,
+        ..ServeConfig::default()
     };
     let synth = serve(&cfg).unwrap();
     let trace = JobTrace::poisson(cfg.jobs, 1.0 / cfg.arrival_rate_hz, &serve_mix(), cfg.seed);
@@ -439,6 +441,7 @@ fn indexed_serve_matches_naive_oracle_across_policy_layout_seed_grid() {
                     seed,
                     workload_scale: 0.05,
                     batch: 1,
+                    ..ServeConfig::default()
                 };
                 let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
                 let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
@@ -488,6 +491,7 @@ fn batched_serve_matches_naive_oracle_across_policy_layout_seed_batch_grid() {
                         seed,
                         workload_scale: 0.05,
                         batch,
+                        ..ServeConfig::default()
                     };
                     let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
                     let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
@@ -497,6 +501,179 @@ fn batched_serve_matches_naive_oracle_across_policy_layout_seed_batch_grid() {
                         "diverged: policy={policy:?} layout={layout:?} seed={seed:#x} \
                          batch={batch}"
                     );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn contended_serve_matches_naive_oracle_across_policy_layout_seed_pool_grid() {
+    // The host-memory plane's acceptance gate: with C2C link contention
+    // on and finite Grace pools, the indexed hot path (per-share class
+    // walk, host-pool admission gate, pool-aware reconfig trigger) must
+    // reproduce the naive full-rescan oracle's ServeReport *bit for
+    // bit* — every metric, including the float energy/fragmentation
+    // integrals — across the policy × layout × seed × pool (× batch)
+    // grid.
+    use migsim::cluster::{serve_with, LayoutPreset, PolicyKind, ServeConfig, ServeMode};
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+        PolicyKind::OffloadAware { alpha_centi: 40 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall];
+    let pools = [f64::INFINITY, 16.0, 4.0];
+    for &policy in &policies {
+        for &layout in &layouts {
+            for &seed in &[7u64, 0xC0FFEE] {
+                for &pool in &pools {
+                    for &batch in &[1u32, 2] {
+                        let cfg = ServeConfig {
+                            gpus: 3,
+                            policy,
+                            layout,
+                            arrival_rate_hz: 3.0,
+                            jobs: 40,
+                            deadline_s: 25.0,
+                            reconfig: true,
+                            seed,
+                            workload_scale: 0.05,
+                            batch,
+                            host_pool_gib: pool,
+                            c2c_contention: true,
+                            energy_weight: 0.0,
+                        };
+                        let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
+                        let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
+                        assert_eq!(
+                            fast.to_json().pretty(),
+                            oracle.to_json().pretty(),
+                            "diverged: policy={policy:?} layout={layout:?} seed={seed:#x} \
+                             pool={pool} batch={batch}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn energy_weighted_serve_matches_naive_oracle_and_stays_thread_invariant() {
+    // The --energy-weight path under load: the indexed hot path (dense
+    // reward cache + fresh contended recomputes, both folding the energy
+    // term) must match the naive oracle bit-for-bit, and the sharded
+    // runner must stay thread-invariant, at weights > 0 — the weight-0
+    // grids cannot see a divergence in this machinery.
+    use migsim::cluster::{
+        serve_sharded, serve_with, LayoutPreset, PolicyKind, ServeConfig, ServeMode,
+        ShardServeConfig,
+    };
+    for &weight in &[0.3, 2.0] {
+        let cfg = ServeConfig {
+            gpus: 3,
+            policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+            layout: LayoutPreset::Mixed,
+            arrival_rate_hz: 3.0,
+            jobs: 40,
+            deadline_s: 25.0,
+            reconfig: true,
+            seed: 0xC0FFEE,
+            workload_scale: 0.05,
+            batch: 2,
+            host_pool_gib: 16.0,
+            c2c_contention: true,
+            energy_weight: weight,
+        };
+        let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
+        let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
+        assert_eq!(
+            fast.to_json().pretty(),
+            oracle.to_json().pretty(),
+            "energy weight {weight} diverged from the oracle"
+        );
+        let mut first: Option<String> = None;
+        for threads in [1u32, 2] {
+            let scfg = ShardServeConfig::new(cfg.clone(), 2, threads);
+            let r = serve_sharded(&scfg).unwrap();
+            let key = r.report.to_json().pretty();
+            match &first {
+                None => first = Some(key),
+                Some(f) => assert_eq!(*f, key, "weight={weight} threads={threads}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn contention_without_co_offloaders_reproduces_the_private_link_bits() {
+    // Structural identity: a policy that never offloads cannot create
+    // co-offloaders, so turning contention on (and squeezing the pool)
+    // must leave its report bit-identical — the share axis and the pool
+    // gate only ever engage on offloaded placements.
+    use migsim::cluster::{serve, LayoutPreset, PolicyKind, ServeConfig};
+    for &seed in &[7u64, 0xC0FFEE] {
+        let base = ServeConfig {
+            gpus: 3,
+            policy: PolicyKind::FirstFit,
+            layout: LayoutPreset::Mixed,
+            arrival_rate_hz: 2.0,
+            jobs: 40,
+            deadline_s: 25.0,
+            reconfig: true,
+            seed,
+            workload_scale: 0.05,
+            ..ServeConfig::default()
+        };
+        let plain = serve(&base).unwrap().to_json().pretty();
+        let planed = serve(&ServeConfig {
+            host_pool_gib: 2.0,
+            c2c_contention: true,
+            ..base
+        })
+        .unwrap()
+        .to_json()
+        .pretty();
+        assert_eq!(plain, planed, "seed={seed:#x}");
+    }
+}
+
+#[test]
+fn sharded_contended_serve_is_thread_invariant_and_exact() {
+    // The host-memory plane under the sharded control plane: per-node
+    // pools, contended links, and the pool-aware handoff compatibility
+    // must keep the merged report bit-identical across thread counts and
+    // the global accounting exact.
+    use migsim::cluster::{serve_sharded, LayoutPreset, PolicyKind, ServeConfig, ShardServeConfig};
+    for &pool in &[f64::INFINITY, 12.0] {
+        let base = ServeConfig {
+            gpus: 4,
+            policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+            layout: LayoutPreset::AllSmall,
+            arrival_rate_hz: 2.0,
+            jobs: 50,
+            deadline_s: 25.0,
+            reconfig: true,
+            seed: 0xBEEF,
+            workload_scale: 0.05,
+            host_pool_gib: pool,
+            c2c_contention: true,
+            ..ServeConfig::default()
+        };
+        for nodes in [2u32, 4] {
+            let mut first: Option<String> = None;
+            for threads in [1u32, 2, 4] {
+                let scfg = ShardServeConfig::new(base.clone(), nodes, threads);
+                let r = serve_sharded(&scfg).unwrap();
+                let rep = &r.report;
+                assert_eq!(rep.completed + rep.expired + rep.rejected, rep.jobs);
+                let key = format!("{}|{}", rep.to_json().pretty(), r.handoffs);
+                match &first {
+                    None => first = Some(key),
+                    Some(f) => {
+                        assert_eq!(*f, key, "pool={pool} nodes={nodes} threads={threads}")
+                    }
                 }
             }
         }

@@ -163,6 +163,7 @@ fn cluster_serve_is_deterministic_for_a_fixed_seed() {
         seed: 0xC0FFEE,
         workload_scale: 0.05,
         batch: 1,
+        ..ServeConfig::default()
     };
     let a = serve(&cfg).unwrap();
     let b = serve(&cfg).unwrap();
@@ -210,6 +211,16 @@ fn sharded_serve_properties_under_random_configs() {
             // Random batch depth: the sharded invariants must hold with
             // co-residency in play too.
             batch: 1 + rng.below(3) as u32,
+            // Random host-memory plane: finite per-node Grace pools and
+            // link contention must not break conservation or
+            // thread-invariance either.
+            host_pool_gib: if rng.chance(0.5) {
+                f64::INFINITY
+            } else {
+                4.0 + rng.range(0.0, 28.0)
+            },
+            c2c_contention: rng.chance(0.5),
+            ..ServeConfig::default()
         };
         let mut scfg = ShardServeConfig::new(base, nodes, 1);
         scfg.route = if rng.chance(0.5) {
@@ -291,6 +302,7 @@ fn batched_slot_accounting_invariants_under_random_churn() {
                         step as f64,
                         step as f64 + 5.0,
                         c.resident_gib + pl.ctx_gib(),
+                        migsim::cluster::hostmem::gib_to_bytes(c.host_gib),
                     );
                     running.push((g, s, next_job));
                     next_job += 1;
@@ -365,6 +377,94 @@ fn batched_slot_accounting_invariants_under_random_churn() {
                     "drained fleet must place like a fresh one ({app:?} {policy:?})"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn host_pool_and_link_accounting_invariants_under_random_churn() {
+    // The host-memory plane's randomized invariants: the Grace pool is
+    // never overcommitted, the live byte/offloader counters match the
+    // scan oracles after every mutation, the indexed contended placement
+    // equals the naive scan, and draining every job restores the pool to
+    // its initial bytes *exactly* (integer accounting — no epsilon).
+    use migsim::cluster::hostmem::gib_to_bytes;
+    use migsim::cluster::{Fleet, Planner};
+    use migsim::workload::AppId;
+    let apps = [
+        AppId::Faiss,
+        AppId::Hotspot,
+        AppId::Llama3Fp16,
+        AppId::Qiskit31,
+        AppId::FaissLarge,
+    ];
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    for (case, pool_gib) in [(0u64, 8.0f64), (1, 20.0), (2, f64::INFINITY)] {
+        let mut rng = Rng::new(0x6051 + case);
+        let batch = 1 + (case % 2) as u32;
+        let mut fleet =
+            Fleet::with_hostmem(3, LayoutPreset::AllSmall, batch, pool_gib).unwrap();
+        let mut pl = Planner::with_opts(0.05, batch, true, 0.0);
+        let cap = fleet.host_capacity_bytes();
+        let mut running: Vec<(usize, usize, u32)> = Vec::new();
+        let mut next_job = 0u32;
+        for step in 0..250u32 {
+            if rng.chance(0.6) {
+                let app = *rng.choose(&apps);
+                let policy = *rng.choose(&policies);
+                let fast = pl.place(&fleet, app, policy);
+                let scan = pl.place_scan(&fleet, app, policy).map(|(g, s, _)| (g, s));
+                assert_eq!(
+                    fast.map(|(g, s, _)| (g, s)),
+                    scan,
+                    "case {case} step {step}: contended index diverged from scan"
+                );
+                if let Some((g, s, c)) = fast {
+                    let host = gib_to_bytes(c.host_gib);
+                    assert!(
+                        fleet.host_fits(host),
+                        "case {case}: placement ignored the pool gate"
+                    );
+                    fleet.start_job(
+                        g,
+                        s,
+                        next_job,
+                        step as f64,
+                        step as f64 + 5.0,
+                        c.resident_gib + pl.ctx_gib(),
+                        host,
+                    );
+                    running.push((g, s, next_job));
+                    next_job += 1;
+                }
+            } else if !running.is_empty() {
+                let i = rng.below(running.len() as u64) as usize;
+                let (g, s, job) = running.swap_remove(i);
+                assert!(fleet.finish_job(g, s, job, step as f64));
+            }
+            // Invariants after every mutation.
+            if let Some(cap) = cap {
+                assert!(
+                    fleet.host_used_bytes() <= cap,
+                    "case {case} step {step}: pool overcommitted"
+                );
+            }
+            assert_eq!(fleet.host_used_bytes(), fleet.host_used_bytes_scan());
+            for gpu in &fleet.gpus {
+                assert_eq!(gpu.offloaders(), gpu.offloaders_scan());
+            }
+        }
+        // Drain everything: exact restoration, no residue.
+        for (g, s, job) in running.drain(..) {
+            assert!(fleet.finish_job(g, s, job, 1e6));
+        }
+        assert_eq!(fleet.host_used_bytes(), 0, "case {case}: pool must drain to 0");
+        for gpu in &fleet.gpus {
+            assert_eq!(gpu.offloaders(), 0);
         }
     }
 }
