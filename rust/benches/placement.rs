@@ -9,6 +9,12 @@
 //! in, where the naive scan walks ~240 slots per decision and the indexed
 //! walk touches ≤6 profile classes.
 //!
+//! Note the default serve path measured here *is* the telemetry-
+//! instrumented path with the inert `NullSink`: every hook is guarded by
+//! a monomorphized `const ENABLED` and compiles to nothing, so this
+//! bench doubles as the regression watch on the zero-cost-when-off
+//! claim (the `telemetry` bench prices the plane when it is on).
+//!
 //! Besides the human-readable report (and the standard
 //! `results/bench/placement.json`), this bench emits
 //! `BENCH_placement.json` — machine-readable ns/decision, naive-vs-indexed

@@ -1,0 +1,141 @@
+//! Telemetry-plane overhead benchmark: end-to-end `cluster::serve` with
+//! the plane compiled out (`NullSink` — the default path every other
+//! bench measures) against `serve_traced` with the recording sink live,
+//! on a near-saturated fleet, plus micro-benchmarks of the histogram
+//! record/merge algebra and JSONL serialization.
+//!
+//! The "off" cell is the zero-cost-when-off claim: the serve loop is
+//! generic over the sink, so with `NullSink` every hook monomorphizes to
+//! nothing and the bits match the pre-telemetry loop. The "on" cell
+//! prices full structured tracing + sampling + histograms.
+//!
+//! Besides the human-readable report (and the standard
+//! `results/bench/telemetry.json`), this bench emits
+//! `BENCH_telemetry.json` — machine-readable events/s for both cells,
+//! the on/off overhead ratio, and emitted trace volume — so the
+//! observability tax is tracked across PRs.
+//!
+//!     cargo bench --offline --bench telemetry          # full measurement
+//!     cargo bench --offline --bench telemetry -- --smoke   # CI bit-rot check
+
+use migsim::bench::{black_box, BenchConfig, Bencher};
+use migsim::cluster::telemetry::hist::Hist;
+use migsim::cluster::{
+    serve, serve_traced, LayoutPreset, PolicyKind, ServeConfig, ServeMode, TelemetryConfig,
+};
+use migsim::util::json::Json;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(300),
+        max_iters: 8,
+    });
+    let smoke = b.smoke();
+    let gpus: u32 = if smoke { 8 } else { 64 };
+    let jobs: u32 = if smoke { 300 } else { 5_000 };
+
+    // Near-saturated: per-GPU offered load matches the serve-scale
+    // experiment, so the loop spends its time in dispatch — the regime
+    // where per-event hooks would hurt if they cost anything.
+    let cfg = ServeConfig {
+        gpus,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: gpus as f64 * 2.5,
+        jobs,
+        deadline_s: 45.0,
+        reconfig: true,
+        seed: 7,
+        workload_scale: 0.05,
+        batch: 1,
+        ..ServeConfig::default()
+    };
+    let tcfg = TelemetryConfig::default();
+
+    let off = serve(&cfg).unwrap();
+    let (on, tel) = serve_traced(&cfg, ServeMode::Indexed, &tcfg).unwrap();
+    assert_eq!(
+        off.to_json().pretty(),
+        on.to_json().pretty(),
+        "telemetry must be plane-inert before anything is timed"
+    );
+
+    let off_res = b
+        .bench_with_work(
+            &format!("telemetry/off_{jobs}jobs_{gpus}gpus"),
+            Some(off.events as f64),
+            "events",
+            || serve(&cfg).unwrap().completed,
+        )
+        .cloned();
+    let on_res = b
+        .bench_with_work(
+            &format!("telemetry/on_{jobs}jobs_{gpus}gpus"),
+            Some(on.events as f64),
+            "events",
+            || {
+                serve_traced(&cfg, ServeMode::Indexed, &tcfg)
+                    .unwrap()
+                    .0
+                    .completed
+            },
+        )
+        .cloned();
+    let jsonl_res = b
+        .bench_with_work(
+            "telemetry/jsonl_serialize",
+            Some(tel.events.len() as f64),
+            "events",
+            || tel.to_jsonl().len(),
+        )
+        .cloned();
+
+    // Histogram algebra micro-benchmarks: the per-completion record and
+    // the per-barrier merge the coordinator folds shard chunks with.
+    const N: u64 = 100_000;
+    b.bench_with_work("telemetry/hist_record_100k", Some(N as f64), "records", || {
+        let mut h = Hist::new();
+        for i in 0..N {
+            h.record_ns(black_box(i.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        }
+        h.count()
+    });
+    let mut full = Hist::new();
+    for i in 0..N {
+        full.record_ns(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    }
+    b.bench_with_work("telemetry/hist_merge", Some(1.0), "merges", || {
+        let mut acc = Hist::new();
+        acc.merge(black_box(&full));
+        acc.count()
+    });
+
+    // Machine-readable overhead trajectory for the PR log.
+    let mut doc = Json::obj();
+    doc.set("suite", "telemetry")
+        .set("smoke", smoke)
+        .set("gpus", gpus)
+        .set("jobs", jobs)
+        .set("sim_events", on.events)
+        .set("trace_events", tel.events.len() as u64)
+        .set("trace_samples", tel.samples.len() as u64)
+        .set("trace_bytes", tel.to_jsonl().len() as u64);
+    if let (Some(off_r), Some(on_r)) = (&off_res, &on_res) {
+        doc.set("off_wall_s", off_r.mean_s)
+            .set("off_events_per_s", off.events as f64 / off_r.mean_s)
+            .set("on_wall_s", on_r.mean_s)
+            .set("on_events_per_s", on.events as f64 / on_r.mean_s)
+            .set("overhead_ratio", on_r.mean_s / off_r.mean_s);
+    }
+    if let Some(j) = &jsonl_res {
+        doc.set("jsonl_serialize_s", j.mean_s);
+    }
+    if std::fs::write("BENCH_telemetry.json", doc.pretty()).is_ok() {
+        println!("-- wrote BENCH_telemetry.json");
+    }
+
+    b.finish("telemetry");
+}

@@ -389,6 +389,19 @@ impl FleetIndex {
     }
 }
 
+/// Per-profile-class fleet census for the telemetry sampler: empty
+/// slots and open seats per profile, by direct slot scan. Read-only and
+/// index-free, so the numbers are identical in `Indexed` and
+/// `NaiveOracle` serve modes by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassCensus {
+    /// Empty slots per profile class (dense `ProfileId::index`).
+    pub idle_slots: [u32; NUM_PROFILES],
+    /// Open seats per profile class: `batch − occupancy` summed over
+    /// non-full slots of GPUs not mid-reconfiguration.
+    pub open_seats: [u32; NUM_PROFILES],
+}
+
 /// The multi-GPU fleet.
 #[derive(Debug)]
 pub struct Fleet {
@@ -514,6 +527,32 @@ impl Fleet {
     /// epoch is still E.
     pub fn epoch(&self) -> u64 {
         self.index.epoch
+    }
+
+    /// Per-profile-class idle-slot and open-seat counts for the
+    /// telemetry sampler (O(slots) scan; samples are opt-in and
+    /// periodic, so the scan never sits on the serve hot path).
+    pub fn class_census(&self) -> ClassCensus {
+        let mut census = ClassCensus {
+            idle_slots: [0; NUM_PROFILES],
+            open_seats: [0; NUM_PROFILES],
+        };
+        for gpu in &self.gpus {
+            if gpu.reconfiguring() {
+                continue;
+            }
+            for slot in &gpu.slots {
+                let i = slot.profile.id.index();
+                let occ = slot.occupancy() as u32;
+                if occ == 0 {
+                    census.idle_slots[i] += 1;
+                }
+                if occ < self.batch {
+                    census.open_seats[i] += self.batch - occ;
+                }
+            }
+        }
+        census
     }
 
     /// First *empty* slot of `profile` in `(gpu, slot)` order, excluding

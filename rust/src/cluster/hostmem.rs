@@ -147,6 +147,16 @@ impl HostPool {
         }
     }
 
+    /// Occupied fraction of the pool for the telemetry sampler: 0 for an
+    /// unlimited (or pathological zero-capacity) pool, else
+    /// `used / capacity`.
+    pub fn occupancy_frac(&self) -> f64 {
+        match self.capacity_bytes {
+            None | Some(0) => 0.0,
+            Some(c) => self.used_bytes as f64 / c as f64,
+        }
+    }
+
     /// Charge `bytes` (an offloaded resident's spilled data). The
     /// admission gate (`fits`) is the caller's responsibility; in debug
     /// builds overcommit is a bug, not a clamp.
@@ -230,6 +240,18 @@ mod tests {
         p.release(a);
         assert_eq!(p.used_bytes(), 0);
         assert_eq!(p.headroom_bytes(), 16 << 30);
+    }
+
+    #[test]
+    fn occupancy_fraction_tracks_usage() {
+        let mut p = HostPool::new(8.0).unwrap();
+        assert_eq!(p.occupancy_frac(), 0.0);
+        p.charge(gib_to_bytes(2.0));
+        assert!((p.occupancy_frac() - 0.25).abs() < 1e-12);
+        p.charge(gib_to_bytes(6.0));
+        assert!((p.occupancy_frac() - 1.0).abs() < 1e-12);
+        let inf = HostPool::new(f64::INFINITY).unwrap();
+        assert_eq!(inf.occupancy_frac(), 0.0, "unlimited pool reports 0");
     }
 
     #[test]

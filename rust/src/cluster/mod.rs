@@ -64,15 +64,17 @@ pub mod placement;
 pub mod queue;
 pub mod reconfig;
 pub mod shard;
+pub mod telemetry;
 
 pub use fleet::{Fleet, LayoutPreset, MAX_BATCH};
 pub use hostmem::{HostMemConfig, HostPool};
 pub use placement::{PlacementCost, Planner, PolicyKind};
 pub use queue::{AdmissionQueue, JobState};
 pub use shard::{
-    serve_sharded, serve_sharded_replay, RouteKind, ShardServeConfig, ShardSummary,
-    ShardedServeReport,
+    serve_sharded, serve_sharded_replay, serve_sharded_traced, RouteKind, ShardServeConfig,
+    ShardSummary, ShardedServeReport,
 };
+pub use telemetry::{TelemetryConfig, TelemetryReport};
 
 use crate::util::json::Json;
 use crate::workload::trace::JobTrace;
@@ -279,6 +281,25 @@ pub fn serve_with(cfg: &ServeConfig, mode: ServeMode) -> crate::Result<ServeRepo
     cfg.validate_hostmem()?;
     let trace = JobTrace::poisson(cfg.jobs, 1.0 / cfg.arrival_rate_hz, &serve_mix(), cfg.seed);
     shard::run_single(cfg, mode, &trace.jobs)
+}
+
+/// Run one serving simulation with the telemetry plane on: the same
+/// simulation as `serve_with` (the `ServeReport` is byte-identical),
+/// plus the merged event trace, fleet samples and latency histograms.
+/// Everything but the hot-path profiling counters is additionally
+/// mode-invariant (`TelemetryReport::oracle_view`).
+pub fn serve_traced(
+    cfg: &ServeConfig,
+    mode: ServeMode,
+    tcfg: &TelemetryConfig,
+) -> crate::Result<(ServeReport, TelemetryReport)> {
+    ensure!(cfg.gpus >= 1, "serve needs at least one GPU");
+    ensure!(cfg.jobs >= 1, "serve needs at least one job");
+    ensure!(cfg.arrival_rate_hz > 0.0, "arrival rate must be positive");
+    ensure!(cfg.deadline_s > 0.0, "deadline must be positive");
+    cfg.validate_hostmem()?;
+    let trace = JobTrace::poisson(cfg.jobs, 1.0 / cfg.arrival_rate_hz, &serve_mix(), cfg.seed);
+    shard::run_single_traced(cfg, mode, &trace.jobs, tcfg)
 }
 
 /// Run one serving simulation over a replayed arrival trace instead of

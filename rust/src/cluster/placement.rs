@@ -83,6 +83,7 @@
 
 use super::fleet::{Fleet, MAX_BATCH};
 use super::hostmem::gib_to_bytes;
+use super::telemetry::{Counter, NullSink, Sink};
 use crate::gpu::nvlink::{Dir, NvlinkModel};
 use crate::gpu::{pipelines::ALL_PIPELINES, GpuSpec, GpuUsage, PowerModel};
 use crate::mig::profile::{GiProfile, ProfileId, ALL_PROFILES, NUM_PROFILES};
@@ -649,9 +650,24 @@ impl Planner {
         app: AppId,
         policy: PolicyKind,
     ) -> Option<(usize, usize, PlacementCost)> {
+        self.place_traced(fleet, app, policy, &mut NullSink)
+    }
+
+    /// `place` with telemetry hooks: counts walk steps (candidate
+    /// classes visited) and host-pool offload gatings into `sink`. With
+    /// the inert `NullSink` every hook is a compile-time `false` branch,
+    /// so `place` pays nothing for the instrumentation.
+    pub fn place_traced<S: Sink>(
+        &mut self,
+        fleet: &Fleet,
+        app: AppId,
+        policy: PolicyKind,
+        sink: &mut S,
+    ) -> Option<(usize, usize, PlacementCost)> {
         debug_assert_eq!(fleet.batch(), self.batch, "planner/fleet batch mismatch");
+        let mut steps: u64 = 0;
         let kmax = fleet.batch() as usize;
-        match policy {
+        let choice = match policy {
             PolicyKind::FirstFit => {
                 let mask = self.admissible_mask(app, false);
                 let mut best: Option<(usize, usize, ProfileId, u32)> = None;
@@ -661,6 +677,9 @@ impl Planner {
                     }
                     let need = self.cost(app, pid, false).unwrap().resident_gib + self.ctx_gib;
                     for m in 0..kmax {
+                        if S::ENABLED {
+                            steps += 1;
+                        }
                         if let Some((g, s)) = fleet.first_open_fitting(pid, m, need) {
                             if best
                                 .map(|(bg, bs, _, _)| (g, s) < (bg, bs))
@@ -690,6 +709,9 @@ impl Planner {
                     let need = self.cost(app, pid, false).unwrap().resident_gib + self.ctx_gib;
                     let sms = GiProfile::get(pid).sms;
                     for m in 0..kmax {
+                        if S::ENABLED {
+                            steps += 1;
+                        }
                         if let Some((g, s)) = fleet.first_open_fitting(pid, m, need) {
                             let better = match &best {
                                 None => true,
@@ -733,6 +755,9 @@ impl Planner {
                     }
                     let base = self.cost(app, pid, true).unwrap();
                     if base.offloaded && !fleet.host_fits(gib_to_bytes(base.host_gib)) {
+                        if S::ENABLED {
+                            sink.count(Counter::OffloadPoolGated, 1);
+                        }
                         continue;
                     }
                     let need = base.resident_gib + self.ctx_gib;
@@ -749,6 +774,9 @@ impl Planner {
                     }
                 }
                 cands.sort_unstable();
+                if S::ENABLED {
+                    steps += cands.len() as u64;
+                }
                 let mut best: Option<(f64, u32, usize, usize, ProfileId, u8, u32)> = None;
                 for &(g, s, pid, m, share) in &cands {
                     let occ = m as u32 + 1;
@@ -769,7 +797,11 @@ impl Planner {
                     (g, s, self.cost_at_shared(app, pid, true, m as u32 + 1, share).unwrap())
                 })
             }
+        };
+        if S::ENABLED {
+            sink.count(Counter::WalkSteps, steps);
         }
+        choice
     }
 
     /// The naive full `gpus × slots` scan — the differential-test oracle
@@ -781,15 +813,34 @@ impl Planner {
         app: AppId,
         policy: PolicyKind,
     ) -> Option<(usize, usize, PlacementCost)> {
+        self.place_scan_traced(fleet, app, policy, &mut NullSink)
+    }
+
+    /// `place_scan` with the same telemetry hooks as `place_traced`:
+    /// walk steps here count *slots visited* (the scan's unit of work),
+    /// so the profiling counters legitimately differ between serve
+    /// modes — they measure the work each mode actually does.
+    pub fn place_scan_traced<S: Sink>(
+        &mut self,
+        fleet: &Fleet,
+        app: AppId,
+        policy: PolicyKind,
+        sink: &mut S,
+    ) -> Option<(usize, usize, PlacementCost)> {
         debug_assert_eq!(fleet.batch(), self.batch, "planner/fleet batch mismatch");
+        let mut steps: u64 = 0;
         let kmax = fleet.batch();
-        match policy {
+        let choice = match policy {
             PolicyKind::FirstFit => {
-                for (g, gpu) in fleet.gpus.iter().enumerate() {
+                let mut found: Option<(usize, usize, PlacementCost)> = None;
+                'scan: for (g, gpu) in fleet.gpus.iter().enumerate() {
                     if gpu.reconfiguring() {
                         continue;
                     }
                     for (s, slot) in gpu.slots.iter().enumerate() {
+                        if S::ENABLED {
+                            steps += 1;
+                        }
                         let occ = slot.occupancy() as u32;
                         if occ >= kmax {
                             continue;
@@ -798,11 +849,12 @@ impl Planner {
                             if occ > 0 && !slot.fits(c.resident_gib + self.ctx_gib) {
                                 continue;
                             }
-                            return Some((g, s, c));
+                            found = Some((g, s, c));
+                            break 'scan;
                         }
                     }
                 }
-                None
+                found
             }
             PolicyKind::BestFit => {
                 let mut best: Option<(u32, usize, usize, usize, PlacementCost)> = None;
@@ -811,6 +863,9 @@ impl Planner {
                         continue;
                     }
                     for (s, slot) in gpu.slots.iter().enumerate() {
+                        if S::ENABLED {
+                            steps += 1;
+                        }
                         let occ = slot.occupancy();
                         if occ as u32 >= kmax {
                             continue;
@@ -851,6 +906,9 @@ impl Planner {
                         1
                     };
                     for (s, slot) in gpu.slots.iter().enumerate() {
+                        if S::ENABLED {
+                            steps += 1;
+                        }
                         let occ = slot.occupancy() as u32;
                         if occ >= kmax {
                             continue;
@@ -864,6 +922,9 @@ impl Planner {
                             continue;
                         }
                         if c.offloaded && !fleet.host_fits_scan(gib_to_bytes(c.host_gib)) {
+                            if S::ENABLED {
+                                sink.count(Counter::OffloadPoolGated, 1);
+                            }
                             continue;
                         }
                         let r = self.reward_shared(app, pid, occ + 1, share, alpha_centi, &c);
@@ -882,7 +943,29 @@ impl Planner {
                 }
                 best.map(|(_, _, g, s, c)| (g, s, c))
             }
+        };
+        if S::ENABLED {
+            sink.count(Counter::WalkSteps, steps);
         }
+        choice
+    }
+
+    /// Whether a failed placement was (at least partly) the host pool's
+    /// fault: some profile class admits `app` only by offloading, and the
+    /// pool cannot park that class's spill. Pure function of the cost
+    /// tables and the integer pool counter, so the answer is identical in
+    /// `Indexed` and `NaiveOracle` modes — the telemetry plane uses it to
+    /// emit mode-invariant offload-denial events on the cold (failure)
+    /// path.
+    pub fn offload_pool_starved(&mut self, fleet: &Fleet, app: AppId) -> bool {
+        for pid in ALL_PROFILES {
+            if let Some(c) = self.cost(app, pid, true) {
+                if c.offloaded && !fleet.host_fits(gib_to_bytes(c.host_gib)) {
+                    return true;
+                }
+            }
+        }
+        false
     }
 
     /// Whether `app` could run on *some* profile of the per-GPU layouts the

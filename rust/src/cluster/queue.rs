@@ -128,6 +128,12 @@ impl AdmissionQueue {
         self.pending.len()
     }
 
+    /// Live pending-count-per-app buckets (dense `AppId::index`) — read
+    /// by the telemetry sampler to attribute queue depth to workloads.
+    pub fn pending_by_app(&self) -> &[u32; AppId::COUNT] {
+        &self.pending_by_app
+    }
+
     fn unqueue(&mut self, id: u32) {
         let app = self.jobs[id as usize].job.app;
         if self.pending.remove(&id) {

@@ -33,6 +33,34 @@ pub fn latency_s(old: &[ProfileId], new: &[ProfileId]) -> f64 {
     RECONFIG_BASE_S + RECONFIG_PER_INSTANCE_S * (old.len() + new.len()) as f64
 }
 
+/// Compact human label for an arbitrary per-GPU layout, e.g.
+/// `4x1g.12gb+2g.24gb` — used by the telemetry plane to describe
+/// old → new layouts in reconfiguration trace events. Instances are
+/// grouped in `ALL_PROFILES` (ascending-SM) order, so the label is a
+/// canonical function of the layout multiset.
+pub fn layout_label(layout: &[ProfileId]) -> String {
+    use crate::mig::profile::{ALL_PROFILES, NUM_PROFILES};
+    let mut counts = [0u32; NUM_PROFILES];
+    for &p in layout {
+        counts[p.index()] += 1;
+    }
+    let mut parts: Vec<String> = Vec::new();
+    for p in ALL_PROFILES {
+        let n = counts[p.index()];
+        let name = GiProfile::get(p).name;
+        match n {
+            0 => {}
+            1 => parts.push(name.to_string()),
+            _ => parts.push(format!("{n}x{name}")),
+        }
+    }
+    if parts.is_empty() {
+        "empty".to_string()
+    } else {
+        parts.join("+")
+    }
+}
+
 /// The canonical target layout for hosting a job whose footprint (plus
 /// context overhead) is `need_gib`: the smallest profile class that fits
 /// it directly, packed out with complementary instances so the rest of the
@@ -95,6 +123,23 @@ mod tests {
             assert!(max_mem >= need, "need {need} vs max slot {max_mem}");
         }
         assert!(plan_for_footprint(95.0).is_none());
+    }
+
+    #[test]
+    fn layout_labels_are_canonical() {
+        use ProfileId::*;
+        assert_eq!(layout_label(&[]), "empty");
+        assert_eq!(layout_label(&[P7g96gb]), "7g.96gb");
+        assert_eq!(layout_label(&[P1g12gb; 7]), "7x1g.12gb");
+        // Order-insensitive: the label is a function of the multiset.
+        assert_eq!(
+            layout_label(&[P2g24gb, P1g12gb, P1g12gb]),
+            layout_label(&[P1g12gb, P2g24gb, P1g12gb])
+        );
+        assert_eq!(
+            layout_label(&[P1g12gb, P2g24gb, P1g12gb]),
+            "2x1g.12gb+2g.24gb"
+        );
     }
 
     #[test]

@@ -59,6 +59,10 @@
 use super::fleet::Fleet;
 use super::queue::{AdmissionQueue, JobState};
 use super::reconfig;
+use super::telemetry::{
+    Counter, EventKind, FleetSample, HandoffReason, NullSink, Recorder, Sink, TelemetryChunk,
+    TelemetryConfig, TelemetryReport,
+};
 use super::{PlacementCost, Planner, PolicyKind, ServeConfig, ServeMode, ServeReport};
 use crate::gpu::{GpuUsage, PowerModel};
 use crate::mig::profile::{GiProfile, ProfileId};
@@ -170,6 +174,9 @@ struct BarrierInfo {
     /// the offload arm of the compatibility check.
     host_headroom_bytes: u64,
     candidates: Vec<Handoff>,
+    /// Telemetry recorded during the epoch, drained from the shard's
+    /// sink at the barrier (`None` when the plane is off).
+    telemetry: Option<Box<TelemetryChunk>>,
 }
 
 /// Everything the coordinator sends a shard for one epoch.
@@ -180,8 +187,11 @@ struct EpochInput {
     /// this epoch (keeps the idle-power integral honest while the cluster
     /// as a whole still has work).
     stream_open: bool,
-    /// Origin queue ids leaving this shard as handoffs (mark `Forwarded`).
-    removals: Vec<u32>,
+    /// Jobs leaving this shard as handoffs (mark `Forwarded`):
+    /// `(origin queue id, destination shard, why the dispatcher picked
+    /// it)` — the destination/reason exist purely for the telemetry
+    /// plane's `Handoff` events.
+    removals: Vec<(u32, u32, HandoffReason)>,
     /// Handoffs arriving at this shard, ascending global id.
     handoffs: Vec<Handoff>,
     /// Fresh arrivals routed to this shard, ascending global id.
@@ -190,8 +200,10 @@ struct EpochInput {
 
 /// One node shard: a self-contained serving loop over a fleet partition.
 /// The single-loop `cluster::serve` is exactly one of these run to
-/// completion (`run_single`).
-pub(crate) struct Shard {
+/// completion (`run_single`). Generic over the telemetry [`Sink`]: with
+/// the inert [`NullSink`] every hook monomorphizes to nothing, so the
+/// untraced build is byte-identical to the pre-telemetry serve loop.
+pub(crate) struct Shard<S: Sink> {
     id: usize,
     params: ServeConfig,
     mode: ServeMode,
@@ -225,9 +237,11 @@ pub(crate) struct Shard {
     last_t: f64,
     handoffs_in: u32,
     handoffs_out: u32,
+    /// Telemetry hook; reads simulator state, never writes it.
+    sink: S,
 }
 
-impl Shard {
+impl<S: Sink> Shard<S> {
     fn new(
         id: usize,
         gpus: u32,
@@ -235,7 +249,8 @@ impl Shard {
         mode: ServeMode,
         lookahead_s: f64,
         forward: bool,
-    ) -> crate::Result<Shard> {
+        sink: S,
+    ) -> crate::Result<Shard<S>> {
         let fleet = Fleet::with_hostmem(gpus, cfg.layout, cfg.batch, cfg.host_pool_gib)?;
         let power = PowerTracker::new(mode, &fleet);
         Ok(Shard {
@@ -268,6 +283,7 @@ impl Shard {
             last_t: 0.0,
             handoffs_in: 0,
             handoffs_out: 0,
+            sink,
         })
     }
 
@@ -310,9 +326,18 @@ impl Shard {
 
     /// This job is leaving for another shard: cancel its deadline and
     /// resolve it locally as `Forwarded` (the destination owns it now).
-    fn remove_for_handoff(&mut self, qid: u32) {
+    /// `t_ns` is the barrier instant the dispatcher decided at — the
+    /// `Handoff` event's timestamp.
+    fn remove_for_handoff(&mut self, t_ns: u64, qid: u32, dest: u32, reason: HandoffReason) {
         if let Some(tok) = self.deadline_tokens[qid as usize].take() {
             self.engine.cancel(tok);
+        }
+        if S::ENABLED {
+            let lid = self.qid_to_lid[qid as usize];
+            let gid = self.metas[lid as usize].global_id;
+            let app = self.queue.jobs[qid as usize].job.app;
+            self.sink
+                .emit(t_ns, Some(gid), EventKind::Handoff { app, dest, reason });
         }
         self.queue.mark_forwarded(qid);
         self.handoffs_out += 1;
@@ -339,6 +364,9 @@ impl Shard {
     }
 
     fn step(&mut self, time_ns: u64, ev: Ev) {
+        if S::ENABLED {
+            self.flush_samples(time_ns);
+        }
         let now = ns_to_sec(time_ns);
         let dt = now - self.last_t;
         // Integrate only while serving work remains (arrivals still to
@@ -384,9 +412,22 @@ impl Shard {
                 job.id = qid;
                 self.qid_to_lid.push(lid);
                 self.deadline_tokens.push(None);
-                match self.metas[lid as usize].handoff_deadline_s {
+                let meta = self.metas[lid as usize];
+                match meta.handoff_deadline_s {
                     None => self.queue.admit(job, self.params.deadline_s),
                     Some(abs) => self.queue.admit_handoff(job, abs),
+                }
+                if S::ENABLED {
+                    let deadline_ns = sec_to_ns(self.queue.jobs[qid as usize].deadline_s);
+                    self.sink.emit(
+                        time_ns,
+                        Some(meta.global_id),
+                        EventKind::Admit {
+                            app,
+                            deadline_ns,
+                            handoff: meta.handoff_deadline_s.is_some(),
+                        },
+                    );
                 }
                 if self.planner.servable(app, self.params.policy.allows_offload()) {
                     // The queue's deadline_s is the single source of truth
@@ -400,6 +441,7 @@ impl Shard {
                         &self.params,
                         self.mode,
                         now,
+                        time_ns,
                         &mut self.fleet,
                         &mut self.queue,
                         &mut self.planner,
@@ -407,23 +449,64 @@ impl Shard {
                         &mut self.power,
                         &mut self.deadline_tokens,
                         &mut self.scratch,
+                        &mut self.sink,
+                        &self.metas,
+                        &self.qid_to_lid,
                     );
                 } else {
                     self.queue.reject(qid, now);
+                    if S::ENABLED {
+                        self.sink
+                            .emit(time_ns, Some(meta.global_id), EventKind::Reject { app });
+                    }
                 }
             }
             Ev::Deadline(qid) => {
                 self.deadline_tokens[qid as usize] = None;
-                self.queue.expire_if_pending(qid, now);
+                let expired = self.queue.expire_if_pending(qid, now);
+                if S::ENABLED && expired {
+                    let gid = self.metas[self.qid_to_lid[qid as usize] as usize].global_id;
+                    let app = self.queue.jobs[qid as usize].job.app;
+                    self.sink.emit(time_ns, Some(gid), EventKind::Expire { app });
+                }
             }
             Ev::JobDone { gpu, slot, job } => {
                 if self.fleet.finish_job(gpu, slot, job, now) {
                     self.queue.mark_completed(job, now);
                     self.power.on_finish(gpu, slot, job);
+                    if S::ENABLED {
+                        let qj = &self.queue.jobs[job as usize];
+                        let (app, arrival_s, placed_s, deadline_s, offloaded) = (
+                            qj.job.app,
+                            qj.job.arrival_s,
+                            qj.placed_s,
+                            qj.deadline_s,
+                            qj.offloaded,
+                        );
+                        let gid =
+                            self.metas[self.qid_to_lid[job as usize] as usize].global_id;
+                        let placed_ns = sec_to_ns(placed_s.unwrap_or(arrival_s));
+                        let wait_ns = placed_ns.saturating_sub(sec_to_ns(arrival_s));
+                        let service_ns = time_ns.saturating_sub(placed_ns);
+                        let slack_ns = sec_to_ns(deadline_s).saturating_sub(time_ns);
+                        self.sink.emit(
+                            time_ns,
+                            Some(gid),
+                            EventKind::Complete {
+                                app,
+                                wait_ns,
+                                service_ns,
+                                slack_ns,
+                                offloaded,
+                            },
+                        );
+                        self.sink.observe_latency(wait_ns, service_ns, slack_ns);
+                    }
                     dispatch(
                         &self.params,
                         self.mode,
                         now,
+                        time_ns,
                         &mut self.fleet,
                         &mut self.queue,
                         &mut self.planner,
@@ -431,6 +514,9 @@ impl Shard {
                         &mut self.power,
                         &mut self.deadline_tokens,
                         &mut self.scratch,
+                        &mut self.sink,
+                        &self.metas,
+                        &self.qid_to_lid,
                     );
                 }
             }
@@ -441,6 +527,7 @@ impl Shard {
                     &self.params,
                     self.mode,
                     now,
+                    time_ns,
                     &mut self.fleet,
                     &mut self.queue,
                     &mut self.planner,
@@ -448,15 +535,41 @@ impl Shard {
                     &mut self.power,
                     &mut self.deadline_tokens,
                     &mut self.scratch,
+                    &mut self.sink,
+                    &self.metas,
+                    &self.qid_to_lid,
                 );
             }
         }
     }
 
+    /// Emit every pending sample boundary strictly before the event now
+    /// being processed. A boundary at exactly the event instant waits
+    /// for the next event, so a sample at `t` reflects every event at or
+    /// before `t`. State is constant between events, so the cached fleet
+    /// power is read once per flush and serves every boundary the
+    /// current gap crosses.
+    fn flush_samples(&mut self, now_ns: u64) {
+        if !self.sink.sample_due(now_ns) {
+            return;
+        }
+        let power_w = self.power.power_w(&self.fleet, &self.power_model);
+        while self.sink.sample_due(now_ns) {
+            let t_ns = self.sink.next_sample_ns();
+            self.sink.push_sample(FleetSample::capture(
+                t_ns,
+                self.id as u32,
+                &self.fleet,
+                &self.queue,
+                power_w,
+            ));
+        }
+    }
+
     /// Apply one epoch's inputs, run it, and report the barrier state.
     fn run_epoch(&mut self, input: EpochInput) -> BarrierInfo {
-        for qid in &input.removals {
-            self.remove_for_handoff(*qid);
+        for &(qid, dest, reason) in &input.removals {
+            self.remove_for_handoff(input.start_ns, qid, dest, reason);
         }
         let start_s = ns_to_sec(input.start_ns);
         for h in input.handoffs {
@@ -548,6 +661,7 @@ impl Shard {
             max_open_headroom_gib: self.fleet.max_open_headroom_gib(),
             host_headroom_bytes: self.fleet.host_headroom_bytes(),
             candidates,
+            telemetry: self.sink.take_chunk().map(Box::new),
         }
     }
 
@@ -573,19 +687,53 @@ pub(crate) fn run_single(
     mode: ServeMode,
     jobs: &[Job],
 ) -> crate::Result<ServeReport> {
-    let mut shard = Shard::new(0, cfg.gpus, cfg, mode, 0.0, false)?;
+    Ok(run_single_impl(cfg, mode, jobs, NullSink)?.0)
+}
+
+/// `run_single` with the telemetry plane on: the same simulation (the
+/// `ServeReport` is byte-identical to the untraced run) plus the merged
+/// trace/samples/histograms.
+pub(crate) fn run_single_traced(
+    cfg: &ServeConfig,
+    mode: ServeMode,
+    jobs: &[Job],
+    tcfg: &TelemetryConfig,
+) -> crate::Result<(ServeReport, TelemetryReport)> {
+    tcfg.validate()?;
+    let (report, tel) = run_single_impl(cfg, mode, jobs, Recorder::new(0, tcfg))?;
+    Ok((report, tel.expect("recorder sink always yields telemetry")))
+}
+
+fn run_single_impl<S: Sink>(
+    cfg: &ServeConfig,
+    mode: ServeMode,
+    jobs: &[Job],
+    sink: S,
+) -> crate::Result<(ServeReport, Option<TelemetryReport>)> {
+    let mut shard = Shard::new(0, cfg.gpus, cfg, mode, 0.0, false, sink)?;
     for job in jobs {
         shard.push_arrival(job.clone());
     }
     shard.run_until(None);
-    Ok(merge_report(cfg, std::slice::from_ref(&shard)))
+    let report = merge_report(cfg, std::slice::from_ref(&shard));
+    let tel = if S::ENABLED {
+        let mut t = TelemetryReport::new();
+        if let Some(chunk) = shard.sink.take_chunk() {
+            t.absorb(chunk);
+        }
+        t.finalize();
+        Some(t)
+    } else {
+        None
+    };
+    Ok((report, tel))
 }
 
 /// Merge per-shard outcomes into one fleet-level `ServeReport`. Shards are
 /// visited in id order, so the result is independent of the thread count;
 /// for a single shard every expression reduces to the single-loop form
 /// bit-for-bit.
-fn merge_report(cfg: &ServeConfig, shards: &[Shard]) -> ServeReport {
+fn merge_report<S: Sink>(cfg: &ServeConfig, shards: &[Shard<S>]) -> ServeReport {
     for s in shards {
         debug_assert!(s.queue.all_resolved(), "events drained with unresolved jobs");
         debug_assert!(s.queue.all_resolved_scan(), "resolution counter diverged");
@@ -667,10 +815,11 @@ fn merge_report(cfg: &ServeConfig, shards: &[Shard]) -> ServeReport {
 /// reconfiguration is enabled, repartition one drained GPU toward the
 /// job's profile class.
 #[allow(clippy::too_many_arguments)]
-fn dispatch(
+fn dispatch<S: Sink>(
     cfg: &ServeConfig,
     mode: ServeMode,
     now: f64,
+    now_ns: u64,
     fleet: &mut Fleet,
     queue: &mut AdmissionQueue,
     planner: &mut Planner,
@@ -678,6 +827,9 @@ fn dispatch(
     power: &mut PowerTracker,
     deadline_tokens: &mut [Option<EventToken>],
     scratch: &mut DispatchScratch,
+    sink: &mut S,
+    metas: &[JobMeta],
+    qid_to_lid: &[u32],
 ) {
     let DispatchScratch {
         ids,
@@ -692,16 +844,29 @@ fn dispatch(
                 if failed_at_epoch[app.index()] == Some(fleet.epoch()) {
                     // Provably still fails: no capacity came back since
                     // the last failed attempt for this app.
+                    if S::ENABLED {
+                        sink.count(Counter::PlaceDecisions, 1);
+                        sink.count(Counter::MemoHits, 1);
+                    }
                     None
                 } else {
-                    let r = planner.place(fleet, app, cfg.policy);
+                    if S::ENABLED {
+                        sink.count(Counter::PlaceDecisions, 1);
+                        sink.count(Counter::MemoMisses, 1);
+                    }
+                    let r = planner.place_traced(fleet, app, cfg.policy, sink);
                     if r.is_none() {
                         failed_at_epoch[app.index()] = Some(fleet.epoch());
                     }
                     r
                 }
             }
-            ServeMode::NaiveOracle => planner.place_scan(fleet, app, cfg.policy),
+            ServeMode::NaiveOracle => {
+                if S::ENABLED {
+                    sink.count(Counter::PlaceDecisions, 1);
+                }
+                planner.place_scan_traced(fleet, app, cfg.policy, sink)
+            }
         };
         if let Some((g, s, c)) = placed {
             queue.mark_running(id, now, g, c.offloaded);
@@ -726,27 +891,77 @@ fn dispatch(
             );
             power.on_start(g, s, id, c);
             engine.schedule_at(sec_to_ns(until), Ev::JobDone { gpu: g, slot: s, job: id });
-        } else if cfg.reconfig {
-            let fits = match mode {
-                ServeMode::Indexed => {
-                    planner.fits_current_layouts(fleet, app, cfg.policy.allows_offload())
-                }
-                ServeMode::NaiveOracle => {
-                    planner.fits_current_layouts_scan(fleet, app, cfg.policy.allows_offload())
-                }
-            };
-            if !fits {
-                // Memoized footprint: same constant either mode would
-                // compute, without rebuilding the app model per attempt.
-                let need = planner.footprint_gib(app) + planner.ctx_gib();
-                let plan = match mode {
-                    ServeMode::Indexed => reconfig::plan_reconfig(fleet, need),
-                    ServeMode::NaiveOracle => reconfig::plan_reconfig_scan(fleet, need),
+            if S::ENABLED {
+                let gid = metas[qid_to_lid[id as usize] as usize].global_id;
+                let sl = &fleet.gpus[g].slots[s];
+                // Co-offloaders sharing the GPU's one C2C link, this job
+                // included; a direct placement never touches the link.
+                let share = if c.offloaded { fleet.gpus[g].offloaders() } else { 1 };
+                sink.emit(
+                    now_ns,
+                    Some(gid),
+                    EventKind::Place {
+                        app,
+                        gpu: g as u32,
+                        slot: s as u32,
+                        class: sl.profile.name,
+                        occupancy: sl.occupancy() as u32,
+                        offloaded: c.offloaded,
+                        share,
+                        runtime_ns: sec_to_ns(c.runtime_s),
+                    },
+                );
+            }
+        } else {
+            if S::ENABLED
+                && cfg.policy.allows_offload()
+                && planner.offload_pool_starved(fleet, app)
+            {
+                let gid = metas[qid_to_lid[id as usize] as usize].global_id;
+                sink.emit(now_ns, Some(gid), EventKind::OffloadDenied { app });
+            }
+            if cfg.reconfig {
+                let fits = match mode {
+                    ServeMode::Indexed => {
+                        planner.fits_current_layouts(fleet, app, cfg.policy.allows_offload())
+                    }
+                    ServeMode::NaiveOracle => {
+                        planner.fits_current_layouts_scan(fleet, app, cfg.policy.allows_offload())
+                    }
                 };
-                if let Some((g, target)) = plan {
-                    let until = now + reconfig::latency_s(&fleet.gpus[g].layout, &target);
-                    if fleet.begin_reconfig(g, target, until).is_ok() {
-                        engine.schedule_at(sec_to_ns(until), Ev::ReconfigDone(g));
+                if !fits {
+                    // Memoized footprint: same constant either mode would
+                    // compute, without rebuilding the app model per attempt.
+                    let need = planner.footprint_gib(app) + planner.ctx_gib();
+                    let plan = match mode {
+                        ServeMode::Indexed => reconfig::plan_reconfig(fleet, need),
+                        ServeMode::NaiveOracle => reconfig::plan_reconfig_scan(fleet, need),
+                    };
+                    if let Some((g, target)) = plan {
+                        let until = now + reconfig::latency_s(&fleet.gpus[g].layout, &target);
+                        let labels = if S::ENABLED {
+                            Some((
+                                reconfig::layout_label(&fleet.gpus[g].layout),
+                                reconfig::layout_label(&target),
+                            ))
+                        } else {
+                            None
+                        };
+                        if fleet.begin_reconfig(g, target, until).is_ok() {
+                            engine.schedule_at(sec_to_ns(until), Ev::ReconfigDone(g));
+                            if let Some((from, to)) = labels {
+                                sink.emit(
+                                    now_ns,
+                                    None,
+                                    EventKind::Reconfig {
+                                        gpu: g as u32,
+                                        from,
+                                        to,
+                                        trigger: app,
+                                    },
+                                );
+                            }
+                        }
                     }
                 }
             }
@@ -1069,7 +1284,7 @@ fn gpus_for_shard(total: u32, nodes: u32, s: u32) -> u32 {
 
 /// Run a sharded multi-node serve over a synthetic Poisson trace.
 pub fn serve_sharded(cfg: &ShardServeConfig) -> crate::Result<ShardedServeReport> {
-    serve_sharded_impl(cfg, None)
+    Ok(serve_sharded_impl(cfg, None, |_| NullSink)?.0)
 }
 
 /// Run a sharded multi-node serve over a replayed arrival trace.
@@ -1077,13 +1292,30 @@ pub fn serve_sharded_replay(
     cfg: &ShardServeConfig,
     trace: &JobTrace,
 ) -> crate::Result<ShardedServeReport> {
-    serve_sharded_impl(cfg, Some(trace))
+    Ok(serve_sharded_impl(cfg, Some(trace), |_| NullSink)?.0)
 }
 
-fn serve_sharded_impl(
+/// Sharded serve with the telemetry plane on. The `ShardedServeReport`
+/// is byte-identical to the untraced run on the same config; the
+/// telemetry report is bit-identical for every `--threads` value (chunks
+/// are absorbed in shard-id order at every barrier, and all merges are
+/// integer-associative).
+pub fn serve_sharded_traced(
+    cfg: &ShardServeConfig,
+    tcfg: &TelemetryConfig,
+) -> crate::Result<(ShardedServeReport, TelemetryReport)> {
+    tcfg.validate()?;
+    let t = *tcfg;
+    let (report, tel) =
+        serve_sharded_impl(cfg, None, move |shard| Recorder::new(shard as u32, &t))?;
+    Ok((report, tel.expect("recorder sink always yields telemetry")))
+}
+
+fn serve_sharded_impl<S: Sink>(
     scfg: &ShardServeConfig,
     trace: Option<&JobTrace>,
-) -> crate::Result<ShardedServeReport> {
+    mk_sink: impl Fn(usize) -> S,
+) -> crate::Result<(ShardedServeReport, Option<TelemetryReport>)> {
     let base = &scfg.base;
     ensure!(scfg.nodes >= 1, "sharded serve needs at least one node");
     ensure!(scfg.threads >= 1, "sharded serve needs at least one thread");
@@ -1127,8 +1359,14 @@ fn serve_sharded_impl(
             // With one node the coordinator can never use handoff
             // candidates — don't pay the per-barrier collection.
             scfg.forward && scfg.nodes > 1,
+            mk_sink(s),
         )?);
     }
+    let mut tel = if S::ENABLED {
+        Some(TelemetryReport::new())
+    } else {
+        None
+    };
 
     // Static routing is known upfront: pre-schedule every arrival in
     // global-id order, exactly like the single-loop serve does.
@@ -1153,6 +1391,7 @@ fn serve_sharded_impl(
             max_open_headroom_gib: s.fleet.max_open_headroom_gib(),
             host_headroom_bytes: s.fleet.host_headroom_bytes(),
             candidates: Vec::new(),
+            telemetry: None,
         })
         .collect();
 
@@ -1206,6 +1445,9 @@ fn serve_sharded_impl(
                 cands.extend(info.candidates.iter().cloned());
             }
             cands.sort_by_key(|h| h.global_id);
+            if let Some(tr) = tel.as_mut() {
+                tr.counters.add(Counter::HandoffAttempts, cands.len() as u64);
+            }
             let mut idle_left: Vec<i64> =
                 infos.iter().map(|i| i.open_sm_seats as i64).collect();
             let mut host_left: Vec<u64> =
@@ -1233,19 +1475,23 @@ fn serve_sharded_impl(
                     }
                     best
                 };
-                let target = pick(true, &idle_left, &host_left).or_else(|| {
-                    // No shard has a compatible seat right now; only
-                    // forward blind if the destination could repartition.
-                    if cfg.reconfig {
-                        pick(false, &idle_left, &host_left)
-                    } else {
-                        None
-                    }
-                });
-                if let Some(t) = target {
+                let target = pick(true, &idle_left, &host_left)
+                    .map(|t| (t, HandoffReason::OpenSeat))
+                    .or_else(|| {
+                        // No shard has a compatible seat right now; only
+                        // forward blind if the destination could
+                        // repartition.
+                        if cfg.reconfig {
+                            pick(false, &idle_left, &host_left)
+                                .map(|t| (t, HandoffReason::Reconfig))
+                        } else {
+                            None
+                        }
+                    });
+                if let Some((t, reason)) = target {
                     idle_left[t] -= handoff_slice_sms;
                     host_left[t] = host_left[t].saturating_sub(h.host_need_bytes);
-                    inputs[h.origin].removals.push(h.origin_local);
+                    inputs[h.origin].removals.push((h.origin_local, t as u32, reason));
                     inputs[t].handoffs.push(h);
                     handoffs_total += 1;
                 }
@@ -1292,6 +1538,15 @@ fn serve_sharded_impl(
         }
 
         infos = pool.epoch(inputs);
+        // Absorb this epoch's telemetry in shard-id order (infos are
+        // already ordered by shard) — the thread-invariance anchor.
+        if let Some(tr) = tel.as_mut() {
+            for info in infos.iter_mut() {
+                if let Some(chunk) = info.telemetry.take() {
+                    tr.absorb(*chunk);
+                }
+            }
+        }
         epoch += 1;
 
         let remaining: u64 = infos
@@ -1304,19 +1559,32 @@ fn serve_sharded_impl(
     }
     // Trailing reconfig completions (work is done; nothing integrates).
     pool.drain();
-    let shards = pool.finish();
+    let mut shards = pool.finish();
+    // Telemetry recorded after the last barrier (the drain) is still in
+    // the shards' sinks; `finish` hands them back in id order.
+    if let Some(tr) = tel.as_mut() {
+        for s in shards.iter_mut() {
+            if let Some(chunk) = s.sink.take_chunk() {
+                tr.absorb(chunk);
+            }
+        }
+        tr.finalize();
+    }
     let report = merge_report(&cfg, &shards);
-    Ok(ShardedServeReport {
-        report,
-        nodes: scfg.nodes,
-        threads: threads as u32,
-        lookahead_s: scfg.lookahead_s,
-        route: scfg.route,
-        forward: scfg.forward,
-        handoffs: handoffs_total as u32,
-        epochs: epoch,
-        shards: shards.iter().map(|s| s.summary()).collect(),
-    })
+    Ok((
+        ShardedServeReport {
+            report,
+            nodes: scfg.nodes,
+            threads: threads as u32,
+            lookahead_s: scfg.lookahead_s,
+            route: scfg.route,
+            forward: scfg.forward,
+            handoffs: handoffs_total as u32,
+            epochs: epoch,
+            shards: shards.iter().map(|s| s.summary()).collect(),
+        },
+        tel,
+    ))
 }
 
 /// Messages from the coordinator to a worker thread.
@@ -1330,24 +1598,24 @@ enum WorkerMsg {
 /// threads each owning the shards with `id % threads == worker`. Shard
 /// execution is pure w.r.t. anything outside the shard, so the mapping of
 /// shards to workers cannot change any result — only the wall clock.
-enum ShardPool {
-    Inline(Vec<Shard>),
+enum ShardPool<S: Sink> {
+    Inline(Vec<Shard<S>>),
     Threads {
         to_workers: Vec<mpsc::Sender<WorkerMsg>>,
         from_workers: mpsc::Receiver<(usize, Vec<BarrierInfo>)>,
-        handles: Vec<thread::JoinHandle<Vec<Shard>>>,
+        handles: Vec<thread::JoinHandle<Vec<Shard<S>>>>,
         nshards: usize,
     },
 }
 
-impl ShardPool {
-    fn new(shards: Vec<Shard>, threads: usize) -> ShardPool {
+impl<S: Sink> ShardPool<S> {
+    fn new(shards: Vec<Shard<S>>, threads: usize) -> ShardPool<S> {
         if threads <= 1 {
             return ShardPool::Inline(shards);
         }
         let nshards = shards.len();
         let (res_tx, from_workers) = mpsc::channel();
-        let mut owned: Vec<Vec<Shard>> = (0..threads).map(|_| Vec::new()).collect();
+        let mut owned: Vec<Vec<Shard<S>>> = (0..threads).map(|_| Vec::new()).collect();
         for (i, shard) in shards.into_iter().enumerate() {
             owned[i % threads].push(shard);
         }
@@ -1432,7 +1700,7 @@ impl ShardPool {
     }
 
     /// Tear down the pool and hand back every shard in id order.
-    fn finish(self) -> Vec<Shard> {
+    fn finish(self) -> Vec<Shard<S>> {
         match self {
             ShardPool::Inline(shards) => shards,
             ShardPool::Threads {
@@ -1443,7 +1711,7 @@ impl ShardPool {
                 for tx in &to_workers {
                     let _ = tx.send(WorkerMsg::Finish);
                 }
-                let mut shards: Vec<Shard> = Vec::new();
+                let mut shards: Vec<Shard<S>> = Vec::new();
                 for h in handles {
                     shards.extend(h.join().expect("worker thread panicked"));
                 }
@@ -1459,9 +1727,9 @@ impl ShardPool {
 /// but its siblings keep result-sender clones alive while parked on
 /// their own queues, so a plain `recv()` would block forever. The
 /// timeout only paces the liveness probe — it never aborts a slow epoch.
-fn recv_or_die(
+fn recv_or_die<S: Sink>(
     rx: &mpsc::Receiver<(usize, Vec<BarrierInfo>)>,
-    handles: &[thread::JoinHandle<Vec<Shard>>],
+    handles: &[thread::JoinHandle<Vec<Shard<S>>>],
 ) -> (usize, Vec<BarrierInfo>) {
     loop {
         match rx.recv_timeout(Duration::from_millis(200)) {
@@ -1480,12 +1748,12 @@ fn recv_or_die(
     }
 }
 
-fn worker_loop(
-    mut shards: Vec<Shard>,
+fn worker_loop<S: Sink>(
+    mut shards: Vec<Shard<S>>,
     rx: mpsc::Receiver<WorkerMsg>,
     tx: mpsc::Sender<(usize, Vec<BarrierInfo>)>,
     wid: usize,
-) -> Vec<Shard> {
+) -> Vec<Shard<S>> {
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Epoch(inputs) => {
@@ -1681,7 +1949,7 @@ mod tests {
         // admitted in ascending global-id order (the coordinator injects
         // them sorted; engine ties break by insertion order).
         let cfg = base_cfg();
-        let mut shard = Shard::new(0, 2, &cfg, ServeMode::Indexed, 1.0, true).unwrap();
+        let mut shard = Shard::new(0, 2, &cfg, ServeMode::Indexed, 1.0, true, NullSink).unwrap();
         let gids = [9u32, 3, 17, 5, 11];
         let mut sorted = gids.to_vec();
         sorted.sort_unstable();
@@ -1752,7 +2020,7 @@ mod tests {
         // (fire) order, every arrival admits exactly once, and the
         // qid→lid mapping stays a bijection.
         let cfg = base_cfg();
-        let mut shard = Shard::new(0, 2, &cfg, ServeMode::Indexed, 1.0, true).unwrap();
+        let mut shard = Shard::new(0, 2, &cfg, ServeMode::Indexed, 1.0, true, NullSink).unwrap();
         // Pre-scheduled synthetic arrivals at t = 5, 6, 7 (global ids 0..3).
         for (i, t) in [5.0f64, 6.0, 7.0].iter().enumerate() {
             shard.push_arrival(Job {

@@ -1,0 +1,1282 @@
+//! Fleet telemetry plane: structured serve-loop tracing, time-series
+//! sampling, and mergeable latency histograms.
+//!
+//! The paper's whole method is observability — GPM samples at 0.2 s,
+//! NVML polls power at 20 ms, energy comes from integrating the power
+//! trace (§III-A, §V-B) — but the cluster serving stack built on top of
+//! the co-run model was a black box: one terminal `ServeReport` per run,
+//! with no way to see *when* fragmentation spiked, *which* shard
+//! starved, or *why* a reconfiguration fired. This module cures that
+//! with three opt-in planes:
+//!
+//! 1. **Structured event tracing** — every admission, placement,
+//!    rejection, expiry, handoff, reconfiguration, offload denial and
+//!    completion is a typed [`TraceEvent`] with a virtual timestamp and
+//!    shard id, buffered per shard and merged deterministically at
+//!    epoch barriers.
+//! 2. **Periodic fleet sampling** — a GPM-style virtual-time sampler
+//!    ([`FleetSample`]) records SM utilization, per-profile-class
+//!    idle/open-seat counts, fragmentation, queue depth, host-pool
+//!    occupancy, per-GPU C2C co-offloader counts and cached power every
+//!    `sample_dt_s` of virtual time.
+//! 3. **Mergeable latency histograms + hot-path counters** — log-bucketed
+//!    ([`hist`]) queue-wait / service / slack distributions and per-shard
+//!    profiling counters, all integer-valued so shard-wise merges are
+//!    exactly associative and the combined output is bit-identical for
+//!    every `--threads` value.
+//!
+//! The whole plane is **zero-cost when off**: every hook in the serve
+//! hot path is generic over [`Sink`], and the inert [`NullSink`]
+//! (`ENABLED == false`) monomorphizes each `if S::ENABLED { .. }` guard
+//! away. The plane is also **inert when on**: it only ever *reads*
+//! simulator state — it never schedules events, never touches the float
+//! accumulators, and never perturbs a decision — so a traced run's
+//! `ServeReport` is byte-identical to an untraced one.
+
+use crate::cluster::fleet::Fleet;
+use crate::cluster::queue::AdmissionQueue;
+use crate::mig::profile::{ALL_PROFILES, NUM_PROFILES};
+use crate::util::json::Json;
+use crate::util::units::ns_to_sec;
+use crate::workload::{apps, AppId};
+
+// ---------------------------------------------------------------------------
+// Trace events
+// ---------------------------------------------------------------------------
+
+/// Why the cross-node dispatcher picked a handoff destination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandoffReason {
+    /// The destination advertised an open seat (or empty slot) the job's
+    /// class fits without repartitioning.
+    OpenSeat,
+    /// No shard fits the job today; the destination could host it after
+    /// a reconfiguration toward a suitable layout.
+    Reconfig,
+}
+
+impl HandoffReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            HandoffReason::OpenSeat => "open-seat",
+            HandoffReason::Reconfig => "reconfig",
+        }
+    }
+}
+
+/// What happened. Variants carry the decision context that is invisible
+/// in the terminal `ServeReport`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Job entered a shard's admission queue. `handoff` marks a re-arrival
+    /// via cross-node handoff (the deadline is then the original absolute
+    /// one — the clock does not restart on migration).
+    Admit {
+        app: AppId,
+        deadline_ns: u64,
+        handoff: bool,
+    },
+    /// Unservable on this hardware even by offloading: refused outright.
+    Reject { app: AppId },
+    /// Placement decision: the job starts on `(gpu, slot)` in profile
+    /// `class` at seat occupancy `occupancy`, with `share` co-offloaders
+    /// on the GPU's C2C link (1 = private link).
+    Place {
+        app: AppId,
+        gpu: u32,
+        slot: u32,
+        class: &'static str,
+        occupancy: u32,
+        offloaded: bool,
+        share: u32,
+        runtime_ns: u64,
+    },
+    /// Queueing deadline passed while still pending: the client gave up.
+    Expire { app: AppId },
+    /// Job finished. Latencies in virtual ns: `wait` = placed − arrival,
+    /// `service` = finished − placed, `slack` = deadline − finished
+    /// floored at zero (a running job may outlive its queueing deadline).
+    Complete {
+        app: AppId,
+        wait_ns: u64,
+        service_ns: u64,
+        slack_ns: u64,
+        offloaded: bool,
+    },
+    /// A pending job was handed off to node shard `dest` at an epoch
+    /// barrier.
+    Handoff { app: AppId, dest: u32, reason: HandoffReason },
+    /// Dynamic repartition began on `gpu`, triggered by a pending
+    /// `trigger` job no current layout could host.
+    Reconfig {
+        gpu: u32,
+        from: String,
+        to: String,
+        trigger: AppId,
+    },
+    /// A placement walk failed while at least one profile class would
+    /// have admitted the job by offloading — but the host pool could not
+    /// park the spill.
+    OffloadDenied { app: AppId },
+}
+
+impl EventKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EventKind::Admit { .. } => "admit",
+            EventKind::Reject { .. } => "reject",
+            EventKind::Place { .. } => "place",
+            EventKind::Expire { .. } => "expire",
+            EventKind::Complete { .. } => "complete",
+            EventKind::Handoff { .. } => "handoff",
+            EventKind::Reconfig { .. } => "reconfig",
+            EventKind::OffloadDenied { .. } => "offload_denied",
+        }
+    }
+}
+
+/// One structured serve-loop event: virtual timestamp (ns), originating
+/// shard, per-shard sequence number (total order within a shard), the
+/// fleet-global job id where applicable, and the typed payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub t_ns: u64,
+    pub shard: u32,
+    pub seq: u64,
+    pub job: Option<u32>,
+    pub kind: EventKind,
+}
+
+impl TraceEvent {
+    /// Serialize to one JSONL object (`"type":"event"`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "event")
+            .set("t_s", ns_to_sec(self.t_ns))
+            .set("shard", self.shard)
+            .set("seq", self.seq)
+            .set("kind", self.kind.tag());
+        if let Some(id) = self.job {
+            j.set("job", id);
+        }
+        match &self.kind {
+            EventKind::Admit {
+                app,
+                deadline_ns,
+                handoff,
+            } => {
+                j.set("app", app.name())
+                    .set("deadline_s", ns_to_sec(*deadline_ns))
+                    .set("handoff", *handoff);
+            }
+            EventKind::Reject { app } | EventKind::Expire { app } | EventKind::OffloadDenied { app } => {
+                j.set("app", app.name());
+            }
+            EventKind::Place {
+                app,
+                gpu,
+                slot,
+                class,
+                occupancy,
+                offloaded,
+                share,
+                runtime_ns,
+            } => {
+                j.set("app", app.name())
+                    .set("gpu", *gpu)
+                    .set("slot", *slot)
+                    .set("class", *class)
+                    .set("occupancy", *occupancy)
+                    .set("offloaded", *offloaded)
+                    .set("share", *share)
+                    .set("runtime_s", ns_to_sec(*runtime_ns));
+            }
+            EventKind::Complete {
+                app,
+                wait_ns,
+                service_ns,
+                slack_ns,
+                offloaded,
+            } => {
+                j.set("app", app.name())
+                    .set("wait_s", ns_to_sec(*wait_ns))
+                    .set("service_s", ns_to_sec(*service_ns))
+                    .set("slack_s", ns_to_sec(*slack_ns))
+                    .set("offloaded", *offloaded);
+            }
+            EventKind::Handoff { app, dest, reason } => {
+                j.set("app", app.name())
+                    .set("dest", *dest)
+                    .set("reason", reason.label());
+            }
+            EventKind::Reconfig {
+                gpu,
+                from,
+                to,
+                trigger,
+            } => {
+                j.set("gpu", *gpu)
+                    .set("from", from.as_str())
+                    .set("to", to.as_str())
+                    .set("trigger", trigger.name());
+            }
+        }
+        j
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hot-path profiling counters
+// ---------------------------------------------------------------------------
+
+/// Profiling counters for the serve hot path. Mode-dependent by design
+/// (the indexed walk and the naive oracle count different work), so they
+/// live outside the oracle-comparable sections of the report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Placement decisions attempted (one per pending job per dispatch
+    /// round that reached a walk or a memo hit).
+    PlaceDecisions,
+    /// Candidate classes / slots visited by placement walks.
+    WalkSteps,
+    /// Dispatch rounds that skipped a walk because the app already
+    /// failed at this fleet epoch.
+    MemoHits,
+    /// Walks performed because no memo entry applied.
+    MemoMisses,
+    /// Jobs considered for cross-node forwarding at epoch barriers
+    /// (whether or not a destination was found).
+    HandoffAttempts,
+    /// Placement failures where an offload-admissible class was gated
+    /// out by host-pool headroom.
+    OffloadPoolGated,
+}
+
+pub const NUM_COUNTERS: usize = 6;
+
+pub const ALL_COUNTERS: [Counter; NUM_COUNTERS] = [
+    Counter::PlaceDecisions,
+    Counter::WalkSteps,
+    Counter::MemoHits,
+    Counter::MemoMisses,
+    Counter::HandoffAttempts,
+    Counter::OffloadPoolGated,
+];
+
+impl Counter {
+    pub fn index(self) -> usize {
+        match self {
+            Counter::PlaceDecisions => 0,
+            Counter::WalkSteps => 1,
+            Counter::MemoHits => 2,
+            Counter::MemoMisses => 3,
+            Counter::HandoffAttempts => 4,
+            Counter::OffloadPoolGated => 5,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Counter::PlaceDecisions => "place_decisions",
+            Counter::WalkSteps => "walk_steps",
+            Counter::MemoHits => "memo_hits",
+            Counter::MemoMisses => "memo_misses",
+            Counter::HandoffAttempts => "handoff_attempts",
+            Counter::OffloadPoolGated => "offload_pool_gated",
+        }
+    }
+}
+
+/// A dense set of [`Counter`] values. Merging is element-wise `u64`
+/// addition — exactly associative and commutative, so shard-wise merges
+/// are order-insensitive and bit-identical across thread counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CounterSet([u64; NUM_COUNTERS]);
+
+impl CounterSet {
+    pub fn new() -> CounterSet {
+        CounterSet::default()
+    }
+
+    pub fn add(&mut self, c: Counter, n: u64) {
+        self.0[c.index()] += n;
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.0[c.index()]
+    }
+
+    pub fn merge(&mut self, other: &CounterSet) {
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            *a += *b;
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for c in ALL_COUNTERS {
+            j.set(c.label(), self.get(c));
+        }
+        j
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mergeable log-bucketed histograms
+// ---------------------------------------------------------------------------
+
+/// HDR-style log-bucketed histograms over `u64` virtual nanoseconds.
+///
+/// Values 0–7 get unit buckets; larger values keep the top 3 significant
+/// bits (8 sub-buckets per octave), bounding relative quantile error at
+/// 12.5%. Counts are integers, so [`Hist::merge`] — element-wise `u64`
+/// addition — is exactly associative and commutative: any shard/epoch
+/// merge order yields bit-identical output.
+pub mod hist {
+    use crate::util::json::Json;
+    use crate::util::units::{ns_to_sec, sec_to_ns};
+
+    /// 8 linear buckets + 61 octaves × 8 sub-buckets (bit lengths 4–64).
+    pub const NUM_BUCKETS: usize = 8 + 61 * 8;
+
+    /// Bucket index of a value.
+    pub fn bucket_of(v_ns: u64) -> usize {
+        if v_ns < 8 {
+            return v_ns as usize;
+        }
+        let n = 64 - v_ns.leading_zeros() as usize; // bit length, ≥ 4
+        let sub = ((v_ns >> (n - 4)) & 7) as usize;
+        8 + (n - 4) * 8 + sub
+    }
+
+    /// Inclusive lower bound of a bucket (its reported value).
+    pub fn bucket_low_ns(idx: usize) -> u64 {
+        if idx < 8 {
+            return idx as u64;
+        }
+        let o = (idx - 8) / 8;
+        let s = ((idx - 8) % 8) as u64;
+        (1u64 << (o + 3)) + (s << o)
+    }
+
+    /// One mergeable latency histogram.
+    #[derive(Debug, Clone, PartialEq, Eq)]
+    pub struct Hist {
+        counts: Vec<u64>,
+        count: u64,
+        sum_ns: u64,
+    }
+
+    impl Default for Hist {
+        fn default() -> Self {
+            Hist::new()
+        }
+    }
+
+    impl Hist {
+        pub fn new() -> Hist {
+            Hist {
+                counts: vec![0; NUM_BUCKETS],
+                count: 0,
+                sum_ns: 0,
+            }
+        }
+
+        pub fn record_ns(&mut self, v_ns: u64) {
+            self.counts[bucket_of(v_ns)] += 1;
+            self.count += 1;
+            self.sum_ns = self.sum_ns.saturating_add(v_ns);
+        }
+
+        /// Record a duration in seconds; negatives clamp to zero.
+        pub fn record_s(&mut self, v_s: f64) {
+            self.record_ns(sec_to_ns(v_s.max(0.0)));
+        }
+
+        pub fn count(&self) -> u64 {
+            self.count
+        }
+
+        pub fn sum_ns(&self) -> u64 {
+            self.sum_ns
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.count == 0
+        }
+
+        /// Element-wise merge — exactly associative/commutative.
+        pub fn merge(&mut self, other: &Hist) {
+            for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+                *a += *b;
+            }
+            self.count += other.count;
+            self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        }
+
+        /// Quantile estimate (bucket lower bound), `q` in [0, 1].
+        pub fn quantile_ns(&self, q: f64) -> u64 {
+            if self.count == 0 {
+                return 0;
+            }
+            let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+            let mut seen = 0u64;
+            for (i, &c) in self.counts.iter().enumerate() {
+                seen += c;
+                if seen >= rank {
+                    return bucket_low_ns(i);
+                }
+            }
+            bucket_low_ns(NUM_BUCKETS - 1)
+        }
+
+        pub fn mean_s(&self) -> f64 {
+            if self.count == 0 {
+                0.0
+            } else {
+                ns_to_sec(self.sum_ns) / self.count as f64
+            }
+        }
+
+        /// Sparse JSON: summary stats plus `[bucket, count]` pairs for
+        /// non-empty buckets.
+        pub fn to_json(&self) -> Json {
+            let mut j = Json::obj();
+            j.set("count", self.count)
+                .set("mean_s", self.mean_s())
+                .set("p50_s", ns_to_sec(self.quantile_ns(0.50)))
+                .set("p95_s", ns_to_sec(self.quantile_ns(0.95)))
+                .set("p99_s", ns_to_sec(self.quantile_ns(0.99)));
+            let buckets: Vec<Json> = self
+                .counts
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(i, &c)| Json::from(vec![i as u64, c]))
+                .collect();
+            j.set("buckets", buckets);
+            j
+        }
+    }
+}
+
+use hist::Hist;
+
+/// The three serve-latency histograms.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistSet {
+    /// Queue wait: placement − arrival (spans handoffs).
+    pub wait: Hist,
+    /// Service: completion − placement.
+    pub service: Hist,
+    /// Slack at completion: deadline − completion, floored at zero.
+    pub slack: Hist,
+}
+
+impl HistSet {
+    pub fn new() -> HistSet {
+        HistSet::default()
+    }
+
+    pub fn merge(&mut self, other: &HistSet) {
+        self.wait.merge(&other.wait);
+        self.service.merge(&other.service);
+        self.slack.merge(&other.slack);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("wait", self.wait.to_json())
+            .set("service", self.service.to_json())
+            .set("slack", self.slack.to_json());
+        j
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet time-series sampling
+// ---------------------------------------------------------------------------
+
+/// One GPM-style fleet sample at a virtual-time boundary. Captured by
+/// pure reads of shard state, so sampling can never perturb the
+/// simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSample {
+    pub t_ns: u64,
+    pub shard: u32,
+    pub busy_sms: u32,
+    pub total_sms: u32,
+    pub queue_depth: u32,
+    pub pending_by_app: [u32; AppId::COUNT],
+    /// Idle slots per profile class (dense `ProfileId::index`).
+    pub idle_by_class: [u32; NUM_PROFILES],
+    /// Open seats per profile class (slots below the batch ceiling).
+    pub open_seats_by_class: [u32; NUM_PROFILES],
+    pub fragmentation: f64,
+    pub host_used_bytes: u64,
+    pub host_capacity_bytes: Option<u64>,
+    /// Per-GPU C2C co-offloader counts.
+    pub offloaders: Vec<u32>,
+    /// Cached fleet power at the sample instant (W).
+    pub power_w: f64,
+}
+
+impl FleetSample {
+    /// Capture the shard's fleet/queue state at boundary `t_ns`.
+    /// `power_w` is the shard's cached fleet power (state is constant
+    /// between events, so one read serves every boundary the current
+    /// event crosses).
+    pub fn capture(
+        t_ns: u64,
+        shard: u32,
+        fleet: &Fleet,
+        queue: &AdmissionQueue,
+        power_w: f64,
+    ) -> FleetSample {
+        let census = fleet.class_census();
+        FleetSample {
+            t_ns,
+            shard,
+            busy_sms: fleet.busy_sms(),
+            total_sms: fleet.total_sms(),
+            queue_depth: queue.pending_len() as u32,
+            pending_by_app: *queue.pending_by_app(),
+            idle_by_class: census.idle_slots,
+            open_seats_by_class: census.open_seats,
+            fragmentation: fleet.fragmentation(queue.smallest_pending_footprint_gib()),
+            host_used_bytes: fleet.host_used_bytes(),
+            host_capacity_bytes: fleet.host_capacity_bytes(),
+            offloaders: fleet.gpus.iter().map(|g| g.offloaders()).collect(),
+            power_w,
+        }
+    }
+
+    /// Serialize to one JSONL object (`"type":"sample"`). Per-app and
+    /// per-class maps only list non-zero entries.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "sample")
+            .set("t_s", ns_to_sec(self.t_ns))
+            .set("shard", self.shard)
+            .set(
+                "sm_util",
+                if self.total_sms == 0 {
+                    0.0
+                } else {
+                    self.busy_sms as f64 / self.total_sms as f64
+                },
+            )
+            .set("busy_sms", self.busy_sms)
+            .set("queue_depth", self.queue_depth)
+            .set("fragmentation", self.fragmentation)
+            .set("host_used_bytes", self.host_used_bytes)
+            .set("power_w", self.power_w);
+        if let Some(cap) = self.host_capacity_bytes {
+            j.set(
+                "host_frac",
+                if cap == 0 {
+                    0.0
+                } else {
+                    self.host_used_bytes as f64 / cap as f64
+                },
+            );
+        }
+        let mut pending = Json::obj();
+        for app in apps::all() {
+            let n = self.pending_by_app[app.index()];
+            if n > 0 {
+                pending.set(app.name(), n);
+            }
+        }
+        j.set("pending", pending);
+        let mut idle = Json::obj();
+        let mut open = Json::obj();
+        for p in ALL_PROFILES {
+            let name = crate::mig::profile::GiProfile::get(p).name;
+            if self.idle_by_class[p.index()] > 0 {
+                idle.set(name, self.idle_by_class[p.index()]);
+            }
+            if self.open_seats_by_class[p.index()] > 0 {
+                open.set(name, self.open_seats_by_class[p.index()]);
+            }
+        }
+        j.set("idle_slots", idle).set("open_seats", open);
+        j.set(
+            "offloaders",
+            self.offloaders.iter().map(|&n| n as u64).collect::<Vec<u64>>(),
+        );
+        j
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sink: the generic instrumentation hook
+// ---------------------------------------------------------------------------
+
+/// Per-epoch batch of telemetry drained from one shard at a barrier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryChunk {
+    pub shard: u32,
+    pub events: Vec<TraceEvent>,
+    pub samples: Vec<FleetSample>,
+    pub counters: CounterSet,
+    pub hists: HistSet,
+}
+
+impl TelemetryChunk {
+    fn new(shard: u32) -> TelemetryChunk {
+        TelemetryChunk {
+            shard,
+            events: Vec::new(),
+            samples: Vec::new(),
+            counters: CounterSet::new(),
+            hists: HistSet::new(),
+        }
+    }
+}
+
+/// The instrumentation hook the serve hot path is generic over.
+///
+/// Every call site guards with `if S::ENABLED { .. }`; with the inert
+/// [`NullSink`] the guard is a compile-time `false` and the hook —
+/// including construction of its arguments — monomorphizes to nothing.
+pub trait Sink: Send + 'static {
+    const ENABLED: bool;
+
+    /// Record a trace event at virtual time `t_ns`.
+    fn emit(&mut self, t_ns: u64, job: Option<u32>, kind: EventKind);
+    /// Bump a profiling counter.
+    fn count(&mut self, c: Counter, n: u64);
+    /// Record a completed job's latency triple (virtual ns).
+    fn observe_latency(&mut self, wait_ns: u64, service_ns: u64, slack_ns: u64);
+    /// Whether a sample boundary lies strictly before `now_ns`.
+    fn sample_due(&self, now_ns: u64) -> bool;
+    /// The next pending sample boundary (only meaningful when due).
+    fn next_sample_ns(&self) -> u64;
+    /// Store a captured sample and advance to the next boundary.
+    fn push_sample(&mut self, s: FleetSample);
+    /// Drain everything recorded since the last drain (epoch barrier /
+    /// end of run). `None` for inert sinks.
+    fn take_chunk(&mut self) -> Option<TelemetryChunk>;
+}
+
+/// The inert default sink: telemetry off.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl Sink for NullSink {
+    const ENABLED: bool = false;
+
+    #[inline(always)]
+    fn emit(&mut self, _t_ns: u64, _job: Option<u32>, _kind: EventKind) {}
+    #[inline(always)]
+    fn count(&mut self, _c: Counter, _n: u64) {}
+    #[inline(always)]
+    fn observe_latency(&mut self, _wait_ns: u64, _service_ns: u64, _slack_ns: u64) {}
+    #[inline(always)]
+    fn sample_due(&self, _now_ns: u64) -> bool {
+        false
+    }
+    #[inline(always)]
+    fn next_sample_ns(&self) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn push_sample(&mut self, _s: FleetSample) {}
+    #[inline(always)]
+    fn take_chunk(&mut self) -> Option<TelemetryChunk> {
+        None
+    }
+}
+
+/// Telemetry plane configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryConfig {
+    /// Virtual-time sampling period (seconds). The paper's GPM cadence
+    /// (0.2 s, §III-A) is the default.
+    pub sample_dt_s: f64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { sample_dt_s: 0.2 }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.sample_dt_s > 0.0 && self.sample_dt_s.is_finite(),
+            "--sample-dt must be a positive number of seconds"
+        );
+        Ok(())
+    }
+}
+
+/// The live sink: buffers one shard's telemetry between barriers.
+#[derive(Debug)]
+pub struct Recorder {
+    shard: u32,
+    seq: u64,
+    sample_dt_ns: u64,
+    next_sample_ns: u64,
+    chunk: TelemetryChunk,
+}
+
+impl Recorder {
+    pub fn new(shard: u32, cfg: &TelemetryConfig) -> Recorder {
+        Recorder {
+            shard,
+            seq: 0,
+            sample_dt_ns: crate::util::units::sec_to_ns(cfg.sample_dt_s).max(1),
+            next_sample_ns: 0,
+            chunk: TelemetryChunk::new(shard),
+        }
+    }
+}
+
+impl Sink for Recorder {
+    const ENABLED: bool = true;
+
+    fn emit(&mut self, t_ns: u64, job: Option<u32>, kind: EventKind) {
+        self.chunk.events.push(TraceEvent {
+            t_ns,
+            shard: self.shard,
+            seq: self.seq,
+            job,
+            kind,
+        });
+        self.seq += 1;
+    }
+
+    fn count(&mut self, c: Counter, n: u64) {
+        self.chunk.counters.add(c, n);
+    }
+
+    fn observe_latency(&mut self, wait_ns: u64, service_ns: u64, slack_ns: u64) {
+        self.chunk.hists.wait.record_ns(wait_ns);
+        self.chunk.hists.service.record_ns(service_ns);
+        self.chunk.hists.slack.record_ns(slack_ns);
+    }
+
+    fn sample_due(&self, now_ns: u64) -> bool {
+        self.next_sample_ns < now_ns
+    }
+
+    fn next_sample_ns(&self) -> u64 {
+        self.next_sample_ns
+    }
+
+    fn push_sample(&mut self, s: FleetSample) {
+        debug_assert_eq!(s.t_ns, self.next_sample_ns);
+        self.chunk.samples.push(s);
+        self.next_sample_ns += self.sample_dt_ns;
+    }
+
+    fn take_chunk(&mut self) -> Option<TelemetryChunk> {
+        Some(std::mem::replace(
+            &mut self.chunk,
+            TelemetryChunk::new(self.shard),
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Merged report
+// ---------------------------------------------------------------------------
+
+/// The merged telemetry of a whole run. Chunks are absorbed in shard-id
+/// order at every epoch barrier; since per-shard streams are
+/// deterministic and all merges are integer-associative, the finalized
+/// report is bit-identical for every `--threads` value.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryReport {
+    pub events: Vec<TraceEvent>,
+    pub samples: Vec<FleetSample>,
+    pub counters: CounterSet,
+    pub hists: HistSet,
+}
+
+impl TelemetryReport {
+    pub fn new() -> TelemetryReport {
+        TelemetryReport::default()
+    }
+
+    /// Merge one shard-epoch chunk (associative: any barrier/shard order
+    /// that is consistent per shard yields the same finalized report).
+    pub fn absorb(&mut self, chunk: TelemetryChunk) {
+        self.events.extend(chunk.events);
+        self.samples.extend(chunk.samples);
+        self.counters.merge(&chunk.counters);
+        self.hists.merge(&chunk.hists);
+    }
+
+    /// Impose the canonical global order: `(t_ns, shard, seq)` for
+    /// events, `(t_ns, shard)` for samples.
+    pub fn finalize(&mut self) {
+        self.events
+            .sort_by_key(|e| (e.t_ns, e.shard, e.seq));
+        self.samples.sort_by_key(|s| (s.t_ns, s.shard));
+    }
+
+    /// Full canonical JSON document (tests compare this byte-for-byte).
+    pub fn to_json(&self) -> Json {
+        let mut j = self.oracle_view();
+        j.set("profile", self.counters.to_json());
+        j
+    }
+
+    /// The mode-invariant sections: everything except the profiling
+    /// counters (which legitimately differ between the indexed walk and
+    /// the `NaiveOracle` scan). Byte-identical across serve modes.
+    pub fn oracle_view(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", "migsim.telemetry.v1")
+            .set("hist", self.hists.to_json())
+            .set(
+                "events",
+                self.events.iter().map(|e| e.to_json()).collect::<Vec<Json>>(),
+            )
+            .set(
+                "samples",
+                self.samples.iter().map(|s| s.to_json()).collect::<Vec<Json>>(),
+            );
+        j
+    }
+
+    /// JSONL rendering: one compact object per event and sample, then a
+    /// histogram line and a profile line. `jq 'select(.type=="event")'`
+    /// etc. slice it.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&e.to_json().compact());
+            out.push('\n');
+        }
+        for s in &self.samples {
+            out.push_str(&s.to_json().compact());
+            out.push('\n');
+        }
+        let mut h = Json::obj();
+        h.set("type", "hist").set("hist", self.hists.to_json());
+        out.push_str(&h.compact());
+        out.push('\n');
+        let mut p = Json::obj();
+        p.set("type", "profile")
+            .set("profile", self.counters.to_json());
+        out.push_str(&p.compact());
+        out.push('\n');
+        out
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "telemetry: {} events, {} samples, {} completions (wait p95 {:.3}s)",
+            self.events.len(),
+            self.samples.len(),
+            self.hists.wait.count(),
+            ns_to_sec(self.hists.wait.quantile_ns(0.95)),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace-conservation audit
+// ---------------------------------------------------------------------------
+
+/// Conservation checks over a merged event trace: every admitted job
+/// terminates exactly once, placed jobs complete, and forwarded jobs
+/// re-arrive exactly once.
+pub mod audit {
+    use super::{EventKind, TraceEvent};
+    use crate::util::json::Json;
+    use anyhow::{bail, ensure, Context};
+    use std::collections::BTreeMap;
+
+    /// The reduced per-job view the audit runs over.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum AuditKind {
+        Admit { handoff: bool },
+        Place,
+        Complete,
+        Expire,
+        Reject,
+        Handoff,
+    }
+
+    /// Totals of a passing audit.
+    #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+    pub struct AuditReport {
+        pub jobs: u64,
+        pub completed: u64,
+        pub expired: u64,
+        pub rejected: u64,
+        pub handoffs: u64,
+    }
+
+    impl AuditReport {
+        pub fn summary(&self) -> String {
+            format!(
+                "audit ok: {} jobs conserved ({} completed, {} expired, {} rejected, {} handoffs)",
+                self.jobs, self.completed, self.expired, self.rejected, self.handoffs
+            )
+        }
+    }
+
+    #[derive(Debug, Clone, Copy, Default)]
+    struct JobLedger {
+        admits: u64,
+        readmits: u64,
+        places: u64,
+        completes: u64,
+        expires: u64,
+        rejects: u64,
+        handoffs: u64,
+    }
+
+    fn check(jobs: BTreeMap<u32, JobLedger>) -> crate::Result<AuditReport> {
+        let mut r = AuditReport::default();
+        for (id, l) in &jobs {
+            ensure!(
+                l.admits == 1,
+                "job {id}: admitted {} times (exactly one primary admission required)",
+                l.admits
+            );
+            ensure!(
+                l.handoffs <= 1,
+                "job {id}: forwarded {} times (one-hop invariant)",
+                l.handoffs
+            );
+            ensure!(
+                l.readmits == l.handoffs,
+                "job {id}: {} handoffs but {} re-arrivals (forwarded jobs must re-arrive exactly once)",
+                l.handoffs,
+                l.readmits
+            );
+            let terminals = l.completes + l.expires + l.rejects;
+            ensure!(
+                terminals == 1,
+                "job {id}: {terminals} terminal events (exactly one of complete/expire/reject required)"
+            );
+            ensure!(
+                l.places == l.completes,
+                "job {id}: {} placements vs {} completions (every placed job completes exactly once)",
+                l.places,
+                l.completes
+            );
+            r.jobs += 1;
+            r.completed += l.completes;
+            r.expired += l.expires;
+            r.rejected += l.rejects;
+            r.handoffs += l.handoffs;
+        }
+        Ok(r)
+    }
+
+    fn ledger_add(jobs: &mut BTreeMap<u32, JobLedger>, id: u32, kind: AuditKind) {
+        let l = jobs.entry(id).or_default();
+        match kind {
+            AuditKind::Admit { handoff: false } => l.admits += 1,
+            AuditKind::Admit { handoff: true } => l.readmits += 1,
+            AuditKind::Place => l.places += 1,
+            AuditKind::Complete => l.completes += 1,
+            AuditKind::Expire => l.expires += 1,
+            AuditKind::Reject => l.rejects += 1,
+            AuditKind::Handoff => l.handoffs += 1,
+        }
+    }
+
+    /// Audit an in-memory event trace.
+    pub fn audit(events: &[TraceEvent]) -> crate::Result<AuditReport> {
+        let mut jobs: BTreeMap<u32, JobLedger> = BTreeMap::new();
+        for e in events {
+            let kind = match &e.kind {
+                EventKind::Admit { handoff, .. } => AuditKind::Admit { handoff: *handoff },
+                EventKind::Place { .. } => AuditKind::Place,
+                EventKind::Complete { .. } => AuditKind::Complete,
+                EventKind::Expire { .. } => AuditKind::Expire,
+                EventKind::Reject { .. } => AuditKind::Reject,
+                EventKind::Handoff { .. } => AuditKind::Handoff,
+                EventKind::Reconfig { .. } | EventKind::OffloadDenied { .. } => continue,
+            };
+            let id = match e.job {
+                Some(id) => id,
+                None => bail!("trace event '{}' carries no job id", e.kind.tag()),
+            };
+            ledger_add(&mut jobs, id, kind);
+        }
+        check(jobs)
+    }
+
+    /// Audit a JSONL trace file's text (`migsim audit-trace`). Lines
+    /// whose `type` is not `event`, and event kinds without lifecycle
+    /// meaning, are skipped.
+    pub fn audit_jsonl(text: &str) -> crate::Result<AuditReport> {
+        let mut jobs: BTreeMap<u32, JobLedger> = BTreeMap::new();
+        let mut saw_event = false;
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let doc = Json::parse(line)
+                .map_err(anyhow::Error::from)
+                .with_context(|| format!("line {}: invalid JSON", lineno + 1))?;
+            if doc.get("type").and_then(|t| t.as_str()) != Some("event") {
+                continue;
+            }
+            let kind_tag = doc
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .with_context(|| format!("line {}: event without kind", lineno + 1))?;
+            let kind = match kind_tag {
+                "admit" => AuditKind::Admit {
+                    handoff: doc.get("handoff").and_then(|h| h.as_bool()).unwrap_or(false),
+                },
+                "place" => AuditKind::Place,
+                "complete" => AuditKind::Complete,
+                "expire" => AuditKind::Expire,
+                "reject" => AuditKind::Reject,
+                "handoff" => AuditKind::Handoff,
+                _ => continue,
+            };
+            let id = doc
+                .get("job")
+                .and_then(|j| j.as_u64())
+                .with_context(|| format!("line {}: '{kind_tag}' event without job id", lineno + 1))?;
+            saw_event = true;
+            ledger_add(&mut jobs, id as u32, kind);
+        }
+        ensure!(saw_event, "no lifecycle events found in trace");
+        check(jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::hist::{bucket_low_ns, bucket_of, Hist, NUM_BUCKETS};
+    use super::*;
+
+    #[test]
+    fn hist_buckets_are_monotone_and_contain_their_values() {
+        let mut prev = 0usize;
+        for v in [0u64, 1, 7, 8, 9, 100, 1023, 1024, 1_000_000, u64::MAX] {
+            let b = bucket_of(v);
+            assert!(b < NUM_BUCKETS, "bucket {b} out of range for {v}");
+            assert!(bucket_low_ns(b) <= v, "lower bound above value for {v}");
+            if b + 1 < NUM_BUCKETS {
+                assert!(bucket_low_ns(b + 1) > v, "value {v} beyond bucket end");
+            }
+            assert!(b >= prev, "buckets must be monotone in value");
+            prev = b;
+        }
+        // Every bucket's lower bound maps back to that bucket.
+        for i in 0..NUM_BUCKETS {
+            assert_eq!(bucket_of(bucket_low_ns(i)), i, "bucket {i} roundtrip");
+        }
+    }
+
+    #[test]
+    fn hist_relative_error_is_bounded() {
+        for v in [10u64, 999, 12_345, 7_777_777, 1 << 40] {
+            let low = bucket_low_ns(bucket_of(v));
+            assert!((v - low) as f64 / v as f64 <= 0.125, "err > 12.5% for {v}");
+        }
+    }
+
+    #[test]
+    fn hist_merge_matches_sequential_and_is_associative() {
+        let vals: Vec<u64> = (0..500u64).map(|i| i.wrapping_mul(2654435761) >> 16).collect();
+        let mut whole = Hist::new();
+        vals.iter().for_each(|&v| whole.record_ns(v));
+        let (mut a, mut b, mut c) = (Hist::new(), Hist::new(), Hist::new());
+        vals[..100].iter().for_each(|&v| a.record_ns(v));
+        vals[100..300].iter().for_each(|&v| b.record_ns(v));
+        vals[300..].iter().for_each(|&v| c.record_ns(v));
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut right = b.clone();
+        right.merge(&c);
+        let mut right2 = a.clone();
+        right2.merge(&right);
+        assert_eq!(left, right2);
+        assert_eq!(left, whole);
+        assert_eq!(left.to_json().pretty(), whole.to_json().pretty());
+    }
+
+    #[test]
+    fn quantiles_bracket_the_distribution() {
+        let mut h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record_ns(v * 1000);
+        }
+        let p50 = h.quantile_ns(0.50);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= 500_000 && p50 >= 400_000, "p50 {p50}");
+        assert!(p99 <= 990_000 && p99 >= 850_000, "p99 {p99}");
+        assert!(h.quantile_ns(0.0) >= 875, "min within bucket error of 1000");
+        assert_eq!(Hist::new().quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn counter_set_merges_elementwise() {
+        let mut a = CounterSet::new();
+        a.add(Counter::PlaceDecisions, 3);
+        a.add(Counter::WalkSteps, 10);
+        let mut b = CounterSet::new();
+        b.add(Counter::WalkSteps, 5);
+        b.add(Counter::MemoHits, 2);
+        a.merge(&b);
+        assert_eq!(a.get(Counter::PlaceDecisions), 3);
+        assert_eq!(a.get(Counter::WalkSteps), 15);
+        assert_eq!(a.get(Counter::MemoHits), 2);
+        assert_eq!(a.get(Counter::HandoffAttempts), 0);
+    }
+
+    fn ev(t_ns: u64, seq: u64, job: u32, kind: EventKind) -> TraceEvent {
+        TraceEvent {
+            t_ns,
+            shard: 0,
+            seq,
+            job: Some(job),
+            kind,
+        }
+    }
+
+    fn admit(t: u64, seq: u64, job: u32, handoff: bool) -> TraceEvent {
+        ev(
+            t,
+            seq,
+            job,
+            EventKind::Admit {
+                app: AppId::Faiss,
+                deadline_ns: t + 1000,
+                handoff,
+            },
+        )
+    }
+
+    #[test]
+    fn audit_accepts_a_conserved_trace() {
+        let place = EventKind::Place {
+            app: AppId::Faiss,
+            gpu: 0,
+            slot: 0,
+            class: "1g.12gb",
+            occupancy: 1,
+            offloaded: false,
+            share: 1,
+            runtime_ns: 500,
+        };
+        let complete = EventKind::Complete {
+            app: AppId::Faiss,
+            wait_ns: 10,
+            service_ns: 500,
+            slack_ns: 490,
+            offloaded: false,
+        };
+        let events = vec![
+            admit(0, 0, 0, false),
+            ev(5, 1, 0, place),
+            admit(1, 2, 1, false),
+            ev(
+                2,
+                3,
+                1,
+                EventKind::Handoff {
+                    app: AppId::Faiss,
+                    dest: 1,
+                    reason: HandoffReason::OpenSeat,
+                },
+            ),
+            admit(3, 4, 1, true),
+            ev(505, 5, 0, complete),
+            ev(900, 6, 1, EventKind::Expire { app: AppId::Faiss }),
+        ];
+        let r = audit::audit(&events).unwrap();
+        assert_eq!(r.jobs, 2);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.expired, 1);
+        assert_eq!(r.handoffs, 1);
+    }
+
+    #[test]
+    fn audit_rejects_lost_and_duplicated_jobs() {
+        // Admitted but never terminated.
+        let events = vec![admit(0, 0, 0, false)];
+        assert!(audit::audit(&events).is_err(), "lost job must fail");
+        // Terminated twice.
+        let events = vec![
+            admit(0, 0, 0, false),
+            ev(1, 1, 0, EventKind::Expire { app: AppId::Faiss }),
+            ev(2, 2, 0, EventKind::Expire { app: AppId::Faiss }),
+        ];
+        assert!(audit::audit(&events).is_err(), "double expiry must fail");
+        // Forwarded but never re-admitted.
+        let events = vec![
+            admit(0, 0, 0, false),
+            ev(
+                1,
+                1,
+                0,
+                EventKind::Handoff {
+                    app: AppId::Faiss,
+                    dest: 1,
+                    reason: HandoffReason::Reconfig,
+                },
+            ),
+            ev(2, 2, 0, EventKind::Expire { app: AppId::Faiss }),
+        ];
+        assert!(audit::audit(&events).is_err(), "vanished handoff must fail");
+    }
+
+    #[test]
+    fn audit_jsonl_roundtrips_through_the_report() {
+        let mut report = TelemetryReport::new();
+        let mut chunk = TelemetryChunk::new(0);
+        chunk.events.push(admit(0, 0, 0, false));
+        chunk.events.push(ev(
+            7,
+            1,
+            0,
+            EventKind::Reject { app: AppId::Faiss },
+        ));
+        report.absorb(chunk);
+        report.finalize();
+        let text = report.to_jsonl();
+        let r = audit::audit_jsonl(&text).unwrap();
+        assert_eq!(r.jobs, 1);
+        assert_eq!(r.rejected, 1);
+        // And the audit agrees with the in-memory path.
+        assert_eq!(r, audit::audit(&report.events).unwrap());
+    }
+
+    #[test]
+    fn report_merge_is_shard_order_deterministic() {
+        let mk = |shard: u32, t: u64| {
+            let mut c = TelemetryChunk::new(shard);
+            c.events.push(TraceEvent {
+                t_ns: t,
+                shard,
+                seq: 0,
+                job: Some(shard),
+                kind: EventKind::Expire { app: AppId::Faiss },
+            });
+            c.counters.add(Counter::PlaceDecisions, 1);
+            c.hists.wait.record_ns(t);
+            c
+        };
+        let mut a = TelemetryReport::new();
+        a.absorb(mk(0, 50));
+        a.absorb(mk(1, 10));
+        a.finalize();
+        let mut b = TelemetryReport::new();
+        b.absorb(mk(1, 10));
+        b.absorb(mk(0, 50));
+        b.finalize();
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+        assert_eq!(a.events[0].shard, 1, "finalize orders by (t, shard, seq)");
+    }
+}

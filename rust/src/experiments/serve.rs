@@ -11,7 +11,8 @@
 
 use super::ExperimentOutput;
 use crate::cluster::{
-    serve, serve_sharded, LayoutPreset, PolicyKind, ServeConfig, ServeReport, ShardServeConfig,
+    serve, serve_sharded, serve_sharded_traced, telemetry, LayoutPreset, PolicyKind, ServeConfig,
+    ServeReport, ShardServeConfig, TelemetryConfig,
 };
 use crate::config::SimConfig;
 use crate::util::json::Json;
@@ -313,6 +314,31 @@ fn shard_grid(
                 .set("speedup_vs_1thread", speedup);
             rows.push(o);
         }
+        // Telemetry gate: a traced run of the same cell (at the widest
+        // thread count) must reproduce the untraced canonical report
+        // bit-for-bit — the plane is inert — and its merged event stream
+        // must conserve every job in the arrival stream (one primary
+        // admission, one terminal event, handoffs re-arriving exactly
+        // once).
+        let th = threads
+            .iter()
+            .copied()
+            .filter(|&th| th <= nodes)
+            .max()
+            .unwrap_or(1);
+        let scfg = ShardServeConfig::new(base.clone(), nodes, th);
+        let (tr, tel) = serve_sharded_traced(&scfg, &TelemetryConfig::default())?;
+        ensure!(
+            canonical.as_deref() == Some(tr.report.to_json().pretty().as_str()),
+            "telemetry-enabled serve diverged from the untraced report \
+             ({gpus} GPUs, {th} threads)"
+        );
+        let audit = telemetry::audit::audit(&tel.events)?;
+        ensure!(
+            audit.jobs == jobs as u64,
+            "telemetry audit conserved {} jobs, arrival stream had {jobs}",
+            audit.jobs
+        );
     }
     let mut json = Json::obj();
     json.set("grid", Json::Arr(rows));
@@ -323,6 +349,7 @@ fn shard_grid(
         json,
         notes: vec![
             "each node shard owns a fleet partition, queue, power cache and event engine; shards run on worker threads and exchange arrivals/handoffs only at lookahead-bounded epoch barriers, so the merged report is bit-identical for every thread count".into(),
+            "every cell is re-run with the telemetry plane on: the traced report must match the untraced bits and the merged event stream must pass the trace-conservation audit".into(),
         ],
     })
 }

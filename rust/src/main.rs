@@ -7,6 +7,7 @@
 //!   probe                 SM-count + context-overhead probes
 //!   reward                reward sweep for an app across configurations
 //!   serve                 online cluster serving over a multi-GPU fleet
+//!   audit-trace           conservation checks over a telemetry JSONL trace
 //!   runtime               PJRT artifact smoke check (artifacts/)
 
 use migsim::cli::{render_help, Args, CommandSpec};
@@ -45,7 +46,12 @@ fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "serve",
             summary: "online cluster serving: admission + placement + reconfig",
-            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--trace FILE] [--save-trace FILE] [--json]",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--trace FILE] [--save-trace FILE] [--telemetry FILE] [--sample-dt S] [--json]",
+        },
+        CommandSpec {
+            name: "audit-trace",
+            summary: "conservation checks over a serve telemetry trace (JSONL)",
+            usage: "migsim audit-trace <trace.jsonl>",
         },
         CommandSpec {
             name: "runtime",
@@ -95,6 +101,7 @@ fn dispatch(args: &Args) -> migsim::Result<()> {
         "probe" => cmd_probe(),
         "reward" => cmd_reward(args),
         "serve" => cmd_serve(args),
+        "audit-trace" => cmd_audit_trace(args),
         "runtime" => cmd_runtime(args),
         other => anyhow::bail!("unknown command '{other}'; try --help"),
     }
@@ -262,6 +269,8 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         "no-forward",
         "trace",
         "save-trace",
+        "telemetry",
+        "sample-dt",
     ])
     .map_err(anyhow::Error::msg)?;
     let cfg = sim_config(args)?;
@@ -352,6 +361,32 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         eprintln!("-- wrote {path}");
     }
 
+    // Telemetry plane: `--telemetry FILE` runs the traced serve loop and
+    // writes the merged event/sample/histogram stream as JSONL. The plane
+    // never perturbs the simulation, so the report matches an untraced
+    // run bit-for-bit; replay already has its own persisted log, and the
+    // traced entry points cover the synthetic stream only.
+    let telemetry_path = args.opt("telemetry");
+    if telemetry_path.is_none() {
+        anyhow::ensure!(
+            args.opt("sample-dt").is_none(),
+            "--sample-dt has no effect without --telemetry FILE"
+        );
+    } else {
+        anyhow::ensure!(
+            trace.is_none(),
+            "--telemetry is not supported with --trace replay"
+        );
+    }
+    let tel_cfg = migsim::cluster::TelemetryConfig {
+        sample_dt_s: args
+            .opt_f64(
+                "sample-dt",
+                migsim::cluster::TelemetryConfig::default().sample_dt_s,
+            )
+            .map_err(anyhow::Error::msg)?,
+    };
+
     let nodes = args.opt_u64("nodes", 1).map_err(anyhow::Error::msg)? as u32;
     let threads = args.opt_u64("threads", 1).map_err(anyhow::Error::msg)? as u32;
     if nodes <= 1 {
@@ -380,15 +415,29 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
             anyhow::anyhow!("unknown route '{route_name}' (round-robin|least-loaded)")
         })?;
         scfg.forward = !args.flag("no-forward");
-        let report = match &trace {
-            Some(t) => migsim::cluster::serve_sharded_replay(&scfg, t)?,
-            None => migsim::cluster::serve_sharded(&scfg)?,
+        let report = match (&trace, telemetry_path) {
+            (Some(t), _) => migsim::cluster::serve_sharded_replay(&scfg, t)?,
+            (None, Some(path)) => {
+                let (report, tel) = migsim::cluster::serve_sharded_traced(&scfg, &tel_cfg)?;
+                write_telemetry(path, &tel)?;
+                report
+            }
+            (None, None) => migsim::cluster::serve_sharded(&scfg)?,
         };
         (report.to_json(), report.summary())
     } else {
-        let report = match &trace {
-            Some(t) => migsim::cluster::serve_replay(&serve_cfg, t)?,
-            None => migsim::cluster::serve(&serve_cfg)?,
+        let report = match (&trace, telemetry_path) {
+            (Some(t), _) => migsim::cluster::serve_replay(&serve_cfg, t)?,
+            (None, Some(path)) => {
+                let (report, tel) = migsim::cluster::serve_traced(
+                    &serve_cfg,
+                    migsim::cluster::ServeMode::Indexed,
+                    &tel_cfg,
+                )?;
+                write_telemetry(path, &tel)?;
+                report
+            }
+            (None, None) => migsim::cluster::serve(&serve_cfg)?,
         };
         (report.to_json(), report.summary())
     };
@@ -399,6 +448,27 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
     }
     let path = migsim::coordinator::report::write_results(&cfg.results_dir, "serve-run", &doc)?;
     eprintln!("-- wrote {}", path.display());
+    Ok(())
+}
+
+fn write_telemetry(path: &str, tel: &migsim::cluster::TelemetryReport) -> migsim::Result<()> {
+    std::fs::write(path, tel.to_jsonl())
+        .map_err(|e| anyhow::anyhow!("writing telemetry {path}: {e}"))?;
+    eprintln!("-- {}", tel.summary());
+    eprintln!("-- wrote {path}");
+    Ok(())
+}
+
+fn cmd_audit_trace(args: &Args) -> migsim::Result<()> {
+    args.check_known(&[]).map_err(anyhow::Error::msg)?;
+    let path = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: migsim audit-trace <trace.jsonl>"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
+    let report = migsim::cluster::telemetry::audit::audit_jsonl(&text)?;
+    println!("{}", report.summary());
     Ok(())
 }
 

@@ -66,7 +66,10 @@ impl Collector {
     /// already have passed).
     pub fn push_power(&mut self, s: PowerSample) {
         if let Some((t0, w0)) = self.last_power {
-            if s.t_s < t0 {
+            if s.t_s <= t0 {
+                // Not newer: re-ingesting a duplicate timestamp would add
+                // zero energy but still push into the average/trace,
+                // double-counting the closing sample.
                 return;
             }
             self.energy_j += 0.5 * (w0 + s.power_w) * (s.t_s - t0);
@@ -234,6 +237,36 @@ mod tests {
         }
         // 350 W × 2 s = 700 J.
         assert!((c.energy_j() - 700.0).abs() < 1e-9);
+        assert_eq!(c.throttled_time_s(), 0.0);
+    }
+
+    #[test]
+    fn duplicate_timestamp_samples_are_dropped_entirely() {
+        // The simulator emits a closing sample at the makespan; when the
+        // periodic poller already landed on that exact instant, the
+        // duplicate must not be counted again anywhere — not in the
+        // energy integral, not in the power average, not in the trace.
+        let mut c = Collector::new(true);
+        for t_s in [0.0, 1.0, 1.0] {
+            c.push_power(PowerSample {
+                t_s,
+                power_w: 100.0,
+                clock_mhz: 1980.0,
+                throttled: false,
+            });
+        }
+        assert!((c.energy_j() - 100.0).abs() < 1e-12);
+        assert!((c.avg_power_w() - 100.0).abs() < 1e-12);
+        assert_eq!(c.power.len(), 2, "duplicate sample must not be traced");
+        // Strictly older samples stay dropped too.
+        c.push_power(PowerSample {
+            t_s: 0.5,
+            power_w: 900.0,
+            clock_mhz: 1980.0,
+            throttled: true,
+        });
+        assert_eq!(c.power.len(), 2);
+        assert!((c.energy_j() - 100.0).abs() < 1e-12);
         assert_eq!(c.throttled_time_s(), 0.0);
     }
 

@@ -809,3 +809,187 @@ fn trace_edge_cases_round_trip_through_disk_bit_for_bit() {
     )
     .is_err());
 }
+
+#[test]
+fn telemetry_plane_is_inert_and_the_trace_conserves_jobs() {
+    // The tentpole's acceptance property: turning the telemetry plane on
+    // must not perturb the simulation — the ServeReport comes out
+    // byte-identical to an untraced run, single-loop and sharded alike —
+    // and the trace it emits passes the conservation audit, with the
+    // aggregate event counts agreeing with the report's totals.
+    use migsim::cluster::telemetry::{audit, EventKind};
+    use migsim::cluster::{
+        serve, serve_sharded, serve_sharded_traced, serve_traced, LayoutPreset, PolicyKind,
+        ServeConfig, ServeMode, ShardServeConfig, TelemetryConfig,
+    };
+    let cfg = ServeConfig {
+        gpus: 4,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: 2.0,
+        jobs: 50,
+        deadline_s: 25.0,
+        reconfig: true,
+        seed: 0x7E1,
+        workload_scale: 0.05,
+        batch: 2,
+        host_pool_gib: 16.0,
+        c2c_contention: true,
+        ..ServeConfig::default()
+    };
+    let tcfg = TelemetryConfig::default();
+    let plain = serve(&cfg).unwrap();
+    let (traced, tel) = serve_traced(&cfg, ServeMode::Indexed, &tcfg).unwrap();
+    assert_eq!(
+        plain.to_json().pretty(),
+        traced.to_json().pretty(),
+        "telemetry must be plane-inert: the traced report must match the untraced bits"
+    );
+    // The event stream conserves every job and its totals match the
+    // report's own counters.
+    let a = audit::audit(&tel.events).unwrap();
+    assert_eq!(a.jobs, plain.jobs as u64);
+    assert_eq!(a.completed, plain.completed as u64);
+    assert_eq!(a.expired, plain.expired as u64);
+    assert_eq!(a.rejected, plain.rejected as u64);
+    let offload_places = tel
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Place { offloaded: true, .. }))
+        .count();
+    assert_eq!(offload_places, plain.offloaded as usize);
+    // Latency histograms aggregate exactly the completions.
+    assert_eq!(tel.hists.wait.count(), plain.completed as u64);
+    assert_eq!(tel.hists.service.count(), plain.completed as u64);
+    assert_eq!(tel.hists.slack.count(), plain.completed as u64);
+    // Events and samples come out globally ordered by virtual time.
+    for w in tel.events.windows(2) {
+        assert!(w[0].t_ns <= w[1].t_ns, "events must be time-ordered");
+    }
+    for w in tel.samples.windows(2) {
+        assert!(
+            (w[0].t_ns, w[0].shard) <= (w[1].t_ns, w[1].shard),
+            "samples must be (time, shard)-ordered"
+        );
+    }
+
+    // Sharded: same inertness and conservation, handoffs included.
+    let scfg = ShardServeConfig::new(cfg, 4, 2);
+    let plain_sh = serve_sharded(&scfg).unwrap();
+    let (traced_sh, tel_sh) = serve_sharded_traced(&scfg, &tcfg).unwrap();
+    assert_eq!(
+        plain_sh.to_json().pretty(),
+        traced_sh.to_json().pretty(),
+        "sharded telemetry must be plane-inert too"
+    );
+    let ash = audit::audit(&tel_sh.events).unwrap();
+    assert_eq!(ash.jobs, plain_sh.report.jobs as u64);
+    assert_eq!(ash.handoffs, plain_sh.handoffs as u64);
+}
+
+#[test]
+fn traced_indexed_and_naive_oracle_emit_the_same_stream() {
+    // Mode-invariance: the indexed hot path and the naive full-rescan
+    // oracle must describe the run identically to an observer — same
+    // events, same samples, same histograms. Only the profiling counters
+    // (memo hits, walk steps) may differ, and `oracle_view()` excludes
+    // exactly those.
+    use migsim::cluster::telemetry::Counter;
+    use migsim::cluster::{
+        serve_traced, LayoutPreset, PolicyKind, ServeConfig, ServeMode, TelemetryConfig,
+    };
+    for (layout, pool, contention) in [
+        (LayoutPreset::Mixed, f64::INFINITY, false),
+        (LayoutPreset::AllSmall, 12.0, true),
+    ] {
+        let cfg = ServeConfig {
+            gpus: 3,
+            policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+            layout,
+            arrival_rate_hz: 1.5,
+            jobs: 40,
+            deadline_s: 30.0,
+            reconfig: false,
+            seed: 0xBEE,
+            workload_scale: 0.05,
+            batch: 1,
+            host_pool_gib: pool,
+            c2c_contention: contention,
+            energy_weight: 0.0,
+        };
+        let tcfg = TelemetryConfig::default();
+        let (ri, ti) = serve_traced(&cfg, ServeMode::Indexed, &tcfg).unwrap();
+        let (rn, tn) = serve_traced(&cfg, ServeMode::NaiveOracle, &tcfg).unwrap();
+        assert_eq!(ri.to_json().pretty(), rn.to_json().pretty());
+        assert_eq!(
+            ti.oracle_view().pretty(),
+            tn.oracle_view().pretty(),
+            "the observable stream must be identical across serve modes"
+        );
+        // The modes do different bookkeeping work, and the counters see
+        // it: every indexed decision is either a memo hit or a real walk,
+        // while the oracle rescans every time and never memoizes.
+        assert_eq!(
+            ti.counters.get(Counter::MemoHits) + ti.counters.get(Counter::MemoMisses),
+            ti.counters.get(Counter::PlaceDecisions),
+            "indexed decisions must split exactly into memo hits and walks"
+        );
+        assert!(ti.counters.get(Counter::MemoMisses) > 0, "some walks must be real");
+        assert_eq!(tn.counters.get(Counter::MemoHits), 0, "the oracle never memoizes");
+        assert_eq!(tn.counters.get(Counter::MemoMisses), 0);
+        assert_eq!(
+            ti.counters.get(Counter::PlaceDecisions),
+            tn.counters.get(Counter::PlaceDecisions),
+            "both modes face the same placement decisions"
+        );
+    }
+}
+
+#[test]
+fn telemetry_jsonl_round_trips_through_disk_and_the_audit_cli_path() {
+    // The `--telemetry out.jsonl` artifact: every line parses as JSON,
+    // the stream carries events, samples, one histogram line and one
+    // profile line, and `audit_jsonl` (the `migsim audit-trace` engine)
+    // reproduces the in-memory audit verdict from the file's text.
+    use migsim::cluster::telemetry::audit;
+    use migsim::cluster::{
+        serve_traced, LayoutPreset, PolicyKind, ServeConfig, ServeMode, TelemetryConfig,
+    };
+    let cfg = ServeConfig {
+        gpus: 3,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: 1.5,
+        jobs: 30,
+        deadline_s: 25.0,
+        reconfig: true,
+        seed: 0xD1CE,
+        workload_scale: 0.05,
+        batch: 1,
+        ..ServeConfig::default()
+    };
+    let tcfg = TelemetryConfig { sample_dt_s: 0.5 };
+    let (_, tel) = serve_traced(&cfg, ServeMode::Indexed, &tcfg).unwrap();
+    let jsonl = tel.to_jsonl();
+    let path = std::env::temp_dir().join(format!(
+        "migsim-int-telemetry-{}.jsonl",
+        std::process::id()
+    ));
+    std::fs::write(&path, &jsonl).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text, jsonl, "disk round trip must be exact");
+    let mut kinds = std::collections::BTreeMap::new();
+    for line in text.lines() {
+        let doc = Json::parse(line).expect("every JSONL line parses");
+        let ty = doc.get("type").unwrap().as_str().unwrap().to_string();
+        *kinds.entry(ty).or_insert(0u64) += 1;
+    }
+    assert_eq!(kinds.get("event").copied(), Some(tel.events.len() as u64));
+    assert_eq!(kinds.get("sample").copied(), Some(tel.samples.len() as u64));
+    assert_eq!(kinds.get("hist").copied(), Some(1));
+    assert_eq!(kinds.get("profile").copied(), Some(1));
+    let from_file = audit::audit_jsonl(&text).unwrap();
+    let in_memory = audit::audit(&tel.events).unwrap();
+    assert_eq!(from_file, in_memory, "file and in-memory audits must agree");
+    let _ = std::fs::remove_file(path);
+}

@@ -470,6 +470,135 @@ fn host_pool_and_link_accounting_invariants_under_random_churn() {
 }
 
 #[test]
+fn telemetry_hist_and_counter_merges_are_associative() {
+    // The telemetry plane's merge algebra must be exactly associative
+    // (u64 bucket/counter arithmetic — no floats), so the coordinator can
+    // fold per-shard chunks in any grouping and still emit identical
+    // bits. Random value streams, random splits: merging the parts in
+    // either grouping, or recording the concatenation directly, must
+    // yield byte-identical JSON.
+    use migsim::cluster::telemetry::hist::Hist;
+    use migsim::cluster::telemetry::{CounterSet, ALL_COUNTERS};
+    let mut rng = Rng::new(0x7E1E);
+    for case in 0..CASES {
+        let n = 3 + rng.below(40) as usize;
+        let vals: Vec<u64> = (0..n).map(|_| rng.below(1 << 40)).collect();
+        let a = 1 + rng.below((n - 2) as u64) as usize;
+        let b = a + 1 + rng.below((n - a - 1) as u64) as usize;
+        let record = |vs: &[u64]| {
+            let mut h = Hist::new();
+            for &v in vs {
+                h.record_ns(v);
+            }
+            h
+        };
+        let (h1, h2, h3) = (record(&vals[..a]), record(&vals[a..b]), record(&vals[b..]));
+        // (h1 ∪ h2) ∪ h3
+        let mut left = h1.clone();
+        left.merge(&h2);
+        left.merge(&h3);
+        // h1 ∪ (h2 ∪ h3)
+        let mut tail = h2.clone();
+        tail.merge(&h3);
+        let mut right = h1.clone();
+        right.merge(&tail);
+        let whole = record(&vals);
+        assert_eq!(left.to_json().compact(), right.to_json().compact(), "case {case}");
+        assert_eq!(left.to_json().compact(), whole.to_json().compact(), "case {case}");
+        assert_eq!(left.count(), n as u64);
+        assert_eq!(left.sum_ns(), vals.iter().sum::<u64>());
+
+        // Counter sets: same algebra over the profiling counters.
+        let bump = |rng: &mut Rng| {
+            let mut c = CounterSet::new();
+            for _ in 0..rng.below(20) {
+                let i = rng.below(ALL_COUNTERS.len() as u64) as usize;
+                c.add(ALL_COUNTERS[i], 1 + rng.below(1000));
+            }
+            c
+        };
+        let (c1, c2, c3) = (bump(&mut rng), bump(&mut rng), bump(&mut rng));
+        let mut cl = c1.clone();
+        cl.merge(&c2);
+        cl.merge(&c3);
+        let mut ct = c2.clone();
+        ct.merge(&c3);
+        let mut cr = c1.clone();
+        cr.merge(&ct);
+        assert_eq!(cl.to_json().compact(), cr.to_json().compact(), "case {case}");
+        for c in ALL_COUNTERS {
+            assert_eq!(cl.get(c), c1.get(c) + c2.get(c) + c3.get(c), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn telemetry_is_thread_invariant_under_random_configs() {
+    // The full telemetry report — events, samples, histograms, profiling
+    // counters — must come out bit-identical at every worker thread
+    // count: chunks are absorbed in shard-id order at each barrier and
+    // the finalize pass orders by virtual time, so wall-clock
+    // interleaving can never leak into the stream.
+    use migsim::cluster::{serve_sharded_traced, TelemetryConfig};
+    let mut rng = Rng::new(0x7E7A);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall];
+    for case in 0..4 {
+        let nodes = 2 + rng.below(3) as u32;
+        let base = ServeConfig {
+            gpus: nodes + rng.below(4) as u32,
+            policy: *rng.choose(&policies),
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.0),
+            jobs: 25 + rng.below(20) as u32,
+            deadline_s: 12.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1 + rng.below(2) as u32,
+            host_pool_gib: if rng.chance(0.5) {
+                f64::INFINITY
+            } else {
+                6.0 + rng.range(0.0, 20.0)
+            },
+            c2c_contention: rng.chance(0.5),
+            ..ServeConfig::default()
+        };
+        let tcfg = TelemetryConfig {
+            sample_dt_s: 0.05 + rng.range(0.0, 0.5),
+        };
+        let scfg = ShardServeConfig::new(base, nodes, 1);
+        let (r1, t1) = serve_sharded_traced(&scfg, &tcfg).unwrap();
+        let base_report = r1.report.to_json().compact();
+        let base_tel = t1.to_json().compact();
+        assert!(!t1.events.is_empty(), "case {case}: trace must not be empty");
+        for threads in [2u32, 4, 8] {
+            let (r, t) = serve_sharded_traced(
+                &ShardServeConfig {
+                    threads,
+                    ..scfg.clone()
+                },
+                &tcfg,
+            )
+            .unwrap();
+            assert_eq!(
+                r.report.to_json().compact(),
+                base_report,
+                "case {case}: report diverged at {threads} threads"
+            );
+            assert_eq!(
+                t.to_json().compact(),
+                base_tel,
+                "case {case}: telemetry diverged at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
 fn mig_manager_slice_accounting_under_random_ops() {
     let mut rng = Rng::new(0x3161);
     for _ in 0..60 {
