@@ -1,0 +1,122 @@
+//! Fault-plane overhead benchmark: end-to-end `cluster::serve` with the
+//! plane inert (the default path every other bench measures) against the
+//! same fleet under an active gpu+slice+reconfig fault plan with bounded
+//! retries and fine-grained checkpointing, on a near-saturated fleet.
+//!
+//! The "off" cell is the zero-cost-when-off claim: an inert `FaultConfig`
+//! schedules no events and every per-dispatch retry lookup is guarded by
+//! an emptiness check, so the loop's bits and its speed match the
+//! pre-plane serve loop. The "on" cell prices the full failure pipeline —
+//! cordon-and-drain, orphan requeue, checkpoint-shrunk retries, repair.
+//!
+//! Besides the human-readable report (and the standard
+//! `results/bench/faults.json`), this bench emits `BENCH_faults.json` —
+//! machine-readable events/s for both cells, the on/off overhead ratio,
+//! and the injected fault/retry/failure counts — so the recovery plane's
+//! cost is tracked across PRs.
+//!
+//!     cargo bench --offline --bench faults          # full measurement
+//!     cargo bench --offline --bench faults -- --smoke   # CI bit-rot check
+
+use migsim::bench::{BenchConfig, Bencher};
+use migsim::cluster::{serve, FaultConfig, LayoutPreset, PolicyKind, ServeConfig};
+use migsim::util::json::Json;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(300),
+        max_iters: 8,
+    });
+    let smoke = b.smoke();
+    let gpus: u32 = if smoke { 8 } else { 64 };
+    let jobs: u32 = if smoke { 300 } else { 5_000 };
+
+    // Near-saturated, same regime as the telemetry bench: the loop spends
+    // its time in dispatch, where the retry-fraction lookup sits.
+    let base = ServeConfig {
+        gpus,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: gpus as f64 * 2.5,
+        jobs,
+        deadline_s: 45.0,
+        reconfig: true,
+        seed: 7,
+        workload_scale: 0.05,
+        batch: 1,
+        ..ServeConfig::default()
+    };
+    // Per-GPU MTTF of 30 s over a tens-of-seconds horizon: every GPU is
+    // expected to fault at least once, so the recovery pipeline (cordon,
+    // drain, requeue, repair) is genuinely hot.
+    let faulted = ServeConfig {
+        faults: FaultConfig::from_spec("gpu,slice:2,reconfig", 30.0, 5.0, 2, 1.0).unwrap(),
+        ..base.clone()
+    };
+
+    let off = serve(&base).unwrap();
+    // An enabled-but-empty plan must reproduce the inert bytes exactly —
+    // the contract the golden fixtures rely on — before anything is timed.
+    let empty = ServeConfig {
+        faults: FaultConfig::from_spec("gpu:0", 3600.0, 60.0, 2, f64::INFINITY).unwrap(),
+        ..base.clone()
+    };
+    assert_eq!(
+        off.to_json().pretty(),
+        serve(&empty).unwrap().to_json().pretty(),
+        "an empty fault plan must be byte-inert before anything is timed"
+    );
+    let on = serve(&faulted).unwrap();
+    assert!(on.faults > 0, "the faulted cell injected nothing");
+    assert_eq!(
+        on.completed + on.expired + on.rejected + on.failed,
+        on.jobs,
+        "job conservation broken under faults"
+    );
+
+    let off_res = b
+        .bench_with_work(
+            &format!("faults/off_{jobs}jobs_{gpus}gpus"),
+            Some(off.events as f64),
+            "events",
+            || serve(&base).unwrap().completed,
+        )
+        .cloned();
+    let on_res = b
+        .bench_with_work(
+            &format!("faults/on_{jobs}jobs_{gpus}gpus"),
+            Some(on.events as f64),
+            "events",
+            || serve(&faulted).unwrap().completed,
+        )
+        .cloned();
+
+    // Machine-readable cost trajectory for the PR log.
+    let mut doc = Json::obj();
+    doc.set("suite", "faults")
+        .set("smoke", smoke)
+        .set("gpus", gpus)
+        .set("jobs", jobs)
+        .set("sim_events_off", off.events)
+        .set("sim_events_on", on.events)
+        .set("faults", on.faults)
+        .set("retries", on.retries)
+        .set("failed", on.failed)
+        .set("completed_off", off.completed)
+        .set("completed_on", on.completed);
+    if let (Some(off_r), Some(on_r)) = (&off_res, &on_res) {
+        doc.set("off_wall_s", off_r.mean_s)
+            .set("off_events_per_s", off.events as f64 / off_r.mean_s)
+            .set("on_wall_s", on_r.mean_s)
+            .set("on_events_per_s", on.events as f64 / on_r.mean_s)
+            .set("overhead_ratio", on_r.mean_s / off_r.mean_s);
+    }
+    if std::fs::write("BENCH_faults.json", doc.pretty()).is_ok() {
+        println!("-- wrote BENCH_faults.json");
+    }
+
+    b.finish("faults");
+}

@@ -1,0 +1,394 @@
+//! The fault-injection and recovery plane.
+//!
+//! A production fleet is defined by how it degrades: MIG's isolation
+//! story (the source paper's §II) says nothing about the GPU *dying* —
+//! ECC double-bit errors and Xid faults kill a single instance's
+//! residents, whole-board failures take every slice out for
+//! minutes-to-hours, and even a MIG repartition can fail transiently at
+//! the driver level. This module models all three as deterministic,
+//! seeded virtual-time events injected through the existing `sim::Engine`:
+//!
+//! - **Whole-GPU hard failures** (`FaultKind::Gpu`): the GPU is
+//!   cordoned (`Fleet::cordon_gpu` — every placement surface excludes
+//!   it), its residents are orphaned, and it returns after an
+//!   exponential repair time (MTTR).
+//! - **Slice-level ECC/Xid errors** (`FaultKind::Slice`): one
+//!   rng-chosen slot's resident set dies (`Fleet::drain_slot`); the
+//!   slot itself survives and keeps serving.
+//! - **Transient reconfiguration failures** (`FaultKind::Reconfig`): an
+//!   in-flight repartition aborts — the latency is paid but the old
+//!   layout survives. A fault of this kind drawn while the GPU is not
+//!   repartitioning hits nothing (the hazard only bites the driver
+//!   operation).
+//!
+//! Orphaned jobs are requeued as **bounded retries**: a job keeps its
+//! original arrival time and absolute deadline (retries compete honestly
+//! for admission), gains `JobState::Retrying` transitions up to
+//! `retries` times, and dies `JobState::Failed` after that. The restart
+//! cost comes from the checkpoint/restore model: with `--checkpoint-dt`
+//! set, work up to the last checkpoint boundary is preserved as a
+//! *fraction of the job* and the retry's service time shrinks
+//! accordingly; without it (`dt = inf`, the default) a retry restarts
+//! from scratch.
+//!
+//! ## Inertness and determinism
+//!
+//! The plane is **inert by default**, the same contract as the telemetry
+//! plane's `NullSink`: an inactive `FaultConfig` schedules *no* events
+//! (any scheduled event would change the engine's popped-event count and
+//! therefore the report), so every ServeReport and golden fixture stays
+//! byte-identical with the plane compiled in. When active, per-GPU fault
+//! streams are drawn from `Rng::new(mix(seed, global gpu id))` — a pure
+//! function of the serve seed and the *global* GPU id, never of the
+//! shard partitioning — so the merged report is bit-identical across
+//! `--threads 1/2/4/8`.
+
+use crate::util::Rng;
+use anyhow::{bail, ensure};
+
+/// The three modeled failure classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Whole-board hard failure: cordon-and-drain, repair after MTTR.
+    Gpu,
+    /// Slice-level ECC/Xid error: one slot's resident set dies.
+    Slice,
+    /// Transient repartition failure: the in-flight reconfiguration
+    /// aborts (latency paid, old layout kept).
+    Reconfig,
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Gpu => "gpu",
+            FaultKind::Slice => "slice",
+            FaultKind::Reconfig => "reconfig",
+        }
+    }
+}
+
+/// Fault-plane configuration. `Default` is **inert**: no fault kind
+/// enabled, so the plane schedules nothing and every report reproduces
+/// the pre-plane bytes exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Relative draw weight of whole-GPU failures (0 = disabled).
+    pub gpu_w: f64,
+    /// Relative draw weight of slice-level ECC/Xid errors.
+    pub slice_w: f64,
+    /// Relative draw weight of transient reconfiguration failures.
+    pub reconfig_w: f64,
+    /// Mean time to failure per GPU (s): fault inter-arrivals are
+    /// exponential with this mean, drawn per GPU.
+    pub mttf_s: f64,
+    /// Mean time to repair a hard-failed GPU (s; exponential).
+    pub mttr_s: f64,
+    /// Bounded retry budget per job: admission `1 + retries` is the last
+    /// one — the next fault kills the job (`JobState::Failed`).
+    pub retries: u32,
+    /// Checkpoint interval (s of service time). Work up to the last
+    /// checkpoint boundary survives a fault; `inf` (the default) means
+    /// no checkpointing — a retry restarts from scratch.
+    pub checkpoint_dt_s: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            gpu_w: 0.0,
+            slice_w: 0.0,
+            reconfig_w: 0.0,
+            mttf_s: 3600.0,
+            mttr_s: 60.0,
+            retries: 2,
+            checkpoint_dt_s: f64::INFINITY,
+        }
+    }
+}
+
+/// Parse a fault spec: comma-separated `kind[:weight]` items, kinds
+/// `gpu` | `slice` | `reconfig`, weight defaulting to 1 — e.g.
+/// `gpu`, `gpu,slice:2`, `gpu:1,slice:0.5,reconfig:0.25`. `none` (or
+/// the empty string) is the explicit inert spec. Returns
+/// `(gpu_w, slice_w, reconfig_w)`.
+pub fn parse_spec(spec: &str) -> crate::Result<(f64, f64, f64)> {
+    let spec = spec.trim();
+    if spec.is_empty() || spec == "none" {
+        return Ok((0.0, 0.0, 0.0));
+    }
+    let (mut gpu_w, mut slice_w, mut reconfig_w) = (None, None, None);
+    for item in spec.split(',') {
+        let (kind, w) = match item.split_once(':') {
+            Some((k, w)) => {
+                let w: f64 = w
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--faults: '{w}' is not a weight (in '{item}')"))?;
+                ensure!(
+                    w.is_finite() && w >= 0.0,
+                    "--faults: weight must be finite and >= 0, got {w} (in '{item}')"
+                );
+                (k, w)
+            }
+            None => (item, 1.0),
+        };
+        let slot = match kind.trim() {
+            "gpu" => &mut gpu_w,
+            "slice" => &mut slice_w,
+            "reconfig" => &mut reconfig_w,
+            other => bail!("--faults: unknown fault kind '{other}' (want gpu|slice|reconfig)"),
+        };
+        ensure!(slot.is_none(), "--faults: duplicate fault kind '{}'", kind.trim());
+        *slot = Some(w);
+    }
+    Ok((
+        gpu_w.unwrap_or(0.0),
+        slice_w.unwrap_or(0.0),
+        reconfig_w.unwrap_or(0.0),
+    ))
+}
+
+impl FaultConfig {
+    /// Build a config from a CLI spec plus the knob values.
+    pub fn from_spec(
+        spec: &str,
+        mttf_s: f64,
+        mttr_s: f64,
+        retries: u32,
+        checkpoint_dt_s: f64,
+    ) -> crate::Result<FaultConfig> {
+        let (gpu_w, slice_w, reconfig_w) = parse_spec(spec)?;
+        let cfg = FaultConfig {
+            gpu_w,
+            slice_w,
+            reconfig_w,
+            mttf_s,
+            mttr_s,
+            retries,
+            checkpoint_dt_s,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Whether the plane injects anything at all. Inactive ⇒ the serve
+    /// loop schedules no fault events and the report bytes are identical
+    /// to the plane being absent.
+    pub fn active(&self) -> bool {
+        self.total_w() > 0.0
+    }
+
+    fn total_w(&self) -> f64 {
+        self.gpu_w + self.slice_w + self.reconfig_w
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        for (name, w) in [
+            ("gpu", self.gpu_w),
+            ("slice", self.slice_w),
+            ("reconfig", self.reconfig_w),
+        ] {
+            ensure!(
+                w.is_finite() && w >= 0.0,
+                "fault weight '{name}' must be finite and >= 0, got {w}"
+            );
+        }
+        if !self.active() {
+            return Ok(());
+        }
+        ensure!(
+            self.mttf_s.is_finite() && self.mttf_s > 0.0,
+            "--mttf must be a positive number of seconds, got {}",
+            self.mttf_s
+        );
+        ensure!(
+            self.mttr_s.is_finite() && self.mttr_s > 0.0,
+            "--mttr must be a positive number of seconds, got {}",
+            self.mttr_s
+        );
+        ensure!(
+            self.checkpoint_dt_s > 0.0,
+            "--checkpoint-dt must be positive seconds (inf = no checkpointing), got {}",
+            self.checkpoint_dt_s
+        );
+        Ok(())
+    }
+
+    /// The fault stream of one GPU: a pure function of the serve seed
+    /// and the *global* GPU id (splitmix-style mixing decorrelates
+    /// adjacent ids), so every shard partitioning — and the unsharded
+    /// loop — draws the identical sequence for the same hardware.
+    pub fn gpu_stream(seed: u64, global_gpu: usize) -> Rng {
+        let mix = (global_gpu as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::new(seed ^ mix ^ 0xFA17_0000_0000_0000)
+    }
+
+    /// Time to the next fault on one GPU (exponential, mean MTTF).
+    pub fn draw_ttf(&self, rng: &mut Rng) -> f64 {
+        -self.mttf_s * (1.0 - rng.f64()).ln()
+    }
+
+    /// Repair time of a hard-failed GPU (exponential, mean MTTR).
+    pub fn draw_ttr(&self, rng: &mut Rng) -> f64 {
+        -self.mttr_s * (1.0 - rng.f64()).ln()
+    }
+
+    /// Which failure class this fault is (weighted draw; only enabled
+    /// kinds can come out). Must not be called on an inactive config.
+    pub fn draw_kind(&self, rng: &mut Rng) -> FaultKind {
+        debug_assert!(self.active(), "drawing a fault kind from an inert plane");
+        let mut pick = rng.f64() * self.total_w();
+        if pick < self.gpu_w {
+            return FaultKind::Gpu;
+        }
+        pick -= self.gpu_w;
+        if pick < self.slice_w {
+            return FaultKind::Slice;
+        }
+        FaultKind::Reconfig
+    }
+
+    /// Service seconds preserved when an attempt is killed after
+    /// `elapsed_s` of service: the last checkpoint boundary at
+    /// `checkpoint_dt_s` granularity, 0 with checkpointing off. The
+    /// caller converts this to job-progress fraction by dividing by the
+    /// attempt's full-job runtime.
+    pub fn preserved_s(&self, elapsed_s: f64) -> f64 {
+        if !self.checkpoint_dt_s.is_finite() {
+            return 0.0;
+        }
+        (elapsed_s.max(0.0) / self.checkpoint_dt_s).floor() * self.checkpoint_dt_s
+    }
+
+    /// Compact label for reports/telemetry, e.g. `gpu:1+slice:0.5`,
+    /// `off` when inert.
+    pub fn label(&self) -> String {
+        if !self.active() {
+            return "off".to_string();
+        }
+        let mut parts = Vec::new();
+        for (name, w) in [
+            ("gpu", self.gpu_w),
+            ("slice", self.slice_w),
+            ("reconfig", self.reconfig_w),
+        ] {
+            if w > 0.0 {
+                parts.push(format!("{name}:{w}"));
+            }
+        }
+        parts.join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert_and_valid() {
+        let c = FaultConfig::default();
+        assert!(!c.active());
+        c.validate().unwrap();
+        assert_eq!(c.label(), "off");
+    }
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        assert_eq!(parse_spec("").unwrap(), (0.0, 0.0, 0.0));
+        assert_eq!(parse_spec("none").unwrap(), (0.0, 0.0, 0.0));
+        assert_eq!(parse_spec("gpu").unwrap(), (1.0, 0.0, 0.0));
+        assert_eq!(parse_spec("gpu,slice:2").unwrap(), (1.0, 2.0, 0.0));
+        assert_eq!(
+            parse_spec("gpu:0.5,slice:2,reconfig:0.25").unwrap(),
+            (0.5, 2.0, 0.25)
+        );
+        assert_eq!(parse_spec(" slice ").unwrap(), (0.0, 1.0, 0.0));
+        for bad in ["disk", "gpu:x", "gpu:-1", "gpu,gpu:2", "gpu:inf"] {
+            assert!(parse_spec(bad).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn validation_matrix() {
+        let active = |f: fn(&mut FaultConfig)| {
+            let mut c = FaultConfig { gpu_w: 1.0, ..FaultConfig::default() };
+            f(&mut c);
+            c.validate()
+        };
+        assert!(active(|_| {}).is_ok());
+        assert!(active(|c| c.mttf_s = 0.0).is_err());
+        assert!(active(|c| c.mttf_s = f64::INFINITY).is_err());
+        assert!(active(|c| c.mttr_s = -1.0).is_err());
+        assert!(active(|c| c.checkpoint_dt_s = 0.0).is_err());
+        assert!(active(|c| c.checkpoint_dt_s = f64::INFINITY).is_ok());
+        assert!(active(|c| c.slice_w = f64::NAN).is_err());
+        // An inert config never trips the knob checks (defaults must
+        // stay valid whatever the unused knobs hold).
+        let mut inert = FaultConfig { mttf_s: 0.0, ..FaultConfig::default() };
+        inert.validate().unwrap();
+        inert.gpu_w = 1.0;
+        assert!(inert.validate().is_err());
+    }
+
+    #[test]
+    fn per_gpu_streams_are_deterministic_and_decorrelated() {
+        let c = FaultConfig { gpu_w: 1.0, mttf_s: 100.0, ..FaultConfig::default() };
+        let mut a = FaultConfig::gpu_stream(7, 3);
+        let mut b = FaultConfig::gpu_stream(7, 3);
+        let seq_a: Vec<f64> = (0..8).map(|_| c.draw_ttf(&mut a)).collect();
+        let seq_b: Vec<f64> = (0..8).map(|_| c.draw_ttf(&mut b)).collect();
+        assert_eq!(seq_a, seq_b, "same (seed, gpu) ⇒ same stream");
+        assert!(seq_a.iter().all(|&t| t > 0.0 && t.is_finite()));
+        let mut other_gpu = FaultConfig::gpu_stream(7, 4);
+        let mut other_seed = FaultConfig::gpu_stream(8, 3);
+        assert_ne!(seq_a[0], c.draw_ttf(&mut other_gpu));
+        assert_ne!(seq_a[0], c.draw_ttf(&mut other_seed));
+    }
+
+    #[test]
+    fn kind_draw_respects_weights() {
+        let mut rng = FaultConfig::gpu_stream(1, 0);
+        let only_gpu = FaultConfig { gpu_w: 3.0, ..FaultConfig::default() };
+        for _ in 0..32 {
+            assert_eq!(only_gpu.draw_kind(&mut rng), FaultKind::Gpu);
+        }
+        let only_slice = FaultConfig { slice_w: 0.1, ..FaultConfig::default() };
+        for _ in 0..32 {
+            assert_eq!(only_slice.draw_kind(&mut rng), FaultKind::Slice);
+        }
+        let mixed = FaultConfig { gpu_w: 1.0, slice_w: 1.0, reconfig_w: 1.0, ..FaultConfig::default() };
+        let mut seen = [false; 3];
+        for _ in 0..256 {
+            match mixed.draw_kind(&mut rng) {
+                FaultKind::Gpu => seen[0] = true,
+                FaultKind::Slice => seen[1] = true,
+                FaultKind::Reconfig => seen[2] = true,
+            }
+        }
+        assert_eq!(seen, [true; 3], "every enabled kind eventually drawn");
+    }
+
+    #[test]
+    fn checkpoint_model_preserves_boundary_work() {
+        let off = FaultConfig::default();
+        assert_eq!(off.preserved_s(123.0), 0.0, "no checkpointing ⇒ scratch");
+        let on = FaultConfig { checkpoint_dt_s: 10.0, ..FaultConfig::default() };
+        assert_eq!(on.preserved_s(0.0), 0.0);
+        assert_eq!(on.preserved_s(9.99), 0.0);
+        assert_eq!(on.preserved_s(10.0), 10.0);
+        assert_eq!(on.preserved_s(25.0), 20.0);
+        assert_eq!(on.preserved_s(-1.0), 0.0, "clock skew clamps to 0");
+    }
+
+    #[test]
+    fn from_spec_wires_knobs_and_validates() {
+        let c = FaultConfig::from_spec("gpu,slice:2", 500.0, 30.0, 3, 5.0).unwrap();
+        assert!(c.active());
+        assert_eq!((c.gpu_w, c.slice_w, c.reconfig_w), (1.0, 2.0, 0.0));
+        assert_eq!(c.retries, 3);
+        assert_eq!(c.label(), "gpu:1+slice:2");
+        assert!(FaultConfig::from_spec("gpu", 0.0, 30.0, 3, 5.0).is_err());
+        let inert = FaultConfig::from_spec("none", 500.0, 30.0, 3, 5.0).unwrap();
+        assert!(!inert.active());
+    }
+}

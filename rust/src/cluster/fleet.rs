@@ -55,11 +55,24 @@
 //! direct-access bandwidth by. Both have `*_scan` oracles recomputed from
 //! the raw resident lists.
 //!
+//! ## The fault plane
+//!
+//! `cluster::faults` injects hardware failures as virtual-time events; the
+//! fleet's side is *cordon-and-drain*: `cordon_gpu` evicts every resident
+//! (unwinding pool/link/occupancy accounting exactly), pulls the GPU's
+//! slots from the open index, drops it from the idle set, and uncounts
+//! its layout from `has_layout_class` — until `uncordon_gpu` repairs it.
+//! `drain_slot` is the slice-level (ECC/Xid) variant: one resident set
+//! dies, the slot survives. Every `*_scan` oracle filters on
+//! `FleetGpu::out_of_service` (cordoned **or** reconfiguring) so the
+//! naive paths exclude exactly the hardware the index excludes.
+//!
 //! Mutations must flow through the `Fleet` methods (`start_job`,
-//! `finish_job`, `begin_reconfig`, `finish_reconfig`); mutating
-//! `fleet.gpus[..]` directly bypasses the index. The `*_scan` variants
-//! recompute the same quantities from the raw slots and serve as the
-//! differential-test oracle.
+//! `finish_job`, `begin_reconfig`, `finish_reconfig`, `cordon_gpu`,
+//! `uncordon_gpu`, `drain_slot`); mutating `fleet.gpus[..]` directly
+//! bypasses the index. The `*_scan` variants recompute the same
+//! quantities from the raw slots and serve as the differential-test
+//! oracle.
 
 use super::hostmem::HostPool;
 use crate::gpu::GpuSpec;
@@ -72,6 +85,19 @@ use std::collections::BTreeSet;
 /// share one GI between at most seven clients — `Scheme::MigSharedGi`
 /// tops out at 7×1c.7g).
 pub const MAX_BATCH: u32 = 7;
+
+/// A resident evicted from a cordoned GPU (or a faulted slice) before it
+/// finished: everything the fault plane needs to requeue it as a retry.
+/// Produced by `Fleet::cordon_gpu` / `Fleet::drain_slot` in deterministic
+/// `(slot, admission)` order; the pool/link/occupancy accounting has
+/// already been unwound by the time the caller sees one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Orphan {
+    pub job: u32,
+    pub slot: usize,
+    pub started_s: f64,
+    pub until_s: f64,
+}
 
 /// One job resident on a serving slot.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -229,6 +255,11 @@ pub struct FleetGpu {
     pub pending_layout: Option<Vec<ProfileId>>,
     /// Completed reconfigurations (diagnostics).
     pub reconfigs: u32,
+    /// True while the fault plane has this GPU out of service: its slots
+    /// are out of the open index, the planner never targets it, and
+    /// `fits_current_layouts` does not count its layout. Set/cleared only
+    /// through `Fleet::cordon_gpu` / `Fleet::uncordon_gpu`.
+    cordoned: bool,
     /// Live counter of occupied slots (≥1 resident; maintained by `Fleet`).
     busy_slots: u32,
     /// Live counter of SMs running jobs (maintained by `Fleet`).
@@ -250,6 +281,7 @@ impl FleetGpu {
             reconfiguring_until: None,
             pending_layout: None,
             reconfigs: 0,
+            cordoned: false,
             busy_slots: 0,
             busy_sms_count: 0,
             offloaders_count: 0,
@@ -258,6 +290,19 @@ impl FleetGpu {
 
     pub fn reconfiguring(&self) -> bool {
         self.reconfiguring_until.is_some()
+    }
+
+    /// True while the fault plane has this GPU cordoned.
+    pub fn cordoned(&self) -> bool {
+        self.cordoned
+    }
+
+    /// True when this GPU currently serves nothing — cordoned by the
+    /// fault plane or mid-reconfiguration. The single predicate every
+    /// `*_scan` oracle filters on, so the naive paths exclude exactly the
+    /// hardware the incremental index excludes.
+    pub fn out_of_service(&self) -> bool {
+        self.cordoned || self.reconfiguring()
     }
 
     /// True when every slot is empty (a precondition for reconfiguration).
@@ -316,6 +361,9 @@ impl FleetGpu {
         if self.reconfiguring() {
             bail!("GPU {} is already reconfiguring", self.id);
         }
+        if self.cordoned {
+            bail!("GPU {} is cordoned; it cannot be reconfigured", self.id);
+        }
         validate_layout(&target)?;
         self.pending_layout = Some(target);
         self.reconfiguring_until = Some(until_s);
@@ -331,6 +379,15 @@ impl FleetGpu {
             self.layout = layout;
             self.reconfigs += 1;
         }
+        self.reconfiguring_until = None;
+    }
+
+    /// Abort the in-flight reconfiguration after a transient driver
+    /// fault: the pending layout is dropped and the installed one (whose
+    /// slots never changed) survives. Prefer `Fleet::abort_reconfig`,
+    /// which also maintains the index.
+    pub fn abort_reconfig(&mut self) {
+        self.pending_layout = None;
         self.reconfiguring_until = None;
     }
 }
@@ -538,7 +595,7 @@ impl Fleet {
             open_seats: [0; NUM_PROFILES],
         };
         for gpu in &self.gpus {
-            if gpu.reconfiguring() {
+            if gpu.out_of_service() {
                 continue;
             }
             for slot in &gpu.slots {
@@ -654,7 +711,7 @@ impl Fleet {
     pub fn open_sm_seats_scan(&self) -> u32 {
         self.gpus
             .iter()
-            .filter(|g| !g.reconfiguring())
+            .filter(|g| !g.out_of_service())
             .flat_map(|g| g.slots.iter())
             .map(|s| s.profile.sms * (self.batch - s.occupancy() as u32))
             .sum()
@@ -693,7 +750,7 @@ impl Fleet {
     pub fn largest_open_slot_gib_scan(&self) -> f64 {
         self.gpus
             .iter()
-            .filter(|g| !g.reconfiguring())
+            .filter(|g| !g.out_of_service())
             .flat_map(|g| g.slots.iter())
             .filter(|s| (s.occupancy() as u32) < self.batch)
             .map(|s| s.profile.mem_gib)
@@ -725,7 +782,7 @@ impl Fleet {
     pub fn max_open_headroom_gib_scan(&self) -> f64 {
         self.gpus
             .iter()
-            .filter(|g| !g.reconfiguring())
+            .filter(|g| !g.out_of_service())
             .flat_map(|g| g.slots.iter())
             .filter(|s| s.occupancy() >= 1 && (s.occupancy() as u32) < self.batch)
             .map(|s| s.profile.mem_gib - s.charged_gib())
@@ -764,6 +821,7 @@ impl Fleet {
         let batch = self.batch as usize;
         debug_assert!(self.host_pool.fits(host_bytes), "host pool overcommitted");
         let g = &mut self.gpus[gpu];
+        debug_assert!(!g.cordoned, "placing onto a cordoned GPU");
         let s = &mut g.slots[slot];
         let occ = s.residents.len();
         assert!(occ < batch, "placing onto a full slot");
@@ -864,11 +922,131 @@ impl Fleet {
             return;
         }
         self.gpus[gpu].finish_reconfig();
+        if self.gpus[gpu].cordoned {
+            // A fault cordoned the GPU while the repartition was in
+            // flight: the new layout installs, but the hardware stays out
+            // of service — no open slots, no idle candidacy, no epoch
+            // bump (no capacity came back). `uncordon_gpu` restores it.
+            return;
+        }
         for (s, slot) in self.gpus[gpu].slots.iter().enumerate() {
             self.index.open[0][slot.profile.id.index()].insert((gpu, s));
         }
         self.index.idle_gpus.insert(gpu);
         self.index.epoch += 1;
+    }
+
+    /// Abort an in-flight reconfiguration after a transient driver fault
+    /// (index-maintaining wrapper around `FleetGpu::abort_reconfig`): the
+    /// latency was already paid, but the pending layout never lands — the
+    /// installed layout's (empty, unchanged) slots return to the open
+    /// index and the GPU becomes an idle reconfiguration candidate again.
+    /// No-op when the GPU is not reconfiguring. If the GPU was cordoned
+    /// mid-flight only the pending layout is dropped; `uncordon_gpu`
+    /// restores the rest.
+    pub fn abort_reconfig(&mut self, gpu: usize) {
+        if !self.gpus[gpu].reconfiguring() {
+            return;
+        }
+        if !self.gpus[gpu].cordoned {
+            // The effective layout flips back from the pending target to
+            // the installed one.
+            let g = &self.gpus[gpu];
+            self.index.adjust_layout_gpus(g.effective_layout(), false);
+            self.index.adjust_layout_gpus(&g.layout, true);
+        }
+        self.gpus[gpu].abort_reconfig();
+        if self.gpus[gpu].cordoned {
+            return;
+        }
+        for (s, slot) in self.gpus[gpu].slots.iter().enumerate() {
+            self.index.open[0][slot.profile.id.index()].insert((gpu, s));
+        }
+        self.index.idle_gpus.insert(gpu);
+        self.index.epoch += 1;
+    }
+
+    /// Take `gpu` out of service after a hard fault: every resident is
+    /// evicted (their pool/link/occupancy accounting unwound exactly, as
+    /// if they had finished at `now`), the GPU's slots leave the open
+    /// index, it stops being a reconfiguration candidate, and its layout
+    /// no longer counts toward `has_layout_class`. Returns the evicted
+    /// residents in deterministic `(slot, admission)` order so the fault
+    /// plane can requeue them. Idempotence is the caller's job: cordoning
+    /// an already-cordoned GPU is a bug.
+    pub fn cordon_gpu(&mut self, gpu: usize, now: f64) -> Vec<Orphan> {
+        assert!(!self.gpus[gpu].cordoned, "GPU {gpu} is already cordoned");
+        let orphans: Vec<Orphan> = self.gpus[gpu]
+            .slots
+            .iter()
+            .enumerate()
+            .flat_map(|(s, slot)| {
+                slot.residents.iter().map(move |r| Orphan {
+                    job: r.job,
+                    slot: s,
+                    started_s: r.started_s,
+                    until_s: r.until_s,
+                })
+            })
+            .collect();
+        for o in &orphans {
+            let evicted = self.finish_job(gpu, o.slot, o.job, now);
+            debug_assert!(evicted, "orphan {} vanished mid-cordon", o.job);
+        }
+        // Fully drained now: every slot sits in the occupancy-0 open set
+        // (unless a reconfiguration already holds them out of the index).
+        if !self.gpus[gpu].reconfiguring() {
+            for (s, slot) in self.gpus[gpu].slots.iter().enumerate() {
+                self.index.open[0][slot.profile.id.index()].remove(&(gpu, s));
+            }
+        }
+        self.index.idle_gpus.remove(&gpu);
+        self.index
+            .adjust_layout_gpus(self.gpus[gpu].effective_layout(), false);
+        self.gpus[gpu].cordoned = true;
+        orphans
+    }
+
+    /// Return a repaired GPU to service: slots re-enter the open index
+    /// empty, the GPU becomes a reconfiguration candidate again, its
+    /// layout counts toward `has_layout_class`, and the availability
+    /// epoch bumps (capacity came back). If a reconfiguration was in
+    /// flight across the whole outage the GPU stays out of the open index
+    /// until `finish_reconfig` lands it.
+    pub fn uncordon_gpu(&mut self, gpu: usize) {
+        assert!(self.gpus[gpu].cordoned, "GPU {gpu} is not cordoned");
+        self.gpus[gpu].cordoned = false;
+        self.index
+            .adjust_layout_gpus(self.gpus[gpu].effective_layout(), true);
+        if !self.gpus[gpu].reconfiguring() {
+            for (s, slot) in self.gpus[gpu].slots.iter().enumerate() {
+                self.index.open[0][slot.profile.id.index()].insert((gpu, s));
+            }
+            self.index.idle_gpus.insert(gpu);
+        }
+        self.index.epoch += 1;
+    }
+
+    /// Evict every resident of one slot after a slice-level (ECC/Xid)
+    /// fault — the slot itself survives and immediately returns to the
+    /// open index as empty capacity. Returns the evicted residents in
+    /// admission order.
+    pub fn drain_slot(&mut self, gpu: usize, slot: usize, now: f64) -> Vec<Orphan> {
+        let orphans: Vec<Orphan> = self.gpus[gpu].slots[slot]
+            .residents
+            .iter()
+            .map(|r| Orphan {
+                job: r.job,
+                slot,
+                started_s: r.started_s,
+                until_s: r.until_s,
+            })
+            .collect();
+        for o in &orphans {
+            let evicted = self.finish_job(gpu, slot, o.job, now);
+            debug_assert!(evicted, "orphan {} vanished mid-drain", o.job);
+        }
+        orphans
     }
 
     /// Instantaneous fragmentation: the fraction of *idle* SMs stranded in
@@ -913,7 +1091,7 @@ impl Fleet {
         let mut idle_sms = 0u32;
         let mut stranded_sms = 0u32;
         for g in &self.gpus {
-            if g.reconfiguring() {
+            if g.out_of_service() {
                 continue;
             }
             for s in &g.slots {
@@ -1048,6 +1226,36 @@ mod tests {
     }
 
     #[test]
+    fn abort_reconfig_keeps_old_layout_and_restores_index() {
+        let mut f = Fleet::new(1, LayoutPreset::AllSmall).unwrap();
+        let before_epoch = f.epoch();
+        f.begin_reconfig(0, vec![P7g96gb], 5.0).unwrap();
+        assert!(f.gpus[0].reconfiguring());
+        f.abort_reconfig(0);
+        // Old layout (7x1g) survives, its empty slots are placeable again,
+        // and the reconfig counter never moved (nothing landed).
+        assert!(!f.gpus[0].reconfiguring());
+        assert_eq!(f.gpus[0].slots.len(), 7);
+        assert_eq!(f.gpus[0].reconfigs, 0);
+        assert!(f.epoch() > before_epoch);
+        assert_index_matches_scan(&f);
+        // Idempotent on a GPU that is not reconfiguring.
+        f.abort_reconfig(0);
+        assert_index_matches_scan(&f);
+        // Abort while cordoned only drops the pending layout; the GPU
+        // stays out of service until uncordoned.
+        f.begin_reconfig(0, vec![P7g96gb], 9.0).unwrap();
+        let _ = f.cordon_gpu(0, 6.0);
+        f.abort_reconfig(0);
+        assert!(!f.gpus[0].reconfiguring());
+        assert!(f.gpus[0].cordoned());
+        assert_index_matches_scan(&f);
+        f.uncordon_gpu(0);
+        assert_eq!(f.gpus[0].slots.len(), 7);
+        assert_index_matches_scan(&f);
+    }
+
+    #[test]
     fn fragmentation_counts_stranded_idle_sms() {
         let mut f = Fleet::new(1, LayoutPreset::Mixed).unwrap(); // 7x1g
         // A 16 GiB job cannot use any idle 1g slot: everything stranded.
@@ -1067,7 +1275,7 @@ mod tests {
     /// an exact occupancy, excluding reconfiguring GPUs; no memory check).
     fn first_open_scan(f: &Fleet, pid: ProfileId, occ: usize) -> Option<(usize, usize)> {
         for (g, gpu) in f.gpus.iter().enumerate() {
-            if gpu.reconfiguring() {
+            if gpu.out_of_service() {
                 continue;
             }
             for (s, slot) in gpu.slots.iter().enumerate() {
@@ -1087,7 +1295,7 @@ mod tests {
                 let count_scan = f
                     .gpus
                     .iter()
-                    .filter(|g| !g.reconfiguring())
+                    .filter(|g| !g.out_of_service())
                     .flat_map(|g| g.slots.iter())
                     .filter(|s| s.occupancy() == occ && s.profile.id == pid)
                     .count();
@@ -1112,14 +1320,14 @@ mod tests {
             .gpus
             .iter()
             .enumerate()
-            .filter(|(_, n)| !n.reconfiguring() && n.all_idle())
+            .filter(|(_, n)| !n.out_of_service() && n.all_idle())
             .map(|(g, _)| g)
             .collect();
         assert_eq!(f.idle_gpus().collect::<Vec<_>>(), idle_scan);
         let idle_sms_scan: u32 = f
             .gpus
             .iter()
-            .filter(|g| !g.reconfiguring())
+            .filter(|g| !g.out_of_service())
             .flat_map(|g| g.slots.iter())
             .filter(|s| s.is_idle())
             .map(|s| s.profile.sms)
@@ -1141,7 +1349,7 @@ mod tests {
         let largest_scan = f
             .gpus
             .iter()
-            .filter(|g| !g.reconfiguring())
+            .filter(|g| !g.out_of_service())
             .flat_map(|g| g.slots.iter())
             .filter(|s| s.is_idle())
             .map(|s| s.profile.mem_gib)
@@ -1151,6 +1359,7 @@ mod tests {
             let present_scan = f
                 .gpus
                 .iter()
+                .filter(|n| !n.cordoned())
                 .any(|n| n.effective_layout().contains(&pid));
             assert_eq!(f.has_layout_class(pid), present_scan, "{pid:?}");
         }
@@ -1193,6 +1402,92 @@ mod tests {
     }
 
     #[test]
+    fn cordon_drains_residents_and_restores_accounting_exactly() {
+        // Two all-small GPUs, finite pool; GPU 0 carries a resident job
+        // and an offloader when the fault hits.
+        let mut f = Fleet::with_hostmem(2, LayoutPreset::AllSmall, 1, 8.0).unwrap();
+        f.start_job(0, 0, 1, 0.0, 10.0, 0.5, 0);
+        f.start_job(0, 3, 2, 1.0, 12.0, 10.9, 2 << 30);
+        f.start_job(1, 0, 3, 0.0, 10.0, 0.5, 0);
+        assert_eq!(f.host_used_bytes(), 2 << 30);
+        assert_eq!(f.gpus[0].offloaders(), 1);
+
+        let orphans = f.cordon_gpu(0, 4.0);
+        assert_eq!(orphans.len(), 2);
+        assert_eq!(orphans[0], Orphan { job: 1, slot: 0, started_s: 0.0, until_s: 10.0 });
+        assert_eq!(orphans[1], Orphan { job: 2, slot: 3, started_s: 1.0, until_s: 12.0 });
+        // Accounting unwound exactly: pool, link share, SMs, busy slots.
+        assert_eq!(f.host_used_bytes(), 0, "orphan spill released");
+        assert_eq!(f.gpus[0].offloaders(), 0);
+        assert_eq!(f.busy_sms(), f.busy_sms_scan());
+        assert!(f.gpus[0].all_idle());
+        assert!(f.gpus[0].cordoned());
+        assert!(f.gpus[0].out_of_service());
+        // The cordoned GPU is invisible to every placement surface: no
+        // open slots, not an idle candidate, layout uncounted.
+        assert_eq!(f.first_idle(P1g12gb), Some((1, 1)), "only GPU 1 serves");
+        assert_eq!(f.idle_gpus().count(), 0, "GPU 0 cordoned, GPU 1 busy");
+        assert!(f.has_layout_class(P1g12gb), "GPU 1 still carries the class");
+        assert_index_matches_scan(&f);
+        let _ = f.cordon_gpu(1, 4.0);
+        assert!(!f.has_layout_class(P1g12gb), "whole class cordoned away");
+        assert_eq!(f.open_sm_seats(), 0);
+        f.uncordon_gpu(1);
+
+        // Repair returns the GPU empty and bumps the epoch.
+        let e = f.epoch();
+        f.uncordon_gpu(0);
+        assert!(f.epoch() > e);
+        assert!(!f.gpus[0].cordoned());
+        assert_eq!(f.first_idle(P1g12gb), Some((0, 0)));
+        assert_index_matches_scan(&f);
+    }
+
+    #[test]
+    fn cordon_across_inflight_reconfig_installs_layout_out_of_service() {
+        let mut f = Fleet::new(2, LayoutPreset::AllSmall).unwrap();
+        f.begin_reconfig(0, class_layout(P7g96gb), 5.0).unwrap();
+        // Fault mid-repartition: no residents to orphan; the GPU stays
+        // invisible after the reconfiguration lands because it is still
+        // cordoned.
+        assert!(f.cordon_gpu(0, 2.0).is_empty());
+        assert_index_matches_scan(&f);
+        f.finish_reconfig(0);
+        assert!(!f.gpus[0].reconfiguring());
+        assert_eq!(f.gpus[0].slots.len(), 1, "new layout installed");
+        assert_eq!(f.first_idle(P7g96gb), None, "still cordoned");
+        assert!(!f.has_layout_class(P7g96gb));
+        assert_index_matches_scan(&f);
+        f.uncordon_gpu(0);
+        assert_eq!(f.first_idle(P7g96gb), Some((0, 0)));
+        assert!(f.has_layout_class(P7g96gb));
+        assert_index_matches_scan(&f);
+        // A cordoned GPU refuses reconfiguration outright.
+        let _ = f.cordon_gpu(1, 6.0);
+        assert!(f.begin_reconfig(1, class_layout(P7g96gb), 8.0).is_err());
+    }
+
+    #[test]
+    fn drain_slot_evicts_one_resident_set_only() {
+        let mut f = Fleet::with_batch(1, LayoutPreset::AllSmall, 2).unwrap();
+        f.start_job(0, 2, 7, 0.0, 10.0, 0.5, 0);
+        f.start_job(0, 2, 8, 1.0, 11.0, 0.5, 0);
+        f.start_job(0, 4, 9, 0.0, 10.0, 0.5, 0);
+        let orphans = f.drain_slot(0, 2, 3.0);
+        assert_eq!(
+            orphans.iter().map(|o| o.job).collect::<Vec<_>>(),
+            vec![7, 8],
+            "both co-residents of the faulted slice die"
+        );
+        assert!(f.gpus[0].slots[2].is_idle());
+        assert_eq!(f.gpus[0].slots[4].occupancy(), 1, "other slices unharmed");
+        // The slot itself survives and returns to the open index.
+        assert_eq!(f.first_idle(P1g12gb), Some((0, 0)));
+        assert!(f.drain_slot(0, 3, 3.5).is_empty(), "empty slice drains empty");
+        assert_index_matches_scan(&f);
+    }
+
+    #[test]
     fn per_share_open_walk_matches_scan_truth() {
         // Three all-big GPUs with 0 / 1 / 2 offloaders: the per-share walk
         // must surface the first open slot of each distinct link-share
@@ -1230,10 +1525,10 @@ mod tests {
             let mut next_job = 0u32;
             for step in 0..400u32 {
                 let g = rng.below(4) as usize;
-                match rng.below(4) {
+                match rng.below(6) {
                     0 => {
                         // Start a job on the first open seat of GPU g.
-                        if !f.gpus[g].reconfiguring() {
+                        if !f.gpus[g].out_of_service() {
                             if let Some(s) = f.gpus[g]
                                 .slots
                                 .iter()
@@ -1271,11 +1566,34 @@ mod tests {
                         let target = class_layout(ALL_PROFILES[rng.below(6) as usize]);
                         let _ = f.begin_reconfig(g, target, step as f64 + 3.0);
                     }
-                    _ => {
+                    3 => {
                         let was = f.gpus[g].reconfiguring();
+                        let cordoned = f.gpus[g].cordoned();
                         f.finish_reconfig(g);
-                        if was {
+                        if was && !cordoned {
                             assert!(f.epoch() > epoch, "reconfig done must bump the epoch");
+                        }
+                    }
+                    4 => {
+                        // Fault: cordon-and-drain GPU g (legal even while
+                        // it is mid-reconfiguration).
+                        if !f.gpus[g].cordoned() {
+                            let residents: Vec<u32> = f.gpus[g]
+                                .slots
+                                .iter()
+                                .flat_map(|s| s.residents.iter().map(|r| r.job))
+                                .collect();
+                            let orphans = f.cordon_gpu(g, step as f64);
+                            let got: Vec<u32> = orphans.iter().map(|o| o.job).collect();
+                            assert_eq!(got, residents, "orphans in (slot, admission) order");
+                            assert!(f.gpus[g].all_idle(), "cordon drains the GPU");
+                        }
+                    }
+                    _ => {
+                        // Repair: return GPU g to service.
+                        if f.gpus[g].cordoned() {
+                            f.uncordon_gpu(g);
+                            assert!(f.epoch() > epoch, "repair must bump the epoch");
                         }
                     }
                 }

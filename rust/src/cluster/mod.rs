@@ -58,6 +58,7 @@
 //! latency, fleet utilization, fragmentation, and energy integrated
 //! through the `gpu::PowerModel`.
 
+pub mod faults;
 pub mod fleet;
 pub mod hostmem;
 pub mod placement;
@@ -66,6 +67,7 @@ pub mod reconfig;
 pub mod shard;
 pub mod telemetry;
 
+pub use faults::{FaultConfig, FaultKind};
 pub use fleet::{Fleet, LayoutPreset, MAX_BATCH};
 pub use hostmem::{HostMemConfig, HostPool};
 pub use placement::{PlacementCost, Planner, PolicyKind};
@@ -119,6 +121,10 @@ pub struct ServeConfig {
     /// (`0.0` — the default — is the paper's pure §VI-B reward,
     /// bit-for-bit).
     pub energy_weight: f64,
+    /// The fault-injection plane (`cluster::faults`). The default is
+    /// inert — no fault events are scheduled and every report reproduces
+    /// the pre-plane bytes exactly.
+    pub faults: FaultConfig,
 }
 
 impl Default for ServeConfig {
@@ -137,6 +143,7 @@ impl Default for ServeConfig {
             host_pool_gib: f64::INFINITY,
             c2c_contention: false,
             energy_weight: 0.0,
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -155,6 +162,7 @@ impl ServeConfig {
             "energy weight must be finite and non-negative, got {}",
             self.energy_weight
         );
+        self.faults.validate()?;
         Ok(())
     }
 }
@@ -189,10 +197,22 @@ pub struct ServeReport {
     pub completed: u32,
     pub expired: u32,
     pub rejected: u32,
+    /// Jobs lost to hardware faults after exhausting their retry budget
+    /// (terminal `JobState::Failed`; 0 with the fault plane inert).
+    pub failed: u32,
     /// Completed jobs that ran with C2C offloading.
     pub offloaded: u32,
     /// MIG reconfigurations performed across the fleet.
     pub reconfigs: u32,
+    /// Hardware faults injected by the fault plane (all kinds).
+    pub faults: u32,
+    /// Fault-orphaned jobs requeued as retries.
+    pub retries: u32,
+    /// Whether the fault plane was active for this run. Gates the
+    /// serialization of the three counters above: an inert run emits
+    /// exactly the pre-plane JSON, byte-for-byte (the golden-fixture
+    /// contract). Not itself serialized.
+    pub faults_active: bool,
     /// Simulation events dispatched by the serving loop.
     pub events: u64,
     /// Serving horizon: last completion/expiry instant (s).
@@ -224,8 +244,16 @@ impl ServeReport {
             .set("expired", self.expired)
             .set("rejected", self.rejected)
             .set("offloaded", self.offloaded)
-            .set("reconfigs", self.reconfigs)
-            .set("events", self.events)
+            .set("reconfigs", self.reconfigs);
+        if self.faults_active {
+            // Fault counters only exist on the wire when the plane is
+            // active: an inert run's JSON is byte-identical to the
+            // pre-plane format (golden fixtures depend on this).
+            o.set("failed", self.failed)
+                .set("faults", self.faults)
+                .set("retries", self.retries);
+        }
+        o.set("events", self.events)
             .set("makespan_s", self.makespan_s)
             .set("throughput_jobs_s", self.throughput_jobs_s)
             .set("wait_mean_s", self.wait_mean_s)
@@ -239,11 +267,19 @@ impl ServeReport {
     }
 
     pub fn summary(&self) -> String {
+        let fault_line = if self.faults_active {
+            format!(
+                "\nfaults: {} injected, {} retries, {} jobs failed",
+                self.faults, self.retries, self.failed
+            )
+        } else {
+            String::new()
+        };
         format!(
             "serve {} on {} x{} @ {:.2} jobs/s\n\
              jobs: {} completed, {} expired, {} rejected ({} offloaded, {} reconfigs)\n\
              throughput {:.3} jobs/s over {:.1} s  wait p50/p95/p99 {:.2}/{:.2}/{:.2} s\n\
-             utilization {:.1}%  fragmentation {:.1}%  energy {:.1} kJ  ({} events)",
+             utilization {:.1}%  fragmentation {:.1}%  energy {:.1} kJ  ({} events){}",
             self.policy,
             self.layout,
             self.gpus,
@@ -262,6 +298,7 @@ impl ServeReport {
             self.fragmentation * 100.0,
             self.energy_j / 1e3,
             self.events,
+            fault_line,
         )
     }
 }

@@ -834,7 +834,7 @@ impl Planner {
             PolicyKind::FirstFit => {
                 let mut found: Option<(usize, usize, PlacementCost)> = None;
                 'scan: for (g, gpu) in fleet.gpus.iter().enumerate() {
-                    if gpu.reconfiguring() {
+                    if gpu.out_of_service() {
                         continue;
                     }
                     for (s, slot) in gpu.slots.iter().enumerate() {
@@ -859,7 +859,7 @@ impl Planner {
             PolicyKind::BestFit => {
                 let mut best: Option<(u32, usize, usize, usize, PlacementCost)> = None;
                 for (g, gpu) in fleet.gpus.iter().enumerate() {
-                    if gpu.reconfiguring() {
+                    if gpu.out_of_service() {
                         continue;
                     }
                     for (s, slot) in gpu.slots.iter().enumerate() {
@@ -894,7 +894,7 @@ impl Planner {
             PolicyKind::OffloadAware { alpha_centi } => {
                 let mut best: Option<(f64, u32, usize, usize, PlacementCost)> = None;
                 for (g, gpu) in fleet.gpus.iter().enumerate() {
-                    if gpu.reconfiguring() {
+                    if gpu.out_of_service() {
                         continue;
                     }
                     // The naive path recomputes the GPU's link share from
@@ -1001,6 +1001,9 @@ impl Planner {
         allow_offload: bool,
     ) -> bool {
         for gpu in &fleet.gpus {
+            if gpu.cordoned() {
+                continue;
+            }
             for &p in gpu.effective_layout() {
                 if let Some(c) = self.cost(app, p, allow_offload) {
                     if c.offloaded && !fleet.host_fits_scan(gib_to_bytes(c.host_gib)) {
@@ -1439,11 +1442,28 @@ mod tests {
                     let job = fleet.gpus[g].slots[s].residents[0].job;
                     fleet.finish_job(g, s, job, step as f64);
                 }
+                // Fault-plane churn: flip a GPU between cordoned and
+                // repaired every few steps, so the differential runs with
+                // hardware missing (and coming back) mid-stream.
+                if step % 7 == 3 {
+                    if fleet.gpus[g].cordoned() {
+                        fleet.uncordon_gpu(g);
+                    } else {
+                        let _ = fleet.cordon_gpu(g, step as f64);
+                    }
+                }
                 for &app in &apps {
                     for &policy in &policies {
                         let fast = pl.place(&fleet, app, policy).map(|(g, s, _)| (g, s));
                         let slow = pl.place_scan(&fleet, app, policy).map(|(g, s, _)| (g, s));
                         assert_eq!(fast, slow, "batch {batch} step {step} {app:?} {policy:?}");
+                    }
+                    for allow in [false, true] {
+                        assert_eq!(
+                            pl.fits_current_layouts(&fleet, app, allow),
+                            pl.fits_current_layouts_scan(&fleet, app, allow),
+                            "batch {batch} step {step} {app:?} allow={allow}"
+                        );
                     }
                 }
             }

@@ -18,10 +18,15 @@
 //! footprints precomputed at construction. The `*_scan` variants
 //! recompute the same quantities from the raw list and serve as the
 //! differential-test oracle.
+//!
+//! State transitions are *typed errors*, not panics: the queue is fed by
+//! the CLI's trace-replay path, so a malformed trace must surface as an
+//! `Err` the caller can print, never a panic (a DoS on the CLI).
 
 use crate::workload::apps;
 use crate::workload::trace::Job;
 use crate::workload::AppId;
+use anyhow::{bail, ensure};
 use std::collections::BTreeSet;
 
 /// Lifecycle state of a job in the serving system.
@@ -35,6 +40,14 @@ pub enum JobState {
     /// Handed off to another node shard's queue (terminal in this queue;
     /// the destination accounts the job's real outcome).
     Forwarded,
+    /// A fault killed this running instance and the job re-entered the
+    /// queue as a fresh retry admission (terminal at *this* id; the retry
+    /// id accounts the job's real outcome — the fault-plane analogue of
+    /// `Forwarded`).
+    Retrying,
+    /// A fault killed the job after its retry budget was exhausted
+    /// (terminal, with an outcome: the job is lost).
+    Failed,
 }
 
 /// A job plus its serving metadata.
@@ -89,21 +102,39 @@ impl AdmissionQueue {
 
     /// Register an arriving job with a relative queueing deadline. Job ids
     /// must arrive in order (they index `jobs`).
-    pub fn admit(&mut self, job: Job, deadline_rel_s: f64) {
+    pub fn admit(&mut self, job: Job, deadline_rel_s: f64) -> crate::Result<()> {
         let deadline_s = job.arrival_s + deadline_rel_s;
-        self.admit_at(job, deadline_s, false);
+        self.admit_at(job, deadline_s, false)
     }
 
     /// Register a job handed off from another node shard: its deadline is
     /// the absolute instant fixed at the original admission (the clock
     /// does not restart on migration), and it is marked so it never
     /// forwards again.
-    pub fn admit_handoff(&mut self, job: Job, deadline_abs_s: f64) {
-        self.admit_at(job, deadline_abs_s, true);
+    pub fn admit_handoff(&mut self, job: Job, deadline_abs_s: f64) -> crate::Result<()> {
+        self.admit_at(job, deadline_abs_s, true)
     }
 
-    fn admit_at(&mut self, job: Job, deadline_s: f64, handoff: bool) {
-        assert_eq!(job.id as usize, self.jobs.len(), "job ids must be dense");
+    /// Register a fault-plane retry of a killed running job: the deadline
+    /// is the absolute instant fixed at the original admission, and the
+    /// prior handoff mark is carried so a once-handed-off job still never
+    /// forwards again.
+    pub fn admit_retry(
+        &mut self,
+        job: Job,
+        deadline_abs_s: f64,
+        handoff: bool,
+    ) -> crate::Result<()> {
+        self.admit_at(job, deadline_abs_s, handoff)
+    }
+
+    fn admit_at(&mut self, job: Job, deadline_s: f64, handoff: bool) -> crate::Result<()> {
+        ensure!(
+            job.id as usize == self.jobs.len(),
+            "job ids must be dense: admitting id {} into a queue of {}",
+            job.id,
+            self.jobs.len()
+        );
         self.pending_by_app[job.app.index()] += 1;
         self.jobs.push(QueuedJob {
             job,
@@ -116,6 +147,14 @@ impl AdmissionQueue {
             handoff,
         });
         self.pending.insert(self.jobs.len() as u32 - 1);
+        Ok(())
+    }
+
+    /// A transition demanded on a job in the wrong state: a typed error,
+    /// with enough context to point at the offending trace record.
+    fn bad_transition(&self, id: u32, wanted: &str, op: &str) -> anyhow::Error {
+        let state = self.jobs.get(id as usize).map(|j| j.state);
+        anyhow::anyhow!("{op} requires a {wanted} job, but job {id} is {state:?}")
     }
 
     /// Pending job ids, oldest first (ids are dense and admitted in
@@ -142,22 +181,60 @@ impl AdmissionQueue {
     }
 
     /// Transition a pending job to running on `gpu`.
-    pub fn mark_running(&mut self, id: u32, now: f64, gpu: usize, offloaded: bool) {
+    pub fn mark_running(
+        &mut self,
+        id: u32,
+        now: f64,
+        gpu: usize,
+        offloaded: bool,
+    ) -> crate::Result<()> {
+        if self.jobs.get(id as usize).map(|j| j.state) != Some(JobState::Pending) {
+            bail!(self.bad_transition(id, "pending", "place"));
+        }
         let j = &mut self.jobs[id as usize];
-        assert_eq!(j.state, JobState::Pending, "placing a non-pending job");
         j.state = JobState::Running;
         j.placed_s = Some(now);
         j.gpu = Some(gpu);
         j.offloaded = offloaded;
         self.unqueue(id);
+        Ok(())
     }
 
-    pub fn mark_completed(&mut self, id: u32, now: f64) {
+    pub fn mark_completed(&mut self, id: u32, now: f64) -> crate::Result<()> {
+        if self.jobs.get(id as usize).map(|j| j.state) != Some(JobState::Running) {
+            bail!(self.bad_transition(id, "running", "complete"));
+        }
         let j = &mut self.jobs[id as usize];
-        assert_eq!(j.state, JobState::Running, "completing a non-running job");
         j.state = JobState::Completed;
         j.finished_s = Some(now);
         self.resolved += 1;
+        Ok(())
+    }
+
+    /// A fault killed this running instance and the job retries under a
+    /// fresh id: terminal here, no outcome, `finished_s` stays `None` so
+    /// the kill instant never extends this shard's horizon (exactly the
+    /// `Forwarded` accounting).
+    pub fn mark_retrying(&mut self, id: u32) -> crate::Result<()> {
+        if self.jobs.get(id as usize).map(|j| j.state) != Some(JobState::Running) {
+            bail!(self.bad_transition(id, "running", "retry"));
+        }
+        self.jobs[id as usize].state = JobState::Retrying;
+        self.resolved += 1;
+        Ok(())
+    }
+
+    /// A fault killed this running instance with the retry budget spent:
+    /// terminal, with an outcome — the job is lost at `now`.
+    pub fn mark_failed(&mut self, id: u32, now: f64) -> crate::Result<()> {
+        if self.jobs.get(id as usize).map(|j| j.state) != Some(JobState::Running) {
+            bail!(self.bad_transition(id, "running", "fail"));
+        }
+        let j = &mut self.jobs[id as usize];
+        j.state = JobState::Failed;
+        j.finished_s = Some(now);
+        self.resolved += 1;
+        Ok(())
     }
 
     /// Expire a job if it is still pending; returns whether it expired.
@@ -174,13 +251,16 @@ impl AdmissionQueue {
     }
 
     /// Reject a just-admitted job outright (unservable footprint).
-    pub fn reject(&mut self, id: u32, now: f64) {
+    pub fn reject(&mut self, id: u32, now: f64) -> crate::Result<()> {
+        if self.jobs.get(id as usize).map(|j| j.state) != Some(JobState::Pending) {
+            bail!(self.bad_transition(id, "pending", "reject"));
+        }
         let j = &mut self.jobs[id as usize];
-        assert_eq!(j.state, JobState::Pending);
         j.state = JobState::Rejected;
         j.finished_s = Some(now);
         self.resolved += 1;
         self.unqueue(id);
+        Ok(())
     }
 
     /// Hand a pending job off to another node shard: terminal here (it no
@@ -188,13 +268,19 @@ impl AdmissionQueue {
     /// accounting) but contributes to no outcome metric — the destination
     /// queue records the job's completion or expiry. `finished_s` stays
     /// `None` so the handoff instant never extends this shard's horizon.
-    pub fn mark_forwarded(&mut self, id: u32) {
+    pub fn mark_forwarded(&mut self, id: u32) -> crate::Result<()> {
+        if self.jobs.get(id as usize).map(|j| j.state) != Some(JobState::Pending) {
+            bail!(self.bad_transition(id, "pending", "forward"));
+        }
+        ensure!(
+            !self.jobs[id as usize].handoff,
+            "a handed-off job never forwards again (job {id})"
+        );
         let j = &mut self.jobs[id as usize];
-        assert_eq!(j.state, JobState::Pending, "forwarding a non-pending job");
-        assert!(!j.handoff, "a handed-off job never forwards again");
         j.state = JobState::Forwarded;
         self.resolved += 1;
         self.unqueue(id);
+        Ok(())
     }
 
     pub fn count(&self, state: JobState) -> u32 {
@@ -217,7 +303,12 @@ impl AdmissionQueue {
         self.jobs.iter().all(|j| {
             matches!(
                 j.state,
-                JobState::Completed | JobState::Expired | JobState::Rejected | JobState::Forwarded
+                JobState::Completed
+                    | JobState::Expired
+                    | JobState::Rejected
+                    | JobState::Forwarded
+                    | JobState::Retrying
+                    | JobState::Failed
             )
         })
     }
@@ -285,17 +376,17 @@ mod tests {
     #[test]
     fn fifo_order_and_transitions() {
         let mut q = AdmissionQueue::new();
-        q.admit(job(0, 0.0, AppId::Faiss), 10.0);
-        q.admit(job(1, 1.0, AppId::Hotspot), 10.0);
-        q.admit(job(2, 2.0, AppId::Lammps), 10.0);
+        q.admit(job(0, 0.0, AppId::Faiss), 10.0).unwrap();
+        q.admit(job(1, 1.0, AppId::Hotspot), 10.0).unwrap();
+        q.admit(job(2, 2.0, AppId::Lammps), 10.0).unwrap();
         assert_eq!(q.pending_ids().collect::<Vec<_>>(), vec![0, 1, 2]);
-        q.mark_running(1, 1.5, 0, false);
+        q.mark_running(1, 1.5, 0, false).unwrap();
         assert_eq!(q.pending_ids().collect::<Vec<_>>(), vec![0, 2]);
-        q.mark_completed(1, 4.0);
+        q.mark_completed(1, 4.0).unwrap();
         assert_eq!(q.count(JobState::Completed), 1);
         assert!(!q.all_resolved());
-        q.mark_running(0, 2.0, 1, true);
-        q.mark_completed(0, 9.0);
+        q.mark_running(0, 2.0, 1, true).unwrap();
+        q.mark_completed(0, 9.0).unwrap();
         assert!(q.expire_if_pending(2, 12.0));
         assert!(q.all_resolved());
         assert_eq!(q.horizon_s(), 12.0);
@@ -308,8 +399,8 @@ mod tests {
     #[test]
     fn expiry_only_hits_pending() {
         let mut q = AdmissionQueue::new();
-        q.admit(job(0, 0.0, AppId::Faiss), 5.0);
-        q.mark_running(0, 1.0, 0, false);
+        q.admit(job(0, 0.0, AppId::Faiss), 5.0).unwrap();
+        q.mark_running(0, 1.0, 0, false).unwrap();
         assert!(!q.expire_if_pending(0, 5.0), "running jobs never expire");
         assert_eq!(q.jobs[0].deadline_s, 5.0);
     }
@@ -318,11 +409,11 @@ mod tests {
     fn smallest_pending_footprint() {
         let mut q = AdmissionQueue::new();
         assert_eq!(q.smallest_pending_footprint_gib(), None);
-        q.admit(job(0, 0.0, AppId::Llama3Fp16), 5.0); // 16.5 GiB
-        q.admit(job(1, 0.0, AppId::Hotspot), 5.0); // 0.05 GiB
+        q.admit(job(0, 0.0, AppId::Llama3Fp16), 5.0).unwrap(); // 16.5 GiB
+        q.admit(job(1, 0.0, AppId::Hotspot), 5.0).unwrap(); // 0.05 GiB
         let f = q.smallest_pending_footprint_gib().unwrap();
         assert!((f - 0.05).abs() < 1e-12);
-        q.mark_running(1, 0.0, 0, false);
+        q.mark_running(1, 0.0, 0, false).unwrap();
         let f = q.smallest_pending_footprint_gib().unwrap();
         assert!((f - 16.5).abs() < 1e-9);
     }
@@ -330,8 +421,8 @@ mod tests {
     #[test]
     fn reject_resolves_job() {
         let mut q = AdmissionQueue::new();
-        q.admit(job(0, 3.0, AppId::Faiss), 5.0);
-        q.reject(0, 3.0);
+        q.admit(job(0, 3.0, AppId::Faiss), 5.0).unwrap();
+        q.reject(0, 3.0).unwrap();
         assert_eq!(q.count(JobState::Rejected), 1);
         assert_eq!(q.pending_len(), 0);
         assert!(q.all_resolved());
@@ -340,9 +431,9 @@ mod tests {
     #[test]
     fn handoff_lifecycle_and_forward_accounting() {
         let mut q = AdmissionQueue::new();
-        q.admit(job(0, 1.0, AppId::Llama3Fp16), 10.0); // abandons at 11.0
+        q.admit(job(0, 1.0, AppId::Llama3Fp16), 10.0).unwrap(); // abandons at 11.0
         assert_eq!(q.unresolved(), 1);
-        q.mark_forwarded(0);
+        q.mark_forwarded(0).unwrap();
         assert_eq!(q.pending_len(), 0);
         assert!(q.all_resolved());
         assert!(q.all_resolved_scan());
@@ -354,14 +445,81 @@ mod tests {
         // Destination queue: absolute deadline preserved, wait accounting
         // spans the handoff (original arrival, not re-arrival).
         let mut dst = AdmissionQueue::new();
-        dst.admit_handoff(job(0, 1.0, AppId::Llama3Fp16), 11.0);
+        dst.admit_handoff(job(0, 1.0, AppId::Llama3Fp16), 11.0).unwrap();
         assert!(dst.jobs[0].handoff);
         assert_eq!(dst.jobs[0].deadline_s, 11.0);
-        dst.mark_running(0, 5.0, 0, false);
-        dst.mark_completed(0, 9.0);
+        dst.mark_running(0, 5.0, 0, false).unwrap();
+        dst.mark_completed(0, 9.0).unwrap();
         let waits = dst.completed_waits();
         assert_eq!(waits.len(), 1);
         assert!((waits[0] - 4.0).abs() < 1e-12, "wait = placed - arrival");
+    }
+
+    #[test]
+    fn retry_lifecycle_mirrors_forwarding() {
+        // A faulted running job resolves as `Retrying` (no outcome, no
+        // horizon) and the retry id owns the real outcome — admitted with
+        // the original arrival and absolute deadline.
+        let mut q = AdmissionQueue::new();
+        q.admit(job(0, 1.0, AppId::Faiss), 10.0).unwrap();
+        q.mark_running(0, 2.0, 0, false).unwrap();
+        q.mark_retrying(0).unwrap();
+        assert!(q.all_resolved() && q.all_resolved_scan());
+        assert_eq!(q.count(JobState::Retrying), 1);
+        assert_eq!(q.horizon_s(), 0.0, "a retry never extends the horizon");
+        q.admit_retry(job(1, 1.0, AppId::Faiss), 11.0, false).unwrap();
+        assert!(!q.all_resolved());
+        q.mark_running(1, 6.0, 1, false).unwrap();
+        q.mark_completed(1, 9.0).unwrap();
+        assert!(q.all_resolved());
+        let waits = q.completed_waits();
+        assert_eq!(waits.len(), 1);
+        assert!((waits[0] - 5.0).abs() < 1e-12, "wait spans the retry");
+    }
+
+    #[test]
+    fn failed_is_a_terminal_outcome() {
+        let mut q = AdmissionQueue::new();
+        q.admit(job(0, 0.0, AppId::Faiss), 10.0).unwrap();
+        q.mark_running(0, 1.0, 0, false).unwrap();
+        q.mark_failed(0, 4.0).unwrap();
+        assert!(q.all_resolved() && q.all_resolved_scan());
+        assert_eq!(q.count(JobState::Failed), 1);
+        assert_eq!(q.horizon_s(), 4.0, "a lost job resolves at the fault");
+        // Terminal: nothing else may touch it.
+        assert!(q.mark_completed(0, 5.0).is_err());
+        assert!(q.mark_retrying(0).is_err());
+        assert!(!q.expire_if_pending(0, 20.0));
+    }
+
+    #[test]
+    fn illegal_transitions_are_typed_errors() {
+        // Every transition demanded on a job in the wrong state must come
+        // back as an `Err` — a malformed trace must never panic the CLI.
+        let mut q = AdmissionQueue::new();
+        q.admit(job(0, 0.0, AppId::Faiss), 10.0).unwrap();
+        // Pending: only place/reject/forward/expire are legal.
+        assert!(q.mark_completed(0, 1.0).is_err(), "complete a pending job");
+        assert!(q.mark_retrying(0).is_err(), "retry a pending job");
+        assert!(q.mark_failed(0, 1.0).is_err(), "fail a pending job");
+        // Out-of-range ids are errors too, not index panics.
+        assert!(q.mark_running(99, 1.0, 0, false).is_err());
+        assert!(q.reject(99, 1.0).is_err());
+        assert!(q.mark_forwarded(99).is_err());
+        q.mark_running(0, 1.0, 0, false).unwrap();
+        // Running: only complete/retry/fail are legal.
+        assert!(q.mark_running(0, 2.0, 0, false).is_err(), "double place");
+        assert!(q.reject(0, 2.0).is_err(), "reject a running job");
+        assert!(q.mark_forwarded(0).is_err(), "forward a running job");
+        q.mark_completed(0, 3.0).unwrap();
+        // Completed: terminal.
+        assert!(q.mark_completed(0, 4.0).is_err(), "double complete");
+        assert!(q.mark_running(0, 4.0, 0, false).is_err());
+        let err = q.mark_completed(0, 4.0).unwrap_err().to_string();
+        assert!(
+            err.contains("job 0") && err.contains("running"),
+            "error must name the job and the wanted state: {err}"
+        );
     }
 
     #[test]
@@ -371,10 +529,10 @@ mod tests {
         // dense in admission order, and ascending-id iteration stays FIFO
         // by that order.
         let mut q = AdmissionQueue::new();
-        q.admit(job(0, 1.0, AppId::Faiss), 10.0);
-        q.admit_handoff(job(1, 0.25, AppId::Hotspot), 9.0); // older arrival, later admission
-        q.admit(job(2, 2.0, AppId::Lammps), 10.0);
-        q.admit_handoff(job(3, 0.75, AppId::NekRs), 9.5);
+        q.admit(job(0, 1.0, AppId::Faiss), 10.0).unwrap();
+        q.admit_handoff(job(1, 0.25, AppId::Hotspot), 9.0).unwrap(); // older arrival, later admission
+        q.admit(job(2, 2.0, AppId::Lammps), 10.0).unwrap();
+        q.admit_handoff(job(3, 0.75, AppId::NekRs), 9.5).unwrap();
         assert_eq!(q.pending_ids().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
         for (i, j) in q.jobs.iter().enumerate() {
             assert_eq!(j.job.id as usize, i, "ids must stay dense");
@@ -389,10 +547,12 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "dense")]
     fn non_dense_admission_id_is_rejected() {
         let mut q = AdmissionQueue::new();
-        q.admit(job(1, 0.0, AppId::Faiss), 5.0); // id 1 into an empty queue
+        let err = q.admit(job(1, 0.0, AppId::Faiss), 5.0); // id 1 into an empty queue
+        assert!(err.is_err(), "non-dense id must be a typed error");
+        assert!(err.unwrap_err().to_string().contains("dense"));
+        assert_eq!(q.pending_len(), 0, "failed admission leaves no residue in the pending set");
     }
 
     #[test]
@@ -402,14 +562,14 @@ mod tests {
         // completed/expired/rejected totals — the origin's Forwarded state
         // resolves its loop accounting but contributes no outcome.
         let mut origin = AdmissionQueue::new();
-        origin.admit(job(0, 1.0, AppId::Llama3Fp16), 10.0);
-        origin.mark_forwarded(0);
+        origin.admit(job(0, 1.0, AppId::Llama3Fp16), 10.0).unwrap();
+        origin.mark_forwarded(0).unwrap();
         assert!(origin.all_resolved() && origin.all_resolved_scan());
         assert_eq!(origin.count(JobState::Forwarded), 1);
 
         let mut dst = AdmissionQueue::new();
-        dst.admit_handoff(job(0, 1.0, AppId::Llama3Fp16), 11.0);
-        dst.reject(0, 4.0);
+        dst.admit_handoff(job(0, 1.0, AppId::Llama3Fp16), 11.0).unwrap();
+        dst.reject(0, 4.0).unwrap();
         assert!(dst.all_resolved());
 
         let outcomes = |q: &AdmissionQueue| {
@@ -419,13 +579,17 @@ mod tests {
         assert_eq!(outcomes(&dst), 1, "destination owns the single outcome");
         assert_eq!(origin.horizon_s(), 0.0, "forwarding never extends the horizon");
         assert_eq!(dst.horizon_s(), 4.0);
-        // A handed-off job never forwards again — the one-hop invariant.
+        // A handed-off job never forwards again — the one-hop invariant,
+        // refused as a typed error (not a panic).
         let mut twice = AdmissionQueue::new();
-        twice.admit_handoff(job(0, 1.0, AppId::Faiss), 11.0);
-        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            twice.mark_forwarded(0)
-        }));
+        twice.admit_handoff(job(0, 1.0, AppId::Faiss), 11.0).unwrap();
+        let r = twice.mark_forwarded(0);
         assert!(r.is_err(), "double forward must be refused");
+        assert_eq!(
+            twice.jobs[0].state,
+            JobState::Pending,
+            "a refused forward leaves the job untouched"
+        );
     }
 
     #[test]
@@ -440,22 +604,22 @@ mod tests {
             AppId::Qiskit31,
         ];
         for (i, app) in apps.iter().enumerate() {
-            q.admit(job(i as u32, i as f64, *app), 20.0);
+            q.admit(job(i as u32, i as f64, *app), 20.0).unwrap();
             assert_eq!(
                 q.smallest_pending_footprint_gib(),
                 q.smallest_pending_footprint_scan()
             );
         }
-        q.mark_running(2, 2.5, 0, false);
-        q.mark_running(0, 3.0, 1, false);
-        q.reject(5, 5.0);
+        q.mark_running(2, 2.5, 0, false).unwrap();
+        q.mark_running(0, 3.0, 1, false).unwrap();
+        q.reject(5, 5.0).unwrap();
         assert_eq!(
             q.smallest_pending_footprint_gib(),
             q.smallest_pending_footprint_scan()
         );
         assert_eq!(q.all_resolved(), q.all_resolved_scan());
-        q.mark_completed(2, 6.0);
-        q.mark_completed(0, 7.0);
+        q.mark_completed(2, 6.0).unwrap();
+        q.mark_completed(0, 7.0).unwrap();
         assert!(q.expire_if_pending(1, 25.0));
         assert!(q.expire_if_pending(3, 25.0));
         assert!(q.expire_if_pending(4, 25.0));

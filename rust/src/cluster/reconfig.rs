@@ -94,7 +94,7 @@ pub fn plan_reconfig(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<Profile
 pub fn plan_reconfig_scan(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<ProfileId>)> {
     let target = plan_for_footprint(need_gib)?;
     for (g, gpu) in fleet.gpus.iter().enumerate() {
-        if gpu.reconfiguring() || !gpu.all_idle() {
+        if gpu.out_of_service() || !gpu.all_idle() {
             continue;
         }
         if gpu.layout == target {
@@ -170,5 +170,17 @@ mod tests {
         assert!(plan_reconfig_scan(&fleet, 16.0).is_none());
         // Unservable footprints never produce a plan.
         assert!(plan_reconfig(&fleet, 95.0).is_none());
+        // A cordoned GPU is no repartition candidate: GPU 1 (already the
+        // 2g class) goes out of service, GPU 0 drains — only GPU 0 is
+        // plannable, and the index and the scan agree on that.
+        let _ = fleet.cordon_gpu(1, 11.0);
+        fleet.finish_job(0, 0, 1, 11.0);
+        assert_eq!(plan_reconfig(&fleet, 16.0), Some((0, target.clone())));
+        assert_eq!(plan_reconfig(&fleet, 16.0), plan_reconfig_scan(&fleet, 16.0));
+        let _ = fleet.cordon_gpu(0, 12.0);
+        assert!(plan_reconfig(&fleet, 16.0).is_none());
+        assert_eq!(plan_reconfig(&fleet, 16.0), plan_reconfig_scan(&fleet, 16.0));
+        fleet.uncordon_gpu(0);
+        assert_eq!(plan_reconfig(&fleet, 16.0), plan_reconfig_scan(&fleet, 16.0));
     }
 }

@@ -56,7 +56,8 @@
 //! bit-for-bit against it, and `nodes > 1` runs are differentially tested
 //! across thread counts (see `tests/integration.rs`).
 
-use super::fleet::Fleet;
+use super::faults::FaultKind;
+use super::fleet::{Fleet, Orphan};
 use super::queue::{AdmissionQueue, JobState};
 use super::reconfig;
 use super::telemetry::{
@@ -67,6 +68,7 @@ use super::{PlacementCost, Planner, PolicyKind, ServeConfig, ServeMode, ServeRep
 use crate::gpu::{GpuUsage, PowerModel};
 use crate::mig::profile::{GiProfile, ProfileId};
 use crate::sim::{Engine, EventToken};
+use crate::util::Rng;
 use crate::util::json::Json;
 use crate::util::stats::{percentile, Accum};
 use crate::util::units::{ns_to_sec, sec_to_ns};
@@ -80,13 +82,19 @@ use std::time::Duration;
 
 /// Serving events, all local to one shard. `JobDone` names the finishing
 /// job: under slot-level batching several residents share one slot and
-/// complete independently.
+/// complete independently. `Fault`/`Recover` exist only when the fault
+/// plane is active — an inert plane schedules neither, so the engine's
+/// popped-event count (and hence every report byte) is untouched.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Ev {
     Arrival(u32),
     Deadline(u32),
     JobDone { gpu: usize, slot: usize, job: u32 },
     ReconfigDone(usize),
+    /// The fault plane's next failure draw lands on this (local) GPU.
+    Fault(usize),
+    /// A hard-failed GPU finishes repair and rejoins the fleet.
+    Recover(usize),
 }
 
 /// Reusable dispatch state: the pending-id snapshot buffer and the
@@ -108,13 +116,39 @@ impl DispatchScratch {
     }
 }
 
-/// Per-job metadata the queue does not carry: the fleet-global job id and,
-/// for cross-node handoffs, the absolute deadline fixed at the original
-/// admission.
+/// Per-job metadata the queue does not carry: the fleet-global job id,
+/// for cross-node handoffs the absolute deadline fixed at the original
+/// admission, and for fault-plane retries the re-admission terms.
 #[derive(Debug, Clone, Copy)]
 struct JobMeta {
     global_id: u32,
     handoff_deadline_s: Option<f64>,
+    /// `Some` when this scheduling entry is a fault-plane re-admission
+    /// of a killed running job.
+    retry: Option<RetryMeta>,
+}
+
+/// Re-admission terms of a fault-plane retry.
+#[derive(Debug, Clone, Copy)]
+struct RetryMeta {
+    /// Absolute abandonment deadline, unchanged by the restart (retries
+    /// compete honestly: the clock does not restart on a fault).
+    deadline_abs_s: f64,
+    /// Whether the job had already hopped shards before the fault — the
+    /// mark survives re-admission so it still never hops again.
+    handoff: bool,
+}
+
+/// Restart bookkeeping for one fleet-global job under the fault plane,
+/// carried across its re-admissions (which get fresh queue ids).
+#[derive(Debug, Clone, Copy)]
+struct RetryState {
+    /// Killed attempts so far (bounded by `FaultConfig::retries`).
+    attempts: u32,
+    /// Fraction of the job's full runtime preserved by checkpoints
+    /// across all killed attempts (0 = restart from scratch). The next
+    /// placement serves only the remaining `1 - preserved` of the job.
+    preserved: f64,
 }
 
 /// A job being handed off between shards at an epoch barrier.
@@ -237,6 +271,19 @@ pub(crate) struct Shard<S: Sink> {
     last_t: f64,
     handoffs_in: u32,
     handoffs_out: u32,
+    /// Per-GPU fault streams, seeded from the *fleet-global* GPU id
+    /// (`gpu_base + local id`) so the draws are invariant to the shard
+    /// partitioning. Empty when the fault plane is inert.
+    fault_rngs: Vec<Rng>,
+    /// First fleet-global GPU id owned by this shard.
+    gpu_base: u32,
+    /// Per-GPU flag: a transient fault poisoned the in-flight
+    /// reconfiguration, which must be redone when it lands.
+    reconfig_poisoned: Vec<bool>,
+    /// Fault-plane restart bookkeeping, keyed by fleet-global job id.
+    retry: BTreeMap<u32, RetryState>,
+    faults_injected: u32,
+    retries_done: u32,
     /// Telemetry hook; reads simulator state, never writes it.
     sink: S,
 }
@@ -283,8 +330,37 @@ impl<S: Sink> Shard<S> {
             last_t: 0.0,
             handoffs_in: 0,
             handoffs_out: 0,
+            fault_rngs: Vec::new(),
+            gpu_base: 0,
+            reconfig_poisoned: Vec::new(),
+            retry: BTreeMap::new(),
+            faults_injected: 0,
+            retries_done: 0,
             sink,
         })
+    }
+
+    /// Arm the fault plane: derive one stream per GPU from the serve
+    /// seed and its fleet-global id (never the shard partitioning), and
+    /// schedule each GPU's first failure. An inert config arms nothing —
+    /// no event is scheduled, so the run is byte-identical to the plane
+    /// being absent. Must be called before any event is processed.
+    fn arm_faults(&mut self, gpu_base: u32) {
+        self.gpu_base = gpu_base;
+        if !self.params.faults.active() {
+            return;
+        }
+        let n = self.fleet.gpus.len();
+        self.reconfig_poisoned = vec![false; n];
+        for g in 0..n {
+            let mut rng = super::faults::FaultConfig::gpu_stream(
+                self.params.seed,
+                (gpu_base as usize) + g,
+            );
+            let ttf = self.params.faults.draw_ttf(&mut rng);
+            self.engine.schedule_at(sec_to_ns(ttf).max(1), Ev::Fault(g));
+            self.fault_rngs.push(rng);
+        }
     }
 
     /// Schedule a fresh arrival (fires at its own arrival time). The job's
@@ -300,6 +376,7 @@ impl<S: Sink> Shard<S> {
         self.metas.push(JobMeta {
             global_id: gid,
             handoff_deadline_s: None,
+            retry: None,
         });
         self.engine.schedule_at(fire_ns, Ev::Arrival(lid));
         self.expected += 1;
@@ -318,6 +395,7 @@ impl<S: Sink> Shard<S> {
         self.metas.push(JobMeta {
             global_id: h.global_id,
             handoff_deadline_s: Some(h.deadline_abs_s),
+            retry: None,
         });
         self.engine.schedule_at(sec_to_ns(fire_at_s), Ev::Arrival(lid));
         self.expected += 1;
@@ -339,7 +417,9 @@ impl<S: Sink> Shard<S> {
             self.sink
                 .emit(t_ns, Some(gid), EventKind::Handoff { app, dest, reason });
         }
-        self.queue.mark_forwarded(qid);
+        self.queue
+            .mark_forwarded(qid)
+            .expect("the dispatcher only forwards pending, never-hopped jobs");
         self.handoffs_out += 1;
     }
 
@@ -413,10 +493,12 @@ impl<S: Sink> Shard<S> {
                 self.qid_to_lid.push(lid);
                 self.deadline_tokens.push(None);
                 let meta = self.metas[lid as usize];
-                match meta.handoff_deadline_s {
-                    None => self.queue.admit(job, self.params.deadline_s),
-                    Some(abs) => self.queue.admit_handoff(job, abs),
+                match (meta.retry, meta.handoff_deadline_s) {
+                    (Some(r), _) => self.queue.admit_retry(job, r.deadline_abs_s, r.handoff),
+                    (None, None) => self.queue.admit(job, self.params.deadline_s),
+                    (None, Some(abs)) => self.queue.admit_handoff(job, abs),
                 }
+                .expect("a fresh queue id admits exactly once");
                 if S::ENABLED {
                     let deadline_ns = sec_to_ns(self.queue.jobs[qid as usize].deadline_s);
                     self.sink.emit(
@@ -433,10 +515,21 @@ impl<S: Sink> Shard<S> {
                     // The queue's deadline_s is the single source of truth
                     // for when this job abandons.
                     let abandon_s = self.queue.jobs[qid as usize].deadline_s;
-                    self.deadline_tokens[qid as usize] = Some(
-                        self.engine
-                            .schedule_at(sec_to_ns(abandon_s), Ev::Deadline(qid)),
-                    );
+                    let abandon_ns = sec_to_ns(abandon_s);
+                    if abandon_ns >= time_ns {
+                        self.deadline_tokens[qid as usize] = Some(
+                            self.engine.schedule_at(abandon_ns, Ev::Deadline(qid)),
+                        );
+                    } else {
+                        // Only a fault-plane retry can re-admit past its
+                        // absolute deadline: the client already gave up
+                        // while the killed attempt was running.
+                        let expired = self.queue.expire_if_pending(qid, now);
+                        if S::ENABLED && expired {
+                            self.sink
+                                .emit(time_ns, Some(meta.global_id), EventKind::Expire { app });
+                        }
+                    }
                     dispatch(
                         &self.params,
                         self.mode,
@@ -452,9 +545,12 @@ impl<S: Sink> Shard<S> {
                         &mut self.sink,
                         &self.metas,
                         &self.qid_to_lid,
+                        &self.retry,
                     );
                 } else {
-                    self.queue.reject(qid, now);
+                    self.queue
+                        .reject(qid, now)
+                        .expect("a just-admitted job is pending");
                     if S::ENABLED {
                         self.sink
                             .emit(time_ns, Some(meta.global_id), EventKind::Reject { app });
@@ -472,8 +568,16 @@ impl<S: Sink> Shard<S> {
             }
             Ev::JobDone { gpu, slot, job } => {
                 if self.fleet.finish_job(gpu, slot, job, now) {
-                    self.queue.mark_completed(job, now);
+                    self.queue
+                        .mark_completed(job, now)
+                        .expect("a resident finishing in the fleet is running");
                     self.power.on_finish(gpu, slot, job);
+                    if !self.retry.is_empty() {
+                        // A retried job that finally completed no longer
+                        // needs its checkpoint state.
+                        let gid = self.metas[self.qid_to_lid[job as usize] as usize].global_id;
+                        self.retry.remove(&gid);
+                    }
                     if S::ENABLED {
                         let qj = &self.queue.jobs[job as usize];
                         let (app, arrival_s, placed_s, deadline_s, offloaded) = (
@@ -517,11 +621,22 @@ impl<S: Sink> Shard<S> {
                         &mut self.sink,
                         &self.metas,
                         &self.qid_to_lid,
+                        &self.retry,
                     );
                 }
             }
             Ev::ReconfigDone(gpu) => {
-                self.fleet.finish_reconfig(gpu);
+                if !self.reconfig_poisoned.is_empty() && self.reconfig_poisoned[gpu] {
+                    // A transient driver fault poisoned this repartition:
+                    // the latency was paid but the pending layout never
+                    // lands — the old layout returns to service and the
+                    // planner re-plans on the next dispatch if the need
+                    // persists.
+                    self.reconfig_poisoned[gpu] = false;
+                    self.fleet.abort_reconfig(gpu);
+                } else {
+                    self.fleet.finish_reconfig(gpu);
+                }
                 self.power.on_reconfig_done(gpu, self.fleet.gpus[gpu].slots.len());
                 dispatch(
                     &self.params,
@@ -538,7 +653,224 @@ impl<S: Sink> Shard<S> {
                     &mut self.sink,
                     &self.metas,
                     &self.qid_to_lid,
+                    &self.retry,
                 );
+            }
+            Ev::Fault(g) => self.on_fault(time_ns, now, g),
+            Ev::Recover(g) => self.on_recover(time_ns, now, g),
+        }
+    }
+
+    /// Whether serving work remains (arrivals still to fire, unresolved
+    /// jobs, or the cross-node stream still open). The fault plane winds
+    /// down when this goes false: no further failure or next-fault event
+    /// is scheduled, so the engine drains and `run_until(None)`
+    /// terminates.
+    fn work_remains(&self) -> bool {
+        let resolved = match self.mode {
+            ServeMode::Indexed => self.queue.all_resolved(),
+            ServeMode::NaiveOracle => self.queue.all_resolved_scan(),
+        };
+        self.queue.jobs.len() < self.expected as usize || !resolved || self.stream_open
+    }
+
+    /// The fault plane's next failure lands on local GPU `g`.
+    fn on_fault(&mut self, time_ns: u64, now: f64, g: usize) {
+        if !self.work_remains() {
+            return; // plane winds down with the run
+        }
+        debug_assert!(
+            !self.fleet.gpus[g].cordoned(),
+            "a cordoned GPU draws no faults until it recovers"
+        );
+        let global_gpu = self.gpu_base + g as u32;
+        match self.params.faults.draw_kind(&mut self.fault_rngs[g]) {
+            FaultKind::Gpu => {
+                self.faults_injected += 1;
+                if S::ENABLED {
+                    self.sink.emit(
+                        time_ns,
+                        None,
+                        EventKind::Fault {
+                            gpu: global_gpu,
+                            kind: FaultKind::Gpu,
+                            slot: None,
+                        },
+                    );
+                }
+                let orphans = self.fleet.cordon_gpu(g, now);
+                if S::ENABLED {
+                    self.sink
+                        .emit(time_ns, None, EventKind::Cordon { gpu: global_gpu });
+                }
+                self.reap_orphans(time_ns, now, g, &orphans);
+                let ttr = self.params.faults.draw_ttr(&mut self.fault_rngs[g]);
+                self.engine.schedule_at(
+                    time_ns.saturating_add(sec_to_ns(ttr).max(1)),
+                    Ev::Recover(g),
+                );
+            }
+            FaultKind::Slice => {
+                self.faults_injected += 1;
+                let nslots = self.fleet.gpus[g].slots.len();
+                if nslots == 0 {
+                    // Mid-repartition there may be no slices to hit; the
+                    // ECC error lands on a GPU with nothing to kill.
+                    if S::ENABLED {
+                        self.sink.emit(
+                            time_ns,
+                            None,
+                            EventKind::Fault {
+                                gpu: global_gpu,
+                                kind: FaultKind::Slice,
+                                slot: None,
+                            },
+                        );
+                    }
+                } else {
+                    let slot = self.fault_rngs[g].below(nslots as u64) as usize;
+                    if S::ENABLED {
+                        self.sink.emit(
+                            time_ns,
+                            None,
+                            EventKind::Fault {
+                                gpu: global_gpu,
+                                kind: FaultKind::Slice,
+                                slot: Some(slot as u32),
+                            },
+                        );
+                    }
+                    let orphans = self.fleet.drain_slot(g, slot, now);
+                    self.reap_orphans(time_ns, now, g, &orphans);
+                }
+                self.schedule_next_fault(time_ns, g);
+            }
+            FaultKind::Reconfig => {
+                // The transient hazard only bites a driver operation in
+                // flight: the repartition aborts and must be redone.
+                if self.fleet.gpus[g].reconfiguring() {
+                    self.faults_injected += 1;
+                    self.reconfig_poisoned[g] = true;
+                    if S::ENABLED {
+                        self.sink.emit(
+                            time_ns,
+                            None,
+                            EventKind::Fault {
+                                gpu: global_gpu,
+                                kind: FaultKind::Reconfig,
+                                slot: None,
+                            },
+                        );
+                    }
+                }
+                self.schedule_next_fault(time_ns, g);
+            }
+        }
+    }
+
+    /// A hard-failed GPU finished repair: it rejoins every placement
+    /// surface (the epoch bump invalidates the dispatch memo, so pending
+    /// jobs immediately retry against the returned capacity).
+    fn on_recover(&mut self, time_ns: u64, now: f64, g: usize) {
+        self.fleet.uncordon_gpu(g);
+        if S::ENABLED {
+            self.sink.emit(
+                time_ns,
+                None,
+                EventKind::Recover {
+                    gpu: self.gpu_base + g as u32,
+                },
+            );
+        }
+        if self.work_remains() {
+            self.schedule_next_fault(time_ns, g);
+        }
+        dispatch(
+            &self.params,
+            self.mode,
+            now,
+            time_ns,
+            &mut self.fleet,
+            &mut self.queue,
+            &mut self.planner,
+            &mut self.engine,
+            &mut self.power,
+            &mut self.deadline_tokens,
+            &mut self.scratch,
+            &mut self.sink,
+            &self.metas,
+            &self.qid_to_lid,
+            &self.retry,
+        );
+    }
+
+    fn schedule_next_fault(&mut self, time_ns: u64, g: usize) {
+        let ttf = self.params.faults.draw_ttf(&mut self.fault_rngs[g]);
+        self.engine
+            .schedule_at(time_ns.saturating_add(sec_to_ns(ttf).max(1)), Ev::Fault(g));
+    }
+
+    /// Resolve every job a fault just killed: requeue it as a bounded
+    /// retry (fresh scheduling id, original arrival time and absolute
+    /// deadline, checkpoint-preserved progress) or fail it terminally
+    /// when the budget is spent. Orphans arrive in (slot, admission)
+    /// order from the fleet, so the re-admission order is deterministic.
+    fn reap_orphans(&mut self, time_ns: u64, now: f64, g: usize, orphans: &[Orphan]) {
+        for o in orphans {
+            self.power.on_finish(g, o.slot, o.job);
+            let lid = self.qid_to_lid[o.job as usize];
+            let gid = self.metas[lid as usize].global_id;
+            let qj = &self.queue.jobs[o.job as usize];
+            let (app, arrival_s, deadline_abs_s, was_handoff) =
+                (qj.job.app, qj.job.arrival_s, qj.deadline_s, qj.handoff);
+            // Fold this attempt's checkpointed progress into the job's
+            // preserved fraction: the attempt served the remaining
+            // `1 - f` of the job in `until - started` seconds, so
+            // `preserved_s / attempt_s` of that remainder survives.
+            let entry = self.retry.entry(gid).or_insert(RetryState {
+                attempts: 0,
+                preserved: 0.0,
+            });
+            let attempt_s = o.until_s - o.started_s;
+            if attempt_s > 0.0 {
+                let kept = self.params.faults.preserved_s(now - o.started_s).min(attempt_s);
+                entry.preserved += kept / attempt_s * (1.0 - entry.preserved);
+            }
+            entry.attempts += 1;
+            let attempt = entry.attempts;
+            if attempt <= self.params.faults.retries {
+                self.queue
+                    .mark_retrying(o.job)
+                    .expect("a fault orphan is always a running job");
+                self.retries_done += 1;
+                if S::ENABLED {
+                    self.sink
+                        .emit(time_ns, Some(gid), EventKind::Retry { app, attempt });
+                }
+                let new_lid = self.jobs.len() as u32;
+                self.jobs.push(Job {
+                    id: new_lid,
+                    app,
+                    arrival_s,
+                });
+                self.metas.push(JobMeta {
+                    global_id: gid,
+                    handoff_deadline_s: None,
+                    retry: Some(RetryMeta {
+                        deadline_abs_s,
+                        handoff: was_handoff,
+                    }),
+                });
+                self.engine.schedule_at(time_ns, Ev::Arrival(new_lid));
+                self.expected += 1;
+            } else {
+                self.retry.remove(&gid);
+                self.queue
+                    .mark_failed(o.job, now)
+                    .expect("a fault orphan is always a running job");
+                if S::ENABLED {
+                    self.sink.emit(time_ns, Some(gid), EventKind::Fail { app });
+                }
             }
         }
     }
@@ -624,8 +956,14 @@ impl<S: Sink> Shard<S> {
                 let qj = &self.queue.jobs[qid as usize];
                 let lid = self.qid_to_lid[qid as usize];
                 let meta = &self.metas[lid as usize];
-                if meta.handoff_deadline_s.is_some() {
+                if meta.handoff_deadline_s.is_some() || qj.handoff {
                     continue; // at most one hop per job
+                }
+                if meta.retry.is_some() {
+                    // A fault-plane retry stays on the shard that holds
+                    // its checkpoint/restore state (see ROADMAP for
+                    // cross-shard restore as a follow-up).
+                    continue;
                 }
                 if qj.job.arrival_s > barrier_s - self.lookahead_s {
                     continue; // has not waited a full epoch yet
@@ -711,6 +1049,7 @@ fn run_single_impl<S: Sink>(
     sink: S,
 ) -> crate::Result<(ServeReport, Option<TelemetryReport>)> {
     let mut shard = Shard::new(0, cfg.gpus, cfg, mode, 0.0, false, sink)?;
+    shard.arm_faults(0);
     for job in jobs {
         shard.push_arrival(job.clone());
     }
@@ -791,7 +1130,11 @@ fn merge_report<S: Sink>(cfg: &ServeConfig, shards: &[Shard<S>]) -> ServeReport 
         completed,
         expired: count(JobState::Expired),
         rejected: count(JobState::Rejected),
+        failed: count(JobState::Failed),
         offloaded,
+        faults: shards.iter().map(|s| s.faults_injected).sum(),
+        retries: shards.iter().map(|s| s.retries_done).sum(),
+        faults_active: cfg.faults.active(),
         reconfigs: shards
             .iter()
             .map(|s| s.fleet.gpus.iter().map(|g| g.reconfigs).sum::<u32>())
@@ -830,6 +1173,7 @@ fn dispatch<S: Sink>(
     sink: &mut S,
     metas: &[JobMeta],
     qid_to_lid: &[u32],
+    retry: &BTreeMap<u32, RetryState>,
 ) {
     let DispatchScratch {
         ids,
@@ -869,7 +1213,9 @@ fn dispatch<S: Sink>(
             }
         };
         if let Some((g, s, c)) = placed {
-            queue.mark_running(id, now, g, c.offloaded);
+            queue
+                .mark_running(id, now, g, c.offloaded)
+                .expect("dispatch only visits pending ids");
             if let Some(tok) = deadline_tokens[id as usize].take() {
                 engine.cancel(tok);
             }
@@ -879,7 +1225,19 @@ fn dispatch<S: Sink>(
             // admission-time runtime (the deterministic static-slowdown
             // model: a later offloader joining the link does not re-fit
             // those already streaming over it — see ROADMAP follow-ups).
-            let until = now + c.runtime_s;
+            // A retry restores from its last checkpoint: the preserved
+            // fraction of the job is already done, so only the remainder
+            // is served (the branch keeps inert-path runtimes
+            // bit-identical — no float multiply sneaks in).
+            let frac = retry
+                .get(&metas[qid_to_lid[id as usize] as usize].global_id)
+                .map_or(0.0, |r| r.preserved);
+            let runtime_s = if frac > 0.0 {
+                c.runtime_s * (1.0 - frac)
+            } else {
+                c.runtime_s
+            };
+            let until = now + runtime_s;
             fleet.start_job(
                 g,
                 s,
@@ -908,7 +1266,7 @@ fn dispatch<S: Sink>(
                         occupancy: sl.occupancy() as u32,
                         offloaded: c.offloaded,
                         share,
-                        runtime_ns: sec_to_ns(c.runtime_s),
+                        runtime_ns: sec_to_ns(runtime_s),
                     },
                 );
             }
@@ -1348,9 +1706,13 @@ fn serve_sharded_impl<S: Sink>(
 
     let nodes = scfg.nodes as usize;
     let mut shards = Vec::with_capacity(nodes);
+    // Fault streams are seeded by *fleet-global* GPU id — a prefix sum of
+    // the per-shard widths — so the merged report is bit-identical no
+    // matter how the fleet is sharded or threaded.
+    let mut gpu_base = 0u32;
     for s in 0..nodes {
         let g = gpus_for_shard(cfg.gpus, scfg.nodes, s as u32);
-        shards.push(Shard::new(
+        let mut sh = Shard::new(
             s,
             g,
             &cfg,
@@ -1360,7 +1722,10 @@ fn serve_sharded_impl<S: Sink>(
             // candidates — don't pay the per-barrier collection.
             scfg.forward && scfg.nodes > 1,
             mk_sink(s),
-        )?);
+        )?;
+        sh.arm_faults(gpu_base);
+        gpu_base += g;
+        shards.push(sh);
     }
     let mut tel = if S::ENABLED {
         Some(TelemetryReport::new())
@@ -2068,6 +2433,107 @@ mod tests {
         assert_eq!(lids, vec![0, 1, 2, 3]);
         assert!(shard.queue.all_resolved());
         assert!(shard.queue.all_resolved_scan());
+    }
+
+    #[test]
+    fn inert_fault_spec_matches_default_bit_for_bit() {
+        // `--faults none` must be indistinguishable from never having a
+        // fault plane: zero weight ⇒ zero scheduled events ⇒ identical
+        // popped-event counts and identical report bytes.
+        let mut with_none = base_cfg();
+        with_none.faults =
+            super::super::faults::FaultConfig::from_spec("none", 40.0, 5.0, 3, 1.0).unwrap();
+        let a = super::super::serve(&base_cfg()).unwrap();
+        let b = super::super::serve(&with_none).unwrap();
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+        assert!(!b.faults_active);
+    }
+
+    #[test]
+    fn faulted_runs_conserve_jobs_and_inject_faults() {
+        // A hot fault plane (MTTF well under the run length) must inject
+        // failures, retry orphans, and still resolve every admitted job
+        // exactly once: completed + expired + rejected + failed == jobs.
+        let mut cfg = base_cfg();
+        cfg.faults = super::super::faults::FaultConfig::from_spec(
+            "gpu,slice:2,reconfig",
+            10.0,
+            3.0,
+            2,
+            1.0,
+        )
+        .unwrap();
+        for mode in [ServeMode::Indexed, ServeMode::NaiveOracle] {
+            let r = super::super::serve_with(&cfg, mode).unwrap();
+            assert!(r.faults_active);
+            assert!(r.faults > 0, "MTTF 10 s/GPU over a ~30 s run must fire");
+            assert_eq!(
+                r.completed + r.expired + r.rejected + r.failed,
+                r.jobs,
+                "mode {mode:?}"
+            );
+            assert!(r.completed > 0, "the fleet still serves between faults");
+        }
+        // Indexed and the naive oracle agree bit-for-bit under faults.
+        let i = super::super::serve_with(&cfg, ServeMode::Indexed).unwrap();
+        let n = super::super::serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
+        assert_eq!(i.to_json().pretty(), n.to_json().pretty());
+    }
+
+    #[test]
+    fn faulted_sharded_runs_are_thread_invariant() {
+        // Fault streams are keyed by fleet-global GPU id, so the merged
+        // report must not depend on the worker count.
+        let mut base = base_cfg();
+        base.faults =
+            super::super::faults::FaultConfig::from_spec("gpu,slice", 50.0, 4.0, 2, 2.0).unwrap();
+        let mut first: Option<String> = None;
+        for threads in [1u32, 2, 4] {
+            let mut scfg = ShardServeConfig::new(base.clone(), 4, threads);
+            scfg.route = RouteKind::LeastLoaded;
+            let r = serve_sharded(&scfg).unwrap();
+            let rep = &r.report;
+            assert_eq!(
+                rep.completed + rep.expired + rep.rejected + rep.failed,
+                rep.jobs
+            );
+            let key = rep.to_json().pretty();
+            match &first {
+                None => first = Some(key),
+                Some(f) => assert_eq!(*f, key, "threads={threads}"),
+            }
+        }
+    }
+
+    #[test]
+    fn exhausted_retry_budget_fails_terminally() {
+        // With zero retries every orphan dies `Failed` on its first
+        // fault; with a generous budget and fast repair, strictly fewer
+        // jobs fail (retries get another chance to finish).
+        let mut none = base_cfg();
+        none.faults =
+            super::super::faults::FaultConfig::from_spec("gpu", 8.0, 2.0, 0, 1.0).unwrap();
+        let mut many = none.clone();
+        many.faults.retries = 5;
+        let r0 = super::super::serve(&none).unwrap();
+        let r5 = super::super::serve(&many).unwrap();
+        assert!(r0.faults > 0);
+        assert_eq!(r0.retries, 0, "no budget, no retries");
+        assert!(r5.retries > 0, "budget spent on requeues");
+        assert_eq!(
+            r0.completed + r0.expired + r0.rejected + r0.failed,
+            r0.jobs
+        );
+        assert_eq!(
+            r5.completed + r5.expired + r5.rejected + r5.failed,
+            r5.jobs
+        );
+        assert!(
+            r5.failed <= r0.failed,
+            "a retry budget never fails more jobs: {} vs {}",
+            r5.failed,
+            r0.failed
+        );
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! accumulators, and never perturbs a decision — so a traced run's
 //! `ServeReport` is byte-identical to an untraced one.
 
+use crate::cluster::faults::FaultKind;
 use crate::cluster::fleet::Fleet;
 use crate::cluster::queue::AdmissionQueue;
 use crate::mig::profile::{ALL_PROFILES, NUM_PROFILES};
@@ -118,6 +119,25 @@ pub enum EventKind {
     /// have admitted the job by offloading — but the host pool could not
     /// park the spill.
     OffloadDenied { app: AppId },
+    /// The fault plane injected a failure on `gpu`. `slot` names the
+    /// victim slice for `FaultKind::Slice`; whole-GPU and reconfig
+    /// faults carry `None`.
+    Fault {
+        gpu: u32,
+        kind: FaultKind,
+        slot: Option<u32>,
+    },
+    /// `gpu` went out of service after a hard failure: every placement
+    /// surface excludes it until the matching `Recover`.
+    Cordon { gpu: u32 },
+    /// `gpu` finished repair and rejoined the placement surfaces.
+    Recover { gpu: u32 },
+    /// A fault killed this job's running instance and it re-enters the
+    /// queue for attempt `attempt + 1` (of `1 + retries`).
+    Retry { app: AppId, attempt: u32 },
+    /// A fault killed this job's running instance with the retry budget
+    /// spent: the job is lost.
+    Fail { app: AppId },
 }
 
 impl EventKind {
@@ -131,6 +151,11 @@ impl EventKind {
             EventKind::Handoff { .. } => "handoff",
             EventKind::Reconfig { .. } => "reconfig",
             EventKind::OffloadDenied { .. } => "offload_denied",
+            EventKind::Fault { .. } => "fault",
+            EventKind::Cordon { .. } => "cordon",
+            EventKind::Recover { .. } => "recover",
+            EventKind::Retry { .. } => "retry",
+            EventKind::Fail { .. } => "fail",
         }
     }
 }
@@ -219,6 +244,21 @@ impl TraceEvent {
                     .set("from", from.as_str())
                     .set("to", to.as_str())
                     .set("trigger", trigger.name());
+            }
+            EventKind::Fault { gpu, kind, slot } => {
+                j.set("gpu", *gpu).set("fault", kind.label());
+                if let Some(s) = slot {
+                    j.set("slot", *s);
+                }
+            }
+            EventKind::Cordon { gpu } | EventKind::Recover { gpu } => {
+                j.set("gpu", *gpu);
+            }
+            EventKind::Retry { app, attempt } => {
+                j.set("app", app.name()).set("attempt", *attempt);
+            }
+            EventKind::Fail { app } => {
+                j.set("app", app.name());
             }
         }
         j
@@ -885,13 +925,15 @@ impl TelemetryReport {
 // ---------------------------------------------------------------------------
 
 /// Conservation checks over a merged event trace: every admitted job
-/// terminates exactly once, placed jobs complete, and forwarded jobs
-/// re-arrive exactly once.
+/// terminates exactly once, placed jobs complete (or are killed by a
+/// fault with a matching retry/fail), forwarded jobs re-arrive exactly
+/// once, and retried jobs re-admit exactly `retries` times.
 pub mod audit {
     use super::{EventKind, TraceEvent};
     use crate::util::json::Json;
     use anyhow::{bail, ensure, Context};
     use std::collections::BTreeMap;
+    use std::io::BufRead;
 
     /// The reduced per-job view the audit runs over.
     #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -902,6 +944,8 @@ pub mod audit {
         Expire,
         Reject,
         Handoff,
+        Retry,
+        Fail,
     }
 
     /// Totals of a passing audit.
@@ -912,14 +956,23 @@ pub mod audit {
         pub expired: u64,
         pub rejected: u64,
         pub handoffs: u64,
+        pub failed: u64,
+        pub retries: u64,
     }
 
     impl AuditReport {
         pub fn summary(&self) -> String {
-            format!(
+            let mut s = format!(
                 "audit ok: {} jobs conserved ({} completed, {} expired, {} rejected, {} handoffs)",
                 self.jobs, self.completed, self.expired, self.rejected, self.handoffs
-            )
+            );
+            if self.failed > 0 || self.retries > 0 {
+                s.push_str(&format!(
+                    " [faults: {} retries, {} failed]",
+                    self.retries, self.failed
+                ));
+            }
+            s
         }
     }
 
@@ -932,15 +985,21 @@ pub mod audit {
         expires: u64,
         rejects: u64,
         handoffs: u64,
+        retries: u64,
+        fails: u64,
     }
 
     fn check(jobs: BTreeMap<u32, JobLedger>) -> crate::Result<AuditReport> {
         let mut r = AuditReport::default();
         for (id, l) in &jobs {
+            // Each fault-plane retry re-enters the queue through a fresh
+            // primary admission, so a job admits exactly 1 + retries
+            // times (and once more per handoff, tracked separately).
             ensure!(
-                l.admits == 1,
-                "job {id}: admitted {} times (exactly one primary admission required)",
-                l.admits
+                l.admits == 1 + l.retries,
+                "job {id}: {} primary admissions vs {} retries (exactly 1 + retries required)",
+                l.admits,
+                l.retries
             );
             ensure!(
                 l.handoffs <= 1,
@@ -953,22 +1012,28 @@ pub mod audit {
                 l.handoffs,
                 l.readmits
             );
-            let terminals = l.completes + l.expires + l.rejects;
+            let terminals = l.completes + l.expires + l.rejects + l.fails;
             ensure!(
                 terminals == 1,
-                "job {id}: {terminals} terminal events (exactly one of complete/expire/reject required)"
+                "job {id}: {terminals} terminal events (exactly one of complete/expire/reject/fail required)"
             );
+            // Every placement ends exactly one way: it completes, or a
+            // fault kills it into a retry, or into a terminal fail.
             ensure!(
-                l.places == l.completes,
-                "job {id}: {} placements vs {} completions (every placed job completes exactly once)",
+                l.places == l.completes + l.retries + l.fails,
+                "job {id}: {} placements vs {} completions + {} retries + {} fails",
                 l.places,
-                l.completes
+                l.completes,
+                l.retries,
+                l.fails
             );
             r.jobs += 1;
             r.completed += l.completes;
             r.expired += l.expires;
             r.rejected += l.rejects;
             r.handoffs += l.handoffs;
+            r.failed += l.fails;
+            r.retries += l.retries;
         }
         Ok(r)
     }
@@ -983,6 +1048,8 @@ pub mod audit {
             AuditKind::Expire => l.expires += 1,
             AuditKind::Reject => l.rejects += 1,
             AuditKind::Handoff => l.handoffs += 1,
+            AuditKind::Retry => l.retries += 1,
+            AuditKind::Fail => l.fails += 1,
         }
     }
 
@@ -997,7 +1064,13 @@ pub mod audit {
                 EventKind::Expire { .. } => AuditKind::Expire,
                 EventKind::Reject { .. } => AuditKind::Reject,
                 EventKind::Handoff { .. } => AuditKind::Handoff,
-                EventKind::Reconfig { .. } | EventKind::OffloadDenied { .. } => continue,
+                EventKind::Retry { .. } => AuditKind::Retry,
+                EventKind::Fail { .. } => AuditKind::Fail,
+                EventKind::Reconfig { .. }
+                | EventKind::OffloadDenied { .. }
+                | EventKind::Fault { .. }
+                | EventKind::Cordon { .. }
+                | EventKind::Recover { .. } => continue,
             };
             let id = match e.job {
                 Some(id) => id,
@@ -1008,17 +1081,25 @@ pub mod audit {
         check(jobs)
     }
 
-    /// Audit a JSONL trace file's text (`migsim audit-trace`). Lines
-    /// whose `type` is not `event`, and event kinds without lifecycle
-    /// meaning, are skipped.
+    /// Audit a JSONL trace already in memory. Thin wrapper over
+    /// [`audit_jsonl_reader`] for callers that hold the whole text.
     pub fn audit_jsonl(text: &str) -> crate::Result<AuditReport> {
+        audit_jsonl_reader(text.as_bytes())
+    }
+
+    /// Audit a JSONL trace streamed line-by-line from any reader
+    /// (`migsim audit-trace` feeds a buffered file handle, so traces
+    /// larger than memory audit in one pass). Lines whose `type` is not
+    /// `event`, and event kinds without lifecycle meaning, are skipped.
+    pub fn audit_jsonl_reader<R: BufRead>(reader: R) -> crate::Result<AuditReport> {
         let mut jobs: BTreeMap<u32, JobLedger> = BTreeMap::new();
         let mut saw_event = false;
-        for (lineno, line) in text.lines().enumerate() {
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line.with_context(|| format!("line {}: read failed", lineno + 1))?;
             if line.trim().is_empty() {
                 continue;
             }
-            let doc = Json::parse(line)
+            let doc = Json::parse(&line)
                 .map_err(anyhow::Error::from)
                 .with_context(|| format!("line {}: invalid JSON", lineno + 1))?;
             if doc.get("type").and_then(|t| t.as_str()) != Some("event") {
@@ -1037,6 +1118,8 @@ pub mod audit {
                 "expire" => AuditKind::Expire,
                 "reject" => AuditKind::Reject,
                 "handoff" => AuditKind::Handoff,
+                "retry" => AuditKind::Retry,
+                "fail" => AuditKind::Fail,
                 _ => continue,
             };
             let id = doc
@@ -1230,6 +1313,105 @@ mod tests {
             ev(2, 2, 0, EventKind::Expire { app: AppId::Faiss }),
         ];
         assert!(audit::audit(&events).is_err(), "vanished handoff must fail");
+    }
+
+    #[test]
+    fn audit_tracks_fault_retries_and_failures() {
+        let place = |t: u64, seq: u64, job: u32| {
+            ev(
+                t,
+                seq,
+                job,
+                EventKind::Place {
+                    app: AppId::Faiss,
+                    gpu: 0,
+                    slot: 0,
+                    class: "1g.12gb",
+                    occupancy: 1,
+                    offloaded: false,
+                    share: 1,
+                    runtime_ns: 500,
+                },
+            )
+        };
+        let complete = EventKind::Complete {
+            app: AppId::Faiss,
+            wait_ns: 10,
+            service_ns: 500,
+            slack_ns: 490,
+            offloaded: false,
+        };
+        // Job 0: admit → place → fault retry → re-admit → place → complete.
+        // Job 1: admit → place → fault with budget spent → fail.
+        // Cordon/recover/fault events carry no job and are skipped.
+        let events = vec![
+            admit(0, 0, 0, false),
+            place(5, 1, 0),
+            ev(7, 2, 0, EventKind::Retry { app: AppId::Faiss, attempt: 1 }),
+            admit(7, 3, 0, false),
+            place(8, 4, 0),
+            ev(500, 5, 0, complete.clone()),
+            admit(1, 6, 1, false),
+            place(6, 7, 1),
+            ev(9, 8, 1, EventKind::Fail { app: AppId::Faiss }),
+            TraceEvent {
+                t_ns: 7,
+                shard: 0,
+                seq: 9,
+                job: None,
+                kind: EventKind::Cordon { gpu: 0 },
+            },
+            TraceEvent {
+                t_ns: 90,
+                shard: 0,
+                seq: 10,
+                job: None,
+                kind: EventKind::Recover { gpu: 0 },
+            },
+        ];
+        let r = audit::audit(&events).unwrap();
+        assert_eq!(r.jobs, 2);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.failed, 1);
+        assert_eq!(r.retries, 1);
+        assert!(r.summary().contains("1 retries, 1 failed"));
+
+        // A retry event without the matching re-admission must fail.
+        let events = vec![
+            admit(0, 0, 0, false),
+            place(5, 1, 0),
+            ev(7, 2, 0, EventKind::Retry { app: AppId::Faiss, attempt: 1 }),
+        ];
+        assert!(audit::audit(&events).is_err(), "retry without re-admission");
+        // A fail is terminal: a completion after it is a double-terminal.
+        let events = vec![
+            admit(0, 0, 0, false),
+            place(5, 1, 0),
+            place(6, 2, 0),
+            ev(7, 3, 0, EventKind::Fail { app: AppId::Faiss }),
+            ev(8, 4, 0, complete.clone()),
+        ];
+        assert!(audit::audit(&events).is_err(), "fail then complete");
+    }
+
+    #[test]
+    fn audit_jsonl_streams_from_a_reader() {
+        let mut report = TelemetryReport::new();
+        let mut chunk = TelemetryChunk::new(0);
+        chunk.events.push(admit(0, 0, 0, false));
+        chunk.events.push(ev(
+            7,
+            1,
+            0,
+            EventKind::Reject { app: AppId::Faiss },
+        ));
+        report.absorb(chunk);
+        report.finalize();
+        let text = report.to_jsonl();
+        let via_reader =
+            audit::audit_jsonl_reader(std::io::BufReader::new(text.as_bytes())).unwrap();
+        assert_eq!(via_reader, audit::audit_jsonl(&text).unwrap());
+        assert!(audit::audit_jsonl_reader("not json\n".as_bytes()).is_err());
     }
 
     #[test]

@@ -519,6 +519,7 @@ fn offload_grid(cfg: &SimConfig, gpus: u32, jobs: u32) -> crate::Result<Experime
                     host_pool_gib: pool,
                     c2c_contention: true,
                     energy_weight: 0.0,
+                    ..ServeConfig::default()
                 };
                 let r = serve_with(&sc, ServeMode::Indexed)?;
                 let oracle = serve_with(&sc, ServeMode::NaiveOracle)?;
@@ -575,6 +576,204 @@ fn offload_grid(cfg: &SimConfig, gpus: u32, jobs: u32) -> crate::Result<Experime
         notes: vec![
             "every cell is differentially verified: the contended indexed hot path and the naive full-rescan oracle must emit bit-identical reports".into(),
             "offload admission is gated on Grace-pool headroom and each GPU's C2C link is time-shared across its co-offloading residents; pool=inf with contention off reproduces the pre-plane golden fixtures byte-for-byte".into(),
+        ],
+    })
+}
+
+/// The fault plane under load: a failure-rate × policy sweep over a
+/// mixed fleet, plus a checkpoint-interval A/B at the hottest rate.
+/// Every cell runs both the indexed hot path and the `NaiveOracle` full
+/// rescan and `ensure!`s their reports bit-identical, and `ensure!`s
+/// job conservation (completed + expired + rejected + failed == jobs) —
+/// the differential/accounting gate CI runs. An enabled-but-empty spec
+/// (`gpu:0`) must additionally reproduce the no-faults bytes exactly.
+pub fn serve_faults_experiment(cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
+    // Quick-test configs (scale ≤ 0.1) shrink the grid so tier-1 tests
+    // stay fast; paper-sized runs sweep an 8-GPU fleet with 2k jobs.
+    if cfg.workload_scale <= 0.1 {
+        faults_grid(cfg, 2, 60)
+    } else {
+        faults_grid(cfg, 8, 2_000)
+    }
+}
+
+fn faults_grid(cfg: &SimConfig, gpus: u32, jobs: u32) -> crate::Result<ExperimentOutput> {
+    use crate::cluster::{serve_with, FaultConfig, ServeMode};
+    let scale = cfg.workload_scale;
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    // Per-GPU MTTF factors (seconds, pre-scale): off, a few failures per
+    // run, failure-dominated. MTTR and the checkpoint interval scale the
+    // same way, so the repair/restart regimes survive quick test runs.
+    let mttf_factors = [f64::INFINITY, 120.0, 30.0];
+    let mttf_label = |f: f64| {
+        if f.is_infinite() {
+            "off".to_string()
+        } else {
+            fnum(f * scale, 1)
+        }
+    };
+    let fault_cfg = |factor: f64| -> crate::Result<FaultConfig> {
+        if factor.is_infinite() {
+            Ok(FaultConfig::default())
+        } else {
+            FaultConfig::from_spec(
+                "gpu,slice:2,reconfig",
+                factor * scale,
+                10.0 * scale,
+                2,
+                30.0 * scale,
+            )
+        }
+    };
+    let mut t = Table::new(
+        "Serving — fault plane: per-GPU MTTF x policy, gpu+slice+reconfig faults, 2 retries",
+    )
+    .header(&[
+        "mttf (s)",
+        "policy",
+        "done",
+        "expired",
+        "failed",
+        "faults",
+        "retries",
+        "thpt (j/s)",
+        "p95 (s)",
+        "util",
+    ]);
+    let mut rows = Vec::new();
+    for &policy in &policies {
+        let mut baseline: Option<String> = None;
+        for &factor in &mttf_factors {
+            let sc = ServeConfig {
+                gpus,
+                policy,
+                layout: LayoutPreset::Mixed,
+                arrival_rate_hz: 1.0 / (8.0 * scale),
+                jobs,
+                deadline_s: 900.0 * scale,
+                reconfig: true,
+                seed: cfg.seed,
+                workload_scale: scale,
+                batch: 1,
+                faults: fault_cfg(factor)?,
+                ..ServeConfig::default()
+            };
+            let r = serve_with(&sc, ServeMode::Indexed)?;
+            let oracle = serve_with(&sc, ServeMode::NaiveOracle)?;
+            let rendered = r.to_json().pretty();
+            ensure!(
+                rendered == oracle.to_json().pretty(),
+                "faulted serve diverged from the naive oracle \
+                 (mttf={}, policy={})",
+                mttf_label(factor),
+                policy.label()
+            );
+            ensure!(
+                r.completed + r.expired + r.rejected + r.failed == r.jobs,
+                "job conservation broken (mttf={}, policy={}): \
+                 {} + {} + {} + {} != {}",
+                mttf_label(factor),
+                policy.label(),
+                r.completed,
+                r.expired,
+                r.rejected,
+                r.failed,
+                r.jobs
+            );
+            if factor.is_infinite() {
+                // An enabled-but-empty plan (`gpu:0` parses, weight sums
+                // to zero) must reproduce the no-faults run byte-for-byte.
+                let empty = ServeConfig {
+                    faults: FaultConfig::from_spec("gpu:0", 3600.0, 60.0, 2, f64::INFINITY)?,
+                    ..sc.clone()
+                };
+                let e = serve_with(&empty, ServeMode::Indexed)?;
+                ensure!(
+                    e.to_json().pretty() == rendered,
+                    "an empty fault plan perturbed the run (policy={})",
+                    policy.label()
+                );
+                baseline = Some(rendered.clone());
+            } else if let Some(base) = &baseline {
+                ensure!(
+                    *base != rendered,
+                    "MTTF {} injected faults without changing the run \
+                     (policy={})",
+                    mttf_label(factor),
+                    policy.label()
+                );
+            }
+            t.row(vec![
+                mttf_label(factor),
+                r.policy.clone(),
+                format!("{}", r.completed),
+                format!("{}", r.expired),
+                format!("{}", r.failed),
+                format!("{}", r.faults),
+                format!("{}", r.retries),
+                fnum(r.throughput_jobs_s, 3),
+                fnum(r.wait_p95_s, 2),
+                pct(r.utilization, 0),
+            ]);
+            let mut o = r.to_json();
+            o.set("mttf", mttf_label(factor).as_str());
+            rows.push(o);
+        }
+        t.rule();
+    }
+
+    // Checkpoint A/B at the failure-dominated rate: restart-from-scratch
+    // versus fine-grained checkpoints under first-fit.
+    let mut t2 = Table::new("Serving — checkpoint/restore A/B at MTTF x0.25 of the run (first-fit)");
+    t2 = t2.header(&["checkpoint", "done", "failed", "faults", "retries", "thpt (j/s)"]);
+    let mut ab = Vec::new();
+    for (label, dt) in [("none", f64::INFINITY), ("fine", 30.0 * scale)] {
+        let sc = ServeConfig {
+            gpus,
+            policy: PolicyKind::FirstFit,
+            layout: LayoutPreset::Mixed,
+            arrival_rate_hz: 1.0 / (8.0 * scale),
+            jobs,
+            deadline_s: 900.0 * scale,
+            reconfig: true,
+            seed: cfg.seed + 1,
+            workload_scale: scale,
+            batch: 1,
+            faults: FaultConfig::from_spec("gpu", 30.0 * scale, 10.0 * scale, 2, dt)?,
+            ..ServeConfig::default()
+        };
+        let r = serve_with(&sc, ServeMode::Indexed)?;
+        ensure!(
+            r.completed + r.expired + r.rejected + r.failed == r.jobs,
+            "job conservation broken in the checkpoint A/B ({label})"
+        );
+        t2.row(vec![
+            label.to_string(),
+            format!("{}", r.completed),
+            format!("{}", r.failed),
+            format!("{}", r.faults),
+            format!("{}", r.retries),
+            fnum(r.throughput_jobs_s, 3),
+        ]);
+        let mut o = r.to_json();
+        o.set("checkpoint", label);
+        ab.push(o);
+    }
+
+    let mut json = Json::obj();
+    json.set("grid", Json::Arr(rows))
+        .set("checkpoint_study", Json::Arr(ab));
+    Ok(ExperimentOutput {
+        id: "serve-faults",
+        title: "Fault-injection and recovery plane (extension)",
+        tables: vec![t, t2],
+        json,
+        notes: vec![
+            "every cell is differentially verified (indexed == naive oracle, bit-identical) and conservation-checked: completed + expired + rejected + failed == jobs".into(),
+            "orphans requeue as bounded retries keeping their original arrival and absolute deadline; with --checkpoint-dt set, progress up to the last checkpoint boundary shrinks the retry's service time".into(),
         ],
     })
 }
@@ -717,6 +916,34 @@ mod tests {
                     assert_eq!(get_u(cell, "offloaded"), 0, "first-fit never offloads");
                 }
             }
+        }
+    }
+
+    /// Shrunk fault grid: the off cell is fault-free, the hot cells
+    /// inject faults and trigger retries, every cell conserves jobs, and
+    /// the `ensure!`s inside the driver (indexed == naive oracle, empty
+    /// plan == no plan) all held or the experiment would have errored.
+    #[test]
+    fn faults_grid_injects_and_conserves() {
+        let out = serve_faults_experiment(&fast_cfg()).unwrap();
+        let grid = out.json.get("grid").unwrap().as_arr().unwrap();
+        assert_eq!(grid.len(), 2 * 3, "2 policies x 3 MTTF points:\n{}", out.render());
+        let get_u = |r: &Json, k: &str| r.get(k).unwrap().as_u64().unwrap();
+        for chunk in grid.chunks(3) {
+            let off = &chunk[0];
+            assert_eq!(off.get("mttf").unwrap().as_str(), Some("off"));
+            assert!(off.get("faults").is_none(), "inert cell must emit pre-plane JSON");
+            for hot in &chunk[1..] {
+                assert!(get_u(hot, "faults") > 0, "hot cell saw no faults:\n{}", out.render());
+            }
+            // The failure-dominated cell (shortest MTTF) must orphan at
+            // least one resident into a retry.
+            assert!(get_u(&chunk[2], "retries") > 0, "no retries at MTTF x30:\n{}", out.render());
+        }
+        let ab = out.json.get("checkpoint_study").unwrap().as_arr().unwrap();
+        assert_eq!(ab.len(), 2);
+        for cell in ab {
+            assert!(get_u(cell, "faults") > 0);
         }
     }
 

@@ -46,7 +46,7 @@ fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "serve",
             summary: "online cluster serving: admission + placement + reconfig",
-            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--trace FILE] [--save-trace FILE] [--telemetry FILE] [--sample-dt S] [--json]",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--faults SPEC] [--mttf S] [--mttr S] [--retries N] [--checkpoint-dt S] [--trace FILE] [--save-trace FILE] [--telemetry FILE] [--sample-dt S] [--json]",
         },
         CommandSpec {
             name: "audit-trace",
@@ -267,6 +267,11 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         "lookahead",
         "route",
         "no-forward",
+        "faults",
+        "mttf",
+        "mttr",
+        "retries",
+        "checkpoint-dt",
         "trace",
         "save-trace",
         "telemetry",
@@ -284,6 +289,29 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
     let layout_name = args.opt_or("layout", "mixed");
     let layout = migsim::cluster::LayoutPreset::parse(layout_name)
         .ok_or_else(|| anyhow::anyhow!("unknown layout '{layout_name}' (mixed|small|big)"))?;
+    // The fault plane's tuning knobs are meaningless without a fault
+    // spec; accepting them silently would let a user believe they ran a
+    // fault-injection study that never injected anything.
+    if args.opt("faults").is_none() {
+        for opt in ["mttf", "mttr", "retries", "checkpoint-dt"] {
+            anyhow::ensure!(
+                args.opt(opt).is_none(),
+                "--{opt} has no effect without --faults SPEC"
+            );
+        }
+    }
+    let fault_defaults = migsim::cluster::FaultConfig::default();
+    let faults = migsim::cluster::FaultConfig::from_spec(
+        args.opt_or("faults", "none"),
+        args.opt_f64("mttf", fault_defaults.mttf_s)
+            .map_err(anyhow::Error::msg)?,
+        args.opt_f64("mttr", fault_defaults.mttr_s)
+            .map_err(anyhow::Error::msg)?,
+        args.opt_u64("retries", fault_defaults.retries as u64)
+            .map_err(anyhow::Error::msg)? as u32,
+        args.opt_f64("checkpoint-dt", fault_defaults.checkpoint_dt_s)
+            .map_err(anyhow::Error::msg)?,
+    )?;
     let serve_cfg = migsim::cluster::ServeConfig {
         gpus: args.opt_u64("gpus", 4).map_err(anyhow::Error::msg)? as u32,
         policy,
@@ -320,7 +348,15 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         energy_weight: args
             .opt_f64("energy-weight", 0.0)
             .map_err(anyhow::Error::msg)?,
+        faults,
     };
+    // Fail fast on nonsense numerics: each of these would otherwise
+    // surface as a confusing downstream error (or a silently skewed run).
+    anyhow::ensure!(
+        serve_cfg.energy_weight >= 0.0 && serve_cfg.energy_weight.is_finite(),
+        "--energy-weight must be a finite, non-negative number, got {}",
+        serve_cfg.energy_weight
+    );
 
     // Trace replay: feed the queue from a persisted arrival log instead
     // of the synthetic Poisson stream. The trace *is* the arrival
@@ -386,6 +422,7 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
             )
             .map_err(anyhow::Error::msg)?,
     };
+    tel_cfg.validate()?;
 
     let nodes = args.opt_u64("nodes", 1).map_err(anyhow::Error::msg)? as u32;
     let threads = args.opt_u64("threads", 1).map_err(anyhow::Error::msg)? as u32;
@@ -410,6 +447,11 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         scfg.lookahead_s = args
             .opt_f64("lookahead", scfg.lookahead_s)
             .map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            scfg.lookahead_s > 0.0 && scfg.lookahead_s.is_finite(),
+            "--lookahead must be a positive number of seconds, got {}",
+            scfg.lookahead_s
+        );
         let route_name = args.opt_or("route", "round-robin");
         scfg.route = migsim::cluster::RouteKind::parse(route_name).ok_or_else(|| {
             anyhow::anyhow!("unknown route '{route_name}' (round-robin|least-loaded)")
@@ -465,11 +507,122 @@ fn cmd_audit_trace(args: &Args) -> migsim::Result<()> {
         .positionals
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: migsim audit-trace <trace.jsonl>"))?;
-    let text = std::fs::read_to_string(path)
+    // Stream the trace line by line instead of slurping it: serve traces
+    // grow with jobs × events, and the audit only ever needs one record
+    // at a time. An audit failure propagates as an error, so the process
+    // exits non-zero — CI can gate on it directly.
+    let file = std::fs::File::open(path)
         .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
-    let report = migsim::cluster::telemetry::audit::audit_jsonl(&text)?;
+    let reader = std::io::BufReader::new(file);
+    let report = migsim::cluster::telemetry::audit::audit_jsonl_reader(reader)
+        .map_err(|e| anyhow::anyhow!("audit of {path} failed: {e:#}"))?;
     println!("{}", report.summary());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    /// Every bad flag combination must be rejected up front with the
+    /// expected one-line error (dispatch returns Err, so `main` exits
+    /// non-zero) — before any simulation runs or any file is written.
+    #[test]
+    fn serve_rejects_bad_flags_with_one_line_errors() {
+        let matrix: &[(&[&str], &str)] = &[
+            (&["serve", "--bogus", "1"], "unknown option --bogus"),
+            (
+                &["serve", "--sample-dt", "0", "--telemetry", "/dev/null"],
+                "--sample-dt must be a positive number",
+            ),
+            (
+                &["serve", "--sample-dt", "0.5"],
+                "--sample-dt has no effect without --telemetry",
+            ),
+            (
+                &["serve", "--nodes", "2", "--lookahead", "0"],
+                "--lookahead must be a positive number",
+            ),
+            (
+                &["serve", "--nodes", "2", "--lookahead", "-1"],
+                "--lookahead must be a positive number",
+            ),
+            (
+                &["serve", "--nodes", "2", "--lookahead", "inf"],
+                "--lookahead must be a positive number",
+            ),
+            (
+                &["serve", "--lookahead", "1"],
+                "--lookahead requires a multi-node run",
+            ),
+            (
+                &["serve", "--energy-weight", "-0.5"],
+                "--energy-weight must be a finite, non-negative number",
+            ),
+            (
+                &["serve", "--energy-weight", "nan"],
+                "--energy-weight must be a finite, non-negative number",
+            ),
+            (
+                &["serve", "--energy-weight", "abc"],
+                "--energy-weight expects a number",
+            ),
+            (
+                &["serve", "--faults", "bogus"],
+                "unknown fault kind 'bogus'",
+            ),
+            (
+                &["serve", "--mttf", "10"],
+                "--mttf has no effect without --faults",
+            ),
+            (
+                &["serve", "--retries", "3"],
+                "--retries has no effect without --faults",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--mttf", "0"],
+                "--mttf must be a positive number",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--mttr", "-2"],
+                "--mttr must be a positive number",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--checkpoint-dt", "0"],
+                "--checkpoint-dt must be positive",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--retries", "x"],
+                "--retries expects an integer",
+            ),
+        ];
+        for (argv, want) in matrix {
+            let err = dispatch(&args(argv)).expect_err(&format!("{argv:?} must be rejected"));
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains(want),
+                "{argv:?}: error '{msg}' does not mention '{want}'"
+            );
+        }
+    }
+
+    #[test]
+    fn audit_trace_fails_nonzero_on_a_bad_trace() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("migsim_audit_bad_trace_test.jsonl");
+        std::fs::write(&path, "this is not json\n").unwrap();
+        let err = dispatch(&args(&["audit-trace", path.to_str().unwrap()]))
+            .expect_err("a malformed trace must fail the audit");
+        assert!(format!("{err:#}").contains("audit of"));
+        std::fs::remove_file(&path).ok();
+        let err = dispatch(&args(&["audit-trace", "/nonexistent/trace.jsonl"]))
+            .expect_err("a missing trace must be an error");
+        assert!(format!("{err:#}").contains("reading trace"));
+    }
 }
 
 fn cmd_runtime(args: &Args) -> migsim::Result<()> {

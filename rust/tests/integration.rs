@@ -993,3 +993,92 @@ fn telemetry_jsonl_round_trips_through_disk_and_the_audit_cli_path() {
     assert_eq!(from_file, in_memory, "file and in-memory audits must agree");
     let _ = std::fs::remove_file(path);
 }
+
+#[test]
+fn faulted_serve_matches_naive_oracle_and_degrades_gracefully() {
+    // The fault plane rides the same differential harness as every other
+    // serving extension: with faults active, the indexed hot path must
+    // reproduce the naive full-rescan oracle bit for bit across a fault
+    // spec × checkpoint grid, conserve jobs, and — at a failure-dominated
+    // MTTF a quarter of the horizon — degrade gracefully instead of
+    // panicking or hanging.
+    use migsim::cluster::{
+        serve_with, FaultConfig, LayoutPreset, PolicyKind, ServeConfig, ServeMode,
+    };
+    let specs = ["gpu", "slice", "reconfig", "gpu,slice:2,reconfig"];
+    let checkpoints = [f64::INFINITY, 1.0];
+    for &spec in &specs {
+        for &dt in &checkpoints {
+            for &(mttf, mttr) in &[(10.0, 3.0), (2.0, 1.0)] {
+                let cfg = ServeConfig {
+                    gpus: 3,
+                    policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+                    layout: LayoutPreset::Mixed,
+                    arrival_rate_hz: 2.0,
+                    jobs: 40,
+                    deadline_s: 25.0,
+                    reconfig: true,
+                    seed: 0xFA7A1,
+                    workload_scale: 0.05,
+                    batch: 1,
+                    faults: FaultConfig::from_spec(spec, mttf, mttr, 2, dt).unwrap(),
+                    ..ServeConfig::default()
+                };
+                let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
+                let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
+                assert_eq!(
+                    fast.to_json().pretty(),
+                    oracle.to_json().pretty(),
+                    "diverged: spec={spec} dt={dt} mttf={mttf}"
+                );
+                assert_eq!(
+                    fast.completed + fast.expired + fast.rejected + fast.failed,
+                    fast.jobs,
+                    "jobs lost: spec={spec} dt={dt} mttf={mttf}"
+                );
+                assert!(fast.faults_active);
+            }
+        }
+    }
+}
+
+#[test]
+fn faulted_trace_audits_clean_and_agrees_with_the_report() {
+    // Telemetry × faults: a traced run with the fault plane active emits
+    // cordon/recover/fault/retry/fail events that pass the full lifecycle
+    // audit, and the audit's totals agree with the ServeReport counters.
+    use migsim::cluster::telemetry::audit;
+    use migsim::cluster::{
+        serve_traced, FaultConfig, LayoutPreset, PolicyKind, ServeConfig, ServeMode,
+        TelemetryConfig,
+    };
+    let cfg = ServeConfig {
+        gpus: 3,
+        policy: PolicyKind::FirstFit,
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: 2.0,
+        jobs: 40,
+        deadline_s: 25.0,
+        reconfig: true,
+        seed: 0xFA7A2,
+        workload_scale: 0.05,
+        batch: 1,
+        faults: FaultConfig::from_spec("gpu,slice:2,reconfig", 8.0, 2.0, 2, 1.0).unwrap(),
+        ..ServeConfig::default()
+    };
+    let tcfg = TelemetryConfig { sample_dt_s: 0.5 };
+    let (rep, tel) = serve_traced(&cfg, ServeMode::Indexed, &tcfg).unwrap();
+    assert!(rep.faults > 0, "the plan injected nothing at MTTF 8 s");
+    assert!(rep.retries > 0, "no orphan ever retried");
+    let a = audit::audit(&tel.events).unwrap();
+    assert_eq!(a.jobs, rep.jobs as u64);
+    assert_eq!(a.completed, rep.completed as u64);
+    assert_eq!(a.expired, rep.expired as u64);
+    assert_eq!(a.rejected, rep.rejected as u64);
+    assert_eq!(a.failed, rep.failed as u64);
+    assert_eq!(a.retries, rep.retries as u64);
+    // The audit accepts the JSONL wire form of the same stream too (the
+    // `migsim audit-trace` path).
+    let from_file = audit::audit_jsonl(&tel.to_jsonl()).unwrap();
+    assert_eq!(from_file, a, "text and in-memory audits must agree");
+}

@@ -3,7 +3,8 @@
 //! — failures reproduce exactly).
 
 use migsim::cluster::{
-    serve, serve_sharded, LayoutPreset, PolicyKind, RouteKind, ServeConfig, ShardServeConfig,
+    serve, serve_sharded, FaultConfig, LayoutPreset, PolicyKind, RouteKind, ServeConfig,
+    ShardServeConfig,
 };
 use migsim::coordinator::corun::water_fill;
 use migsim::gpu::{GpuSpec, GpuUsage, PowerModel, PowerState};
@@ -762,5 +763,141 @@ fn power_governor_stability_random_loads() {
             hi - lo <= 4.0 * spec.clock_step_mhz + 1e-9,
             "governor oscillates: band {lo}..{hi}"
         );
+    }
+}
+
+#[test]
+fn enabled_but_empty_fault_plans_are_byte_inert() {
+    // An enabled-but-empty fault plan (a spec that parses but whose
+    // weights sum to zero) must reproduce the no-plane report
+    // byte-for-byte across random policy × layout × seed × shard-count ×
+    // thread-count configurations — the same contract the golden
+    // fixtures pin for the default config.
+    let mut rng = Rng::new(0xFA017);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig];
+    let empty_specs = ["none", "gpu:0", "gpu:0,slice:0,reconfig:0"];
+    for case in 0..8 {
+        let nodes = 1 + rng.below(3) as u32;
+        let base = ServeConfig {
+            gpus: nodes + rng.below(4) as u32,
+            policy: *rng.choose(&policies),
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.5),
+            jobs: 20 + rng.below(20) as u32,
+            deadline_s: 15.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1 + rng.below(2) as u32,
+            ..ServeConfig::default()
+        };
+        let spec = *rng.choose(&empty_specs);
+        // Deliberately hot knobs: with zero weights they must not matter.
+        let inert = ServeConfig {
+            faults: FaultConfig::from_spec(spec, 5.0, 1.0, 7, 0.5).unwrap(),
+            ..base.clone()
+        };
+        assert!(!inert.faults.active(), "case {case}: '{spec}' should be inert");
+        let a = serve(&base).unwrap();
+        let b = serve(&inert).unwrap();
+        assert_eq!(
+            a.to_json().compact(),
+            b.to_json().compact(),
+            "case {case}: empty fault plan '{spec}' perturbed a single-shard run"
+        );
+        let threads = 1 + rng.below(3) as u32;
+        let sa = serve_sharded(&ShardServeConfig::new(base, nodes, threads)).unwrap();
+        let sb = serve_sharded(&ShardServeConfig::new(inert, nodes, threads)).unwrap();
+        assert_eq!(
+            sa.report.to_json().compact(),
+            sb.report.to_json().compact(),
+            "case {case}: empty fault plan '{spec}' perturbed a {nodes}-shard run"
+        );
+    }
+}
+
+#[test]
+fn faulted_serve_conserves_jobs_and_is_thread_invariant() {
+    // Active fault plans over random configurations: every job still
+    // resolves exactly once (completed + expired + rejected + failed ==
+    // arrivals), the merged report is bit-identical across worker-thread
+    // counts (per-GPU fault streams key on the global GPU id, never the
+    // shard partitioning), and rerunning reproduces the bytes exactly.
+    let mut rng = Rng::new(0xFA2B5);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig];
+    let specs = ["gpu", "gpu,slice:2", "slice,reconfig", "gpu:1,slice:0.5,reconfig:0.25"];
+    for case in 0..8 {
+        let nodes = 1 + rng.below(3) as u32;
+        let base = ServeConfig {
+            gpus: nodes + rng.below(4) as u32,
+            policy: *rng.choose(&policies),
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.5),
+            jobs: 20 + rng.below(20) as u32,
+            deadline_s: 15.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1 + rng.below(2) as u32,
+            faults: FaultConfig::from_spec(
+                *rng.choose(&specs),
+                // MTTF down to 2 s of sim time: failure-dominated runs
+                // must degrade gracefully, never panic or hang.
+                2.0 + rng.range(0.0, 20.0),
+                0.5 + rng.range(0.0, 4.0),
+                rng.below(4) as u32,
+                if rng.chance(0.5) { f64::INFINITY } else { 0.5 + rng.range(0.0, 2.0) },
+            )
+            .unwrap(),
+            ..ServeConfig::default()
+        };
+        assert!(base.faults.active());
+        let a = serve(&base).unwrap();
+        assert_eq!(
+            a.completed + a.expired + a.rejected + a.failed,
+            a.jobs,
+            "case {case}: jobs lost or duplicated under faults ({base:?})"
+        );
+        assert_eq!(
+            a.to_json().compact(),
+            serve(&base).unwrap().to_json().compact(),
+            "case {case}: faulted run is not reproducible"
+        );
+        let mut scfg = ShardServeConfig::new(base.clone(), nodes, 1);
+        scfg.forward = rng.chance(0.7);
+        scfg.route = if rng.chance(0.5) {
+            RouteKind::RoundRobin
+        } else {
+            RouteKind::LeastLoaded
+        };
+        let s1 = serve_sharded(&scfg).unwrap();
+        let rep = &s1.report;
+        assert_eq!(
+            rep.completed + rep.expired + rep.rejected + rep.failed,
+            rep.jobs,
+            "case {case}: sharded fault run lost jobs ({scfg:?})"
+        );
+        for threads in [2, 4] {
+            let st = serve_sharded(&ShardServeConfig {
+                threads,
+                ..scfg.clone()
+            })
+            .unwrap();
+            assert_eq!(
+                s1.report.to_json().compact(),
+                st.report.to_json().compact(),
+                "case {case}: {threads} threads changed a faulted report ({scfg:?})"
+            );
+        }
     }
 }
