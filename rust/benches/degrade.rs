@@ -1,0 +1,143 @@
+//! Graceful-degradation overhead benchmark: end-to-end `cluster::serve`
+//! under an active gpu-fault plan, stepping the degradation knobs on one
+//! at a time — knobless baseline (the PR 7 fault plane), correlated rack
+//! domains, a single repair crew, and the full stack with watermark
+//! shedding — on a near-saturated fleet.
+//!
+//! The "base" cell is the zero-cost-when-off claim for this PR: with the
+//! knobs at their defaults the domain scheduler arms nothing, repairs
+//! bypass the crew queue, and the shed check is a single enum match, so
+//! the loop's bits and its speed match the pre-degrade fault plane. The
+//! "full" cell prices the whole degradation pipeline — domain cordons,
+//! FIFO crew service, proportional shedding, cross-shard restore costs.
+//!
+//! Besides the human-readable report (and the standard
+//! `results/bench/degrade.json`), this bench emits `BENCH_degrade.json` —
+//! machine-readable events/s for every cell, the full/base overhead
+//! ratio, and the domain/shed counts — so the degradation plane's cost is
+//! tracked across PRs.
+//!
+//!     cargo bench --offline --bench degrade          # full measurement
+//!     cargo bench --offline --bench degrade -- --smoke   # CI bit-rot check
+
+use migsim::bench::{BenchConfig, Bencher};
+use migsim::cluster::{
+    serve, FaultConfig, FaultDomains, LayoutPreset, PolicyKind, ServeConfig, ShedPolicy,
+};
+use migsim::util::json::Json;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(300),
+        max_iters: 8,
+    });
+    let smoke = b.smoke();
+    let gpus: u32 = if smoke { 8 } else { 64 };
+    let jobs: u32 = if smoke { 300 } else { 5_000 };
+
+    // Hot per-GPU hazard with long repairs, same near-saturated regime as
+    // the faults bench: cordons overlap, so finite crews genuinely queue
+    // and the watermark genuinely trips.
+    let faults = FaultConfig::from_spec("gpu", 30.0, 8.0, 2, 1.0).unwrap();
+    let cfg_with = |f: FaultConfig| ServeConfig {
+        gpus,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: gpus as f64 * 2.5,
+        jobs,
+        deadline_s: 45.0,
+        reconfig: true,
+        seed: 7,
+        workload_scale: 0.05,
+        batch: 1,
+        faults: f,
+        ..ServeConfig::default()
+    };
+    let base = cfg_with(faults);
+    let domains = cfg_with(
+        faults
+            .with_degrade(FaultDomains::Rack(4), 0, ShedPolicy::None)
+            .unwrap(),
+    );
+    let crews = cfg_with(
+        faults
+            .with_degrade(FaultDomains::Rack(4), 1, ShedPolicy::None)
+            .unwrap(),
+    );
+    let full = cfg_with(
+        faults
+            .with_degrade(FaultDomains::Rack(4), 1, ShedPolicy::Watermark(0.75))
+            .unwrap(),
+    );
+
+    let r_base = serve(&base).unwrap();
+    // Default knobs must reproduce the knobless fault plane exactly —
+    // the contract the golden fixtures rely on — before anything is timed.
+    let inert = cfg_with(
+        faults
+            .with_degrade(FaultDomains::None, 0, ShedPolicy::None)
+            .unwrap(),
+    );
+    assert_eq!(
+        r_base.to_json().pretty(),
+        serve(&inert).unwrap().to_json().pretty(),
+        "default degradation knobs must be byte-inert before anything is timed"
+    );
+    let r_full = serve(&full).unwrap();
+    assert!(r_full.domain_faults > 0, "the full cell fired no domain events");
+    assert_eq!(
+        r_full.completed + r_full.expired + r_full.rejected + r_full.failed + r_full.shed,
+        r_full.jobs,
+        "job conservation broken under degraded operation"
+    );
+
+    let cells: [(&str, &ServeConfig); 4] = [
+        ("base", &base),
+        ("domains", &domains),
+        ("crews", &crews),
+        ("full", &full),
+    ];
+    let mut doc = Json::obj();
+    doc.set("suite", "degrade")
+        .set("smoke", smoke)
+        .set("gpus", gpus)
+        .set("jobs", jobs)
+        .set("domain_faults_full", r_full.domain_faults)
+        .set("shed_full", r_full.shed)
+        .set("retries_full", r_full.retries)
+        .set("completed_base", r_base.completed)
+        .set("completed_full", r_full.completed);
+    let mut base_wall = None;
+    for (label, sc) in cells {
+        let probe = serve(sc).unwrap();
+        let res = b
+            .bench_with_work(
+                &format!("degrade/{label}_{jobs}jobs_{gpus}gpus"),
+                Some(probe.events as f64),
+                "events",
+                || serve(sc).unwrap().completed,
+            )
+            .cloned();
+        if let Some(r) = res {
+            doc.set(&format!("{label}_wall_s"), r.mean_s)
+                .set(
+                    &format!("{label}_events_per_s"),
+                    probe.events as f64 / r.mean_s,
+                );
+            match base_wall {
+                None => base_wall = Some(r.mean_s),
+                Some(bw) => {
+                    doc.set(&format!("{label}_overhead_ratio"), r.mean_s / bw);
+                }
+            }
+        }
+    }
+    if std::fs::write("BENCH_degrade.json", doc.pretty()).is_ok() {
+        println!("-- wrote BENCH_degrade.json");
+    }
+
+    b.finish("degrade");
+}

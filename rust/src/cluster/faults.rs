@@ -31,6 +31,28 @@
 //! accordingly; without it (`dt = inf`, the default) a retry restarts
 //! from scratch.
 //!
+//! ## Correlated failures and graceful degradation
+//!
+//! Beyond independent per-GPU hazards, the plane models the *system*
+//! structure failures actually follow:
+//!
+//! - **Fault domains** ([`FaultDomains`], `--fault-domains node|rack:R`):
+//!   a domain-level event (a node losing power, a rack losing cooling)
+//!   cordons every in-service member GPU at once. Domain streams key on
+//!   the fleet-global domain id, so correlated failures stay
+//!   bit-identical across thread counts too.
+//! - **Finite repair crews** (`repair_crews`, `--repair-crews N`):
+//!   repair stops being instant capacity. Each node has `N` crews; a
+//!   cordoned board whose crews are all busy waits in a deterministic
+//!   FIFO queue, and its MTTR draw becomes *service time* — a failure
+//!   burst leaves boards out far longer than MTTR. `0` (the default)
+//!   keeps the PR 7 unlimited-repair behavior bit-for-bit.
+//! - **Brown-out shedding** ([`ShedPolicy`], `--shed-policy
+//!   watermark:F`): when a capacity-loss event leaves fewer than `F` of
+//!   a node's boards in service, admission sheds the lowest-slack
+//!   pending jobs (terminal `JobState::Shed`) instead of letting the
+//!   whole queue rot to deadline expiry.
+//!
 //! ## Inertness and determinism
 //!
 //! The plane is **inert by default**, the same contract as the telemetry
@@ -41,7 +63,10 @@
 //! streams are drawn from `Rng::new(mix(seed, global gpu id))` — a pure
 //! function of the serve seed and the *global* GPU id, never of the
 //! shard partitioning — so the merged report is bit-identical across
-//! `--threads 1/2/4/8`.
+//! `--threads 1/2/4/8`. Domain streams follow the same pattern keyed on
+//! the fleet-global domain id, and every degradation knob defaults off,
+//! so a config that sets none of them reproduces the PR 7 fault plane
+//! byte-for-byte.
 
 use crate::util::Rng;
 use anyhow::{bail, ensure};
@@ -64,6 +89,109 @@ impl FaultKind {
             FaultKind::Gpu => "gpu",
             FaultKind::Slice => "slice",
             FaultKind::Reconfig => "reconfig",
+        }
+    }
+}
+
+/// Correlated fault-domain scoping (`--fault-domains`). A domain-level
+/// event cordons every in-service member GPU at once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultDomains {
+    /// No correlated failures (the default): only independent per-GPU
+    /// hazards fire.
+    None,
+    /// One domain per node shard: a domain event takes the whole node's
+    /// boards down together.
+    Node,
+    /// Fixed-width racks of `R` consecutive fleet-global GPUs (the last
+    /// rack may be narrower). Racks can straddle node boundaries; every
+    /// owning shard draws the identical domain stream, so the cordons
+    /// still land at identical virtual times.
+    Rack(u32),
+}
+
+impl FaultDomains {
+    /// Parse the `--fault-domains` grammar: `none` | `node` | `rack:R`.
+    pub fn parse(spec: &str) -> crate::Result<FaultDomains> {
+        let spec = spec.trim();
+        match spec {
+            "" | "none" => Ok(FaultDomains::None),
+            "node" => Ok(FaultDomains::Node),
+            _ => match spec.strip_prefix("rack:") {
+                Some(r) => {
+                    let width: u32 = r.parse().map_err(|_| {
+                        anyhow::anyhow!("--fault-domains: '{r}' is not a rack width (in '{spec}')")
+                    })?;
+                    ensure!(
+                        width >= 1,
+                        "--fault-domains: rack width must be >= 1, got {width}"
+                    );
+                    Ok(FaultDomains::Rack(width))
+                }
+                None => bail!("--fault-domains: unknown grammar '{spec}' (want none|node|rack:R)"),
+            },
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        !matches!(self, FaultDomains::None)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            FaultDomains::None => "none".to_string(),
+            FaultDomains::Node => "node".to_string(),
+            FaultDomains::Rack(w) => format!("rack:{w}"),
+        }
+    }
+}
+
+/// Brown-out backpressure (`--shed-policy`). Checked at every
+/// capacity-loss event (a GPU or domain cordon).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ShedPolicy {
+    /// Never shed (the default): pending jobs only leave the queue by
+    /// placement, expiry, or handoff.
+    None,
+    /// When fewer than this fraction of a node's boards remain in
+    /// service, trim the pending queue proportionally to the surviving
+    /// fraction, shedding lowest-slack (earliest-deadline) jobs first.
+    Watermark(f64),
+}
+
+impl ShedPolicy {
+    /// Parse the `--shed-policy` grammar: `none` | `watermark:F`,
+    /// `F` in (0, 1].
+    pub fn parse(spec: &str) -> crate::Result<ShedPolicy> {
+        let spec = spec.trim();
+        match spec {
+            "" | "none" => Ok(ShedPolicy::None),
+            _ => match spec.strip_prefix("watermark:") {
+                Some(f) => {
+                    let frac: f64 = f.parse().map_err(|_| {
+                        anyhow::anyhow!("--shed-policy: '{f}' is not a fraction (in '{spec}')")
+                    })?;
+                    ensure!(
+                        frac > 0.0 && frac <= 1.0,
+                        "--shed-policy: watermark must be in (0, 1], got {frac}"
+                    );
+                    Ok(ShedPolicy::Watermark(frac))
+                }
+                None => {
+                    bail!("--shed-policy: unknown grammar '{spec}' (want none|watermark:F)")
+                }
+            },
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        !matches!(self, ShedPolicy::None)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ShedPolicy::None => "none".to_string(),
+            ShedPolicy::Watermark(f) => format!("watermark:{f}"),
         }
     }
 }
@@ -91,6 +219,15 @@ pub struct FaultConfig {
     /// checkpoint boundary survives a fault; `inf` (the default) means
     /// no checkpointing — a retry restarts from scratch.
     pub checkpoint_dt_s: f64,
+    /// Correlated fault-domain scoping. `None` (the default) keeps the
+    /// PR 7 independent-hazard behavior bit-for-bit.
+    pub domains: FaultDomains,
+    /// Repair crews per node: `0` (the default) models unlimited instant
+    /// repair capacity (PR 7 behavior, bit-for-bit); `N >= 1` makes
+    /// repair a FIFO-queued service with `N` concurrent servers.
+    pub repair_crews: u32,
+    /// Brown-out shedding policy under capacity loss.
+    pub shed: ShedPolicy,
 }
 
 impl Default for FaultConfig {
@@ -103,6 +240,9 @@ impl Default for FaultConfig {
             mttr_s: 60.0,
             retries: 2,
             checkpoint_dt_s: f64::INFINITY,
+            domains: FaultDomains::None,
+            repair_crews: 0,
+            shed: ShedPolicy::None,
         }
     }
 }
@@ -166,9 +306,34 @@ impl FaultConfig {
             mttr_s,
             retries,
             checkpoint_dt_s,
+            ..FaultConfig::default()
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Builder for the degradation knobs on top of [`from_spec`]:
+    /// correlated fault domains, finite repair crews, brown-out
+    /// shedding. Re-validates, so a degradation knob on an inert spec is
+    /// rejected here rather than silently ignored.
+    ///
+    /// [`from_spec`]: FaultConfig::from_spec
+    pub fn with_degrade(
+        mut self,
+        domains: FaultDomains,
+        repair_crews: u32,
+        shed: ShedPolicy,
+    ) -> crate::Result<FaultConfig> {
+        ensure!(
+            self.active() || (!domains.active() && repair_crews == 0 && !shed.active()),
+            "degradation knobs (--fault-domains/--repair-crews/--shed-policy) \
+             have no effect without an active --faults SPEC"
+        );
+        self.domains = domains;
+        self.repair_crews = repair_crews;
+        self.shed = shed;
+        self.validate()?;
+        Ok(self)
     }
 
     /// Whether the plane injects anything at all. Inactive ⇒ the serve
@@ -176,6 +341,14 @@ impl FaultConfig {
     /// to the plane being absent.
     pub fn active(&self) -> bool {
         self.total_w() > 0.0
+    }
+
+    /// Whether any graceful-degradation knob is set (fault domains,
+    /// finite repair crews, or brown-out shedding). Gates the report's
+    /// degrade counters on the wire, so a faulted run with the knobs at
+    /// their defaults keeps its pre-degrade bytes exactly.
+    pub fn degraded(&self) -> bool {
+        self.domains.active() || self.repair_crews > 0 || self.shed.active()
     }
 
     fn total_w(&self) -> f64 {
@@ -211,6 +384,15 @@ impl FaultConfig {
             "--checkpoint-dt must be positive seconds (inf = no checkpointing), got {}",
             self.checkpoint_dt_s
         );
+        if let FaultDomains::Rack(w) = self.domains {
+            ensure!(w >= 1, "--fault-domains: rack width must be >= 1, got {w}");
+        }
+        if let ShedPolicy::Watermark(f) = self.shed {
+            ensure!(
+                f > 0.0 && f <= 1.0,
+                "--shed-policy: watermark must be in (0, 1], got {f}"
+            );
+        }
         Ok(())
     }
 
@@ -221,6 +403,18 @@ impl FaultConfig {
     pub fn gpu_stream(seed: u64, global_gpu: usize) -> Rng {
         let mix = (global_gpu as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         Rng::new(seed ^ mix ^ 0xFA17_0000_0000_0000)
+    }
+
+    /// The event stream of one fault domain: the same construction as
+    /// [`gpu_stream`] under a different salt, keyed on the fleet-global
+    /// domain id — every shard owning a slice of the domain derives the
+    /// identical stream, so correlated cordons land at identical virtual
+    /// times whatever the partitioning or thread count.
+    ///
+    /// [`gpu_stream`]: FaultConfig::gpu_stream
+    pub fn domain_stream(seed: u64, domain: usize) -> Rng {
+        let mix = (domain as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::new(seed ^ mix ^ 0xD03A_0000_0000_0000)
     }
 
     /// Time to the next fault on one GPU (exponential, mean MTTF).
@@ -378,6 +572,92 @@ mod tests {
         assert_eq!(on.preserved_s(10.0), 10.0);
         assert_eq!(on.preserved_s(25.0), 20.0);
         assert_eq!(on.preserved_s(-1.0), 0.0, "clock skew clamps to 0");
+    }
+
+    #[test]
+    fn domain_grammar_round_trips() {
+        assert_eq!(FaultDomains::parse("none").unwrap(), FaultDomains::None);
+        assert_eq!(FaultDomains::parse("").unwrap(), FaultDomains::None);
+        assert_eq!(FaultDomains::parse("node").unwrap(), FaultDomains::Node);
+        assert_eq!(FaultDomains::parse(" rack:4 ").unwrap(), FaultDomains::Rack(4));
+        assert_eq!(FaultDomains::parse("rack:1").unwrap().label(), "rack:1");
+        assert!(!FaultDomains::None.active());
+        assert!(FaultDomains::Node.active());
+        for bad in ["rack", "rack:0", "rack:-1", "rack:x", "pod:2", "rack:1.5"] {
+            assert!(FaultDomains::parse(bad).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn shed_grammar_round_trips() {
+        assert_eq!(ShedPolicy::parse("none").unwrap(), ShedPolicy::None);
+        assert_eq!(
+            ShedPolicy::parse("watermark:0.75").unwrap(),
+            ShedPolicy::Watermark(0.75)
+        );
+        assert_eq!(
+            ShedPolicy::parse("watermark:1").unwrap().label(),
+            "watermark:1"
+        );
+        assert!(!ShedPolicy::None.active());
+        assert!(ShedPolicy::Watermark(0.5).active());
+        for bad in [
+            "watermark",
+            "watermark:0",
+            "watermark:-0.5",
+            "watermark:1.5",
+            "watermark:nan",
+            "drop:0.5",
+        ] {
+            assert!(ShedPolicy::parse(bad).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn domain_streams_are_deterministic_and_distinct_from_gpu_streams() {
+        let c = FaultConfig { gpu_w: 1.0, mttf_s: 50.0, ..FaultConfig::default() };
+        let mut a = FaultConfig::domain_stream(7, 0);
+        let mut b = FaultConfig::domain_stream(7, 0);
+        let seq_a: Vec<f64> = (0..8).map(|_| c.draw_ttf(&mut a)).collect();
+        let seq_b: Vec<f64> = (0..8).map(|_| c.draw_ttf(&mut b)).collect();
+        assert_eq!(seq_a, seq_b, "same (seed, domain) ⇒ same stream");
+        // A domain stream must not collide with the same-id GPU stream:
+        // domain 0's cordons would otherwise mirror GPU 0's hazards.
+        let mut gpu = FaultConfig::gpu_stream(7, 0);
+        assert_ne!(seq_a[0], c.draw_ttf(&mut gpu));
+        let mut other = FaultConfig::domain_stream(7, 1);
+        assert_ne!(seq_a[0], c.draw_ttf(&mut other));
+    }
+
+    #[test]
+    fn with_degrade_wires_and_gates_the_knobs() {
+        let base = FaultConfig::from_spec("gpu", 10.0, 2.0, 1, f64::INFINITY).unwrap();
+        let c = base
+            .with_degrade(FaultDomains::Rack(2), 1, ShedPolicy::Watermark(0.5))
+            .unwrap();
+        assert_eq!(c.domains, FaultDomains::Rack(2));
+        assert_eq!(c.repair_crews, 1);
+        assert_eq!(c.shed, ShedPolicy::Watermark(0.5));
+        // Defaults pass through unchanged (and stay inert-compatible).
+        let same = base
+            .with_degrade(FaultDomains::None, 0, ShedPolicy::None)
+            .unwrap();
+        assert_eq!(same, base);
+        // Degradation knobs on an inert plane are refused, not ignored.
+        let inert = FaultConfig::default();
+        assert!(inert
+            .with_degrade(FaultDomains::Node, 0, ShedPolicy::None)
+            .is_err());
+        assert!(inert
+            .with_degrade(FaultDomains::None, 2, ShedPolicy::None)
+            .is_err());
+        assert!(inert
+            .with_degrade(FaultDomains::None, 0, ShedPolicy::Watermark(0.9))
+            .is_err());
+        // An inert degrade on an inert plane is fine (the default path).
+        assert!(inert
+            .with_degrade(FaultDomains::None, 0, ShedPolicy::None)
+            .is_ok());
     }
 
     #[test]

@@ -67,7 +67,7 @@ pub mod reconfig;
 pub mod shard;
 pub mod telemetry;
 
-pub use faults::{FaultConfig, FaultKind};
+pub use faults::{FaultConfig, FaultDomains, FaultKind, ShedPolicy};
 pub use fleet::{Fleet, LayoutPreset, MAX_BATCH};
 pub use hostmem::{HostMemConfig, HostPool};
 pub use placement::{PlacementCost, Planner, PolicyKind};
@@ -200,19 +200,29 @@ pub struct ServeReport {
     /// Jobs lost to hardware faults after exhausting their retry budget
     /// (terminal `JobState::Failed`; 0 with the fault plane inert).
     pub failed: u32,
+    /// Pending jobs dropped by brown-out backpressure (terminal
+    /// `JobState::Shed`; 0 without `--shed-policy`).
+    pub shed: u32,
     /// Completed jobs that ran with C2C offloading.
     pub offloaded: u32,
     /// MIG reconfigurations performed across the fleet.
     pub reconfigs: u32,
     /// Hardware faults injected by the fault plane (all kinds).
     pub faults: u32,
+    /// Correlated domain-level fault events fired (0 without
+    /// `--fault-domains`; each one cordons a whole node or rack).
+    pub domain_faults: u32,
     /// Fault-orphaned jobs requeued as retries.
     pub retries: u32,
     /// Whether the fault plane was active for this run. Gates the
-    /// serialization of the three counters above: an inert run emits
+    /// serialization of the fault counters above: an inert run emits
     /// exactly the pre-plane JSON, byte-for-byte (the golden-fixture
     /// contract). Not itself serialized.
     pub faults_active: bool,
+    /// Whether any graceful-degradation knob (domains, finite crews,
+    /// shedding) was set. Gates `shed`/`domain_faults` on the wire, so a
+    /// knobless faulted run keeps its pre-degrade bytes. Not serialized.
+    pub degrade_active: bool,
     /// Simulation events dispatched by the serving loop.
     pub events: u64,
     /// Serving horizon: last completion/expiry instant (s).
@@ -252,6 +262,13 @@ impl ServeReport {
             o.set("failed", self.failed)
                 .set("faults", self.faults)
                 .set("retries", self.retries);
+            if self.degrade_active {
+                // Degrade counters likewise only appear once a
+                // degradation knob is set: a knobless faulted run keeps
+                // its pre-degrade bytes exactly.
+                o.set("shed", self.shed)
+                    .set("domain_faults", self.domain_faults);
+            }
         }
         o.set("events", self.events)
             .set("makespan_s", self.makespan_s)
@@ -268,9 +285,17 @@ impl ServeReport {
 
     pub fn summary(&self) -> String {
         let fault_line = if self.faults_active {
+            let degrade = if self.degrade_active {
+                format!(
+                    " ({} domain events, {} jobs shed)",
+                    self.domain_faults, self.shed
+                )
+            } else {
+                String::new()
+            };
             format!(
-                "\nfaults: {} injected, {} retries, {} jobs failed",
-                self.faults, self.retries, self.failed
+                "\nfaults: {} injected, {} retries, {} jobs failed{}",
+                self.faults, self.retries, self.failed, degrade
             )
         } else {
             String::new()

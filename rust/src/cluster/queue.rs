@@ -48,6 +48,11 @@ pub enum JobState {
     /// A fault killed the job after its retry budget was exhausted
     /// (terminal, with an outcome: the job is lost).
     Failed,
+    /// Dropped by brown-out backpressure while still pending: surviving
+    /// capacity fell below the shed watermark and admission chose to
+    /// fail this job fast instead of letting it rot to deadline expiry
+    /// (terminal, with an outcome: the job is refused under degradation).
+    Shed,
 }
 
 /// A job plus its serving metadata.
@@ -250,6 +255,23 @@ impl AdmissionQueue {
         true
     }
 
+    /// Shed a pending job under brown-out backpressure: terminal, with
+    /// an outcome — the job is refused at `now` because surviving
+    /// capacity no longer justifies keeping it queued. Mirrors the
+    /// expiry transition (the job resolves and leaves the pending set)
+    /// but is accounted separately so degradation is measurable.
+    pub fn mark_shed(&mut self, id: u32, now: f64) -> crate::Result<()> {
+        if self.jobs.get(id as usize).map(|j| j.state) != Some(JobState::Pending) {
+            bail!(self.bad_transition(id, "pending", "shed"));
+        }
+        let j = &mut self.jobs[id as usize];
+        j.state = JobState::Shed;
+        j.finished_s = Some(now);
+        self.resolved += 1;
+        self.unqueue(id);
+        Ok(())
+    }
+
     /// Reject a just-admitted job outright (unservable footprint).
     pub fn reject(&mut self, id: u32, now: f64) -> crate::Result<()> {
         if self.jobs.get(id as usize).map(|j| j.state) != Some(JobState::Pending) {
@@ -309,6 +331,7 @@ impl AdmissionQueue {
                     | JobState::Forwarded
                     | JobState::Retrying
                     | JobState::Failed
+                    | JobState::Shed
             )
         })
     }
@@ -490,6 +513,31 @@ mod tests {
         assert!(q.mark_completed(0, 5.0).is_err());
         assert!(q.mark_retrying(0).is_err());
         assert!(!q.expire_if_pending(0, 20.0));
+    }
+
+    #[test]
+    fn shed_is_a_terminal_outcome_for_pending_jobs() {
+        let mut q = AdmissionQueue::new();
+        q.admit(job(0, 0.0, AppId::Faiss), 10.0).unwrap();
+        q.admit(job(1, 0.5, AppId::Hotspot), 10.0).unwrap();
+        q.mark_running(0, 1.0, 0, false).unwrap();
+        // Only pending jobs shed — a running job is refused as a typed error.
+        assert!(q.mark_shed(0, 2.0).is_err(), "shed a running job");
+        q.mark_shed(1, 2.0).unwrap();
+        assert_eq!(q.count(JobState::Shed), 1);
+        assert_eq!(q.pending_len(), 0);
+        assert_eq!(q.horizon_s(), 2.0, "a shed job resolves at the shed instant");
+        // Terminal: nothing else may touch it, and its stale deadline
+        // event must no-op.
+        assert!(q.mark_shed(1, 3.0).is_err(), "double shed");
+        assert!(q.mark_running(1, 3.0, 0, false).is_err());
+        assert!(!q.expire_if_pending(1, 20.0));
+        q.mark_completed(0, 4.0).unwrap();
+        assert!(q.all_resolved() && q.all_resolved_scan());
+        assert_eq!(
+            q.smallest_pending_footprint_gib(),
+            q.smallest_pending_footprint_scan()
+        );
     }
 
     #[test]

@@ -56,7 +56,7 @@
 //! bit-for-bit against it, and `nodes > 1` runs are differentially tested
 //! across thread counts (see `tests/integration.rs`).
 
-use super::faults::FaultKind;
+use super::faults::{FaultDomains, FaultKind, ShedPolicy};
 use super::fleet::{Fleet, Orphan};
 use super::queue::{AdmissionQueue, JobState};
 use super::reconfig;
@@ -65,6 +65,7 @@ use super::telemetry::{
     TelemetryConfig, TelemetryReport,
 };
 use super::{PlacementCost, Planner, PolicyKind, ServeConfig, ServeMode, ServeReport};
+use crate::gpu::nvlink::{Dir, NvlinkModel};
 use crate::gpu::{GpuUsage, PowerModel};
 use crate::mig::profile::{GiProfile, ProfileId};
 use crate::sim::{Engine, EventToken};
@@ -75,7 +76,7 @@ use crate::util::units::{ns_to_sec, sec_to_ns};
 use crate::workload::trace::{Job, JobTrace};
 use crate::workload::AppId;
 use anyhow::{bail, ensure};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
@@ -92,9 +93,16 @@ enum Ev {
     JobDone { gpu: usize, slot: usize, job: u32 },
     ReconfigDone(usize),
     /// The fault plane's next failure draw lands on this (local) GPU.
-    Fault(usize),
+    /// `gen` is the GPU's fault generation at scheduling time: a domain
+    /// cordon bumps the generation, so a pending per-GPU draw the cordon
+    /// superseded is dropped stale instead of firing on a cordoned board.
+    Fault { gpu: usize, gen: u64 },
     /// A hard-failed GPU finishes repair and rejoins the fleet.
     Recover(usize),
+    /// The next correlated event of one fault domain (index into
+    /// `Shard::domains`): every in-service member GPU is cordoned at
+    /// once. Exists only under `--fault-domains`.
+    DomainFault(usize),
 }
 
 /// Reusable dispatch state: the pending-id snapshot buffer and the
@@ -149,6 +157,10 @@ struct RetryState {
     /// across all killed attempts (0 = restart from scratch). The next
     /// placement serves only the remaining `1 - preserved` of the job.
     preserved: f64,
+    /// Restore-transfer seconds the next placement pays before serving
+    /// resumes: 0 while the checkpoint is local, priced off the CE-copy
+    /// H2D rate when the retry shipped cross-shard through a handoff.
+    restore_s: f64,
 }
 
 /// A job being handed off between shards at an epoch barrier.
@@ -180,6 +192,45 @@ struct Handoff {
     /// (0 when that class fits it directly) — the target shard must have
     /// this much Grace headroom for the offload path to be viable.
     host_need_bytes: u64,
+    /// `Some` when the pending job is a fault-plane retry: its restart
+    /// bookkeeping ships with the handoff so the destination restores
+    /// the checkpoint (paying a restore transfer) instead of the retry
+    /// staying pinned to the shard holding its state.
+    retry: Option<HandoffRetry>,
+}
+
+/// Restart bookkeeping a fault-plane retry carries through a cross-shard
+/// handoff.
+#[derive(Debug, Clone, Copy)]
+struct HandoffRetry {
+    /// Killed attempts so far (the bounded budget travels with the job).
+    attempts: u32,
+    /// Checkpoint-preserved fraction of the job; the destination prices
+    /// the restore transfer off this state's size.
+    preserved: f64,
+}
+
+/// One correlated fault domain as seen by a shard: the member GPUs this
+/// shard owns plus the domain's deterministic event stream. Rack domains
+/// can straddle shard boundaries: every straddling shard derives the
+/// identical stream from the fleet-global domain id and replays the
+/// identical draw sequence, so the correlated cordons land at identical
+/// virtual times on every shard — but only the `owner` (the shard
+/// holding the domain's lowest global GPU) counts and reports the event.
+struct DomainState {
+    /// Fleet-global domain id (the stream key).
+    id: u32,
+    /// First fleet-global GPU id the domain spans.
+    start: u32,
+    /// GPUs the domain spans fleet-wide (the last rack may be narrower).
+    width: u32,
+    /// Local ids of the member GPUs this shard owns, ascending.
+    local: Vec<usize>,
+    /// Whether this shard owns the domain's lowest global GPU id (the
+    /// unique reporter, so merged counts never double-count an event).
+    owner: bool,
+    /// The domain's event stream (identical on every straddling shard).
+    rng: Rng,
 }
 
 /// What a shard reports at an epoch barrier — the only state the
@@ -280,6 +331,22 @@ pub(crate) struct Shard<S: Sink> {
     /// Per-GPU flag: a transient fault poisoned the in-flight
     /// reconfiguration, which must be redone when it lands.
     reconfig_poisoned: Vec<bool>,
+    /// Per-GPU fault generation: bumped when a domain cordon supersedes
+    /// the GPU's pending per-GPU draw, so the stale event drops instead
+    /// of firing on a cordoned board. Sized with `fault_rngs`.
+    fault_gen: Vec<u64>,
+    /// Correlated fault domains overlapping this shard's GPU range
+    /// (empty unless `--fault-domains` is set).
+    domains: Vec<DomainState>,
+    /// Domain-level events fired (counted by owner shards only).
+    domain_faults: u32,
+    /// Repair crews currently working (tracked only with finite crews).
+    crews_busy: u32,
+    /// Cordoned GPUs waiting for a free crew: `(local gpu, ttr_s)` in
+    /// failure order — deterministic FIFO service.
+    repair_queue: VecDeque<(usize, f64)>,
+    /// Pending jobs shed by brown-out backpressure.
+    shed_count: u32,
     /// Fault-plane restart bookkeeping, keyed by fleet-global job id.
     retry: BTreeMap<u32, RetryState>,
     faults_injected: u32,
@@ -333,6 +400,12 @@ impl<S: Sink> Shard<S> {
             fault_rngs: Vec::new(),
             gpu_base: 0,
             reconfig_poisoned: Vec::new(),
+            fault_gen: Vec::new(),
+            domains: Vec::new(),
+            domain_faults: 0,
+            crews_busy: 0,
+            repair_queue: VecDeque::new(),
+            shed_count: 0,
             retry: BTreeMap::new(),
             faults_injected: 0,
             retries_done: 0,
@@ -352,14 +425,55 @@ impl<S: Sink> Shard<S> {
         }
         let n = self.fleet.gpus.len();
         self.reconfig_poisoned = vec![false; n];
+        self.fault_gen = vec![0; n];
         for g in 0..n {
             let mut rng = super::faults::FaultConfig::gpu_stream(
                 self.params.seed,
                 (gpu_base as usize) + g,
             );
             let ttf = self.params.faults.draw_ttf(&mut rng);
-            self.engine.schedule_at(sec_to_ns(ttf).max(1), Ev::Fault(g));
+            self.engine
+                .schedule_at(sec_to_ns(ttf).max(1), Ev::Fault { gpu: g, gen: 0 });
             self.fault_rngs.push(rng);
+        }
+        self.arm_domains(n);
+    }
+
+    /// Build this shard's view of the correlated fault domains and
+    /// schedule each one's first event. A node domain covers exactly
+    /// this shard (domain id = shard id); rack domains are fixed-width
+    /// windows of fleet-global GPU ids, so a rack straddling shards is
+    /// armed on each with the identical stream.
+    fn arm_domains(&mut self, n: usize) {
+        let base = self.gpu_base as usize;
+        let total = self.params.gpus as usize;
+        // (fleet-global domain id, global start, global end).
+        let spans: Vec<(usize, usize, usize)> = match self.params.faults.domains {
+            FaultDomains::None => return,
+            FaultDomains::Node => vec![(self.id, base, base + n)],
+            FaultDomains::Rack(w) => {
+                let w = w as usize;
+                ((base / w)..=((base + n - 1) / w))
+                    .map(|d| (d, d * w, ((d + 1) * w).min(total)))
+                    .collect()
+            }
+        };
+        for (id, start, end) in spans {
+            let local: Vec<usize> =
+                (start.max(base)..end.min(base + n)).map(|g| g - base).collect();
+            debug_assert!(!local.is_empty(), "a domain span overlaps its shard");
+            let mut rng = super::faults::FaultConfig::domain_stream(self.params.seed, id);
+            let ttf = self.params.faults.draw_ttf(&mut rng);
+            let d = self.domains.len();
+            self.domains.push(DomainState {
+                id: id as u32,
+                start: start as u32,
+                width: (end - start) as u32,
+                local,
+                owner: start >= base,
+                rng,
+            });
+            self.engine.schedule_at(sec_to_ns(ttf).max(1), Ev::DomainFault(d));
         }
     }
 
@@ -392,6 +506,23 @@ impl<S: Sink> Shard<S> {
             app: h.app,
             arrival_s: h.arrival_s,
         });
+        if let Some(hr) = h.retry {
+            // A cross-shard checkpoint restore: the preserved fraction of
+            // the job's footprint must stream host-to-device over the
+            // destination's CE copy path before serving resumes — the
+            // same engine rate the offload model charges for H2D staging.
+            let state_gib = hr.preserved * self.planner.footprint_gib(h.app);
+            let restore_s =
+                state_gib / NvlinkModel::default().memcpy_bw_gibs(Some(1), Dir::H2D);
+            self.retry.insert(
+                h.global_id,
+                RetryState {
+                    attempts: hr.attempts,
+                    preserved: hr.preserved,
+                    restore_s,
+                },
+            );
+        }
         self.metas.push(JobMeta {
             global_id: h.global_id,
             handoff_deadline_s: Some(h.deadline_abs_s),
@@ -410,12 +541,17 @@ impl<S: Sink> Shard<S> {
         if let Some(tok) = self.deadline_tokens[qid as usize].take() {
             self.engine.cancel(tok);
         }
+        let lid = self.qid_to_lid[qid as usize];
+        let gid = self.metas[lid as usize].global_id;
         if S::ENABLED {
-            let lid = self.qid_to_lid[qid as usize];
-            let gid = self.metas[lid as usize].global_id;
             let app = self.queue.jobs[qid as usize].job.app;
             self.sink
                 .emit(t_ns, Some(gid), EventKind::Handoff { app, dest, reason });
+        }
+        // A forwarded retry's checkpoint state travels in the handoff
+        // payload; the local copy is gone once the job leaves.
+        if !self.retry.is_empty() {
+            self.retry.remove(&gid);
         }
         self.queue
             .mark_forwarded(qid)
@@ -656,8 +792,16 @@ impl<S: Sink> Shard<S> {
                     &self.retry,
                 );
             }
-            Ev::Fault(g) => self.on_fault(time_ns, now, g),
+            Ev::Fault { gpu, gen } => {
+                // A domain cordon supersedes a pending per-GPU draw: the
+                // stale event (an older generation) drops silently, and a
+                // fresh draw is scheduled when the board recovers.
+                if self.fault_gen[gpu] == gen {
+                    self.on_fault(time_ns, now, gpu);
+                }
+            }
             Ev::Recover(g) => self.on_recover(time_ns, now, g),
+            Ev::DomainFault(d) => self.on_domain_fault(time_ns, now, d),
         }
     }
 
@@ -705,10 +849,8 @@ impl<S: Sink> Shard<S> {
                 }
                 self.reap_orphans(time_ns, now, g, &orphans);
                 let ttr = self.params.faults.draw_ttr(&mut self.fault_rngs[g]);
-                self.engine.schedule_at(
-                    time_ns.saturating_add(sec_to_ns(ttr).max(1)),
-                    Ev::Recover(g),
-                );
+                self.enqueue_repair(time_ns, g, ttr);
+                self.shed_check(time_ns, now);
             }
             FaultKind::Slice => {
                 self.faults_injected += 1;
@@ -768,6 +910,155 @@ impl<S: Sink> Shard<S> {
         }
     }
 
+    /// A correlated domain event fires: cordon every in-service member
+    /// GPU this shard owns. The draw order is fixed — every member's
+    /// repair time in global id order, then the gap to the next domain
+    /// event — so straddling shards' copies of the stream stay in
+    /// lockstep whatever slice of the domain each holds; only the owner
+    /// shard counts and reports the event.
+    fn on_domain_fault(&mut self, time_ns: u64, now: f64, d: usize) {
+        if !self.work_remains() {
+            return; // plane winds down with the run
+        }
+        let width = self.domains[d].width as usize;
+        let mut ttrs = Vec::with_capacity(width);
+        for _ in 0..width {
+            let ttr = self.params.faults.draw_ttr(&mut self.domains[d].rng);
+            ttrs.push(ttr);
+        }
+        let ttf = self.params.faults.draw_ttf(&mut self.domains[d].rng);
+        if self.domains[d].owner {
+            self.domain_faults += 1;
+            if S::ENABLED {
+                self.sink.emit(
+                    time_ns,
+                    None,
+                    EventKind::DomainFault {
+                        domain: self.domains[d].id,
+                        members: self.domains[d].width,
+                    },
+                );
+            }
+        }
+        let start = self.domains[d].start;
+        let members = self.domains[d].local.clone();
+        for g in members {
+            if self.fleet.gpus[g].cordoned() {
+                // Already down (an earlier per-GPU or domain fault): the
+                // in-flight repair stands — no second cordon, and the
+                // board's drawn repair time goes unused.
+                continue;
+            }
+            // The domain cordon supersedes any pending per-GPU draw.
+            self.fault_gen[g] += 1;
+            let global_gpu = self.gpu_base + g as u32;
+            let orphans = self.fleet.cordon_gpu(g, now);
+            if S::ENABLED {
+                self.sink
+                    .emit(time_ns, None, EventKind::Cordon { gpu: global_gpu });
+            }
+            self.reap_orphans(time_ns, now, g, &orphans);
+            let ttr = ttrs[(global_gpu - start) as usize];
+            self.enqueue_repair(time_ns, g, ttr);
+        }
+        self.shed_check(time_ns, now);
+        self.engine.schedule_at(
+            time_ns.saturating_add(sec_to_ns(ttf).max(1)),
+            Ev::DomainFault(d),
+        );
+    }
+
+    /// Schedule a cordoned GPU's repair. With unlimited crews (the
+    /// default, `repair_crews == 0`) repair starts immediately —
+    /// bit-identical to the pre-crew plane. With `N >= 1` crews per
+    /// node shard, repair is a FIFO-queued service: the drawn MTTR
+    /// becomes service time, paid only once a crew picks the board up.
+    fn enqueue_repair(&mut self, time_ns: u64, g: usize, ttr_s: f64) {
+        let crews = self.params.faults.repair_crews;
+        if crews == 0 {
+            self.engine.schedule_at(
+                time_ns.saturating_add(sec_to_ns(ttr_s).max(1)),
+                Ev::Recover(g),
+            );
+            return;
+        }
+        if self.crews_busy < crews {
+            self.crews_busy += 1;
+            if S::ENABLED {
+                self.sink.emit(
+                    time_ns,
+                    None,
+                    EventKind::RepairStart {
+                        gpu: self.gpu_base + g as u32,
+                    },
+                );
+            }
+            self.engine.schedule_at(
+                time_ns.saturating_add(sec_to_ns(ttr_s).max(1)),
+                Ev::Recover(g),
+            );
+        } else {
+            if S::ENABLED {
+                self.sink.emit(
+                    time_ns,
+                    None,
+                    EventKind::RepairQueued {
+                        gpu: self.gpu_base + g as u32,
+                    },
+                );
+            }
+            self.repair_queue.push_back((g, ttr_s));
+        }
+    }
+
+    /// Brown-out backpressure: when a capacity-loss event leaves fewer
+    /// than the watermark fraction of this node's boards in service,
+    /// trim the pending queue proportionally to the surviving fraction,
+    /// shedding lowest-slack (earliest-deadline) jobs first. Purely
+    /// node-local and deterministic (ties break on queue id).
+    fn shed_check(&mut self, time_ns: u64, now: f64) {
+        let ShedPolicy::Watermark(watermark) = self.params.faults.shed else {
+            return;
+        };
+        let total = self.fleet.gpus.len();
+        let up = self.fleet.gpus.iter().filter(|g| !g.cordoned()).count();
+        let frac = up as f64 / total as f64;
+        if frac >= watermark {
+            return;
+        }
+        let mut victims: Vec<(f64, u32)> = self
+            .queue
+            .pending_ids()
+            .map(|qid| (self.queue.jobs[qid as usize].deadline_s, qid))
+            .collect();
+        let keep = (victims.len() as f64 * frac).floor() as usize;
+        let drop = victims.len() - keep;
+        if drop == 0 {
+            return;
+        }
+        victims.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        victims.truncate(drop);
+        for (_, qid) in victims {
+            if let Some(tok) = self.deadline_tokens[qid as usize].take() {
+                self.engine.cancel(tok);
+            }
+            let lid = self.qid_to_lid[qid as usize];
+            let gid = self.metas[lid as usize].global_id;
+            let app = self.queue.jobs[qid as usize].job.app;
+            self.queue
+                .mark_shed(qid, now)
+                .expect("shedding only visits pending ids");
+            if !self.retry.is_empty() {
+                // A shed retry is terminal: its checkpoint dies with it.
+                self.retry.remove(&gid);
+            }
+            self.shed_count += 1;
+            if S::ENABLED {
+                self.sink.emit(time_ns, Some(gid), EventKind::Shed { app });
+            }
+        }
+    }
+
     /// A hard-failed GPU finished repair: it rejoins every placement
     /// surface (the epoch bump invalidates the dispatch memo, so pending
     /// jobs immediately retry against the returned capacity).
@@ -781,6 +1072,28 @@ impl<S: Sink> Shard<S> {
                     gpu: self.gpu_base + g as u32,
                 },
             );
+        }
+        if self.params.faults.repair_crews > 0 {
+            // The crew that finished here picks up the next queued board
+            // — even when the run is winding down, so every cordoned GPU
+            // is eventually repaired and the engine still drains.
+            self.crews_busy -= 1;
+            if let Some((next, ttr_s)) = self.repair_queue.pop_front() {
+                self.crews_busy += 1;
+                if S::ENABLED {
+                    self.sink.emit(
+                        time_ns,
+                        None,
+                        EventKind::RepairStart {
+                            gpu: self.gpu_base + next as u32,
+                        },
+                    );
+                }
+                self.engine.schedule_at(
+                    time_ns.saturating_add(sec_to_ns(ttr_s).max(1)),
+                    Ev::Recover(next),
+                );
+            }
         }
         if self.work_remains() {
             self.schedule_next_fault(time_ns, g);
@@ -806,8 +1119,10 @@ impl<S: Sink> Shard<S> {
 
     fn schedule_next_fault(&mut self, time_ns: u64, g: usize) {
         let ttf = self.params.faults.draw_ttf(&mut self.fault_rngs[g]);
-        self.engine
-            .schedule_at(time_ns.saturating_add(sec_to_ns(ttf).max(1)), Ev::Fault(g));
+        self.engine.schedule_at(
+            time_ns.saturating_add(sec_to_ns(ttf).max(1)),
+            Ev::Fault { gpu: g, gen: self.fault_gen[g] },
+        );
     }
 
     /// Resolve every job a fault just killed: requeue it as a bounded
@@ -830,6 +1145,7 @@ impl<S: Sink> Shard<S> {
             let entry = self.retry.entry(gid).or_insert(RetryState {
                 attempts: 0,
                 preserved: 0.0,
+                restore_s: 0.0,
             });
             let attempt_s = o.until_s - o.started_s;
             if attempt_s > 0.0 {
@@ -837,6 +1153,10 @@ impl<S: Sink> Shard<S> {
                 entry.preserved += kept / attempt_s * (1.0 - entry.preserved);
             }
             entry.attempts += 1;
+            // Whatever survived now lives on this shard: a placement here
+            // restores locally at no transfer cost (a later cross-shard
+            // handoff re-prices the move).
+            entry.restore_s = 0.0;
             let attempt = entry.attempts;
             if attempt <= self.params.faults.retries {
                 self.queue
@@ -959,12 +1279,6 @@ impl<S: Sink> Shard<S> {
                 if meta.handoff_deadline_s.is_some() || qj.handoff {
                     continue; // at most one hop per job
                 }
-                if meta.retry.is_some() {
-                    // A fault-plane retry stays on the shard that holds
-                    // its checkpoint/restore state (see ROADMAP for
-                    // cross-shard restore as a follow-up).
-                    continue;
-                }
                 if qj.job.arrival_s > barrier_s - self.lookahead_s {
                     continue; // has not waited a full epoch yet
                 }
@@ -975,6 +1289,13 @@ impl<S: Sink> Shard<S> {
                     (meta.global_id, qj.job.app, qj.job.arrival_s, qj.deadline_s);
                 let (min_host_gib, min_direct_gib, direct_need_gib, host_need_bytes) =
                     self.handoff_reqs(app);
+                // A pending fault-plane retry is no longer pinned home:
+                // its checkpoint state ships with the handoff, and the
+                // destination pays the restore transfer.
+                let retry = self.retry.get(&global_id).map(|r| HandoffRetry {
+                    attempts: r.attempts,
+                    preserved: r.preserved,
+                });
                 candidates.push(Handoff {
                     global_id,
                     origin: self.id,
@@ -986,6 +1307,7 @@ impl<S: Sink> Shard<S> {
                     min_direct_gib,
                     direct_need_gib,
                     host_need_bytes,
+                    retry,
                 });
             }
         }
@@ -1131,10 +1453,13 @@ fn merge_report<S: Sink>(cfg: &ServeConfig, shards: &[Shard<S>]) -> ServeReport 
         expired: count(JobState::Expired),
         rejected: count(JobState::Rejected),
         failed: count(JobState::Failed),
+        shed: count(JobState::Shed),
         offloaded,
         faults: shards.iter().map(|s| s.faults_injected).sum(),
+        domain_faults: shards.iter().map(|s| s.domain_faults).sum(),
         retries: shards.iter().map(|s| s.retries_done).sum(),
         faults_active: cfg.faults.active(),
+        degrade_active: cfg.faults.degraded(),
         reconfigs: shards
             .iter()
             .map(|s| s.fleet.gpus.iter().map(|g| g.reconfigs).sum::<u32>())
@@ -1227,13 +1552,14 @@ fn dispatch<S: Sink>(
             // those already streaming over it — see ROADMAP follow-ups).
             // A retry restores from its last checkpoint: the preserved
             // fraction of the job is already done, so only the remainder
-            // is served (the branch keeps inert-path runtimes
-            // bit-identical — no float multiply sneaks in).
-            let frac = retry
+            // is served — plus the restore transfer when the checkpoint
+            // shipped cross-shard (the branch keeps inert-path runtimes
+            // bit-identical — no float arithmetic sneaks in).
+            let (frac, restore_s) = retry
                 .get(&metas[qid_to_lid[id as usize] as usize].global_id)
-                .map_or(0.0, |r| r.preserved);
+                .map_or((0.0, 0.0), |r| (r.preserved, r.restore_s));
             let runtime_s = if frac > 0.0 {
-                c.runtime_s * (1.0 - frac)
+                c.runtime_s * (1.0 - frac) + restore_s
             } else {
                 c.runtime_s
             };
@@ -2331,6 +2657,7 @@ mod tests {
                     min_direct_gib: 11.0,
                     direct_need_gib: 1.0,
                     host_need_bytes: 0,
+                    retry: None,
                 },
                 2.0,
             );
@@ -2408,6 +2735,7 @@ mod tests {
                 min_direct_gib: 11.0,
                 direct_need_gib: 1.0,
                 host_need_bytes: 0,
+                retry: None,
             },
             2.0,
         );
@@ -2556,5 +2884,114 @@ mod tests {
         );
         let replay = serve_sharded_replay(&scfg, &trace).unwrap();
         assert_eq!(synth.to_json().pretty(), replay.to_json().pretty());
+    }
+
+    #[test]
+    fn inert_degrade_knobs_keep_the_faulted_report_bit_identical() {
+        // An active fault plane with every degradation knob at its
+        // default reproduces the pre-degrade plane byte-for-byte: no
+        // domain events, unlimited instant repair, no shedding.
+        let mut cfg = base_cfg();
+        cfg.faults =
+            super::super::faults::FaultConfig::from_spec("gpu,slice", 10.0, 3.0, 2, 1.0).unwrap();
+        let plain = super::super::serve(&cfg).unwrap();
+        let mut knobs = cfg.clone();
+        knobs.faults = knobs
+            .faults
+            .with_degrade(FaultDomains::None, 0, ShedPolicy::None)
+            .unwrap();
+        let k = super::super::serve(&knobs).unwrap();
+        assert_eq!(plain.to_json().pretty(), k.to_json().pretty());
+        assert_eq!(k.shed, 0);
+        assert_eq!(k.domain_faults, 0);
+    }
+
+    #[test]
+    fn degraded_runs_conserve_jobs_and_match_the_oracle() {
+        // Rack domains (uneven last rack), one repair crew, and a shed
+        // watermark all at once: every admitted job still resolves
+        // exactly once under the extended conservation equation, and
+        // Indexed agrees with the naive oracle bit-for-bit.
+        let mut cfg = base_cfg();
+        cfg.faults = super::super::faults::FaultConfig::from_spec("gpu", 8.0, 6.0, 2, 1.0)
+            .unwrap()
+            .with_degrade(FaultDomains::Rack(3), 1, ShedPolicy::Watermark(0.75))
+            .unwrap();
+        for mode in [ServeMode::Indexed, ServeMode::NaiveOracle] {
+            let r = super::super::serve_with(&cfg, mode).unwrap();
+            assert!(r.domain_faults > 0, "rack events must fire (mode {mode:?})");
+            assert_eq!(
+                r.completed + r.expired + r.rejected + r.failed + r.shed,
+                r.jobs,
+                "mode {mode:?}"
+            );
+        }
+        let i = super::super::serve_with(&cfg, ServeMode::Indexed).unwrap();
+        let n = super::super::serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
+        assert_eq!(i.to_json().pretty(), n.to_json().pretty());
+    }
+
+    #[test]
+    fn fewer_crews_never_complete_more_jobs_under_a_burst() {
+        // Node-wide domain events with long repairs: one crew serializes
+        // the burst's repairs (boards stay cordoned far beyond MTTR),
+        // four crews clear it in parallel — strictly more jobs complete.
+        let mut base = base_cfg();
+        base.jobs = 80;
+        base.faults =
+            super::super::faults::FaultConfig::from_spec("gpu", 12.0, 15.0, 2, 1.0).unwrap();
+        let mk = |crews: u32| {
+            let mut c = base.clone();
+            c.faults = c
+                .faults
+                .with_degrade(FaultDomains::Node, crews, ShedPolicy::None)
+                .unwrap();
+            super::super::serve(&c).unwrap()
+        };
+        let one = mk(1);
+        let four = mk(4);
+        assert!(one.domain_faults > 0, "the burst must actually happen");
+        for r in [&one, &four] {
+            assert_eq!(
+                r.completed + r.expired + r.rejected + r.failed + r.shed,
+                r.jobs
+            );
+        }
+        assert!(
+            one.completed < four.completed,
+            "1 crew vs 4 crews: {} vs {} completed",
+            one.completed,
+            four.completed
+        );
+    }
+
+    #[test]
+    fn degraded_sharded_runs_are_thread_invariant() {
+        // Racks straddling shard boundaries (4 shards x 1 GPU, rack
+        // width 2), one crew per shard, and shedding: domain streams key
+        // on the fleet-global domain id, so the merged report must not
+        // depend on the worker count.
+        let mut base = base_cfg();
+        base.faults = super::super::faults::FaultConfig::from_spec("gpu", 25.0, 5.0, 2, 2.0)
+            .unwrap()
+            .with_degrade(FaultDomains::Rack(2), 1, ShedPolicy::Watermark(0.5))
+            .unwrap();
+        let mut first: Option<String> = None;
+        for threads in [1u32, 2, 4] {
+            let mut scfg = ShardServeConfig::new(base.clone(), 4, threads);
+            scfg.route = RouteKind::LeastLoaded;
+            let r = serve_sharded(&scfg).unwrap();
+            let rep = &r.report;
+            assert_eq!(
+                rep.completed + rep.expired + rep.rejected + rep.failed + rep.shed,
+                rep.jobs
+            );
+            assert!(rep.domain_faults > 0, "straddling racks must fire");
+            let key = rep.to_json().pretty();
+            match &first {
+                None => first = Some(key),
+                Some(f) => assert_eq!(*f, key, "threads={threads}"),
+            }
+        }
     }
 }

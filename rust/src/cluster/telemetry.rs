@@ -138,6 +138,23 @@ pub enum EventKind {
     /// A fault killed this job's running instance with the retry budget
     /// spent: the job is lost.
     Fail { app: AppId },
+    /// A correlated fault took down fault domain `domain` (node- or
+    /// rack-scoped, spanning `members` GPUs), cordoning every member
+    /// still in service at once. A per-GPU `Cordon` event follows for
+    /// each board actually taken down. Emitted once per domain event, by
+    /// the shard owning the domain's lowest global GPU id.
+    DomainFault { domain: u32, members: u32 },
+    /// Every repair crew is busy: `gpu` joined the FIFO repair backlog
+    /// and stays cordoned until a crew frees up (only emitted when
+    /// `--repair-crews` bounds repair concurrency).
+    RepairQueued { gpu: u32 },
+    /// A repair crew began servicing `gpu`; the matching `Recover` is
+    /// the repair-done event (only emitted when `--repair-crews` bounds
+    /// repair concurrency).
+    RepairStart { gpu: u32 },
+    /// Brown-out backpressure dropped this pending job: surviving
+    /// capacity fell below the shed watermark (terminal outcome).
+    Shed { app: AppId },
 }
 
 impl EventKind {
@@ -156,6 +173,10 @@ impl EventKind {
             EventKind::Recover { .. } => "recover",
             EventKind::Retry { .. } => "retry",
             EventKind::Fail { .. } => "fail",
+            EventKind::DomainFault { .. } => "domain_fault",
+            EventKind::RepairQueued { .. } => "repair_queued",
+            EventKind::RepairStart { .. } => "repair_start",
+            EventKind::Shed { .. } => "shed",
         }
     }
 }
@@ -257,8 +278,14 @@ impl TraceEvent {
             EventKind::Retry { app, attempt } => {
                 j.set("app", app.name()).set("attempt", *attempt);
             }
-            EventKind::Fail { app } => {
+            EventKind::Fail { app } | EventKind::Shed { app } => {
                 j.set("app", app.name());
+            }
+            EventKind::DomainFault { domain, members } => {
+                j.set("domain", *domain).set("members", *members);
+            }
+            EventKind::RepairQueued { gpu } | EventKind::RepairStart { gpu } => {
+                j.set("gpu", *gpu);
             }
         }
         j
@@ -946,6 +973,7 @@ pub mod audit {
         Handoff,
         Retry,
         Fail,
+        Shed,
     }
 
     /// Totals of a passing audit.
@@ -958,6 +986,7 @@ pub mod audit {
         pub handoffs: u64,
         pub failed: u64,
         pub retries: u64,
+        pub shed: u64,
     }
 
     impl AuditReport {
@@ -971,6 +1000,9 @@ pub mod audit {
                     " [faults: {} retries, {} failed]",
                     self.retries, self.failed
                 ));
+            }
+            if self.shed > 0 {
+                s.push_str(&format!(" [degraded: {} shed]", self.shed));
             }
             s
         }
@@ -987,6 +1019,7 @@ pub mod audit {
         handoffs: u64,
         retries: u64,
         fails: u64,
+        sheds: u64,
     }
 
     fn check(jobs: BTreeMap<u32, JobLedger>) -> crate::Result<AuditReport> {
@@ -1012,10 +1045,10 @@ pub mod audit {
                 l.handoffs,
                 l.readmits
             );
-            let terminals = l.completes + l.expires + l.rejects + l.fails;
+            let terminals = l.completes + l.expires + l.rejects + l.fails + l.sheds;
             ensure!(
                 terminals == 1,
-                "job {id}: {terminals} terminal events (exactly one of complete/expire/reject/fail required)"
+                "job {id}: {terminals} terminal events (exactly one of complete/expire/reject/fail/shed required)"
             );
             // Every placement ends exactly one way: it completes, or a
             // fault kills it into a retry, or into a terminal fail.
@@ -1034,6 +1067,7 @@ pub mod audit {
             r.handoffs += l.handoffs;
             r.failed += l.fails;
             r.retries += l.retries;
+            r.shed += l.sheds;
         }
         Ok(r)
     }
@@ -1050,6 +1084,7 @@ pub mod audit {
             AuditKind::Handoff => l.handoffs += 1,
             AuditKind::Retry => l.retries += 1,
             AuditKind::Fail => l.fails += 1,
+            AuditKind::Shed => l.sheds += 1,
         }
     }
 
@@ -1066,11 +1101,15 @@ pub mod audit {
                 EventKind::Handoff { .. } => AuditKind::Handoff,
                 EventKind::Retry { .. } => AuditKind::Retry,
                 EventKind::Fail { .. } => AuditKind::Fail,
+                EventKind::Shed { .. } => AuditKind::Shed,
                 EventKind::Reconfig { .. }
                 | EventKind::OffloadDenied { .. }
                 | EventKind::Fault { .. }
                 | EventKind::Cordon { .. }
-                | EventKind::Recover { .. } => continue,
+                | EventKind::Recover { .. }
+                | EventKind::DomainFault { .. }
+                | EventKind::RepairQueued { .. }
+                | EventKind::RepairStart { .. } => continue,
             };
             let id = match e.job {
                 Some(id) => id,
@@ -1120,6 +1159,7 @@ pub mod audit {
                 "handoff" => AuditKind::Handoff,
                 "retry" => AuditKind::Retry,
                 "fail" => AuditKind::Fail,
+                "shed" => AuditKind::Shed,
                 _ => continue,
             };
             let id = doc
@@ -1392,6 +1432,71 @@ mod tests {
             ev(8, 4, 0, complete.clone()),
         ];
         assert!(audit::audit(&events).is_err(), "fail then complete");
+    }
+
+    #[test]
+    fn audit_tracks_degraded_outcomes() {
+        // Job 0 is shed by brown-out backpressure: a terminal outcome the
+        // ledger balances like fail/expire. Domain-fault and repair-crew
+        // events carry no job lifecycle and are skipped.
+        let events = vec![
+            admit(0, 0, 0, false),
+            TraceEvent {
+                t_ns: 3,
+                shard: 0,
+                seq: 1,
+                job: None,
+                kind: EventKind::DomainFault { domain: 0, members: 2 },
+            },
+            TraceEvent {
+                t_ns: 3,
+                shard: 0,
+                seq: 2,
+                job: None,
+                kind: EventKind::RepairQueued { gpu: 1 },
+            },
+            TraceEvent {
+                t_ns: 9,
+                shard: 0,
+                seq: 3,
+                job: None,
+                kind: EventKind::RepairStart { gpu: 1 },
+            },
+            ev(4, 4, 0, EventKind::Shed { app: AppId::Faiss }),
+        ];
+        let r = audit::audit(&events).unwrap();
+        assert_eq!(r.jobs, 1);
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.completed + r.expired + r.rejected + r.failed, 0);
+        assert!(r.summary().contains("1 shed"));
+        // Shed is terminal: a later completion is a double-terminal.
+        let events = vec![
+            admit(0, 0, 0, false),
+            ev(4, 1, 0, EventKind::Shed { app: AppId::Faiss }),
+            ev(
+                9,
+                2,
+                0,
+                EventKind::Complete {
+                    app: AppId::Faiss,
+                    wait_ns: 1,
+                    service_ns: 5,
+                    slack_ns: 0,
+                    offloaded: false,
+                },
+            ),
+        ];
+        assert!(audit::audit(&events).is_err(), "shed then complete");
+        // And the JSONL path recognizes the shed tag.
+        let mut report = TelemetryReport::new();
+        let mut chunk = TelemetryChunk::new(0);
+        chunk.events.push(admit(0, 0, 0, false));
+        chunk.events.push(ev(4, 1, 0, EventKind::Shed { app: AppId::Faiss }));
+        report.absorb(chunk);
+        report.finalize();
+        let r = audit::audit_jsonl(&report.to_jsonl()).unwrap();
+        assert_eq!(r.shed, 1);
+        assert_eq!(r, audit::audit(&report.events).unwrap());
     }
 
     #[test]

@@ -46,7 +46,7 @@ fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "serve",
             summary: "online cluster serving: admission + placement + reconfig",
-            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--faults SPEC] [--mttf S] [--mttr S] [--retries N] [--checkpoint-dt S] [--trace FILE] [--save-trace FILE] [--telemetry FILE] [--sample-dt S] [--json]",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--faults SPEC] [--mttf S] [--mttr S] [--retries N] [--checkpoint-dt S] [--fault-domains node|rack:R] [--repair-crews N] [--shed-policy watermark:F] [--trace FILE] [--save-trace FILE] [--telemetry FILE] [--sample-dt S] [--json]",
         },
         CommandSpec {
             name: "audit-trace",
@@ -272,6 +272,9 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         "mttr",
         "retries",
         "checkpoint-dt",
+        "fault-domains",
+        "repair-crews",
+        "shed-policy",
         "trace",
         "save-trace",
         "telemetry",
@@ -293,7 +296,15 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
     // spec; accepting them silently would let a user believe they ran a
     // fault-injection study that never injected anything.
     if args.opt("faults").is_none() {
-        for opt in ["mttf", "mttr", "retries", "checkpoint-dt"] {
+        for opt in [
+            "mttf",
+            "mttr",
+            "retries",
+            "checkpoint-dt",
+            "fault-domains",
+            "repair-crews",
+            "shed-policy",
+        ] {
             anyhow::ensure!(
                 args.opt(opt).is_none(),
                 "--{opt} has no effect without --faults SPEC"
@@ -301,6 +312,28 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         }
     }
     let fault_defaults = migsim::cluster::FaultConfig::default();
+    let domains = match args.opt("fault-domains") {
+        None => migsim::cluster::FaultDomains::None,
+        Some(s) => migsim::cluster::FaultDomains::parse(s)?,
+    };
+    // `--repair-crews 0` is not "unlimited" — omitting the flag is. An
+    // explicit zero means no crew could ever repair anything, which is
+    // never what a degradation study intends.
+    let repair_crews = match args.opt("repair-crews") {
+        None => 0,
+        Some(_) => {
+            let n = args.opt_u64("repair-crews", 0).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(
+                n >= 1,
+                "--repair-crews must be a positive integer (omit the flag for unlimited crews), got {n}"
+            );
+            n as u32
+        }
+    };
+    let shed = match args.opt("shed-policy") {
+        None => migsim::cluster::ShedPolicy::None,
+        Some(s) => migsim::cluster::ShedPolicy::parse(s)?,
+    };
     let faults = migsim::cluster::FaultConfig::from_spec(
         args.opt_or("faults", "none"),
         args.opt_f64("mttf", fault_defaults.mttf_s)
@@ -311,7 +344,8 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
             .map_err(anyhow::Error::msg)? as u32,
         args.opt_f64("checkpoint-dt", fault_defaults.checkpoint_dt_s)
             .map_err(anyhow::Error::msg)?,
-    )?;
+    )?
+    .with_degrade(domains, repair_crews, shed)?;
     let serve_cfg = migsim::cluster::ServeConfig {
         gpus: args.opt_u64("gpus", 4).map_err(anyhow::Error::msg)? as u32,
         policy,
@@ -598,6 +632,46 @@ mod tests {
             (
                 &["serve", "--faults", "gpu", "--retries", "x"],
                 "--retries expects an integer",
+            ),
+            (
+                &["serve", "--fault-domains", "node"],
+                "--fault-domains has no effect without --faults",
+            ),
+            (
+                &["serve", "--repair-crews", "2"],
+                "--repair-crews has no effect without --faults",
+            ),
+            (
+                &["serve", "--shed-policy", "watermark:0.5"],
+                "--shed-policy has no effect without --faults",
+            ),
+            (
+                &["serve", "--faults", "none", "--fault-domains", "node"],
+                "no effect without an active --faults SPEC",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--repair-crews", "0"],
+                "--repair-crews must be a positive integer",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--repair-crews", "-1"],
+                "--repair-crews expects an integer",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--fault-domains", "rack:0"],
+                "rack width must be >= 1",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--fault-domains", "mesh"],
+                "unknown grammar 'mesh'",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--shed-policy", "watermark:1.5"],
+                "watermark must be in (0, 1]",
+            ),
+            (
+                &["serve", "--faults", "gpu", "--shed-policy", "drop-all"],
+                "unknown grammar 'drop-all'",
             ),
         ];
         for (argv, want) in matrix {

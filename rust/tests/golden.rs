@@ -149,6 +149,34 @@ fn sharded_serve_report_matches_committed_fixture() {
 }
 
 #[test]
+fn degraded_serve_report_matches_committed_fixture() {
+    // One degraded fixture pins the whole graceful-degradation plane —
+    // correlated node domains, a single repair crew, watermark shedding,
+    // checkpointed retries — end-to-end: a drift in the domain streams,
+    // the crew queue discipline, the shed victim order, or the restore
+    // pricing shows up here even if both serve modes drift together.
+    use migsim::cluster::{FaultConfig, FaultDomains, ShedPolicy};
+    let cfg = ServeConfig {
+        faults: FaultConfig::from_spec("gpu", 8.0, 6.0, 2, 1.0)
+            .unwrap()
+            .with_degrade(FaultDomains::Node, 1, ShedPolicy::Watermark(0.75))
+            .unwrap(),
+        ..base_cfg()
+    };
+    let r = serve(&cfg).unwrap();
+    assert!(r.domain_faults > 0, "the fixture run must fire domain events");
+    assert_eq!(
+        r.completed + r.expired + r.rejected + r.failed + r.shed,
+        r.jobs,
+        "the fixture run must conserve jobs"
+    );
+    let rendered = format!("{}\n", r.to_json().pretty());
+    if check_fixture("serve_degraded_node_crews1_wm0.75_7_b1.json", &rendered) {
+        eprintln!("fixture blessed — `git add rust/tests/fixtures` and commit");
+    }
+}
+
+#[test]
 fn committed_fixtures_are_valid_canonical_json() {
     // Whatever is committed must parse with the in-repo parser and be in
     // canonical pretty form (ending with exactly one newline) — catches

@@ -1082,3 +1082,131 @@ fn faulted_trace_audits_clean_and_agrees_with_the_report() {
     let from_file = audit::audit_jsonl(&tel.to_jsonl()).unwrap();
     assert_eq!(from_file, a, "text and in-memory audits must agree");
 }
+
+#[test]
+fn degraded_trace_audits_clean_and_agrees_with_the_report() {
+    // Telemetry × graceful degradation: a sharded traced run with
+    // correlated domains, one repair crew, and watermark shedding emits
+    // domain_fault/repair_queued/repair_start/shed events that pass the
+    // full lifecycle audit (shed is a terminal outcome in the ledger), and
+    // the audit's totals agree with the merged ServeReport counters —
+    // including the extended conservation identity.
+    use migsim::cluster::telemetry::audit;
+    use migsim::cluster::{
+        serve_sharded_traced, FaultConfig, FaultDomains, LayoutPreset, PolicyKind, ServeConfig,
+        ShardServeConfig, ShedPolicy, TelemetryConfig,
+    };
+    let base = ServeConfig {
+        gpus: 4,
+        policy: PolicyKind::FirstFit,
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: 2.0,
+        jobs: 40,
+        deadline_s: 25.0,
+        reconfig: true,
+        seed: 0xDE6A1,
+        workload_scale: 0.05,
+        batch: 1,
+        faults: FaultConfig::from_spec("gpu", 6.0, 8.0, 2, 1.0)
+            .unwrap()
+            .with_degrade(FaultDomains::Node, 1, ShedPolicy::Watermark(0.75))
+            .unwrap(),
+        ..ServeConfig::default()
+    };
+    let scfg = ShardServeConfig::new(base, 2, 2);
+    let tcfg = TelemetryConfig { sample_dt_s: 0.5 };
+    let (sr, tel) = serve_sharded_traced(&scfg, &tcfg).unwrap();
+    let rep = &sr.report;
+    assert!(rep.domain_faults > 0, "node domains never fired at MTTF 6 s");
+    assert!(rep.shed > 0, "whole-node cordons never tripped the 0.75 watermark");
+    assert_eq!(
+        rep.completed + rep.expired + rep.rejected + rep.failed + rep.shed,
+        rep.jobs,
+        "degraded run lost jobs"
+    );
+    let a = audit::audit(&tel.events).unwrap();
+    assert_eq!(a.jobs, rep.jobs as u64);
+    assert_eq!(a.completed, rep.completed as u64);
+    assert_eq!(a.expired, rep.expired as u64);
+    assert_eq!(a.rejected, rep.rejected as u64);
+    assert_eq!(a.failed, rep.failed as u64);
+    assert_eq!(a.shed, rep.shed as u64);
+    assert_eq!(a.retries, rep.retries as u64);
+    // The degraded event kinds are actually on the wire, and the JSONL
+    // form (the `migsim audit-trace` path) audits identically.
+    use migsim::cluster::telemetry::EventKind;
+    let tags: std::collections::BTreeSet<&str> =
+        tel.events.iter().map(|e| e.kind.tag()).collect();
+    for tag in ["domain_fault", "shed", "repair_start"] {
+        assert!(tags.contains(tag), "trace carries no '{tag}' event");
+    }
+    assert!(
+        tel.events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::RepairQueued { .. })),
+        "one crew under node-wide cordons never queued a repair"
+    );
+    let from_file = audit::audit_jsonl(&tel.to_jsonl()).unwrap();
+    assert_eq!(from_file, a, "text and in-memory audits must agree");
+}
+
+#[test]
+fn a_checkpointed_retry_readmits_on_a_different_shard() {
+    // The cross-shard restore path, demonstrated end to end: a node-wide
+    // cordon with repairs far longer than the horizon orphans a running
+    // job into a retry on its origin shard; the origin can never serve it
+    // again, so the dispatcher must forward it — the trace shows the
+    // Retry on shard A and the same global job re-admitted as a handoff
+    // on shard B ≠ A, carrying its checkpoint through the barrier.
+    use migsim::cluster::telemetry::EventKind;
+    use migsim::cluster::{
+        serve_sharded_traced, FaultConfig, FaultDomains, LayoutPreset, PolicyKind, ServeConfig,
+        ShardServeConfig, ShedPolicy, TelemetryConfig,
+    };
+    let mut demonstrated = false;
+    'seeds: for seed in 0..12u64 {
+        let base = ServeConfig {
+            gpus: 2,
+            policy: PolicyKind::FirstFit,
+            layout: LayoutPreset::AllBig,
+            arrival_rate_hz: 1.0,
+            jobs: 25,
+            deadline_s: 40.0,
+            reconfig: false,
+            seed: 0xC5A0 + seed,
+            workload_scale: 0.05,
+            batch: 1,
+            // Hot hazard, repairs longer than any deadline: a cordoned
+            // 1-GPU shard is dead for the rest of the run, so its orphans
+            // either migrate or expire. Fine-grained checkpoints give the
+            // migrating retry preserved state to ship.
+            faults: FaultConfig::from_spec("gpu", 5.0, 500.0, 3, 0.5)
+                .unwrap()
+                .with_degrade(FaultDomains::Node, 1, ShedPolicy::None)
+                .unwrap(),
+            ..ServeConfig::default()
+        };
+        let mut scfg = ShardServeConfig::new(base, 2, 1);
+        scfg.forward = true;
+        let (_, tel) =
+            serve_sharded_traced(&scfg, &TelemetryConfig::default()).unwrap();
+        for e in &tel.events {
+            if let (EventKind::Retry { .. }, Some(gid)) = (&e.kind, e.job) {
+                let origin = e.shard;
+                if tel.events.iter().any(|h| {
+                    h.job == Some(gid)
+                        && h.shard != origin
+                        && h.t_ns >= e.t_ns
+                        && matches!(h.kind, EventKind::Admit { handoff: true, .. })
+                }) {
+                    demonstrated = true;
+                    break 'seeds;
+                }
+            }
+        }
+    }
+    assert!(
+        demonstrated,
+        "no retry ever re-admitted on a shard other than its checkpoint origin"
+    );
+}

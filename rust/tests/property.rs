@@ -822,6 +822,198 @@ fn enabled_but_empty_fault_plans_are_byte_inert() {
 }
 
 #[test]
+fn repair_crews_bound_concurrent_repairs_and_drain_the_backlog() {
+    // The finite-crew queueing discipline, checked against the event
+    // stream of traced degraded runs: within every shard, the number of
+    // in-service repairs (RepairStart seen, matching Recover not yet)
+    // never exceeds the crew count at any point in the total per-shard
+    // order, every cordoned GPU is eventually repaired (cordons ==
+    // recovers, nothing left in service or queued at drain), and the FIFO
+    // backlog fully drains (starts == cordons).
+    use migsim::cluster::telemetry::EventKind;
+    use migsim::cluster::{
+        serve_sharded_traced, serve_traced, FaultDomains, ServeMode, ShedPolicy, TelemetryConfig,
+    };
+    let mut rng = Rng::new(0xC4E35);
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall];
+    for case in 0..8 {
+        let nodes = 1 + rng.below(3) as u32;
+        let crews = 1 + rng.below(3) as u32;
+        let domains = match rng.below(3) {
+            0 => FaultDomains::Node,
+            1 => FaultDomains::Rack(1),
+            _ => FaultDomains::Rack(2),
+        };
+        let shed = if rng.chance(0.5) {
+            ShedPolicy::Watermark(0.5 + rng.range(0.0, 0.5))
+        } else {
+            ShedPolicy::None
+        };
+        let base = ServeConfig {
+            gpus: nodes + rng.below(4) as u32,
+            policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.0),
+            jobs: 20 + rng.below(20) as u32,
+            deadline_s: 15.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1,
+            faults: FaultConfig::from_spec(
+                "gpu",
+                2.0 + rng.range(0.0, 10.0),
+                1.0 + rng.range(0.0, 4.0),
+                rng.below(3) as u32,
+                if rng.chance(0.5) { f64::INFINITY } else { 1.0 },
+            )
+            .unwrap()
+            .with_degrade(domains, crews, shed)
+            .unwrap(),
+            ..ServeConfig::default()
+        };
+        let tel = if nodes > 1 {
+            let scfg = ShardServeConfig::new(base, nodes, 1);
+            serve_sharded_traced(&scfg, &TelemetryConfig::default()).unwrap().1
+        } else {
+            serve_traced(&base, ServeMode::Indexed, &TelemetryConfig::default())
+                .unwrap()
+                .1
+        };
+        for shard in 0..nodes {
+            let mut evs: Vec<_> = tel.events.iter().filter(|e| e.shard == shard).collect();
+            evs.sort_by_key(|e| e.seq);
+            let (mut in_service, mut cordons, mut starts, mut recovers, mut queued) =
+                (0i64, 0u32, 0u32, 0u32, 0u32);
+            for e in evs {
+                match e.kind {
+                    EventKind::Cordon { .. } => cordons += 1,
+                    EventKind::RepairQueued { .. } => queued += 1,
+                    EventKind::RepairStart { .. } => {
+                        starts += 1;
+                        in_service += 1;
+                        assert!(
+                            in_service <= crews as i64,
+                            "case {case} shard {shard}: {in_service} concurrent \
+                             repairs with {crews} crews"
+                        );
+                    }
+                    EventKind::Recover { .. } => {
+                        recovers += 1;
+                        in_service -= 1;
+                        assert!(in_service >= 0, "case {case}: Recover without RepairStart");
+                    }
+                    _ => {}
+                }
+            }
+            assert_eq!(in_service, 0, "case {case} shard {shard}: repairs still in service");
+            assert_eq!(
+                cordons, recovers,
+                "case {case} shard {shard}: a cordoned GPU was never repaired"
+            );
+            assert_eq!(
+                starts, cordons,
+                "case {case} shard {shard}: the repair backlog did not drain"
+            );
+            assert!(queued <= cordons, "case {case} shard {shard}: phantom queue entries");
+        }
+    }
+}
+
+#[test]
+fn degraded_serve_conserves_jobs_and_is_thread_invariant() {
+    // The full degradation stack (correlated domains × finite crews ×
+    // watermark shedding) over random configurations: the extended
+    // conservation identity holds (completed + expired + rejected +
+    // failed + shed == arrivals), reruns reproduce the bytes exactly, and
+    // the merged sharded report is bit-identical across worker-thread
+    // counts (domain streams key on the fleet-global domain id, never the
+    // shard partitioning or thread schedule).
+    use migsim::cluster::{FaultDomains, ShedPolicy};
+    let mut rng = Rng::new(0xDE64A);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig];
+    for case in 0..8 {
+        let nodes = 1 + rng.below(3) as u32;
+        let domains = match rng.below(3) {
+            0 => FaultDomains::Node,
+            1 => FaultDomains::Rack(1 + rng.below(3) as u32),
+            _ => FaultDomains::None,
+        };
+        let crews = rng.below(3) as u32;
+        let shed = if rng.chance(0.6) {
+            ShedPolicy::Watermark(0.3 + rng.range(0.0, 0.7))
+        } else {
+            ShedPolicy::None
+        };
+        let base = ServeConfig {
+            gpus: nodes + rng.below(4) as u32,
+            policy: *rng.choose(&policies),
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.5),
+            jobs: 20 + rng.below(20) as u32,
+            deadline_s: 15.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1 + rng.below(2) as u32,
+            faults: FaultConfig::from_spec(
+                "gpu,slice:0.5",
+                2.0 + rng.range(0.0, 15.0),
+                0.5 + rng.range(0.0, 4.0),
+                rng.below(3) as u32,
+                if rng.chance(0.5) { f64::INFINITY } else { 1.0 },
+            )
+            .unwrap()
+            .with_degrade(domains, crews, shed)
+            .unwrap(),
+            ..ServeConfig::default()
+        };
+        let a = serve(&base).unwrap();
+        assert_eq!(
+            a.completed + a.expired + a.rejected + a.failed + a.shed,
+            a.jobs,
+            "case {case}: jobs lost or duplicated under degraded operation ({base:?})"
+        );
+        assert_eq!(
+            a.to_json().compact(),
+            serve(&base).unwrap().to_json().compact(),
+            "case {case}: degraded run is not reproducible"
+        );
+        let mut scfg = ShardServeConfig::new(base.clone(), nodes, 1);
+        scfg.forward = rng.chance(0.7);
+        scfg.route = if rng.chance(0.5) {
+            RouteKind::RoundRobin
+        } else {
+            RouteKind::LeastLoaded
+        };
+        let s1 = serve_sharded(&scfg).unwrap();
+        let rep = &s1.report;
+        assert_eq!(
+            rep.completed + rep.expired + rep.rejected + rep.failed + rep.shed,
+            rep.jobs,
+            "case {case}: sharded degraded run lost jobs ({scfg:?})"
+        );
+        for threads in [2, 4] {
+            let st = serve_sharded(&ShardServeConfig {
+                threads,
+                ..scfg.clone()
+            })
+            .unwrap();
+            assert_eq!(
+                s1.report.to_json().compact(),
+                st.report.to_json().compact(),
+                "case {case}: {threads} threads changed a degraded report ({scfg:?})"
+            );
+        }
+    }
+}
+
+#[test]
 fn faulted_serve_conserves_jobs_and_is_thread_invariant() {
     // Active fault plans over random configurations: every job still
     // resolves exactly once (completed + expired + rejected + failed ==
