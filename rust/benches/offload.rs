@@ -147,6 +147,7 @@ fn main() {
             host_pool_gib: pool,
             c2c_contention: contention,
             energy_weight: 0.0,
+            ..ServeConfig::default()
         };
         let report = serve(&cfg).unwrap();
         let res = mb

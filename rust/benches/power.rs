@@ -1,0 +1,137 @@
+//! Power-plane overhead benchmark: end-to-end `cluster::serve` with the
+//! fleet power plane stepped on one knob at a time — plane off (the
+//! pre-plane serve loop), enabled with unbounded caps (governor armed,
+//! nothing bites), a moderate per-GPU cap, a node-wide activity budget,
+//! and the full stack with a harsh cap that throttles every placement —
+//! on a near-saturated fleet.
+//!
+//! The "off" cell is the zero-cost-when-off claim for this PR: with the
+//! plane disabled the tracker holds no per-GPU state, dispatch never
+//! computes a throttle level, and the serve loop's bits and speed match
+//! the pre-plane system. The "unbounded" cell prices the governor
+//! bookkeeping alone (usage aggregation, equilibrium levels, parked-idle
+//! repricing); the capped cells add throttle-priced placement and the
+//! integer-milliwatt admission gate.
+//!
+//! Besides the human-readable report (and the standard
+//! `results/bench/power.json`), this bench emits `BENCH_power.json` —
+//! machine-readable events/s for every cell, the per-cell overhead ratio
+//! over the plane-off baseline, and the throttle/starve counters — so the
+//! power plane's cost is tracked across PRs.
+//!
+//!     cargo bench --offline --bench power          # full measurement
+//!     cargo bench --offline --bench power -- --smoke   # CI bit-rot check
+
+use migsim::bench::{BenchConfig, Bencher};
+use migsim::cluster::{serve, LayoutPreset, PolicyKind, PowerPlaneConfig, ServeConfig};
+use migsim::util::json::Json;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(300),
+        max_iters: 8,
+    });
+    let smoke = b.smoke();
+    let gpus: u32 = if smoke { 8 } else { 64 };
+    let jobs: u32 = if smoke { 300 } else { 5_000 };
+
+    let cfg_with = |power: PowerPlaneConfig| ServeConfig {
+        gpus,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: gpus as f64 * 2.5,
+        jobs,
+        deadline_s: 45.0,
+        reconfig: true,
+        seed: 7,
+        workload_scale: 0.05,
+        batch: 1,
+        power,
+        ..ServeConfig::default()
+    };
+    let plane = |gpu_cap_w: f64, node_cap_w: f64| PowerPlaneConfig {
+        enabled: true,
+        gpu_cap_w,
+        node_cap_w,
+    };
+    let off = cfg_with(PowerPlaneConfig::default());
+    let unbounded = cfg_with(plane(f64::INFINITY, f64::INFINITY));
+    let gpu_cap = cfg_with(plane(450.0, f64::INFINITY));
+    let node_cap = cfg_with(plane(f64::INFINITY, gpus as f64 * 280.0));
+    // Below even a single busy 1g slice's demand: every placement prices
+    // at a throttled level, the worst case for the memoized cost tables.
+    let full = cfg_with(plane(250.0, gpus as f64 * 280.0));
+
+    let r_off = serve(&off).unwrap();
+    // An enabled-but-unbounded plane must preserve every scheduling
+    // outcome of the plane-off run — the governor only reprices the
+    // energy integral — before anything is timed.
+    let r_unbounded = serve(&unbounded).unwrap();
+    assert_eq!(r_off.completed, r_unbounded.completed);
+    assert_eq!(r_off.expired, r_unbounded.expired);
+    assert_eq!(r_off.reconfigs, r_unbounded.reconfigs);
+    assert_eq!(
+        r_off.makespan_s.to_bits(),
+        r_unbounded.makespan_s.to_bits(),
+        "an unbounded power plane moved the horizon before anything was timed"
+    );
+    assert_eq!(r_unbounded.throttled_gpu_s, 0.0, "infinite caps throttled");
+    let r_full = serve(&full).unwrap();
+    assert!(r_full.throttled_gpu_s > 0.0, "the full cell never throttled");
+    assert_eq!(
+        r_full.completed + r_full.expired + r_full.rejected,
+        r_full.jobs,
+        "job conservation broken under power caps"
+    );
+
+    let cells: [(&str, &ServeConfig); 5] = [
+        ("off", &off),
+        ("unbounded", &unbounded),
+        ("gpu_cap", &gpu_cap),
+        ("node_cap", &node_cap),
+        ("full", &full),
+    ];
+    let mut doc = Json::obj();
+    doc.set("suite", "power")
+        .set("smoke", smoke)
+        .set("gpus", gpus)
+        .set("jobs", jobs)
+        .set("throttled_gpu_s_full", r_full.throttled_gpu_s)
+        .set("parked_gpu_s_full", r_full.parked_gpu_s)
+        .set("power_starved_full", r_full.power_starved)
+        .set("completed_off", r_off.completed)
+        .set("completed_full", r_full.completed);
+    let mut off_wall = None;
+    for (label, sc) in cells {
+        let probe = serve(sc).unwrap();
+        let res = b
+            .bench_with_work(
+                &format!("power/{label}_{jobs}jobs_{gpus}gpus"),
+                Some(probe.events as f64),
+                "events",
+                || serve(sc).unwrap().completed,
+            )
+            .cloned();
+        if let Some(r) = res {
+            doc.set(&format!("{label}_wall_s"), r.mean_s)
+                .set(
+                    &format!("{label}_events_per_s"),
+                    probe.events as f64 / r.mean_s,
+                );
+            match off_wall {
+                None => off_wall = Some(r.mean_s),
+                Some(bw) => {
+                    doc.set(&format!("{label}_overhead_ratio"), r.mean_s / bw);
+                }
+            }
+        }
+    }
+    if std::fs::write("BENCH_power.json", doc.pretty()).is_ok() {
+        println!("-- wrote BENCH_power.json");
+    }
+
+    b.finish("power");
+}

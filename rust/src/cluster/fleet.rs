@@ -681,6 +681,33 @@ impl Fleet {
         }
     }
 
+    /// Like `first_open_fitting_per_share`, but one candidate per
+    /// distinct *GPU*: the first fitting slot on each board that has
+    /// one. The power-aware offload walk needs this because throttle
+    /// levels (and link shares) are per-GPU state — slots of one class
+    /// only tie on cost within a single board. The open set iterates in
+    /// ascending `(gpu, slot)` order, so a `last`-entry check suffices
+    /// for the dedup. Output entries are `(gpu, slot,
+    /// existing_offloaders)` in ascending `(gpu, slot)` order.
+    pub fn first_open_fitting_per_gpu(
+        &self,
+        profile: ProfileId,
+        occ: usize,
+        need_gib: f64,
+        out: &mut Vec<(usize, usize, u32)>,
+    ) {
+        out.clear();
+        for &(g, s) in self.index.open[occ][profile.index()].iter() {
+            if occ != 0 && !self.gpus[g].slots[s].fits(need_gib) {
+                continue;
+            }
+            if out.last().map_or(false, |&(lg, _, _)| lg == g) {
+                continue;
+            }
+            out.push((g, s, self.gpus[g].offloaders()));
+        }
+    }
+
     /// SMs of empty serving slots (reconfiguring GPUs excluded).
     /// O(profile classes) via the index.
     pub fn idle_slot_sms(&self) -> u32 {
@@ -1514,6 +1541,28 @@ mod tests {
         g.start_job(1, 0, 2, 0.0, 10.0, 20.0, 1 << 30);
         g.first_open_fitting_per_share(P7g96gb, 1, 5.0, &mut out);
         assert_eq!(out, vec![(0, 0, 1)]);
+    }
+
+    #[test]
+    fn per_gpu_candidates_keep_one_slot_per_board() {
+        let mut f = Fleet::with_batch(3, LayoutPreset::AllBig, 4).unwrap();
+        f.start_job(1, 0, 1, 0.0, 10.0, 20.0, 1 << 30);
+        f.start_job(2, 0, 2, 0.0, 10.0, 20.0, 1 << 30);
+        f.start_job(2, 0, 3, 0.0, 10.0, 20.0, 1 << 30);
+        let mut out = Vec::new();
+        // Unlike the per-share dedup, identical share levels on
+        // different boards each keep a candidate.
+        let mut g = Fleet::with_batch(2, LayoutPreset::AllBig, 2).unwrap();
+        g.start_job(0, 0, 1, 0.0, 10.0, 20.0, 1 << 30);
+        g.start_job(1, 0, 2, 0.0, 10.0, 20.0, 1 << 30);
+        g.first_open_fitting_per_gpu(P7g96gb, 1, 5.0, &mut out);
+        assert_eq!(out, vec![(0, 0, 1), (1, 0, 1)]);
+        // The memory gate still applies, and each surviving board's
+        // first fitting slot wins.
+        f.first_open_fitting_per_gpu(P7g96gb, 1, 90.0, &mut out);
+        assert!(out.is_empty());
+        f.first_open_fitting_per_gpu(P7g96gb, 0, 5.0, &mut out);
+        assert_eq!(out, vec![(0, 0, 0)]);
     }
 
     #[test]

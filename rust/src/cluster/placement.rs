@@ -83,6 +83,7 @@
 
 use super::fleet::{Fleet, MAX_BATCH};
 use super::hostmem::gib_to_bytes;
+use super::power::{self, PowerView};
 use super::telemetry::{Counter, NullSink, Sink};
 use crate::gpu::nvlink::{Dir, NvlinkModel};
 use crate::gpu::{pipelines::ALL_PIPELINES, GpuSpec, GpuUsage, PowerModel};
@@ -166,6 +167,26 @@ pub struct PlacementCost {
     pub c2c_tbs: f64,
 }
 
+/// One placement decision under the fleet power plane: where the job
+/// goes, what the power tracker integrates, and what the scheduler
+/// charges.
+#[derive(Debug, Clone, Copy)]
+pub struct Placement {
+    pub gpu: usize,
+    pub slot: usize,
+    /// Level-0 (boost-clock) cost at the admission's occupancy and link
+    /// share — the activity rates the power tracker integrates and the
+    /// draw the node budget charges. The governor's input is *requested*
+    /// demand; `PowerModel::demand_w` applies the clock scaling itself.
+    pub base: PlacementCost,
+    /// The cost priced at the GPU's post-join throttle level — what the
+    /// scheduler charges as service time. Bit-identical to `base` at
+    /// level 0 (and always, with the plane off).
+    pub priced: PlacementCost,
+    /// The discrete throttle level the GPU settles at once the job joins.
+    pub level: u32,
+}
+
 /// Total activity of one model run — per-pipeline FLOPs, HBM bytes, C2C
 /// bytes — accumulated in phase → kernel → pipeline order. The single
 /// aggregation behind both the placement-cost rates and the full-GPU
@@ -221,6 +242,13 @@ pub struct Planner {
     /// share level actually observed. Non-offloaded costs never land
     /// here — they are share-independent by construction.
     cost_shared: Vec<Option<Vec<Option<Option<PlacementCost>>>>>,
+    /// Throttle-priced costs at discrete clock level `l ≥ 1`:
+    /// `cost_throttled[l − 1]` mirrors the full `cost_cache` shape
+    /// (`[app × profile × offload × occupancy]`, link share 1), allocated
+    /// lazily per level actually reached. Level 0 *is* `cost_cache` — the
+    /// pre-plane bits, untouched. Contended (share ≥ 2) throttled costs
+    /// are recomputed on demand, like `reward_shared` does.
+    cost_throttled: Vec<Option<Vec<Option<Option<PlacementCost>>>>>,
     /// Admissible-profile bitmask per `[app × offload]` — the per-app
     /// profile preference table (bit i ⇔ `ALL_PROFILES[i]` can host).
     /// Occupancy-independent: co-residency stretches the runtime but
@@ -300,6 +328,7 @@ impl Planner {
             power_model: PowerModel::h100(),
             cost_cache: vec![None; AppId::COUNT * NUM_PROFILES * 2 * b],
             cost_shared: Vec::new(),
+            cost_throttled: Vec::new(),
             admissible: [None; AppId::COUNT * 2],
             full_runtime: [None; AppId::COUNT],
             reward_cache: vec![None; AppId::COUNT * NUM_PROFILES * b],
@@ -366,7 +395,7 @@ impl Planner {
         if let Some(c) = self.cost_cache[i] {
             return c;
         }
-        let c = self.compute_cost(app, profile, allow_offload, occ, 1);
+        let c = self.compute_cost(app, profile, allow_offload, occ, 1, 1.0);
         self.cost_cache[i] = Some(c);
         c
     }
@@ -400,8 +429,64 @@ impl Planner {
         if let Some(c) = table[i] {
             return c;
         }
-        let c = self.compute_cost(app, profile, allow_offload, occ, share);
+        let c = self.compute_cost(app, profile, allow_offload, occ, share, 1.0);
         self.cost_shared[level].as_mut().unwrap()[i] = Some(c);
+        c
+    }
+
+    /// SM clock fraction at discrete throttle level `level` (1.0 at
+    /// level 0 — the boost clock).
+    fn clock_frac_at(&self, level: u32) -> f64 {
+        power::clock_at_level(&self.spec, level) / self.spec.clock_max_mhz
+    }
+
+    /// `cost_at_shared` priced at discrete throttle `level`: the SM clock
+    /// drops to the ladder step, which stretches compute-bound work
+    /// proportionally while memory-bound work barely notices (the
+    /// Fig. 7a/7b split — `ExecEnv::clock_frac` scales only the compute
+    /// pipelines). Level 0 returns the unthrottled tables *unchanged* —
+    /// the exact pre-plane bits. Throttled share-1 costs are memoized per
+    /// level; contended (share ≥ 2) throttled offloads are recomputed on
+    /// demand from the same pure function, so cache hits and fresh
+    /// computations agree bit-for-bit. Admissibility (and the memory /
+    /// offload plan) is level-independent: throttling stretches time,
+    /// never footprints.
+    pub fn cost_at_throttled(
+        &mut self,
+        app: AppId,
+        profile: ProfileId,
+        allow_offload: bool,
+        occ: u32,
+        share: u32,
+        level: u32,
+    ) -> Option<PlacementCost> {
+        if level == 0 {
+            return self.cost_at_shared(app, profile, allow_offload, occ, share);
+        }
+        let base = self.cost_at(app, profile, allow_offload, occ)?;
+        let eff_share = if base.offloaded { share } else { 1 };
+        if eff_share > 1 {
+            return self.compute_cost(
+                app,
+                profile,
+                allow_offload,
+                occ,
+                eff_share,
+                self.clock_frac_at(level),
+            );
+        }
+        let l = (level - 1) as usize;
+        if self.cost_throttled.len() <= l {
+            self.cost_throttled.resize(l + 1, None);
+        }
+        let size = AppId::COUNT * NUM_PROFILES * 2 * self.batch as usize;
+        let i = self.cost_idx(app, profile, allow_offload, occ);
+        let table = self.cost_throttled[l].get_or_insert_with(|| vec![None; size]);
+        if let Some(c) = table[i] {
+            return c;
+        }
+        let c = self.compute_cost(app, profile, allow_offload, occ, 1, self.clock_frac_at(level));
+        self.cost_throttled[l].as_mut().unwrap()[i] = Some(c);
         c
     }
 
@@ -412,6 +497,7 @@ impl Planner {
         allow_offload: bool,
         occ: u32,
         share: u32,
+        clock_frac: f64,
     ) -> Option<PlacementCost> {
         let prof = GiProfile::get(profile);
         let model = apps::model(app).scaled(self.scale);
@@ -450,7 +536,7 @@ impl Planner {
         }
         let env = ExecEnv {
             sms,
-            clock_frac: 1.0,
+            clock_frac,
             bw_gibs: prof.mem_bw_gibs / occ as f64,
             c2c_bw_gibs,
             interference: 1.0 + self.shared_interference * (occ as f64 - 1.0),
@@ -639,6 +725,110 @@ impl Planner {
         self.reward_of(app, profile, c, alpha_centi as f64 / 100.0)
     }
 
+    /// `reward_shared` at a throttle level: level 0 reads the cached
+    /// tables (the pre-plane bits); a throttled candidate's reward is
+    /// recomputed from its throttle-priced cost — `reward_of` is pure in
+    /// `(app, profile, c, α)`, so the indexed walk and the naive scan
+    /// agree bit-for-bit however they got here.
+    fn reward_throttled(
+        &mut self,
+        app: AppId,
+        profile: ProfileId,
+        occ: u32,
+        share: u32,
+        level: u32,
+        alpha_centi: u32,
+        c: &PlacementCost,
+    ) -> f64 {
+        if level == 0 {
+            return self.reward_shared(app, profile, occ, share, alpha_centi, c);
+        }
+        self.reward_of(app, profile, c, alpha_centi as f64 / 100.0)
+    }
+
+    /// The throttle level the candidate GPU settles at once this job
+    /// joins: its current boost-rate usage plus the newcomer's level-0
+    /// activity (and, when the seat is a fresh slot, the slot's SMs —
+    /// joining an occupied slot adds no busy SMs, the slot already
+    /// counts). A pure function of the power view, so both serve modes
+    /// compute identical levels from their bit-identical usages.
+    fn prospective_level(
+        &self,
+        pv: &PowerView,
+        gpu: usize,
+        add_sms: u32,
+        c: &PlacementCost,
+    ) -> u32 {
+        let mut u = pv.usages[gpu];
+        u.context_active = true;
+        u.sm_busy_frac += add_sms as f64 / self.spec.sms as f64;
+        for (i, f) in c.flop_tflops.iter().enumerate() {
+            u.flop_rate_tflops[i] += *f;
+        }
+        u.hbm_rate_tbs += c.hbm_tbs;
+        u.c2c_rate_tbs += c.c2c_tbs;
+        power::equilibrium_level(&self.spec, &self.power_model, &u, pv.gpu_cap_w)
+    }
+
+    /// Activity draw (mW) a placement at cost `c` would charge against
+    /// the node power budget — `power::job_draw_mw` over this planner's
+    /// model.
+    pub fn draw_mw(&self, c: &PlacementCost) -> u64 {
+        power::job_draw_mw(&self.power_model, c)
+    }
+
+    /// The cheapest admissible class's node-budget draw for `app` (mW;
+    /// `u64::MAX` when nothing admits it). Pure in the cost tables, so
+    /// the answer is mode-invariant — the node power gate's starvation
+    /// predicate and the reconfiguration gate both key on it.
+    pub fn min_job_draw_mw(&mut self, app: AppId, allow_offload: bool) -> u64 {
+        let mut min = u64::MAX;
+        for pid in ALL_PROFILES {
+            if let Some(c) = self.cost(app, pid, allow_offload) {
+                min = min.min(power::job_draw_mw(&self.power_model, &c));
+            }
+        }
+        min
+    }
+
+    /// Finish a placement decision: derive the GPU's post-join throttle
+    /// level and the throttle-priced cost (`== base` at level 0 and
+    /// whenever the plane is off).
+    #[allow(clippy::too_many_arguments)]
+    fn priced(
+        &mut self,
+        pv: Option<&PowerView>,
+        app: AppId,
+        g: usize,
+        s: usize,
+        pid: ProfileId,
+        occ: u32,
+        share: u32,
+        allow_offload: bool,
+        base: PlacementCost,
+    ) -> Placement {
+        let level = match pv {
+            None => 0,
+            Some(pv) => {
+                let add_sms = if occ == 1 { GiProfile::get(pid).sms } else { 0 };
+                self.prospective_level(pv, g, add_sms, &base)
+            }
+        };
+        let priced = if level == 0 {
+            base
+        } else {
+            self.cost_at_throttled(app, pid, allow_offload, occ, share, level)
+                .expect("admissibility is level-independent")
+        };
+        Placement {
+            gpu: g,
+            slot: s,
+            base,
+            priced,
+            level,
+        }
+    }
+
     /// Pick a slot seat for `app` under `policy`, via the fleet's
     /// per-(profile, occupancy) open index: a walk over
     /// ≤ `NUM_PROFILES × batch` co-residency classes. Returns
@@ -656,7 +846,8 @@ impl Planner {
     /// `place` with telemetry hooks: counts walk steps (candidate
     /// classes visited) and host-pool offload gatings into `sink`. With
     /// the inert `NullSink` every hook is a compile-time `false` branch,
-    /// so `place` pays nothing for the instrumentation.
+    /// so `place` pays nothing for the instrumentation. Runs with the
+    /// power plane inactive (`pv = None`) — the exact pre-plane walk.
     pub fn place_traced<S: Sink>(
         &mut self,
         fleet: &Fleet,
@@ -664,9 +855,36 @@ impl Planner {
         policy: PolicyKind,
         sink: &mut S,
     ) -> Option<(usize, usize, PlacementCost)> {
+        self.place_powered_traced(fleet, app, policy, None, sink)
+            .map(|p| (p.gpu, p.slot, p.priced))
+    }
+
+    /// The full placement decision under the fleet power plane. With
+    /// `pv = None` this is byte-for-byte the pre-plane walk (level 0
+    /// everywhere, `priced == base`). With a live [`PowerView`]:
+    /// - a finite node budget gates every candidate whose admission draw
+    ///   (`job_draw_mw` of its level-0 cost — exactly what `on_start`
+    ///   would charge) exceeds the remaining headroom;
+    /// - the offload-aware walk enumerates one candidate per
+    ///   (class, GPU) — per-GPU throttle levels break the fleet-wide
+    ///   class tie the unpowered walk exploits — and ranks each by the
+    ///   reward of its *throttle-priced* cost at the GPU's post-join
+    ///   level, so a hot board genuinely competes worse;
+    /// - first-fit/best-fit stay structural (the paper's baselines don't
+    ///   chase power), but their final cost is priced at the chosen
+    ///   GPU's post-join level — the service time the fleet will see.
+    pub fn place_powered_traced<S: Sink>(
+        &mut self,
+        fleet: &Fleet,
+        app: AppId,
+        policy: PolicyKind,
+        pv: Option<&PowerView>,
+        sink: &mut S,
+    ) -> Option<Placement> {
         debug_assert_eq!(fleet.batch(), self.batch, "planner/fleet batch mismatch");
         let mut steps: u64 = 0;
         let kmax = fleet.batch() as usize;
+        let node_headroom = pv.map_or(u64::MAX, |v| v.node_headroom_mw);
         let choice = match policy {
             PolicyKind::FirstFit => {
                 let mask = self.admissible_mask(app, false);
@@ -680,6 +898,15 @@ impl Planner {
                         if S::ENABLED {
                             steps += 1;
                         }
+                        if node_headroom != u64::MAX {
+                            let c = self.cost_at(app, pid, false, m as u32 + 1).unwrap();
+                            if self.draw_mw(&c) > node_headroom {
+                                if S::ENABLED {
+                                    sink.count(Counter::PowerGated, 1);
+                                }
+                                continue;
+                            }
+                        }
                         if let Some((g, s)) = fleet.first_open_fitting(pid, m, need) {
                             if best
                                 .map(|(bg, bs, _, _)| (g, s) < (bg, bs))
@@ -691,7 +918,8 @@ impl Planner {
                     }
                 }
                 best.map(|(g, s, pid, occ)| {
-                    (g, s, self.cost_at(app, pid, false, occ).unwrap())
+                    let base = self.cost_at(app, pid, false, occ).unwrap();
+                    self.priced(pv, app, g, s, pid, occ, 1, false, base)
                 })
             }
             PolicyKind::BestFit => {
@@ -712,6 +940,15 @@ impl Planner {
                         if S::ENABLED {
                             steps += 1;
                         }
+                        if node_headroom != u64::MAX {
+                            let c = self.cost_at(app, pid, false, m as u32 + 1).unwrap();
+                            if self.draw_mw(&c) > node_headroom {
+                                if S::ENABLED {
+                                    sink.count(Counter::PowerGated, 1);
+                                }
+                                continue;
+                            }
+                        }
                         if let Some((g, s)) = fleet.first_open_fitting(pid, m, need) {
                             let better = match &best {
                                 None => true,
@@ -729,7 +966,9 @@ impl Planner {
                     }
                 }
                 best.map(|(_, m, g, s, pid)| {
-                    (g, s, self.cost_at(app, pid, false, m as u32 + 1).unwrap())
+                    let occ = m as u32 + 1;
+                    let base = self.cost_at(app, pid, false, occ).unwrap();
+                    self.priced(pv, app, g, s, pid, occ, 1, false, base)
                 })
             }
             PolicyKind::OffloadAware { alpha_centi } => {
@@ -737,12 +976,15 @@ impl Planner {
                 // fitting open slot, at the class's first (gpu, slot) —
                 // refined per C2C link-share level when contention is on
                 // and the class offloads, because then slots of one class
-                // only tie within one share level. Folding the candidates
+                // only tie within one share level; refined further to one
+                // candidate per (class, GPU) when the power plane is
+                // live, because per-GPU throttle levels (and shares)
+                // break fleet-wide class ties. Folding the candidates
                 // in (gpu, slot) order with the per-slot preference of
                 // the naive scan reproduces its choice exactly: within a
-                // (profile, occupancy, share) class every slot ties on
-                // (reward, SMs), so only first encounters matter, and the
-                // scan encounters classes in first-fitting-slot order.
+                // candidate's tie-group every slot ties on (reward, SMs),
+                // so only first encounters matter, and the scan
+                // encounters groups in first-fitting-slot order.
                 // Offloaded classes are additionally gated on host-pool
                 // headroom: spill with nowhere to live is not admissible.
                 let mask = self.admissible_mask(app, true);
@@ -763,7 +1005,15 @@ impl Planner {
                     let need = base.resident_gib + self.ctx_gib;
                     let contended = self.c2c_contention && base.offloaded;
                     for m in 0..kmax {
-                        if contended {
+                        if pv.is_some() {
+                            // Per-GPU candidates: levels differ per GPU
+                            // even when the link share does not.
+                            fleet.first_open_fitting_per_gpu(pid, m, need, &mut shares);
+                            for &(g, s, existing) in shares.iter() {
+                                let share = if contended { existing + 1 } else { 1 };
+                                cands.push((g, s, pid, m as u8, share));
+                            }
+                        } else if contended {
                             fleet.first_open_fitting_per_share(pid, m, need, &mut shares);
                             for &(g, s, existing) in shares.iter() {
                                 cands.push((g, s, pid, m as u8, existing + 1));
@@ -780,8 +1030,28 @@ impl Planner {
                 let mut best: Option<(f64, u32, usize, usize, ProfileId, u8, u32)> = None;
                 for &(g, s, pid, m, share) in &cands {
                     let occ = m as u32 + 1;
-                    let c = self.cost_at_shared(app, pid, true, occ, share).unwrap();
-                    let r = self.reward_shared(app, pid, occ, share, alpha_centi, &c);
+                    let base = self.cost_at_shared(app, pid, true, occ, share).unwrap();
+                    if node_headroom != u64::MAX && self.draw_mw(&base) > node_headroom {
+                        if S::ENABLED {
+                            sink.count(Counter::PowerGated, 1);
+                        }
+                        continue;
+                    }
+                    let (level, c) = match pv {
+                        None => (0, base),
+                        Some(v) => {
+                            let add_sms = if m == 0 { GiProfile::get(pid).sms } else { 0 };
+                            let lv = self.prospective_level(v, g, add_sms, &base);
+                            let c = if lv == 0 {
+                                base
+                            } else {
+                                self.cost_at_throttled(app, pid, true, occ, share, lv)
+                                    .unwrap()
+                            };
+                            (lv, c)
+                        }
+                    };
+                    let r = self.reward_throttled(app, pid, occ, share, level, alpha_centi, &c);
                     let sms = GiProfile::get(pid).sms;
                     let better = match &best {
                         None => true,
@@ -794,7 +1064,9 @@ impl Planner {
                 self.cand_scratch = cands;
                 self.share_scratch = shares;
                 best.map(|(_, _, g, s, pid, m, share)| {
-                    (g, s, self.cost_at_shared(app, pid, true, m as u32 + 1, share).unwrap())
+                    let occ = m as u32 + 1;
+                    let base = self.cost_at_shared(app, pid, true, occ, share).unwrap();
+                    self.priced(pv, app, g, s, pid, occ, share, true, base)
                 })
             }
         };
@@ -827,12 +1099,30 @@ impl Planner {
         policy: PolicyKind,
         sink: &mut S,
     ) -> Option<(usize, usize, PlacementCost)> {
+        self.place_scan_powered_traced(fleet, app, policy, None, sink)
+            .map(|p| (p.gpu, p.slot, p.priced))
+    }
+
+    /// The naive full-scan oracle of [`Self::place_powered_traced`]: the
+    /// same decision recomputed slot-by-slot from raw fleet state (link
+    /// shares from the resident lists, throttle levels from the power
+    /// view's scan-rebuilt usages — never from the live counters the
+    /// oracle is checking).
+    pub fn place_scan_powered_traced<S: Sink>(
+        &mut self,
+        fleet: &Fleet,
+        app: AppId,
+        policy: PolicyKind,
+        pv: Option<&PowerView>,
+        sink: &mut S,
+    ) -> Option<Placement> {
         debug_assert_eq!(fleet.batch(), self.batch, "planner/fleet batch mismatch");
         let mut steps: u64 = 0;
         let kmax = fleet.batch();
+        let node_headroom = pv.map_or(u64::MAX, |v| v.node_headroom_mw);
         let choice = match policy {
             PolicyKind::FirstFit => {
-                let mut found: Option<(usize, usize, PlacementCost)> = None;
+                let mut found: Option<Placement> = None;
                 'scan: for (g, gpu) in fleet.gpus.iter().enumerate() {
                     if gpu.out_of_service() {
                         continue;
@@ -849,7 +1139,23 @@ impl Planner {
                             if occ > 0 && !slot.fits(c.resident_gib + self.ctx_gib) {
                                 continue;
                             }
-                            found = Some((g, s, c));
+                            if node_headroom != u64::MAX && self.draw_mw(&c) > node_headroom {
+                                if S::ENABLED {
+                                    sink.count(Counter::PowerGated, 1);
+                                }
+                                continue;
+                            }
+                            found = Some(self.priced(
+                                pv,
+                                app,
+                                g,
+                                s,
+                                slot.profile.id,
+                                occ + 1,
+                                1,
+                                false,
+                                c,
+                            ));
                             break 'scan;
                         }
                     }
@@ -857,7 +1163,7 @@ impl Planner {
                 found
             }
             PolicyKind::BestFit => {
-                let mut best: Option<(u32, usize, usize, usize, PlacementCost)> = None;
+                let mut best: Option<(u32, usize, usize, usize, ProfileId, PlacementCost)> = None;
                 for (g, gpu) in fleet.gpus.iter().enumerate() {
                     if gpu.out_of_service() {
                         continue;
@@ -876,6 +1182,12 @@ impl Planner {
                             if occ > 0 && !slot.fits(c.resident_gib + self.ctx_gib) {
                                 continue;
                             }
+                            if node_headroom != u64::MAX && self.draw_mw(&c) > node_headroom {
+                                if S::ENABLED {
+                                    sink.count(Counter::PowerGated, 1);
+                                }
+                                continue;
+                            }
                             let sms = slot.profile.sms;
                             let better = match &best {
                                 None => true,
@@ -884,15 +1196,17 @@ impl Planner {
                                 }
                             };
                             if better {
-                                best = Some((sms, occ, g, s, c));
+                                best = Some((sms, occ, g, s, slot.profile.id, c));
                             }
                         }
                     }
                 }
-                best.map(|(_, _, g, s, c)| (g, s, c))
+                best.map(|(_, occ, g, s, pid, c)| {
+                    self.priced(pv, app, g, s, pid, occ as u32 + 1, 1, false, c)
+                })
             }
             PolicyKind::OffloadAware { alpha_centi } => {
-                let mut best: Option<(f64, u32, usize, usize, PlacementCost)> = None;
+                let mut best: Option<(f64, u32, usize, usize, ProfileId, u32, u32)> = None;
                 for (g, gpu) in fleet.gpus.iter().enumerate() {
                     if gpu.out_of_service() {
                         continue;
@@ -914,20 +1228,41 @@ impl Planner {
                             continue;
                         }
                         let pid = slot.profile.id;
-                        let c = match self.cost_at_shared(app, pid, true, occ + 1, share) {
+                        let base = match self.cost_at_shared(app, pid, true, occ + 1, share) {
                             Some(c) => c,
                             None => continue,
                         };
-                        if occ > 0 && !slot.fits(c.resident_gib + self.ctx_gib) {
+                        if occ > 0 && !slot.fits(base.resident_gib + self.ctx_gib) {
                             continue;
                         }
-                        if c.offloaded && !fleet.host_fits_scan(gib_to_bytes(c.host_gib)) {
+                        if base.offloaded && !fleet.host_fits_scan(gib_to_bytes(base.host_gib)) {
                             if S::ENABLED {
                                 sink.count(Counter::OffloadPoolGated, 1);
                             }
                             continue;
                         }
-                        let r = self.reward_shared(app, pid, occ + 1, share, alpha_centi, &c);
+                        if node_headroom != u64::MAX && self.draw_mw(&base) > node_headroom {
+                            if S::ENABLED {
+                                sink.count(Counter::PowerGated, 1);
+                            }
+                            continue;
+                        }
+                        let (level, c) = match pv {
+                            None => (0, base),
+                            Some(v) => {
+                                let add_sms = if occ == 0 { slot.profile.sms } else { 0 };
+                                let lv = self.prospective_level(v, g, add_sms, &base);
+                                let c = if lv == 0 {
+                                    base
+                                } else {
+                                    self.cost_at_throttled(app, pid, true, occ + 1, share, lv)
+                                        .unwrap()
+                                };
+                                (lv, c)
+                            }
+                        };
+                        let r =
+                            self.reward_throttled(app, pid, occ + 1, share, level, alpha_centi, &c);
                         let sms = slot.profile.sms;
                         // Exact comparisons (no epsilon): tie-breaking
                         // must be order-insensitive for the class-level
@@ -937,11 +1272,14 @@ impl Planner {
                             Some((br, bsms, ..)) => r > *br || (r == *br && sms < *bsms),
                         };
                         if better {
-                            best = Some((r, sms, g, s, c));
+                            best = Some((r, sms, g, s, pid, occ + 1, share));
                         }
                     }
                 }
-                best.map(|(_, _, g, s, c)| (g, s, c))
+                best.map(|(_, _, g, s, pid, occ, share)| {
+                    let base = self.cost_at_shared(app, pid, true, occ, share).unwrap();
+                    self.priced(pv, app, g, s, pid, occ, share, true, base)
+                })
             }
         };
         if S::ENABLED {
@@ -1046,6 +1384,71 @@ mod tests {
         // Offloading on 1g is slower than running directly on 2g.
         let two_g = pl.cost(AppId::Llama3Fp16, ProfileId::P2g24gb, false).unwrap();
         assert!(off.runtime_s > two_g.runtime_s);
+    }
+
+    #[test]
+    fn throttled_level_zero_is_the_pre_plane_bits_and_stretch_is_monotone() {
+        // The power-plane feedback contract: level 0 returns the cached
+        // unthrottled tables *unchanged* (the exact pre-plane bits), every
+        // deeper ladder step stretches the runtime monotonically, the
+        // footprint/offload plan never moves with the clock, and at the
+        // floor at least one compute-bound class is strictly slower.
+        let mut pl = Planner::new(0.05);
+        let floor = power::max_level(&pl.spec);
+        assert!(floor > 0);
+        let apps = [
+            AppId::Faiss,
+            AppId::Hotspot,
+            AppId::Llama3Fp16,
+            AppId::Qiskit31,
+            AppId::NekRs,
+        ];
+        let mut any_stretched = false;
+        for app in apps {
+            for pid in ALL_PROFILES {
+                for allow in [false, true] {
+                    let base = pl.cost_at(app, pid, allow, 1);
+                    let t0 = pl.cost_at_throttled(app, pid, allow, 1, 1, 0);
+                    match (base, t0) {
+                        (None, None) => continue,
+                        (Some(a), Some(b)) => {
+                            assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits());
+                            assert_eq!(a.resident_gib.to_bits(), b.resident_gib.to_bits());
+                            assert_eq!(a.hbm_tbs.to_bits(), b.hbm_tbs.to_bits());
+                            assert_eq!(a.c2c_tbs.to_bits(), b.c2c_tbs.to_bits());
+                        }
+                        _ => panic!("{app:?} {pid:?}: level 0 changed admissibility"),
+                    }
+                    let base = base.unwrap();
+                    let mut prev = base.runtime_s;
+                    for level in 1..=floor {
+                        let c = pl
+                            .cost_at_throttled(app, pid, allow, 1, 1, level)
+                            .expect("throttling never changes admissibility");
+                        assert!(
+                            c.runtime_s >= prev,
+                            "{app:?} {pid:?} level {level}: runtime shrank"
+                        );
+                        // Clocks stretch time, never footprints or plans.
+                        assert_eq!(c.resident_gib.to_bits(), base.resident_gib.to_bits());
+                        assert_eq!(c.host_gib.to_bits(), base.host_gib.to_bits());
+                        assert_eq!(c.offloaded, base.offloaded);
+                        assert_eq!(c.sms_share, base.sms_share);
+                        // Memoized hit == fresh computation, bit-for-bit.
+                        let again = pl.cost_at_throttled(app, pid, allow, 1, 1, level).unwrap();
+                        assert_eq!(c.runtime_s.to_bits(), again.runtime_s.to_bits());
+                        prev = c.runtime_s;
+                    }
+                    if prev > base.runtime_s {
+                        any_stretched = true;
+                    }
+                }
+            }
+        }
+        assert!(
+            any_stretched,
+            "the ladder floor must slow at least one compute-bound class"
+        );
     }
 
     #[test]

@@ -1,0 +1,685 @@
+//! Fleet power plane: co-resident slices share each GPU's power envelope.
+//!
+//! The source paper's key interference finding (§V-B1, Fig. 7) is that MIG
+//! partitions compute and memory but **not power delivery**: every slice
+//! on a board draws from the same 700 W budget, and when their aggregate
+//! demand exceeds it the governor walks the SM clock down the ladder —
+//! slowing *compute-bound* residents (whose service rate follows the
+//! clock) while *memory-bound* ones sail on (the Fig. 7a/7b split). This
+//! module turns the seed's per-GPU governor (`gpu::power`) into a cluster
+//! resource plane, symmetric to `cluster::hostmem`:
+//!
+//! - **Per-GPU shared budget.** Aggregate demand is evaluated from the
+//!   residents' `PlacementCost` activity rates at slot-churn events (a
+//!   placement, completion, fault or reconfiguration — between events the
+//!   resident set, and hence the demand, is constant). The governor is
+//!   *history-free*: the throttle level is the smallest clock step at
+//!   which demand fits the cap (`equilibrium_level`), a pure function of
+//!   the resident set. That makes it deterministic, recomputable by the
+//!   naive oracle bit-for-bit, monotone in co-resident demand, and
+//!   invariant to how the fleet is sharded across threads.
+//! - **Throttle feedback into placement.** The discrete level feeds the
+//!   `Planner` cost tables exactly like C2C link contention does
+//!   (`Planner::cost_at_throttled`, memoized per level; level 0 returns
+//!   the pre-plane bits unchanged), so an admission is priced at the
+//!   clock the GPU will actually run at once the job joins.
+//! - **Node-wide cap as an admission gate.** Like the Grace host pool,
+//!   a finite `node_cap_w` budget is charged in *integer milliwatts* of
+//!   activity draw per admitted job (`job_draw_mw`) — integer sums are
+//!   order-independent, so the indexed running counter and the oracle's
+//!   scan agree exactly — and placement skips any class whose draw does
+//!   not fit the headroom.
+//! - **Consolidate-and-idle.** With the plane active, a fully idle,
+//!   in-service GPU is *parked* at a deep-idle floor (`PARKED_IDLE_W`)
+//!   instead of the powered-on idle draw — the packing policies already
+//!   consolidate load, so low-load fleets see the energy win.
+//!
+//! The plane is **byte-inert when off**: `PowerPlaneConfig::default()`
+//! schedules nothing, prices nothing, and every report reproduces the
+//! pre-plane bytes exactly (the energy integral keeps the legacy clamped
+//! `reported_w` sensor model). With the plane on, demand over the cap
+//! **throttles — it is never silently clamped**: the energy integral uses
+//! the unclamped demand at the governed clock.
+
+use super::fleet::Fleet;
+use super::{PlacementCost, ServeMode};
+use crate::gpu::{GpuSpec, GpuUsage, PowerModel};
+use anyhow::ensure;
+use std::collections::BTreeMap;
+
+/// Deep-idle draw (W) of a parked GPU: fully idle, in service, with the
+/// plane actively consolidating — clocks dropped, contexts cold. Between
+/// the paper's testbed's off state and the powered-on idle floor.
+pub const PARKED_IDLE_W: f64 = 12.0;
+
+/// Configuration of the fleet power plane. The default is inert: no cap
+/// is enforced, no throttle level is ever non-zero, and every report is
+/// byte-identical to the pre-plane serve loop.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerPlaneConfig {
+    /// Master switch. Off ⇒ the plane prices nothing and the legacy
+    /// clamped-sensor energy model is kept bit-for-bit.
+    pub enabled: bool,
+    /// Shared per-GPU power budget (W). Demand above it walks the SM
+    /// clock down the ladder. `f64::INFINITY` never throttles (parking
+    /// still applies while the plane is enabled).
+    pub gpu_cap_w: f64,
+    /// Node-wide activity-draw budget (W) per node shard, gating
+    /// admission like the Grace host pool. `f64::INFINITY` (the default)
+    /// disables the gate.
+    pub node_cap_w: f64,
+}
+
+impl Default for PowerPlaneConfig {
+    fn default() -> Self {
+        PowerPlaneConfig {
+            enabled: false,
+            gpu_cap_w: f64::INFINITY,
+            node_cap_w: f64::INFINITY,
+        }
+    }
+}
+
+impl PowerPlaneConfig {
+    /// Whether the plane does anything at all this run.
+    pub fn active(&self) -> bool {
+        self.enabled
+    }
+
+    /// Fail fast on nonsensical budgets (NaN, zero, negative).
+    pub fn validate(&self) -> crate::Result<()> {
+        ensure!(
+            self.gpu_cap_w > 0.0 && !self.gpu_cap_w.is_nan(),
+            "GPU power cap must be positive (or inf), got {}",
+            self.gpu_cap_w
+        );
+        ensure!(
+            self.node_cap_w > 0.0 && !self.node_cap_w.is_nan(),
+            "node power cap must be positive (or inf), got {}",
+            self.node_cap_w
+        );
+        Ok(())
+    }
+
+    /// The node budget in integer milliwatts (`u64::MAX` = no gate).
+    pub fn node_cap_mw(&self) -> u64 {
+        if self.enabled && self.node_cap_w.is_finite() {
+            (self.node_cap_w * 1000.0).round() as u64
+        } else {
+            u64::MAX
+        }
+    }
+}
+
+/// Number of discrete throttle levels below boost on this spec's clock
+/// ladder (level 0 = boost, `max_level` = the floor).
+pub fn max_level(spec: &GpuSpec) -> u32 {
+    ((spec.clock_max_mhz - spec.clock_min_mhz) / spec.clock_step_mhz).round() as u32
+}
+
+/// SM clock at discrete throttle level `level` (clamped at the floor).
+pub fn clock_at_level(spec: &GpuSpec, level: u32) -> f64 {
+    (spec.clock_max_mhz - level as f64 * spec.clock_step_mhz).max(spec.clock_min_mhz)
+}
+
+/// The history-free governor: the smallest throttle level at which the
+/// residents' aggregate demand fits the cap, or the ladder floor when
+/// even that cannot (memory-bound demand barely follows the clock —
+/// Fig. 7a). A pure function of `(usage, cap)`: monotone non-decreasing
+/// in every demand rate, identical however the fleet is sharded, and
+/// recomputable by the naive oracle from raw resident lists.
+pub fn equilibrium_level(spec: &GpuSpec, model: &PowerModel, usage: &GpuUsage, cap_w: f64) -> u32 {
+    let floor = max_level(spec);
+    for level in 0..=floor {
+        if model.demand_w(spec, usage, clock_at_level(spec, level)) <= cap_w {
+            return level;
+        }
+    }
+    floor
+}
+
+/// Activity draw one admitted job charges against the node budget, in
+/// integer milliwatts: the per-pipeline compute, HBM and C2C energy-rate
+/// terms of its placement cost. The idle/SM-residency floor is fleet
+/// overhead, not job draw, so it is deliberately not budgeted. Integer,
+/// so charging and releasing in any order is exact — the indexed running
+/// counter and the oracle scan can never drift.
+pub fn job_draw_mw(model: &PowerModel, c: &PlacementCost) -> u64 {
+    let mut w = 0.0;
+    for (i, f) in c.flop_tflops.iter().enumerate() {
+        w += model.e_flop_w_per_tflops[i] * f;
+    }
+    w += model.e_hbm_w_per_tbs * c.hbm_tbs;
+    w += model.e_c2c_w_per_tbs * c.c2c_tbs;
+    (w * 1000.0).round() as u64
+}
+
+/// One instantaneous reading of the plane across a shard's fleet.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PowerSample {
+    /// Fleet power (W): unclamped demand at each GPU's governed clock.
+    pub watts: f64,
+    /// GPUs currently at a throttle level > 0.
+    pub throttled_gpus: u32,
+    /// GPUs currently parked at the deep-idle floor.
+    pub parked_gpus: u32,
+}
+
+/// Live per-GPU power bookkeeping — the plane's view of the fleet. The
+/// naive oracle rebuilds every GPU's usage from the full running map on
+/// each query; the indexed path recomputes only GPUs whose running set
+/// changed and caches the per-GPU watts and throttle level (summed and
+/// compared in the same ascending-GPU order, so the energy integral and
+/// every level are bit-identical). Under slot-level batching each
+/// co-resident contributes its own activity rates, keyed by job so
+/// residents of one slot finish independently.
+///
+/// The tracker stores each resident's **level-0 (boost-clock) cost**: the
+/// governor's input is the *requested* demand, and `PowerModel::demand_w`
+/// applies the clock's frequency scaling itself — storing throttled rates
+/// would double-count the slowdown and make the level history-dependent.
+pub(crate) struct PowerTracker {
+    model: PowerModel,
+    plane: PowerPlaneConfig,
+    node_cap_mw: u64,
+    /// Activity draw of running jobs (mW), maintained incrementally on
+    /// the indexed path; the naive oracle recomputes it by scan.
+    node_used_mw: u64,
+    /// Per-GPU aggregate usage at boost rates, refreshed lazily (indexed)
+    /// or rebuilt per query (naive).
+    usages: Vec<GpuUsage>,
+    /// Per-GPU throttle level, valid after `refresh` when the plane is
+    /// active (always 0 when off).
+    levels: Vec<u32>,
+    parked: Vec<bool>,
+    state: TrackerState,
+}
+
+enum TrackerState {
+    Naive {
+        /// Activity rates of running jobs, keyed by (gpu, slot, job).
+        /// BTreeMap so float summation order — and thus the energy
+        /// integral — is deterministic (and, with one resident per slot,
+        /// identical to the pre-batching (gpu, slot) order).
+        running: BTreeMap<(usize, usize, u32), PlacementCost>,
+    },
+    Indexed {
+        gpus: Vec<GpuPower>,
+    },
+}
+
+struct GpuPower {
+    /// Running-resident costs per slot, keyed by job id (iterated in slot
+    /// order, then ascending job id — the same order the naive BTreeMap
+    /// visits a GPU's residents in).
+    costs: Vec<BTreeMap<u32, PlacementCost>>,
+    dirty: bool,
+}
+
+/// Borrowed power-plane inputs of one placement decision: per-GPU boost
+/// usage for prospective throttle levels, the shared GPU cap, and the
+/// node budget's remaining headroom. Built by `PowerTracker::view` only
+/// while the plane is active — placement with `None` runs the exact
+/// pre-plane code path.
+#[derive(Clone, Copy)]
+pub struct PowerView<'a> {
+    pub usages: &'a [GpuUsage],
+    pub gpu_cap_w: f64,
+    pub node_headroom_mw: u64,
+}
+
+impl PowerTracker {
+    pub(crate) fn new(mode: ServeMode, fleet: &Fleet, plane: &PowerPlaneConfig) -> PowerTracker {
+        let n = fleet.gpus.len();
+        PowerTracker {
+            model: PowerModel::h100(),
+            plane: *plane,
+            node_cap_mw: plane.node_cap_mw(),
+            node_used_mw: 0,
+            usages: vec![GpuUsage::default(); n],
+            levels: vec![0; n],
+            parked: vec![false; n],
+            state: match mode {
+                ServeMode::NaiveOracle => TrackerState::Naive {
+                    running: BTreeMap::new(),
+                },
+                ServeMode::Indexed => TrackerState::Indexed {
+                    gpus: fleet
+                        .gpus
+                        .iter()
+                        .map(|g| GpuPower {
+                            costs: vec![BTreeMap::new(); g.slots.len()],
+                            dirty: true,
+                        })
+                        .collect(),
+                },
+            },
+        }
+    }
+
+    pub(crate) fn plane_active(&self) -> bool {
+        self.plane.active()
+    }
+
+    /// Whether the node admission gate can bite at all this run.
+    pub(crate) fn node_cap_finite(&self) -> bool {
+        self.node_cap_mw != u64::MAX
+    }
+
+    pub(crate) fn on_start(&mut self, gpu: usize, slot: usize, job: u32, c: PlacementCost) {
+        if self.node_cap_finite() {
+            self.node_used_mw += job_draw_mw(&self.model, &c);
+        }
+        match &mut self.state {
+            TrackerState::Naive { running } => {
+                running.insert((gpu, slot, job), c);
+            }
+            TrackerState::Indexed { gpus } => {
+                gpus[gpu].costs[slot].insert(job, c);
+                gpus[gpu].dirty = true;
+            }
+        }
+    }
+
+    pub(crate) fn on_finish(&mut self, gpu: usize, slot: usize, job: u32) {
+        let gone = match &mut self.state {
+            TrackerState::Naive { running } => running.remove(&(gpu, slot, job)),
+            TrackerState::Indexed { gpus } => {
+                gpus[gpu].dirty = true;
+                gpus[gpu].costs[slot].remove(&job)
+            }
+        };
+        if self.node_cap_finite() {
+            if let Some(c) = gone {
+                // The same cost bits that were charged release the same
+                // integer draw — the counter can never drift.
+                self.node_used_mw -= job_draw_mw(&self.model, &c);
+            }
+        }
+    }
+
+    /// A reconfiguration landed on `gpu`: the slot count changed (the
+    /// GPU is drained, so there are no running costs to carry over).
+    pub(crate) fn on_reconfig_done(&mut self, gpu: usize, slots: usize) {
+        match &mut self.state {
+            TrackerState::Naive { .. } => {}
+            TrackerState::Indexed { gpus } => {
+                gpus[gpu].costs.clear();
+                gpus[gpu].costs.resize(slots, BTreeMap::new());
+                gpus[gpu].dirty = true;
+            }
+        }
+    }
+
+    /// Remaining node-budget headroom (mW; `u64::MAX` = no gate). The
+    /// naive oracle recomputes the used draw from its raw running map —
+    /// integer sums, so it matches the indexed counter exactly.
+    pub(crate) fn node_headroom_mw(&self) -> u64 {
+        if !self.node_cap_finite() {
+            return u64::MAX;
+        }
+        let used = match &self.state {
+            TrackerState::Naive { running } => running
+                .values()
+                .map(|c| job_draw_mw(&self.model, c))
+                .sum::<u64>(),
+            TrackerState::Indexed { .. } => self.node_used_mw,
+        };
+        self.node_cap_mw.saturating_sub(used)
+    }
+
+    /// Rebuild the per-GPU boost usage of one GPU from cost maps, in the
+    /// shared (slot, job) iteration order both modes use — the float sums
+    /// are bit-identical however the rates were bookkept.
+    fn build_usage<'a>(
+        spec: &GpuSpec,
+        busy_sms: u32,
+        costs: impl Iterator<Item = &'a PlacementCost>,
+    ) -> GpuUsage {
+        let mut u = GpuUsage {
+            context_active: busy_sms > 0,
+            sm_busy_frac: busy_sms as f64 / spec.sms as f64,
+            ..GpuUsage::default()
+        };
+        for c in costs {
+            for (i, f) in c.flop_tflops.iter().enumerate() {
+                u.flop_rate_tflops[i] += *f;
+            }
+            u.hbm_rate_tbs += c.hbm_tbs;
+            u.c2c_rate_tbs += c.c2c_tbs;
+        }
+        u
+    }
+
+    /// Watts one GPU reports given its usage and plane state. Plane off:
+    /// the legacy clamped sensor at boost (`reported_w`) — the pre-plane
+    /// energy integral, bit-for-bit. Plane on: *unclamped* demand at the
+    /// governed clock — over-cap demand throttles, it is never hidden by
+    /// the sensor clamp — and a parked GPU reports the deep-idle floor.
+    fn gpu_watts(&self, spec: &GpuSpec, usage: &GpuUsage, level: u32, parked: bool) -> f64 {
+        if !self.plane.enabled {
+            return self.model.reported_w(spec, usage, spec.clock_max_mhz);
+        }
+        if parked {
+            return PARKED_IDLE_W;
+        }
+        self.model.demand_w(spec, usage, clock_at_level(spec, level))
+    }
+
+    /// Refresh the per-GPU usage/level/parked/watts caches. Indexed mode
+    /// recomputes only dirty GPUs; the naive oracle rebuilds everything
+    /// from its raw running map. Every derived quantity is a pure
+    /// function of bit-identical per-GPU usage, so the two modes agree
+    /// exactly.
+    pub(crate) fn refresh(&mut self, fleet: &Fleet) {
+        let plane = self.plane;
+        let spec = &fleet.spec;
+        match &mut self.state {
+            TrackerState::Naive { running } => {
+                for g in 0..fleet.gpus.len() {
+                    let busy = fleet.gpus[g].busy_sms_scan();
+                    let u = Self::build_usage(
+                        spec,
+                        busy,
+                        running.range((g, 0, 0)..(g + 1, 0, 0)).map(|(_, c)| c),
+                    );
+                    self.levels[g] = if plane.enabled {
+                        equilibrium_level(spec, &self.model, &u, plane.gpu_cap_w)
+                    } else {
+                        0
+                    };
+                    self.parked[g] = plane.enabled
+                        && busy == 0
+                        && !fleet.gpus[g].reconfiguring()
+                        && !fleet.gpus[g].cordoned();
+                    self.usages[g] = u;
+                }
+            }
+            TrackerState::Indexed { gpus } => {
+                for (g, gp) in gpus.iter_mut().enumerate() {
+                    // Parked state depends on cordon/reconfig flags that
+                    // flip without any resident churn (an idle GPU can be
+                    // cordoned or drained for repartition), so it is
+                    // re-read every refresh; usage and level are pure
+                    // functions of the resident set and recompute only
+                    // when it changed.
+                    self.parked[g] = plane.enabled
+                        && fleet.gpus[g].busy_sms() == 0
+                        && !fleet.gpus[g].reconfiguring()
+                        && !fleet.gpus[g].cordoned();
+                    if !gp.dirty {
+                        continue;
+                    }
+                    let busy = fleet.gpus[g].busy_sms();
+                    let u =
+                        Self::build_usage(spec, busy, gp.costs.iter().flat_map(|m| m.values()));
+                    self.levels[g] = if plane.enabled {
+                        equilibrium_level(spec, &self.model, &u, plane.gpu_cap_w)
+                    } else {
+                        0
+                    };
+                    self.usages[g] = u;
+                    gp.dirty = false;
+                }
+            }
+        }
+    }
+
+    /// Instantaneous fleet power (W) — the energy-integral input. With
+    /// the plane off this is the legacy clamped-sensor sum, bit-for-bit.
+    pub(crate) fn power_w(&mut self, fleet: &Fleet) -> f64 {
+        self.sample(fleet).watts
+    }
+
+    /// One plane reading: fleet watts plus throttled/parked GPU counts.
+    /// Per-GPU watts are a pure function of the refreshed usage/level and
+    /// are summed in ascending-GPU order in both modes, so the energy
+    /// integral is bit-identical between them.
+    pub(crate) fn sample(&mut self, fleet: &Fleet) -> PowerSample {
+        self.refresh(fleet);
+        let spec = &fleet.spec;
+        let mut watts = 0.0;
+        let mut throttled = 0u32;
+        let mut parked = 0u32;
+        for g in 0..self.usages.len() {
+            watts += self.gpu_watts(spec, &self.usages[g], self.levels[g], self.parked[g]);
+            if self.levels[g] > 0 {
+                throttled += 1;
+            }
+            if self.parked[g] {
+                parked += 1;
+            }
+        }
+        PowerSample {
+            watts,
+            throttled_gpus: throttled,
+            parked_gpus: parked,
+        }
+    }
+
+    /// Current throttle level of one GPU (valid after `refresh`).
+    pub(crate) fn level(&self, gpu: usize) -> u32 {
+        self.levels[gpu]
+    }
+
+    /// Current SM clocks (MHz) across the fleet, for telemetry samples
+    /// (valid after `refresh`).
+    pub(crate) fn clocks_into(&self, fleet: &Fleet, out: &mut Vec<f64>) {
+        out.clear();
+        for &lv in &self.levels {
+            out.push(clock_at_level(&fleet.spec, lv));
+        }
+    }
+
+    /// The placement-time view of the plane (`None` while inactive — the
+    /// policies then run the exact pre-plane code path). Call `refresh`
+    /// first so the borrowed usages are current.
+    pub(crate) fn view(&self) -> Option<PowerView<'_>> {
+        if !self.plane.enabled {
+            return None;
+        }
+        Some(PowerView {
+            usages: &self.usages,
+            gpu_cap_w: self.plane.gpu_cap_w,
+            node_headroom_mw: self.node_headroom_mw(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::pipelines::Pipeline;
+
+    fn spec() -> GpuSpec {
+        GpuSpec::gh_h100_96gb()
+    }
+
+    #[test]
+    fn ladder_has_eleven_levels_and_clamps_at_the_floor() {
+        let s = spec();
+        assert_eq!(max_level(&s), 11);
+        assert_eq!(clock_at_level(&s, 0), s.clock_max_mhz);
+        assert_eq!(clock_at_level(&s, 11), s.clock_min_mhz);
+        assert_eq!(clock_at_level(&s, 99), s.clock_min_mhz);
+        assert_eq!(clock_at_level(&s, 1), s.clock_max_mhz - s.clock_step_mhz);
+    }
+
+    #[test]
+    fn equilibrium_level_is_zero_under_cap_and_floor_when_hopeless() {
+        let s = spec();
+        let m = PowerModel::h100();
+        let idle = GpuUsage::default();
+        assert_eq!(equilibrium_level(&s, &m, &idle, m.cap_w), 0);
+        // Memory-bound demand barely follows the clock: no level fits.
+        let mut u = GpuUsage {
+            context_active: true,
+            sm_busy_frac: 0.97,
+            hbm_rate_tbs: 0.90 * 3175.0 * 1.0737e9 / 1e12,
+            ..Default::default()
+        };
+        u.add_flops(Pipeline::Fp32, 2.1);
+        assert_eq!(equilibrium_level(&s, &m, &u, m.cap_w), max_level(&s));
+        // An infinite cap never throttles anything.
+        assert_eq!(equilibrium_level(&s, &m, &u, f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn equilibrium_level_monotone_in_demand() {
+        // Randomized property: scaling every activity rate up can only
+        // raise (never lower) the equilibrium throttle level.
+        let s = spec();
+        let m = PowerModel::h100();
+        let mut rng = crate::util::Rng::new(0xB0B);
+        for _ in 0..200 {
+            let mut u = GpuUsage {
+                context_active: true,
+                sm_busy_frac: rng.f64(),
+                hbm_rate_tbs: rng.f64() * 3.5,
+                c2c_rate_tbs: rng.f64() * 0.4,
+                ..Default::default()
+            };
+            u.add_flops(Pipeline::Fp32, rng.f64() * 60.0);
+            u.add_flops(Pipeline::TensorFp16, rng.f64() * 600.0);
+            let mut prev = 0u32;
+            for k in 0..6 {
+                let mut v = u;
+                let f = 1.0 + 0.35 * k as f64;
+                v.sm_busy_frac = (v.sm_busy_frac * f).min(1.0);
+                v.hbm_rate_tbs *= f;
+                v.c2c_rate_tbs *= f;
+                for r in &mut v.flop_rate_tflops {
+                    *r *= f;
+                }
+                let lv = equilibrium_level(&s, &m, &v, m.cap_w);
+                assert!(
+                    lv >= prev,
+                    "level dropped {prev} -> {lv} as demand rose (k={k})"
+                );
+                prev = lv;
+            }
+        }
+    }
+
+    #[test]
+    fn job_draw_is_integer_and_additive() {
+        let m = PowerModel::h100();
+        let mut c = PlacementCost {
+            runtime_s: 10.0,
+            resident_gib: 4.0,
+            offloaded: false,
+            host_gib: 0.0,
+            sms_share: 16,
+            occupancy: 0.9,
+            flop_tflops: [0.0; 5],
+            hbm_tbs: 0.25,
+            c2c_tbs: 0.0,
+        };
+        c.flop_tflops[1] = 12.0; // fp32
+        let mw = job_draw_mw(&m, &c);
+        // 12 TFLOP/s × 2.5 W + 0.25 TB/s × 130 W = 62.5 W.
+        assert_eq!(mw, 62_500);
+        let zero = PlacementCost {
+            flop_tflops: [0.0; 5],
+            hbm_tbs: 0.0,
+            ..c
+        };
+        assert_eq!(job_draw_mw(&m, &zero), 0, "idle floor is not job draw");
+    }
+
+    #[test]
+    fn plane_off_clamps_plane_on_throttles() {
+        // The clamp-vs-throttle split, pinned in both serve modes: with
+        // the plane off the energy sensor keeps the legacy clamped
+        // `reported_w` bits; with the plane on the same over-cap demand
+        // throttles the clock and is integrated *unclamped* — a
+        // memory-bound resident barely follows the clock, so its true
+        // draw exceeds what the clamped sensor ever admitted.
+        use crate::cluster::fleet::{Fleet, LayoutPreset};
+        let m = PowerModel::h100();
+        let mut c = PlacementCost {
+            runtime_s: 10.0,
+            resident_gib: 4.0,
+            offloaded: false,
+            host_gib: 0.0,
+            sms_share: 132,
+            occupancy: 0.9,
+            flop_tflops: [0.0; 5],
+            hbm_tbs: 6.0, // 780 W of HBM draw alone: far over the clamp
+            c2c_tbs: 0.0,
+        };
+        c.flop_tflops[1] = 2.0;
+        let off = PowerPlaneConfig::default();
+        let on = PowerPlaneConfig {
+            enabled: true,
+            gpu_cap_w: 700.0,
+            node_cap_w: f64::INFINITY,
+        };
+        for mode in [ServeMode::Indexed, ServeMode::NaiveOracle] {
+            let mut fleet = Fleet::new(1, LayoutPreset::AllBig).unwrap();
+            fleet.start_job(0, 0, 7, 0.0, 10.0, 4.0, 0);
+            let busy = fleet.gpus[0].busy_sms_scan();
+            let u = PowerTracker::build_usage(&fleet.spec, busy, std::iter::once(&c));
+            assert!(
+                m.demand_w(&fleet.spec, &u, fleet.spec.clock_max_mhz) > m.cap_w * 1.005,
+                "construction: boost demand must exceed the sensor clamp"
+            );
+            let mut t = PowerTracker::new(mode, &fleet, &off);
+            t.on_start(0, 0, 7, c);
+            let w_off = t.power_w(&fleet);
+            let clamped = m.reported_w(&fleet.spec, &u, fleet.spec.clock_max_mhz);
+            assert_eq!(w_off.to_bits(), clamped.to_bits(), "{mode:?}");
+            let mut t = PowerTracker::new(mode, &fleet, &on);
+            t.on_start(0, 0, 7, c);
+            let s = t.sample(&fleet);
+            let lv = equilibrium_level(&fleet.spec, &m, &u, on.gpu_cap_w);
+            assert!(lv > 0, "over-cap demand must throttle");
+            assert_eq!(s.throttled_gpus, 1);
+            let governed = m.demand_w(&fleet.spec, &u, clock_at_level(&fleet.spec, lv));
+            assert_eq!(s.watts.to_bits(), governed.to_bits(), "{mode:?}");
+            assert!(
+                s.watts > w_off,
+                "mem-bound demand throttled but unclamped ({} W) must exceed \
+                 the clamped sensor ({} W)",
+                s.watts,
+                w_off
+            );
+            // Fully idle + plane on = parked at the deep-idle floor;
+            // plane off keeps the legacy powered-on idle draw.
+            let idle = Fleet::new(1, LayoutPreset::AllBig).unwrap();
+            let mut t = PowerTracker::new(mode, &idle, &on);
+            let s = t.sample(&idle);
+            assert_eq!(s.parked_gpus, 1);
+            assert_eq!(s.watts.to_bits(), PARKED_IDLE_W.to_bits());
+            let mut t = PowerTracker::new(mode, &idle, &off);
+            assert_eq!(t.power_w(&idle).to_bits(), m.idle_w.to_bits());
+        }
+    }
+
+    #[test]
+    fn plane_config_validates_bounds() {
+        assert!(PowerPlaneConfig::default().validate().is_ok());
+        for bad in [0.0, -5.0, f64::NAN] {
+            let c = PowerPlaneConfig {
+                enabled: true,
+                gpu_cap_w: bad,
+                node_cap_w: f64::INFINITY,
+            };
+            assert!(c.validate().is_err(), "gpu cap {bad} must be rejected");
+            let c = PowerPlaneConfig {
+                enabled: true,
+                gpu_cap_w: 700.0,
+                node_cap_w: bad,
+            };
+            assert!(c.validate().is_err(), "node cap {bad} must be rejected");
+        }
+        let inert = PowerPlaneConfig::default();
+        assert_eq!(inert.node_cap_mw(), u64::MAX);
+        let capped = PowerPlaneConfig {
+            enabled: true,
+            gpu_cap_w: 700.0,
+            node_cap_w: 1.5,
+        };
+        assert_eq!(capped.node_cap_mw(), 1500);
+    }
+}

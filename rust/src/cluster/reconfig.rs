@@ -90,6 +90,16 @@ pub fn plan_reconfig(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<Profile
     None
 }
 
+/// Whether the node power budget forecloses reconfiguring for a job:
+/// when even the job's *cheapest* admissible placement draws more than
+/// the remaining node headroom, repartitioning a GPU cannot help —
+/// layouts change slot shapes, not the power budget — so the latency
+/// (and the drained GPU) would be wasted. Pure integer-milliwatt
+/// compare, so both serve modes decide identically.
+pub fn power_gates_reconfig(node_headroom_mw: u64, min_job_draw_mw: u64) -> bool {
+    min_job_draw_mw > node_headroom_mw
+}
+
 /// `plan_reconfig` by full fleet scan — the differential-test oracle.
 pub fn plan_reconfig_scan(fleet: &Fleet, need_gib: f64) -> Option<(usize, Vec<ProfileId>)> {
     let target = plan_for_footprint(need_gib)?;
@@ -150,6 +160,15 @@ mod tests {
         let l = latency_s(&small, &big);
         assert!((l - (1.0 + 0.5 * 8.0)).abs() < 1e-12);
         assert!(latency_s(&big, &small) > latency_s(&big, &big));
+    }
+
+    #[test]
+    fn power_gate_bites_exactly_when_draw_exceeds_headroom() {
+        assert!(!power_gates_reconfig(100, 100));
+        assert!(power_gates_reconfig(100, 101));
+        assert!(!power_gates_reconfig(u64::MAX, u64::MAX), "no gate, no bite");
+        // An unservable app reports u64::MAX draw: always gated.
+        assert!(power_gates_reconfig(0, 1));
     }
 
     #[test]

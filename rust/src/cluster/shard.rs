@@ -58,6 +58,7 @@
 
 use super::faults::{FaultDomains, FaultKind, ShedPolicy};
 use super::fleet::{Fleet, Orphan};
+use super::power::PowerTracker;
 use super::queue::{AdmissionQueue, JobState};
 use super::reconfig;
 use super::telemetry::{
@@ -66,7 +67,6 @@ use super::telemetry::{
 };
 use super::{PlacementCost, Planner, PolicyKind, ServeConfig, ServeMode, ServeReport};
 use crate::gpu::nvlink::{Dir, NvlinkModel};
-use crate::gpu::{GpuUsage, PowerModel};
 use crate::mig::profile::{GiProfile, ProfileId};
 use crate::sim::{Engine, EventToken};
 use crate::util::Rng;
@@ -299,7 +299,6 @@ pub(crate) struct Shard<S: Sink> {
     planner: Planner,
     engine: Engine<Ev>,
     power: PowerTracker,
-    power_model: PowerModel,
     scratch: DispatchScratch,
     /// Pending deadline events, indexed by *queue id* (grown at
     /// admission, like the queue itself).
@@ -319,6 +318,16 @@ pub(crate) struct Shard<S: Sink> {
     energy_j: f64,
     frag_integral: f64,
     busy_sm_integral: f64,
+    /// GPU-seconds spent throttled below boost (power plane only).
+    throttled_gpu_s: f64,
+    /// GPU-seconds spent parked by consolidate-and-idle (power plane
+    /// only).
+    parked_gpu_s: f64,
+    /// Pending-job visits that found the node power budget too tight
+    /// for the app's cheapest admissible placement.
+    power_starved: u64,
+    /// Last throttle level emitted per local GPU (telemetry only).
+    last_levels: Vec<u32>,
     last_t: f64,
     handoffs_in: u32,
     handoffs_out: u32,
@@ -366,7 +375,7 @@ impl<S: Sink> Shard<S> {
         sink: S,
     ) -> crate::Result<Shard<S>> {
         let fleet = Fleet::with_hostmem(gpus, cfg.layout, cfg.batch, cfg.host_pool_gib)?;
-        let power = PowerTracker::new(mode, &fleet);
+        let power = PowerTracker::new(mode, &fleet, &cfg.power);
         Ok(Shard {
             id,
             params: cfg.clone(),
@@ -383,7 +392,6 @@ impl<S: Sink> Shard<S> {
             ),
             engine: Engine::new(),
             power,
-            power_model: PowerModel::h100(),
             scratch: DispatchScratch::new(),
             deadline_tokens: Vec::new(),
             jobs: Vec::new(),
@@ -394,6 +402,10 @@ impl<S: Sink> Shard<S> {
             energy_j: 0.0,
             frag_integral: 0.0,
             busy_sm_integral: 0.0,
+            throttled_gpu_s: 0.0,
+            parked_gpu_s: 0.0,
+            power_starved: 0,
+            last_levels: vec![0; gpus as usize],
             last_t: 0.0,
             handoffs_in: 0,
             handoffs_out: 0,
@@ -599,7 +611,14 @@ impl<S: Sink> Shard<S> {
         let work_remains =
             self.queue.jobs.len() < self.expected as usize || !resolved || self.stream_open;
         if dt > 0.0 && work_remains {
-            self.energy_j += dt * self.power.power_w(&self.fleet, &self.power_model);
+            if self.power.plane_active() {
+                let smp = self.power.sample(&self.fleet);
+                self.energy_j += dt * smp.watts;
+                self.throttled_gpu_s += dt * smp.throttled_gpus as f64;
+                self.parked_gpu_s += dt * smp.parked_gpus as f64;
+            } else {
+                self.energy_j += dt * self.power.power_w(&self.fleet);
+            }
             let smallest = match self.mode {
                 ServeMode::Indexed => self.queue.smallest_pending_footprint_gib(),
                 ServeMode::NaiveOracle => self.queue.smallest_pending_footprint_scan(),
@@ -676,6 +695,7 @@ impl<S: Sink> Shard<S> {
                         &mut self.planner,
                         &mut self.engine,
                         &mut self.power,
+                        &mut self.power_starved,
                         &mut self.deadline_tokens,
                         &mut self.scratch,
                         &mut self.sink,
@@ -752,6 +772,7 @@ impl<S: Sink> Shard<S> {
                         &mut self.planner,
                         &mut self.engine,
                         &mut self.power,
+                        &mut self.power_starved,
                         &mut self.deadline_tokens,
                         &mut self.scratch,
                         &mut self.sink,
@@ -784,6 +805,7 @@ impl<S: Sink> Shard<S> {
                     &mut self.planner,
                     &mut self.engine,
                     &mut self.power,
+                    &mut self.power_starved,
                     &mut self.deadline_tokens,
                     &mut self.scratch,
                     &mut self.sink,
@@ -802,6 +824,32 @@ impl<S: Sink> Shard<S> {
             }
             Ev::Recover(g) => self.on_recover(time_ns, now, g),
             Ev::DomainFault(d) => self.on_domain_fault(time_ns, now, d),
+        }
+        if S::ENABLED && self.power.plane_active() {
+            self.emit_throttle_changes(time_ns);
+        }
+    }
+
+    /// Emit a `Throttle` trace event for every GPU whose governed level
+    /// moved during this event. Levels are a pure function of the
+    /// resident set, so the stream is identical across serve modes and
+    /// thread counts (GPU ids are reported fleet-global).
+    fn emit_throttle_changes(&mut self, time_ns: u64) {
+        self.power.refresh(&self.fleet);
+        for g in 0..self.last_levels.len() {
+            let lv = self.power.level(g);
+            if lv != self.last_levels[g] {
+                self.sink.emit(
+                    time_ns,
+                    None,
+                    EventKind::Throttle {
+                        gpu: self.gpu_base + g as u32,
+                        from: self.last_levels[g],
+                        to: lv,
+                    },
+                );
+                self.last_levels[g] = lv;
+            }
         }
     }
 
@@ -1108,6 +1156,7 @@ impl<S: Sink> Shard<S> {
             &mut self.planner,
             &mut self.engine,
             &mut self.power,
+            &mut self.power_starved,
             &mut self.deadline_tokens,
             &mut self.scratch,
             &mut self.sink,
@@ -1205,7 +1254,11 @@ impl<S: Sink> Shard<S> {
         if !self.sink.sample_due(now_ns) {
             return;
         }
-        let power_w = self.power.power_w(&self.fleet, &self.power_model);
+        let power_w = self.power.power_w(&self.fleet);
+        let mut clocks = Vec::new();
+        if self.power.plane_active() {
+            self.power.clocks_into(&self.fleet, &mut clocks);
+        }
         while self.sink.sample_due(now_ns) {
             let t_ns = self.sink.next_sample_ns();
             self.sink.push_sample(FleetSample::capture(
@@ -1214,6 +1267,7 @@ impl<S: Sink> Shard<S> {
                 &self.fleet,
                 &self.queue,
                 power_w,
+                clocks.clone(),
             ));
         }
     }
@@ -1460,6 +1514,12 @@ fn merge_report<S: Sink>(cfg: &ServeConfig, shards: &[Shard<S>]) -> ServeReport 
         retries: shards.iter().map(|s| s.retries_done).sum(),
         faults_active: cfg.faults.active(),
         degrade_active: cfg.faults.degraded(),
+        power_active: cfg.power.active(),
+        power_cap_w: cfg.power.gpu_cap_w,
+        node_power_cap_w: cfg.power.node_cap_w,
+        throttled_gpu_s: shards.iter().map(|s| s.throttled_gpu_s).sum(),
+        parked_gpu_s: shards.iter().map(|s| s.parked_gpu_s).sum(),
+        power_starved: shards.iter().map(|s| s.power_starved).sum(),
         reconfigs: shards
             .iter()
             .map(|s| s.fleet.gpus.iter().map(|g| g.reconfigs).sum::<u32>())
@@ -1493,6 +1553,7 @@ fn dispatch<S: Sink>(
     planner: &mut Planner,
     engine: &mut Engine<Ev>,
     power: &mut PowerTracker,
+    power_starved: &mut u64,
     deadline_tokens: &mut [Option<EventToken>],
     scratch: &mut DispatchScratch,
     sink: &mut S,
@@ -1523,7 +1584,13 @@ fn dispatch<S: Sink>(
                         sink.count(Counter::PlaceDecisions, 1);
                         sink.count(Counter::MemoMisses, 1);
                     }
-                    let r = planner.place_traced(fleet, app, cfg.policy, sink);
+                    let r = if power.plane_active() {
+                        power.refresh(fleet);
+                        let pv = power.view();
+                        planner.place_powered_traced(fleet, app, cfg.policy, pv.as_ref(), sink)
+                    } else {
+                        planner.place_powered_traced(fleet, app, cfg.policy, None, sink)
+                    };
                     if r.is_none() {
                         failed_at_epoch[app.index()] = Some(fleet.epoch());
                     }
@@ -1534,12 +1601,24 @@ fn dispatch<S: Sink>(
                 if S::ENABLED {
                     sink.count(Counter::PlaceDecisions, 1);
                 }
-                planner.place_scan_traced(fleet, app, cfg.policy, sink)
+                if power.plane_active() {
+                    power.refresh(fleet);
+                    let pv = power.view();
+                    planner.place_scan_powered_traced(fleet, app, cfg.policy, pv.as_ref(), sink)
+                } else {
+                    planner.place_scan_powered_traced(fleet, app, cfg.policy, None, sink)
+                }
             }
         };
-        if let Some((g, s, c)) = placed {
+        if let Some(p) = placed {
+            let (g, s) = (p.gpu, p.slot);
+            // `base` carries the level-0 (boost) bits the power tracker and
+            // memory planes account in; `priced` is the same placement at
+            // the prospective throttle level and is what the job's service
+            // time is scheduled from. At level 0 the two are identical.
+            let c = p.priced;
             queue
-                .mark_running(id, now, g, c.offloaded)
+                .mark_running(id, now, g, p.base.offloaded)
                 .expect("dispatch only visits pending ids");
             if let Some(tok) = deadline_tokens[id as usize].take() {
                 engine.cancel(tok);
@@ -1570,10 +1649,10 @@ fn dispatch<S: Sink>(
                 id,
                 now,
                 until,
-                c.resident_gib + planner.ctx_gib(),
-                super::hostmem::gib_to_bytes(c.host_gib),
+                p.base.resident_gib + planner.ctx_gib(),
+                super::hostmem::gib_to_bytes(p.base.host_gib),
             );
-            power.on_start(g, s, id, c);
+            power.on_start(g, s, id, p.base);
             engine.schedule_at(sec_to_ns(until), Ev::JobDone { gpu: g, slot: s, job: id });
             if S::ENABLED {
                 let gid = metas[qid_to_lid[id as usize] as usize].global_id;
@@ -1597,6 +1676,20 @@ fn dispatch<S: Sink>(
                 );
             }
         } else {
+            // Unified node-budget starvation predicate: even the app's
+            // cheapest admissible placement exceeds the remaining node
+            // power headroom. Mode-invariant — integer-milliwatt compare
+            // over mode-independent planner costs — and it also gates
+            // reconfiguration below: repartitioning cannot create power.
+            let power_blocked = power.plane_active()
+                && power.node_cap_finite()
+                && reconfig::power_gates_reconfig(
+                    power.node_headroom_mw(),
+                    planner.min_job_draw_mw(app, cfg.policy.allows_offload()),
+                );
+            if power_blocked {
+                *power_starved += 1;
+            }
             if S::ENABLED
                 && cfg.policy.allows_offload()
                 && planner.offload_pool_starved(fleet, app)
@@ -1604,7 +1697,7 @@ fn dispatch<S: Sink>(
                 let gid = metas[qid_to_lid[id as usize] as usize].global_id;
                 sink.emit(now_ns, Some(gid), EventKind::OffloadDenied { app });
             }
-            if cfg.reconfig {
+            if cfg.reconfig && !power_blocked {
                 let fits = match mode {
                     ServeMode::Indexed => {
                         planner.fits_current_layouts(fleet, app, cfg.policy.allows_offload())
@@ -1651,164 +1744,6 @@ fn dispatch<S: Sink>(
             }
         }
     }
-}
-
-/// Live per-GPU power bookkeeping. The naive oracle rebuilds every GPU's
-/// usage from the full running map on each integration step; the indexed
-/// path recomputes only GPUs whose running set changed and caches the
-/// per-GPU reported watts (summed in the same ascending-GPU order, so the
-/// energy integral is bit-identical). Under slot-level batching each
-/// co-resident contributes its own activity rates, keyed by job so
-/// residents of one slot finish independently.
-enum PowerTracker {
-    Naive {
-        /// Activity rates of running jobs, keyed by (gpu, slot, job).
-        /// BTreeMap so float summation order — and thus the energy
-        /// integral — is deterministic (and, with one resident per slot,
-        /// identical to the pre-batching (gpu, slot) order).
-        running: BTreeMap<(usize, usize, u32), PlacementCost>,
-    },
-    Indexed {
-        gpus: Vec<GpuPower>,
-    },
-}
-
-struct GpuPower {
-    /// Running-resident costs per slot, keyed by job id (iterated in slot
-    /// order, then ascending job id — the same order the naive BTreeMap
-    /// visits a GPU's residents in).
-    costs: Vec<BTreeMap<u32, PlacementCost>>,
-    dirty: bool,
-    watts: f64,
-}
-
-impl PowerTracker {
-    fn new(mode: ServeMode, fleet: &Fleet) -> PowerTracker {
-        match mode {
-            ServeMode::NaiveOracle => PowerTracker::Naive {
-                running: BTreeMap::new(),
-            },
-            ServeMode::Indexed => PowerTracker::Indexed {
-                gpus: fleet
-                    .gpus
-                    .iter()
-                    .map(|g| GpuPower {
-                        costs: vec![BTreeMap::new(); g.slots.len()],
-                        dirty: true,
-                        watts: 0.0,
-                    })
-                    .collect(),
-            },
-        }
-    }
-
-    fn on_start(&mut self, gpu: usize, slot: usize, job: u32, c: PlacementCost) {
-        match self {
-            PowerTracker::Naive { running } => {
-                running.insert((gpu, slot, job), c);
-            }
-            PowerTracker::Indexed { gpus } => {
-                gpus[gpu].costs[slot].insert(job, c);
-                gpus[gpu].dirty = true;
-            }
-        }
-    }
-
-    fn on_finish(&mut self, gpu: usize, slot: usize, job: u32) {
-        match self {
-            PowerTracker::Naive { running } => {
-                running.remove(&(gpu, slot, job));
-            }
-            PowerTracker::Indexed { gpus } => {
-                gpus[gpu].costs[slot].remove(&job);
-                gpus[gpu].dirty = true;
-            }
-        }
-    }
-
-    /// A reconfiguration landed on `gpu`: the slot count changed (the
-    /// GPU is drained, so there are no running costs to carry over).
-    fn on_reconfig_done(&mut self, gpu: usize, slots: usize) {
-        match self {
-            PowerTracker::Naive { .. } => {}
-            PowerTracker::Indexed { gpus } => {
-                gpus[gpu].costs.clear();
-                gpus[gpu].costs.resize(slots, BTreeMap::new());
-                gpus[gpu].dirty = true;
-            }
-        }
-    }
-
-    /// Instantaneous fleet power (W).
-    fn power_w(&mut self, fleet: &Fleet, model: &PowerModel) -> f64 {
-        match self {
-            PowerTracker::Naive { running } => fleet_power_w_scan(fleet, model, running),
-            PowerTracker::Indexed { gpus } => {
-                for (g, gp) in gpus.iter_mut().enumerate() {
-                    if gp.dirty {
-                        gp.watts = gpu_power_w(fleet, model, g, &gp.costs);
-                        gp.dirty = false;
-                    }
-                }
-                gpus.iter().map(|gp| gp.watts).sum()
-            }
-        }
-    }
-}
-
-/// Per-GPU `PowerModel` demand from one GPU's running residents (indexed
-/// path). Accumulation order matches the naive scan: rates added in
-/// ascending (slot, job) order into a fresh `GpuUsage`.
-fn gpu_power_w(
-    fleet: &Fleet,
-    model: &PowerModel,
-    gpu: usize,
-    costs: &[BTreeMap<u32, PlacementCost>],
-) -> f64 {
-    let spec = &fleet.spec;
-    let busy = fleet.gpus[gpu].busy_sms();
-    let mut u = GpuUsage {
-        context_active: busy > 0,
-        sm_busy_frac: busy as f64 / spec.sms as f64,
-        ..GpuUsage::default()
-    };
-    for c in costs.iter().flat_map(|m| m.values()) {
-        for (i, f) in c.flop_tflops.iter().enumerate() {
-            u.flop_rate_tflops[i] += *f;
-        }
-        u.hbm_rate_tbs += c.hbm_tbs;
-        u.c2c_rate_tbs += c.c2c_tbs;
-    }
-    model.reported_w(spec, &u, spec.clock_max_mhz)
-}
-
-/// Instantaneous fleet power, rebuilt from scratch — the oracle (no DVFS
-/// governor here — serving jobs on MIG slices stays under the cap, which
-/// `reported_w` enforces anyway).
-fn fleet_power_w_scan(
-    fleet: &Fleet,
-    model: &PowerModel,
-    running: &BTreeMap<(usize, usize, u32), PlacementCost>,
-) -> f64 {
-    let spec = &fleet.spec;
-    let mut usages: Vec<GpuUsage> = vec![GpuUsage::default(); fleet.gpus.len()];
-    for (g, gpu) in fleet.gpus.iter().enumerate() {
-        let busy = gpu.busy_sms_scan();
-        usages[g].context_active = busy > 0;
-        usages[g].sm_busy_frac = busy as f64 / spec.sms as f64;
-    }
-    for (&(g, _, _), c) in running {
-        let u = &mut usages[g];
-        for (i, f) in c.flop_tflops.iter().enumerate() {
-            u.flop_rate_tflops[i] += *f;
-        }
-        u.hbm_rate_tbs += c.hbm_tbs;
-        u.c2c_rate_tbs += c.c2c_tbs;
-    }
-    usages
-        .iter()
-        .map(|u| model.reported_w(spec, u, spec.clock_max_mhz))
-        .sum()
 }
 
 // ---------------------------------------------------------------------------

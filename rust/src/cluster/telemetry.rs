@@ -155,6 +155,10 @@ pub enum EventKind {
     /// Brown-out backpressure dropped this pending job: surviving
     /// capacity fell below the shed watermark (terminal outcome).
     Shed { app: AppId },
+    /// The power governor moved `gpu`'s throttle level (clock-ladder
+    /// steps below boost; 0 = unthrottled) after a slot-churn event.
+    /// Only emitted while the power plane is active.
+    Throttle { gpu: u32, from: u32, to: u32 },
 }
 
 impl EventKind {
@@ -177,6 +181,7 @@ impl EventKind {
             EventKind::RepairQueued { .. } => "repair_queued",
             EventKind::RepairStart { .. } => "repair_start",
             EventKind::Shed { .. } => "shed",
+            EventKind::Throttle { .. } => "throttle",
         }
     }
 }
@@ -287,6 +292,9 @@ impl TraceEvent {
             EventKind::RepairQueued { gpu } | EventKind::RepairStart { gpu } => {
                 j.set("gpu", *gpu);
             }
+            EventKind::Throttle { gpu, from, to } => {
+                j.set("gpu", *gpu).set("from", *from).set("to", *to);
+            }
         }
         j
     }
@@ -317,9 +325,12 @@ pub enum Counter {
     /// Placement failures where an offload-admissible class was gated
     /// out by host-pool headroom.
     OffloadPoolGated,
+    /// Placement candidates gated out by node power-budget headroom
+    /// (only counted while the power plane's node cap is finite).
+    PowerGated,
 }
 
-pub const NUM_COUNTERS: usize = 6;
+pub const NUM_COUNTERS: usize = 7;
 
 pub const ALL_COUNTERS: [Counter; NUM_COUNTERS] = [
     Counter::PlaceDecisions,
@@ -328,6 +339,7 @@ pub const ALL_COUNTERS: [Counter; NUM_COUNTERS] = [
     Counter::MemoMisses,
     Counter::HandoffAttempts,
     Counter::OffloadPoolGated,
+    Counter::PowerGated,
 ];
 
 impl Counter {
@@ -339,6 +351,7 @@ impl Counter {
             Counter::MemoMisses => 3,
             Counter::HandoffAttempts => 4,
             Counter::OffloadPoolGated => 5,
+            Counter::PowerGated => 6,
         }
     }
 
@@ -350,6 +363,7 @@ impl Counter {
             Counter::MemoMisses => "memo_misses",
             Counter::HandoffAttempts => "handoff_attempts",
             Counter::OffloadPoolGated => "offload_pool_gated",
+            Counter::PowerGated => "power_gated",
         }
     }
 }
@@ -586,6 +600,9 @@ pub struct FleetSample {
     pub offloaders: Vec<u32>,
     /// Cached fleet power at the sample instant (W).
     pub power_w: f64,
+    /// Per-GPU governed clocks (MHz); empty when the power plane is
+    /// off, so plane-off sample JSON stays byte-identical.
+    pub clocks_mhz: Vec<f64>,
 }
 
 impl FleetSample {
@@ -599,6 +616,7 @@ impl FleetSample {
         fleet: &Fleet,
         queue: &AdmissionQueue,
         power_w: f64,
+        clocks_mhz: Vec<f64>,
     ) -> FleetSample {
         let census = fleet.class_census();
         FleetSample {
@@ -615,6 +633,7 @@ impl FleetSample {
             host_capacity_bytes: fleet.host_capacity_bytes(),
             offloaders: fleet.gpus.iter().map(|g| g.offloaders()).collect(),
             power_w,
+            clocks_mhz,
         }
     }
 
@@ -672,6 +691,9 @@ impl FleetSample {
             "offloaders",
             self.offloaders.iter().map(|&n| n as u64).collect::<Vec<u64>>(),
         );
+        if !self.clocks_mhz.is_empty() {
+            j.set("clocks_mhz", self.clocks_mhz.clone());
+        }
         j
     }
 }
@@ -1109,7 +1131,8 @@ pub mod audit {
                 | EventKind::Recover { .. }
                 | EventKind::DomainFault { .. }
                 | EventKind::RepairQueued { .. }
-                | EventKind::RepairStart { .. } => continue,
+                | EventKind::RepairStart { .. }
+                | EventKind::Throttle { .. } => continue,
             };
             let id = match e.job {
                 Some(id) => id,

@@ -139,6 +139,12 @@ impl PowerState {
     ) -> bool {
         let demand = model.demand_w(spec, usage, self.clock_mhz);
         let old = self.clock_mhz;
+        // The elapsed dt_s was spent at the clock held *before* this
+        // evaluation: charge throttled time against the pre-update state,
+        // not the one the update is about to install.
+        if old < spec.clock_max_mhz - 1e-9 {
+            self.throttled_time_s += dt_s;
+        }
         if demand > model.cap_w {
             // Step down proportionally to the overshoot, at least one step.
             let overshoot = demand / model.cap_w;
@@ -146,7 +152,9 @@ impl PowerState {
             self.clock_mhz =
                 (self.clock_mhz - steps * spec.clock_step_mhz).max(spec.clock_min_mhz);
             if self.clock_mhz < old {
-                self.down_steps += 1;
+                // Count ladder steps actually descended (the proportional
+                // request clamps at the floor), not descent events.
+                self.down_steps += ((old - self.clock_mhz) / spec.clock_step_mhz).round() as u64;
             }
         } else if demand < model.cap_w * (1.0 - model.hysteresis)
             && self.clock_mhz < spec.clock_max_mhz
@@ -154,9 +162,6 @@ impl PowerState {
             self.clock_mhz = (self.clock_mhz + spec.clock_step_mhz).min(spec.clock_max_mhz);
         }
         self.throttled = self.clock_mhz < spec.clock_max_mhz - 1e-9;
-        if self.throttled {
-            self.throttled_time_s += dt_s;
-        }
         (self.clock_mhz - old).abs() > 1e-9
     }
 
@@ -233,6 +238,63 @@ mod tests {
         assert!(!ps.throttled);
         assert_eq!(ps.clock_mhz, s.clock_max_mhz);
         assert!(ps.throttled_time_s > 0.0);
+    }
+
+    #[test]
+    fn throttled_time_attributed_to_pre_update_clock() {
+        // Boost -> throttled: the interval that *ends* in the first
+        // down-step was spent at boost, so no throttled time accrues.
+        let s = spec();
+        let m = PowerModel::h100();
+        let u = mem_bound_usage();
+        let mut ps = PowerState::new(&s);
+        ps.govern(&s, &m, &u, 0.02);
+        assert!(ps.throttled, "first over-cap evaluation must step down");
+        assert_eq!(
+            ps.throttled_time_s, 0.0,
+            "interval before the first down-step was spent at boost"
+        );
+        // Second evaluation: the preceding interval ran throttled.
+        ps.govern(&s, &m, &u, 0.02);
+        assert!((ps.throttled_time_s - 0.02).abs() < 1e-12);
+
+        // Throttled -> boost: the interval that ends in the recovery step
+        // was spent throttled and must still be charged.
+        let mut ps = PowerState::new(&s);
+        ps.clock_mhz = s.clock_max_mhz - s.clock_step_mhz;
+        ps.throttled = true;
+        let idle = GpuUsage::default();
+        ps.govern(&s, &m, &idle, 0.02);
+        assert!(!ps.throttled, "idle demand must recover to boost");
+        assert!(
+            (ps.throttled_time_s - 0.02).abs() < 1e-12,
+            "interval before the recovery step ran throttled; got {}",
+            ps.throttled_time_s
+        );
+        // Once back at boost, no further throttled time accrues.
+        ps.govern(&s, &m, &idle, 0.02);
+        assert!((ps.throttled_time_s - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn down_steps_counts_ladder_steps_not_descents() {
+        // Demand far above cap (>2x overshoot): the proportional request
+        // asks for dozens of steps, the floor clamps it to the full
+        // ladder — (1980 - 1815) / 15 = 11 actual steps in one descent.
+        let s = spec();
+        let m = PowerModel::h100();
+        let mut u = mem_bound_usage();
+        u.hbm_rate_tbs *= 4.0; // demand ~2.5x the 700 W cap
+        assert!(m.demand_w(&s, &u, s.clock_max_mhz) > 2.0 * m.cap_w);
+        let mut ps = PowerState::new(&s);
+        ps.govern(&s, &m, &u, 0.02);
+        assert_eq!(ps.clock_mhz, s.clock_min_mhz);
+        let ladder = ((s.clock_max_mhz - s.clock_min_mhz) / s.clock_step_mhz).round() as u64;
+        assert_eq!(ladder, 11);
+        assert_eq!(
+            ps.down_steps, ladder,
+            "one clamped descent spans the whole ladder"
+        );
     }
 
     #[test]

@@ -46,7 +46,7 @@ fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "serve",
             summary: "online cluster serving: admission + placement + reconfig",
-            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--faults SPEC] [--mttf S] [--mttr S] [--retries N] [--checkpoint-dt S] [--fault-domains node|rack:R] [--repair-crews N] [--shed-policy watermark:F] [--trace FILE] [--save-trace FILE] [--telemetry FILE] [--sample-dt S] [--json]",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--power-cap W|inf] [--node-power-cap W|inf] [--power-plane on|off] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--faults SPEC] [--mttf S] [--mttr S] [--retries N] [--checkpoint-dt S] [--fault-domains node|rack:R] [--repair-crews N] [--shed-policy watermark:F] [--trace FILE] [--save-trace FILE] [--telemetry FILE] [--sample-dt S] [--json]",
         },
         CommandSpec {
             name: "audit-trace",
@@ -245,6 +245,59 @@ fn cmd_reward(args: &Args) -> migsim::Result<()> {
     Ok(())
 }
 
+/// Parse the fleet power-plane flags into a [`PowerPlaneConfig`].
+/// `--power-cap`/`--node-power-cap` take watts or `inf` and imply the
+/// plane; `--power-plane off` contradicts either cap and errors out
+/// rather than silently ignoring a cap the user asked for.
+fn parse_power_plane(args: &Args) -> migsim::Result<migsim::cluster::PowerPlaneConfig> {
+    fn parse_cap(args: &Args, opt: &str) -> migsim::Result<Option<f64>> {
+        match args.opt(opt) {
+            None => Ok(None),
+            Some("inf") => Ok(Some(f64::INFINITY)),
+            Some(s) => {
+                let w: f64 = s.parse().map_err(|_| {
+                    anyhow::anyhow!("--{opt} expects a watt count or 'inf', got '{s}'")
+                })?;
+                anyhow::ensure!(
+                    w > 0.0 && !w.is_nan(),
+                    "--{opt} must be a positive number of watts, got {s}"
+                );
+                Ok(Some(w))
+            }
+        }
+    }
+    let gpu_cap = parse_cap(args, "power-cap")?;
+    let node_cap = parse_cap(args, "node-power-cap")?;
+    let enabled = match args.opt("power-plane") {
+        None => gpu_cap.is_some() || node_cap.is_some(),
+        Some("on") => true,
+        Some("off") => {
+            anyhow::ensure!(
+                gpu_cap.is_none() && node_cap.is_none(),
+                "--power-plane off contradicts --power-cap/--node-power-cap"
+            );
+            false
+        }
+        Some(other) => anyhow::bail!("--power-plane expects on|off, got '{other}'"),
+    };
+    let gpu_cap_w = match (gpu_cap, node_cap) {
+        (Some(w), _) => w,
+        (None, Some(_)) => f64::INFINITY, // node admission gate only
+        (None, None) => {
+            if enabled {
+                700.0
+            } else {
+                f64::INFINITY
+            }
+        }
+    };
+    Ok(migsim::cluster::PowerPlaneConfig {
+        enabled,
+        gpu_cap_w,
+        node_cap_w: node_cap.unwrap_or(f64::INFINITY),
+    })
+}
+
 fn cmd_serve(args: &Args) -> migsim::Result<()> {
     args.check_known(&[
         "gpus",
@@ -253,6 +306,9 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         "host-pool",
         "c2c-contention",
         "energy-weight",
+        "power-cap",
+        "node-power-cap",
+        "power-plane",
         "arrival-rate",
         "jobs",
         "deadline",
@@ -382,6 +438,12 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         energy_weight: args
             .opt_f64("energy-weight", 0.0)
             .map_err(anyhow::Error::msg)?,
+        // The fleet power plane: per-GPU governor cap plus an optional
+        // node admission budget. Off by default — and off is byte-inert,
+        // the pre-plane reports are reproduced bit-for-bit. A cap flag
+        // implies the plane; `--power-plane on` alone governs at the
+        // H100 board limit (700 W).
+        power: parse_power_plane(args)?,
         faults,
     };
     // Fail fast on nonsense numerics: each of these would otherwise

@@ -543,6 +543,7 @@ fn contended_serve_matches_naive_oracle_across_policy_layout_seed_pool_grid() {
                             host_pool_gib: pool,
                             c2c_contention: true,
                             energy_weight: 0.0,
+                            ..ServeConfig::default()
                         };
                         let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
                         let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
@@ -585,6 +586,7 @@ fn energy_weighted_serve_matches_naive_oracle_and_stays_thread_invariant() {
             host_pool_gib: 16.0,
             c2c_contention: true,
             energy_weight: weight,
+            ..ServeConfig::default()
         };
         let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
         let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
@@ -916,6 +918,7 @@ fn traced_indexed_and_naive_oracle_emit_the_same_stream() {
             host_pool_gib: pool,
             c2c_contention: contention,
             energy_weight: 0.0,
+            ..ServeConfig::default()
         };
         let tcfg = TelemetryConfig::default();
         let (ri, ti) = serve_traced(&cfg, ServeMode::Indexed, &tcfg).unwrap();
@@ -1209,4 +1212,149 @@ fn a_checkpointed_retry_readmits_on_a_different_shard() {
         demonstrated,
         "no retry ever re-admitted on a shard other than its checkpoint origin"
     );
+}
+
+#[test]
+fn powered_serve_matches_naive_oracle_across_cap_grid() {
+    // The power plane rides the same differential harness as every other
+    // serving extension: with caps active, the indexed tracker (per-GPU
+    // usage aggregates, dirty-gated refresh, node-headroom counter) must
+    // reproduce the naive full-rescan oracle bit for bit across a cap
+    // grid × policy × batch, conserve jobs, and actually throttle in at
+    // least one cell — a grid where no cap ever bites pins nothing.
+    use migsim::cluster::{
+        serve_with, LayoutPreset, PolicyKind, PowerPlaneConfig, ServeConfig, ServeMode,
+    };
+    let caps = [
+        (450.0, f64::INFINITY),
+        (f64::INFINITY, 900.0),
+        (350.0, 1200.0),
+    ];
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let mut any_throttled = false;
+    for &(gpu_cap_w, node_cap_w) in &caps {
+        for &policy in &policies {
+            for &batch in &[1u32, 2] {
+                let cfg = ServeConfig {
+                    gpus: 3,
+                    policy,
+                    layout: LayoutPreset::Mixed,
+                    arrival_rate_hz: 2.0,
+                    jobs: 40,
+                    deadline_s: 25.0,
+                    reconfig: true,
+                    seed: 0x90E7,
+                    workload_scale: 0.05,
+                    batch,
+                    c2c_contention: true,
+                    power: PowerPlaneConfig {
+                        enabled: true,
+                        gpu_cap_w,
+                        node_cap_w,
+                    },
+                    ..ServeConfig::default()
+                };
+                let fast = serve_with(&cfg, ServeMode::Indexed).unwrap();
+                let oracle = serve_with(&cfg, ServeMode::NaiveOracle).unwrap();
+                assert_eq!(
+                    fast.to_json().pretty(),
+                    oracle.to_json().pretty(),
+                    "diverged: caps=({gpu_cap_w},{node_cap_w}) policy={policy:?} batch={batch}"
+                );
+                assert_eq!(
+                    fast.completed + fast.expired + fast.rejected,
+                    fast.jobs,
+                    "jobs lost: caps=({gpu_cap_w},{node_cap_w}) policy={policy:?} batch={batch}"
+                );
+                assert!(fast.power_active);
+                any_throttled |= fast.throttled_gpu_s > 0.0;
+            }
+        }
+    }
+    assert!(any_throttled, "no cell ever throttled; the grid pins nothing");
+}
+
+#[test]
+fn sharded_powered_serve_is_thread_invariant_and_stays_inert_when_off() {
+    // The power plane under the sharded control plane: per-node budgets
+    // (each shard governs its own GPUs and node headroom) must keep the
+    // merged report bit-identical across thread counts, and an *enabled*
+    // plane with infinite caps must reproduce the plane-off scheduling
+    // outcomes exactly — only the energy integral (governed clocks, idle
+    // parking) and the power block in the JSON may differ.
+    use migsim::cluster::{
+        serve_sharded, LayoutPreset, PolicyKind, PowerPlaneConfig, ServeConfig, ShardServeConfig,
+    };
+    let base = ServeConfig {
+        gpus: 4,
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        layout: LayoutPreset::AllSmall,
+        arrival_rate_hz: 2.0,
+        jobs: 50,
+        deadline_s: 25.0,
+        reconfig: true,
+        seed: 0x90E8,
+        workload_scale: 0.05,
+        c2c_contention: true,
+        ..ServeConfig::default()
+    };
+    let capped = ServeConfig {
+        power: PowerPlaneConfig {
+            enabled: true,
+            gpu_cap_w: 450.0,
+            node_cap_w: 1400.0,
+        },
+        ..base.clone()
+    };
+    for nodes in [2u32, 4] {
+        let mut first: Option<String> = None;
+        for threads in [1u32, 2, 4] {
+            let scfg = ShardServeConfig::new(capped.clone(), nodes, threads);
+            let r = serve_sharded(&scfg).unwrap();
+            let rep = &r.report;
+            assert_eq!(rep.completed + rep.expired + rep.rejected, rep.jobs);
+            assert!(rep.power_active);
+            let key = format!("{}|{}", rep.to_json().pretty(), r.handoffs);
+            match &first {
+                None => first = Some(key),
+                Some(f) => assert_eq!(*f, key, "nodes={nodes} threads={threads}"),
+            }
+        }
+    }
+    // Plane-off inertness under shards: the powered dispatch path with an
+    // unbounded budget never changes a placement, so every scheduling
+    // outcome matches the plane-off run bit for bit.
+    let off = serve_sharded(&ShardServeConfig::new(base.clone(), 2, 2)).unwrap();
+    let on = serve_sharded(&ShardServeConfig::new(
+        ServeConfig {
+            power: PowerPlaneConfig {
+                enabled: true,
+                gpu_cap_w: f64::INFINITY,
+                node_cap_w: f64::INFINITY,
+            },
+            ..base
+        },
+        2,
+        2,
+    ))
+    .unwrap();
+    let (off, on) = (&off.report, &on.report);
+    assert!(!off.power_active && on.power_active);
+    assert_eq!(off.completed, on.completed);
+    assert_eq!(off.expired, on.expired);
+    assert_eq!(off.rejected, on.rejected);
+    assert_eq!(off.reconfigs, on.reconfigs);
+    assert_eq!(off.makespan_s.to_bits(), on.makespan_s.to_bits());
+    assert_eq!(off.wait_p99_s.to_bits(), on.wait_p99_s.to_bits());
+    assert_eq!(off.utilization.to_bits(), on.utilization.to_bits());
+    assert_eq!(on.throttled_gpu_s, 0.0, "infinite caps never throttle");
+    assert_eq!(on.power_starved, 0);
+    assert!(
+        off.to_json().get("power_cap_w").is_none(),
+        "plane-off reports must not grow power keys"
+    );
+    assert!(on.to_json().get("power_cap_w").is_some());
 }

@@ -1093,3 +1093,105 @@ fn faulted_serve_conserves_jobs_and_is_thread_invariant() {
         }
     }
 }
+
+#[test]
+fn powered_serve_conserves_jobs_and_is_thread_invariant() {
+    // The power plane over random configurations: with random finite
+    // GPU/node caps the conservation identity still holds, reruns
+    // reproduce the bytes exactly, the indexed tracker matches the naive
+    // full-rescan oracle bit for bit, and the merged sharded report is
+    // bit-identical across worker-thread counts (each shard governs its
+    // own node budget, so the partitioning is deterministic and the
+    // thread schedule can never leak in).
+    use migsim::cluster::{serve_with, PowerPlaneConfig, ServeMode};
+    let mut rng = Rng::new(0x90ACE);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig];
+    for case in 0..8 {
+        let nodes = 1 + rng.below(3) as u32;
+        let gpus = nodes + rng.below(4) as u32;
+        let per_node = gpus.div_ceil(nodes);
+        let base = ServeConfig {
+            gpus,
+            policy: *rng.choose(&policies),
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.5),
+            jobs: 20 + rng.below(20) as u32,
+            deadline_s: 15.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1 + rng.below(2) as u32,
+            host_pool_gib: if rng.chance(0.5) {
+                f64::INFINITY
+            } else {
+                6.0 + rng.range(0.0, 20.0)
+            },
+            c2c_contention: rng.chance(0.5),
+            power: PowerPlaneConfig {
+                enabled: true,
+                gpu_cap_w: if rng.chance(0.3) {
+                    f64::INFINITY
+                } else {
+                    300.0 + rng.range(0.0, 400.0)
+                },
+                node_cap_w: if rng.chance(0.3) {
+                    f64::INFINITY
+                } else {
+                    // Scale with the widest shard so the gate bites
+                    // without starving every admission outright.
+                    per_node as f64 * (250.0 + rng.range(0.0, 500.0))
+                },
+            },
+            ..ServeConfig::default()
+        };
+        assert!(base.power.active());
+        let a = serve(&base).unwrap();
+        assert_eq!(
+            a.completed + a.expired + a.rejected,
+            a.jobs,
+            "case {case}: jobs lost or duplicated under power caps ({base:?})"
+        );
+        assert!(a.power_active);
+        assert_eq!(
+            a.to_json().compact(),
+            serve(&base).unwrap().to_json().compact(),
+            "case {case}: powered run is not reproducible"
+        );
+        assert_eq!(
+            a.to_json().compact(),
+            serve_with(&base, ServeMode::NaiveOracle).unwrap().to_json().compact(),
+            "case {case}: indexed power tracker diverged from the oracle ({base:?})"
+        );
+        let mut scfg = ShardServeConfig::new(base.clone(), nodes, 1);
+        scfg.forward = rng.chance(0.7);
+        scfg.route = if rng.chance(0.5) {
+            RouteKind::RoundRobin
+        } else {
+            RouteKind::LeastLoaded
+        };
+        let s1 = serve_sharded(&scfg).unwrap();
+        let rep = &s1.report;
+        assert_eq!(
+            rep.completed + rep.expired + rep.rejected,
+            rep.jobs,
+            "case {case}: sharded powered run lost jobs ({scfg:?})"
+        );
+        for threads in [2, 4] {
+            let st = serve_sharded(&ShardServeConfig {
+                threads,
+                ..scfg.clone()
+            })
+            .unwrap();
+            assert_eq!(
+                s1.report.to_json().compact(),
+                st.report.to_json().compact(),
+                "case {case}: {threads} threads changed a powered report ({scfg:?})"
+            );
+        }
+    }
+}
