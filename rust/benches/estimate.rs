@@ -1,0 +1,158 @@
+//! Online-profiling-plane overhead benchmark: end-to-end `cluster::serve`
+//! with the estimator stepped on one knob at a time — plane off (the
+//! oracle planner, the pre-plane serve loop), the cold estimator (probe
+//! phase, structural extrapolation, cell means), and the oracle-seeded
+//! estimator (every cell warm from the first decision) — on a
+//! near-saturated fleet under the estimate-consuming offload-aware
+//! policy.
+//!
+//! The "off" cell is the zero-cost-when-off claim for this PR: with the
+//! plane disabled no `EstPlane` is built, dispatch ranks on the oracle
+//! tables, and the serve loop's bits and speed match the pre-plane
+//! system. The "estimated" cell prices the full learning machinery on
+//! the placement hot path; the "seeded" cell isolates the table-lookup
+//! cost from the learning transient (and re-checks the regret==0
+//! anchor before anything is timed).
+//!
+//! Besides the human-readable report (and the standard
+//! `results/bench/estimate.json`), this bench emits
+//! `BENCH_estimate.json` — machine-readable events/s for every cell, the
+//! per-cell overhead ratio over the plane-off baseline, and the
+//! per-policy estimate-vs-oracle regret trajectory (decisions, probes,
+//! mean and max regret for first-fit, best-fit and offload-aware) — so
+//! the profiling plane's cost and accuracy are tracked across PRs.
+//!
+//!     cargo bench --offline --bench estimate          # full measurement
+//!     cargo bench --offline --bench estimate -- --smoke   # CI bit-rot check
+
+use migsim::bench::{BenchConfig, Bencher};
+use migsim::cluster::{serve, EstimatorConfig, LayoutPreset, PolicyKind, ServeConfig};
+use migsim::util::json::Json;
+use migsim::util::units::ns_to_sec;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new().with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        min_time: Duration::from_millis(300),
+        max_iters: 8,
+    });
+    let smoke = b.smoke();
+    let gpus: u32 = if smoke { 8 } else { 64 };
+    let jobs: u32 = if smoke { 300 } else { 5_000 };
+
+    let cfg_with = |policy: PolicyKind, estimator: EstimatorConfig| ServeConfig {
+        gpus,
+        policy,
+        layout: LayoutPreset::Mixed,
+        arrival_rate_hz: gpus as f64 * 2.5,
+        jobs,
+        deadline_s: 45.0,
+        reconfig: true,
+        seed: 7,
+        workload_scale: 0.05,
+        batch: 1,
+        estimator,
+        ..ServeConfig::default()
+    };
+    let aware = PolicyKind::OffloadAware { alpha_centi: 10 };
+    let on = EstimatorConfig {
+        enabled: true,
+        ..EstimatorConfig::default()
+    };
+    let off = cfg_with(aware, EstimatorConfig::default());
+    let estimated = cfg_with(aware, on.clone());
+    let seeded = cfg_with(
+        aware,
+        EstimatorConfig {
+            enabled: true,
+            seed_oracle: true,
+            ..EstimatorConfig::default()
+        },
+    );
+
+    // The plane's contracts, re-checked before anything is timed: the
+    // estimated run is still a conserving serve that probes and decides,
+    // and the oracle-seeded estimator measures exactly zero regret.
+    let r_est = serve(&estimated).unwrap();
+    assert_eq!(
+        r_est.completed + r_est.expired + r_est.rejected,
+        r_est.jobs,
+        "job conservation broken under estimation"
+    );
+    assert!(
+        r_est.estimator.probes > 0 && r_est.estimator.decisions > 0,
+        "the estimated cell never probed or decided"
+    );
+    let r_seeded = serve(&seeded).unwrap();
+    assert_eq!(
+        r_seeded.estimator.regret_sum_ns, 0,
+        "oracle-seeded estimator accrued regret"
+    );
+
+    let mut doc = Json::obj();
+    doc.set("suite", "estimate")
+        .set("smoke", smoke)
+        .set("gpus", gpus)
+        .set("jobs", jobs)
+        .set("seeded_regret_ns", r_seeded.estimator.regret_sum_ns);
+    // The per-policy regret trajectory: how far the learned tables sit
+    // from the retained oracle under each placement policy.
+    let policies: [(&str, PolicyKind); 3] = [
+        ("first-fit", PolicyKind::FirstFit),
+        ("best-fit", PolicyKind::BestFit),
+        ("offload-aware", aware),
+    ];
+    let mut regret = Json::obj();
+    for (label, policy) in policies {
+        let r = serve(&cfg_with(policy, on.clone())).unwrap();
+        let st = &r.estimator;
+        let mean_ns = if st.decisions > 0 {
+            st.regret_sum_ns / st.decisions
+        } else {
+            0
+        };
+        let mut p = Json::obj();
+        p.set("probes", st.probes)
+            .set("decisions", st.decisions)
+            .set("regret_mean_s", ns_to_sec(mean_ns))
+            .set("regret_max_s", ns_to_sec(st.regret_max_ns))
+            .set("completed", r.completed);
+        regret.set(label, p);
+    }
+    doc.set("regret_by_policy", regret);
+
+    let cells: [(&str, &ServeConfig); 3] =
+        [("off", &off), ("estimated", &estimated), ("seeded", &seeded)];
+    let mut off_wall = None;
+    for (label, sc) in cells {
+        let probe = serve(sc).unwrap();
+        let res = b
+            .bench_with_work(
+                &format!("estimate/{label}_{jobs}jobs_{gpus}gpus"),
+                Some(probe.events as f64),
+                "events",
+                || serve(sc).unwrap().completed,
+            )
+            .cloned();
+        if let Some(r) = res {
+            doc.set(&format!("{label}_wall_s"), r.mean_s)
+                .set(
+                    &format!("{label}_events_per_s"),
+                    probe.events as f64 / r.mean_s,
+                );
+            match off_wall {
+                None => off_wall = Some(r.mean_s),
+                Some(bw) => {
+                    doc.set(&format!("{label}_overhead_ratio"), r.mean_s / bw);
+                }
+            }
+        }
+    }
+    if std::fs::write("BENCH_estimate.json", doc.pretty()).is_ok() {
+        println!("-- wrote BENCH_estimate.json");
+    }
+
+    b.finish("estimate");
+}

@@ -1,0 +1,763 @@
+//! Online profiling plane: a learned cost model with measured regret.
+//!
+//! The planner's cost tables are an oracle — every app's slowdown on
+//! every profile/occupancy/share is known upfront, which no production
+//! fleet has. This module is the MISO-style alternative: an
+//! [`EstimatorState`] that starts *cold* (an unknown app carries only its
+//! declared footprint), routes each app's first `probe_n` admissions
+//! through a probe phase whose completions train the model, and fits
+//! per-`[app × profile × occupancy × share × offload]` cost estimates
+//! from observed completions. The oracle tables are *retained*: every
+//! placement decision under estimation also evaluates the oracle cost of
+//! the chosen seat, and the absolute difference — the regret — is a
+//! first-class measured quantity (per policy, per app, aggregated into
+//! the `ServeReport` and the telemetry histograms).
+//!
+//! ## Two-tier prediction
+//!
+//! - **Warm cells** (`count ≥ warmup` observations): the estimate is the
+//!   integer running mean `sum_ns / count`. The serve loop feeds the
+//!   scheduled level-0 service time of clean completions, which is a pure
+//!   function of the cell key — so every observation in a cell is the
+//!   same nanosecond value, the mean is exact, and an oracle-seeded
+//!   estimator (`seed_oracle`, a debugging anchor) has regret exactly 0.
+//! - **Cold cells**: a structural extrapolation built from the paper's
+//!   §III-C probe signal — `gpu::sm::measure_sm_count` on the per-
+//!   occupant SM share — times the `MigSharedGi` co-run interference and
+//!   a C2C share penalty for offloaded seats, scaled by a per-app *unit
+//!   work* learned from probe completions (or, before any probe lands,
+//!   a declared-footprint prior). The factor table is fixed-point
+//!   (`FACTOR_SCALE`) and the unit work accumulates in integers, so
+//!   estimates can never depend on shard merge order.
+//!
+//! ## Determinism across shards and threads
+//!
+//! Each node shard owns a full estimator and applies its own
+//! observations immediately (a 1-node sharded run therefore reproduces
+//! the single-loop run bit-for-bit). Cross-shard learning happens only
+//! at epoch barriers: each shard drains a sparse [`EstimatorDelta`]
+//! (integer counts and sums, keyed by cell index), the coordinator
+//! accumulates the shard deltas in shard-id order into a [`DeltaAcc`],
+//! and each shard receives "everyone else's" delta (total minus own)
+//! with the next epoch's input. All merged quantities are `u64` sums, so
+//! every worker-thread count produces the identical estimator — and the
+//! identical placements.
+
+use super::placement::Planner;
+use crate::gpu::sm;
+use crate::mig::profile::{GiProfile, ProfileId, ALL_PROFILES, NUM_PROFILES};
+use crate::util::units::{ns_to_sec, sec_to_ns};
+use crate::workload::{apps, AppId};
+use anyhow::ensure;
+use std::collections::BTreeMap;
+
+/// Fixed-point scale of the structural slowdown factors (and the learned
+/// unit-work accumulator): 4096 ≈ 3 decimal digits of fraction, leaving
+/// ~50 bits of integer headroom for nanosecond runtimes.
+pub const FACTOR_SCALE: u64 = 4096;
+
+/// Floor of the C2C link-share dimension. Each estimator instance sizes
+/// the dimension as `max(SHARE_CAP, 7 × batch)` — a GH200 board has at
+/// most 7 MIG slices and each slot seats at most `batch` residents, so
+/// every reachable co-offloader count gets its own cell and clamping
+/// (`norm_share`) never actually bites; it exists only as a safety rail.
+pub const SHARE_CAP: usize = 8;
+
+/// Most MIG slices one board can carve (7 × 1g on a GH200 96 GB).
+const MAX_SLICES: usize = 7;
+
+/// Configuration of the online profiling plane. The default is inert —
+/// `enabled: false` runs the oracle planner and reproduces every
+/// pre-plane report byte-for-byte.
+#[derive(Debug, Clone)]
+pub struct EstimatorConfig {
+    /// Run all policies on *estimated* cost tables (the oracle tables
+    /// are retained as the regret baseline).
+    pub enabled: bool,
+    /// Each app's first `probe_n` admissions per node shard are probe
+    /// jobs: their completions train the structural extrapolation's
+    /// per-app unit work (cell means learn from every clean completion).
+    pub probe_n: u32,
+    /// Observations a cell needs before its running mean replaces the
+    /// structural extrapolation.
+    pub warmup: u32,
+    /// Pre-fill every cell from the oracle cost tables (`warmup`
+    /// synthetic observations at the oracle value). A debugging anchor
+    /// (`--seed-oracle`) — the regret-is-exactly-zero differential
+    /// contract.
+    pub seed_oracle: bool,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        EstimatorConfig {
+            enabled: false,
+            probe_n: 2,
+            warmup: 2,
+            seed_oracle: false,
+        }
+    }
+}
+
+impl EstimatorConfig {
+    /// Whether the plane is on (gates the estimator block in the report).
+    pub fn active(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        ensure!(
+            self.probe_n >= 1,
+            "estimator probe count must be >= 1, got {}",
+            self.probe_n
+        );
+        ensure!(
+            self.warmup >= 1,
+            "estimator warmup must be >= 1, got {}",
+            self.warmup
+        );
+        Ok(())
+    }
+}
+
+/// Which cost tables a placement decision ranks candidates on: the
+/// oracle tables (the pre-plane planner, bit-for-bit) or a learned
+/// estimator. Only the *ranking* consults the estimate — admissibility
+/// (declared footprints, offload plans, host pool) and the scheduled
+/// service time stay oracle physics, so the world evolves truthfully
+/// while the decision is taken on beliefs.
+#[derive(Clone, Copy)]
+pub enum CostSource<'a> {
+    Oracle,
+    Estimated(&'a EstimatorState),
+}
+
+/// One completion measurement waiting for its job to finish: recorded at
+/// placement, applied to the estimator at the `JobDone` event (and
+/// dropped if a fault kills the run first).
+#[derive(Debug, Clone, Copy)]
+pub struct PendingObs {
+    pub app: AppId,
+    pub pid: ProfileId,
+    pub occ: u32,
+    pub share: u32,
+    pub offloaded: bool,
+    /// The scheduled level-0 service time (ns) — the measurement.
+    pub ns: u64,
+    /// Whether the job was a probe admission (trains the unit work).
+    pub probe: bool,
+}
+
+/// Per-shard estimator accounting, summed into the `ServeReport`.
+#[derive(Debug, Clone, Default)]
+pub struct EstimatorStats {
+    /// Probe admissions routed through the probe phase.
+    pub probes: u64,
+    /// Placement decisions taken under estimation (regret samples).
+    pub decisions: u64,
+    /// Σ |estimated − oracle| service time over all decisions (ns).
+    pub regret_sum_ns: u64,
+    pub regret_max_ns: u64,
+    pub decisions_by_app: [u64; AppId::COUNT],
+    pub regret_by_app_ns: [u64; AppId::COUNT],
+}
+
+impl EstimatorStats {
+    /// Record one placement decision's regret sample.
+    pub fn record(&mut self, app: AppId, regret_ns: u64) {
+        self.decisions += 1;
+        self.regret_sum_ns += regret_ns;
+        self.regret_max_ns = self.regret_max_ns.max(regret_ns);
+        self.decisions_by_app[app.index()] += 1;
+        self.regret_by_app_ns[app.index()] += regret_ns;
+    }
+
+    /// Fold another shard's stats in (all sums and a max — order-free).
+    pub fn absorb(&mut self, o: &EstimatorStats) {
+        self.probes += o.probes;
+        self.decisions += o.decisions;
+        self.regret_sum_ns += o.regret_sum_ns;
+        self.regret_max_ns = self.regret_max_ns.max(o.regret_max_ns);
+        for i in 0..AppId::COUNT {
+            self.decisions_by_app[i] += o.decisions_by_app[i];
+            self.regret_by_app_ns[i] += o.regret_by_app_ns[i];
+        }
+    }
+}
+
+/// A sparse batch of estimator observations drained at an epoch barrier:
+/// integer `(index, count, sum)` triples for cell means and per-app unit
+/// work. Addition of deltas is commutative and associative, so any merge
+/// order produces the same table.
+#[derive(Debug, Clone, Default)]
+pub struct EstimatorDelta {
+    /// `(cell index, observation count, Σ ns)`, ascending by index.
+    pub cells: Vec<(u32, u64, u64)>,
+    /// `(app index, probe count, Σ unit work fp)`, ascending by index.
+    pub work: Vec<(u32, u64, u64)>,
+}
+
+/// The coordinator's barrier-time accumulator over shard deltas: builds
+/// the fleet total, then hands each shard `total − own` so local state
+/// (which already includes `own`) converges to the fleet table.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaAcc {
+    cells: BTreeMap<u32, (u64, u64)>,
+    work: BTreeMap<u32, (u64, u64)>,
+}
+
+impl DeltaAcc {
+    pub fn add(&mut self, d: &EstimatorDelta) {
+        for &(k, n, s) in &d.cells {
+            let e = self.cells.entry(k).or_insert((0, 0));
+            e.0 += n;
+            e.1 += s;
+        }
+        for &(k, n, s) in &d.work {
+            let e = self.work.entry(k).or_insert((0, 0));
+            e.0 += n;
+            e.1 += s;
+        }
+    }
+
+    /// The total minus one shard's own contribution — what that shard
+    /// still needs to apply. `None` when nothing remains.
+    pub fn minus(&self, own: Option<&EstimatorDelta>) -> Option<Box<EstimatorDelta>> {
+        let mut cells = self.cells.clone();
+        let mut work = self.work.clone();
+        if let Some(own) = own {
+            sub_sparse(&mut cells, &own.cells);
+            sub_sparse(&mut work, &own.work);
+        }
+        if cells.is_empty() && work.is_empty() {
+            return None;
+        }
+        Some(Box::new(EstimatorDelta {
+            cells: cells.iter().map(|(&k, &(n, s))| (k, n, s)).collect(),
+            work: work.iter().map(|(&k, &(n, s))| (k, n, s)).collect(),
+        }))
+    }
+}
+
+fn sub_sparse(total: &mut BTreeMap<u32, (u64, u64)>, own: &[(u32, u64, u64)]) {
+    for &(k, n, s) in own {
+        let drained = {
+            let e = total
+                .get_mut(&k)
+                .expect("a shard's own delta is a subset of the barrier total");
+            e.0 -= n;
+            e.1 -= s;
+            e.0 == 0 && e.1 == 0
+        };
+        if drained {
+            total.remove(&k);
+        }
+    }
+}
+
+/// The learned cost model of one node shard. See the module docs for the
+/// prediction tiers and the determinism contract.
+#[derive(Debug, Clone)]
+pub struct EstimatorState {
+    probe_n: u64,
+    warmup: u64,
+    batch: usize,
+    /// Width of the link-share dimension: `max(SHARE_CAP, 7 × batch)`,
+    /// covering every reachable co-offloader count on one board.
+    share_cap: usize,
+    /// `(count, Σ ns)` per `[app × profile × occ × share × offload]`.
+    cells: Vec<(u64, u64)>,
+    /// Structural slowdown per `[profile × occ × share × offload]`,
+    /// `FACTOR_SCALE` fixed-point. App-independent by construction.
+    factors: Vec<u64>,
+    /// Learned per-app unit work: `(probe completions, Σ ns·FS/factor)`.
+    work: [(u64, u64); AppId::COUNT],
+    /// Declared-footprint cold prior (unit-work ns) — all an unknown app
+    /// carries before its first probe completes.
+    prior_unit_ns: [u64; AppId::COUNT],
+    /// Local admissions per app — the probe-phase counter. Deliberately
+    /// per-shard (each node probes its own first `probe_n` admissions).
+    admits: [u64; AppId::COUNT],
+    /// Journal of local observations since the last `take_delta`.
+    d_cells: BTreeMap<u32, (u64, u64)>,
+    d_work: BTreeMap<u32, (u64, u64)>,
+}
+
+impl EstimatorState {
+    /// Build a cold estimator sized for `planner`'s batch, deriving the
+    /// structural factor table from the §III-C SM-count probe and the
+    /// planner's `MigSharedGi` interference constant. Identical inputs
+    /// produce identical tables, so every shard constructs the same
+    /// estimator.
+    pub fn new(planner: &Planner, cfg: &EstimatorConfig) -> EstimatorState {
+        let batch = planner.batch() as usize;
+        let share_cap = SHARE_CAP.max(MAX_SLICES * batch);
+        let interference = planner.shared_interference();
+        let full = sm::measure_sm_count(GiProfile::get(ProfileId::P7g96gb).sms).max(1) as f64;
+        let mut factors = vec![0u64; NUM_PROFILES * batch * share_cap * 2];
+        for pid in ALL_PROFILES {
+            let prof = GiProfile::get(pid);
+            for occ in 1..=batch as u32 {
+                let meas = sm::measure_sm_count((prof.sms / occ).max(1)).max(1) as f64;
+                let slow = full / meas * (1.0 + interference * (occ as f64 - 1.0));
+                for share in 1..=share_cap as u32 {
+                    for off in [false, true] {
+                        // Offloaded work pays the C2C round trip, divided
+                        // across the link's time shares.
+                        let x = if off { slow * 2.0 * share as f64 } else { slow };
+                        factors[Self::fidx_raw(batch, share_cap, pid, occ, share, off)] =
+                            ((x * FACTOR_SCALE as f64).round() as u64).max(1);
+                    }
+                }
+            }
+        }
+        let mut prior_unit_ns = [0u64; AppId::COUNT];
+        for app in apps::all() {
+            // The declared footprint is all a cold estimator knows about
+            // an app: assume unit work grows with the model size.
+            prior_unit_ns[app.index()] =
+                sec_to_ns(planner.scale() * (1.0 + planner.footprint_gib(app)));
+        }
+        EstimatorState {
+            probe_n: cfg.probe_n as u64,
+            warmup: cfg.warmup.max(1) as u64,
+            batch,
+            share_cap,
+            cells: vec![(0, 0); AppId::COUNT * NUM_PROFILES * batch * share_cap * 2],
+            factors,
+            work: [(0, 0); AppId::COUNT],
+            prior_unit_ns,
+            admits: [0; AppId::COUNT],
+            d_cells: BTreeMap::new(),
+            d_work: BTreeMap::new(),
+        }
+    }
+
+    /// Normalized link share: only offloaded placements depend on the
+    /// share (mirrors `Planner::cost_at_shared`), so non-offloaded cells
+    /// collapse to share 1 — the indexed walk and the naive scan may
+    /// legitimately pass different shares for such candidates. The
+    /// clamp to `share_cap` is a safety rail that no reachable
+    /// placement actually hits (the dimension is sized for the board).
+    fn norm_share(cap: usize, share: u32, offloaded: bool) -> usize {
+        if offloaded {
+            (share.max(1) as usize).min(cap)
+        } else {
+            1
+        }
+    }
+
+    fn fidx_raw(
+        batch: usize,
+        share_cap: usize,
+        pid: ProfileId,
+        occ: u32,
+        share: u32,
+        off: bool,
+    ) -> usize {
+        ((pid.index() * batch + (occ as usize - 1)) * share_cap + (share as usize - 1)) * 2
+            + off as usize
+    }
+
+    fn fidx(&self, pid: ProfileId, occ: u32, share: u32, offloaded: bool) -> usize {
+        let share = Self::norm_share(self.share_cap, share, offloaded) as u32;
+        Self::fidx_raw(self.batch, self.share_cap, pid, occ, share, offloaded)
+    }
+
+    fn cell(&self, app: AppId, pid: ProfileId, occ: u32, share: u32, offloaded: bool) -> usize {
+        let share = Self::norm_share(self.share_cap, share, offloaded);
+        (((app.index() * NUM_PROFILES + pid.index()) * self.batch + (occ as usize - 1))
+            * self.share_cap
+            + (share - 1))
+            * 2
+            + offloaded as usize
+    }
+
+    /// Register one admission of `app`; returns whether it falls in the
+    /// probe phase (the app's first `probe_n` admissions on this shard).
+    pub fn note_admit(&mut self, app: AppId) -> bool {
+        let i = app.index();
+        let seen = self.admits[i];
+        self.admits[i] += 1;
+        seen < self.probe_n
+    }
+
+    /// Feed one completed run's measurement into the model: the cell's
+    /// running mean always learns; a probe completion additionally
+    /// trains the per-app unit work behind the structural extrapolation.
+    /// Journaled for the next barrier delta.
+    pub fn observe(&mut self, o: &PendingObs) {
+        let ci = self.cell(o.app, o.pid, o.occ, o.share, o.offloaded);
+        self.cells[ci].0 += 1;
+        self.cells[ci].1 += o.ns;
+        let e = self.d_cells.entry(ci as u32).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += o.ns;
+        if o.probe {
+            let f = self.factors[self.fidx(o.pid, o.occ, o.share, o.offloaded)];
+            let w = o.ns.saturating_mul(FACTOR_SCALE) / f;
+            let ai = o.app.index() as u32;
+            self.work[o.app.index()].0 += 1;
+            self.work[o.app.index()].1 += w;
+            let e = self.d_work.entry(ai).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += w;
+        }
+    }
+
+    /// The estimated service time (ns) of one placement class. Pure —
+    /// safe to consult from an immutable borrow on the ranking hot path.
+    pub fn predict_ns(
+        &self,
+        app: AppId,
+        pid: ProfileId,
+        occ: u32,
+        share: u32,
+        offloaded: bool,
+    ) -> u64 {
+        let (n, sum) = self.cells[self.cell(app, pid, occ, share, offloaded)];
+        if n >= self.warmup {
+            return sum / n;
+        }
+        let f = self.factors[self.fidx(pid, occ, share, offloaded)];
+        let (wn, wsum) = self.work[app.index()];
+        let unit = if wn > 0 {
+            wsum / wn
+        } else {
+            self.prior_unit_ns[app.index()]
+        };
+        unit.saturating_mul(f) / FACTOR_SCALE
+    }
+
+    /// `predict_ns` in seconds — what the estimated reward ranks on.
+    pub fn predict_s(&self, app: AppId, pid: ProfileId, occ: u32, share: u32, off: bool) -> f64 {
+        ns_to_sec(self.predict_ns(app, pid, occ, share, off))
+    }
+
+    /// Whether the cell behind this class is warm (mean-backed).
+    pub fn is_warm(&self, app: AppId, pid: ProfileId, occ: u32, share: u32, off: bool) -> bool {
+        self.cells[self.cell(app, pid, occ, share, off)].0 >= self.warmup
+    }
+
+    /// Pre-fill every admissible cell with `warmup` synthetic
+    /// observations at the oracle value — the regret==0 differential
+    /// anchor (`EstimatorConfig::seed_oracle`). Assignment, not
+    /// accumulation, so the non-offloaded cells the two `allow_offload`
+    /// passes share are written with identical values twice. Seeded
+    /// state is never journaled: every shard seeds itself identically.
+    pub fn seed_from_oracle(&mut self, planner: &mut Planner) {
+        for app in apps::all() {
+            for pid in ALL_PROFILES {
+                for occ in 1..=self.batch as u32 {
+                    for allow in [false, true] {
+                        let Some(c) = planner.cost_at_shared(app, pid, allow, occ, 1) else {
+                            continue;
+                        };
+                        let ci = self.cell(app, pid, occ, 1, c.offloaded);
+                        self.cells[ci] = (self.warmup, self.warmup * sec_to_ns(c.runtime_s));
+                        if !c.offloaded {
+                            continue;
+                        }
+                        for share in 2..=self.share_cap as u32 {
+                            if let Some(cs) =
+                                planner.cost_at_shared(app, pid, true, occ, share)
+                            {
+                                let ci = self.cell(app, pid, occ, share, true);
+                                self.cells[ci] =
+                                    (self.warmup, self.warmup * sec_to_ns(cs.runtime_s));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain the journal of observations since the last drain, for the
+    /// epoch-barrier exchange. `None` when nothing was observed.
+    pub fn take_delta(&mut self) -> Option<Box<EstimatorDelta>> {
+        if self.d_cells.is_empty() && self.d_work.is_empty() {
+            return None;
+        }
+        let d = EstimatorDelta {
+            cells: self.d_cells.iter().map(|(&k, &(n, s))| (k, n, s)).collect(),
+            work: self.d_work.iter().map(|(&k, &(n, s))| (k, n, s)).collect(),
+        };
+        self.d_cells.clear();
+        self.d_work.clear();
+        Some(Box::new(d))
+    }
+
+    /// Apply another shard's (merged) observations. Not journaled — the
+    /// coordinator already routed these to every other shard.
+    pub fn apply_delta(&mut self, d: &EstimatorDelta) {
+        for &(k, n, s) in &d.cells {
+            let c = &mut self.cells[k as usize];
+            c.0 += n;
+            c.1 += s;
+        }
+        for &(k, n, w) in &d.work {
+            let e = &mut self.work[k as usize];
+            e.0 += n;
+            e.1 += w;
+        }
+    }
+}
+
+/// The estimator plane's full per-shard runtime state, boxed onto the
+/// shard only when `--estimator on`: the learned tables, the
+/// completion measurements in flight (keyed by queue id), and the
+/// regret accounting. Off-path code never allocates one, so the
+/// default run stays byte-identical to the pre-plane serve loop.
+pub struct EstPlane {
+    pub state: EstimatorState,
+    /// Placement-time measurements waiting for `JobDone`, keyed by
+    /// queue id. A fault that kills the run drops the entry — only
+    /// clean completions train the tables.
+    pub pending: std::collections::BTreeMap<u32, PendingObs>,
+    pub stats: EstimatorStats,
+}
+
+impl EstPlane {
+    /// Build the plane for one shard: a cold estimator, or an
+    /// oracle-seeded one when the config anchors it (`seed_oracle`).
+    pub fn new(planner: &mut Planner, cfg: &EstimatorConfig) -> EstPlane {
+        let mut state = EstimatorState::new(planner, cfg);
+        if cfg.seed_oracle {
+            state.seed_from_oracle(planner);
+        }
+        EstPlane {
+            state,
+            pending: std::collections::BTreeMap::new(),
+            stats: EstimatorStats::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(batch: u32) -> (Planner, EstimatorState) {
+        let pl = Planner::with_batch(0.05, batch);
+        let est = EstimatorState::new(&pl, &EstimatorConfig::default());
+        (pl, est)
+    }
+
+    #[test]
+    fn cold_predictions_are_structural_and_monotone() {
+        let (_, est) = state(2);
+        // Bigger slices predict faster, co-residency predicts slower,
+        // offloading predicts slower still — before a single observation.
+        let app = AppId::Llama3Fp16;
+        let small = est.predict_ns(app, ProfileId::P1g12gb, 1, 1, false);
+        let big = est.predict_ns(app, ProfileId::P7g96gb, 1, 1, false);
+        assert!(big < small, "7g must predict faster than 1g ({big} vs {small})");
+        let solo = est.predict_ns(app, ProfileId::P3g48gb, 1, 1, false);
+        let packed = est.predict_ns(app, ProfileId::P3g48gb, 2, 1, false);
+        assert!(packed > solo, "co-residency must predict slower");
+        let direct = est.predict_ns(app, ProfileId::P1g12gb, 1, 1, false);
+        let off1 = est.predict_ns(app, ProfileId::P1g12gb, 1, 1, true);
+        let off3 = est.predict_ns(app, ProfileId::P1g12gb, 1, 3, true);
+        assert!(off1 > direct && off3 > off1, "offload and link shares cost");
+        // A heavier declared footprint predicts more unit work.
+        let light = est.predict_ns(AppId::Hotspot, ProfileId::P1g12gb, 1, 1, false);
+        let heavy = est.predict_ns(AppId::Llama3Fp16, ProfileId::P1g12gb, 1, 1, false);
+        assert!(heavy > light);
+    }
+
+    #[test]
+    fn share_is_normalized_for_non_offloaded_cells() {
+        // The naive scan passes the GPU's link share even for candidates
+        // whose cost is not offloaded; the indexed walk passes 1. The
+        // estimator must collapse both to the same cell or the two serve
+        // modes would diverge.
+        let (_, mut est) = state(1);
+        let app = AppId::Faiss;
+        let a = est.predict_ns(app, ProfileId::P1g12gb, 1, 1, false);
+        let b = est.predict_ns(app, ProfileId::P1g12gb, 1, 5, false);
+        assert_eq!(a, b);
+        est.observe(&PendingObs {
+            app,
+            pid: ProfileId::P1g12gb,
+            occ: 1,
+            share: 3, // scan-side share for a non-offloaded candidate
+            offloaded: false,
+            ns: 1_000,
+            probe: false,
+        });
+        let (n, _) = est.cells[est.cell(app, ProfileId::P1g12gb, 1, 1, false)];
+        assert_eq!(n, 1, "the observation must land in the share-1 cell");
+    }
+
+    #[test]
+    fn warm_cell_mean_is_exact_and_overrides_the_prior() {
+        let (_, mut est) = state(1);
+        let app = AppId::Faiss;
+        let pid = ProfileId::P2g24gb;
+        let obs = PendingObs {
+            app,
+            pid,
+            occ: 1,
+            share: 1,
+            offloaded: false,
+            ns: 123_456_789,
+            probe: true,
+        };
+        est.observe(&obs);
+        assert!(!est.is_warm(app, pid, 1, 1, false), "warmup is 2");
+        est.observe(&obs);
+        assert!(est.is_warm(app, pid, 1, 1, false));
+        assert_eq!(est.predict_ns(app, pid, 1, 1, false), 123_456_789);
+    }
+
+    #[test]
+    fn probe_completions_train_the_unit_work_extrapolation() {
+        let (_, mut est) = state(1);
+        let app = AppId::Faiss;
+        let cold = est.predict_ns(app, ProfileId::P7g96gb, 1, 1, false);
+        // One probe completion on 1g re-anchors the 7g prediction too —
+        // the structural factor carries the measurement across profiles.
+        est.observe(&PendingObs {
+            app,
+            pid: ProfileId::P1g12gb,
+            occ: 1,
+            share: 1,
+            offloaded: false,
+            ns: 40 * cold, // the app is much slower than the prior thought
+            probe: true,
+        });
+        let after = est.predict_ns(app, ProfileId::P7g96gb, 1, 1, false);
+        assert!(after > cold, "a slow probe must raise the whole surface");
+    }
+
+    #[test]
+    fn probe_phase_counts_the_first_admissions() {
+        let pl = Planner::new(0.05);
+        let cfg = EstimatorConfig {
+            enabled: true,
+            probe_n: 2,
+            ..EstimatorConfig::default()
+        };
+        let mut est = EstimatorState::new(&pl, &cfg);
+        assert!(est.note_admit(AppId::Faiss));
+        assert!(est.note_admit(AppId::Faiss));
+        assert!(!est.note_admit(AppId::Faiss), "probe phase is over");
+        assert!(est.note_admit(AppId::Hotspot), "per-app counters");
+    }
+
+    #[test]
+    fn oracle_seeding_predicts_the_oracle_exactly() {
+        let (mut pl, mut est) = state(2);
+        est.seed_from_oracle(&mut pl);
+        for app in apps::all() {
+            for pid in ALL_PROFILES {
+                for occ in 1..=2u32 {
+                    for allow in [false, true] {
+                        let Some(c) = pl.cost_at_shared(app, pid, allow, occ, 1) else {
+                            continue;
+                        };
+                        assert_eq!(
+                            est.predict_ns(app, pid, occ, 1, c.offloaded),
+                            sec_to_ns(c.runtime_s),
+                            "{app:?} {pid:?} occ {occ}"
+                        );
+                        if c.offloaded {
+                            // Covers shares past the SHARE_CAP floor:
+                            // at batch 2 the instance cap is 14.
+                            for share in 2..=est.share_cap as u32 {
+                                let cs = pl.cost_at_shared(app, pid, true, occ, share).unwrap();
+                                assert_eq!(
+                                    est.predict_ns(app, pid, occ, share, true),
+                                    sec_to_ns(cs.runtime_s)
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // And the mean stays exact as matching observations stream in.
+        let c = pl
+            .cost_at_shared(AppId::Faiss, ProfileId::P1g12gb, false, 1, 1)
+            .unwrap();
+        est.observe(&PendingObs {
+            app: AppId::Faiss,
+            pid: ProfileId::P1g12gb,
+            occ: 1,
+            share: 1,
+            offloaded: false,
+            ns: sec_to_ns(c.runtime_s),
+            probe: false,
+        });
+        assert_eq!(
+            est.predict_ns(AppId::Faiss, ProfileId::P1g12gb, 1, 1, false),
+            sec_to_ns(c.runtime_s)
+        );
+    }
+
+    #[test]
+    fn delta_exchange_is_order_free_and_total_minus_own() {
+        let (_, mut a) = state(1);
+        let (_, mut b) = state(1);
+        let (_, mut c) = state(1);
+        let mk = |app, ns| PendingObs {
+            app,
+            pid: ProfileId::P1g12gb,
+            occ: 1,
+            share: 1,
+            offloaded: false,
+            ns,
+            probe: true,
+        };
+        a.observe(&mk(AppId::Faiss, 100));
+        b.observe(&mk(AppId::Faiss, 300));
+        b.observe(&mk(AppId::Hotspot, 50));
+        // c observes nothing this epoch.
+        let da = a.take_delta();
+        let db = b.take_delta();
+        let dc = c.take_delta();
+        assert!(dc.is_none());
+        let mut acc = DeltaAcc::default();
+        for d in [&da, &db, &dc].into_iter().flatten() {
+            acc.add(d);
+        }
+        a.apply_delta(&acc.minus(da.as_deref()).unwrap());
+        b.apply_delta(&acc.minus(db.as_deref()).unwrap());
+        c.apply_delta(&acc.minus(dc.as_deref()).unwrap());
+        // All three shards converge to the identical table.
+        for (x, y) in [(&a, &b), (&a, &c)] {
+            assert_eq!(x.cells, y.cells);
+            assert_eq!(x.work, y.work);
+        }
+        let (n, sum) = a.cells[a.cell(AppId::Faiss, ProfileId::P1g12gb, 1, 1, false)];
+        assert_eq!((n, sum), (2, 400));
+        // The journals drained — a second take is empty.
+        assert!(a.take_delta().is_none());
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(EstimatorConfig::default().validate().is_ok());
+        let on = EstimatorConfig {
+            enabled: true,
+            ..EstimatorConfig::default()
+        };
+        assert!(on.validate().is_ok());
+        assert!(EstimatorConfig {
+            probe_n: 0,
+            ..on.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(EstimatorConfig {
+            warmup: 0,
+            ..on
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -58,6 +58,7 @@
 //! latency, fleet utilization, fragmentation, and energy integrated
 //! through the `gpu::PowerModel`.
 
+pub mod estimate;
 pub mod faults;
 pub mod fleet;
 pub mod hostmem;
@@ -68,6 +69,7 @@ pub mod reconfig;
 pub mod shard;
 pub mod telemetry;
 
+pub use estimate::{CostSource, EstimatorConfig, EstimatorState, EstimatorStats};
 pub use faults::{FaultConfig, FaultDomains, FaultKind, ShedPolicy};
 pub use fleet::{Fleet, LayoutPreset, MAX_BATCH};
 pub use hostmem::{HostMemConfig, HostPool};
@@ -75,14 +77,15 @@ pub use placement::{Placement, PlacementCost, Planner, PolicyKind};
 pub use power::{PowerPlaneConfig, PowerView};
 pub use queue::{AdmissionQueue, JobState};
 pub use shard::{
-    serve_sharded, serve_sharded_replay, serve_sharded_traced, RouteKind, ShardServeConfig,
-    ShardSummary, ShardedServeReport,
+    serve_sharded, serve_sharded_replay, serve_sharded_streamed, serve_sharded_traced, RouteKind,
+    ShardServeConfig, ShardSummary, ShardedServeReport,
 };
-pub use telemetry::{TelemetryConfig, TelemetryReport};
+pub use telemetry::{TelemetryConfig, TelemetryReport, TelemetryStreamer};
 
 use crate::util::json::Json;
+use crate::util::units::ns_to_sec;
 use crate::workload::trace::JobTrace;
-use crate::workload::AppId;
+use crate::workload::{apps, AppId};
 use anyhow::ensure;
 
 /// Configuration of one serving run.
@@ -131,6 +134,12 @@ pub struct ServeConfig {
     /// no cap is priced, the legacy clamped-sensor energy model is kept,
     /// and every report reproduces the pre-plane bytes exactly.
     pub power: PowerPlaneConfig,
+    /// The online profiling plane (`cluster::estimate`). The default is
+    /// inert — every placement runs on the oracle cost tables and every
+    /// report reproduces the pre-plane bytes exactly. When enabled, all
+    /// policies rank candidates on learned cost estimates while the
+    /// oracle is retained as the regret baseline.
+    pub estimator: EstimatorConfig,
 }
 
 impl Default for ServeConfig {
@@ -151,6 +160,7 @@ impl Default for ServeConfig {
             energy_weight: 0.0,
             faults: FaultConfig::default(),
             power: PowerPlaneConfig::default(),
+            estimator: EstimatorConfig::default(),
         }
     }
 }
@@ -171,6 +181,7 @@ impl ServeConfig {
         );
         self.faults.validate()?;
         self.power.validate()?;
+        self.estimator.validate()?;
         Ok(())
     }
 }
@@ -246,6 +257,13 @@ pub struct ServeReport {
     /// Failed placement visits where even the cheapest admissible class
     /// exceeded the node budget's headroom.
     pub power_starved: u64,
+    /// Whether the online profiling plane was active. Gates the
+    /// estimator block on the wire, so an oracle run keeps its pre-plane
+    /// bytes. Not itself serialized.
+    pub estimator_active: bool,
+    /// Probe counts, placement decisions taken on estimated tables, and
+    /// the measured estimate-vs-oracle regret (total/max/per-app).
+    pub estimator: EstimatorStats,
     /// Simulation events dispatched by the serving loop.
     pub events: u64,
     /// Serving horizon: last completion/expiry instant (s).
@@ -310,6 +328,39 @@ impl ServeReport {
                 .set("parked_gpu_s", self.parked_gpu_s)
                 .set("power_starved", self.power_starved);
         }
+        if self.estimator_active {
+            // The estimator block likewise only exists on the wire while
+            // the profiling plane is active. Regret totals are exact
+            // integer nanoseconds; the mean is also offered in seconds
+            // for human eyes and jq one-liners.
+            let st = &self.estimator;
+            let mean_ns = if st.decisions > 0 {
+                st.regret_sum_ns / st.decisions
+            } else {
+                0
+            };
+            let mut by_app = Json::obj();
+            for app in apps::all() {
+                let i = app.index();
+                if st.decisions_by_app[i] == 0 {
+                    continue;
+                }
+                let mut a = Json::obj();
+                a.set("decisions", st.decisions_by_app[i])
+                    .set("regret_total_ns", st.regret_by_app_ns[i])
+                    .set(
+                        "regret_mean_s",
+                        ns_to_sec(st.regret_by_app_ns[i] / st.decisions_by_app[i]),
+                    );
+                by_app.set(app.name(), a);
+            }
+            o.set("probes", st.probes)
+                .set("est_decisions", st.decisions)
+                .set("regret_total_ns", st.regret_sum_ns)
+                .set("regret_mean_s", ns_to_sec(mean_ns))
+                .set("regret_max_s", ns_to_sec(st.regret_max_ns))
+                .set("regret_by_app", by_app);
+        }
         o.set("events", self.events)
             .set("makespan_s", self.makespan_s)
             .set("throughput_jobs_s", self.throughput_jobs_s)
@@ -355,6 +406,23 @@ impl ServeReport {
         } else {
             String::new()
         };
+        let est_line = if self.estimator_active {
+            let st = &self.estimator;
+            let mean_ns = if st.decisions > 0 {
+                st.regret_sum_ns / st.decisions
+            } else {
+                0
+            };
+            format!(
+                "\nestimator: {} probes, {} decisions, regret mean {:.4} s / max {:.4} s",
+                st.probes,
+                st.decisions,
+                ns_to_sec(mean_ns),
+                ns_to_sec(st.regret_max_ns),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "serve {} on {} x{} @ {:.2} jobs/s\n\
              jobs: {} completed, {} expired, {} rejected ({} offloaded, {} reconfigs)\n\
@@ -380,6 +448,7 @@ impl ServeReport {
             self.events,
             fault_line,
         ) + &power_line
+            + &est_line
     }
 }
 

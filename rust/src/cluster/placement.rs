@@ -81,6 +81,7 @@
 //! per-(app, profile, occupancy) rewards at the policy's α (see
 //! `benches/placement.rs`).
 
+use super::estimate::CostSource;
 use super::fleet::{Fleet, MAX_BATCH};
 use super::hostmem::gib_to_bytes;
 use super::power::{self, PowerView};
@@ -185,6 +186,14 @@ pub struct Placement {
     pub priced: PlacementCost,
     /// The discrete throttle level the GPU settles at once the job joins.
     pub level: u32,
+    /// The cost-class key of the decision — profile, post-join occupancy,
+    /// and C2C link share — what the online estimator predicts and learns
+    /// from. The share is normalized to 1 when the cost is not offloaded
+    /// (such costs are share-independent, and the indexed walk and the
+    /// naive scan legitimately reach them with different raw shares).
+    pub pid: ProfileId,
+    pub occ: u32,
+    pub share: u32,
 }
 
 /// Total activity of one model run — per-pipeline FLOPs, HBM bytes, C2C
@@ -358,6 +367,18 @@ impl Planner {
     /// input.
     pub fn footprint_gib(&self, app: AppId) -> f64 {
         self.footprint[app.index()]
+    }
+
+    /// The workload scale factor this planner models runs at.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// The `MigSharedGi` co-run interference constant per extra
+    /// co-resident — the structural signal the online estimator's cold
+    /// extrapolation reuses (§III-C probe methodology).
+    pub fn shared_interference(&self) -> f64 {
+        self.shared_interference
     }
 
     #[inline]
@@ -826,6 +847,9 @@ impl Planner {
             base,
             priced,
             level,
+            pid,
+            occ,
+            share: if base.offloaded { share } else { 1 },
         }
     }
 
@@ -879,6 +903,30 @@ impl Planner {
         app: AppId,
         policy: PolicyKind,
         pv: Option<&PowerView>,
+        sink: &mut S,
+    ) -> Option<Placement> {
+        self.place_sourced_traced(fleet, app, policy, pv, CostSource::Oracle, sink)
+    }
+
+    /// [`Self::place_powered_traced`] with an explicit [`CostSource`]:
+    /// under `CostSource::Estimated`, the offload-aware ranking swaps
+    /// each candidate's *oracle* service time for the estimator's
+    /// prediction of its cost class before computing the reward — the
+    /// decision runs on beliefs while admissibility (footprints, offload
+    /// plans, host pool, power gates) and the returned [`Placement`]'s
+    /// scheduled costs stay oracle physics. The estimator is
+    /// clock-level-blind: a throttled candidate keeps its level-0
+    /// estimate (the oracle-priced activity rates still charge the power
+    /// plane truthfully). First-fit and best-fit never consult runtimes,
+    /// so their decisions are source-invariant by construction — their
+    /// regret is the estimator's error on seats the oracle chose anyway.
+    pub fn place_sourced_traced<S: Sink>(
+        &mut self,
+        fleet: &Fleet,
+        app: AppId,
+        policy: PolicyKind,
+        pv: Option<&PowerView>,
+        src: CostSource,
         sink: &mut S,
     ) -> Option<Placement> {
         debug_assert_eq!(fleet.batch(), self.batch, "planner/fleet batch mismatch");
@@ -1051,7 +1099,16 @@ impl Planner {
                             (lv, c)
                         }
                     };
-                    let r = self.reward_throttled(app, pid, occ, share, level, alpha_centi, &c);
+                    let r = match src {
+                        CostSource::Oracle => {
+                            self.reward_throttled(app, pid, occ, share, level, alpha_centi, &c)
+                        }
+                        CostSource::Estimated(est) => {
+                            let mut ec = c;
+                            ec.runtime_s = est.predict_s(app, pid, occ, share, c.offloaded);
+                            self.reward_of(app, pid, &ec, alpha_centi as f64 / 100.0)
+                        }
+                    };
                     let sms = GiProfile::get(pid).sms;
                     let better = match &best {
                         None => true,
@@ -1114,6 +1171,24 @@ impl Planner {
         app: AppId,
         policy: PolicyKind,
         pv: Option<&PowerView>,
+        sink: &mut S,
+    ) -> Option<Placement> {
+        self.place_scan_sourced_traced(fleet, app, policy, pv, CostSource::Oracle, sink)
+    }
+
+    /// The naive full-scan oracle of [`Self::place_sourced_traced`]: the
+    /// same [`CostSource`] seam, recomputed slot-by-slot. The estimator
+    /// normalizes the C2C share to 1 for non-offloaded costs, so the
+    /// scan's per-GPU raw share and the indexed walk's per-candidate
+    /// share hit the identical estimate cell — the two modes stay
+    /// bit-identical under estimation.
+    pub fn place_scan_sourced_traced<S: Sink>(
+        &mut self,
+        fleet: &Fleet,
+        app: AppId,
+        policy: PolicyKind,
+        pv: Option<&PowerView>,
+        src: CostSource,
         sink: &mut S,
     ) -> Option<Placement> {
         debug_assert_eq!(fleet.batch(), self.batch, "planner/fleet batch mismatch");
@@ -1261,8 +1336,23 @@ impl Planner {
                                 (lv, c)
                             }
                         };
-                        let r =
-                            self.reward_throttled(app, pid, occ + 1, share, level, alpha_centi, &c);
+                        let r = match src {
+                            CostSource::Oracle => self.reward_throttled(
+                                app,
+                                pid,
+                                occ + 1,
+                                share,
+                                level,
+                                alpha_centi,
+                                &c,
+                            ),
+                            CostSource::Estimated(est) => {
+                                let mut ec = c;
+                                ec.runtime_s =
+                                    est.predict_s(app, pid, occ + 1, share, c.offloaded);
+                                self.reward_of(app, pid, &ec, alpha_centi as f64 / 100.0)
+                            }
+                        };
                         let sms = slot.profile.sms;
                         // Exact comparisons (no epsilon): tie-breaking
                         // must be order-insensitive for the class-level

@@ -68,6 +68,11 @@ pub struct QueuedJob {
     pub gpu: Option<usize>,
     /// Arrived here via a cross-node handoff (never forwarded again).
     pub handoff: bool,
+    /// Admitted during the estimator's probe phase (one of its app's
+    /// first `--probe-n` admissions on this shard): its completion trains
+    /// the learned cost model's per-app unit work. Always `false` with
+    /// the profiling plane off.
+    pub probe: bool,
 }
 
 /// FIFO admission queue with deadline accounting.
@@ -150,6 +155,7 @@ impl AdmissionQueue {
             offloaded: false,
             gpu: None,
             handoff,
+            probe: false,
         });
         self.pending.insert(self.jobs.len() as u32 - 1);
         Ok(())

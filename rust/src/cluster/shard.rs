@@ -56,14 +56,15 @@
 //! bit-for-bit against it, and `nodes > 1` runs are differentially tested
 //! across thread counts (see `tests/integration.rs`).
 
+use super::estimate::{CostSource, DeltaAcc, EstPlane, EstimatorDelta, EstimatorStats, PendingObs};
 use super::faults::{FaultDomains, FaultKind, ShedPolicy};
 use super::fleet::{Fleet, Orphan};
 use super::power::PowerTracker;
 use super::queue::{AdmissionQueue, JobState};
 use super::reconfig;
 use super::telemetry::{
-    Counter, EventKind, FleetSample, HandoffReason, NullSink, Recorder, Sink, TelemetryChunk,
-    TelemetryConfig, TelemetryReport,
+    ChunkCollector, Counter, EventKind, FleetSample, HandoffReason, NullSink, Recorder, Sink,
+    TelemetryChunk, TelemetryConfig, TelemetryReport, TelemetryStreamer,
 };
 use super::{PlacementCost, Planner, PolicyKind, ServeConfig, ServeMode, ServeReport};
 use crate::gpu::nvlink::{Dir, NvlinkModel};
@@ -262,6 +263,10 @@ struct BarrierInfo {
     /// Telemetry recorded during the epoch, drained from the shard's
     /// sink at the barrier (`None` when the plane is off).
     telemetry: Option<Box<TelemetryChunk>>,
+    /// Estimator observations journaled during the epoch, drained at
+    /// the barrier for the all-to-all exchange (`None` when the plane
+    /// is off or nothing was observed).
+    est_delta: Option<Box<EstimatorDelta>>,
 }
 
 /// Everything the coordinator sends a shard for one epoch.
@@ -281,6 +286,10 @@ struct EpochInput {
     handoffs: Vec<Handoff>,
     /// Fresh arrivals routed to this shard, ascending global id.
     arrivals: Vec<Job>,
+    /// The other shards' estimator observations since the last barrier
+    /// (`total − own`), applied before any of this epoch's events so
+    /// every shard ranks placements on the identical fleet table.
+    est_others: Option<Box<EstimatorDelta>>,
 }
 
 /// One node shard: a self-contained serving loop over a fleet partition.
@@ -360,6 +369,9 @@ pub(crate) struct Shard<S: Sink> {
     retry: BTreeMap<u32, RetryState>,
     faults_injected: u32,
     retries_done: u32,
+    /// The online profiling plane (`None` when `--estimator off`): the
+    /// learned cost tables, in-flight measurements, and regret stats.
+    est: Option<Box<EstPlane>>,
     /// Telemetry hook; reads simulator state, never writes it.
     sink: S,
 }
@@ -376,6 +388,19 @@ impl<S: Sink> Shard<S> {
     ) -> crate::Result<Shard<S>> {
         let fleet = Fleet::with_hostmem(gpus, cfg.layout, cfg.batch, cfg.host_pool_gib)?;
         let power = PowerTracker::new(mode, &fleet, &cfg.power);
+        let mut planner = Planner::with_opts(
+            cfg.workload_scale,
+            cfg.batch,
+            cfg.c2c_contention,
+            cfg.energy_weight,
+        );
+        // The estimator is built from the shard's own planner, so every
+        // shard derives the identical cold (or oracle-seeded) tables.
+        let est = if cfg.estimator.active() {
+            Some(Box::new(EstPlane::new(&mut planner, &cfg.estimator)))
+        } else {
+            None
+        };
         Ok(Shard {
             id,
             params: cfg.clone(),
@@ -384,12 +409,7 @@ impl<S: Sink> Shard<S> {
             forward,
             fleet,
             queue: AdmissionQueue::new(),
-            planner: Planner::with_opts(
-                cfg.workload_scale,
-                cfg.batch,
-                cfg.c2c_contention,
-                cfg.energy_weight,
-            ),
+            planner,
             engine: Engine::new(),
             power,
             scratch: DispatchScratch::new(),
@@ -421,6 +441,7 @@ impl<S: Sink> Shard<S> {
             retry: BTreeMap::new(),
             faults_injected: 0,
             retries_done: 0,
+            est,
             sink,
         })
     }
@@ -667,6 +688,23 @@ impl<S: Sink> Shard<S> {
                     );
                 }
                 if self.planner.servable(app, self.params.policy.allows_offload()) {
+                    // Probe phase: each shard's first `probe_n` servable
+                    // admissions per app are flagged — their completions
+                    // train the per-app unit work. Rejected apps never
+                    // reach here, so they burn no probe budget.
+                    if let Some(est) = &mut self.est {
+                        if est.state.note_admit(app) {
+                            self.queue.jobs[qid as usize].probe = true;
+                            est.stats.probes += 1;
+                            if S::ENABLED {
+                                self.sink.emit(
+                                    time_ns,
+                                    Some(meta.global_id),
+                                    EventKind::Probe { app },
+                                );
+                            }
+                        }
+                    }
                     // The queue's deadline_s is the single source of truth
                     // for when this job abandons.
                     let abandon_s = self.queue.jobs[qid as usize].deadline_s;
@@ -702,6 +740,7 @@ impl<S: Sink> Shard<S> {
                         &self.metas,
                         &self.qid_to_lid,
                         &self.retry,
+                        self.est.as_deref_mut(),
                     );
                 } else {
                     self.queue
@@ -762,6 +801,14 @@ impl<S: Sink> Shard<S> {
                         );
                         self.sink.observe_latency(wait_ns, service_ns, slack_ns);
                     }
+                    if let Some(est) = &mut self.est {
+                        // Land the measurement stashed at placement;
+                        // faults drop the stash, so only clean,
+                        // full-service completions train the tables.
+                        if let Some(obs) = est.pending.remove(&job) {
+                            est.state.observe(&obs);
+                        }
+                    }
                     dispatch(
                         &self.params,
                         self.mode,
@@ -779,6 +826,7 @@ impl<S: Sink> Shard<S> {
                         &self.metas,
                         &self.qid_to_lid,
                         &self.retry,
+                        self.est.as_deref_mut(),
                     );
                 }
             }
@@ -812,6 +860,7 @@ impl<S: Sink> Shard<S> {
                     &self.metas,
                     &self.qid_to_lid,
                     &self.retry,
+                    self.est.as_deref_mut(),
                 );
             }
             Ev::Fault { gpu, gen } => {
@@ -1163,6 +1212,7 @@ impl<S: Sink> Shard<S> {
             &self.metas,
             &self.qid_to_lid,
             &self.retry,
+            self.est.as_deref_mut(),
         );
     }
 
@@ -1182,6 +1232,11 @@ impl<S: Sink> Shard<S> {
     fn reap_orphans(&mut self, time_ns: u64, now: f64, g: usize, orphans: &[Orphan]) {
         for o in orphans {
             self.power.on_finish(g, o.slot, o.job);
+            if let Some(est) = &mut self.est {
+                // A killed attempt never trains the estimator: the
+                // measurement stashed at placement is discarded.
+                est.pending.remove(&o.job);
+            }
             let lid = self.qid_to_lid[o.job as usize];
             let gid = self.metas[lid as usize].global_id;
             let qj = &self.queue.jobs[o.job as usize];
@@ -1274,6 +1329,14 @@ impl<S: Sink> Shard<S> {
 
     /// Apply one epoch's inputs, run it, and report the barrier state.
     fn run_epoch(&mut self, input: EpochInput) -> BarrierInfo {
+        // Converge the learned tables before any of this epoch's events:
+        // every shard starts the epoch on the identical fleet table, so
+        // the merged outcome is invariant to the worker mapping.
+        if let Some(d) = &input.est_others {
+            if let Some(est) = &mut self.est {
+                est.state.apply_delta(d);
+            }
+        }
         for &(qid, dest, reason) in &input.removals {
             self.remove_for_handoff(input.start_ns, qid, dest, reason);
         }
@@ -1376,6 +1439,7 @@ impl<S: Sink> Shard<S> {
             host_headroom_bytes: self.fleet.host_headroom_bytes(),
             candidates,
             telemetry: self.sink.take_chunk().map(Box::new),
+            est_delta: self.est.as_mut().and_then(|e| e.state.take_delta()),
         }
     }
 
@@ -1497,6 +1561,12 @@ fn merge_report<S: Sink>(cfg: &ServeConfig, shards: &[Shard<S>]) -> ServeReport 
             .sum::<f64>()
             / (total_sms as f64 * horizon)
     };
+    let mut estimator = EstimatorStats::default();
+    for s in shards {
+        if let Some(e) = &s.est {
+            estimator.absorb(&e.stats);
+        }
+    }
     ServeReport {
         policy: cfg.policy.label(),
         layout: cfg.layout.label().to_string(),
@@ -1520,6 +1590,8 @@ fn merge_report<S: Sink>(cfg: &ServeConfig, shards: &[Shard<S>]) -> ServeReport 
         throttled_gpu_s: shards.iter().map(|s| s.throttled_gpu_s).sum(),
         parked_gpu_s: shards.iter().map(|s| s.parked_gpu_s).sum(),
         power_starved: shards.iter().map(|s| s.power_starved).sum(),
+        estimator_active: cfg.estimator.active(),
+        estimator,
         reconfigs: shards
             .iter()
             .map(|s| s.fleet.gpus.iter().map(|g| g.reconfigs).sum::<u32>())
@@ -1560,6 +1632,7 @@ fn dispatch<S: Sink>(
     metas: &[JobMeta],
     qid_to_lid: &[u32],
     retry: &BTreeMap<u32, RetryState>,
+    mut est: Option<&mut EstPlane>,
 ) {
     let DispatchScratch {
         ids,
@@ -1569,6 +1642,12 @@ fn dispatch<S: Sink>(
     ids.extend(queue.pending_ids());
     for &id in ids.iter() {
         let app = queue.jobs[id as usize].job.app;
+        // Which cost tables rank this decision: the oracle (plane off,
+        // bit-for-bit the pre-plane planner) or the learned estimator.
+        let src = match est.as_deref() {
+            Some(e) => CostSource::Estimated(&e.state),
+            None => CostSource::Oracle,
+        };
         let placed = match mode {
             ServeMode::Indexed => {
                 if failed_at_epoch[app.index()] == Some(fleet.epoch()) {
@@ -1587,9 +1666,16 @@ fn dispatch<S: Sink>(
                     let r = if power.plane_active() {
                         power.refresh(fleet);
                         let pv = power.view();
-                        planner.place_powered_traced(fleet, app, cfg.policy, pv.as_ref(), sink)
+                        planner.place_sourced_traced(
+                            fleet,
+                            app,
+                            cfg.policy,
+                            pv.as_ref(),
+                            src,
+                            sink,
+                        )
                     } else {
-                        planner.place_powered_traced(fleet, app, cfg.policy, None, sink)
+                        planner.place_sourced_traced(fleet, app, cfg.policy, None, src, sink)
                     };
                     if r.is_none() {
                         failed_at_epoch[app.index()] = Some(fleet.epoch());
@@ -1604,9 +1690,16 @@ fn dispatch<S: Sink>(
                 if power.plane_active() {
                     power.refresh(fleet);
                     let pv = power.view();
-                    planner.place_scan_powered_traced(fleet, app, cfg.policy, pv.as_ref(), sink)
+                    planner.place_scan_sourced_traced(
+                        fleet,
+                        app,
+                        cfg.policy,
+                        pv.as_ref(),
+                        src,
+                        sink,
+                    )
                 } else {
-                    planner.place_scan_powered_traced(fleet, app, cfg.policy, None, sink)
+                    planner.place_scan_sourced_traced(fleet, app, cfg.policy, None, src, sink)
                 }
             }
         };
@@ -1642,6 +1735,44 @@ fn dispatch<S: Sink>(
             } else {
                 c.runtime_s
             };
+            if let Some(est) = est.as_deref_mut() {
+                // Measured regret of this decision: the model's belief
+                // about the chosen class vs the retained oracle's level-0
+                // truth. Logged per decision whatever the policy — the
+                // structural policies ignore the estimate when ranking,
+                // so their regret traces the model's accuracy alone.
+                let oracle_ns = sec_to_ns(p.base.runtime_s);
+                let est_ns =
+                    est.state.predict_ns(app, p.pid, p.occ, p.share, p.base.offloaded);
+                let regret_ns = est_ns.abs_diff(oracle_ns);
+                est.stats.record(app, regret_ns);
+                if S::ENABLED {
+                    let gid = metas[qid_to_lid[id as usize] as usize].global_id;
+                    sink.emit(
+                        now_ns,
+                        Some(gid),
+                        EventKind::Regret { app, est_ns, oracle_ns },
+                    );
+                    sink.observe_regret(regret_ns);
+                }
+                // Stash the measurement for `JobDone`: only clean runs
+                // (boost clocks, no checkpoint-restored remainder) are
+                // level-0 truth — anything else would poison the cells.
+                if p.level == 0 && frac == 0.0 {
+                    est.pending.insert(
+                        id,
+                        PendingObs {
+                            app,
+                            pid: p.pid,
+                            occ: p.occ,
+                            share: p.share,
+                            offloaded: p.base.offloaded,
+                            ns: oracle_ns,
+                            probe: queue.jobs[id as usize].probe,
+                        },
+                    );
+                }
+            }
             let until = now + runtime_s;
             fleet.start_job(
                 g,
@@ -1903,7 +2034,7 @@ fn gpus_for_shard(total: u32, nodes: u32, s: u32) -> u32 {
 
 /// Run a sharded multi-node serve over a synthetic Poisson trace.
 pub fn serve_sharded(cfg: &ShardServeConfig) -> crate::Result<ShardedServeReport> {
-    Ok(serve_sharded_impl(cfg, None, |_| NullSink)?.0)
+    serve_sharded_impl(cfg, None, |_| NullSink, None::<&mut TelemetryReport>)
 }
 
 /// Run a sharded multi-node serve over a replayed arrival trace.
@@ -1911,7 +2042,7 @@ pub fn serve_sharded_replay(
     cfg: &ShardServeConfig,
     trace: &JobTrace,
 ) -> crate::Result<ShardedServeReport> {
-    Ok(serve_sharded_impl(cfg, Some(trace), |_| NullSink)?.0)
+    serve_sharded_impl(cfg, Some(trace), |_| NullSink, None::<&mut TelemetryReport>)
 }
 
 /// Sharded serve with the telemetry plane on. The `ShardedServeReport`
@@ -1925,16 +2056,46 @@ pub fn serve_sharded_traced(
 ) -> crate::Result<(ShardedServeReport, TelemetryReport)> {
     tcfg.validate()?;
     let t = *tcfg;
-    let (report, tel) =
-        serve_sharded_impl(cfg, None, move |shard| Recorder::new(shard as u32, &t))?;
-    Ok((report, tel.expect("recorder sink always yields telemetry")))
+    let mut tel = TelemetryReport::new();
+    let report = serve_sharded_impl(
+        cfg,
+        None,
+        move |shard| Recorder::new(shard as u32, &t),
+        Some(&mut tel),
+    )?;
+    tel.finalize();
+    Ok((report, tel))
 }
 
-fn serve_sharded_impl<S: Sink>(
+/// Sharded serve streaming its telemetry to `out` as JSONL: events are
+/// written incrementally at every epoch barrier instead of buffered for
+/// the whole run. The bytes written are identical to rendering the
+/// buffered run's [`TelemetryReport::to_jsonl`], and the returned
+/// `ShardedServeReport` is byte-identical to the untraced run.
+pub fn serve_sharded_streamed<W: std::io::Write>(
+    cfg: &ShardServeConfig,
+    tcfg: &TelemetryConfig,
+    out: W,
+) -> crate::Result<ShardedServeReport> {
+    tcfg.validate()?;
+    let t = *tcfg;
+    let mut streamer = TelemetryStreamer::new(out);
+    let report = serve_sharded_impl(
+        cfg,
+        None,
+        move |shard| Recorder::new(shard as u32, &t),
+        Some(&mut streamer),
+    )?;
+    streamer.finish()?;
+    Ok(report)
+}
+
+fn serve_sharded_impl<S: Sink, C: ChunkCollector>(
     scfg: &ShardServeConfig,
     trace: Option<&JobTrace>,
     mk_sink: impl Fn(usize) -> S,
-) -> crate::Result<(ShardedServeReport, Option<TelemetryReport>)> {
+    mut tel: Option<&mut C>,
+) -> crate::Result<ShardedServeReport> {
     let base = &scfg.base;
     ensure!(scfg.nodes >= 1, "sharded serve needs at least one node");
     ensure!(scfg.threads >= 1, "sharded serve needs at least one thread");
@@ -1988,11 +2149,6 @@ fn serve_sharded_impl<S: Sink>(
         gpu_base += g;
         shards.push(sh);
     }
-    let mut tel = if S::ENABLED {
-        Some(TelemetryReport::new())
-    } else {
-        None
-    };
 
     // Static routing is known upfront: pre-schedule every arrival in
     // global-id order, exactly like the single-loop serve does.
@@ -2018,6 +2174,7 @@ fn serve_sharded_impl<S: Sink>(
             host_headroom_bytes: s.fleet.host_headroom_bytes(),
             candidates: Vec::new(),
             telemetry: None,
+            est_delta: None,
         })
         .collect();
 
@@ -2026,6 +2183,9 @@ fn serve_sharded_impl<S: Sink>(
     // configuration that never executed.
     let threads = (scfg.threads as usize).min(nodes);
     let mut pool = ShardPool::new(shards, threads);
+    // Estimator observations drained at the last barrier, waiting to be
+    // applied (as `total − own`) at each shard's next epoch start.
+    let mut est_pending: Vec<Option<Box<EstimatorDelta>>> = vec![None; nodes];
     let lookahead_ns = sec_to_ns(scfg.lookahead_s).max(1);
     let handoff_slice_sms = GiProfile::get(ProfileId::P1g12gb).sms as i64;
     let mut epoch: u64 = 0;
@@ -2041,13 +2201,14 @@ fn serve_sharded_impl<S: Sink>(
             .checked_add(lookahead_ns)
             .ok_or_else(|| anyhow::anyhow!("epoch clock overflow — lookahead too large"))?;
         let mut inputs: Vec<EpochInput> = (0..nodes)
-            .map(|_| EpochInput {
+            .map(|s| EpochInput {
                 start_ns,
                 end_ns,
                 stream_open: false,
                 removals: Vec::new(),
                 handoffs: Vec::new(),
                 arrivals: Vec::new(),
+                est_others: est_pending[s].take(),
             })
             .collect();
 
@@ -2072,7 +2233,7 @@ fn serve_sharded_impl<S: Sink>(
             }
             cands.sort_by_key(|h| h.global_id);
             if let Some(tr) = tel.as_mut() {
-                tr.counters.add(Counter::HandoffAttempts, cands.len() as u64);
+                tr.count(Counter::HandoffAttempts, cands.len() as u64);
             }
             let mut idle_left: Vec<i64> =
                 infos.iter().map(|i| i.open_sm_seats as i64).collect();
@@ -2169,7 +2330,27 @@ fn serve_sharded_impl<S: Sink>(
         if let Some(tr) = tel.as_mut() {
             for info in infos.iter_mut() {
                 if let Some(chunk) = info.telemetry.take() {
-                    tr.absorb(*chunk);
+                    tr.absorb_chunk(*chunk);
+                }
+            }
+            tr.at_barrier(end_ns)?;
+        }
+        // All-to-all estimator exchange: total the barrier's deltas in
+        // shard-id order (integer sums — order-free anyway), then queue
+        // `total − own` for each shard's next epoch. One node needs no
+        // exchange: its local table already is the fleet table.
+        if cfg.estimator.active() && nodes > 1 {
+            let mut acc = DeltaAcc::default();
+            let mut any = false;
+            for info in &infos {
+                if let Some(d) = &info.est_delta {
+                    acc.add(d);
+                    any = true;
+                }
+            }
+            if any {
+                for (s, info) in infos.iter().enumerate() {
+                    est_pending[s] = acc.minus(info.est_delta.as_deref());
                 }
             }
         }
@@ -2191,26 +2372,22 @@ fn serve_sharded_impl<S: Sink>(
     if let Some(tr) = tel.as_mut() {
         for s in shards.iter_mut() {
             if let Some(chunk) = s.sink.take_chunk() {
-                tr.absorb(chunk);
+                tr.absorb_chunk(chunk);
             }
         }
-        tr.finalize();
     }
     let report = merge_report(&cfg, &shards);
-    Ok((
-        ShardedServeReport {
-            report,
-            nodes: scfg.nodes,
-            threads: threads as u32,
-            lookahead_s: scfg.lookahead_s,
-            route: scfg.route,
-            forward: scfg.forward,
-            handoffs: handoffs_total as u32,
-            epochs: epoch,
-            shards: shards.iter().map(|s| s.summary()).collect(),
-        },
-        tel,
-    ))
+    Ok(ShardedServeReport {
+        report,
+        nodes: scfg.nodes,
+        threads: threads as u32,
+        lookahead_s: scfg.lookahead_s,
+        route: scfg.route,
+        forward: scfg.forward,
+        handoffs: handoffs_total as u32,
+        epochs: epoch,
+        shards: shards.iter().map(|s| s.summary()).collect(),
+    })
 }
 
 /// Messages from the coordinator to a worker thread.

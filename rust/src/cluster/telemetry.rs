@@ -159,6 +159,19 @@ pub enum EventKind {
     /// steps below boost; 0 = unthrottled) after a slot-churn event.
     /// Only emitted while the power plane is active.
     Throttle { gpu: u32, from: u32, to: u32 },
+    /// The estimator routed this admission through its app's probe
+    /// phase: the completion will train the learned cost model's
+    /// per-app unit work. Only emitted while the profiling plane is
+    /// active.
+    Probe { app: AppId },
+    /// One placement decision's estimate-vs-oracle regret: the chosen
+    /// seat's estimated service time against the retained oracle's.
+    /// Only emitted while the profiling plane is active.
+    Regret {
+        app: AppId,
+        est_ns: u64,
+        oracle_ns: u64,
+    },
 }
 
 impl EventKind {
@@ -182,6 +195,8 @@ impl EventKind {
             EventKind::RepairStart { .. } => "repair_start",
             EventKind::Shed { .. } => "shed",
             EventKind::Throttle { .. } => "throttle",
+            EventKind::Probe { .. } => "probe",
+            EventKind::Regret { .. } => "regret",
         }
     }
 }
@@ -294,6 +309,19 @@ impl TraceEvent {
             }
             EventKind::Throttle { gpu, from, to } => {
                 j.set("gpu", *gpu).set("from", *from).set("to", *to);
+            }
+            EventKind::Probe { app } => {
+                j.set("app", app.name());
+            }
+            EventKind::Regret {
+                app,
+                est_ns,
+                oracle_ns,
+            } => {
+                j.set("app", app.name())
+                    .set("est_s", ns_to_sec(*est_ns))
+                    .set("oracle_s", ns_to_sec(*oracle_ns))
+                    .set("regret_s", ns_to_sec(est_ns.abs_diff(*oracle_ns)));
             }
         }
         j
@@ -552,6 +580,11 @@ pub struct HistSet {
     pub service: Hist,
     /// Slack at completion: deadline − completion, floored at zero.
     pub slack: Hist,
+    /// Per-decision estimate-vs-oracle regret (|estimated − oracle|
+    /// service time, ns). Only ever non-empty while the profiling plane
+    /// is active — and only serialized then, so plane-off telemetry
+    /// bytes are unchanged.
+    pub regret: Hist,
 }
 
 impl HistSet {
@@ -563,6 +596,7 @@ impl HistSet {
         self.wait.merge(&other.wait);
         self.service.merge(&other.service);
         self.slack.merge(&other.slack);
+        self.regret.merge(&other.regret);
     }
 
     pub fn to_json(&self) -> Json {
@@ -570,6 +604,9 @@ impl HistSet {
         j.set("wait", self.wait.to_json())
             .set("service", self.service.to_json())
             .set("slack", self.slack.to_json());
+        if !self.regret.is_empty() {
+            j.set("regret", self.regret.to_json());
+        }
         j
     }
 }
@@ -738,6 +775,9 @@ pub trait Sink: Send + 'static {
     fn count(&mut self, c: Counter, n: u64);
     /// Record a completed job's latency triple (virtual ns).
     fn observe_latency(&mut self, wait_ns: u64, service_ns: u64, slack_ns: u64);
+    /// Record one placement decision's estimate-vs-oracle regret (ns).
+    /// Only ever called while the profiling plane is active.
+    fn observe_regret(&mut self, regret_ns: u64);
     /// Whether a sample boundary lies strictly before `now_ns`.
     fn sample_due(&self, now_ns: u64) -> bool;
     /// The next pending sample boundary (only meaningful when due).
@@ -762,6 +802,8 @@ impl Sink for NullSink {
     fn count(&mut self, _c: Counter, _n: u64) {}
     #[inline(always)]
     fn observe_latency(&mut self, _wait_ns: u64, _service_ns: u64, _slack_ns: u64) {}
+    #[inline(always)]
+    fn observe_regret(&mut self, _regret_ns: u64) {}
     #[inline(always)]
     fn sample_due(&self, _now_ns: u64) -> bool {
         false
@@ -846,6 +888,10 @@ impl Sink for Recorder {
         self.chunk.hists.wait.record_ns(wait_ns);
         self.chunk.hists.service.record_ns(service_ns);
         self.chunk.hists.slack.record_ns(slack_ns);
+    }
+
+    fn observe_regret(&mut self, regret_ns: u64) {
+        self.chunk.hists.regret.record_ns(regret_ns);
     }
 
     fn sample_due(&self, now_ns: u64) -> bool {
@@ -966,6 +1012,127 @@ impl TelemetryReport {
             self.hists.wait.count(),
             ns_to_sec(self.hists.wait.quantile_ns(0.95)),
         )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming JSONL writer
+// ---------------------------------------------------------------------------
+
+/// Incremental JSONL writer: absorbs shard-epoch chunks as they drain at
+/// barriers and flushes every event strictly below the epoch-end
+/// watermark, so a million-job trace never holds its full event stream
+/// resident. The output is byte-identical to buffering the whole run in
+/// a [`TelemetryReport`] and rendering [`TelemetryReport::to_jsonl`]:
+///
+/// - Events are written in the canonical `(t_ns, shard, seq)` order.
+///   The watermark makes the prefix final — every event of epoch `k` is
+///   stamped inside the epoch (barrier-stamped stragglers carry the next
+///   epoch's start, which *is* the watermark, and the strict `<` cut
+///   holds them back), so nothing that arrives later can sort below
+///   what was already flushed.
+/// - Samples, the histogram line and the profile line trail the events
+///   in `to_jsonl`'s layout, so they are held until [`Self::finish`].
+///   They are summaries and per-0.2 s series — bounded by horizon, not
+///   by job count.
+pub struct TelemetryStreamer<W: std::io::Write> {
+    out: W,
+    /// Events at or above every watermark seen so far.
+    pending: Vec<TraceEvent>,
+    samples: Vec<FleetSample>,
+    counters: CounterSet,
+    hists: HistSet,
+}
+
+impl<W: std::io::Write> TelemetryStreamer<W> {
+    pub fn new(out: W) -> TelemetryStreamer<W> {
+        TelemetryStreamer {
+            out,
+            pending: Vec::new(),
+            samples: Vec::new(),
+            counters: CounterSet::new(),
+            hists: HistSet::new(),
+        }
+    }
+
+    /// Merge one shard-epoch chunk (associative, like
+    /// [`TelemetryReport::absorb`]).
+    pub fn absorb(&mut self, chunk: TelemetryChunk) {
+        self.pending.extend(chunk.events);
+        self.samples.extend(chunk.samples);
+        self.counters.merge(&chunk.counters);
+        self.hists.merge(&chunk.hists);
+    }
+
+    /// Write out every buffered event with `t_ns < end_ns` in canonical
+    /// order. Call with the epoch's end once all of the epoch's chunks
+    /// are absorbed.
+    pub fn flush_below(&mut self, end_ns: u64) -> crate::Result<()> {
+        // (t_ns, shard, seq) is unique per event, so the sort is total
+        // and the streamed prefix equals the buffered path's global sort.
+        self.pending.sort_by_key(|e| (e.t_ns, e.shard, e.seq));
+        let cut = self.pending.partition_point(|e| e.t_ns < end_ns);
+        for e in self.pending.drain(..cut) {
+            writeln!(self.out, "{}", e.to_json().compact())?;
+        }
+        Ok(())
+    }
+
+    /// Flush every remaining event, then the samples and the trailing
+    /// hist/profile lines — the exact tail `to_jsonl` renders.
+    pub fn finish(mut self) -> crate::Result<()> {
+        self.pending.sort_by_key(|e| (e.t_ns, e.shard, e.seq));
+        for e in self.pending.drain(..) {
+            writeln!(self.out, "{}", e.to_json().compact())?;
+        }
+        self.samples.sort_by_key(|s| (s.t_ns, s.shard));
+        for s in &self.samples {
+            writeln!(self.out, "{}", s.to_json().compact())?;
+        }
+        let mut h = Json::obj();
+        h.set("type", "hist").set("hist", self.hists.to_json());
+        writeln!(self.out, "{}", h.compact())?;
+        let mut p = Json::obj();
+        p.set("type", "profile")
+            .set("profile", self.counters.to_json());
+        writeln!(self.out, "{}", p.compact())?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Where the sharded coordinator pours barrier chunks: the buffered
+/// [`TelemetryReport`] (everything held until a final sort) or the
+/// incremental [`TelemetryStreamer`] (the barrier hook advances the
+/// write-out watermark). The two produce byte-identical JSONL.
+pub(crate) trait ChunkCollector {
+    fn absorb_chunk(&mut self, chunk: TelemetryChunk);
+    fn count(&mut self, c: Counter, n: u64);
+    /// All of an epoch's chunks are in; `end_ns` is the epoch's end.
+    fn at_barrier(&mut self, end_ns: u64) -> crate::Result<()>;
+}
+
+impl ChunkCollector for TelemetryReport {
+    fn absorb_chunk(&mut self, chunk: TelemetryChunk) {
+        self.absorb(chunk);
+    }
+    fn count(&mut self, c: Counter, n: u64) {
+        self.counters.add(c, n);
+    }
+    fn at_barrier(&mut self, _end_ns: u64) -> crate::Result<()> {
+        Ok(())
+    }
+}
+
+impl<W: std::io::Write> ChunkCollector for TelemetryStreamer<W> {
+    fn absorb_chunk(&mut self, chunk: TelemetryChunk) {
+        self.absorb(chunk);
+    }
+    fn count(&mut self, c: Counter, n: u64) {
+        self.counters.add(c, n);
+    }
+    fn at_barrier(&mut self, end_ns: u64) -> crate::Result<()> {
+        self.flush_below(end_ns)
     }
 }
 
@@ -1132,7 +1299,9 @@ pub mod audit {
                 | EventKind::DomainFault { .. }
                 | EventKind::RepairQueued { .. }
                 | EventKind::RepairStart { .. }
-                | EventKind::Throttle { .. } => continue,
+                | EventKind::Throttle { .. }
+                | EventKind::Probe { .. }
+                | EventKind::Regret { .. } => continue,
             };
             let id = match e.job {
                 Some(id) => id,

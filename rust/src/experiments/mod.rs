@@ -54,11 +54,11 @@ impl ExperimentOutput {
 
 /// All experiment ids in paper order, plus the ablation sweeps and the
 /// online-serving studies.
-pub const ALL_IDS: [&str; 24] = [
+pub const ALL_IDS: [&str; 25] = [
     "table1", "table2", "table4", "smcount", "ctx", "fig2", "fig3", "fig4", "fig5", "fig6",
     "fig7", "fig8", "ablate-copies", "ablate-alpha", "ablate-mps", "sched", "serve",
     "serve-scale", "serve-shard", "serve-batch", "serve-offload", "serve-faults",
-    "serve-degrade", "serve-power",
+    "serve-degrade", "serve-power", "serve-estimate",
 ];
 
 /// Run one experiment by id.
@@ -88,6 +88,7 @@ pub fn run(id: &str, cfg: &SimConfig) -> crate::Result<ExperimentOutput> {
         "serve-faults" => serve::serve_faults_experiment(cfg),
         "serve-degrade" => serve::serve_degrade_experiment(cfg),
         "serve-power" => serve::serve_power_experiment(cfg),
+        "serve-estimate" => serve::serve_estimate_experiment(cfg),
         other => anyhow::bail!("unknown experiment '{other}' (known: {})", ALL_IDS.join(", ")),
     }
 }

@@ -46,7 +46,7 @@ fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "serve",
             summary: "online cluster serving: admission + placement + reconfig",
-            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--power-cap W|inf] [--node-power-cap W|inf] [--power-plane on|off] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--faults SPEC] [--mttf S] [--mttr S] [--retries N] [--checkpoint-dt S] [--fault-domains node|rack:R] [--repair-crews N] [--shed-policy watermark:F] [--trace FILE] [--save-trace FILE] [--telemetry FILE] [--sample-dt S] [--json]",
+            usage: "migsim serve [--gpus N] [--policy first-fit|best-fit|offload-aware[:ALPHA]] [--batch K] [--host-pool GIB|inf] [--c2c-contention on|off] [--energy-weight W] [--power-cap W|inf] [--node-power-cap W|inf] [--power-plane on|off] [--arrival-rate HZ] [--jobs N] [--deadline S] [--layout mixed|small|big] [--no-reconfig] [--seed N] [--scale X] [--nodes N] [--threads T] [--lookahead S] [--route round-robin|least-loaded] [--no-forward] [--faults SPEC] [--mttf S] [--mttr S] [--retries N] [--checkpoint-dt S] [--fault-domains node|rack:R] [--repair-crews N] [--shed-policy watermark:F] [--trace FILE] [--save-trace FILE] [--telemetry FILE] [--sample-dt S] [--stream-telemetry] [--estimator on|off] [--probe-n K] [--estimator-warmup N] [--seed-oracle] [--json]",
         },
         CommandSpec {
             name: "audit-trace",
@@ -298,6 +298,43 @@ fn parse_power_plane(args: &Args) -> migsim::Result<migsim::cluster::PowerPlaneC
     })
 }
 
+/// Parse the online-profiling flags into an [`EstimatorConfig`]. The
+/// tuning knobs are meaningless with the plane off; accepting them
+/// silently would let a user believe they ran an estimated study the
+/// oracle actually decided.
+fn parse_estimator(args: &Args) -> migsim::Result<migsim::cluster::EstimatorConfig> {
+    let enabled = match args.opt("estimator") {
+        None | Some("off") => false,
+        Some("on") => true,
+        Some(other) => anyhow::bail!("--estimator expects on|off, got '{other}'"),
+    };
+    if !enabled {
+        for opt in ["probe-n", "estimator-warmup"] {
+            anyhow::ensure!(
+                args.opt(opt).is_none(),
+                "--{opt} has no effect without --estimator on"
+            );
+        }
+        anyhow::ensure!(
+            !args.flag("seed-oracle"),
+            "--seed-oracle has no effect without --estimator on"
+        );
+    }
+    let d = migsim::cluster::EstimatorConfig::default();
+    let cfg = migsim::cluster::EstimatorConfig {
+        enabled,
+        probe_n: args
+            .opt_u64("probe-n", d.probe_n as u64)
+            .map_err(anyhow::Error::msg)? as u32,
+        warmup: args
+            .opt_u64("estimator-warmup", d.warmup as u64)
+            .map_err(anyhow::Error::msg)? as u32,
+        seed_oracle: args.flag("seed-oracle"),
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
 fn cmd_serve(args: &Args) -> migsim::Result<()> {
     args.check_known(&[
         "gpus",
@@ -335,6 +372,11 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         "save-trace",
         "telemetry",
         "sample-dt",
+        "stream-telemetry",
+        "estimator",
+        "probe-n",
+        "estimator-warmup",
+        "seed-oracle",
     ])
     .map_err(anyhow::Error::msg)?;
     let cfg = sim_config(args)?;
@@ -445,6 +487,11 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         // H100 board limit (700 W).
         power: parse_power_plane(args)?,
         faults,
+        // The online profiling plane: learned cost tables with measured
+        // regret vs the retained oracle. Off by default — and off is
+        // byte-inert, the oracle-planner reports are reproduced
+        // bit-for-bit.
+        estimator: parse_estimator(args)?,
     };
     // Fail fast on nonsense numerics: each of these would otherwise
     // surface as a confusing downstream error (or a silently skewed run).
@@ -504,6 +551,10 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
             args.opt("sample-dt").is_none(),
             "--sample-dt has no effect without --telemetry FILE"
         );
+        anyhow::ensure!(
+            !args.flag("stream-telemetry"),
+            "--stream-telemetry has no effect without --telemetry FILE"
+        );
     } else {
         anyhow::ensure!(
             trace.is_none(),
@@ -522,6 +573,13 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
 
     let nodes = args.opt_u64("nodes", 1).map_err(anyhow::Error::msg)? as u32;
     let threads = args.opt_u64("threads", 1).map_err(anyhow::Error::msg)? as u32;
+    // Barrier-incremental telemetry write-out only exists under the
+    // sharded epoch machinery; the single loop has no barriers to flush
+    // at, so the flag would silently degrade to a buffered write.
+    anyhow::ensure!(
+        !args.flag("stream-telemetry") || nodes > 1 || threads > 1,
+        "--stream-telemetry requires a sharded run (--nodes N > 1 or --threads T > 1)"
+    );
     if nodes <= 1 {
         // The dispatcher options only do anything with multiple node
         // shards (a 1-node run has trivial routing and no handoffs, at
@@ -555,6 +613,15 @@ fn cmd_serve(args: &Args) -> migsim::Result<()> {
         scfg.forward = !args.flag("no-forward");
         let report = match (&trace, telemetry_path) {
             (Some(t), _) => migsim::cluster::serve_sharded_replay(&scfg, t)?,
+            (None, Some(path)) if args.flag("stream-telemetry") => {
+                let out = std::io::BufWriter::new(
+                    std::fs::File::create(path)
+                        .map_err(|e| anyhow::anyhow!("creating telemetry {path}: {e}"))?,
+                );
+                let report = migsim::cluster::serve_sharded_streamed(&scfg, &tel_cfg, out)?;
+                eprintln!("-- wrote {path} (streamed)");
+                report
+            }
             (None, Some(path)) => {
                 let (report, tel) = migsim::cluster::serve_sharded_traced(&scfg, &tel_cfg)?;
                 write_telemetry(path, &tel)?;
@@ -734,6 +801,46 @@ mod tests {
             (
                 &["serve", "--faults", "gpu", "--shed-policy", "drop-all"],
                 "unknown grammar 'drop-all'",
+            ),
+            (
+                &["serve", "--estimator", "maybe"],
+                "--estimator expects on|off",
+            ),
+            (
+                &["serve", "--probe-n", "3"],
+                "--probe-n has no effect without --estimator on",
+            ),
+            (
+                &["serve", "--estimator", "off", "--probe-n", "3"],
+                "--probe-n has no effect without --estimator on",
+            ),
+            (
+                &["serve", "--estimator-warmup", "4"],
+                "--estimator-warmup has no effect without --estimator on",
+            ),
+            (
+                &["serve", "--seed-oracle"],
+                "--seed-oracle has no effect without --estimator on",
+            ),
+            (
+                &["serve", "--estimator", "on", "--probe-n", "0"],
+                "estimator probe count must be >= 1",
+            ),
+            (
+                &["serve", "--estimator", "on", "--estimator-warmup", "0"],
+                "estimator warmup must be >= 1",
+            ),
+            (
+                &["serve", "--estimator", "on", "--probe-n", "x"],
+                "--probe-n expects an integer",
+            ),
+            (
+                &["serve", "--stream-telemetry"],
+                "--stream-telemetry has no effect without --telemetry",
+            ),
+            (
+                &["serve", "--stream-telemetry", "--telemetry", "/dev/null"],
+                "--stream-telemetry requires a sharded run",
             ),
         ];
         for (argv, want) in matrix {

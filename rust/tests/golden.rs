@@ -177,6 +177,34 @@ fn degraded_serve_report_matches_committed_fixture() {
 }
 
 #[test]
+fn estimated_serve_report_matches_committed_fixture() {
+    // One estimated-mode fixture pins the whole online profiling plane —
+    // the probe phase, the structural extrapolation, the cell means and
+    // the regret ledger — end-to-end against a committed artifact: a
+    // drift in the learned tables or the regret accounting shows up here
+    // even if the indexed walk and the naive oracle scan drift together.
+    use migsim::cluster::EstimatorConfig;
+    let cfg = ServeConfig {
+        policy: PolicyKind::OffloadAware { alpha_centi: 10 },
+        estimator: EstimatorConfig {
+            enabled: true,
+            ..EstimatorConfig::default()
+        },
+        ..base_cfg()
+    };
+    let r = serve(&cfg).unwrap();
+    assert!(r.estimator_active, "the fixture run must report the plane");
+    assert!(
+        r.estimator.probes > 0 && r.estimator.decisions > 0,
+        "the fixture run must probe and decide"
+    );
+    let rendered = format!("{}\n", r.to_json().pretty());
+    if check_fixture("serve_estimated_offload-aware-0.10_mixed_7_b1.json", &rendered) {
+        eprintln!("fixture blessed — `git add rust/tests/fixtures` and commit");
+    }
+}
+
+#[test]
 fn committed_fixtures_are_valid_canonical_json() {
     // Whatever is committed must parse with the in-repo parser and be in
     // canonical pretty form (ending with exactly one newline) — catches

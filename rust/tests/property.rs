@@ -1195,3 +1195,281 @@ fn powered_serve_conserves_jobs_and_is_thread_invariant() {
         }
     }
 }
+
+#[test]
+fn estimator_off_is_byte_inert() {
+    // A disabled profiling plane is invisible: whatever the other
+    // estimator knobs say, the run reproduces the default config's
+    // report byte-for-byte, carries no estimator keys on the wire, and
+    // the sharded merge agrees — single-loop and sharded alike.
+    use migsim::cluster::EstimatorConfig;
+    let mut rng = Rng::new(0xE57_0FF);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig];
+    for case in 0..8 {
+        let base = ServeConfig {
+            gpus: 2 + rng.below(4) as u32,
+            policy: *rng.choose(&policies),
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.5),
+            jobs: 20 + rng.below(20) as u32,
+            deadline_s: 15.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1 + rng.below(2) as u32,
+            host_pool_gib: if rng.chance(0.5) {
+                f64::INFINITY
+            } else {
+                6.0 + rng.range(0.0, 20.0)
+            },
+            c2c_contention: rng.chance(0.5),
+            ..ServeConfig::default()
+        };
+        let mut knobs = base.clone();
+        knobs.estimator = EstimatorConfig {
+            enabled: false,
+            probe_n: 1 + rng.below(9) as u32,
+            warmup: 1 + rng.below(9) as u32,
+            seed_oracle: false,
+        };
+        let a = serve(&base).unwrap();
+        let b = serve(&knobs).unwrap();
+        assert!(!a.estimator_active, "case {case}: off plane reported active");
+        assert_eq!(
+            a.to_json().compact(),
+            b.to_json().compact(),
+            "case {case}: disabled estimator knobs changed the report ({base:?})"
+        );
+        let j = a.to_json();
+        assert!(
+            j.get("probes").is_none() && j.get("est_decisions").is_none(),
+            "case {case}: off-mode report grew estimator keys"
+        );
+        let nodes = 2 + rng.below(2) as u32;
+        let sa = serve_sharded(&ShardServeConfig::new(base.clone(), nodes, 1)).unwrap();
+        let sb = serve_sharded(&ShardServeConfig::new(knobs, nodes, 1)).unwrap();
+        assert_eq!(
+            sa.report.to_json().compact(),
+            sb.report.to_json().compact(),
+            "case {case}: disabled estimator knobs changed a sharded report"
+        );
+    }
+}
+
+#[test]
+fn estimated_serve_conserves_reproduces_and_is_thread_invariant() {
+    // With the profiling plane on, a serve is still a serve: every job
+    // resolves exactly once, reruns reproduce the bytes, the indexed
+    // walk matches the naive full-rescan oracle bit for bit on the
+    // estimated tables, the one-node sharded runner reproduces the
+    // single loop, and the merged sharded report is identical across
+    // worker-thread counts (the estimator's barrier delta exchange is
+    // shard-id-ordered, so the thread schedule can never leak in).
+    use migsim::cluster::{serve_with, EstimatorConfig, ServeMode};
+    let mut rng = Rng::new(0xE57_011);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig];
+    for case in 0..8 {
+        let nodes = 1 + rng.below(3) as u32;
+        let base = ServeConfig {
+            gpus: nodes + rng.below(4) as u32,
+            policy: *rng.choose(&policies),
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.5),
+            jobs: 20 + rng.below(20) as u32,
+            deadline_s: 15.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1 + rng.below(2) as u32,
+            host_pool_gib: if rng.chance(0.5) {
+                f64::INFINITY
+            } else {
+                6.0 + rng.range(0.0, 20.0)
+            },
+            c2c_contention: rng.chance(0.5),
+            estimator: EstimatorConfig {
+                enabled: true,
+                probe_n: 1 + rng.below(3) as u32,
+                warmup: 1 + rng.below(3) as u32,
+                seed_oracle: false,
+            },
+            ..ServeConfig::default()
+        };
+        let a = serve(&base).unwrap();
+        assert!(a.estimator_active, "case {case}: active plane not reported");
+        assert_eq!(
+            a.completed + a.expired + a.rejected,
+            a.jobs,
+            "case {case}: jobs lost or duplicated under estimation ({base:?})"
+        );
+        assert_eq!(
+            a.to_json().compact(),
+            serve(&base).unwrap().to_json().compact(),
+            "case {case}: estimated run is not reproducible"
+        );
+        assert_eq!(
+            a.to_json().compact(),
+            serve_with(&base, ServeMode::NaiveOracle).unwrap().to_json().compact(),
+            "case {case}: indexed estimated walk diverged from the oracle scan ({base:?})"
+        );
+        let scfg = ShardServeConfig::new(base.clone(), nodes, 1);
+        let s1 = serve_sharded(&scfg).unwrap();
+        let rep = &s1.report;
+        assert_eq!(
+            rep.completed + rep.expired + rep.rejected,
+            rep.jobs,
+            "case {case}: sharded estimated run lost jobs ({scfg:?})"
+        );
+        if nodes == 1 {
+            assert_eq!(
+                a.to_json().compact(),
+                rep.to_json().compact(),
+                "case {case}: one-node sharded estimation diverged from the single loop"
+            );
+        }
+        for threads in [2, 4, 8] {
+            let st = serve_sharded(&ShardServeConfig {
+                threads,
+                ..scfg.clone()
+            })
+            .unwrap();
+            assert_eq!(
+                s1.report.to_json().compact(),
+                st.report.to_json().compact(),
+                "case {case}: {threads} threads changed an estimated report ({scfg:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn oracle_seeded_estimator_measures_zero_regret() {
+    // The differential anchor of the learning machinery: an estimator
+    // pre-filled from the oracle cost tables predicts exactly what the
+    // oracle schedules, so measured regret is exactly zero — integer
+    // nanoseconds, no tolerance — in the single loop and in every
+    // sharded merge.
+    use migsim::cluster::EstimatorConfig;
+    let mut rng = Rng::new(0xE57_5EED);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    let layouts = [LayoutPreset::Mixed, LayoutPreset::AllSmall, LayoutPreset::AllBig];
+    for case in 0..8 {
+        let nodes = 1 + rng.below(3) as u32;
+        let base = ServeConfig {
+            gpus: nodes + rng.below(4) as u32,
+            policy: *rng.choose(&policies),
+            layout: *rng.choose(&layouts),
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.5),
+            jobs: 20 + rng.below(20) as u32,
+            deadline_s: 15.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1 + rng.below(2) as u32,
+            host_pool_gib: if rng.chance(0.5) {
+                f64::INFINITY
+            } else {
+                6.0 + rng.range(0.0, 20.0)
+            },
+            c2c_contention: rng.chance(0.5),
+            estimator: EstimatorConfig {
+                enabled: true,
+                probe_n: 1 + rng.below(3) as u32,
+                warmup: 1 + rng.below(3) as u32,
+                seed_oracle: true,
+            },
+            ..ServeConfig::default()
+        };
+        let a = serve(&base).unwrap();
+        assert!(
+            a.estimator.decisions > 0 || a.completed == 0,
+            "case {case}: completed jobs without estimator decisions ({base:?})"
+        );
+        assert_eq!(
+            (a.estimator.regret_sum_ns, a.estimator.regret_max_ns),
+            (0, 0),
+            "case {case}: oracle-seeded estimator accrued regret ({base:?})"
+        );
+        let s = serve_sharded(&ShardServeConfig::new(base.clone(), nodes, 1)).unwrap();
+        assert_eq!(
+            (s.report.estimator.regret_sum_ns, s.report.estimator.regret_max_ns),
+            (0, 0),
+            "case {case}: oracle-seeded sharded run accrued regret ({base:?})"
+        );
+    }
+}
+
+#[test]
+fn streamed_telemetry_matches_buffered_bytes() {
+    // The streaming recorder is a pure rewrite of the buffered path:
+    // flushing events below each epoch barrier's watermark (strict `<`,
+    // so barrier-stamped stragglers wait for their epoch) must emit the
+    // exact bytes `TelemetryReport::to_jsonl` would — for plain, faulty
+    // and estimated runs, at any thread count.
+    use migsim::cluster::{
+        serve_sharded_streamed, serve_sharded_traced, EstimatorConfig, TelemetryConfig,
+    };
+    let mut rng = Rng::new(0x57_12EA);
+    let policies = [
+        PolicyKind::FirstFit,
+        PolicyKind::OffloadAware { alpha_centi: 10 },
+    ];
+    for case in 0..6 {
+        let nodes = 2 + rng.below(3) as u32;
+        let base = ServeConfig {
+            gpus: nodes + rng.below(4) as u32,
+            policy: *rng.choose(&policies),
+            layout: LayoutPreset::Mixed,
+            arrival_rate_hz: 0.5 + rng.range(0.0, 2.0),
+            jobs: 25 + rng.below(20) as u32,
+            deadline_s: 12.0 + rng.range(0.0, 15.0),
+            reconfig: rng.chance(0.5),
+            seed: rng.below(1 << 30),
+            workload_scale: 0.05,
+            batch: 1 + rng.below(2) as u32,
+            estimator: EstimatorConfig {
+                enabled: rng.chance(0.5),
+                ..EstimatorConfig::default()
+            },
+            faults: if rng.chance(0.3) {
+                let mttf = 5.0 + rng.range(0.0, 15.0);
+                FaultConfig::from_spec("gpu,slice:0.5", mttf, 1.0, 2, f64::INFINITY).unwrap()
+            } else {
+                FaultConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let tcfg = TelemetryConfig {
+            sample_dt_s: 0.05 + rng.range(0.0, 0.5),
+        };
+        let threads = 1 + rng.below(4) as u32;
+        let scfg = ShardServeConfig::new(base, nodes, threads);
+        let (r_buf, tel) = serve_sharded_traced(&scfg, &tcfg).unwrap();
+        let mut streamed = Vec::new();
+        let r_str = serve_sharded_streamed(&scfg, &tcfg, &mut streamed).unwrap();
+        assert_eq!(
+            r_buf.report.to_json().compact(),
+            r_str.report.to_json().compact(),
+            "case {case}: streaming the telemetry changed the serve report ({scfg:?})"
+        );
+        assert_eq!(
+            String::from_utf8(streamed).unwrap(),
+            tel.to_jsonl(),
+            "case {case}: streamed JSONL diverged from the buffered writer ({scfg:?})"
+        );
+    }
+}
